@@ -1,0 +1,142 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.json.
+
+Lowers every (function, shape) pair the Rust coordinator needs — the local
+conv/affine kernels for both LeNet layouts (sequential and the paper's
+4-worker decomposition) at the configured batch sizes — to HLO **text**.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which this image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifact names must match ``rust/src/runtime/mod.rs::names``.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts [--batches 8,16,64]``
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Shape inventory (kept in sync with rust/src/models/lenet5.rs; the halo
+# geometry makes every worker's local conv shape identical per layer).
+# ---------------------------------------------------------------------------
+
+# (ci, h_local, w_local, co, k, s): distributed (4-worker, 2x2 grid) and
+# sequential LeNet conv layers. h/w are the trimmed+padded kernel inputs.
+CONV_SHAPES = [
+    # C1 distributed: 28x28 pad 2 over 2x2 -> local 18x18
+    dict(ci=1, h=18, w=18, co=6, k=(5, 5), s=(1, 1)),
+    # C3 distributed: 14x14 no pad over 2x2 -> local 9x9
+    dict(ci=6, h=9, w=9, co=16, k=(5, 5), s=(1, 1)),
+    # C1 sequential: pad materialised -> 32x32
+    dict(ci=1, h=32, w=32, co=6, k=(5, 5), s=(1, 1)),
+    # C3 sequential
+    dict(ci=6, h=14, w=14, co=16, k=(5, 5), s=(1, 1)),
+]
+
+# (fi, fo): distributed affine cells and sequential affine layers.
+AFFINE_SHAPES = [
+    (200, 60),  # C5 cell
+    (60, 42),  # F6 cell
+    (42, 5),  # Output cell
+    (400, 120),  # C5 sequential
+    (120, 84),  # F6 sequential
+    (84, 10),  # Output sequential
+]
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jitted function to HLO text with a tuple return."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def build_registry(batches):
+    """Yield (name, fn, example_args, num_outputs) for every artifact."""
+    for b in batches:
+        for cs in CONV_SHAPES:
+            ci, h, w, co = cs["ci"], cs["h"], cs["w"], cs["co"]
+            (kh, kw), (sh, sw) = cs["k"], cs["s"]
+            x = spec(b, ci, h, w)
+            wt = spec(co, ci, kh, kw)
+            bias = spec(co)
+            base = f"b{b}_ci{ci}_h{h}_w{w}_co{co}_k{kh}x{kw}_s{sh}x{sw}"
+            yield (
+                f"conv_fwd_{base}",
+                lambda x, w_, b_, s=(sh, sw): model.conv2d_fwd(x, w_, b_, s),
+                (x, wt, bias),
+                1,
+            )
+            oh = (h - kh) // sh + 1
+            ow = (w - kw) // sw + 1
+            dy = spec(b, co, oh, ow)
+            yield (
+                f"conv_bwd_{base}",
+                lambda x, w_, dy_, s=(sh, sw): model.conv2d_bwd(x, w_, dy_, s),
+                (x, wt, dy),
+                3,
+            )
+        for fi, fo in AFFINE_SHAPES:
+            x = spec(b, fi)
+            wt = spec(fo, fi)
+            bias = spec(fo)
+            dy = spec(b, fo)
+            yield (f"affine_fwd_b{b}_fi{fi}_fo{fo}", model.affine_fwd, (x, wt, bias), 1)
+            yield (
+                f"affine_fwd_nobias_b{b}_fi{fi}_fo{fo}",
+                model.affine_fwd_nobias,
+                (x, wt),
+                1,
+            )
+            yield (f"affine_bwd_b{b}_fi{fi}_fo{fo}", model.affine_bwd, (x, wt, dy), 3)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument(
+        "--batches",
+        default="8,16,64",
+        help="comma-separated batch sizes to specialise",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    batches = [int(s) for s in args.batches.split(",") if s]
+    entries = []
+    for name, fn, example_args, num_outputs in build_registry(batches):
+        text = to_hlo_text(fn, example_args)
+        fname = f"{name}.hlo.txt"
+        (out / fname).write_text(text)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(a.shape) for a in example_args],
+                "num_outputs": num_outputs,
+            }
+        )
+        print(f"  lowered {name} ({len(text) / 1024:.0f} KiB)")
+    manifest = {"entries": entries}
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(entries)} artifacts to {out}/ (manifest.json)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""L1 — the Pallas GEMM kernel.
+
+The compute hot-spot of every layer in the paper's LeNet-5 — the local
+convolution (via im2col) and the local affine — is a dense matmul. This
+kernel expresses that matmul as a Pallas grid over MXU-aligned tiles:
+
+* the grid is ``(m/bm, n/bn, k/bk)``; each step multiplies one
+  ``bm x bk`` LHS tile against one ``bk x bn`` RHS tile and accumulates
+  into the ``bm x bn`` output tile — the BlockSpecs express the HBM->VMEM
+  schedule a TPU would execute;
+* tiles default to 128x128, the MXU systolic-array shape, and shrink to
+  the (padded) problem when it is smaller;
+* inputs are zero-padded up to tile multiples and the result is sliced
+  back, so any shape is accepted.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel is lowered through the Pallas
+interpreter into plain HLO (see DESIGN.md §2 "Hardware adaptation"). The
+pure-jnp oracle in :mod:`compile.kernels.ref` pins down the numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile edge.
+TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One grid step: accumulate a_tile @ b_tile into the output tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(value: int, mult: int) -> int:
+    return (value + mult - 1) // mult * mult
+
+
+def auto_blocks(m: int, k: int, n: int) -> tuple:
+    """Pick block shapes adaptively.
+
+    Perf iteration L1-1 (see EXPERIMENTS.md §Perf): fixed 128³ tiles give
+    LeNet's skinny GEMMs (e.g. [6,25] @ [25,50176]) grids of ~400 steps;
+    under the Pallas interpreter each grid step is a loop iteration, so
+    step count dominates wall-clock. We grow each block up to the (padded)
+    problem size within a per-tile cap that still respects a TPU VMEM
+    budget (tile bytes ≤ ~2.7 MiB ⇒ ~8 MiB live with double-buffered
+    inputs, within a 16 MiB core). Grids collapse to a handful of steps
+    while MXU alignment (multiples of 128 where the dim allows) is kept.
+    """
+    bm = min(_ceil_to(max(m, 1), 8), 256)
+    bk = min(_ceil_to(max(k, 1), 8), 512)
+    # remaining budget for bn: keep bm*bk + bk*bn + bm*bn under ~700k f32
+    budget = 700_000
+    room = max(budget - bm * bk, bm + bk) // (bm + bk)
+    bn = min(_ceil_to(max(n, 1), 128), max(128, room // 128 * 128), 2048)
+    return bm, bk, bn
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def pallas_matmul(a, b, *, bm: int = 0, bk: int = 0, bn: int = 0):
+    """``a [m, k] @ b [k, n] -> [m, n]`` through the Pallas tile kernel.
+
+    Block sizes default to :func:`auto_blocks`; pass explicit ``bm/bk/bn``
+    to pin them (the tests use this to check tiling invariance).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    abm, abk, abn = auto_blocks(m, k, n)
+    bm = bm or abm
+    bk = bk or abk
+    bn = bn or abn
+    bm = min(bm, _ceil_to(max(m, 1), 8))
+    bk = min(bk, _ceil_to(max(k, 1), 8))
+    bn = min(bn, _ceil_to(max(n, 1), 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    a_pad = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_pad = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a_pad.astype(jnp.float32), b_pad.astype(jnp.float32))
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int = 256, bk: int = 512, bn: int = 2048) -> int:
+    """Estimated VMEM bytes live per grid step (f32 tiles, double-buffered
+    inputs). Used by the DESIGN.md/EXPERIMENTS.md roofline estimate."""
+    tiles = 2 * (bm * bk) + 2 * (bk * bn) + bm * bn
+    return tiles * 4

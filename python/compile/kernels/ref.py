@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracles for the L1/L2 kernels.
+
+These define the semantics the Pallas kernel and the L2 layer functions
+must match (pytest asserts allclose). The backward oracles are obtained by
+`jax.vjp` of the forward oracles — this is exactly the role AD plays in
+the paper: the *local* layer functions may use AD freely; only the
+*distributed* data movement needs hand-derived adjoints (which live on the
+Rust side).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain jnp matmul oracle."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def affine_ref(x, w, b=None):
+    """y = x @ w.T (+ b) with x [B, FI], w [FO, FI], b [FO]."""
+    y = jnp.dot(x, w.T)
+    if b is not None:
+        y = y + b[None, :]
+    return y
+
+
+def conv2d_ref(x, w, b=None, stride=(1, 1)):
+    """Valid NCHW/OIHW convolution oracle (lax.conv)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return y
+
+
+def affine_bwd_ref(x, w, dy, with_bias=True):
+    """(dx, dw, db) oracle via jax.vjp of the forward oracle."""
+    if with_bias:
+        b = jnp.zeros((w.shape[0],), dtype=x.dtype)
+        _, vjp = jax.vjp(lambda x_, w_, b_: affine_ref(x_, w_, b_), x, w, b)
+        return vjp(dy)
+    _, vjp = jax.vjp(lambda x_, w_: affine_ref(x_, w_), x, w)
+    dx, dw = vjp(dy)
+    return dx, dw, jnp.sum(dy, axis=0)
+
+
+def conv2d_bwd_ref(x, w, dy, stride=(1, 1)):
+    """(dx, dw, db) oracle via jax.vjp of the forward oracle."""
+    b = jnp.zeros((w.shape[0],), dtype=x.dtype)
+    _, vjp = jax.vjp(lambda x_, w_, b_: conv2d_ref(x_, w_, b_, stride), x, w, b)
+    return vjp(dy)

@@ -1,0 +1,116 @@
+"""L2 — the JAX layer functions lowered to the Rust runtime.
+
+These are the *sequential* local kernels of the paper's §4 distributed
+layers (the parallel structure lives entirely in Rust): convolution
+forward/backward and affine forward/backward, each built on the L1 Pallas
+GEMM (:mod:`compile.kernels.matmul`). The backward functions are written
+explicitly — as the paper emphasises, the data-movement adjoints are
+hand-derived on the Rust side, and here the local VJPs are plain linear
+algebra (matmuls again), so no AD is traced through the Pallas call.
+
+Every function here is shape-specialised and lowered once by
+:mod:`compile.aot` to an `artifacts/*.hlo.txt` the Rust runtime loads.
+Python never runs at training time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.matmul import pallas_matmul
+
+
+def _im2col(x, kh, kw, sh, sw):
+    """Extract sliding patches: x [B,C,H,W] -> [B, C*KH*KW, OH*OW].
+
+    Channel-major patch ordering (c, i, j) matches the row-major flatten
+    of w [CO, CI, KH, KW] -> [CO, CI*KH*KW].
+    """
+    bsz, c, h, w = x.shape
+    oh = (h - kh) // sh + 1
+    ow = (w - kw) // sw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, :, i : i + sh * oh : sh, j : j + sw * ow : sw])
+    # [B, C, KH*KW, OH, OW] with (i, j) minor -> matches w flatten order
+    st = jnp.stack(cols, axis=2)
+    return st.reshape(bsz, c * kh * kw, oh * ow), (oh, ow)
+
+
+def _col2im(cols, x_shape, kh, kw, sh, sw):
+    """Adjoint of `_im2col`: scatter-add patches back into the image."""
+    bsz, c, h, w = x_shape
+    oh = (h - kh) // sh + 1
+    ow = (w - kw) // sw + 1
+    st = cols.reshape(bsz, c, kh * kw, oh, ow)
+    dx = jnp.zeros(x_shape, dtype=cols.dtype)
+    idx = 0
+    for i in range(kh):
+        for j in range(kw):
+            dx = dx.at[:, :, i : i + sh * oh : sh, j : j + sw * ow : sw].add(
+                st[:, :, idx]
+            )
+            idx += 1
+    return dx
+
+
+def conv2d_fwd(x, w, b, stride=(1, 1)):
+    """Valid convolution via im2col + Pallas GEMM.
+
+    x [B,CI,H,W], w [CO,CI,KH,KW], b [CO] -> y [B,CO,OH,OW].
+    """
+    bsz, _, _, _ = x.shape
+    co, _, kh, kw = w.shape
+    patches, (oh, ow) = _im2col(x, kh, kw, *stride)
+    # [CI*KH*KW, B*OH*OW]
+    p2 = patches.transpose(1, 0, 2).reshape(patches.shape[1], bsz * oh * ow)
+    w_mat = w.reshape(co, -1)
+    y2 = pallas_matmul(w_mat, p2)  # [CO, B*OH*OW]
+    y = y2.reshape(co, bsz, oh, ow).transpose(1, 0, 2, 3)
+    return (y + b[None, :, None, None],)
+
+
+def conv2d_bwd(x, w, dy, stride=(1, 1)):
+    """Explicit conv VJP, hot paths on the Pallas GEMM.
+
+    Returns (dx, dw, db).
+
+    Perf note (EXPERIMENTS.md §Perf, iteration L2-1 — tried & reverted):
+    computing dx as a full-correlation GEMM over a padded-dy im2col was
+    4x *slower* than this scatter-based `_col2im` (the padded patch
+    tensor is (k^2)x larger than dy and its materialisation dominated);
+    the scatter path is the keeper.
+    """
+    bsz = x.shape[0]
+    co, _, kh, kw = w.shape
+    _, oh, ow = dy.shape[1], dy.shape[2], dy.shape[3]
+    patches, _ = _im2col(x, kh, kw, *stride)
+    p2 = patches.transpose(1, 0, 2).reshape(patches.shape[1], bsz * oh * ow)
+    dy2 = dy.transpose(1, 0, 2, 3).reshape(co, bsz * oh * ow)
+    # dw = dy2 @ patches^T
+    dw = pallas_matmul(dy2, p2.T).reshape(w.shape)
+    # dx = col2im(w_mat^T @ dy2)
+    w_mat = w.reshape(co, -1)
+    dcols2 = pallas_matmul(w_mat.T, dy2)  # [CI*KH*KW, B*OH*OW]
+    dcols = dcols2.reshape(patches.shape[1], bsz, oh * ow).transpose(1, 0, 2)
+    dx = _col2im(dcols, x.shape, kh, kw, *stride)
+    db = jnp.sum(dy, axis=(0, 2, 3))
+    return dx, dw, db
+
+
+def affine_fwd(x, w, b):
+    """y = x @ w.T + b via the Pallas GEMM."""
+    return (pallas_matmul(x, w.T) + b[None, :],)
+
+
+def affine_fwd_nobias(x, w):
+    """y = x @ w.T — the variant for weight-grid cells without a bias
+    shard (§4: bias lives on one P_fo x 1 subpartition only)."""
+    return (pallas_matmul(x, w.T),)
+
+
+def affine_bwd(x, w, dy):
+    """(dx, dw, db) — three Pallas GEMMs and a reduction."""
+    dx = pallas_matmul(dy, w)
+    dw = pallas_matmul(dy.T, x)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db

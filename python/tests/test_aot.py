@@ -1,0 +1,86 @@
+"""AOT path checks: registry completeness, HLO-text lowering, manifest
+schema — the contract the Rust runtime (rust/src/runtime) consumes."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_registry_covers_both_layouts():
+    names = [name for name, *_ in aot.build_registry([8])]
+    # distributed conv cells
+    assert "conv_fwd_b8_ci1_h18_w18_co6_k5x5_s1x1" in names
+    assert "conv_bwd_b8_ci6_h9_w9_co16_k5x5_s1x1" in names
+    # sequential conv
+    assert "conv_fwd_b8_ci1_h32_w32_co6_k5x5_s1x1" in names
+    # affine cells, bias and nobias, fwd and bwd
+    for n in (
+        "affine_fwd_b8_fi200_fo60",
+        "affine_fwd_nobias_b8_fi200_fo60",
+        "affine_bwd_b8_fi200_fo60",
+        "affine_fwd_b8_fi400_fo120",
+    ):
+        assert n in names, n
+    # every entry unique
+    assert len(names) == len(set(names))
+
+
+def test_lowering_produces_hlo_text():
+    x = jax.ShapeDtypeStruct((4, 42), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 42), jnp.float32)
+    b = jax.ShapeDtypeStruct((5,), jnp.float32)
+    text = aot.to_hlo_text(model.affine_fwd, (x, w, b))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # tuple return (the Rust side unwraps with to_tuple)
+    assert "tuple" in text.lower()
+
+
+def test_manifest_end_to_end(tmp_path):
+    """Run the real main() for one small batch and validate the manifest
+    against what rust/src/runtime/mod.rs expects."""
+    import sys
+    from unittest import mock
+
+    argv = ["aot", "--out", str(tmp_path), "--batches", "2"]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["entries"], "empty manifest"
+    for e in manifest["entries"]:
+        assert set(e) == {"name", "file", "inputs", "num_outputs"}
+        hlo = (tmp_path / e["file"]).read_text()
+        assert hlo.startswith("HloModule"), e["name"]
+        assert all(
+            isinstance(s, list) and all(isinstance(d, int) for d in s)
+            for s in e["inputs"]
+        )
+
+
+def test_conv_artifact_shapes_match_halo_geometry():
+    """The hard-coded CONV_SHAPES must equal the Rust halo machinery's
+    trimmed kernel-input sizes (C1: 18, C3: 9 per worker on the 2x2 grid;
+    32 and 14 sequentially)."""
+
+    def compute_len(n, p, k, s, pad, worker):
+        m = (n + 2 * pad - k) // s + 1
+        outs = [(m // p + (1 if i < m % p else 0)) for i in range(p)]
+        ins = [(n // p + (1 if i < n % p else 0)) for i in range(p)]
+        o_lo = sum(outs[:worker])
+        o_hi = o_lo + outs[worker]
+        need_lo = o_lo * s - pad
+        need_hi = (o_hi - 1) * s - pad + k
+        return need_hi - need_lo
+
+    assert compute_len(28, 2, 5, 1, 2, 0) == 18
+    assert compute_len(28, 2, 5, 1, 2, 1) == 18
+    assert compute_len(14, 2, 5, 1, 0, 0) == 9
+    assert compute_len(14, 2, 5, 1, 0, 1) == 9
+    assert compute_len(28, 1, 5, 1, 2, 0) == 32
+    assert compute_len(14, 1, 5, 1, 0, 0) == 14
+
+
+import jax  # noqa: E402  (used by ShapeDtypeStruct above)

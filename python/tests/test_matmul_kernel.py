@@ -1,0 +1,80 @@
+"""L1 correctness: the Pallas GEMM against the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-tile-multiple and degenerate
+edges); explicit cases pin the LeNet shapes the artifacts specialise.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import pallas_matmul, vmem_footprint_bytes
+
+RNG = np.random.default_rng(7)
+
+
+def rand(m, n):
+    return jnp.asarray(RNG.standard_normal((m, n)), dtype=jnp.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+)
+def test_matches_oracle_hypothesis(m, k, n):
+    a, b = rand(m, k), rand(k, n)
+    got = np.asarray(pallas_matmul(a, b))
+    want = np.asarray(ref.matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (6, 25, 64 * 196),  # C1 local GEMM (dist, batch 64)
+        (16, 150, 64 * 25),  # C3 local GEMM
+        (64, 200, 60),  # C5 cell
+        (64, 42, 5),  # Output cell
+        (1, 1, 1),
+        (128, 128, 128),  # exactly one MXU tile
+        (129, 257, 130),  # just past tile boundaries
+    ],
+)
+def test_lenet_shapes(m, k, n):
+    a, b = rand(m, k), rand(k, n)
+    got = np.asarray(pallas_matmul(a, b))
+    want = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (32, 16, 64), (128, 128, 128)])
+def test_block_shape_invariance(bm, bk, bn):
+    """The tiling must never change the numerics (same padded zeros)."""
+    a, b = rand(50, 70), rand(70, 30)
+    base = np.asarray(pallas_matmul(a, b))
+    tiled = np.asarray(pallas_matmul(a, b, bm=bm, bk=bk, bn=bn))
+    # different tilings re-associate the k-sum; only fp noise may differ
+    np.testing.assert_allclose(base, tiled, rtol=1e-3, atol=1e-5)
+
+
+def test_zero_and_identity():
+    a = rand(17, 23)
+    z = jnp.zeros((23, 9), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(pallas_matmul(a, z)), 0.0)
+    eye = jnp.eye(17, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(pallas_matmul(eye, a)), np.asarray(a), rtol=1e-6
+    )
+
+
+def test_vmem_footprint_under_budget():
+    """The largest tiles auto_blocks can pick must fit in a TPU core's
+    ~16 MiB VMEM with double-buffered inputs: the DESIGN.md §Perf
+    roofline argument."""
+    assert vmem_footprint_bytes() <= 16 * 2 ** 20
+    # and the MXU-shaped baseline is far smaller
+    assert vmem_footprint_bytes(128, 128, 128) <= 512 * 1024

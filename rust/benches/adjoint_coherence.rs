@@ -1,0 +1,23 @@
+//! Bench E1 — adjoint-coherence suite: residual *and* cost of running the
+//! Eq. (13) test for every primitive at increasing tensor scales.
+//! Regenerates the paper's §3 "Implementation" verification as a table.
+
+use distdl::adjoint::adjoint_residual;
+use distdl::coordinator::suites::suite_cases;
+use distdl::testing::bench::BenchGroup;
+
+fn main() {
+    let mut g = BenchGroup::new("E1: Eq. (13) adjoint coherence (forward+adjoint per iteration)");
+    for scale in [8, 32, 128] {
+        for case in suite_cases(scale).expect("suite") {
+            let label = format!("n={scale:<4} {}", case.label);
+            // report the residual once, then time the test
+            let r = adjoint_residual(case.world, case.op.as_ref(), 1).expect("run");
+            assert!(r < 1e-12, "{label}: residual {r:.3e}");
+            g.bench(&format!("{label} [res {r:.1e}]"), || {
+                let _ = adjoint_residual(case.world, case.op.as_ref(), 2).unwrap();
+            });
+        }
+    }
+    g.finish();
+}

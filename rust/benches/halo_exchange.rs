@@ -1,0 +1,75 @@
+//! Bench E6/E11 — halo-exchange cost: 1-D and 2-D generalized unbalanced
+//! exchanges across tensor sizes and partition widths, with moved-bytes
+//! throughput. The communication volume per worker is O(halo width ×
+//! cross-section), compared here against the all-to-all (which moves the
+//! whole tensor) to show why sparse layers exchange halos instead of
+//! repartitioning (§3).
+
+use distdl::adjoint::DistLinearOp;
+use distdl::comm::Cluster;
+use distdl::halo::{HaloGeometry, KernelSpec};
+use distdl::partition::{Partition, TensorDecomposition};
+use distdl::primitives::{HaloExchange, Repartition};
+use distdl::tensor::Tensor;
+use distdl::testing::bench::BenchGroup;
+
+fn main() {
+    let mut g = BenchGroup::new("E6/E11: halo exchange vs all-to-all");
+
+    // 1-D exchanges, kernel k=5 pad 2 (uniform) across sizes and widths.
+    for p in [2usize, 4, 8] {
+        for n in [1usize << 10, 1 << 14, 1 << 18] {
+            let geom = HaloGeometry::new(&[n], &[p], &[KernelSpec::padded(5, 2)]).unwrap();
+            let part = Partition::from_shape(&[p]);
+            let op = HaloExchange::new(part.clone(), geom, 1).unwrap();
+            // bytes moved: 2 interior edges x width 2 x 8 bytes per worker pair
+            let bytes = (p - 1) * 2 * 2 * 8;
+            g.bench_bytes(&format!("halo 1-D n={n} P={p} k=5"), bytes, || {
+                Cluster::run(p, |comm| {
+                    let coords = part.coords_of(comm.rank()).unwrap();
+                    let buf = Tensor::<f64>::zeros(&op.buffer_shape(&coords));
+                    op.forward(comm, Some(buf))
+                })
+                .unwrap();
+            });
+        }
+    }
+
+    // 2-D exchange on a 2x2 grid (the Appendix B.2 scenario, scaled).
+    for n in [64usize, 256, 512] {
+        let geom = HaloGeometry::new(
+            &[n, n],
+            &[2, 2],
+            &[KernelSpec::plain(5), KernelSpec::plain(5)],
+        )
+        .unwrap();
+        let part = Partition::from_shape(&[2, 2]);
+        let op = HaloExchange::new(part.clone(), geom, 2).unwrap();
+        g.bench(&format!("halo 2-D n={n}x{n} P=2x2 k=5"), || {
+            Cluster::run(4, |comm| {
+                let coords = part.coords_of(comm.rank()).unwrap();
+                let buf = Tensor::<f64>::zeros(&op.buffer_shape(&coords));
+                op.forward(comm, Some(buf))
+            })
+            .unwrap();
+        });
+        // the all-to-all alternative: full repartition rows->cols
+        let d1 = TensorDecomposition::new(Partition::from_shape(&[2, 1]), &[n, n]).unwrap();
+        let d2 = TensorDecomposition::new(Partition::from_shape(&[1, 2]), &[n, n]).unwrap();
+        let rep = Repartition::new(d1.clone(), d2, 3).unwrap();
+        g.bench_bytes(
+            &format!("all-to-all n={n}x{n} rows->cols (for contrast)"),
+            n * n * 8,
+            || {
+                Cluster::run(2, |comm| {
+                    let x = d1
+                        .region_of(comm.rank())
+                        .map(|r| Tensor::<f64>::zeros(&r.shape));
+                    rep.forward(comm, x)
+                })
+                .unwrap();
+            },
+        );
+    }
+    g.finish();
+}

@@ -1,0 +1,25 @@
+//! Bench E2–E5 — regenerates the Appendix B halo-geometry figures as
+//! tables (the "figure regeneration" target for the paper's B2–B5), and
+//! times the geometry computation across a parameter sweep (it sits on
+//! the layer-construction path, so it should be microseconds).
+
+use distdl::coordinator::suites::print_halo_tables;
+use distdl::halo::{dim_halos, KernelSpec};
+use distdl::testing::bench::BenchGroup;
+
+fn main() {
+    // the figures themselves
+    print_halo_tables();
+
+    // cost of the geometry computation
+    let mut g = BenchGroup::new("E2–E5: halo geometry computation cost");
+    for (n, p) in [(28usize, 2usize), (1 << 12, 16), (1 << 20, 64)] {
+        g.bench(&format!("dim_halos n={n} P={p} (k=5 pad=2)"), || {
+            let _ = dim_halos(n, p, &KernelSpec::padded(5, 2)).unwrap();
+        });
+        g.bench(&format!("dim_halos n={n} P={p} (k=2 s=2)"), || {
+            let _ = dim_halos(n, p, &KernelSpec::pool(2, 2)).unwrap();
+        });
+    }
+    g.finish();
+}

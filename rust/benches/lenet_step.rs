@@ -1,0 +1,110 @@
+//! Bench E9 — LeNet-5 step latency: sequential vs 4-worker distributed,
+//! forward-only and full train step, native vs PJRT backend (the latter
+//! only when `make artifacts` has run). This is the end-to-end cost the
+//! §5 experiment pays per batch.
+//!
+//! Setup (network build, parameter init, PJRT compilation) happens once
+//! per configuration inside a single cluster; the timed region is the
+//! steady-state per-step cost, which is what the training loop pays.
+
+use distdl::comm::Cluster;
+use distdl::config::Backend;
+use distdl::coordinator::{kernels_for, train_step};
+use distdl::data::SyntheticMnist;
+use distdl::models::{lenet5, LeNetConfig, LeNetLayout};
+use distdl::optim::Adam;
+use distdl::util::timer::{Stats, Timer};
+
+fn measure(
+    layout: LeNetLayout,
+    backend: Backend,
+    batch: usize,
+    forward_only: bool,
+    iters: usize,
+) -> Stats {
+    let data = SyntheticMnist::new(1, batch * 2);
+    let batches = data.batches(batch);
+    let batch0 = batches[0].clone();
+    let cfg = LeNetConfig { batch, layout };
+    let world = layout.world_size();
+    let samples = Cluster::run(world, |comm| {
+        let kernels = kernels_for(backend, "artifacts")?;
+        let net = lenet5::<f32>(&cfg, kernels)?;
+        let mut st = net.init(comm.rank(), 1)?;
+        let mut opt = Adam::new(1e-3);
+        // warm-up (includes PJRT compilation on first use)
+        for _ in 0..2 {
+            if forward_only {
+                let x = (comm.rank() == 0).then(|| batch0.images_as::<f32>());
+                net.forward(&mut st, comm, x, false)?;
+            } else {
+                train_step(&net, &mut st, comm, &batch0, &mut opt)?;
+            }
+        }
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            comm.barrier();
+            let t = Timer::start();
+            if forward_only {
+                let x = (comm.rank() == 0).then(|| batch0.images_as::<f32>());
+                net.forward(&mut st, comm, x, false)?;
+            } else {
+                train_step(&net, &mut st, comm, &batch0, &mut opt)?;
+            }
+            comm.barrier();
+            times.push(t.elapsed_s());
+        }
+        Ok(times)
+    })
+    .expect("bench cluster");
+    Stats::of(&samples[0])
+}
+
+fn main() {
+    println!("\n== E9: LeNet-5 step latency (batch 64, steady state) ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>6}",
+        "configuration", "mean", "median", "min", "n"
+    );
+    let batch = 64;
+    let iters = 10;
+    let mut backends = vec![Backend::Native];
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        backends.push(Backend::Pjrt);
+    } else {
+        eprintln!("note: artifacts/ missing — PJRT backend skipped (run `make artifacts`)");
+    }
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-') && a != "--bench");
+    for backend in backends {
+        for layout in [LeNetLayout::Sequential, LeNetLayout::FourWorker] {
+            for forward_only in [true, false] {
+                let name = format!(
+                    "{}/{:?} {}",
+                    if layout == LeNetLayout::Sequential {
+                        "sequential "
+                    } else {
+                        "distributed"
+                    },
+                    backend,
+                    if forward_only { "forward   " } else { "train-step" },
+                );
+                if let Some(f) = &filter {
+                    if !name.contains(f.as_str()) {
+                        continue;
+                    }
+                }
+                let stats = measure(layout, backend, batch, forward_only, iters);
+                println!(
+                    "{:<44} {:>12} {:>12} {:>12} {:>6}",
+                    name,
+                    distdl::testing::bench::fmt_time(stats.mean),
+                    distdl::testing::bench::fmt_time(stats.median),
+                    distdl::testing::bench::fmt_time(stats.min),
+                    stats.n
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Bench E10/E11 — collective primitive throughput: broadcast,
+//! sum-reduce, all-reduce, scatter/gather, all-to-all across worker
+//! counts and message sizes. Verifies the log-tree structure (broadcast
+//! cost growing ~log P, not ~P) and gives the per-primitive baseline the
+//! LeNet step decomposes into.
+
+use distdl::adjoint::DistLinearOp;
+use distdl::comm::Cluster;
+use distdl::partition::{Partition, TensorDecomposition};
+use distdl::primitives::{AllReduce, Broadcast, Gather, Repartition, Scatter, SumReduce};
+use distdl::tensor::Tensor;
+use distdl::testing::bench::BenchGroup;
+
+fn main() {
+    let mut g = BenchGroup::new("E10/E11: primitive throughput");
+    for p in [2usize, 4, 8, 16] {
+        for n in [1usize << 12, 1 << 16, 1 << 20] {
+            let bytes = n * 8;
+            let bcast = Broadcast::replicate(0, p, &[n], 1).unwrap();
+            g.bench_bytes(&format!("broadcast   P={p:<2} n={n}"), bytes * (p - 1), || {
+                Cluster::run(p, |comm| {
+                    let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
+                    bcast.forward(comm, x)
+                })
+                .unwrap();
+            });
+            let reduce = SumReduce::to_root(0, p, &[n], 2).unwrap();
+            g.bench_bytes(&format!("sum-reduce  P={p:<2} n={n}"), bytes * (p - 1), || {
+                Cluster::run(p, |comm| {
+                    let x = Some(Tensor::<f64>::zeros(&[n]));
+                    reduce.forward(comm, x)
+                })
+                .unwrap();
+            });
+            if p <= 8 {
+                let ranks: Vec<usize> = (0..p).collect();
+                let ar = AllReduce::new(&ranks, &[n], 3).unwrap();
+                g.bench_bytes(&format!("all-reduce  P={p:<2} n={n}"), 2 * bytes * (p - 1), || {
+                    Cluster::run(p, |comm| {
+                        let x = Some(Tensor::<f64>::zeros(&[n]));
+                        <AllReduce as DistLinearOp<f64>>::forward(&ar, comm, x)
+                    })
+                    .unwrap();
+                });
+            }
+        }
+    }
+    // scatter / gather / all-to-all at fixed world 4
+    for n in [1usize << 12, 1 << 18] {
+        let d = TensorDecomposition::new(Partition::from_shape(&[4]), &[n]).unwrap();
+        let sc = Scatter::new(d.clone(), 0, 4);
+        g.bench_bytes(&format!("scatter     P=4  n={n}"), n * 8, || {
+            Cluster::run(4, |comm| {
+                let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
+                sc.forward(comm, x)
+            })
+            .unwrap();
+        });
+        let ga = Gather::new(d.clone(), 0, 5);
+        g.bench_bytes(&format!("gather      P=4  n={n}"), n * 8, || {
+            Cluster::run(4, |comm| {
+                let x = d.region_of(comm.rank()).map(|r| Tensor::<f64>::zeros(&r.shape));
+                ga.forward(comm, x)
+            })
+            .unwrap();
+        });
+        let side = (n as f64).sqrt() as usize;
+        let d1 = TensorDecomposition::new(Partition::from_shape(&[4, 1]), &[side, side]).unwrap();
+        let d2 = TensorDecomposition::new(Partition::from_shape(&[1, 4]), &[side, side]).unwrap();
+        let rep = Repartition::new(d1.clone(), d2, 6).unwrap();
+        g.bench_bytes(
+            &format!("all-to-all  P=4  {side}x{side}"),
+            side * side * 8,
+            || {
+                Cluster::run(4, |comm| {
+                    let x = d1.region_of(comm.rank()).map(|r| Tensor::<f64>::zeros(&r.shape));
+                    rep.forward(comm, x)
+                })
+                .unwrap();
+            },
+        );
+    }
+    g.finish();
+}

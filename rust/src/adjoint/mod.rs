@@ -1,0 +1,262 @@
+//! Adjoint (coherence) testing — Eq. (13) of the paper.
+//!
+//! Numerical-gradient validation is impractical in parallel environments,
+//! but every data-movement operation is **linear**, so the paper validates
+//! implementations through the adjoint relationship ⟨Fx, y⟩ = ⟨x, F*y⟩:
+//! an implementation of F* is *coherent* with F if
+//!
+//! ```text
+//!   |⟨Fx, y⟩ − ⟨x, F*y⟩|
+//!   ─────────────────────────────────  <  ε
+//!   max(‖Fx‖·‖y‖, ‖x‖·‖F*y‖)
+//! ```
+//!
+//! [`DistLinearOp`] is the interface every primitive in
+//! [`crate::primitives`] implements: a forward map and a hand-derived
+//! adjoint over *distributed* vectors (each world rank holds an optional
+//! local shard). [`adjoint_residual`] runs the test across a live
+//! [`crate::comm::Cluster`], computing the global inner products from
+//! per-rank partials exactly as a production MPI implementation would.
+
+use crate::comm::{Cluster, Comm};
+use crate::error::Result;
+use crate::tensor::{Scalar, Tensor};
+use crate::util::rng::SplitMix64;
+
+/// A linear operator between distributed tensor spaces.
+///
+/// Both the domain and codomain are "distributed vectors": each world rank
+/// holds `Option<Tensor<T>>` — `None` when the rank does not participate in
+/// that space (e.g. only the root holds the domain of a broadcast).
+pub trait DistLinearOp<T: Scalar>: Sync {
+    /// Local shard shape of the domain at `rank` (`None` = not present).
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>>;
+
+    /// Local shard shape of the codomain at `rank`.
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>>;
+
+    /// Apply F to the local shard (SPMD: every rank calls this
+    /// collectively).
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>>;
+
+    /// Apply the hand-derived adjoint F* (collective).
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>>;
+
+    /// Diagnostic name.
+    fn name(&self) -> String;
+}
+
+/// Partial sums a rank contributes to the Eq. (13) residual.
+#[derive(Debug, Default, Clone, Copy)]
+struct Partials {
+    fx_dot_y: f64,
+    x_dot_fsy: f64,
+    fx_sq: f64,
+    y_sq: f64,
+    x_sq: f64,
+    fsy_sq: f64,
+}
+
+fn sq_norm<T: Scalar>(t: &Option<Tensor<T>>) -> f64 {
+    t.as_ref().map(|t| t.norm().powi(2)).unwrap_or(0.0)
+}
+
+fn dot<T: Scalar>(a: &Option<Tensor<T>>, b: &Option<Tensor<T>>) -> Result<f64> {
+    match (a, b) {
+        (Some(a), Some(b)) => a.inner(b),
+        (None, None) => Ok(0.0),
+        _ => Err(crate::error::Error::Primitive(
+            "inner product between mismatched shard presence".into(),
+        )),
+    }
+}
+
+/// Draw a random local shard for `shape` (uniform in [-0.5, 0.5)).
+pub fn random_shard<T: Scalar>(
+    shape: &Option<Vec<usize>>,
+    rng: &mut SplitMix64,
+) -> Option<Tensor<T>> {
+    shape.as_ref().map(|s| {
+        Tensor::from_vec(
+            s,
+            (0..crate::tensor::numel(s))
+                .map(|_| T::from_f64(rng.next_f64() - 0.5))
+                .collect(),
+        )
+        .expect("random shard")
+    })
+}
+
+/// Run the Eq. (13) adjoint test for `op` on a fresh `world`-rank cluster
+/// with deterministic random data, returning the relative residual.
+///
+/// In exact arithmetic the residual is zero; a coherent implementation in
+/// f64 should sit at ~1e-15, and anything above `1e-12` indicates a wrong
+/// adjoint (missing add, unreversed order, dropped clear, ...).
+pub fn adjoint_residual<T: Scalar>(
+    world: usize,
+    op: &dyn DistLinearOp<T>,
+    seed: u64,
+) -> Result<f64> {
+    let partials = Cluster::run(world, |comm| {
+        let rank = comm.rank();
+        let mut rng = SplitMix64::new(seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let x = random_shard::<T>(&op.domain_shape(rank), &mut rng);
+        let y = random_shard::<T>(&op.codomain_shape(rank), &mut rng);
+        let fx = op.forward(comm, x.clone())?;
+        let fsy = op.adjoint(comm, y.clone())?;
+        Ok(Partials {
+            fx_dot_y: dot(&fx, &y)?,
+            x_dot_fsy: dot(&x, &fsy)?,
+            fx_sq: sq_norm(&fx),
+            y_sq: sq_norm(&y),
+            x_sq: sq_norm(&x),
+            fsy_sq: sq_norm(&fsy),
+        })
+    })?;
+    let mut tot = Partials::default();
+    for p in &partials {
+        tot.fx_dot_y += p.fx_dot_y;
+        tot.x_dot_fsy += p.x_dot_fsy;
+        tot.fx_sq += p.fx_sq;
+        tot.y_sq += p.y_sq;
+        tot.x_sq += p.x_sq;
+        tot.fsy_sq += p.fsy_sq;
+    }
+    let denom = (tot.fx_sq.sqrt() * tot.y_sq.sqrt()).max(tot.x_sq.sqrt() * tot.fsy_sq.sqrt());
+    if denom == 0.0 {
+        return Ok(0.0);
+    }
+    Ok((tot.fx_dot_y - tot.x_dot_fsy).abs() / denom)
+}
+
+/// Assert coherence with the default f64 threshold used throughout the
+/// test-suite.
+pub fn assert_coherent<T: Scalar>(world: usize, op: &dyn DistLinearOp<T>, seed: u64) {
+    let r = adjoint_residual(world, op, seed).unwrap_or_else(|e| {
+        panic!("adjoint test for {} failed to run: {e}", op.name());
+    });
+    assert!(
+        r < 1e-12,
+        "operator {} fails the Eq. (13) adjoint test: residual {r:.3e}",
+        op.name()
+    );
+}
+
+/// Additionally verify F is *linear* by spot-checking
+/// F(αx + βx') = αFx + βFx' on random data — catches accidental affine
+/// terms that the adjoint test alone can miss when they cancel.
+pub fn linearity_residual<T: Scalar>(
+    world: usize,
+    op: &dyn DistLinearOp<T>,
+    seed: u64,
+) -> Result<f64> {
+    let (alpha, beta) = (0.75, -1.25);
+    let partials = Cluster::run(world, |comm| {
+        let rank = comm.rank();
+        let mut rng = SplitMix64::new(seed ^ 0xABCDEF ^ ((rank as u64) << 17));
+        let x1 = random_shard::<T>(&op.domain_shape(rank), &mut rng);
+        let x2 = random_shard::<T>(&op.domain_shape(rank), &mut rng);
+        let combo = match (&x1, &x2) {
+            (Some(a), Some(b)) => {
+                let mut c = a.scale(T::from_f64(alpha));
+                c.axpy(T::from_f64(beta), b)?;
+                Some(c)
+            }
+            (None, None) => None,
+            _ => unreachable!("domain presence is rank-deterministic"),
+        };
+        let f_combo = op.forward(comm, combo)?;
+        let f1 = op.forward(comm, x1)?;
+        let f2 = op.forward(comm, x2)?;
+        let diff = match (f_combo, f1, f2) {
+            (Some(fc), Some(f1), Some(f2)) => {
+                let mut expect = f1.scale(T::from_f64(alpha));
+                expect.axpy(T::from_f64(beta), &f2)?;
+                fc.max_abs_diff(&expect)?
+            }
+            (None, None, None) => 0.0,
+            _ => {
+                return Err(crate::error::Error::Primitive(
+                    "codomain presence changed between calls".into(),
+                ))
+            }
+        };
+        Ok(diff)
+    })?;
+    Ok(partials.into_iter().fold(0.0, f64::max))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Comm;
+
+    /// Identity on every rank — sanity-checks the harness itself.
+    struct Identity {
+        shape: Vec<usize>,
+    }
+
+    impl DistLinearOp<f64> for Identity {
+        fn domain_shape(&self, _rank: usize) -> Option<Vec<usize>> {
+            Some(self.shape.clone())
+        }
+        fn codomain_shape(&self, _rank: usize) -> Option<Vec<usize>> {
+            Some(self.shape.clone())
+        }
+        fn forward(&self, _c: &mut Comm, x: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+            Ok(x)
+        }
+        fn adjoint(&self, _c: &mut Comm, y: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+            Ok(y)
+        }
+        fn name(&self) -> String {
+            "I".into()
+        }
+    }
+
+    /// Deliberately wrong adjoint (scales by 2 instead of 3) — the harness
+    /// must reject it.
+    struct BrokenScale;
+
+    impl DistLinearOp<f64> for BrokenScale {
+        fn domain_shape(&self, _rank: usize) -> Option<Vec<usize>> {
+            Some(vec![8])
+        }
+        fn codomain_shape(&self, _rank: usize) -> Option<Vec<usize>> {
+            Some(vec![8])
+        }
+        fn forward(&self, _c: &mut Comm, x: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+            Ok(x.map(|t| t.scale(3.0)))
+        }
+        fn adjoint(&self, _c: &mut Comm, y: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+            Ok(y.map(|t| t.scale(2.0)))
+        }
+        fn name(&self) -> String {
+            "broken".into()
+        }
+    }
+
+    #[test]
+    fn identity_is_coherent() {
+        let op = Identity { shape: vec![4, 3] };
+        for world in [1, 2, 4] {
+            assert_coherent(world, &op, 1);
+        }
+    }
+
+    #[test]
+    fn wrong_adjoint_detected() {
+        let r = adjoint_residual(2, &BrokenScale, 7).unwrap();
+        // residual is O(⟨x,y⟩/3‖x‖‖y‖) for random x,y — far above the
+        // 1e-12 coherence threshold even when x, y are nearly orthogonal
+        assert!(r > 1e-6, "broken adjoint slipped through: residual {r}");
+    }
+
+    #[test]
+    fn identity_is_linear() {
+        let op = Identity { shape: vec![5] };
+        let r = linearity_residual(3, &op, 3).unwrap();
+        assert!(r < 1e-12);
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional subcommands: `distdl <command> [--options]`.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand).
+    pub command: Option<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` booleans.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of argument tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().expect("peeked");
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                return Err(Error::Usage(format!("unexpected positional '{tok}'")));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Option value as string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option parsed as `usize`.
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| Error::Usage(format!("--{key} expects an integer, got '{v}'")))
+            })
+            .transpose()
+    }
+
+    /// Option parsed as `f64`.
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| Error::Usage(format!("--{key} expects a number, got '{v}'")))
+            })
+            .transpose()
+    }
+
+    /// Is a boolean flag present?
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--batch", "64", "--lr=0.001", "--sequential"]);
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("batch").unwrap(), Some(64));
+        assert_eq!(a.get_f64("lr").unwrap(), Some(0.001));
+        assert!(a.has_flag("sequential"));
+        assert!(!a.has_flag("missing"));
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["train", "--batch", "sixty"]);
+        assert!(a.get_usize("batch").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["x", "--verbose"]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,405 @@
+//! Message-passing substrate (the "MPI" of this reproduction).
+//!
+//! The paper's framework "is independent of communication back-end" (§3);
+//! DistDL used MPI via mpi4py. Here the back-end is an in-process SPMD
+//! cluster: [`Cluster::run`] spawns one OS thread per world rank and hands
+//! each a [`Comm`] endpoint supporting tagged point-to-point send/receive —
+//! the paper's primitive "from which all others can be derived". All
+//! collectives in [`crate::primitives`] are built strictly on top of
+//! send/recv, exactly as the linear-algebraic derivations compose
+//! everything from the send-receive copy operator.
+//!
+//! Semantics match MPI where it matters:
+//! * messages between a (source, destination) pair are FIFO;
+//! * receives match on `(source, tag)`; non-matching messages are parked in
+//!   a local mailbox until a matching receive is posted;
+//! * [`Comm::barrier`] is a full-world barrier;
+//! * payloads are opaque byte buffers; [`Comm::send_slice`]/[`Comm::recv_vec`]
+//!   add a typed length-checked layer used by all primitives.
+
+use crate::error::{Error, Result};
+use crate::tensor::Scalar;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// Default receive timeout — generous, but converts a deadlock (the classic
+/// distributed-programming failure mode) into a test failure instead of a
+/// hang.
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// A tagged message in flight.
+#[derive(Debug)]
+struct Message {
+    src: usize,
+    tag: u64,
+    payload: Vec<u8>,
+}
+
+/// Per-rank traffic counters (used by benches and the coordinator's metric
+/// dump).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CommStats {
+    /// Messages sent by this rank.
+    pub messages_sent: usize,
+    /// Payload bytes sent by this rank.
+    pub bytes_sent: usize,
+    /// Messages received.
+    pub messages_received: usize,
+    /// Payload bytes received.
+    pub bytes_received: usize,
+}
+
+/// One rank's endpoint into the cluster.
+pub struct Comm {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<Message>>,
+    inbox: Receiver<Message>,
+    /// Messages that arrived before a matching receive was posted.
+    parked: HashMap<(usize, u64), std::collections::VecDeque<Vec<u8>>>,
+    barrier: Arc<Barrier>,
+    stats: CommStats,
+}
+
+impl Comm {
+    /// This endpoint's world rank.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// World size.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Traffic counters so far.
+    pub fn stats(&self) -> CommStats {
+        self.stats
+    }
+
+    /// Send raw bytes to `dst` with `tag`. Never blocks (channels are
+    /// unbounded; backpressure is not modelled — the paper's experiments
+    /// are synchronous SPMD).
+    pub fn send_bytes(&mut self, dst: usize, tag: u64, payload: Vec<u8>) -> Result<()> {
+        if dst >= self.size {
+            return Err(Error::Comm(format!(
+                "send to rank {dst} out of range (world {})",
+                self.size
+            )));
+        }
+        self.stats.messages_sent += 1;
+        self.stats.bytes_sent += payload.len();
+        self.senders[dst]
+            .send(Message {
+                src: self.rank,
+                tag,
+                payload,
+            })
+            .map_err(|_| Error::Comm(format!("rank {dst} disconnected")))
+    }
+
+    /// Blocking receive of the next message from `src` with `tag`.
+    pub fn recv_bytes(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
+        // Check the parked mailbox first.
+        if let Some(q) = self.parked.get_mut(&(src, tag)) {
+            if let Some(payload) = q.pop_front() {
+                self.stats.messages_received += 1;
+                self.stats.bytes_received += payload.len();
+                return Ok(payload);
+            }
+        }
+        loop {
+            let msg = self.inbox.recv_timeout(RECV_TIMEOUT).map_err(|_| {
+                Error::Comm(format!(
+                    "rank {} timed out waiting for (src={src}, tag={tag})",
+                    self.rank
+                ))
+            })?;
+            if msg.src == src && msg.tag == tag {
+                self.stats.messages_received += 1;
+                self.stats.bytes_received += msg.payload.len();
+                return Ok(msg.payload);
+            }
+            self.parked
+                .entry((msg.src, msg.tag))
+                .or_default()
+                .push_back(msg.payload);
+        }
+    }
+
+    /// Send a typed slice (wire format: little-endian elements, with an
+    /// 8-byte element-count header for integrity checking).
+    pub fn send_slice<T: Scalar>(&mut self, dst: usize, tag: u64, data: &[T]) -> Result<()> {
+        let mut buf = Vec::with_capacity(8 + data.len() * T::WIRE_SIZE);
+        buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        T::write_bytes(data, &mut buf);
+        self.send_bytes(dst, tag, buf)
+    }
+
+    /// Receive a typed vector; errors if the sender's length header
+    /// disagrees with the payload.
+    pub fn recv_vec<T: Scalar>(&mut self, src: usize, tag: u64) -> Result<Vec<T>> {
+        let buf = self.recv_bytes(src, tag)?;
+        if buf.len() < 8 {
+            return Err(Error::Comm("truncated message header".into()));
+        }
+        let n = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
+        let body = &buf[8..];
+        if body.len() != n * T::WIRE_SIZE {
+            return Err(Error::Comm(format!(
+                "message length {} != {} x {} elements",
+                body.len(),
+                n,
+                T::WIRE_SIZE
+            )));
+        }
+        Ok(T::read_bytes(body))
+    }
+
+    /// Exchange slices with a peer (send then receive; safe because sends
+    /// never block). The building block of the halo exchange operator C_E.
+    pub fn sendrecv<T: Scalar>(
+        &mut self,
+        peer: usize,
+        send_tag: u64,
+        recv_tag: u64,
+        data: &[T],
+    ) -> Result<Vec<T>> {
+        self.send_slice(peer, send_tag, data)?;
+        self.recv_vec(peer, recv_tag)
+    }
+
+    /// Full-world barrier.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+}
+
+/// An SPMD cluster of in-process workers.
+pub struct Cluster;
+
+impl Cluster {
+    /// Run `f` on `world` ranks concurrently and collect per-rank results
+    /// in rank order.
+    ///
+    /// `f` may borrow from the caller (scoped threads). Worker panics are
+    /// converted into `Error::Comm` naming the rank.
+    pub fn run<R, F>(world: usize, f: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(&mut Comm) -> Result<R> + Send + Sync,
+    {
+        if world == 0 {
+            return Err(Error::Comm("world size must be >= 1".into()));
+        }
+        let mut senders = Vec::with_capacity(world);
+        let mut inboxes = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            inboxes.push(rx);
+        }
+        let barrier = Arc::new(Barrier::new(world));
+        let mut comms: Vec<Comm> = inboxes
+            .into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| Comm {
+                rank,
+                size: world,
+                senders: senders.clone(),
+                inbox,
+                parked: HashMap::new(),
+                barrier: barrier.clone(),
+                stats: CommStats::default(),
+            })
+            .collect();
+        // Drop the original senders so disconnects propagate when workers
+        // finish.
+        drop(senders);
+
+        let f = &f;
+        let results: Vec<Result<R>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = comms
+                .iter_mut()
+                .map(|comm| scope.spawn(move || f(comm)))
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(rank, h)| match h.join() {
+                    Ok(r) => r,
+                    Err(p) => {
+                        let msg = p
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "worker panicked".into());
+                        Err(Error::Comm(format!("rank {rank} panicked: {msg}")))
+                    }
+                })
+                .collect()
+        });
+        results.into_iter().collect()
+    }
+
+    /// Like [`Cluster::run`], returning per-rank [`CommStats`] alongside
+    /// the results.
+    pub fn run_with_stats<R, F>(world: usize, f: F) -> Result<Vec<(R, CommStats)>>
+    where
+        R: Send,
+        F: Fn(&mut Comm) -> Result<R> + Send + Sync,
+    {
+        Cluster::run(world, |comm| {
+            let r = f(comm)?;
+            Ok((r, comm.stats()))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pass() {
+        let results = Cluster::run(4, |comm| {
+            let next = (comm.rank() + 1) % comm.size();
+            let prev = (comm.rank() + comm.size() - 1) % comm.size();
+            comm.send_slice::<f64>(next, 1, &[comm.rank() as f64])?;
+            let got = comm.recv_vec::<f64>(prev, 1)?;
+            Ok(got[0])
+        })
+        .unwrap();
+        assert_eq!(results, vec![3.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn single_rank_world() {
+        let r = Cluster::run(1, |comm| {
+            assert_eq!(comm.size(), 1);
+            Ok(comm.rank())
+        })
+        .unwrap();
+        assert_eq!(r, vec![0]);
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        // Rank 0 sends tag 2 then tag 1; rank 1 receives tag 1 first.
+        let results = Cluster::run(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send_slice::<f64>(1, 2, &[20.0])?;
+                comm.send_slice::<f64>(1, 1, &[10.0])?;
+                Ok(0.0)
+            } else {
+                let a = comm.recv_vec::<f64>(0, 1)?[0];
+                let b = comm.recv_vec::<f64>(0, 2)?[0];
+                Ok(a * 1000.0 + b)
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], 10020.0);
+    }
+
+    #[test]
+    fn fifo_within_same_tag() {
+        let results = Cluster::run(2, |comm| {
+            if comm.rank() == 0 {
+                for i in 0..5 {
+                    comm.send_slice::<f64>(1, 7, &[i as f64])?;
+                }
+                Ok(vec![])
+            } else {
+                let mut got = Vec::new();
+                for _ in 0..5 {
+                    got.push(comm.recv_vec::<f64>(0, 7)?[0]);
+                }
+                Ok(got)
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sendrecv_exchange() {
+        let results = Cluster::run(2, |comm| {
+            let peer = 1 - comm.rank();
+            let mine = [comm.rank() as f32 + 1.0];
+            let theirs = comm.sendrecv(peer, 9, 9, &mine)?;
+            Ok(theirs[0])
+        })
+        .unwrap();
+        assert_eq!(results, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        Cluster::run(4, |comm| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            comm.barrier();
+            // after the barrier every rank must see all increments
+            assert_eq!(counter.load(Ordering::SeqCst), 4);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn worker_panic_is_reported() {
+        let err = Cluster::run(2, |comm| {
+            if comm.rank() == 1 {
+                panic!("boom");
+            }
+            Ok(())
+        })
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("rank 1") && msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn send_out_of_range_errors() {
+        let res = Cluster::run(1, |comm| comm.send_slice::<f32>(5, 0, &[1.0]));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn stats_count_traffic() {
+        let out = Cluster::run_with_stats(2, |comm| {
+            let peer = 1 - comm.rank();
+            comm.send_slice::<f64>(peer, 3, &[1.0, 2.0, 3.0])?;
+            let _ = comm.recv_vec::<f64>(peer, 3)?;
+            Ok(())
+        })
+        .unwrap();
+        for (_, s) in out {
+            assert_eq!(s.messages_sent, 1);
+            assert_eq!(s.messages_received, 1);
+            assert_eq!(s.bytes_sent, 8 + 24);
+        }
+    }
+
+    #[test]
+    fn typed_wire_integrity() {
+        // Sending f64 but receiving f32 must fail the length check.
+        let res = Cluster::run(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send_slice::<f64>(1, 4, &[1.0, 2.0, 3.0])?;
+                Ok(())
+            } else {
+                match comm.recv_vec::<f32>(0, 4) {
+                    Err(Error::Comm(_)) => Ok(()),
+                    other => panic!("expected comm error, got {other:?}"),
+                }
+            }
+        });
+        assert!(res.is_ok());
+    }
+}

@@ -1,0 +1,157 @@
+//! Run configuration: defaults, JSON config files, CLI overrides.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Which local-kernel backend the coordinator uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust kernels (any shape).
+    Native,
+    /// AOT-compiled XLA/Pallas executables from `artifacts/` (f32 LeNet
+    /// shapes; falls back to native per-kernel when an artifact is
+    /// missing).
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse from a string.
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" | "xla" => Ok(Backend::Pjrt),
+            other => Err(Error::Config(format!("unknown backend '{other}'"))),
+        }
+    }
+}
+
+/// Training-run configuration (§5 / Appendix C protocol, scaled).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Batch size (App. C: 256).
+    pub batch: usize,
+    /// Training steps (batches).
+    pub steps: usize,
+    /// Adam learning rate (App. C: 1e-3).
+    pub lr: f64,
+    /// Dataset size.
+    pub dataset: usize,
+    /// Seed for parameters and data.
+    pub seed: u64,
+    /// Distributed (4-worker) or sequential layout.
+    pub distributed: bool,
+    /// Local-kernel backend.
+    pub backend: Backend,
+    /// Log every N steps.
+    pub log_every: usize,
+    /// Path to AOT artifacts (manifest.json directory).
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            batch: 64,
+            steps: 200,
+            lr: 1e-3,
+            dataset: 16_384,
+            seed: 42,
+            distributed: true,
+            backend: Backend::Native,
+            log_every: 10,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load overrides from a JSON config file.
+    pub fn from_json_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed JSON object's fields.
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.get_opt("batch") {
+            self.batch = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("steps") {
+            self.steps = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("lr") {
+            self.lr = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("dataset") {
+            self.dataset = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("seed") {
+            self.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = j.get_opt("distributed") {
+            self.distributed = v.as_bool()?;
+        }
+        if let Some(v) = j.get_opt("backend") {
+            self.backend = Backend::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.get_opt("log_every") {
+            self.log_every = v.as_usize()?.max(1);
+        }
+        if let Some(v) = j.get_opt("artifacts_dir") {
+            self.artifacts_dir = v.as_str()?.to_string();
+        }
+        Ok(())
+    }
+
+    /// Validate invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 || self.steps == 0 {
+            return Err(Error::Config("batch and steps must be positive".into()));
+        }
+        if self.dataset < self.batch {
+            return Err(Error::Config(format!(
+                "dataset ({}) smaller than one batch ({})",
+                self.dataset, self.batch
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut cfg = TrainConfig::default();
+        let j = Json::parse(
+            r#"{"batch": 16, "lr": 0.01, "distributed": false, "backend": "pjrt"}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.batch, 16);
+        assert_eq!(cfg.lr, 0.01);
+        assert!(!cfg.distributed);
+        assert_eq!(cfg.backend, Backend::Pjrt);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.batch = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.dataset = 1;
+        assert!(cfg.validate().is_err());
+        assert!(Backend::parse("cuda").is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Shared experiment suites: the Eq. (13) adjoint-coherence sweep (E1)
+//! and the Appendix-B halo-geometry tables (E2–E5), used by the CLI, the
+//! `adjoint_suite`/`halo_explorer` examples, and the benches.
+
+use crate::adjoint::{adjoint_residual, DistLinearOp};
+use crate::error::{Error, Result};
+use crate::halo::{dim_halos, format_dim_table, HaloGeometry, KernelSpec};
+use crate::partition::{Partition, TensorDecomposition};
+use crate::primitives::{
+    AllReduce, Broadcast, Gather, HaloExchange, Repartition, Scatter, SendRecv, SumReduce,
+    TrimPad,
+};
+
+/// One adjoint-suite case: a named operator with the world size it runs
+/// on.
+pub struct SuiteCase {
+    /// Case label.
+    pub label: String,
+    /// World size.
+    pub world: usize,
+    /// The operator.
+    pub op: Box<dyn DistLinearOp<f64>>,
+}
+
+/// Build the full primitive sweep at a given tensor scale `n`.
+pub fn suite_cases(n: usize) -> Result<Vec<SuiteCase>> {
+    let mut cases: Vec<SuiteCase> = Vec::new();
+    // send-recv
+    cases.push(SuiteCase {
+        label: format!("send-recv [{n}x{n}] 0→1"),
+        world: 2,
+        op: Box::new(SendRecv::new(0, 1, &[n, n], 10)),
+    });
+    // broadcast / sum-reduce / all-reduce over 4 workers
+    cases.push(SuiteCase {
+        label: format!("broadcast [{n}x{n}] 1→4"),
+        world: 4,
+        op: Box::new(Broadcast::replicate(0, 4, &[n, n], 20)?),
+    });
+    cases.push(SuiteCase {
+        label: format!("sum-reduce [{n}x{n}] 4→1"),
+        world: 4,
+        op: Box::new(SumReduce::to_root(0, 4, &[n, n], 30)?),
+    });
+    cases.push(SuiteCase {
+        label: format!("all-reduce [{n}] x4"),
+        world: 4,
+        op: Box::new(AllReduce::new(&[0, 1, 2, 3], &[n], 40)?),
+    });
+    // scatter / gather over a 2-D decomposition
+    let d22 = TensorDecomposition::new(Partition::from_shape(&[2, 2]), &[2 * n + 1, n + 2])?;
+    cases.push(SuiteCase {
+        label: format!("scatter [{}x{}] root 0 → 2x2", 2 * n + 1, n + 2),
+        world: 4,
+        op: Box::new(Scatter::new(d22.clone(), 0, 50)),
+    });
+    cases.push(SuiteCase {
+        label: format!("gather [{}x{}] 2x2 → root 1", 2 * n + 1, n + 2),
+        world: 4,
+        op: Box::new(Gather::new(d22, 1, 60)),
+    });
+    // all-to-all: rows → columns
+    cases.push(SuiteCase {
+        label: format!("all-to-all [{n}x{n}] rows→cols"),
+        world: 2,
+        op: Box::new(Repartition::new(
+            TensorDecomposition::new(Partition::from_shape(&[2, 1]), &[n, n])?,
+            TensorDecomposition::new(Partition::from_shape(&[1, 2]), &[n, n])?,
+            70,
+        )?),
+    });
+    // halo exchanges for every Appendix-B geometry, scaled by n
+    for (label, size, p, k) in [
+        ("halo B2 (k5 pad2)", 11.max(n), 3, KernelSpec::padded(5, 2)),
+        ("halo B3 (k5)", 11.max(n), 3, KernelSpec::plain(5)),
+        ("halo B5 (k2 s2)", 20.max(n), 6, KernelSpec::pool(2, 2)),
+    ] {
+        let geom = HaloGeometry::new(&[size], &[p], &[k])?;
+        cases.push(SuiteCase {
+            label: format!("{label} n={size} P={p}"),
+            world: p,
+            op: Box::new(HaloExchange::new(Partition::from_shape(&[p]), geom.clone(), 80)?),
+        });
+        cases.push(SuiteCase {
+            label: format!("trim/pad shim {label} n={size} P={p}"),
+            world: p,
+            op: Box::new(TrimPad::new(Partition::from_shape(&[p]), geom)),
+        });
+    }
+    // 2-D unbalanced halo exchange (Appendix B.2)
+    let geom2 = HaloGeometry::new(
+        &[2 * n + 1, 2 * n + 3],
+        &[2, 2],
+        &[KernelSpec::plain(3), KernelSpec::plain(3)],
+    )?;
+    cases.push(SuiteCase {
+        label: format!("halo 2-D unbalanced [{0}x{1}] 2x2", 2 * n + 1, 2 * n + 3),
+        world: 4,
+        op: Box::new(HaloExchange::new(Partition::from_shape(&[2, 2]), geom2, 90)?),
+    });
+    Ok(cases)
+}
+
+/// Run the Eq. (13) sweep, printing a row per primitive; errors if any
+/// residual exceeds the f64 coherence threshold.
+pub fn run_adjoint_suite(n: usize) -> Result<()> {
+    println!("Eq. (13) adjoint coherence, f64, tensor scale n={n}:");
+    println!("{:<48} {:>8} {:>14}", "operator", "world", "residual");
+    let mut worst: f64 = 0.0;
+    for case in suite_cases(n)? {
+        let r = adjoint_residual(case.world, case.op.as_ref(), 0xE13)?;
+        println!("{:<48} {:>8} {:>14.3e}", case.label, case.world, r);
+        worst = worst.max(r);
+    }
+    println!("worst residual: {worst:.3e} (threshold 1e-12)");
+    if worst >= 1e-12 {
+        return Err(Error::Primitive(format!(
+            "adjoint suite failed: worst residual {worst:.3e}"
+        )));
+    }
+    Ok(())
+}
+
+/// Print the Appendix-B halo tables (E2–E5).
+pub fn print_halo_tables() {
+    let figures: [(&str, usize, usize, KernelSpec); 4] = [
+        ("Fig. B2 — 'normal' convolution (k=5, pad=2)", 11, 3, KernelSpec::padded(5, 2)),
+        ("Fig. B3 — unbalanced convolution (k=5, no pad)", 11, 3, KernelSpec::plain(5)),
+        ("Fig. B4 — simple unbalanced pooling (k=2, s=2)", 11, 3, KernelSpec::pool(2, 2)),
+        ("Fig. B5 — complex unbalanced pooling (k=2, s=2)", 20, 6, KernelSpec::pool(2, 2)),
+    ];
+    for (title, n, p, k) in figures {
+        println!("\n{title}");
+        match dim_halos(n, p, &k) {
+            Ok(halos) => print!("{}", format_dim_table(n, &k, &halos)),
+            Err(e) => println!("  error: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_runs_clean_small() {
+        run_adjoint_suite(8).unwrap();
+    }
+
+    #[test]
+    fn suite_case_inventory() {
+        let cases = suite_cases(8).unwrap();
+        // all seven primitive families present
+        let labels: Vec<&str> = cases.iter().map(|c| c.label.as_str()).collect();
+        for needle in [
+            "send-recv",
+            "broadcast",
+            "sum-reduce",
+            "all-reduce",
+            "scatter",
+            "gather",
+            "all-to-all",
+            "halo",
+            "trim/pad",
+        ] {
+            assert!(
+                labels.iter().any(|l| l.contains(needle)),
+                "missing {needle} in suite"
+            );
+        }
+    }
+}

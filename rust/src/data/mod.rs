@@ -1,0 +1,261 @@
+//! Synthetic MNIST-like dataset.
+//!
+//! The paper's Appendix C experiment trains on MNIST; this environment is
+//! offline, so we substitute a deterministic synthetic dataset with the
+//! same shapes (28×28 single-channel images, 10 classes), the same
+//! batching protocol (fixed batch size, final partial batch dropped —
+//! "the final 96 images are dropped from the data set, for both
+//! networks"), and a class structure that a LeNet can genuinely learn:
+//! each class is a distinct stroke pattern (oriented bars, blobs and
+//! rings) with random translation, amplitude jitter and additive noise.
+//! The parity claim being reproduced — *sequential ≡ distributed* — is
+//! invariant to the data distribution (both networks see identical
+//! batches), as documented in DESIGN.md §1.
+
+use crate::tensor::Tensor;
+use crate::util::rng::SplitMix64;
+
+/// One batch: images `[b, 1, 28, 28]` and labels `[b]`.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Image tensor.
+    pub images: Tensor<f64>,
+    /// Class labels.
+    pub labels: Vec<usize>,
+}
+
+impl Batch {
+    /// Cast images to another scalar type.
+    pub fn images_as<T: crate::tensor::Scalar>(&self) -> Tensor<T> {
+        self.images.cast()
+    }
+}
+
+/// Deterministic synthetic MNIST substitute.
+#[derive(Debug, Clone)]
+pub struct SyntheticMnist {
+    images: Vec<f64>, // n * 784
+    labels: Vec<usize>,
+    n: usize,
+}
+
+const SIDE: usize = 28;
+const PIXELS: usize = SIDE * SIDE;
+
+impl SyntheticMnist {
+    /// Generate `n` samples with the given seed.
+    pub fn new(seed: u64, n: usize) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut images = Vec::with_capacity(n * PIXELS);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = rng.below(10);
+            let img = Self::render(label, &mut rng);
+            images.extend_from_slice(&img);
+            labels.push(label);
+        }
+        SyntheticMnist { images, labels, n }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Class-conditional stroke pattern + jitter + noise, normalised to
+    /// roughly zero mean / unit scale like torchvision's MNIST transform.
+    fn render(label: usize, rng: &mut SplitMix64) -> [f64; PIXELS] {
+        let mut img = [0f64; PIXELS];
+        let dx = rng.range(0, 7) as i64 - 3; // translation jitter
+        let dy = rng.range(0, 7) as i64 - 3;
+        let amp = rng.uniform(0.8, 1.2);
+        let mut put = |x: i64, y: i64, v: f64| {
+            let (x, y) = (x + dx, y + dy);
+            if (0..SIDE as i64).contains(&x) && (0..SIDE as i64).contains(&y) {
+                let idx = (y as usize) * SIDE + x as usize;
+                img[idx] = (img[idx] + v * amp).min(1.5);
+            }
+        };
+        let c = SIDE as i64 / 2;
+        match label {
+            0 => {
+                // ring
+                for t in 0..64 {
+                    let a = t as f64 / 64.0 * std::f64::consts::TAU;
+                    put(c + (8.0 * a.cos()) as i64, c + (9.0 * a.sin()) as i64, 1.0);
+                }
+            }
+            1 => {
+                for y in 5..23 {
+                    put(c, y, 1.0);
+                    put(c + 1, y, 0.7);
+                }
+            }
+            2 => {
+                for x in 6..22 {
+                    put(x, 7, 1.0);
+                    put(x, 21, 1.0);
+                }
+                for t in 0..14 {
+                    put(21 - t, 7 + t, 1.0);
+                }
+            }
+            3 => {
+                for x in 7..21 {
+                    put(x, 6, 1.0);
+                    put(x, 14, 1.0);
+                    put(x, 22, 1.0);
+                }
+                for y in 6..22 {
+                    put(20, y, 0.9);
+                }
+            }
+            4 => {
+                for y in 5..15 {
+                    put(8, y, 1.0);
+                }
+                for x in 8..21 {
+                    put(x, 14, 1.0);
+                }
+                for y in 5..23 {
+                    put(17, y, 1.0);
+                }
+            }
+            5 => {
+                for x in 7..21 {
+                    put(x, 6, 1.0);
+                    put(x, 13, 1.0);
+                    put(x, 21, 1.0);
+                }
+                for y in 6..14 {
+                    put(7, y, 1.0);
+                }
+                for y in 13..22 {
+                    put(20, y, 1.0);
+                }
+            }
+            6 => {
+                for y in 6..22 {
+                    put(9, y, 1.0);
+                }
+                for t in 0..32 {
+                    let a = t as f64 / 32.0 * std::f64::consts::TAU;
+                    put(13 + (5.0 * a.cos()) as i64, 17 + (4.0 * a.sin()) as i64, 1.0);
+                }
+            }
+            7 => {
+                for x in 6..22 {
+                    put(x, 6, 1.0);
+                }
+                for t in 0..16 {
+                    put(21 - t, 7 + t, 1.0);
+                }
+            }
+            8 => {
+                for t in 0..32 {
+                    let a = t as f64 / 32.0 * std::f64::consts::TAU;
+                    put(c + (5.0 * a.cos()) as i64, 10 + (4.0 * a.sin()) as i64, 1.0);
+                    put(c + (6.0 * a.cos()) as i64, 19 + (4.0 * a.sin()) as i64, 1.0);
+                }
+            }
+            _ => {
+                for t in 0..32 {
+                    let a = t as f64 / 32.0 * std::f64::consts::TAU;
+                    put(c + (5.0 * a.cos()) as i64, 10 + (4.0 * a.sin()) as i64, 1.0);
+                }
+                for y in 10..23 {
+                    put(c + 5, y, 1.0);
+                }
+            }
+        }
+        // additive noise + normalisation
+        for v in img.iter_mut() {
+            *v = (*v - 0.13 + rng.normal() * 0.08) / 0.31;
+        }
+        img
+    }
+
+    /// Batches of exactly `batch` samples, dropping the final partial
+    /// batch exactly as Appendix C does.
+    pub fn batches(&self, batch: usize) -> Vec<Batch> {
+        let full = self.n / batch;
+        (0..full)
+            .map(|i| {
+                let imgs = &self.images[i * batch * PIXELS..(i + 1) * batch * PIXELS];
+                Batch {
+                    images: Tensor::from_vec(&[batch, 1, SIDE, SIDE], imgs.to_vec())
+                        .expect("batch tensor"),
+                    labels: self.labels[i * batch..(i + 1) * batch].to_vec(),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = SyntheticMnist::new(1, 32);
+        let b = SyntheticMnist::new(1, 32);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images, b.images);
+        let c = SyntheticMnist::new(2, 32);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn batching_drops_partial() {
+        let d = SyntheticMnist::new(3, 100);
+        let batches = d.batches(32);
+        assert_eq!(batches.len(), 3); // 96 used, 4 dropped
+        for b in &batches {
+            assert_eq!(b.images.shape(), &[32, 1, 28, 28]);
+            assert_eq!(b.labels.len(), 32);
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean intra-class distance must be well below inter-class distance
+        let d = SyntheticMnist::new(7, 400);
+        let mut by_class: Vec<Vec<&[f64]>> = vec![Vec::new(); 10];
+        for (i, &l) in d.labels.iter().enumerate() {
+            by_class[l].push(&d.images[i * PIXELS..(i + 1) * PIXELS]);
+        }
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+        };
+        let mut intra = 0.0;
+        let mut intra_n = 0.0;
+        let mut inter = 0.0;
+        let mut inter_n = 0.0;
+        for c1 in 0..10 {
+            for i in 0..by_class[c1].len().min(5) {
+                for j in (i + 1)..by_class[c1].len().min(5) {
+                    intra += dist(by_class[c1][i], by_class[c1][j]);
+                    intra_n += 1.0;
+                }
+                if c1 + 1 < 10 && !by_class[c1 + 1].is_empty() {
+                    inter += dist(by_class[c1][i], by_class[c1 + 1][0]);
+                    inter_n += 1.0;
+                }
+            }
+        }
+        assert!(intra / intra_n < inter / inter_n, "classes not separable");
+    }
+
+    #[test]
+    fn pixels_normalised() {
+        let d = SyntheticMnist::new(11, 64);
+        let mean: f64 = d.images.iter().sum::<f64>() / d.images.len() as f64;
+        assert!(mean.abs() < 1.0, "mean {mean}");
+    }
+}

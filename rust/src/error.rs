@@ -1,0 +1,67 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in the crate returns [`Result`]. The variants
+//! mirror the subsystems: shape/partition logic, the communication
+//! substrate, the PJRT runtime, configuration, and I/O.
+
+use thiserror::Error;
+
+/// Errors produced by distdl.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape or dimension mismatch in tensor math.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Invalid partition description or rank out of range.
+    #[error("partition error: {0}")]
+    Partition(String),
+
+    /// Failure in the message-passing substrate (disconnected peer,
+    /// tag/type mismatch, ...).
+    #[error("comm error: {0}")]
+    Comm(String),
+
+    /// A primitive was configured inconsistently (e.g. halo wider than the
+    /// neighbouring bulk region).
+    #[error("primitive error: {0}")]
+    Primitive(String),
+
+    /// Autograd tape misuse (backward before forward, missing grad, ...).
+    #[error("autograd error: {0}")]
+    Autograd(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Malformed JSON in a manifest or config file.
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Bad configuration value.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// CLI usage error.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("xla: {e}"))
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Helper to build a shape error.
+pub fn shape_err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error::Shape(msg.into()))
+}

@@ -1,0 +1,445 @@
+//! Generalized (unbalanced) halo geometry — §3 "Halo exchange" and
+//! Appendix B.
+//!
+//! For sliding-kernel layers, load balance is driven by the **output**
+//! tensor: each worker owns a balanced slice of the output, and from the
+//! kernel parameters (size, stride, dilation, padding) we derive the input
+//! span the worker needs. Comparing that span to the worker's balanced
+//! *input* ownership yields, per dimension and per side:
+//!
+//! * **halo** — input the worker needs but a neighbour owns (must be
+//!   exchanged);
+//! * **unused** — input the worker owns but does not need ("extra input
+//!   \[that\] has to be removed when the input is provided to the local
+//!   operator", Figs. B4–B5);
+//! * **zero-pad** — positions outside the global tensor produced by the
+//!   kernel's implicit zero padding (materialised by the trim/pad shim).
+//!
+//! The paper's Appendix B figures are regenerated verbatim from this module
+//! by `rust/tests/halo_figures.rs` and `examples/halo_explorer.rs`.
+
+use crate::error::{Error, Result};
+use crate::partition::balanced_split;
+
+/// Sliding-kernel parameters along one dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelSpec {
+    /// Kernel size `k`.
+    pub size: usize,
+    /// Stride `s`.
+    pub stride: usize,
+    /// Dilation `d` (1 = dense kernel).
+    pub dilation: usize,
+    /// Implicit zero padding added at the low edge.
+    pub pad_lo: usize,
+    /// Implicit zero padding added at the high edge.
+    pub pad_hi: usize,
+}
+
+impl KernelSpec {
+    /// Dense, stride-1, unpadded kernel of size `k`.
+    pub fn plain(k: usize) -> Self {
+        KernelSpec {
+            size: k,
+            stride: 1,
+            dilation: 1,
+            pad_lo: 0,
+            pad_hi: 0,
+        }
+    }
+
+    /// Dense kernel with symmetric padding.
+    pub fn padded(k: usize, pad: usize) -> Self {
+        KernelSpec {
+            size: k,
+            stride: 1,
+            dilation: 1,
+            pad_lo: pad,
+            pad_hi: pad,
+        }
+    }
+
+    /// Pooling-style kernel: size `k`, stride `s`, no padding/dilation.
+    pub fn pool(k: usize, s: usize) -> Self {
+        KernelSpec {
+            size: k,
+            stride: s,
+            dilation: 1,
+            pad_lo: 0,
+            pad_hi: 0,
+        }
+    }
+
+    /// Effective receptive extent: `dilation * (size - 1) + 1`.
+    pub fn extent(&self) -> usize {
+        self.dilation * (self.size - 1) + 1
+    }
+
+    /// Global output size for global input size `n` (standard conv/pool
+    /// arithmetic).
+    pub fn output_size(&self, n: usize) -> Result<usize> {
+        let padded = n + self.pad_lo + self.pad_hi;
+        let ext = self.extent();
+        if padded < ext {
+            return Err(Error::Primitive(format!(
+                "kernel extent {ext} exceeds padded input {padded}"
+            )));
+        }
+        Ok((padded - ext) / self.stride + 1)
+    }
+}
+
+/// Halo geometry of one worker along one dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DimHalo {
+    /// Owned input slice start (global index).
+    pub in_start: usize,
+    /// Owned input slice length.
+    pub in_len: usize,
+    /// Owned output slice start (global index).
+    pub out_start: usize,
+    /// Owned output slice length.
+    pub out_len: usize,
+    /// Width of the left halo (data needed from the left neighbour).
+    pub left_halo: usize,
+    /// Width of the right halo.
+    pub right_halo: usize,
+    /// Leading owned entries not needed by the local kernel.
+    pub left_unused: usize,
+    /// Trailing owned entries not needed by the local kernel.
+    pub right_unused: usize,
+    /// Implicit zeros to materialise before the first needed entry
+    /// (non-zero only on the first worker of a padded kernel).
+    pub left_zero_pad: usize,
+    /// Implicit zeros after the last needed entry.
+    pub right_zero_pad: usize,
+}
+
+impl DimHalo {
+    /// Length of the buffer handed to the local kernel:
+    /// zero-pad + halo + (owned − unused) + halo + zero-pad.
+    pub fn compute_len(&self) -> usize {
+        self.left_zero_pad
+            + self.left_halo
+            + (self.in_len - self.left_unused - self.right_unused)
+            + self.right_halo
+            + self.right_zero_pad
+    }
+
+    /// Length of the exchange buffer (owned + halos; unused entries stay —
+    /// the trim shim drops them *after* the exchange).
+    pub fn exchanged_len(&self) -> usize {
+        self.left_halo + self.in_len + self.right_halo
+    }
+}
+
+/// Compute the halo geometry of every worker along one dimension.
+///
+/// `n` is the global input size, `p` the number of workers along this
+/// dimension. Input ownership is the balanced split of `n`; output
+/// ownership the balanced split of the kernel's output size. Workers are
+/// assumed to exchange with *direct neighbours only*, which the paper also
+/// assumes ("tensors are sensibly decomposed, relative to kernel size");
+/// violations are reported as errors.
+pub fn dim_halos(n: usize, p: usize, kernel: &KernelSpec) -> Result<Vec<DimHalo>> {
+    let m = kernel.output_size(n)?;
+    let in_split = balanced_split(n, p);
+    let out_split = balanced_split(m, p);
+    let mut out = Vec::with_capacity(p);
+    for i in 0..p {
+        let (in_start, in_len) = in_split[i];
+        let (out_start, out_len) = out_split[i];
+        // Needed input span in *unpadded* global coordinates; may extend
+        // below 0 or above n where implicit zero padding applies.
+        let (need_lo, need_hi) = if out_len == 0 {
+            // No output rows: needs nothing.
+            (in_start as i64, in_start as i64)
+        } else {
+            let lo = (out_start * kernel.stride) as i64 - kernel.pad_lo as i64;
+            let hi = ((out_start + out_len - 1) * kernel.stride) as i64 - kernel.pad_lo as i64
+                + kernel.extent() as i64;
+            (lo, hi)
+        };
+        let left_zero_pad = (-need_lo).max(0) as usize;
+        let right_zero_pad = (need_hi - n as i64).max(0) as usize;
+        let need_lo = need_lo.clamp(0, n as i64) as usize;
+        let need_hi = need_hi.clamp(0, n as i64) as usize;
+        let (i_lo, i_hi) = (in_start, in_start + in_len);
+        let left_halo = i_lo.saturating_sub(need_lo);
+        let right_halo = need_hi.saturating_sub(i_hi);
+        let left_unused = need_lo.saturating_sub(i_lo).min(in_len);
+        let right_unused = i_hi.saturating_sub(need_hi).min(in_len - left_unused);
+        // Direct-neighbour reachability check.
+        if i > 0 {
+            let (l_start, l_len) = in_split[i - 1];
+            if left_halo > l_len && need_lo < l_start {
+                return Err(Error::Primitive(format!(
+                    "worker {i}: left halo {left_halo} reaches beyond direct neighbour \
+                     (owns {l_len}); decompose more sensibly (paper §3 assumption)"
+                )));
+            }
+        } else if left_halo > 0 {
+            return Err(Error::Primitive(
+                "leftmost worker cannot have a left halo".into(),
+            ));
+        }
+        if i + 1 < p {
+            let (_, r_len) = in_split[i + 1];
+            if right_halo > r_len {
+                return Err(Error::Primitive(format!(
+                    "worker {i}: right halo {right_halo} reaches beyond direct neighbour \
+                     (owns {r_len}); decompose more sensibly (paper §3 assumption)"
+                )));
+            }
+        } else if right_halo > 0 {
+            return Err(Error::Primitive(
+                "rightmost worker cannot have a right halo".into(),
+            ));
+        }
+        out.push(DimHalo {
+            in_start,
+            in_len,
+            out_start,
+            out_len,
+            left_halo,
+            right_halo,
+            left_unused,
+            right_unused,
+            left_zero_pad,
+            right_zero_pad,
+        });
+    }
+    Ok(out)
+}
+
+/// Halo geometry for a multi-dimensional (feature-space) tensor: one
+/// `Vec<DimHalo>` per partitioned dimension.
+#[derive(Debug, Clone)]
+pub struct HaloGeometry {
+    /// Per dimension: per worker-coordinate geometry.
+    pub dims: Vec<Vec<DimHalo>>,
+}
+
+impl HaloGeometry {
+    /// Compute geometry for global feature shape `n`, partition extents
+    /// `p`, and per-dimension kernels.
+    pub fn new(n: &[usize], p: &[usize], kernels: &[KernelSpec]) -> Result<Self> {
+        if n.len() != p.len() || n.len() != kernels.len() {
+            return Err(Error::Primitive(format!(
+                "halo geometry: ranks differ (n {:?}, p {:?}, kernels {})",
+                n,
+                p,
+                kernels.len()
+            )));
+        }
+        let dims = n
+            .iter()
+            .zip(p.iter())
+            .zip(kernels.iter())
+            .map(|((&n, &p), k)| dim_halos(n, p, k))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(HaloGeometry { dims })
+    }
+
+    /// Geometry of the worker at grid coordinates `coords`.
+    pub fn at(&self, coords: &[usize]) -> Vec<DimHalo> {
+        coords
+            .iter()
+            .zip(self.dims.iter())
+            .map(|(&c, dim)| dim[c])
+            .collect()
+    }
+}
+
+/// Pretty-print one dimension's geometry as the Appendix-B style table
+/// used by `examples/halo_explorer.rs` and the `halo_tables` bench.
+pub fn format_dim_table(n: usize, kernel: &KernelSpec, halos: &[DimHalo]) -> String {
+    let mut s = String::new();
+    use std::fmt::Write;
+    let m = kernel.output_size(n).unwrap_or(0);
+    let _ = writeln!(
+        s,
+        "input n={n}  output m={m}  kernel k={} s={} dil={} pad=({},{})",
+        kernel.size, kernel.stride, kernel.dilation, kernel.pad_lo, kernel.pad_hi
+    );
+    let _ = writeln!(
+        s,
+        "{:>6} {:>12} {:>12} {:>10} {:>10} {:>12} {:>10}",
+        "worker", "in[lo,hi)", "out[lo,hi)", "halo L", "halo R", "unused L/R", "zeropad"
+    );
+    for (i, h) in halos.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "{:>6} {:>12} {:>12} {:>10} {:>10} {:>12} {:>10}",
+            i,
+            format!("[{},{})", h.in_start, h.in_start + h.in_len),
+            format!("[{},{})", h.out_start, h.out_start + h.out_len),
+            h.left_halo,
+            h.right_halo,
+            format!("{}/{}", h.left_unused, h.right_unused),
+            format!("{}/{}", h.left_zero_pad, h.right_zero_pad),
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_sizes() {
+        assert_eq!(KernelSpec::plain(5).output_size(11).unwrap(), 7);
+        assert_eq!(KernelSpec::padded(5, 2).output_size(11).unwrap(), 11);
+        assert_eq!(KernelSpec::pool(2, 2).output_size(11).unwrap(), 5);
+        assert_eq!(KernelSpec::pool(2, 2).output_size(20).unwrap(), 10);
+        assert!(KernelSpec::plain(9).output_size(4).is_err());
+    }
+
+    #[test]
+    fn dilation_extent() {
+        let k = KernelSpec {
+            size: 3,
+            stride: 1,
+            dilation: 2,
+            pad_lo: 0,
+            pad_hi: 0,
+        };
+        assert_eq!(k.extent(), 5);
+        assert_eq!(k.output_size(11).unwrap(), 7);
+    }
+
+    /// Fig. B2: k=5 centered, pad 2, n=11, P=3 — uniform halos of width 2.
+    #[test]
+    fn fig_b2_uniform_halos() {
+        let h = dim_halos(11, 3, &KernelSpec::padded(5, 2)).unwrap();
+        assert_eq!(h[0].left_zero_pad, 2);
+        assert_eq!(h[0].left_halo, 0);
+        assert_eq!(h[0].right_halo, 2);
+        assert_eq!(h[1].left_halo, 2);
+        assert_eq!(h[1].right_halo, 2);
+        assert_eq!(h[2].left_halo, 2);
+        assert_eq!(h[2].right_halo, 0);
+        assert_eq!(h[2].right_zero_pad, 2);
+        for w in &h {
+            assert_eq!(w.left_unused + w.right_unused, 0);
+        }
+    }
+
+    /// Fig. B3: k=5 centered, no padding, n=11, P=3 — large one-sided halos
+    /// at the edges, small balanced halos in the middle.
+    #[test]
+    fn fig_b3_unbalanced_halos() {
+        let h = dim_halos(11, 3, &KernelSpec::plain(5)).unwrap();
+        // out m=7 split {3,2,2}; in split {4,4,3}
+        assert_eq!((h[0].out_start, h[0].out_len), (0, 3));
+        assert_eq!((h[0].left_halo, h[0].right_halo), (0, 3));
+        assert_eq!((h[1].left_halo, h[1].right_halo), (1, 1));
+        assert_eq!((h[2].left_halo, h[2].right_halo), (3, 0));
+    }
+
+    /// Fig. B5: k=2 right-looking, stride 2, n=20, P=6 — mixed halos and
+    /// "extra input" (unused) entries, matching the paper's prose exactly.
+    #[test]
+    fn fig_b5_complex_unbalanced() {
+        let h = dim_halos(20, 6, &KernelSpec::pool(2, 2)).unwrap();
+        // "For the first and second workers, there are no halos."
+        assert_eq!((h[0].left_halo, h[0].right_halo), (0, 0));
+        assert_eq!((h[1].left_halo, h[1].right_halo), (0, 0));
+        // "The third worker has a right halo but no left halo."
+        assert_eq!(h[2].left_halo, 0);
+        assert_eq!(h[2].right_halo, 1);
+        // "The 4th worker has 1 extra input on the left and a halo of
+        //  length 2 on the right."
+        assert_eq!(h[3].left_unused, 1);
+        assert_eq!(h[3].right_halo, 2);
+        // "The 5th worker has 2 extra input on the left and a halo of
+        //  length 1 on the right."
+        assert_eq!(h[4].left_unused, 2);
+        assert_eq!(h[4].right_halo, 1);
+        // "The final worker has no halos, but one extra input on the left."
+        assert_eq!((h[5].left_halo, h[5].right_halo), (0, 0));
+        assert_eq!(h[5].left_unused, 1);
+    }
+
+    /// Fig. B4 under the B5 (balanced-output) convention: k=2 s=2, n=11,
+    /// P=3. The outputs {2,2,1} need inputs [0,4), [4,8), [8,10): workers
+    /// 0 and 1 need no halo and worker 2 has one trailing unused entry.
+    /// (The prose of Fig. B4 describes a slightly different assignment;
+    /// Fig. B5 — same kernel, larger case — matches this convention
+    /// exactly, see EXPERIMENTS.md E4.)
+    #[test]
+    fn fig_b4_simple_unbalanced() {
+        let h = dim_halos(11, 3, &KernelSpec::pool(2, 2)).unwrap();
+        assert_eq!((h[0].left_halo, h[0].right_halo), (0, 0));
+        assert_eq!((h[1].left_halo, h[1].right_halo), (0, 0));
+        assert_eq!((h[2].left_halo, h[2].right_halo), (0, 0));
+        assert_eq!(h[2].right_unused, 1);
+        // every needed entry is covered: compute_len matches the kernel need
+        assert_eq!(h[2].compute_len(), 2);
+    }
+
+    #[test]
+    fn halo_cover_invariant_randomized() {
+        // For any (n, p, k, s, pad): zero_pad + halo + owned-minus-unused
+        // must exactly cover the needed span of every worker.
+        let mut rng = crate::util::rng::SplitMix64::new(99);
+        for _ in 0..300 {
+            let n = rng.range(8, 64);
+            let p = rng.range(1, 5);
+            let k = rng.range(1, 6);
+            let s = rng.range(1, 4);
+            let pad = rng.range(0, k.min(3));
+            let spec = KernelSpec {
+                size: k,
+                stride: s,
+                dilation: 1,
+                pad_lo: pad,
+                pad_hi: pad,
+            };
+            if spec.output_size(n).is_err() {
+                continue;
+            }
+            let Ok(halos) = dim_halos(n, p, &spec) else {
+                continue; // halo reaches past neighbour: legitimately rejected
+            };
+            for h in &halos {
+                if h.out_len == 0 {
+                    continue;
+                }
+                let need_lo = (h.out_start * s) as i64 - pad as i64;
+                let need_hi =
+                    ((h.out_start + h.out_len - 1) * s + spec.extent()) as i64 - pad as i64;
+                let covered = h.compute_len() as i64;
+                assert_eq!(
+                    covered,
+                    need_hi - need_lo,
+                    "cover mismatch: n={n} p={p} k={k} s={s} pad={pad} h={h:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_dim_geometry() {
+        let g = HaloGeometry::new(
+            &[11, 20],
+            &[3, 6],
+            &[KernelSpec::padded(5, 2), KernelSpec::pool(2, 2)],
+        )
+        .unwrap();
+        let w = g.at(&[1, 3]);
+        assert_eq!(w[0].left_halo, 2);
+        assert_eq!(w[1].right_halo, 2);
+        assert_eq!(w[1].left_unused, 1);
+    }
+
+    #[test]
+    fn format_table_smoke() {
+        let k = KernelSpec::plain(5);
+        let h = dim_halos(11, 3, &k).unwrap();
+        let t = format_dim_table(11, &k, &h);
+        assert!(t.contains("worker"));
+        assert!(t.contains("[0,4)"));
+    }
+}

@@ -1,0 +1,73 @@
+//! # DistDL-RS
+//!
+//! A Rust + JAX + Pallas reproduction of *"A Linear Algebraic Approach to
+//! Model Parallelism in Deep Learning"* (Hewett & Grady, 2020) — the DistDL
+//! paper.
+//!
+//! The paper's thesis: the data-movement operations required for distributed
+//! (model-parallel) deep learning — broadcast, sum-reduce, scatter/gather,
+//! all-to-all, and the generalized (unbalanced) halo exchange — are **linear
+//! operators**. By fixing the spaces they act on and the (Euclidean) inner
+//! product, their adjoints can be derived *by hand*, so gradient-based
+//! training does not require an automatic-differentiation tool that
+//! understands message passing. Distributed layers are then built by
+//! composing these primitives with ordinary sequential layer kernels.
+//!
+//! This crate implements the whole stack:
+//!
+//! * [`tensor`] — dense row-major tensors (`f32`/`f64`) with the region-copy
+//!   machinery every primitive is built on.
+//! * [`partition`] — cartesian worker grids and load-balanced tensor
+//!   decompositions (§3–4 of the paper).
+//! * [`memory`] — the linear-algebraic memory model of §2 / Appendix A:
+//!   allocate, clear, add, copy, move, and their adjoints.
+//! * [`comm`] — an MPI-like message-passing substrate (threads + channels);
+//!   the paper's model is explicitly back-end independent.
+//! * [`primitives`] — §3: send/recv, scatter/gather, broadcast, sum-reduce,
+//!   all-reduce, generalized all-to-all (repartition), and the generalized
+//!   unbalanced halo exchange — each a [`adjoint::LinearOp`] with a
+//!   hand-derived adjoint.
+//! * [`halo`] — Appendix B halo geometry: per-worker left/right halo widths
+//!   and "unused input" regions for arbitrary kernel size/stride/dilation/
+//!   padding.
+//! * [`adjoint`] — the coherence test of Eq. (13).
+//! * [`autograd`] — a tape-based reverse-mode engine standing in for
+//!   torch.autograd; primitives register their adjoints as backward ops.
+//! * [`nn`] — §4 distributed layers (conv, pool, affine, transpose,
+//!   pointwise) over both native Rust kernels and AOT-compiled XLA
+//!   executables.
+//! * [`runtime`] — PJRT loading/execution of `artifacts/*.hlo.txt` produced
+//!   by the JAX/Pallas compile path (`python/compile`).
+//! * [`models`], [`data`], [`optim`], [`coordinator`] — the distributed
+//!   LeNet-5 of §5 / Appendix C, a synthetic MNIST, optimizers, and the SPMD
+//!   training orchestrator.
+//! * [`util`], [`testing`], [`cli`] — hand-rolled substrates (JSON, PRNG,
+//!   property-test and bench harnesses, argument parsing); the crates this
+//!   build cannot take as dependencies.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! request/training path is pure Rust + PJRT.
+
+pub mod adjoint;
+pub mod autograd;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod halo;
+pub mod memory;
+pub mod metrics;
+pub mod models;
+pub mod nn;
+pub mod optim;
+pub mod partition;
+pub mod primitives;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+pub use error::{Error, Result};
+pub use tensor::{Scalar, Tensor};

@@ -1,0 +1,211 @@
+//! `distdl` — the leader entrypoint and CLI.
+//!
+//! ```text
+//! distdl train         [--batch N] [--steps N] [--lr F] [--seed N]
+//!                      [--sequential] [--backend native|pjrt]
+//!                      [--dataset N] [--config file.json] [--metrics out.json]
+//! distdl parity        [--batch N] [--steps N]       sequential vs distributed (§5)
+//! distdl describe      [--batch N]                   Table 1 / Fig. C10 placement
+//! distdl adjoint-test  [--size N]                    Eq. (13) across all primitives
+//! distdl halo-table                                  Appendix B halo geometries
+//! ```
+
+use distdl::cli::Args;
+use distdl::config::{Backend, TrainConfig};
+use distdl::error::{Error, Result};
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("parity") => cmd_parity(&args),
+        Some("describe") => cmd_describe(&args),
+        Some("adjoint-test") => cmd_adjoint(&args),
+        Some("halo-table") => cmd_halo_table(),
+        Some("version") => {
+            println!("distdl {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        Some(other) => Err(Error::Usage(format!(
+            "unknown command '{other}' (try: train, parity, describe, adjoint-test, halo-table)"
+        ))),
+        None => {
+            println!(
+                "distdl — linear-algebraic model parallelism (Hewett & Grady 2020)\n\
+                 commands: train, parity, describe, adjoint-test, halo-table, version\n\
+                 see README.md for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn config_from(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_json_file(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(b) = args.get_usize("batch")? {
+        cfg.batch = b;
+    }
+    if let Some(s) = args.get_usize("steps")? {
+        cfg.steps = s;
+    }
+    if let Some(lr) = args.get_f64("lr")? {
+        cfg.lr = lr;
+    }
+    if let Some(d) = args.get_usize("dataset")? {
+        cfg.dataset = d;
+    }
+    if let Some(seed) = args.get_usize("seed")? {
+        cfg.seed = seed as u64;
+    }
+    if args.has_flag("sequential") {
+        cfg.distributed = false;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = Backend::parse(b)?;
+    }
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    println!(
+        "training LeNet-5: layout={} backend={:?} batch={} steps={} lr={}",
+        if cfg.distributed {
+            "4-worker distributed"
+        } else {
+            "sequential"
+        },
+        cfg.backend,
+        cfg.batch,
+        cfg.steps,
+        cfg.lr
+    );
+    let report = distdl::coordinator::train(&cfg)?;
+    for rec in report
+        .log
+        .steps
+        .iter()
+        .filter(|r| r.step % cfg.log_every == 0 || r.step + 1 == cfg.steps)
+    {
+        println!(
+            "step {:>5}  loss {:>8.4}  acc {:>6.2}%  ({:.3}s)",
+            rec.step,
+            rec.loss,
+            rec.accuracy * 100.0,
+            rec.step_time_s
+        );
+    }
+    println!(
+        "final: loss {:.4}, train acc {:.2}%, eval acc {}",
+        report.final_loss,
+        report.final_accuracy * 100.0,
+        report
+            .eval_accuracy
+            .map(|a| format!("{:.2}%", a * 100.0))
+            .unwrap_or_else(|| "n/a".into()),
+    );
+    println!("params per rank: {:?}", report.params_per_rank);
+    if let Some(path) = args.get("metrics") {
+        std::fs::write(path, report.log.to_json().to_string())?;
+        println!("metrics written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_parity(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    cfg.distributed = false;
+    println!("== sequential ==");
+    let seq = distdl::coordinator::train(&cfg)?;
+    cfg.distributed = true;
+    println!("== distributed (4 workers) ==");
+    let dist = distdl::coordinator::train(&cfg)?;
+    println!(
+        "\n§5 parity: sequential loss {:.6} acc {:.2}% | distributed loss {:.6} acc {:.2}%",
+        seq.final_loss,
+        seq.final_accuracy * 100.0,
+        dist.final_loss,
+        dist.final_accuracy * 100.0
+    );
+    let max_dl = seq
+        .log
+        .steps
+        .iter()
+        .zip(dist.log.steps.iter())
+        .map(|(a, b)| (a.loss - b.loss).abs())
+        .fold(0.0f64, f64::max);
+    println!("max per-step |Δloss| = {max_dl:.3e} (identical data, identical init)");
+    Ok(())
+}
+
+fn cmd_describe(args: &Args) -> Result<()> {
+    use distdl::models::{lenet5, LeNetConfig, LeNetLayout};
+    use distdl::nn::NativeKernels;
+    let batch = args.get_usize("batch")?.unwrap_or(256);
+    let net = lenet5::<f32>(
+        &LeNetConfig {
+            batch,
+            layout: LeNetLayout::FourWorker,
+        },
+        std::sync::Arc::new(NativeKernels),
+    )?;
+    println!("Distributed LeNet-5, batch {batch} — Table 1 (learnable parameters per worker):\n");
+    println!(
+        "{:<10} {:<26} {:<16} {:<26} {:<16}",
+        "Layer", "Worker 0", "Worker 1", "Worker 2", "Worker 3"
+    );
+    let reports: Vec<_> = (0..4).map(|r| net.placement_report(r)).collect();
+    for li in 0..reports[0].len() {
+        let lname = &reports[0][li].0;
+        let mut cells = Vec::new();
+        for r in &reports {
+            let placement = &r[li].1;
+            if placement.is_empty() {
+                cells.push("None".to_string());
+            } else {
+                cells.push(
+                    placement
+                        .iter()
+                        .map(|(n, s)| format!("{n}: {s:?}"))
+                        .collect::<Vec<_>>()
+                        .join("  "),
+                );
+            }
+        }
+        if cells.iter().any(|c| c != "None") {
+            println!(
+                "{:<10} {:<26} {:<16} {:<26} {:<16}",
+                lname, cells[0], cells[1], cells[2], cells[3]
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_adjoint(args: &Args) -> Result<()> {
+    let size = args.get_usize("size")?.unwrap_or(16);
+    distdl::coordinator::suites::run_adjoint_suite(size)
+}
+
+fn cmd_halo_table() -> Result<()> {
+    distdl::coordinator::suites::print_halo_tables();
+    Ok(())
+}

@@ -1,0 +1,558 @@
+//! The linear-algebraic memory model of §2 / Appendix A.
+//!
+//! The paper models a computer's memory 𝔽^k as a concatenation of named
+//! *subsets* (realizations x_a, x_b, ...) and shows that the primitive
+//! operations on it — **allocation**, **clear**, **add**, **copy**, **move**
+//! — are linear operators whose adjoints follow from the Euclidean inner
+//! product:
+//!
+//! * allocation A_b ⟺ deallocation D_b = A_b*   (Eq. 3–4)
+//! * clear K_b is self-adjoint                  (Eq. 5)
+//! * add S_{a→b}* = S_{b→a}                     (Eq. 6–7)
+//! * in-place copy  C_{a→b} = S_{a→b} K_b,  C* = K_b S_{b→a}
+//! * out-of-place copy C_{a→b} = S_{a→b} A_b, C* = D_b S_{b→a}
+//! * move M_{a→b} = K_a S_{a→b} K_b (in-place), M* = M_{b→a}
+//!
+//! [`MemoryState`] realizes the memory as named buffers, and each operator
+//! is a [`MemOp`] with `forward` and `adjoint` methods. The module is not
+//! just didactic: the buffer semantics of every primitive in
+//! [`crate::primitives`] (pack/exchange/unpack, clears on halo buffers,
+//! adds in adjoints) are compositions of exactly these five operators, and
+//! the unit tests here verify the §2 algebra (the crate's "theoretical
+//! glue") independently of any communication.
+
+use crate::error::{Error, Result};
+use crate::tensor::Scalar;
+use std::collections::BTreeMap;
+
+/// A memory: an ordered collection of named subsets ("realizations").
+///
+/// Ordering (BTreeMap) makes flattening deterministic, which the adjoint
+/// test relies on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryState<T: Scalar> {
+    subsets: BTreeMap<String, Vec<T>>,
+}
+
+impl<T: Scalar> MemoryState<T> {
+    /// Empty memory.
+    pub fn new() -> Self {
+        MemoryState {
+            subsets: BTreeMap::new(),
+        }
+    }
+
+    /// Memory with the given named subsets.
+    pub fn with(subsets: &[(&str, Vec<T>)]) -> Self {
+        let mut m = Self::new();
+        for (name, data) in subsets {
+            m.subsets.insert((*name).to_string(), data.clone());
+        }
+        m
+    }
+
+    /// Names of all live subsets.
+    pub fn names(&self) -> Vec<&str> {
+        self.subsets.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Borrow a subset.
+    pub fn get(&self, name: &str) -> Result<&Vec<T>> {
+        self.subsets
+            .get(name)
+            .ok_or_else(|| Error::Primitive(format!("memory subset '{name}' not allocated")))
+    }
+
+    /// Mutably borrow a subset.
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Vec<T>> {
+        self.subsets
+            .get_mut(name)
+            .ok_or_else(|| Error::Primitive(format!("memory subset '{name}' not allocated")))
+    }
+
+    /// Is the subset live?
+    pub fn contains(&self, name: &str) -> bool {
+        self.subsets.contains_key(name)
+    }
+
+    fn insert(&mut self, name: &str, data: Vec<T>) -> Result<()> {
+        if self.subsets.contains_key(name) {
+            return Err(Error::Primitive(format!(
+                "memory subset '{name}' already allocated"
+            )));
+        }
+        self.subsets.insert(name.to_string(), data);
+        Ok(())
+    }
+
+    fn remove(&mut self, name: &str) -> Result<Vec<T>> {
+        self.subsets
+            .remove(name)
+            .ok_or_else(|| Error::Primitive(format!("cannot deallocate missing subset '{name}'")))
+    }
+
+    /// Flatten to a single vector in name order — the realization of the
+    /// full space 𝔽^k used by the inner product of Eq. (2).
+    pub fn flatten(&self) -> Vec<T> {
+        self.subsets.values().flat_map(|v| v.iter().copied()).collect()
+    }
+
+    /// Euclidean inner product of two memories over the same subsets.
+    pub fn inner(&self, other: &MemoryState<T>) -> Result<f64> {
+        if self.names() != other.names() {
+            return Err(Error::Primitive(format!(
+                "inner: subset mismatch {:?} vs {:?}",
+                self.names(),
+                other.names()
+            )));
+        }
+        let mut acc = 0f64;
+        for (name, a) in &self.subsets {
+            let b = &other.subsets[name];
+            if a.len() != b.len() {
+                return Err(Error::Primitive(format!(
+                    "inner: subset '{name}' lengths {} vs {}",
+                    a.len(),
+                    b.len()
+                )));
+            }
+            for (&x, &y) in a.iter().zip(b.iter()) {
+                acc += x.to_f64() * y.to_f64();
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Euclidean norm.
+    pub fn norm(&self) -> f64 {
+        self.flatten()
+            .iter()
+            .map(|v| {
+                let x = v.to_f64();
+                x * x
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+impl<T: Scalar> Default for MemoryState<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A linear operator on memories with a hand-derived adjoint (§2).
+pub trait MemOp<T: Scalar> {
+    /// Apply the forward operator.
+    fn forward(&self, m: MemoryState<T>) -> Result<MemoryState<T>>;
+    /// Apply the adjoint operator (maps the *codomain* back to the domain).
+    fn adjoint(&self, m: MemoryState<T>) -> Result<MemoryState<T>>;
+    /// Operator name for diagnostics.
+    fn name(&self) -> String;
+}
+
+/// Allocation A_b (Eq. 3): bring subset `b` of length `len` into scope,
+/// zero-filled. Its adjoint is deallocation D_b (Eq. 4).
+pub struct Allocate {
+    /// Name of the subset to allocate.
+    pub subset: String,
+    /// Length of the new subset.
+    pub len: usize,
+}
+
+impl<T: Scalar> MemOp<T> for Allocate {
+    fn forward(&self, mut m: MemoryState<T>) -> Result<MemoryState<T>> {
+        m.insert(&self.subset, vec![T::ZERO; self.len])?;
+        Ok(m)
+    }
+
+    fn adjoint(&self, mut m: MemoryState<T>) -> Result<MemoryState<T>> {
+        let data = m.remove(&self.subset)?;
+        if data.len() != self.len {
+            return Err(Error::Primitive(format!(
+                "deallocate '{}': length {} vs allocated {}",
+                self.subset,
+                data.len(),
+                self.len
+            )));
+        }
+        Ok(m)
+    }
+
+    fn name(&self) -> String {
+        format!("A_{}", self.subset)
+    }
+}
+
+/// Deallocation D_b: remove subset `b` from scope. D_b* = A_b.
+pub struct Deallocate {
+    /// Name of the subset to deallocate.
+    pub subset: String,
+    /// Length (needed so the adjoint can re-allocate).
+    pub len: usize,
+}
+
+impl<T: Scalar> MemOp<T> for Deallocate {
+    fn forward(&self, m: MemoryState<T>) -> Result<MemoryState<T>> {
+        <Allocate as MemOp<T>>::adjoint(
+            &Allocate {
+                subset: self.subset.clone(),
+                len: self.len,
+            },
+            m,
+        )
+    }
+
+    fn adjoint(&self, m: MemoryState<T>) -> Result<MemoryState<T>> {
+        <Allocate as MemOp<T>>::forward(
+            &Allocate {
+                subset: self.subset.clone(),
+                len: self.len,
+            },
+            m,
+        )
+    }
+
+    fn name(&self) -> String {
+        format!("D_{}", self.subset)
+    }
+}
+
+/// Clear K_b (Eq. 5): zero subset `b` in place. Self-adjoint.
+pub struct Clear {
+    /// Name of the subset to clear.
+    pub subset: String,
+}
+
+impl<T: Scalar> MemOp<T> for Clear {
+    fn forward(&self, mut m: MemoryState<T>) -> Result<MemoryState<T>> {
+        m.get_mut(&self.subset)?.fill(T::ZERO);
+        Ok(m)
+    }
+
+    fn adjoint(&self, m: MemoryState<T>) -> Result<MemoryState<T>> {
+        // K* = K (Eq. 5).
+        self.forward(m)
+    }
+
+    fn name(&self) -> String {
+        format!("K_{}", self.subset)
+    }
+}
+
+/// Add S_{a→b} (Eq. 6): `x_b += x_a`. Adjoint is S_{b→a} (Eq. 7).
+pub struct Add {
+    /// Source subset `a`.
+    pub src: String,
+    /// Destination subset `b`.
+    pub dst: String,
+}
+
+impl<T: Scalar> MemOp<T> for Add {
+    fn forward(&self, mut m: MemoryState<T>) -> Result<MemoryState<T>> {
+        let src = m.get(&self.src)?.clone();
+        let dst = m.get_mut(&self.dst)?;
+        if src.len() != dst.len() {
+            return Err(Error::Primitive(format!(
+                "add {}→{}: lengths {} vs {}",
+                self.src,
+                self.dst,
+                src.len(),
+                dst.len()
+            )));
+        }
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d += *s;
+        }
+        Ok(m)
+    }
+
+    fn adjoint(&self, m: MemoryState<T>) -> Result<MemoryState<T>> {
+        // S_{a→b}* = S_{b→a} (Eq. 7).
+        <Add as MemOp<T>>::forward(
+            &Add {
+                src: self.dst.clone(),
+                dst: self.src.clone(),
+            },
+            m,
+        )
+    }
+
+    fn name(&self) -> String {
+        format!("S_{{{}→{}}}", self.src, self.dst)
+    }
+}
+
+/// Composition of memory operators, applied left-to-right in `forward`
+/// (i.e. `Compose[f, g]` is the operator g∘f); `adjoint` applies the
+/// adjoints right-to-left, matching (g∘f)* = f*∘g*.
+pub struct Compose<T: Scalar> {
+    ops: Vec<Box<dyn MemOp<T>>>,
+}
+
+impl<T: Scalar> Compose<T> {
+    /// Compose `ops`, applied first-to-last in the forward direction.
+    pub fn new(ops: Vec<Box<dyn MemOp<T>>>) -> Self {
+        Compose { ops }
+    }
+
+    /// In-place copy C_{a→b} = S_{a→b} K_b (§2, Appendix A.2).
+    pub fn copy_inplace(src: &str, dst: &str) -> Self {
+        Compose::new(vec![
+            Box::new(Clear {
+                subset: dst.to_string(),
+            }),
+            Box::new(Add {
+                src: src.to_string(),
+                dst: dst.to_string(),
+            }),
+        ])
+    }
+
+    /// Out-of-place copy C_{a→b} = S_{a→b} A_b (§2, Appendix A.2).
+    pub fn copy_outofplace(src: &str, dst: &str, len: usize) -> Self {
+        Compose::new(vec![
+            Box::new(Allocate {
+                subset: dst.to_string(),
+                len,
+            }),
+            Box::new(Add {
+                src: src.to_string(),
+                dst: dst.to_string(),
+            }),
+        ])
+    }
+
+    /// In-place move M_{a→b} = K_a S_{a→b} K_b (Appendix A.3).
+    pub fn move_inplace(src: &str, dst: &str) -> Self {
+        Compose::new(vec![
+            Box::new(Clear {
+                subset: dst.to_string(),
+            }),
+            Box::new(Add {
+                src: src.to_string(),
+                dst: dst.to_string(),
+            }),
+            Box::new(Clear {
+                subset: src.to_string(),
+            }),
+        ])
+    }
+
+    /// Out-of-place move M_{a→b} = D_a S_{a→b} A_b (Appendix A.3).
+    pub fn move_outofplace(src: &str, dst: &str, len: usize) -> Self {
+        Compose::new(vec![
+            Box::new(Allocate {
+                subset: dst.to_string(),
+                len,
+            }),
+            Box::new(Add {
+                src: src.to_string(),
+                dst: dst.to_string(),
+            }),
+            Box::new(Deallocate {
+                subset: src.to_string(),
+                len,
+            }),
+        ])
+    }
+}
+
+impl<T: Scalar> MemOp<T> for Compose<T> {
+    fn forward(&self, mut m: MemoryState<T>) -> Result<MemoryState<T>> {
+        for op in &self.ops {
+            m = op.forward(m)?;
+        }
+        Ok(m)
+    }
+
+    fn adjoint(&self, mut m: MemoryState<T>) -> Result<MemoryState<T>> {
+        for op in self.ops.iter().rev() {
+            m = op.adjoint(m)?;
+        }
+        Ok(m)
+    }
+
+    fn name(&self) -> String {
+        let parts: Vec<String> = self.ops.iter().rev().map(|o| o.name()).collect();
+        parts.join(" ")
+    }
+}
+
+/// Adjoint (coherence) test of Eq. (13) for a memory operator: checks
+/// |⟨F x, y⟩ − ⟨x, F* y⟩| / max(‖Fx‖‖y‖, ‖x‖‖F*y‖) < ε for the given
+/// domain realization `x` and codomain realization `y`.
+pub fn memop_adjoint_residual<T: Scalar>(
+    op: &dyn MemOp<T>,
+    x: &MemoryState<T>,
+    y: &MemoryState<T>,
+) -> Result<f64> {
+    let fx = op.forward(x.clone())?;
+    let fsy = op.adjoint(y.clone())?;
+    let lhs = fx.inner(y)?;
+    let rhs = x.inner(&fsy)?;
+    let denom = (fx.norm() * y.norm()).max(x.norm() * fsy.norm());
+    if denom == 0.0 {
+        return Ok(0.0);
+    }
+    Ok((lhs - rhs).abs() / denom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem(pairs: &[(&str, Vec<f64>)]) -> MemoryState<f64> {
+        MemoryState::with(pairs)
+    }
+
+    #[test]
+    fn allocate_then_deallocate_roundtrip() {
+        let m = mem(&[("a", vec![1.0, 2.0])]);
+        let a = Allocate {
+            subset: "b".into(),
+            len: 3,
+        };
+        let m2 = a.forward(m.clone()).unwrap();
+        assert_eq!(m2.get("b").unwrap(), &vec![0.0; 3]);
+        let m3 = a.adjoint(m2).unwrap();
+        assert_eq!(m3, m);
+    }
+
+    #[test]
+    fn double_allocation_rejected() {
+        let m = mem(&[("a", vec![1.0])]);
+        let a = Allocate {
+            subset: "a".into(),
+            len: 1,
+        };
+        assert!(a.forward(m).is_err());
+    }
+
+    #[test]
+    fn clear_is_self_adjoint() {
+        let x = mem(&[("a", vec![1.0, -2.0]), ("b", vec![3.0, 4.0])]);
+        let y = mem(&[("a", vec![0.5, 0.25]), ("b", vec![-1.0, 2.0])]);
+        let k = Clear { subset: "b".into() };
+        let r = memop_adjoint_residual(&k, &x, &y).unwrap();
+        assert!(r < 1e-15, "residual {r}");
+        // and K applied twice equals K applied once (projection)
+        let once = k.forward(x.clone()).unwrap();
+        let twice = k.forward(once.clone()).unwrap();
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn add_adjoint_is_reverse_add() {
+        let x = mem(&[("a", vec![1.0, 2.0]), ("b", vec![3.0, -1.0])]);
+        let y = mem(&[("a", vec![0.125, 0.25]), ("b", vec![0.375, 0.5])]);
+        let s = Add {
+            src: "a".into(),
+            dst: "b".into(),
+        };
+        // forward: b += a
+        let fx = s.forward(x.clone()).unwrap();
+        assert_eq!(fx.get("b").unwrap(), &vec![4.0, 1.0]);
+        assert_eq!(fx.get("a").unwrap(), &vec![1.0, 2.0]);
+        // adjoint: a += b (Eq. 7)
+        let fy = s.adjoint(y.clone()).unwrap();
+        assert_eq!(fy.get("a").unwrap(), &vec![0.5, 0.75]);
+        assert_eq!(fy.get("b").unwrap(), &vec![0.375, 0.5]);
+        let r = memop_adjoint_residual(&s, &x, &y).unwrap();
+        assert!(r < 1e-15, "residual {r}");
+    }
+
+    #[test]
+    fn add_length_mismatch_rejected() {
+        let m = mem(&[("a", vec![1.0]), ("b", vec![1.0, 2.0])]);
+        let s = Add {
+            src: "a".into(),
+            dst: "b".into(),
+        };
+        assert!(s.forward(m).is_err());
+    }
+
+    #[test]
+    fn inplace_copy_semantics_and_adjoint() {
+        // C_{a→b} = S_{a→b} K_b: x=[xa, xb] -> [xa, xa]
+        let x = mem(&[("a", vec![5.0, 6.0]), ("b", vec![7.0, 8.0])]);
+        let c = Compose::<f64>::copy_inplace("a", "b");
+        let fx = c.forward(x.clone()).unwrap();
+        assert_eq!(fx.get("b").unwrap(), &vec![5.0, 6.0]);
+        // adjoint C* = K_b S_{b→a}: y=[ya, yb] -> [ya+yb, 0]
+        let y = mem(&[("a", vec![1.0, 1.0]), ("b", vec![2.0, 3.0])]);
+        let fy = c.adjoint(y.clone()).unwrap();
+        assert_eq!(fy.get("a").unwrap(), &vec![3.0, 4.0]);
+        assert_eq!(fy.get("b").unwrap(), &vec![0.0, 0.0]);
+        let r = memop_adjoint_residual(&c, &x, &y).unwrap();
+        assert!(r < 1e-15, "residual {r}");
+    }
+
+    #[test]
+    fn outofplace_copy_adjoint_deallocates() {
+        // domain: {a}; codomain: {a, b}
+        let x = mem(&[("a", vec![2.0, -3.0])]);
+        let y = mem(&[("a", vec![1.0, 0.5]), ("b", vec![4.0, -2.0])]);
+        let c = Compose::<f64>::copy_outofplace("a", "b", 2);
+        let fx = c.forward(x.clone()).unwrap();
+        assert_eq!(fx.get("b").unwrap(), &vec![2.0, -3.0]);
+        let fy = c.adjoint(y.clone()).unwrap();
+        assert!(!fy.contains("b"));
+        assert_eq!(fy.get("a").unwrap(), &vec![5.0, -1.5]);
+        let r = memop_adjoint_residual(&c, &x, &y).unwrap();
+        assert!(r < 1e-15, "residual {r}");
+    }
+
+    #[test]
+    fn inplace_move_adjoint_is_reverse_move() {
+        // M_{a→b}: [xa, xb] -> [0, xa]; M* = M_{b→a} (Appendix A.3).
+        let x = mem(&[("a", vec![1.0, 2.0]), ("b", vec![9.0, 9.0])]);
+        let m_op = Compose::<f64>::move_inplace("a", "b");
+        let fx = m_op.forward(x.clone()).unwrap();
+        assert_eq!(fx.get("a").unwrap(), &vec![0.0, 0.0]);
+        assert_eq!(fx.get("b").unwrap(), &vec![1.0, 2.0]);
+        let y = mem(&[("a", vec![3.0, 4.0]), ("b", vec![5.0, 6.0])]);
+        let fy = m_op.adjoint(y.clone()).unwrap();
+        assert_eq!(fy.get("a").unwrap(), &vec![5.0, 6.0]);
+        assert_eq!(fy.get("b").unwrap(), &vec![0.0, 0.0]);
+        let r = memop_adjoint_residual(&m_op, &x, &y).unwrap();
+        assert!(r < 1e-15, "residual {r}");
+    }
+
+    #[test]
+    fn outofplace_move_roundtrips_space() {
+        let x = mem(&[("a", vec![1.5, 2.5])]);
+        let m_op = Compose::<f64>::move_outofplace("a", "b", 2);
+        let fx = m_op.forward(x.clone()).unwrap();
+        assert!(!fx.contains("a"));
+        assert_eq!(fx.get("b").unwrap(), &vec![1.5, 2.5]);
+        let y = mem(&[("b", vec![7.0, -7.0])]);
+        let fy = m_op.adjoint(y.clone()).unwrap();
+        assert!(!fy.contains("b"));
+        assert_eq!(fy.get("a").unwrap(), &vec![7.0, -7.0]);
+        let r = memop_adjoint_residual(&m_op, &x, &y).unwrap();
+        assert!(r < 1e-15, "residual {r}");
+    }
+
+    #[test]
+    fn composition_adjoint_reverses_order() {
+        // (g∘f)* = f*∘g*: clear b then add a->b; adjoint adds b->a then clears b.
+        let c = Compose::<f64>::copy_inplace("a", "b");
+        assert!(c.name().contains("S_{a→b}") && c.name().contains("K_b"));
+        // randomized coherence over several states
+        let mut rng = crate::util::rng::SplitMix64::new(42);
+        for _ in 0..20 {
+            let x = mem(&[
+                ("a", (0..3).map(|_| rng.next_f64() - 0.5).collect()),
+                ("b", (0..3).map(|_| rng.next_f64() - 0.5).collect()),
+            ]);
+            let y = mem(&[
+                ("a", (0..3).map(|_| rng.next_f64() - 0.5).collect()),
+                ("b", (0..3).map(|_| rng.next_f64() - 0.5).collect()),
+            ]);
+            let r = memop_adjoint_residual(&c, &x, &y).unwrap();
+            assert!(r < 1e-14, "residual {r}");
+        }
+    }
+}

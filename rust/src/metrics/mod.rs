@@ -1,0 +1,137 @@
+//! Training metrics: per-step records, aggregation, and JSON export.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One training-step record.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    /// Global step index.
+    pub step: usize,
+    /// Mean batch loss.
+    pub loss: f64,
+    /// Batch accuracy in [0, 1].
+    pub accuracy: f64,
+    /// Wall-clock seconds for the step.
+    pub step_time_s: f64,
+}
+
+/// A run's metric log.
+#[derive(Debug, Clone, Default)]
+pub struct MetricLog {
+    /// Step records in order.
+    pub steps: Vec<StepRecord>,
+    /// Free-form run metadata.
+    pub meta: BTreeMap<String, String>,
+}
+
+impl MetricLog {
+    /// New empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a record.
+    pub fn push(&mut self, r: StepRecord) {
+        self.steps.push(r);
+    }
+
+    /// Attach metadata.
+    pub fn set_meta(&mut self, key: &str, value: impl ToString) {
+        self.meta.insert(key.to_string(), value.to_string());
+    }
+
+    /// Mean loss over the last `n` steps.
+    pub fn recent_loss(&self, n: usize) -> f64 {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Mean accuracy over the last `n` steps.
+    pub fn recent_accuracy(&self, n: usize) -> f64 {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|r| r.accuracy).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Serialise to JSON (for EXPERIMENTS.md evidence files).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "meta",
+                Json::Obj(
+                    self.meta
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            (
+                "steps",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("step", Json::Num(r.step as f64)),
+                                ("loss", Json::Num(r.loss)),
+                                ("accuracy", Json::Num(r.accuracy)),
+                                ("time_s", Json::Num(r.step_time_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation() {
+        let mut log = MetricLog::new();
+        for i in 0..10 {
+            log.push(StepRecord {
+                step: i,
+                loss: 10.0 - i as f64,
+                accuracy: i as f64 / 10.0,
+                step_time_s: 0.1,
+            });
+        }
+        assert!((log.recent_loss(2) - 1.5).abs() < 1e-12);
+        assert!((log.recent_accuracy(5) - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut log = MetricLog::new();
+        log.set_meta("model", "lenet5");
+        log.push(StepRecord {
+            step: 0,
+            loss: 2.3,
+            accuracy: 0.1,
+            step_time_s: 0.5,
+        });
+        let j = log.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("meta").unwrap().get("model").unwrap().as_str().unwrap(),
+            "lenet5"
+        );
+        assert_eq!(parsed.get("steps").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn empty_log_is_nan() {
+        let log = MetricLog::new();
+        assert!(log.recent_loss(3).is_nan());
+    }
+}

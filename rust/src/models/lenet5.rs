@@ -1,0 +1,289 @@
+//! Distributed LeNet-5 (Fig. 1 / Fig. C10 / Table 1).
+//!
+//! The network, with the paper's four-worker parallel decomposition:
+//!
+//! | layer  | function        | distribution (4 workers)                     |
+//! |--------|-----------------|----------------------------------------------|
+//! | C1     | conv 1→6, k5 p2 | features on 2×2 grid; w,b on worker 0        |
+//! | S2     | max-pool 2×2 s2 | features on 2×2 grid                         |
+//! | C3     | conv 6→16, k5   | features on 2×2 grid; w,b on worker 0        |
+//! | S4     | max-pool 2×2 s2 | features on 2×2 grid                         |
+//! | (T)    | flatten         | all-to-all onto channel split, ranks {0,1}   |
+//! | C5     | affine 400→120  | w 2×2 = (60,200) shards; b on workers {0,2}  |
+//! | (T)    | transpose       | y ranks {0,2} → x ranks {0,1}                |
+//! | F6     | affine 120→84   | w (42,60) shards; b on workers {0,2}         |
+//! | (T)    | transpose       | {0,2} → {0,1}                                |
+//! | Output | affine 84→10    | w (5,42) shards; b on workers {0,2}          |
+//!
+//! plus the input scatter / output gather transposes the paper notes it
+//! uses "to distribute input data and collect outputs".
+//!
+//! The per-worker parameter shapes above are exactly Table 1; the
+//! `table1` integration test asserts them via
+//! [`crate::autograd::Network::placement_report`].
+
+use crate::autograd::Network;
+use crate::error::Result;
+use crate::nn::layers::{
+    AffineConfig, Conv2dConfig, DistActivation, DistAffine, DistConv2d, DistFlatten,
+    DistPool2d, DistTranspose, GatherOutput, Pool2dConfig, ScatterInput,
+};
+use crate::nn::native::{Activation, PoolMode};
+use crate::nn::LocalKernels;
+use crate::partition::{Partition, TensorDecomposition};
+use crate::tensor::Scalar;
+use std::sync::Arc;
+
+/// Which worker layout to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeNetLayout {
+    /// Everything on world rank 0 — the sequential baseline.
+    Sequential,
+    /// The paper's four-worker decomposition (Table 1, Fig. C10).
+    FourWorker,
+}
+
+/// LeNet-5 configuration.
+#[derive(Debug, Clone)]
+pub struct LeNetConfig {
+    /// Batch size (the distributed network requires it fixed, App. C).
+    pub batch: usize,
+    /// Worker layout.
+    pub layout: LeNetLayout,
+}
+
+struct Layout {
+    conv_grid: (usize, usize),
+    conv_ranks: Vec<usize>,
+    flat_ranks: Vec<usize>,
+    aff_grid: (usize, usize),
+    aff_w_ranks: Vec<usize>,
+    aff_x_ranks: Vec<usize>,
+    aff_y_ranks: Vec<usize>,
+    root: usize,
+}
+
+impl LeNetLayout {
+    fn layout(self) -> Layout {
+        match self {
+            LeNetLayout::Sequential => Layout {
+                conv_grid: (1, 1),
+                conv_ranks: vec![0],
+                flat_ranks: vec![0],
+                aff_grid: (1, 1),
+                aff_w_ranks: vec![0],
+                aff_x_ranks: vec![0],
+                aff_y_ranks: vec![0],
+                root: 0,
+            },
+            LeNetLayout::FourWorker => Layout {
+                conv_grid: (2, 2),
+                conv_ranks: vec![0, 1, 2, 3],
+                flat_ranks: vec![0, 1],
+                aff_grid: (2, 2),
+                aff_w_ranks: vec![0, 1, 2, 3],
+                aff_x_ranks: vec![0, 1],
+                aff_y_ranks: vec![0, 2],
+                root: 0,
+            },
+        }
+    }
+
+    /// World size the layout needs.
+    pub fn world_size(self) -> usize {
+        match self {
+            LeNetLayout::Sequential => 1,
+            LeNetLayout::FourWorker => 4,
+        }
+    }
+}
+
+/// Build LeNet-5 for the given layout and local-kernel backend.
+pub fn lenet5<T: Scalar>(
+    cfg: &LeNetConfig,
+    kernels: Arc<dyn LocalKernels<T>>,
+) -> Result<Network<T>> {
+    let lay = cfg.layout.layout();
+    let b = cfg.batch;
+    let mut layers: Vec<Arc<dyn crate::autograd::Layer<T>>> = Vec::new();
+    let mut tag = 0u64;
+    let mut next_tag = || {
+        tag += 10_000;
+        tag
+    };
+
+    // -- input scatter: root holds [b, 1, 28, 28] ---------------------
+    let conv_part = |grid: (usize, usize), ranks: &[usize]| {
+        Partition::new(vec![1, 1, grid.0, grid.1], ranks.to_vec())
+    };
+    let in_decomp = TensorDecomposition::new(
+        conv_part(lay.conv_grid, &lay.conv_ranks)?,
+        &[b, 1, 28, 28],
+    )?;
+    layers.push(Arc::new(ScatterInput::new(
+        "input",
+        in_decomp,
+        lay.root,
+        next_tag(),
+    )));
+
+    // -- C1: conv 1 -> 6, k5, pad 2 (28x28 -> 28x28) -------------------
+    let c1 = DistConv2d::new(
+        "C1",
+        Conv2dConfig {
+            global_in: [b, 1, 28, 28],
+            out_channels: 6,
+            kernel: (5, 5),
+            stride: (1, 1),
+            padding: (2, 2),
+            grid: lay.conv_grid,
+            ranks: lay.conv_ranks.clone(),
+            tag: next_tag(),
+        },
+        kernels.clone(),
+    )?;
+    layers.push(Arc::new(c1));
+    layers.push(Arc::new(DistActivation::new("act1", Activation::Relu)));
+
+    // -- S2: max-pool 2x2 s2 (28 -> 14) --------------------------------
+    layers.push(Arc::new(DistPool2d::new(
+        "S2",
+        Pool2dConfig {
+            global_in: [b, 6, 28, 28],
+            kernel: (2, 2),
+            stride: (2, 2),
+            mode: PoolMode::Max,
+            grid: lay.conv_grid,
+            ranks: lay.conv_ranks.clone(),
+            tag: next_tag(),
+        },
+        kernels.clone(),
+    )?));
+
+    // -- C3: conv 6 -> 16, k5, no pad (14 -> 10) -----------------------
+    layers.push(Arc::new(DistConv2d::new(
+        "C3",
+        Conv2dConfig {
+            global_in: [b, 6, 14, 14],
+            out_channels: 16,
+            kernel: (5, 5),
+            stride: (1, 1),
+            padding: (0, 0),
+            grid: lay.conv_grid,
+            ranks: lay.conv_ranks.clone(),
+            tag: next_tag(),
+        },
+        kernels.clone(),
+    )?));
+    layers.push(Arc::new(DistActivation::new("act3", Activation::Relu)));
+
+    // -- S4: max-pool 2x2 s2 (10 -> 5) ---------------------------------
+    layers.push(Arc::new(DistPool2d::new(
+        "S4",
+        Pool2dConfig {
+            global_in: [b, 16, 10, 10],
+            kernel: (2, 2),
+            stride: (2, 2),
+            mode: PoolMode::Max,
+            grid: lay.conv_grid,
+            ranks: lay.conv_ranks.clone(),
+            tag: next_tag(),
+        },
+        kernels.clone(),
+    )?));
+
+    // -- flatten: [b,16,5,5] -> [b,400] onto the affine x-ranks --------
+    let s4_decomp = TensorDecomposition::new(
+        conv_part(lay.conv_grid, &lay.conv_ranks)?,
+        &[b, 16, 5, 5],
+    )?;
+    layers.push(Arc::new(DistFlatten::new(
+        "flatten",
+        s4_decomp,
+        &lay.flat_ranks,
+        next_tag(),
+    )?));
+
+    // helper for the [b, f] feature decompositions used below
+    let feat = |f: usize, ranks: &[usize]| -> Result<TensorDecomposition> {
+        TensorDecomposition::new(
+            Partition::new(vec![1, ranks.len()], ranks.to_vec())?,
+            &[b, f],
+        )
+    };
+
+    // -- C5: affine 400 -> 120 ------------------------------------------
+    layers.push(Arc::new(DistAffine::new(
+        "C5",
+        AffineConfig {
+            batch: b,
+            f_in: 400,
+            f_out: 120,
+            grid: lay.aff_grid,
+            w_ranks: lay.aff_w_ranks.clone(),
+            x_ranks: lay.aff_x_ranks.clone(),
+            y_ranks: lay.aff_y_ranks.clone(),
+            tag: next_tag(),
+        },
+        kernels.clone(),
+    )?));
+    layers.push(Arc::new(DistActivation::new("act5", Activation::Relu)));
+
+    // -- transpose y-ranks -> x-ranks (Fig. C10 glue) -------------------
+    layers.push(Arc::new(DistTranspose::new(
+        "T5",
+        feat(120, &lay.aff_y_ranks)?,
+        feat(120, &lay.aff_x_ranks)?,
+        next_tag(),
+    )?));
+
+    // -- F6: affine 120 -> 84 --------------------------------------------
+    layers.push(Arc::new(DistAffine::new(
+        "F6",
+        AffineConfig {
+            batch: b,
+            f_in: 120,
+            f_out: 84,
+            grid: lay.aff_grid,
+            w_ranks: lay.aff_w_ranks.clone(),
+            x_ranks: lay.aff_x_ranks.clone(),
+            y_ranks: lay.aff_y_ranks.clone(),
+            tag: next_tag(),
+        },
+        kernels.clone(),
+    )?));
+    layers.push(Arc::new(DistActivation::new("act6", Activation::Relu)));
+
+    layers.push(Arc::new(DistTranspose::new(
+        "T6",
+        feat(84, &lay.aff_y_ranks)?,
+        feat(84, &lay.aff_x_ranks)?,
+        next_tag(),
+    )?));
+
+    // -- Output: affine 84 -> 10 -----------------------------------------
+    layers.push(Arc::new(DistAffine::new(
+        "Output",
+        AffineConfig {
+            batch: b,
+            f_in: 84,
+            f_out: 10,
+            grid: lay.aff_grid,
+            w_ranks: lay.aff_w_ranks.clone(),
+            x_ranks: lay.aff_x_ranks.clone(),
+            y_ranks: lay.aff_y_ranks.clone(),
+            tag: next_tag(),
+        },
+        kernels.clone(),
+    )?));
+
+    // -- gather logits to the loss root ----------------------------------
+    layers.push(Arc::new(GatherOutput::new(
+        "output_gather",
+        feat(10, &lay.aff_y_ranks)?,
+        lay.root,
+        next_tag(),
+    )));
+
+    Ok(Network::new(layers))
+}

@@ -1,0 +1,11 @@
+//! Model definitions.
+//!
+//! [`lenet5`] builds the paper's §5 / Appendix C distributed LeNet-5 for
+//! any of the supported layouts; the same builder with
+//! [`LeNetLayout::Sequential`] produces the numerically-identical
+//! single-worker baseline (same global parameters from the same seed), so
+//! the §5 parity experiment compares like for like.
+
+mod lenet5;
+
+pub use lenet5::{lenet5, LeNetConfig, LeNetLayout};

@@ -1,0 +1,125 @@
+//! Pluggable local-compute backend.
+//!
+//! Distributed layers delegate their *local* (sequential) compute through
+//! [`LocalKernels`], so the same layer code runs on either the native Rust
+//! kernels (any shape, any scalar) or the AOT-compiled XLA/Pallas
+//! executables ([`crate::runtime::PjrtKernels`], f32, fixed LeNet shapes —
+//! the production hot path). The choice never changes the data-movement
+//! structure, which is the paper's point: parallelism lives entirely in
+//! the primitives.
+
+use super::native::{self, Conv2dSpec, Pool2dSpec};
+use crate::error::Result;
+use crate::tensor::{Scalar, Tensor};
+
+/// Local sequential layer kernels (forward + VJP).
+pub trait LocalKernels<T: Scalar>: Send + Sync {
+    /// Valid 2-D convolution forward.
+    fn conv2d_forward(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        bias: Option<&Tensor<T>>,
+        spec: Conv2dSpec,
+    ) -> Result<Tensor<T>>;
+
+    /// Convolution VJP: `(dx, dw, db)`.
+    fn conv2d_backward(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        dy: &Tensor<T>,
+        spec: Conv2dSpec,
+    ) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)>;
+
+    /// Pooling forward (returns argmax stash for max pooling).
+    fn pool2d_forward(&self, x: &Tensor<T>, spec: Pool2dSpec) -> Result<(Tensor<T>, Vec<usize>)>;
+
+    /// Pooling VJP.
+    fn pool2d_backward(
+        &self,
+        x_shape: &[usize],
+        dy: &Tensor<T>,
+        argmax: &[usize],
+        spec: Pool2dSpec,
+    ) -> Result<Tensor<T>>;
+
+    /// Affine forward `y = x Wᵀ + b`.
+    fn affine_forward(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        bias: Option<&Tensor<T>>,
+    ) -> Result<Tensor<T>>;
+
+    /// Affine VJP: `(dx, dw, db)`.
+    fn affine_backward(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        dy: &Tensor<T>,
+    ) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)>;
+
+    /// Backend name (diagnostics / metrics).
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The pure-Rust backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeKernels;
+
+impl<T: Scalar> LocalKernels<T> for NativeKernels {
+    fn conv2d_forward(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        bias: Option<&Tensor<T>>,
+        spec: Conv2dSpec,
+    ) -> Result<Tensor<T>> {
+        native::conv2d_forward(x, w, bias, spec)
+    }
+
+    fn conv2d_backward(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        dy: &Tensor<T>,
+        spec: Conv2dSpec,
+    ) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)> {
+        native::conv2d_backward(x, w, dy, spec)
+    }
+
+    fn pool2d_forward(&self, x: &Tensor<T>, spec: Pool2dSpec) -> Result<(Tensor<T>, Vec<usize>)> {
+        native::pool2d_forward(x, spec)
+    }
+
+    fn pool2d_backward(
+        &self,
+        x_shape: &[usize],
+        dy: &Tensor<T>,
+        argmax: &[usize],
+        spec: Pool2dSpec,
+    ) -> Result<Tensor<T>> {
+        native::pool2d_backward(x_shape, dy, argmax, spec)
+    }
+
+    fn affine_forward(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        bias: Option<&Tensor<T>>,
+    ) -> Result<Tensor<T>> {
+        native::affine_forward(x, w, bias)
+    }
+
+    fn affine_backward(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        dy: &Tensor<T>,
+    ) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)> {
+        native::affine_backward(x, w, dy)
+    }
+}

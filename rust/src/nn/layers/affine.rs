@@ -1,0 +1,235 @@
+//! Distributed affine (dense) layer — the §4 "Dense layers" algorithm.
+//!
+//! The weights `W[fo, fi]` are distributed over the grid
+//! `P_w = P_fo × P_fi`; the input `x[b, fi]` lives on `P_x = 1 × P_fi`
+//! and the output on `P_y = 1 × P_fo`. The bias is held "only on one
+//! `P_fo × 1` subpartition of `P_w`, to avoid any issue with
+//! multiple-counting" (column 0 here — reproducing Table 1's placement of
+//! LeNet's affine biases on workers 0 and 2).
+//!
+//! ```text
+//! Forward:  x̂ ← B_{Px→Pw} x;  ŷ ← Affine(ŵ, b̂; x̂);  y ← R_{Pw→Py} ŷ
+//! Adjoint:  δŷ ← B_{Py→Pw} δy;  (δx̂, δw, δb) ← [δAffine]*;
+//!           δx ← R_{Pw→Px} δx̂
+//! ```
+//! No explicit all-reduce anywhere: the forward broadcasts induce the
+//! adjoint sum-reduces and vice versa.
+
+use crate::adjoint::DistLinearOp;
+use crate::autograd::{Layer, LayerState};
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::nn::kernels::LocalKernels;
+use crate::partition::{balanced_split, Partition};
+use crate::primitives::{Broadcast, SumReduce};
+use crate::tensor::{Region, Scalar, Tensor};
+use crate::util::rng::SplitMix64;
+use std::sync::Arc;
+
+/// Configuration for [`DistAffine`].
+#[derive(Debug, Clone)]
+pub struct AffineConfig {
+    /// Batch size.
+    pub batch: usize,
+    /// Global input features.
+    pub f_in: usize,
+    /// Global output features.
+    pub f_out: usize,
+    /// Weight grid shape (P_fo, P_fi).
+    pub grid: (usize, usize),
+    /// World ranks of the weight grid, row-major (`P_fo * P_fi` entries).
+    pub w_ranks: Vec<usize>,
+    /// World ranks holding the input shards (`P_fi` entries).
+    pub x_ranks: Vec<usize>,
+    /// World ranks receiving the output shards (`P_fo` entries).
+    pub y_ranks: Vec<usize>,
+    /// Message-tag base.
+    pub tag: u64,
+}
+
+/// The distributed affine layer.
+pub struct DistAffine<T: Scalar> {
+    cfg: AffineConfig,
+    pw: Partition,
+    px: Partition,
+    py: Partition,
+    x_bcast: Broadcast,
+    y_reduce: SumReduce,
+    fo_split: Vec<(usize, usize)>,
+    fi_split: Vec<(usize, usize)>,
+    kernels: Arc<dyn LocalKernels<T>>,
+    name: String,
+}
+
+impl<T: Scalar> DistAffine<T> {
+    /// Build the layer.
+    pub fn new(name: &str, cfg: AffineConfig, kernels: Arc<dyn LocalKernels<T>>) -> Result<Self> {
+        let (pfo, pfi) = cfg.grid;
+        let pw = Partition::new(vec![pfo, pfi], cfg.w_ranks.clone())?;
+        // P_x = 1 × P_fi : aligned with the grid's fi axis.
+        let px = Partition::new(vec![1, pfi], cfg.x_ranks.clone())?;
+        // P_y viewed as P_fo × 1 for grid alignment (the paper's "additional
+        // dimensions aid the broadcasting pattern").
+        let py = Partition::new(vec![pfo, 1], cfg.y_ranks.clone())?;
+        let fi_split = balanced_split(cfg.f_in, pfi);
+        let fo_split = balanced_split(cfg.f_out, pfo);
+        // x̂ broadcast: each fi-column's shard [b, fi_j] replicated down the
+        // fo axis.
+        let x_shapes: Vec<Vec<usize>> = fi_split
+            .iter()
+            .map(|&(_, len)| vec![cfg.batch, len])
+            .collect();
+        let x_bcast = Broadcast::new(&px, &pw, x_shapes, cfg.tag)?;
+        // ŷ reduction: each fo-row's partials [b, fo_i] summed across the
+        // fi axis onto P_y.
+        let y_shapes: Vec<Vec<usize>> = fo_split
+            .iter()
+            .map(|&(_, len)| vec![cfg.batch, len])
+            .collect();
+        let y_reduce = SumReduce::new(&pw, &py, y_shapes, cfg.tag + 50)?;
+        Ok(DistAffine {
+            cfg,
+            pw,
+            px,
+            py,
+            x_bcast,
+            y_reduce,
+            fo_split,
+            fi_split,
+            kernels,
+            name: name.to_string(),
+        })
+    }
+
+    /// Does `rank` hold a bias shard (column-0 cell of the grid)?
+    fn bias_cell(&self, rank: usize) -> Option<usize> {
+        self.pw
+            .coords_of(rank)
+            .and_then(|c| (c[1] == 0).then_some(c[0]))
+    }
+
+    /// This rank's weight-shard shape, if any.
+    fn w_shard_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.pw.coords_of(rank).map(|c| {
+            vec![self.fo_split[c[0]].1, self.fi_split[c[1]].1]
+        })
+    }
+
+    /// Deterministic global parameters (PyTorch Linear default init).
+    fn global_params(&self, seed: u64) -> (Tensor<T>, Tensor<T>) {
+        let bound = 1.0 / (self.cfg.f_in as f64).sqrt();
+        let mut rng = SplitMix64::new(seed ^ 0xAFF1);
+        let w_shape = [self.cfg.f_out, self.cfg.f_in];
+        let w = Tensor::from_vec(
+            &w_shape,
+            (0..self.cfg.f_out * self.cfg.f_in)
+                .map(|_| T::from_f64(rng.uniform(-bound, bound)))
+                .collect(),
+        )
+        .expect("affine weight init");
+        let b = Tensor::from_vec(
+            &[self.cfg.f_out],
+            (0..self.cfg.f_out)
+                .map(|_| T::from_f64(rng.uniform(-bound, bound)))
+                .collect(),
+        )
+        .expect("affine bias init");
+        (w, b)
+    }
+}
+
+impl<T: Scalar> Layer<T> for DistAffine<T> {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn init(&self, rank: usize, seed: u64) -> Result<LayerState<T>> {
+        let Some(coords) = self.pw.coords_of(rank) else {
+            return Ok(LayerState::empty());
+        };
+        // Generate the global tensors and slice this cell's shard, so every
+        // partitioning of the same seed is numerically identical.
+        let (w_global, b_global) = self.global_params(seed);
+        let (fo_start, fo_len) = self.fo_split[coords[0]];
+        let (fi_start, fi_len) = self.fi_split[coords[1]];
+        let w = w_global.extract_region(&Region::new(
+            vec![fo_start, fi_start],
+            vec![fo_len, fi_len],
+        ))?;
+        let mut params = vec![w];
+        if coords[1] == 0 {
+            params.push(b_global.extract_region(&Region::new(vec![fo_start], vec![fo_len]))?);
+        }
+        Ok(LayerState::with_params(params))
+    }
+
+    fn forward(
+        &self,
+        st: &mut LayerState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        train: bool,
+    ) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        // x̂ ← B_{Px→Pw} x
+        let x_in = if self.px.contains(rank) { x } else { None };
+        let x_hat = self.x_bcast.forward(comm, x_in)?;
+        // ŷ ← Affine(ŵ, b̂; x̂) on grid cells
+        let y_partial = if self.pw.contains(rank) {
+            let x_hat = x_hat
+                .ok_or_else(|| Error::Primitive(format!("{}: x̂ missing on grid", self.name)))?;
+            let w = &st.params[0];
+            let bias = self.bias_cell(rank).map(|_| &st.params[1]);
+            let y = self.kernels.affine_forward(&x_hat, w, bias)?;
+            if train {
+                st.saved = vec![x_hat];
+            }
+            Some(y)
+        } else {
+            None
+        };
+        // y ← R_{Pw→Py} ŷ
+        self.y_reduce.forward(comm, y_partial)
+    }
+
+    fn backward(
+        &self,
+        st: &mut LayerState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        // δŷ ← B_{Py→Pw} δy  (adjoint of the sum-reduce)
+        let dy_in = if self.py.contains(rank) { dy } else { None };
+        let dy_hat = self.y_reduce.adjoint(comm, dy_in)?;
+        // local VJP on grid cells
+        let dx_partial = if self.pw.contains(rank) {
+            let dy_hat = dy_hat
+                .ok_or_else(|| Error::Primitive(format!("{}: δŷ missing on grid", self.name)))?;
+            let x_hat = &st.saved[0];
+            let w = &st.params[0];
+            let (dx_hat, dw, db) = self.kernels.affine_backward(x_hat, w, &dy_hat)?;
+            st.grads[0].add_assign(&dw)?;
+            if self.bias_cell(rank).is_some() {
+                st.grads[1].add_assign(&db)?;
+            }
+            st.clear_saved();
+            Some(dx_hat)
+        } else {
+            None
+        };
+        // δx ← R_{Pw→Px} δx̂  (adjoint of the x broadcast)
+        self.x_bcast.adjoint(comm, dx_partial)
+    }
+
+    fn param_placement(&self, rank: usize) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::new();
+        if let Some(shape) = self.w_shard_shape(rank) {
+            out.push(("w".into(), shape));
+        }
+        if let Some(row) = self.bias_cell(rank) {
+            out.push(("b".into(), vec![self.fo_split[row].1]));
+        }
+        out
+    }
+}

@@ -1,0 +1,305 @@
+//! Distributed 2-D convolution (§4, "Sparse layers").
+//!
+//! Feature-space partitioning (the configuration of the paper's own
+//! LeNet-5 experiment — Table 1 keeps each conv's weights whole on worker
+//! 0): the input is sharded over a `ph × pw` grid of its spatial
+//! dimensions, weights and bias live on a root rank and are **broadcast**
+//! in the forward pass; by Eq. (9) the backward pass therefore
+//! sum-reduces the weight gradients onto the root without any explicit
+//! all-reduce — "a broadcast in the forward implementation naturally
+//! induces a sum-reduce in the adjoint phase".
+//!
+//! Forward (paper's Forward Convolution Algorithm, P_ci = P_co = 1):
+//! ```text
+//!   x ← H x                 (halo exchange + trim/pad shim)
+//!   ŵ, b̂ ← B_{root→grid} (w, b)
+//!   y ← Conv(ŵ, b̂; x)
+//! ```
+//! Adjoint: local VJP, then δw, δb ← R_{grid→root}, δx ← H* δx.
+
+use crate::adjoint::DistLinearOp;
+use crate::autograd::{Layer, LayerState};
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::halo::{HaloGeometry, KernelSpec};
+use crate::nn::kernels::LocalKernels;
+use crate::nn::native::Conv2dSpec;
+use crate::partition::Partition;
+use crate::primitives::{Broadcast, HaloExchange, TrimPad};
+use crate::tensor::{Region, Scalar, Tensor};
+use crate::util::rng::SplitMix64;
+use std::sync::Arc;
+
+/// Configuration for [`DistConv2d`].
+#[derive(Debug, Clone)]
+pub struct Conv2dConfig {
+    /// Global input shape `[batch, in_channels, h, w]`.
+    pub global_in: [usize; 4],
+    /// Output channels.
+    pub out_channels: usize,
+    /// Kernel (kh, kw).
+    pub kernel: (usize, usize),
+    /// Stride (rows, cols).
+    pub stride: (usize, usize),
+    /// Symmetric zero padding (rows, cols).
+    pub padding: (usize, usize),
+    /// Spatial partition grid (ph, pw).
+    pub grid: (usize, usize),
+    /// World ranks assigned to the grid, row-major (`ph*pw` entries).
+    pub ranks: Vec<usize>,
+    /// Message-tag base (layers must use disjoint bases).
+    pub tag: u64,
+}
+
+/// The distributed convolution layer.
+pub struct DistConv2d<T: Scalar> {
+    cfg: Conv2dConfig,
+    grid: Partition, // rank-4 grid [1, 1, ph, pw]
+    root: usize,
+    exchange: HaloExchange,
+    shim: TrimPad,
+    w_bcast: Broadcast,
+    b_bcast: Broadcast,
+    spec: Conv2dSpec,
+    kernels: Arc<dyn LocalKernels<T>>,
+    name: String,
+}
+
+impl<T: Scalar> DistConv2d<T> {
+    /// Build the layer; the weight root is the grid's (0,0) rank.
+    pub fn new(
+        name: &str,
+        cfg: Conv2dConfig,
+        kernels: Arc<dyn LocalKernels<T>>,
+    ) -> Result<Self> {
+        let [b, ci, h, w] = cfg.global_in;
+        let (ph, pw) = cfg.grid;
+        let grid = Partition::new(vec![1, 1, ph, pw], cfg.ranks.clone())?;
+        let geometry = HaloGeometry::new(
+            &[b, ci, h, w],
+            &[1, 1, ph, pw],
+            &[
+                KernelSpec::plain(1),
+                KernelSpec::plain(1),
+                KernelSpec {
+                    size: cfg.kernel.0,
+                    stride: cfg.stride.0,
+                    dilation: 1,
+                    pad_lo: cfg.padding.0,
+                    pad_hi: cfg.padding.0,
+                },
+                KernelSpec {
+                    size: cfg.kernel.1,
+                    stride: cfg.stride.1,
+                    dilation: 1,
+                    pad_lo: cfg.padding.1,
+                    pad_hi: cfg.padding.1,
+                },
+            ],
+        )?;
+        let exchange = HaloExchange::new(grid.clone(), geometry.clone(), cfg.tag)?;
+        let shim = TrimPad::new(grid.clone(), geometry);
+        let root = grid.rank_at(&[0, 0, 0, 0]);
+        let src = Partition::new(vec![1], vec![root])?;
+        let dst = Partition::new(vec![grid.size()], grid.world_ranks().to_vec())?;
+        let w_shape = vec![cfg.out_channels, ci, cfg.kernel.0, cfg.kernel.1];
+        let w_bcast = Broadcast::new(&src, &dst, vec![w_shape], cfg.tag + 100)?;
+        let b_bcast = Broadcast::new(&src, &dst, vec![vec![cfg.out_channels]], cfg.tag + 110)?;
+        let spec = Conv2dSpec {
+            stride: cfg.stride,
+            dilation: (1, 1),
+        };
+        Ok(DistConv2d {
+            cfg,
+            grid,
+            root,
+            exchange,
+            shim,
+            w_bcast,
+            b_bcast,
+            spec,
+            kernels,
+            name: name.to_string(),
+        })
+    }
+
+    /// Global output shape `[b, co, oh, ow]`.
+    pub fn global_out(&self) -> Result<[usize; 4]> {
+        let [b, _, h, w] = self.cfg.global_in;
+        let kh = KernelSpec {
+            size: self.cfg.kernel.0,
+            stride: self.cfg.stride.0,
+            dilation: 1,
+            pad_lo: self.cfg.padding.0,
+            pad_hi: self.cfg.padding.0,
+        };
+        let kw = KernelSpec {
+            size: self.cfg.kernel.1,
+            stride: self.cfg.stride.1,
+            dilation: 1,
+            pad_lo: self.cfg.padding.1,
+            pad_hi: self.cfg.padding.1,
+        };
+        Ok([
+            b,
+            self.cfg.out_channels,
+            kh.output_size(h)?,
+            kw.output_size(w)?,
+        ])
+    }
+
+    /// Local input shard shape for `rank` (bulk only, no halos).
+    pub fn local_in_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.grid.coords_of(rank).map(|c| {
+            self.exchange
+                .halos_at(&c)
+                .iter()
+                .map(|h| h.in_len)
+                .collect()
+        })
+    }
+
+    /// Generate the deterministic *global* parameters for `seed` (uniform
+    /// Kaiming-style bound, as PyTorch's Conv2d default).
+    fn global_params(&self, seed: u64) -> (Tensor<T>, Tensor<T>) {
+        let ci = self.cfg.global_in[1];
+        let fan_in = (ci * self.cfg.kernel.0 * self.cfg.kernel.1) as f64;
+        let bound = 1.0 / fan_in.sqrt();
+        let mut rng = SplitMix64::new(seed ^ 0xC0DE);
+        let w_shape = [
+            self.cfg.out_channels,
+            ci,
+            self.cfg.kernel.0,
+            self.cfg.kernel.1,
+        ];
+        let w = Tensor::from_vec(
+            &w_shape,
+            (0..crate::tensor::numel(&w_shape))
+                .map(|_| T::from_f64(rng.uniform(-bound, bound)))
+                .collect(),
+        )
+        .expect("conv weight init");
+        let b = Tensor::from_vec(
+            &[self.cfg.out_channels],
+            (0..self.cfg.out_channels)
+                .map(|_| T::from_f64(rng.uniform(-bound, bound)))
+                .collect(),
+        )
+        .expect("conv bias init");
+        (w, b)
+    }
+}
+
+impl<T: Scalar> Layer<T> for DistConv2d<T> {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn init(&self, rank: usize, seed: u64) -> Result<LayerState<T>> {
+        if rank == self.root {
+            let (w, b) = self.global_params(seed);
+            Ok(LayerState::with_params(vec![w, b]))
+        } else {
+            Ok(LayerState::empty())
+        }
+    }
+
+    fn forward(
+        &self,
+        st: &mut LayerState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        train: bool,
+    ) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        let coords = self.grid.coords_of(rank);
+        // Broadcast weights and bias from the root (Eq. 8) — collective
+        // over grid ranks.
+        let w_seed = (rank == self.root).then(|| st.params[0].clone());
+        let b_seed = (rank == self.root).then(|| st.params[1].clone());
+        let w_hat = self.w_bcast.forward(comm, w_seed)?;
+        let b_hat = self.b_bcast.forward(comm, b_seed)?;
+        let Some(coords) = coords else {
+            return Ok(None);
+        };
+        let x = x.ok_or_else(|| Error::Primitive(format!("{}: input missing", self.name)))?;
+        // Embed bulk into the halo buffer, exchange, trim/pad.
+        let mut buf = Tensor::zeros(&self.exchange.buffer_shape(&coords));
+        let bulk = self.exchange.bulk_region(&coords);
+        crate::tensor::check_same(x.shape(), &bulk.shape, "conv input shard")?;
+        buf.copy_region_from(&x, &Region::full(x.shape()), &bulk.start)?;
+        let buf = self
+            .exchange
+            .forward(comm, Some(buf))?
+            .expect("grid rank exchanged");
+        let x_hat = self.shim.apply(&coords, &buf)?;
+        let w_hat = w_hat.ok_or_else(|| Error::Primitive("conv: broadcast w missing".into()))?;
+        let b_hat = b_hat.ok_or_else(|| Error::Primitive("conv: broadcast b missing".into()))?;
+        let y = self
+            .kernels
+            .conv2d_forward(&x_hat, &w_hat, Some(&b_hat), self.spec)?;
+        if train {
+            st.saved = vec![x_hat, w_hat];
+        }
+        Ok(Some(y))
+    }
+
+    fn backward(
+        &self,
+        st: &mut LayerState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        let coords = self.grid.coords_of(rank);
+        let mut dw_local = None;
+        let mut db_local = None;
+        let mut dx_hat = None;
+        if let Some(coords) = &coords {
+            let dy =
+                dy.ok_or_else(|| Error::Primitive(format!("{}: cotangent missing", self.name)))?;
+            let x_hat = &st.saved[0];
+            let w_hat = &st.saved[1];
+            let (dxh, dw, db) = self.kernels.conv2d_backward(x_hat, w_hat, &dy, self.spec)?;
+            dw_local = Some(dw);
+            db_local = Some(db);
+            dx_hat = Some((coords.clone(), dxh));
+        }
+        // Adjoint of the parameter broadcasts: sum-reduce onto the root
+        // (Eq. 9) — collective.
+        let dw_root = self.w_bcast.adjoint(comm, dw_local)?;
+        let db_root = self.b_bcast.adjoint(comm, db_local)?;
+        if rank == self.root {
+            st.grads[0].add_assign(&dw_root.expect("root receives dw"))?;
+            st.grads[1].add_assign(&db_root.expect("root receives db"))?;
+        }
+        let Some((coords, dxh)) = dx_hat else {
+            return Ok(None);
+        };
+        // Adjoint of shim then exchange (Eq. 12), then extract the bulk.
+        let dbuf = self.shim.apply_adjoint(&coords, &dxh)?;
+        let dbuf = self
+            .exchange
+            .adjoint(comm, Some(dbuf))?
+            .expect("grid rank exchanged");
+        let bulk = self.exchange.bulk_region(&coords);
+        let dx = dbuf.extract_region(&bulk)?;
+        st.clear_saved();
+        Ok(Some(dx))
+    }
+
+    fn param_placement(&self, rank: usize) -> Vec<(String, Vec<usize>)> {
+        if rank == self.root {
+            let ci = self.cfg.global_in[1];
+            vec![
+                (
+                    "w".into(),
+                    vec![self.cfg.out_channels, ci, self.cfg.kernel.0, self.cfg.kernel.1],
+                ),
+                ("b".into(), vec![self.cfg.out_channels]),
+            ]
+        } else {
+            Vec::new()
+        }
+    }
+}

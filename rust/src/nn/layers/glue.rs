@@ -1,0 +1,320 @@
+//! Glue layers: transposes (generalized all-to-all), flatten, point-wise
+//! activations, and the root-side input/output layers.
+//!
+//! Fig. C10 of the paper "make[s] use of transpose layers to create better
+//! load balance on the inputs and outputs ... and to distribute input data
+//! and collect outputs". These are the layer-shaped wrappers around
+//! [`Repartition`], [`Scatter`]/[`Gather`], and the native activations.
+
+use crate::adjoint::DistLinearOp;
+use crate::autograd::{Layer, LayerState};
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::nn::native::Activation;
+use crate::partition::{Partition, TensorDecomposition};
+use crate::primitives::{Gather, Repartition, Scatter};
+use crate::tensor::{Scalar, Tensor};
+
+/// Repartition layer: changes a tensor's decomposition between two
+/// partitions (the paper's "transpose" glue). Linear, parameter-free; its
+/// backward is the adjoint repartition.
+pub struct DistTranspose {
+    rep: Repartition,
+    name: String,
+}
+
+impl DistTranspose {
+    /// Build from source/destination decompositions of the same global
+    /// shape.
+    pub fn new(
+        name: &str,
+        src: TensorDecomposition,
+        dst: TensorDecomposition,
+        tag: u64,
+    ) -> Result<Self> {
+        Ok(DistTranspose {
+            rep: Repartition::new(src, dst, tag)?,
+            name: name.to_string(),
+        })
+    }
+}
+
+impl<T: Scalar> Layer<T> for DistTranspose {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
+        Ok(LayerState::empty())
+    }
+
+    fn forward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        _train: bool,
+    ) -> Result<Option<Tensor<T>>> {
+        self.rep.forward(comm, x)
+    }
+
+    fn backward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        self.rep.adjoint(comm, dy)
+    }
+}
+
+/// Flatten `[b, c, h, w] → [b, c·h·w]` across the distributed feature
+/// space: repartition the 4-D tensor onto a channel-split grid (whose
+/// local shards are contiguous slices of the flattened feature axis), then
+/// reshape locally.
+///
+/// Requires the channel split to align with the downstream feature split —
+/// `c` divisible by the output partition width — which is the Fig. C10
+/// configuration (16 channels over 2 workers → features 400 over 2).
+pub struct DistFlatten {
+    rep: Repartition,
+    name: String,
+}
+
+impl DistFlatten {
+    /// `src`: 4-D decomposition produced by the upstream sparse layer.
+    /// `out_ranks`: ranks receiving the flattened shards (channel split).
+    pub fn new(
+        name: &str,
+        src: TensorDecomposition,
+        out_ranks: &[usize],
+        tag: u64,
+    ) -> Result<Self> {
+        let g = src.global_shape().to_vec();
+        if g.len() != 4 {
+            return Err(Error::Shape("DistFlatten expects a rank-4 input".into()));
+        }
+        let p = out_ranks.len();
+        if g[1] % p != 0 {
+            return Err(Error::Shape(format!(
+                "DistFlatten: {} channels not divisible by {} output shards \
+                 (feature split would not be contiguous)",
+                g[1], p
+            )));
+        }
+        let dst_grid = Partition::new(vec![1, p, 1, 1], out_ranks.to_vec())?;
+        let dst = TensorDecomposition::new(dst_grid, &g)?;
+        Ok(DistFlatten {
+            rep: Repartition::new(src, dst, tag)?,
+
+            name: name.to_string(),
+        })
+    }
+}
+
+impl<T: Scalar> Layer<T> for DistFlatten {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
+        Ok(LayerState::empty())
+    }
+
+    fn forward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        _train: bool,
+    ) -> Result<Option<Tensor<T>>> {
+        let x = self.rep.forward(comm, x)?;
+        Ok(match x {
+            Some(t) => {
+                let (b, rest) = (t.shape()[0], t.numel() / t.shape()[0]);
+                Some(t.reshape(&[b, rest])?)
+            }
+            None => None,
+        })
+    }
+
+    fn backward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        // Undo the local reshape: back to this rank's 4-D channel-split
+        // shard, then run the adjoint repartition.
+        let dy = match dy {
+            Some(t) => {
+                let shard4 = <Repartition as DistLinearOp<T>>::codomain_shape(
+                    &self.rep,
+                    comm.rank(),
+                )
+                .ok_or_else(|| {
+                    Error::Shape(format!("{}: cotangent on non-participant rank", self.name))
+                })?;
+                Some(t.reshape(&shard4)?)
+            }
+            None => None,
+        };
+        self.rep.adjoint(comm, dy)
+    }
+}
+
+/// Point-wise activation layer — embarrassingly parallel (§4), identical
+/// on every rank's shard, `None` passes through for non-participants.
+pub struct DistActivation {
+    act: Activation,
+    name: String,
+}
+
+impl DistActivation {
+    /// Build an activation layer.
+    pub fn new(name: &str, act: Activation) -> Self {
+        DistActivation {
+            act,
+            name: name.to_string(),
+        }
+    }
+}
+
+impl<T: Scalar> Layer<T> for DistActivation {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
+        Ok(LayerState::empty())
+    }
+
+    fn forward(
+        &self,
+        st: &mut LayerState<T>,
+        _comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        train: bool,
+    ) -> Result<Option<Tensor<T>>> {
+        Ok(match x {
+            Some(x) => {
+                let y = self.act.forward(&x);
+                if train {
+                    st.saved = vec![x];
+                }
+                Some(y)
+            }
+            None => None,
+        })
+    }
+
+    fn backward(
+        &self,
+        st: &mut LayerState<T>,
+        _comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        Ok(match dy {
+            Some(dy) => {
+                let x = &st.saved[0];
+                let dx = self.act.backward(x, &dy);
+                st.clear_saved();
+                Some(dx)
+            }
+            None => None,
+        })
+    }
+}
+
+/// Input layer: the root holds the global batch; scatter it onto the first
+/// compute layer's decomposition. Backward gathers the input cotangent
+/// back to the root (exactness of Scatter* = Gather).
+pub struct ScatterInput {
+    op: Scatter,
+    name: String,
+}
+
+impl ScatterInput {
+    /// Build from the destination decomposition and the data root.
+    pub fn new(name: &str, decomp: TensorDecomposition, root: usize, tag: u64) -> Self {
+        ScatterInput {
+            op: Scatter::new(decomp, root, tag),
+            name: name.to_string(),
+        }
+    }
+}
+
+impl<T: Scalar> Layer<T> for ScatterInput {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
+        Ok(LayerState::empty())
+    }
+
+    fn forward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        _train: bool,
+    ) -> Result<Option<Tensor<T>>> {
+        self.op.forward(comm, x)
+    }
+
+    fn backward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        self.op.adjoint(comm, dy)
+    }
+}
+
+/// Output layer: gather the distributed logits to the loss root. Backward
+/// scatters the logits cotangent back out.
+pub struct GatherOutput {
+    op: Gather,
+    name: String,
+}
+
+impl GatherOutput {
+    /// Build from the source decomposition and the loss root.
+    pub fn new(name: &str, decomp: TensorDecomposition, root: usize, tag: u64) -> Self {
+        GatherOutput {
+            op: Gather::new(decomp, root, tag),
+            name: name.to_string(),
+        }
+    }
+}
+
+impl<T: Scalar> Layer<T> for GatherOutput {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
+        Ok(LayerState::empty())
+    }
+
+    fn forward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        _train: bool,
+    ) -> Result<Option<Tensor<T>>> {
+        self.op.forward(comm, x)
+    }
+
+    fn backward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        self.op.adjoint(comm, dy)
+    }
+}

@@ -1,0 +1,11 @@
+//! The distributed layer implementations (§4 + Fig. C10 glue).
+
+mod affine;
+mod conv;
+mod glue;
+mod pool;
+
+pub use affine::{AffineConfig, DistAffine};
+pub use conv::{Conv2dConfig, DistConv2d};
+pub use glue::{DistActivation, DistFlatten, DistTranspose, GatherOutput, ScatterInput};
+pub use pool::{DistPool2d, Pool2dConfig};

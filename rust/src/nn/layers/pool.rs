@@ -1,0 +1,163 @@
+//! Distributed 2-D pooling (§4, "Sparse layers").
+//!
+//! "Among this class of layers, pooling layers are the most
+//! straight-forward to parallelize": halo exchange, trim/pad shim, local
+//! pool. The algorithm "does not rely on linearity in the pooling
+//! operation, so any pooling operation is permitted, including average and
+//! max pooling" — the adjoint routes through `[δPool]*` (the local VJP)
+//! then H* (the adjoint exchange).
+
+use crate::adjoint::DistLinearOp;
+use crate::autograd::{Layer, LayerState};
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::halo::{HaloGeometry, KernelSpec};
+use crate::nn::kernels::LocalKernels;
+use crate::nn::native::{Pool2dSpec, PoolMode};
+use crate::partition::Partition;
+use crate::primitives::{HaloExchange, TrimPad};
+use crate::tensor::{Region, Scalar, Tensor};
+use std::sync::Arc;
+
+/// Configuration for [`DistPool2d`].
+#[derive(Debug, Clone)]
+pub struct Pool2dConfig {
+    /// Global input shape `[batch, channels, h, w]`.
+    pub global_in: [usize; 4],
+    /// Window (kh, kw).
+    pub kernel: (usize, usize),
+    /// Stride (rows, cols).
+    pub stride: (usize, usize),
+    /// Max or average pooling.
+    pub mode: PoolMode,
+    /// Spatial partition grid (ph, pw).
+    pub grid: (usize, usize),
+    /// World ranks of the grid, row-major.
+    pub ranks: Vec<usize>,
+    /// Message-tag base.
+    pub tag: u64,
+}
+
+/// The distributed pooling layer.
+pub struct DistPool2d<T: Scalar> {
+    cfg: Pool2dConfig,
+    grid: Partition,
+    exchange: HaloExchange,
+    shim: TrimPad,
+    spec: Pool2dSpec,
+    kernels: Arc<dyn LocalKernels<T>>,
+    name: String,
+}
+
+impl<T: Scalar> DistPool2d<T> {
+    /// Build the layer.
+    pub fn new(name: &str, cfg: Pool2dConfig, kernels: Arc<dyn LocalKernels<T>>) -> Result<Self> {
+        let [b, c, h, w] = cfg.global_in;
+        let (ph, pw) = cfg.grid;
+        let grid = Partition::new(vec![1, 1, ph, pw], cfg.ranks.clone())?;
+        let geometry = HaloGeometry::new(
+            &[b, c, h, w],
+            &[1, 1, ph, pw],
+            &[
+                KernelSpec::plain(1),
+                KernelSpec::plain(1),
+                KernelSpec::pool(cfg.kernel.0, cfg.stride.0),
+                KernelSpec::pool(cfg.kernel.1, cfg.stride.1),
+            ],
+        )?;
+        let exchange = HaloExchange::new(grid.clone(), geometry.clone(), cfg.tag)?;
+        let shim = TrimPad::new(grid.clone(), geometry);
+        let spec = Pool2dSpec {
+            kernel: cfg.kernel,
+            stride: cfg.stride,
+            mode: cfg.mode,
+        };
+        Ok(DistPool2d {
+            cfg,
+            grid,
+            exchange,
+            shim,
+            spec,
+            kernels,
+            name: name.to_string(),
+        })
+    }
+
+    /// Global output shape.
+    pub fn global_out(&self) -> Result<[usize; 4]> {
+        let [b, c, h, w] = self.cfg.global_in;
+        Ok([
+            b,
+            c,
+            KernelSpec::pool(self.cfg.kernel.0, self.cfg.stride.0).output_size(h)?,
+            KernelSpec::pool(self.cfg.kernel.1, self.cfg.stride.1).output_size(w)?,
+        ])
+    }
+}
+
+impl<T: Scalar> Layer<T> for DistPool2d<T> {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
+        Ok(LayerState::empty())
+    }
+
+    fn forward(
+        &self,
+        st: &mut LayerState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        train: bool,
+    ) -> Result<Option<Tensor<T>>> {
+        let Some(coords) = self.grid.coords_of(comm.rank()) else {
+            return Ok(None);
+        };
+        let x = x.ok_or_else(|| Error::Primitive(format!("{}: input missing", self.name)))?;
+        let mut buf = Tensor::zeros(&self.exchange.buffer_shape(&coords));
+        let bulk = self.exchange.bulk_region(&coords);
+        crate::tensor::check_same(x.shape(), &bulk.shape, "pool input shard")?;
+        buf.copy_region_from(&x, &Region::full(x.shape()), &bulk.start)?;
+        let buf = self
+            .exchange
+            .forward(comm, Some(buf))?
+            .expect("grid rank exchanged");
+        let x_hat = self.shim.apply(&coords, &buf)?;
+        let (y, argmax) = self.kernels.pool2d_forward(&x_hat, self.spec)?;
+        if train {
+            st.saved = vec![Tensor::from_vec(
+                &[x_hat.rank()],
+                x_hat.shape().iter().map(|&d| T::from_f64(d as f64)).collect(),
+            )?];
+            st.saved_indices = vec![argmax];
+        }
+        Ok(Some(y))
+    }
+
+    fn backward(
+        &self,
+        st: &mut LayerState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let Some(coords) = self.grid.coords_of(comm.rank()) else {
+            return Ok(None);
+        };
+        let dy =
+            dy.ok_or_else(|| Error::Primitive(format!("{}: cotangent missing", self.name)))?;
+        let x_shape: Vec<usize> = st.saved[0].data().iter().map(|v| v.to_f64() as usize).collect();
+        let dx_hat = self
+            .kernels
+            .pool2d_backward(&x_shape, &dy, &st.saved_indices[0], self.spec)?;
+        let dbuf = self.shim.apply_adjoint(&coords, &dx_hat)?;
+        let dbuf = self
+            .exchange
+            .adjoint(comm, Some(dbuf))?
+            .expect("grid rank exchanged");
+        let bulk = self.exchange.bulk_region(&coords);
+        let dx = dbuf.extract_region(&bulk)?;
+        st.clear_saved();
+        Ok(Some(dx))
+    }
+}

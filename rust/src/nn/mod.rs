@@ -1,0 +1,25 @@
+//! Model-parallel neural-network layers (§4).
+//!
+//! The paper's three layer classes:
+//!
+//! * **sparse layers** (small sliding kernels) — [`layers::DistConv2d`],
+//!   [`layers::DistPool2d`]: halo exchange + trim/pad shim around the local
+//!   kernel; weights broadcast from their owning partition, gradients
+//!   sum-reduced back (the all-reduce appears only *implicitly*, §4).
+//! * **dense layers** — [`layers::DistAffine`]: the distributed GEMM with
+//!   x broadcast along the weight grid's output-feature axis and ŷ
+//!   sum-reduced along its input-feature axis; bias held on one
+//!   `P_fo × 1` subpartition to avoid multiple counting.
+//! * **point-wise layers** — [`layers::DistActivation`]: embarrassingly
+//!   parallel, no data movement.
+//!
+//! Plus the glue the paper's Fig. C10 uses: [`layers::DistTranspose`] /
+//! [`layers::DistFlatten`] (generalized all-to-all repartitioning) and
+//! [`layers::ScatterInput`] / [`layers::GatherOutput`] for feeding and
+//! collecting data at the root.
+
+pub mod kernels;
+pub mod layers;
+pub mod native;
+
+pub use kernels::{LocalKernels, NativeKernels};

@@ -1,0 +1,78 @@
+//! Point-wise activation kernels (forward + VJP).
+//!
+//! §4: point-wise layers "are embarrassingly parallel. Native
+//! implementations of these functions can be used in distributed neural
+//! networks without further intervention" — these run identically on every
+//! worker's local shard with no data movement.
+
+use crate::tensor::{Scalar, Tensor};
+
+/// Activation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// max(0, x)
+    Relu,
+    /// tanh(x)
+    Tanh,
+}
+
+impl Activation {
+    /// Forward application.
+    pub fn forward<T: Scalar>(&self, x: &Tensor<T>) -> Tensor<T> {
+        match self {
+            Activation::Relu => x.map(|v| v.max_s(T::ZERO)),
+            Activation::Tanh => x.map(|v| {
+                let e2 = (v + v).exp();
+                (e2 - T::ONE) / (e2 + T::ONE)
+            }),
+        }
+    }
+
+    /// VJP given the forward *input* and the cotangent.
+    pub fn backward<T: Scalar>(&self, x: &Tensor<T>, dy: &Tensor<T>) -> Tensor<T> {
+        match self {
+            Activation::Relu => x
+                .zip_with(dy, |xi, di| if xi > T::ZERO { di } else { T::ZERO })
+                .expect("shape-checked by layer"),
+            Activation::Tanh => x
+                .zip_with(dy, |xi, di| {
+                    let e2 = (xi + xi).exp();
+                    let t = (e2 - T::ONE) / (e2 + T::ONE);
+                    di * (T::ONE - t * t)
+                })
+                .expect("shape-checked by layer"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::finite_diff::check_vjp;
+
+    #[test]
+    fn relu_values() {
+        let x = Tensor::<f64>::from_vec(&[4], vec![-1.0, 0.0, 0.5, 2.0]).unwrap();
+        let y = Activation::Relu.forward(&x);
+        assert_eq!(y.data(), &[0.0, 0.0, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn tanh_values() {
+        let x = Tensor::<f64>::from_vec(&[3], vec![0.0, 1.0, -1.0]).unwrap();
+        let y = Activation::Tanh.forward(&x);
+        assert!((y.data()[0]).abs() < 1e-15);
+        assert!((y.data()[1] - 1f64.tanh()).abs() < 1e-12);
+        assert!((y.data()[2] + 1f64.tanh()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vjps_finite_diff() {
+        let x = Tensor::<f64>::from_vec(&[5], vec![-1.5, -0.2, 0.3, 1.1, 2.0]).unwrap();
+        let dy = Tensor::<f64>::from_vec(&[5], vec![1.0, -2.0, 0.5, 1.5, -1.0]).unwrap();
+        for act in [Activation::Relu, Activation::Tanh] {
+            let dx = act.backward(&x, &dy);
+            check_vjp(&x, &dx, &dy, |xp| act.forward(xp), 1e-6, 1e-5);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Native affine (dense / fully-connected) kernel, forward + VJP.
+//!
+//! `y = x Wᵀ + b` with `x[b, fi]`, `W[fo, fi]`, `b[fo]` — the sequential
+//! layer function inside the §4 distributed affine algorithm. The GEMM is
+//! blocked for cache locality; the AOT XLA/Pallas executable replaces it
+//! on the LeNet hot path.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Scalar, Tensor};
+
+/// Cache block edge for the blocked GEMM.
+const BLOCK: usize = 64;
+
+/// Forward affine: `y[b,fo] = x[b,fi] @ W[fo,fi]^T + bias[fo]`.
+pub fn affine_forward<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    bias: Option<&Tensor<T>>,
+) -> Result<Tensor<T>> {
+    if x.rank() != 2 || w.rank() != 2 {
+        return Err(Error::Shape("affine expects rank-2 x and w".into()));
+    }
+    let (b, fi) = (x.shape()[0], x.shape()[1]);
+    let (fo, fi2) = (w.shape()[0], w.shape()[1]);
+    if fi != fi2 {
+        return Err(Error::Shape(format!("affine: features {fi} vs weight {fi2}")));
+    }
+    if let Some(bias) = bias {
+        if bias.shape() != [fo] {
+            return Err(Error::Shape(format!(
+                "affine: bias {:?} vs fo {fo}",
+                bias.shape()
+            )));
+        }
+    }
+    let mut y = Tensor::zeros(&[b, fo]);
+    let xd = x.data();
+    let wd = w.data();
+    let yd = y.data_mut();
+    // y[i,o] = sum_k x[i,k] * w[o,k]  (blocked over k and o)
+    for k0 in (0..fi).step_by(BLOCK) {
+        let k1 = (k0 + BLOCK).min(fi);
+        for o0 in (0..fo).step_by(BLOCK) {
+            let o1 = (o0 + BLOCK).min(fo);
+            for i in 0..b {
+                let xrow = &xd[i * fi..(i + 1) * fi];
+                let yrow = &mut yd[i * fo..(i + 1) * fo];
+                for o in o0..o1 {
+                    let wrow = &wd[o * fi..(o + 1) * fi];
+                    let mut acc = T::ZERO;
+                    for k in k0..k1 {
+                        acc += xrow[k] * wrow[k];
+                    }
+                    yrow[o] += acc;
+                }
+            }
+        }
+    }
+    if let Some(bias) = bias {
+        let bd = bias.data();
+        for i in 0..b {
+            for o in 0..fo {
+                yd[i * fo + o] += bd[o];
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Affine VJP: `(dx, dw, db)` from `dy[b,fo]`.
+pub fn affine_backward<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    dy: &Tensor<T>,
+) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)> {
+    let (b, fi) = (x.shape()[0], x.shape()[1]);
+    let fo = w.shape()[0];
+    crate::tensor::check_same(dy.shape(), &[b, fo], "affine_backward dy")?;
+    let xd = x.data();
+    let wd = w.data();
+    let dyd = dy.data();
+    // dx[i,k] = sum_o dy[i,o] * w[o,k]
+    let mut dx = Tensor::zeros(&[b, fi]);
+    {
+        let dxd = dx.data_mut();
+        for i in 0..b {
+            let dyrow = &dyd[i * fo..(i + 1) * fo];
+            let dxrow = &mut dxd[i * fi..(i + 1) * fi];
+            for o in 0..fo {
+                let g = dyrow[o];
+                if g == T::ZERO {
+                    continue;
+                }
+                let wrow = &wd[o * fi..(o + 1) * fi];
+                for k in 0..fi {
+                    dxrow[k] += g * wrow[k];
+                }
+            }
+        }
+    }
+    // dw[o,k] = sum_i dy[i,o] * x[i,k]
+    let mut dw = Tensor::zeros(&[fo, fi]);
+    {
+        let dwd = dw.data_mut();
+        for i in 0..b {
+            let dyrow = &dyd[i * fo..(i + 1) * fo];
+            let xrow = &xd[i * fi..(i + 1) * fi];
+            for o in 0..fo {
+                let g = dyrow[o];
+                if g == T::ZERO {
+                    continue;
+                }
+                let dwrow = &mut dwd[o * fi..(o + 1) * fi];
+                for k in 0..fi {
+                    dwrow[k] += g * xrow[k];
+                }
+            }
+        }
+    }
+    // db[o] = sum_i dy[i,o]
+    let mut db = Tensor::zeros(&[fo]);
+    {
+        let dbd = db.data_mut();
+        for i in 0..b {
+            for o in 0..fo {
+                dbd[o] += dyd[i * fo + o];
+            }
+        }
+    }
+    Ok((dx, dw, db))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::finite_diff::check_vjp;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_t(shape: &[usize], rng: &mut SplitMix64) -> Tensor<f64> {
+        Tensor::from_vec(
+            shape,
+            (0..crate::tensor::numel(shape))
+                .map(|_| rng.next_f64() - 0.5)
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn known_values() {
+        let x = Tensor::<f64>::from_vec(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let w = Tensor::<f64>::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let b = Tensor::<f64>::from_vec(&[3], vec![10.0, 20.0, 30.0]).unwrap();
+        let y = affine_forward(&x, &w, Some(&b)).unwrap();
+        assert_eq!(y.data(), &[11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn matches_naive_matmul() {
+        let mut rng = SplitMix64::new(3);
+        let x = rand_t(&[5, 130], &mut rng); // exceeds one cache block
+        let w = rand_t(&[70, 130], &mut rng);
+        let y = affine_forward(&x, &w, None).unwrap();
+        let wt = crate::tensor::ops::transpose2(&w).unwrap();
+        let naive = crate::tensor::ops::matmul(&x, &wt).unwrap();
+        assert!(y.allclose(&naive, 1e-10, 1e-10));
+    }
+
+    #[test]
+    fn vjp_finite_diff() {
+        let mut rng = SplitMix64::new(4);
+        let x = rand_t(&[4, 7], &mut rng);
+        let w = rand_t(&[5, 7], &mut rng);
+        let dy = rand_t(&[4, 5], &mut rng);
+        let (dx, dw, db) = affine_backward(&x, &w, &dy).unwrap();
+        check_vjp(&x, &dx, &dy, |xp| affine_forward(xp, &w, None).unwrap(), 1e-6, 1e-5);
+        check_vjp(&w, &dw, &dy, |wp| affine_forward(&x, wp, None).unwrap(), 1e-6, 1e-5);
+        let bias = rand_t(&[5], &mut rng);
+        check_vjp(
+            &bias,
+            &db,
+            &dy,
+            |bp| affine_forward(&x, &w, Some(bp)).unwrap(),
+            1e-6,
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn shape_errors() {
+        let x = Tensor::<f64>::zeros(&[2, 3]);
+        let w = Tensor::<f64>::zeros(&[4, 5]);
+        assert!(affine_forward(&x, &w, None).is_err());
+    }
+}

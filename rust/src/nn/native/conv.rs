@@ -1,0 +1,319 @@
+//! Native 2-D convolution kernels (forward + VJP).
+//!
+//! These implement the *sequential* layer function the paper composes the
+//! parallel primitives with. No padding parameter: the distributed layers
+//! materialise implicit zero padding through the [`crate::primitives::TrimPad`]
+//! shim before calling the kernel, so the kernel itself is always "valid".
+//!
+//! The production hot path for the fixed LeNet shapes is the AOT-compiled
+//! XLA/Pallas executable in [`crate::runtime`]; this native version covers
+//! arbitrary shapes (property tests, f64 adjoint checks) and acts as the
+//! reference the runtime path is validated against.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Scalar, Tensor};
+
+/// Convolution hyper-parameters (per spatial dimension pair).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    /// Stride (rows, cols).
+    pub stride: (usize, usize),
+    /// Dilation (rows, cols).
+    pub dilation: (usize, usize),
+}
+
+impl Default for Conv2dSpec {
+    fn default() -> Self {
+        Conv2dSpec {
+            stride: (1, 1),
+            dilation: (1, 1),
+        }
+    }
+}
+
+fn out_dim(n: usize, k: usize, s: usize, d: usize) -> Result<usize> {
+    let ext = d * (k - 1) + 1;
+    if n < ext {
+        return Err(Error::Shape(format!(
+            "conv: input {n} smaller than kernel extent {ext}"
+        )));
+    }
+    Ok((n - ext) / s + 1)
+}
+
+/// Forward convolution: `x[b,ci,h,w] * w[co,ci,kh,kw] (+ bias[co]) -> y[b,co,oh,ow]`.
+pub fn conv2d_forward<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    bias: Option<&Tensor<T>>,
+    spec: Conv2dSpec,
+) -> Result<Tensor<T>> {
+    if x.rank() != 4 || w.rank() != 4 {
+        return Err(Error::Shape("conv2d expects rank-4 x and w".into()));
+    }
+    let (b, ci, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (co, ci2, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    if ci != ci2 {
+        return Err(Error::Shape(format!(
+            "conv2d: input channels {ci} vs weight {ci2}"
+        )));
+    }
+    if let Some(bias) = bias {
+        if bias.shape() != [co] {
+            return Err(Error::Shape(format!(
+                "conv2d: bias shape {:?} vs co {co}",
+                bias.shape()
+            )));
+        }
+    }
+    let (sh, sw) = spec.stride;
+    let (dh, dw) = spec.dilation;
+    let oh = out_dim(h, kh, sh, dh)?;
+    let ow = out_dim(wd, kw, sw, dw)?;
+    let mut y = Tensor::zeros(&[b, co, oh, ow]);
+    let xd = x.data();
+    let wdt = w.data();
+    let yd = y.data_mut();
+    for ib in 0..b {
+        for ic in 0..ci {
+            let xbase = (ib * ci + ic) * h * wd;
+            for oc in 0..co {
+                let wbase = (oc * ci + ic) * kh * kw;
+                let ybase = (ib * co + oc) * oh * ow;
+                for p in 0..kh {
+                    for q in 0..kw {
+                        let wv = wdt[wbase + p * kw + q];
+                        if wv == T::ZERO {
+                            continue;
+                        }
+                        for i in 0..oh {
+                            let xrow = xbase + (i * sh + p * dh) * wd + q * dw;
+                            let yrow = ybase + i * ow;
+                            for j in 0..ow {
+                                yd[yrow + j] += wv * xd[xrow + j * sw];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if let Some(bias) = bias {
+        let bd = bias.data();
+        for ib in 0..b {
+            for oc in 0..co {
+                let base = (ib * co + oc) * oh * ow;
+                let bv = bd[oc];
+                for v in &mut yd[base..base + oh * ow] {
+                    *v += bv;
+                }
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Convolution VJP: given `dy`, return `(dx, dw, db)`.
+pub fn conv2d_backward<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    dy: &Tensor<T>,
+    spec: Conv2dSpec,
+) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)> {
+    let (b, ci, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (co, _, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    let (sh, sw) = spec.stride;
+    let (dh, dw_) = spec.dilation;
+    let oh = dy.shape()[2];
+    let ow = dy.shape()[3];
+    crate::tensor::check_same(dy.shape(), &[b, co, oh, ow], "conv2d_backward dy")?;
+    let mut dx = Tensor::zeros(x.shape());
+    let mut dwt = Tensor::zeros(w.shape());
+    let mut db = Tensor::zeros(&[co]);
+    let xd = x.data();
+    let wdt = w.data();
+    let dyd = dy.data();
+    {
+        let dxd = dx.data_mut();
+        for ib in 0..b {
+            for oc in 0..co {
+                let dybase = (ib * co + oc) * oh * ow;
+                for ic in 0..ci {
+                    let xbase = (ib * ci + ic) * h * wd;
+                    let wbase = (oc * ci + ic) * kh * kw;
+                    for p in 0..kh {
+                        for q in 0..kw {
+                            let wv = wdt[wbase + p * kw + q];
+                            for i in 0..oh {
+                                let xrow = xbase + (i * sh + p * dh) * wd + q * dw_;
+                                let dyrow = dybase + i * ow;
+                                for j in 0..ow {
+                                    dxd[xrow + j * sw] += wv * dyd[dyrow + j];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    {
+        let dwd = dwt.data_mut();
+        for ib in 0..b {
+            for oc in 0..co {
+                let dybase = (ib * co + oc) * oh * ow;
+                for ic in 0..ci {
+                    let xbase = (ib * ci + ic) * h * wd;
+                    let wbase = (oc * ci + ic) * kh * kw;
+                    for p in 0..kh {
+                        for q in 0..kw {
+                            let mut acc = T::ZERO;
+                            for i in 0..oh {
+                                let xrow = xbase + (i * sh + p * dh) * wd + q * dw_;
+                                let dyrow = dybase + i * ow;
+                                for j in 0..ow {
+                                    acc += xd[xrow + j * sw] * dyd[dyrow + j];
+                                }
+                            }
+                            dwd[wbase + p * kw + q] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    {
+        let dbd = db.data_mut();
+        for ib in 0..b {
+            for oc in 0..co {
+                let dybase = (ib * co + oc) * oh * ow;
+                let mut acc = T::ZERO;
+                for v in &dyd[dybase..dybase + oh * ow] {
+                    acc += *v;
+                }
+                dbd[oc] += acc;
+            }
+        }
+    }
+    Ok((dx, dwt, db))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::finite_diff::check_vjp;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_t(shape: &[usize], rng: &mut SplitMix64) -> Tensor<f64> {
+        Tensor::from_vec(
+            shape,
+            (0..crate::tensor::numel(shape))
+                .map(|_| rng.next_f64() - 0.5)
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn known_values_identity_kernel() {
+        // 1x1 kernel with weight 1 is the identity.
+        let x = Tensor::<f64>::iota(&[1, 1, 3, 3]);
+        let w = Tensor::<f64>::filled(&[1, 1, 1, 1], 1.0);
+        let y = conv2d_forward(&x, &w, None, Conv2dSpec::default()).unwrap();
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn known_values_sum_kernel() {
+        // 2x2 all-ones kernel computes window sums.
+        let x = Tensor::<f64>::iota(&[1, 1, 3, 3]);
+        let w = Tensor::<f64>::filled(&[1, 1, 2, 2], 1.0);
+        let y = conv2d_forward(&x, &w, None, Conv2dSpec::default()).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        // windows: [0,1,3,4]=8, [1,2,4,5]=12, [3,4,6,7]=20, [4,5,7,8]=24
+        assert_eq!(y.data(), &[8.0, 12.0, 20.0, 24.0]);
+    }
+
+    #[test]
+    fn bias_broadcasts_over_space() {
+        let x = Tensor::<f64>::zeros(&[2, 1, 2, 2]);
+        let w = Tensor::<f64>::zeros(&[3, 1, 1, 1]);
+        let b = Tensor::<f64>::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let y = conv2d_forward(&x, &w, Some(&b), Conv2dSpec::default()).unwrap();
+        assert_eq!(y.at(&[0, 0, 1, 1]), 1.0);
+        assert_eq!(y.at(&[1, 2, 0, 0]), 3.0);
+    }
+
+    #[test]
+    fn stride_and_dilation_shapes() {
+        let x = Tensor::<f64>::zeros(&[1, 1, 8, 9]);
+        let w = Tensor::<f64>::zeros(&[1, 1, 3, 3]);
+        let y = conv2d_forward(
+            &x,
+            &w,
+            None,
+            Conv2dSpec {
+                stride: (2, 3),
+                dilation: (1, 2),
+            },
+        )
+        .unwrap();
+        // rows: (8-3)/2+1 = 3; cols ext = 2*2+1 = 5: (9-5)/3+1 = 2
+        assert_eq!(y.shape(), &[1, 1, 3, 2]);
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences() {
+        let mut rng = SplitMix64::new(5);
+        for spec in [
+            Conv2dSpec::default(),
+            Conv2dSpec {
+                stride: (2, 1),
+                dilation: (1, 2),
+            },
+        ] {
+            let x = rand_t(&[2, 3, 6, 7], &mut rng);
+            let w = rand_t(&[4, 3, 3, 2], &mut rng);
+            let dy_shape = conv2d_forward(&x, &w, None, spec).unwrap().shape().to_vec();
+            let dy = rand_t(&dy_shape, &mut rng);
+            let (dx, dw, db) = conv2d_backward(&x, &w, &dy, spec).unwrap();
+            // dx against finite differences of <conv(x), dy>
+            check_vjp(
+                &x,
+                &dx,
+                &dy,
+                |xp| conv2d_forward(xp, &w, None, spec).unwrap(),
+                1e-5,
+                1e-4,
+            );
+            // dw
+            check_vjp(
+                &w,
+                &dw,
+                &dy,
+                |wp| conv2d_forward(&x, wp, None, spec).unwrap(),
+                1e-5,
+                1e-4,
+            );
+            // db: forward is linear in bias, grad = sum over b,oh,ow
+            let bias = rand_t(&[4], &mut rng);
+            check_vjp(
+                &bias,
+                &db,
+                &dy,
+                |bp| conv2d_forward(&x, &w, Some(bp), spec).unwrap(),
+                1e-5,
+                1e-4,
+            );
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let x = Tensor::<f64>::zeros(&[1, 2, 4, 4]);
+        let w = Tensor::<f64>::zeros(&[1, 3, 2, 2]);
+        assert!(conv2d_forward(&x, &w, None, Conv2dSpec::default()).is_err());
+        let w = Tensor::<f64>::zeros(&[1, 2, 5, 5]);
+        assert!(conv2d_forward(&x, &w, None, Conv2dSpec::default()).is_err());
+    }
+}

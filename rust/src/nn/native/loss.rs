@@ -1,0 +1,164 @@
+//! Softmax cross-entropy loss (forward + gradient), mean over the batch —
+//! the training criterion of the Appendix C experiment.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Scalar, Tensor};
+
+/// Forward loss: `logits[b, classes]`, `labels[b]` → (mean loss, probs).
+///
+/// `probs` is saved for the backward pass.
+pub fn cross_entropy_forward<T: Scalar>(
+    logits: &Tensor<T>,
+    labels: &[usize],
+) -> Result<(f64, Tensor<T>)> {
+    if logits.rank() != 2 {
+        return Err(Error::Shape("cross_entropy expects rank-2 logits".into()));
+    }
+    let (b, c) = (logits.shape()[0], logits.shape()[1]);
+    if labels.len() != b {
+        return Err(Error::Shape(format!(
+            "cross_entropy: {} labels for batch {b}",
+            labels.len()
+        )));
+    }
+    let mut probs = Tensor::zeros(&[b, c]);
+    let ld = logits.data();
+    let pd = probs.data_mut();
+    let mut loss = 0f64;
+    for i in 0..b {
+        if labels[i] >= c {
+            return Err(Error::Shape(format!(
+                "cross_entropy: label {} out of range {c}",
+                labels[i]
+            )));
+        }
+        let row = &ld[i * c..(i + 1) * c];
+        let mx = row.iter().copied().fold(T::neg_infinity(), |a, b| a.max_s(b));
+        let mut denom = 0f64;
+        for (j, &v) in row.iter().enumerate() {
+            let e = (v - mx).to_f64().exp();
+            pd[i * c + j] = T::from_f64(e);
+            denom += e;
+        }
+        for j in 0..c {
+            pd[i * c + j] = T::from_f64(pd[i * c + j].to_f64() / denom);
+        }
+        loss -= (pd[i * c + labels[i]].to_f64()).max(1e-300).ln();
+    }
+    Ok((loss / b as f64, probs))
+}
+
+/// Gradient of the mean loss w.r.t. logits: `(probs − onehot) / b`.
+pub fn cross_entropy_backward<T: Scalar>(probs: &Tensor<T>, labels: &[usize]) -> Tensor<T> {
+    let (b, c) = (probs.shape()[0], probs.shape()[1]);
+    let inv_b = T::from_f64(1.0 / b as f64);
+    let mut d = probs.scale(inv_b);
+    let dd = d.data_mut();
+    for (i, &lbl) in labels.iter().enumerate() {
+        dd[i * c + lbl] -= inv_b;
+    }
+    d
+}
+
+/// Count correct argmax predictions.
+pub fn count_correct<T: Scalar>(logits: &Tensor<T>, labels: &[usize]) -> usize {
+    let (_b, c) = (logits.shape()[0], logits.shape()[1]);
+    let ld = logits.data();
+    labels
+        .iter()
+        .enumerate()
+        .filter(|&(i, &lbl)| {
+            let row = &ld[i * c..(i + 1) * c];
+            let (best, _) = row
+                .iter()
+                .enumerate()
+                .fold((0usize, T::neg_infinity()), |(bi, bv), (j, &v)| {
+                    if v > bv {
+                        (j, v)
+                    } else {
+                        (bi, bv)
+                    }
+                });
+            best == lbl
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::finite_diff::check_vjp;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn uniform_logits_loss_is_log_c() {
+        let logits = Tensor::<f64>::zeros(&[3, 4]);
+        let (loss, probs) = cross_entropy_forward(&logits, &[0, 1, 2]).unwrap();
+        assert!((loss - 4f64.ln()).abs() < 1e-12);
+        assert!((probs.at(&[0, 0]) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn confident_correct_prediction_low_loss() {
+        let logits =
+            Tensor::<f64>::from_vec(&[1, 3], vec![10.0, -10.0, -10.0]).unwrap();
+        let (loss, _) = cross_entropy_forward(&logits, &[0]).unwrap();
+        assert!(loss < 1e-6);
+    }
+
+    #[test]
+    fn gradient_finite_diff() {
+        let mut rng = SplitMix64::new(6);
+        let logits = Tensor::<f64>::from_vec(
+            &[4, 5],
+            (0..20).map(|_| rng.next_f64() * 2.0 - 1.0).collect(),
+        )
+        .unwrap();
+        let labels = [1usize, 0, 4, 2];
+        let (_, probs) = cross_entropy_forward(&logits, &labels).unwrap();
+        let grad = cross_entropy_backward(&probs, &labels);
+        // pair against dy = 1 (scalar loss)
+        let dy = Tensor::<f64>::scalar(1.0);
+        check_vjp(
+            &logits,
+            &grad,
+            &dy,
+            |lp| {
+                let (l, _) = cross_entropy_forward(lp, &labels).unwrap();
+                Tensor::scalar(l)
+            },
+            1e-6,
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn gradient_rows_sum_to_zero() {
+        let logits = Tensor::<f64>::iota(&[2, 3]);
+        let labels = [2usize, 0];
+        let (_, probs) = cross_entropy_forward(&logits, &labels).unwrap();
+        let g = cross_entropy_backward(&probs, &labels);
+        for i in 0..2 {
+            let s: f64 = (0..3).map(|j| g.at(&[i, j])).sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn accuracy_counting() {
+        let logits = Tensor::<f64>::from_vec(
+            &[3, 2],
+            vec![1.0, 0.0, 0.0, 1.0, 0.3, 0.7],
+        )
+        .unwrap();
+        assert_eq!(count_correct(&logits, &[0, 1, 1]), 3);
+        assert_eq!(count_correct(&logits, &[1, 1, 0]), 1);
+    }
+
+    #[test]
+    fn errors() {
+        let logits = Tensor::<f64>::zeros(&[2, 3]);
+        assert!(cross_entropy_forward(&logits, &[0]).is_err());
+        assert!(cross_entropy_forward(&logits, &[0, 9]).is_err());
+    }
+}

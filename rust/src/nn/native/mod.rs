@@ -1,0 +1,19 @@
+//! Native (pure-Rust) sequential layer kernels.
+//!
+//! These are the "sequential layer implementations" the paper composes
+//! parallel primitives with (§4). They support arbitrary shapes and both
+//! scalar types, serving property tests and f64 coherence checks; the
+//! LeNet hot path swaps in the AOT-compiled XLA/Pallas executables via
+//! [`crate::runtime::PjrtKernels`].
+
+pub mod activation;
+pub mod affine;
+pub mod conv;
+pub mod loss;
+pub mod pool;
+
+pub use activation::Activation;
+pub use affine::{affine_backward, affine_forward};
+pub use conv::{conv2d_backward, conv2d_forward, Conv2dSpec};
+pub use loss::{count_correct, cross_entropy_backward, cross_entropy_forward};
+pub use pool::{pool2d_backward, pool2d_forward, Pool2dSpec, PoolMode};

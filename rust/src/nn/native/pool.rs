@@ -1,0 +1,265 @@
+//! Native 2-D pooling kernels (max and average), forward + VJP.
+//!
+//! As with [`super::conv`], the kernels are always "valid": the
+//! distributed pooling layer of §4 materialises halos and trims unused
+//! entries through the exchange + shim before calling them. The paper
+//! notes the distributed algorithm "does not rely on linearity in the
+//! pooling operation, so any pooling operation is permitted" — the VJP of
+//! max pooling routes through the saved argmax exactly like the sequential
+//! implementation.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Scalar, Tensor};
+
+/// Pooling mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Maximum over the window.
+    Max,
+    /// Arithmetic mean over the window.
+    Avg,
+}
+
+/// Pooling hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool2dSpec {
+    /// Window (rows, cols).
+    pub kernel: (usize, usize),
+    /// Stride (rows, cols).
+    pub stride: (usize, usize),
+    /// Mode.
+    pub mode: PoolMode,
+}
+
+fn out_dim(n: usize, k: usize, s: usize) -> Result<usize> {
+    if n < k {
+        return Err(Error::Shape(format!("pool: input {n} smaller than window {k}")));
+    }
+    Ok((n - k) / s + 1)
+}
+
+/// Forward pooling: `x[b,c,h,w] -> (y[b,c,oh,ow], argmax)` — `argmax`
+/// stores, for max pooling, the flat input offset that won each window
+/// (needed by the VJP); empty for average pooling.
+pub fn pool2d_forward<T: Scalar>(
+    x: &Tensor<T>,
+    spec: Pool2dSpec,
+) -> Result<(Tensor<T>, Vec<usize>)> {
+    if x.rank() != 4 {
+        return Err(Error::Shape("pool2d expects rank-4 input".into()));
+    }
+    let (b, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (kh, kw) = spec.kernel;
+    let (sh, sw) = spec.stride;
+    let oh = out_dim(h, kh, sh)?;
+    let ow = out_dim(w, kw, sw)?;
+    let mut y = Tensor::zeros(&[b, c, oh, ow]);
+    let mut argmax = if spec.mode == PoolMode::Max {
+        vec![0usize; b * c * oh * ow]
+    } else {
+        Vec::new()
+    };
+    let xd = x.data();
+    let yd = y.data_mut();
+    let inv = T::from_f64(1.0 / (kh * kw) as f64);
+    for ib in 0..b {
+        for ic in 0..c {
+            let xbase = (ib * c + ic) * h * w;
+            let ybase = (ib * c + ic) * oh * ow;
+            for i in 0..oh {
+                for j in 0..ow {
+                    let yoff = ybase + i * ow + j;
+                    match spec.mode {
+                        PoolMode::Max => {
+                            let mut best = T::neg_infinity();
+                            let mut best_off = 0usize;
+                            for p in 0..kh {
+                                for q in 0..kw {
+                                    let off = xbase + (i * sh + p) * w + j * sw + q;
+                                    if xd[off] > best {
+                                        best = xd[off];
+                                        best_off = off;
+                                    }
+                                }
+                            }
+                            yd[yoff] = best;
+                            argmax[yoff] = best_off;
+                        }
+                        PoolMode::Avg => {
+                            let mut acc = T::ZERO;
+                            for p in 0..kh {
+                                for q in 0..kw {
+                                    acc += xd[xbase + (i * sh + p) * w + j * sw + q];
+                                }
+                            }
+                            yd[yoff] = acc * inv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok((y, argmax))
+}
+
+/// Pooling VJP: scatter `dy` back through the window structure.
+pub fn pool2d_backward<T: Scalar>(
+    x_shape: &[usize],
+    dy: &Tensor<T>,
+    argmax: &[usize],
+    spec: Pool2dSpec,
+) -> Result<Tensor<T>> {
+    let (b, c) = (x_shape[0], x_shape[1]);
+    let (h, w) = (x_shape[2], x_shape[3]);
+    let (kh, kw) = spec.kernel;
+    let (sh, sw) = spec.stride;
+    let (oh, ow) = (dy.shape()[2], dy.shape()[3]);
+    crate::tensor::check_same(dy.shape(), &[b, c, oh, ow], "pool2d_backward dy")?;
+    let mut dx = Tensor::zeros(x_shape);
+    let dyd = dy.data();
+    let dxd = dx.data_mut();
+    match spec.mode {
+        PoolMode::Max => {
+            if argmax.len() != dyd.len() {
+                return Err(Error::Shape(format!(
+                    "pool2d_backward: argmax len {} vs dy {}",
+                    argmax.len(),
+                    dyd.len()
+                )));
+            }
+            for (yoff, &xoff) in argmax.iter().enumerate() {
+                dxd[xoff] += dyd[yoff];
+            }
+        }
+        PoolMode::Avg => {
+            let inv = T::from_f64(1.0 / (kh * kw) as f64);
+            for ib in 0..b {
+                for ic in 0..c {
+                    let xbase = (ib * c + ic) * h * w;
+                    let ybase = (ib * c + ic) * oh * ow;
+                    for i in 0..oh {
+                        for j in 0..ow {
+                            let g = dyd[ybase + i * ow + j] * inv;
+                            for p in 0..kh {
+                                for q in 0..kw {
+                                    dxd[xbase + (i * sh + p) * w + j * sw + q] += g;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(dx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::finite_diff::check_vjp;
+    use crate::util::rng::SplitMix64;
+
+    const MAX22: Pool2dSpec = Pool2dSpec {
+        kernel: (2, 2),
+        stride: (2, 2),
+        mode: PoolMode::Max,
+    };
+    const AVG22: Pool2dSpec = Pool2dSpec {
+        kernel: (2, 2),
+        stride: (2, 2),
+        mode: PoolMode::Avg,
+    };
+
+    #[test]
+    fn max_pool_values() {
+        let x = Tensor::<f64>::iota(&[1, 1, 4, 4]);
+        let (y, argmax) = pool2d_forward(&x, MAX22).unwrap();
+        assert_eq!(y.data(), &[5.0, 7.0, 13.0, 15.0]);
+        assert_eq!(argmax, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn avg_pool_values() {
+        let x = Tensor::<f64>::iota(&[1, 1, 2, 4]);
+        let (y, argmax) = pool2d_forward(&x, AVG22).unwrap();
+        assert_eq!(y.data(), &[(0.0 + 1.0 + 4.0 + 5.0) / 4.0, (2.0 + 3.0 + 6.0 + 7.0) / 4.0]);
+        assert!(argmax.is_empty());
+    }
+
+    #[test]
+    fn max_pool_backward_routes_to_argmax() {
+        let x = Tensor::<f64>::iota(&[1, 1, 4, 4]);
+        let (_, argmax) = pool2d_forward(&x, MAX22).unwrap();
+        let dy = Tensor::<f64>::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let dx = pool2d_backward(x.shape(), &dy, &argmax, MAX22).unwrap();
+        assert_eq!(dx.at(&[0, 0, 1, 1]), 1.0);
+        assert_eq!(dx.at(&[0, 0, 1, 3]), 2.0);
+        assert_eq!(dx.at(&[0, 0, 3, 1]), 3.0);
+        assert_eq!(dx.at(&[0, 0, 3, 3]), 4.0);
+        assert_eq!(dx.sum(), 10.0);
+    }
+
+    #[test]
+    fn avg_pool_vjp_finite_diff() {
+        let mut rng = SplitMix64::new(9);
+        let x = Tensor::<f64>::from_vec(
+            &[2, 3, 6, 4],
+            (0..144).map(|_| rng.next_f64()).collect(),
+        )
+        .unwrap();
+        let (y, _) = pool2d_forward(&x, AVG22).unwrap();
+        let dy = Tensor::<f64>::from_vec(
+            y.shape(),
+            (0..y.numel()).map(|_| rng.next_f64() - 0.5).collect(),
+        )
+        .unwrap();
+        let dx = pool2d_backward(x.shape(), &dy, &[], AVG22).unwrap();
+        check_vjp(&x, &dx, &dy, |xp| pool2d_forward(xp, AVG22).unwrap().0, 1e-6, 1e-5);
+    }
+
+    #[test]
+    fn max_pool_vjp_finite_diff() {
+        // distinct values so the argmax is FD-stable
+        let mut rng = SplitMix64::new(11);
+        let mut vals: Vec<f64> = (0..96).map(|i| i as f64).collect();
+        rng.shuffle(&mut vals);
+        let x = Tensor::<f64>::from_vec(&[2, 2, 4, 6], vals).unwrap();
+        let (y, argmax) = pool2d_forward(&x, MAX22).unwrap();
+        let dy = Tensor::<f64>::from_vec(
+            y.shape(),
+            (0..y.numel()).map(|_| rng.next_f64() - 0.5).collect(),
+        )
+        .unwrap();
+        let dx = pool2d_backward(x.shape(), &dy, &argmax, MAX22).unwrap();
+        check_vjp(
+            &x,
+            &dx,
+            &dy,
+            |xp| pool2d_forward(xp, MAX22).unwrap().0,
+            1e-4,
+            1e-4,
+        );
+    }
+
+    #[test]
+    fn overlapping_windows() {
+        let spec = Pool2dSpec {
+            kernel: (2, 2),
+            stride: (1, 1),
+            mode: PoolMode::Avg,
+        };
+        let x = Tensor::<f64>::iota(&[1, 1, 3, 3]);
+        let (y, _) = pool2d_forward(&x, spec).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.at(&[0, 0, 0, 0]), (0.0 + 1.0 + 3.0 + 4.0) / 4.0);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let x = Tensor::<f64>::zeros(&[1, 1, 1, 4]);
+        assert!(pool2d_forward(&x, MAX22).is_err());
+        let x3 = Tensor::<f64>::zeros(&[1, 4, 4]);
+        assert!(pool2d_forward(&x3, MAX22).is_err());
+    }
+}

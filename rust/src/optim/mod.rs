@@ -1,0 +1,169 @@
+//! Optimizers (SGD and the Appendix-C Adam).
+//!
+//! Optimizers are *local*: each rank updates only the parameter shards it
+//! owns. No synchronisation is needed because gradients were already
+//! placed correctly by the adjoint data movement (each parameter's
+//! gradient is fully reduced onto its owner before the step) — which is
+//! exactly the property the paper's framework guarantees by construction.
+
+use crate::autograd::NetworkState;
+use crate::error::Result;
+use crate::tensor::{Scalar, Tensor};
+
+/// Plain SGD with optional momentum.
+#[derive(Debug, Clone)]
+pub struct Sgd<T: Scalar> {
+    /// Learning rate.
+    pub lr: T,
+    /// Momentum coefficient (0 = vanilla).
+    pub momentum: T,
+    velocity: Vec<Tensor<T>>,
+}
+
+impl<T: Scalar> Sgd<T> {
+    /// New optimizer.
+    pub fn new(lr: T, momentum: T) -> Self {
+        Sgd {
+            lr,
+            momentum,
+            velocity: Vec::new(),
+        }
+    }
+
+    /// Apply one step to every (param, grad) pair on this rank.
+    pub fn step(&mut self, net: &mut NetworkState<T>) -> Result<()> {
+        let pairs: Vec<_> = net.params_and_grads().collect();
+        if self.velocity.is_empty() {
+            self.velocity = pairs.iter().map(|(p, _)| Tensor::zeros(p.shape())).collect();
+        }
+        for ((param, grad), vel) in pairs.into_iter().zip(self.velocity.iter_mut()) {
+            if self.momentum != T::ZERO {
+                vel.scale_assign(self.momentum);
+                vel.add_assign(grad)?;
+                param.axpy(T::ZERO - self.lr, vel)?;
+            } else {
+                param.axpy(T::ZERO - self.lr, grad)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Adam (Kingma & Ba), the optimizer of the Appendix-C experiment
+/// (α = 0.001, default β₁/β₂/ε).
+#[derive(Debug, Clone)]
+pub struct Adam<T: Scalar> {
+    /// Learning rate α.
+    pub lr: f64,
+    /// β₁.
+    pub beta1: f64,
+    /// β₂.
+    pub beta2: f64,
+    /// ε.
+    pub eps: f64,
+    t: u64,
+    m: Vec<Tensor<T>>,
+    v: Vec<Tensor<T>>,
+}
+
+impl<T: Scalar> Adam<T> {
+    /// Adam with the paper's settings (`lr = 1e-3`).
+    pub fn new(lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    /// Apply one Adam step to this rank's parameters.
+    pub fn step(&mut self, net: &mut NetworkState<T>) -> Result<()> {
+        let pairs: Vec<_> = net.params_and_grads().collect();
+        if self.m.is_empty() {
+            self.m = pairs.iter().map(|(p, _)| Tensor::zeros(p.shape())).collect();
+            self.v = pairs.iter().map(|(p, _)| Tensor::zeros(p.shape())).collect();
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for ((param, grad), (m, v)) in pairs
+            .into_iter()
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            let (b1, b2) = (self.beta1, self.beta2);
+            for ((p, &g), (mi, vi)) in param
+                .data_mut()
+                .iter_mut()
+                .zip(grad.data().iter())
+                .zip(m.data_mut().iter_mut().zip(v.data_mut().iter_mut()))
+            {
+                let g = g.to_f64();
+                let mf = b1 * mi.to_f64() + (1.0 - b1) * g;
+                let vf = b2 * vi.to_f64() + (1.0 - b2) * g * g;
+                *mi = T::from_f64(mf);
+                *vi = T::from_f64(vf);
+                let m_hat = mf / bc1;
+                let v_hat = vf / bc2;
+                *p = T::from_f64(p.to_f64() - self.lr * m_hat / (v_hat.sqrt() + self.eps));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::LayerState;
+
+    fn one_param_state(value: f64, grad: f64) -> NetworkState<f64> {
+        let mut ls = LayerState::with_params(vec![Tensor::scalar(value)]);
+        ls.grads[0] = Tensor::scalar(grad);
+        NetworkState { states: vec![ls] }
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let mut st = one_param_state(1.0, 0.5);
+        let mut opt = Sgd::new(0.1, 0.0);
+        opt.step(&mut st).unwrap();
+        assert!((st.states[0].params[0].at(&[]) - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let mut st = one_param_state(0.0, 1.0);
+        let mut opt = Sgd::new(0.1, 0.9);
+        opt.step(&mut st).unwrap(); // v=1, p=-0.1
+        opt.step(&mut st).unwrap(); // v=1.9, p=-0.29
+        assert!((st.states[0].params[0].at(&[]) + 0.29).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With constant gradient, Adam's first step is ≈ lr.
+        let mut st = one_param_state(1.0, 3.0);
+        let mut opt = Adam::new(0.001);
+        opt.step(&mut st).unwrap();
+        let p = st.states[0].params[0].at(&[]);
+        assert!((p - (1.0 - 0.001)).abs() < 1e-6, "p = {p}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimise (x - 3)^2 / 2 : grad = x - 3
+        let mut st = one_param_state(0.0, 0.0);
+        let mut opt = Adam::new(0.05);
+        for _ in 0..2000 {
+            let x = st.states[0].params[0].at(&[]);
+            st.states[0].grads[0] = Tensor::scalar(x - 3.0);
+            opt.step(&mut st).unwrap();
+        }
+        let x = st.states[0].params[0].at(&[]);
+        assert!((x - 3.0).abs() < 0.05, "x = {x}");
+    }
+}

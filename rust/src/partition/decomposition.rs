@@ -1,0 +1,205 @@
+//! Load-balanced tensor decompositions over a [`Partition`].
+//!
+//! Following DistDL's convention, dimension `d` of a global tensor of size
+//! `n` split over `P` workers gives the first `n mod P` workers `⌈n/P⌉`
+//! elements and the rest `⌊n/P⌋`. For sliding-kernel layers the *output*
+//! decomposition drives load balance (§3: "computational load on a given
+//! worker is driven by the volume of that worker's output subtensor"); the
+//! halo machinery in [`crate::halo`] derives input requirements from it.
+
+use super::Partition;
+use crate::error::{Error, Result};
+use crate::tensor::Region;
+
+/// Balanced split of `n` elements over `p` parts: `(start, len)` per part.
+///
+/// The first `n mod p` parts receive one extra element. Parts may be empty
+/// when `p > n`.
+pub fn balanced_split(n: usize, p: usize) -> Vec<(usize, usize)> {
+    assert!(p > 0, "cannot split over zero workers");
+    let base = n / p;
+    let extra = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0usize;
+    for i in 0..p {
+        let len = base + usize::from(i < extra);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// A global tensor shape distributed over a partition: assigns each grid
+/// cell a rectangular [`Region`] of the global index space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorDecomposition {
+    partition: Partition,
+    global_shape: Vec<usize>,
+    /// Per-dimension balanced splits, `splits[d][cell_coord] = (start, len)`.
+    splits: Vec<Vec<(usize, usize)>>,
+}
+
+impl TensorDecomposition {
+    /// Decompose `global_shape` over `partition` (ranks must match).
+    pub fn new(partition: Partition, global_shape: &[usize]) -> Result<Self> {
+        if partition.grid_rank() != global_shape.len() {
+            return Err(Error::Partition(format!(
+                "decomposition: partition grid rank {} vs tensor rank {}",
+                partition.grid_rank(),
+                global_shape.len()
+            )));
+        }
+        let splits = global_shape
+            .iter()
+            .zip(partition.shape().iter())
+            .map(|(&n, &p)| balanced_split(n, p))
+            .collect();
+        Ok(TensorDecomposition {
+            partition,
+            global_shape: global_shape.to_vec(),
+            splits,
+        })
+    }
+
+    /// The underlying partition.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Global tensor shape.
+    pub fn global_shape(&self) -> &[usize] {
+        &self.global_shape
+    }
+
+    /// Region of the global index space owned by the cell at `coords`.
+    pub fn region_at(&self, coords: &[usize]) -> Region {
+        let mut start = Vec::with_capacity(coords.len());
+        let mut shape = Vec::with_capacity(coords.len());
+        for (d, &c) in coords.iter().enumerate() {
+            let (s, l) = self.splits[d][c];
+            start.push(s);
+            shape.push(l);
+        }
+        Region::new(start, shape)
+    }
+
+    /// Region owned by a world rank (None if the rank is not in the
+    /// partition).
+    pub fn region_of(&self, world_rank: usize) -> Option<Region> {
+        self.partition
+            .coords_of(world_rank)
+            .map(|c| self.region_at(&c))
+    }
+
+    /// Local shard shape of a world rank.
+    pub fn local_shape_of(&self, world_rank: usize) -> Option<Vec<usize>> {
+        self.region_of(world_rank).map(|r| r.shape)
+    }
+
+    /// Iterate `(cell_index, world_rank, region)` over all cells.
+    pub fn cells(&self) -> impl Iterator<Item = (usize, usize, Region)> + '_ {
+        (0..self.partition.size()).map(move |cell| {
+            let coords = crate::tensor::delinearize(self.partition.shape(), cell);
+            (
+                cell,
+                self.partition.rank_of_cell(cell),
+                self.region_at(&coords),
+            )
+        })
+    }
+
+    /// All `(world_rank, overlap)` pairs whose owned region intersects
+    /// `query` (in global coordinates). This drives scatter and the
+    /// generalized all-to-all.
+    pub fn owners_of(&self, query: &Region) -> Vec<(usize, Region)> {
+        self.cells()
+            .filter_map(|(_, rank, region)| {
+                region.intersect(query).map(|ov| (rank, ov))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_split_basic() {
+        // n=11, P=3 -> 4,4,3 (the App. B examples rely on this convention)
+        assert_eq!(
+            balanced_split(11, 3),
+            vec![(0, 4), (4, 4), (8, 3)]
+        );
+        assert_eq!(balanced_split(4, 2), vec![(0, 2), (2, 2)]);
+        // more workers than elements -> trailing empty parts
+        assert_eq!(balanced_split(2, 3), vec![(0, 1), (1, 1), (2, 0)]);
+        assert_eq!(balanced_split(0, 2), vec![(0, 0), (0, 0)]);
+    }
+
+    #[test]
+    fn split_covers_exactly() {
+        for n in 0..40 {
+            for p in 1..8 {
+                let s = balanced_split(n, p);
+                assert_eq!(s.len(), p);
+                let total: usize = s.iter().map(|&(_, l)| l).sum();
+                assert_eq!(total, n);
+                // contiguous, ordered
+                let mut pos = 0;
+                for &(start, len) in &s {
+                    assert_eq!(start, pos);
+                    pos += len;
+                }
+                // balanced within 1
+                let lens: Vec<usize> = s.iter().map(|&(_, l)| l).collect();
+                let mx = *lens.iter().max().unwrap();
+                let mn = *lens.iter().min().unwrap();
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn decomposition_regions() {
+        let p = Partition::from_shape(&[2, 2]);
+        let d = TensorDecomposition::new(p, &[5, 6]).unwrap();
+        assert_eq!(
+            d.region_at(&[0, 0]),
+            Region::new(vec![0, 0], vec![3, 3])
+        );
+        assert_eq!(
+            d.region_at(&[1, 1]),
+            Region::new(vec![3, 3], vec![2, 3])
+        );
+        assert_eq!(d.local_shape_of(3), Some(vec![2, 3]));
+        assert_eq!(d.region_of(99), None);
+    }
+
+    #[test]
+    fn rank_mismatch_rejected() {
+        let p = Partition::from_shape(&[2]);
+        assert!(TensorDecomposition::new(p, &[4, 4]).is_err());
+    }
+
+    #[test]
+    fn owners_of_query() {
+        let p = Partition::from_shape(&[3]);
+        let d = TensorDecomposition::new(p, &[11]).unwrap();
+        // splits: [0,4) [4,8) [8,11)
+        let owners = d.owners_of(&Region::new(vec![3], vec![3]));
+        assert_eq!(owners.len(), 2);
+        assert_eq!(owners[0], (0, Region::new(vec![3], vec![1])));
+        assert_eq!(owners[1], (1, Region::new(vec![4], vec![2])));
+    }
+
+    #[test]
+    fn cells_enumeration() {
+        let p = Partition::from_shape(&[2]);
+        let d = TensorDecomposition::new(p, &[4]).unwrap();
+        let cells: Vec<_> = d.cells().collect();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].1, 0);
+        assert_eq!(cells[1].2, Region::new(vec![2], vec![2]));
+    }
+}

@@ -1,0 +1,296 @@
+//! Cartesian worker partitions (§3–§4).
+//!
+//! Every tensor in the network — inputs, outputs, learnable parameters — is
+//! distributed over a *partition*: a cartesian grid of workers described by
+//! a d-length partition vector ("all rank-d tensors are partitioned along
+//! each dimension by a d-length partition vector", §4).
+//!
+//! A [`Partition`] maps grid cells to *world ranks* of the SPMD cluster.
+//! Distinct tensors in one layer live on distinct partitions over
+//! (possibly overlapping) subsets of the same world — e.g. the distributed
+//! convolution uses P_x = 1×1×P_ci×P_0×..., P_w = P_co×P_ci and
+//! P_y = 1×P_co×1×P_0×... simultaneously. [`broadcast_groups`] implements
+//! the paper's NumPy-like, source-to-destination-only partition
+//! broadcasting rules that connect them.
+
+mod decomposition;
+
+pub use decomposition::{balanced_split, TensorDecomposition};
+
+use crate::error::{Error, Result};
+use crate::tensor::{delinearize, linearize, numel};
+
+/// A cartesian grid of workers.
+///
+/// `shape[d]` is the number of workers along dimension `d`; `ranks[cell]`
+/// (row-major over the grid) is the world rank assigned to that cell.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    shape: Vec<usize>,
+    ranks: Vec<usize>,
+}
+
+impl Partition {
+    /// Build a partition from a grid shape and an explicit cell→world-rank
+    /// assignment.
+    pub fn new(shape: Vec<usize>, ranks: Vec<usize>) -> Result<Self> {
+        if ranks.len() != numel(&shape) {
+            return Err(Error::Partition(format!(
+                "partition shape {:?} needs {} ranks, got {}",
+                shape,
+                numel(&shape),
+                ranks.len()
+            )));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for &r in &ranks {
+            if !seen.insert(r) {
+                return Err(Error::Partition(format!(
+                    "world rank {r} assigned to multiple cells"
+                )));
+            }
+        }
+        Ok(Partition { shape, ranks })
+    }
+
+    /// Grid of `shape` filled with world ranks `0..n` in row-major order.
+    pub fn from_shape(shape: &[usize]) -> Self {
+        let n = numel(shape);
+        Partition {
+            shape: shape.to_vec(),
+            ranks: (0..n).collect(),
+        }
+    }
+
+    /// A single-cell partition holding one world rank (a sequential tensor).
+    pub fn trivial(rank: usize, tensor_rank: usize) -> Self {
+        Partition {
+            shape: vec![1; tensor_rank.max(1)],
+            ranks: vec![rank],
+        }
+    }
+
+    /// Grid shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Grid rank (number of partitioned tensor dimensions).
+    pub fn grid_rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of cells / workers in the partition.
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// World ranks in cell (row-major) order.
+    pub fn world_ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// World rank of a grid cell given its coordinates.
+    pub fn rank_at(&self, coords: &[usize]) -> usize {
+        self.ranks[linearize(&self.shape, coords)]
+    }
+
+    /// World rank of cell `index` (row-major).
+    pub fn rank_of_cell(&self, index: usize) -> usize {
+        self.ranks[index]
+    }
+
+    /// Grid coordinates of a world rank, if it participates.
+    pub fn coords_of(&self, world_rank: usize) -> Option<Vec<usize>> {
+        self.ranks
+            .iter()
+            .position(|&r| r == world_rank)
+            .map(|cell| delinearize(&self.shape, cell))
+    }
+
+    /// Does `world_rank` own a cell of this partition?
+    pub fn contains(&self, world_rank: usize) -> bool {
+        self.ranks.contains(&world_rank)
+    }
+
+    /// Reinterpret the same workers on a new grid shape of identical size
+    /// (e.g. flatten a 1×4×1 partition to 4).
+    pub fn reshaped(&self, shape: &[usize]) -> Result<Partition> {
+        if numel(shape) != self.size() {
+            return Err(Error::Partition(format!(
+                "reshape {:?} -> {:?}: cell count mismatch",
+                self.shape, shape
+            )));
+        }
+        Ok(Partition {
+            shape: shape.to_vec(),
+            ranks: self.ranks.clone(),
+        })
+    }
+
+    /// Left-pad the grid shape with 1s to `rank` dims (the paper's "additional
+    /// dimensions aid the broadcasting pattern but do not impact the result").
+    pub fn padded_to(&self, rank: usize) -> Partition {
+        if rank <= self.grid_rank() {
+            return self.clone();
+        }
+        let mut shape = vec![1usize; rank - self.grid_rank()];
+        shape.extend_from_slice(&self.shape);
+        Partition {
+            shape,
+            ranks: self.ranks.clone(),
+        }
+    }
+}
+
+/// One broadcast group: `root` (a world rank holding the source cell) and
+/// the destination world ranks that must receive a replica of its data.
+///
+/// The forward direction implements the paper's broadcast B_{src→dst}; the
+/// reverse direction (destinations summed into the root) is its adjoint,
+/// the sum-reduce R_{dst→src} = B* (§3, Eq. 9).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BroadcastGroup {
+    /// World rank owning the source cell.
+    pub root: usize,
+    /// World ranks of the destination cells (may include `root` itself).
+    pub destinations: Vec<usize>,
+}
+
+/// Compute the broadcast groups connecting a source partition to a
+/// destination partition under NumPy-like broadcasting rules (§4, fn. 7:
+/// "our broadcast is source-to-destination only").
+///
+/// After left-padding the source grid to the destination's rank, each
+/// dimension must satisfy `src.shape[d] == dst.shape[d]` or
+/// `src.shape[d] == 1`; a destination cell maps to the source cell whose
+/// coordinate is the destination's where the source is partitioned and 0
+/// where the source is broadcast.
+pub fn broadcast_groups(src: &Partition, dst: &Partition) -> Result<Vec<BroadcastGroup>> {
+    let src = src.padded_to(dst.grid_rank());
+    if src.grid_rank() != dst.grid_rank() {
+        return Err(Error::Partition(format!(
+            "broadcast: src grid rank {} exceeds dst {}",
+            src.grid_rank(),
+            dst.grid_rank()
+        )));
+    }
+    for d in 0..dst.grid_rank() {
+        if src.shape()[d] != 1 && src.shape()[d] != dst.shape()[d] {
+            return Err(Error::Partition(format!(
+                "broadcast: dim {d}: src extent {} incompatible with dst {}",
+                src.shape()[d],
+                dst.shape()[d]
+            )));
+        }
+    }
+    let mut groups: Vec<BroadcastGroup> = Vec::with_capacity(src.size());
+    for cell in 0..src.size() {
+        groups.push(BroadcastGroup {
+            root: src.rank_of_cell(cell),
+            destinations: Vec::new(),
+        });
+    }
+    for dcell in 0..dst.size() {
+        let dcoords = delinearize(dst.shape(), dcell);
+        let scoords: Vec<usize> = dcoords
+            .iter()
+            .zip(src.shape().iter())
+            .map(|(&c, &s)| if s == 1 { 0 } else { c })
+            .collect();
+        let scell = linearize(src.shape(), &scoords);
+        groups[scell].destinations.push(dst.rank_of_cell(dcell));
+    }
+    Ok(groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates() {
+        assert!(Partition::new(vec![2, 2], vec![0, 1, 2]).is_err());
+        assert!(Partition::new(vec![2], vec![0, 0]).is_err());
+        assert!(Partition::new(vec![2, 2], vec![3, 1, 0, 2]).is_ok());
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let p = Partition::from_shape(&[2, 3]);
+        assert_eq!(p.size(), 6);
+        assert_eq!(p.rank_at(&[1, 2]), 5);
+        assert_eq!(p.coords_of(5), Some(vec![1, 2]));
+        assert_eq!(p.coords_of(6), None);
+        assert!(p.contains(0) && !p.contains(6));
+    }
+
+    #[test]
+    fn custom_rank_assignment() {
+        let p = Partition::new(vec![2], vec![7, 3]).unwrap();
+        assert_eq!(p.rank_at(&[0]), 7);
+        assert_eq!(p.coords_of(3), Some(vec![1]));
+    }
+
+    #[test]
+    fn padding_preserves_cells() {
+        let p = Partition::from_shape(&[4]);
+        let q = p.padded_to(3);
+        assert_eq!(q.shape(), &[1, 1, 4]);
+        assert_eq!(q.rank_at(&[0, 0, 2]), 2);
+    }
+
+    #[test]
+    fn broadcast_identity_partition() {
+        // src == dst: every root broadcasts to itself only.
+        let p = Partition::from_shape(&[4]);
+        let g = broadcast_groups(&p, &p).unwrap();
+        assert_eq!(g.len(), 4);
+        for (i, grp) in g.iter().enumerate() {
+            assert_eq!(grp.root, i);
+            assert_eq!(grp.destinations, vec![i]);
+        }
+    }
+
+    #[test]
+    fn broadcast_one_to_many() {
+        // 1-cell src, 4-cell dst: classic parameter broadcast.
+        let src = Partition::trivial(2, 1);
+        let dst = Partition::from_shape(&[4]);
+        let g = broadcast_groups(&src, &dst).unwrap();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].root, 2);
+        assert_eq!(g[0].destinations, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn broadcast_along_one_dim() {
+        // src 2x1 -> dst 2x3: each src row feeds its 3 dst columns.
+        let src = Partition::new(vec![2, 1], vec![10, 20]).unwrap();
+        let dst = Partition::from_shape(&[2, 3]);
+        let g = broadcast_groups(&src, &dst).unwrap();
+        assert_eq!(g[0].root, 10);
+        assert_eq!(g[0].destinations, vec![0, 1, 2]);
+        assert_eq!(g[1].root, 20);
+        assert_eq!(g[1].destinations, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn broadcast_incompatible_extent() {
+        let src = Partition::from_shape(&[3]);
+        let dst = Partition::from_shape(&[4]);
+        assert!(broadcast_groups(&src, &dst).is_err());
+    }
+
+    #[test]
+    fn broadcast_with_padding() {
+        // rank-1 src [2] against rank-2 dst [3, 2]: src padded to [1, 2].
+        let src = Partition::new(vec![2], vec![8, 9]).unwrap();
+        let dst = Partition::from_shape(&[3, 2]);
+        let g = broadcast_groups(&src, &dst).unwrap();
+        assert_eq!(g[0].root, 8);
+        assert_eq!(g[0].destinations, vec![0, 2, 4]);
+        assert_eq!(g[1].root, 9);
+        assert_eq!(g[1].destinations, vec![1, 3, 5]);
+    }
+}

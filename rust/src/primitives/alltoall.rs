@@ -1,0 +1,253 @@
+//! Generalized all-to-all — tensor repartitioning (§3).
+//!
+//! Layer composition often requires changing a tensor's parallel
+//! decomposition ("parallel performance may require a change in a tensor's
+//! parallel decomposition when composing layers"): a transpose/shuffle.
+//! For generalized tensors with generalized partitions, the data one
+//! worker must send another is the **intersection** of its owned region in
+//! the source decomposition with the other's owned region in the
+//! destination decomposition — "a block permutation matrix, where the
+//! blocks are send-receive operators for all simultaneous scatters". With
+//! move semantics the operator is an exact permutation of the global index
+//! space, so its adjoint is the repartition in the reverse direction.
+//!
+//! This is the workhorse "transpose layer" glue of the distributed
+//! LeNet-5 (Fig. C10).
+
+use crate::adjoint::DistLinearOp;
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::partition::TensorDecomposition;
+use crate::tensor::{Scalar, Tensor};
+
+/// Repartition a distributed tensor from decomposition `src` to `dst`
+/// (same global shape).
+#[derive(Debug, Clone)]
+pub struct Repartition {
+    src: TensorDecomposition,
+    dst: TensorDecomposition,
+    tag: u64,
+}
+
+impl Repartition {
+    /// Build a repartition; global shapes must agree.
+    pub fn new(src: TensorDecomposition, dst: TensorDecomposition, tag: u64) -> Result<Self> {
+        if src.global_shape() != dst.global_shape() {
+            return Err(Error::Primitive(format!(
+                "repartition: global shapes differ ({:?} vs {:?})",
+                src.global_shape(),
+                dst.global_shape()
+            )));
+        }
+        Ok(Repartition { src, dst, tag })
+    }
+
+    /// Source decomposition.
+    pub fn src(&self) -> &TensorDecomposition {
+        &self.src
+    }
+
+    /// Destination decomposition.
+    pub fn dst(&self) -> &TensorDecomposition {
+        &self.dst
+    }
+
+    fn run<T: Scalar>(
+        from: &TensorDecomposition,
+        to: &TensorDecomposition,
+        tag: u64,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        let my_src = from.region_of(rank);
+        let my_dst = to.region_of(rank);
+        // Piece kept locally (source and destination regions overlap on
+        // this rank).
+        let mut local_piece: Option<(crate::tensor::Region, Tensor<T>)> = None;
+
+        // Phase 1: send every overlap of my source region with remote
+        // destination regions (sends never block).
+        if let Some(src_region) = &my_src {
+            let shard = x
+                .as_ref()
+                .ok_or_else(|| Error::Primitive("repartition: local shard missing".into()))?;
+            crate::tensor::check_same(shard.shape(), &src_region.shape, "repartition input")?;
+            for (dst_rank, overlap) in to.owners_of(src_region) {
+                if overlap.is_empty() {
+                    continue;
+                }
+                let local = overlap.relative_to(&src_region.start);
+                let piece = shard.extract_region(&local)?;
+                if dst_rank == rank {
+                    local_piece = Some((overlap, piece));
+                } else {
+                    comm.send_slice(dst_rank, tag, piece.data())?;
+                }
+            }
+        }
+
+        // Phase 2: assemble my destination shard from the overlaps with
+        // every source region.
+        if let Some(dst_region) = &my_dst {
+            let mut out = Tensor::zeros(&dst_region.shape);
+            for (src_rank, overlap) in from.owners_of(dst_region) {
+                if overlap.is_empty() {
+                    continue;
+                }
+                let piece = if src_rank == rank {
+                    local_piece
+                        .take()
+                        .map(|(_, p)| p)
+                        .ok_or_else(|| Error::Primitive("repartition: lost local piece".into()))?
+                } else {
+                    let data = comm.recv_vec::<T>(src_rank, tag)?;
+                    Tensor::from_vec(&overlap.shape, data)?
+                };
+                let local = overlap.relative_to(&dst_region.start);
+                out.copy_region_from(
+                    &piece,
+                    &crate::tensor::Region::full(&overlap.shape),
+                    &local.start,
+                )?;
+            }
+            return Ok(Some(out));
+        }
+        Ok(None)
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for Repartition {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.src.local_shape_of(rank)
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.dst.local_shape_of(rank)
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        Repartition::run(&self.src, &self.dst, self.tag, comm, x)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        // Move semantics make the repartition a permutation; the adjoint is
+        // the inverse repartition.
+        Repartition::run(&self.dst, &self.src, self.tag + 1, comm, y)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "AllToAll[{:?}→{:?}]",
+            self.src.partition().shape(),
+            self.dst.partition().shape()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::assert_coherent;
+    use crate::comm::Cluster;
+    use crate::partition::Partition;
+
+    fn d(shape: &[usize], grid: &[usize], ranks: Option<Vec<usize>>) -> TensorDecomposition {
+        let p = match ranks {
+            Some(r) => Partition::new(grid.to_vec(), r).unwrap(),
+            None => Partition::from_shape(grid),
+        };
+        TensorDecomposition::new(p, shape).unwrap()
+    }
+
+    #[test]
+    fn row_to_column_repartition() {
+        // 4x4 tensor: rows over 2 ranks -> columns over 2 ranks.
+        let op = Repartition::new(d(&[4, 4], &[2, 1], None), d(&[4, 4], &[1, 2], None), 10)
+            .unwrap();
+        let results = Cluster::run(2, |comm| {
+            let x = op
+                .src()
+                .region_of(comm.rank())
+                .map(|r| {
+                    Tensor::<f64>::from_fn(&r.shape, |i| {
+                        ((r.start[0] + i[0]) * 4 + (r.start[1] + i[1])) as f64
+                    })
+                });
+            op.forward(comm, x)
+        })
+        .unwrap();
+        // rank 0 now owns all rows, cols 0..2
+        let r0 = results[0].as_ref().unwrap();
+        assert_eq!(r0.shape(), &[4, 2]);
+        assert_eq!(r0.data(), &[0.0, 1.0, 4.0, 5.0, 8.0, 9.0, 12.0, 13.0]);
+        let r1 = results[1].as_ref().unwrap();
+        assert_eq!(r1.data(), &[2.0, 3.0, 6.0, 7.0, 10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let fwd = Repartition::new(d(&[6, 5], &[3, 1], None), d(&[6, 5], &[1, 3], None), 20)
+            .unwrap();
+        let back = Repartition::new(d(&[6, 5], &[1, 3], None), d(&[6, 5], &[3, 1], None), 30)
+            .unwrap();
+        let ok = Cluster::run(3, |comm| {
+            let x = fwd
+                .src()
+                .region_of(comm.rank())
+                .map(|r| Tensor::<f64>::from_fn(&r.shape, |i| (i[0] * 31 + i[1] + comm.rank()) as f64));
+            let mid = fwd.forward(comm, x.clone())?;
+            let round = back.forward(comm, mid)?;
+            Ok(round == x)
+        })
+        .unwrap();
+        assert!(ok.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn grow_and_shrink_worker_sets() {
+        // 1 worker -> 4 workers (distribute), then 4 -> 1 (collect).
+        let one = d(&[8], &[1], Some(vec![2]));
+        let four = d(&[8], &[4], None);
+        let spread = Repartition::new(one.clone(), four.clone(), 40).unwrap();
+        let collect = Repartition::new(four, one, 50).unwrap();
+        let results = Cluster::run(4, |comm| {
+            let x = (comm.rank() == 2).then(|| Tensor::<f64>::iota(&[8]));
+            let shards = spread.forward(comm, x)?;
+            collect.forward(comm, shards)
+        })
+        .unwrap();
+        assert_eq!(results[2].as_ref().unwrap(), &Tensor::<f64>::iota(&[8]));
+    }
+
+    #[test]
+    fn coherence_various() {
+        // same-rank grids
+        let op = Repartition::new(d(&[4, 6], &[2, 1], None), d(&[4, 6], &[1, 2], None), 60)
+            .unwrap();
+        assert_coherent::<f64>(2, &op, 1);
+        // different worker sets, unbalanced sizes
+        let op = Repartition::new(
+            d(&[7, 5], &[3, 1], Some(vec![0, 1, 2])),
+            d(&[7, 5], &[1, 2], Some(vec![3, 4])),
+            70,
+        )
+        .unwrap();
+        assert_coherent::<f64>(5, &op, 2);
+        // 3-D, batch-style leading dim
+        let op = Repartition::new(
+            d(&[2, 6, 6], &[1, 2, 2], None),
+            d(&[2, 6, 6], &[1, 4, 1], None),
+            80,
+        )
+        .unwrap();
+        assert_coherent::<f64>(4, &op, 3);
+    }
+
+    #[test]
+    fn mismatched_global_shape_rejected() {
+        let a = d(&[4, 4], &[2, 1], None);
+        let b = d(&[4, 5], &[1, 2], None);
+        assert!(Repartition::new(a, b, 90).is_err());
+    }
+}

@@ -1,0 +1,443 @@
+//! Broadcast, sum-reduce, and all-reduce (§3).
+//!
+//! The broadcast B_{a→{k}} replicates each source cell's tensor onto the
+//! destination cells that map to it under the partition-broadcasting rules
+//! of §4 (NumPy-like, source-to-destination only). Eq. (9) shows its
+//! adjoint is a **sum-reduction**, so [`SumReduce`] is literally the same
+//! object applied in the adjoint direction — and the all-reduce
+//! A = B∘R is self-adjoint (§3).
+//!
+//! Within each broadcast group the implementation uses the canonical
+//! binomial tree; the adjoint executes the same tree edges in reverse with
+//! copies replaced by adds, which *is* the linear-algebraic adjoint of the
+//! tree-structured composition of copies.
+
+use super::tree_schedule;
+use crate::adjoint::DistLinearOp;
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::partition::{broadcast_groups, BroadcastGroup, Partition};
+use crate::tensor::{Scalar, Tensor};
+
+/// Generalized partition broadcast B_{src→dst}.
+#[derive(Debug, Clone)]
+pub struct Broadcast {
+    groups: Vec<BroadcastGroup>,
+    /// Tree member lists, one per group: `[root, dests != root...]`.
+    members: Vec<Vec<usize>>,
+    /// Whether the group's root is also a destination (keeps a replica).
+    root_is_dest: Vec<bool>,
+    /// Per-group local tensor shape.
+    shapes: Vec<Vec<usize>>,
+    tag: u64,
+    label: String,
+}
+
+impl Broadcast {
+    /// Broadcast between two partitions. `group_shapes` gives the local
+    /// tensor shape for each source cell (in source-cell order); pass one
+    /// shape per group.
+    pub fn new(
+        src: &Partition,
+        dst: &Partition,
+        group_shapes: Vec<Vec<usize>>,
+        tag: u64,
+    ) -> Result<Self> {
+        let groups = broadcast_groups(src, dst)?;
+        if group_shapes.len() != groups.len() {
+            return Err(Error::Primitive(format!(
+                "broadcast: {} shapes for {} groups",
+                group_shapes.len(),
+                groups.len()
+            )));
+        }
+        let mut members = Vec::with_capacity(groups.len());
+        let mut root_is_dest = Vec::with_capacity(groups.len());
+        for g in &groups {
+            let mut m = vec![g.root];
+            for &d in &g.destinations {
+                if d != g.root {
+                    m.push(d);
+                }
+            }
+            members.push(m);
+            root_is_dest.push(g.destinations.contains(&g.root));
+        }
+        Ok(Broadcast {
+            groups,
+            members,
+            root_is_dest,
+            shapes: group_shapes,
+            tag,
+            label: format!("B[{:?}→{:?}]", src.shape(), dst.shape()),
+        })
+    }
+
+    /// Convenience: broadcast one tensor of `shape` from `root` to every
+    /// rank in `0..world`.
+    pub fn replicate(root: usize, world: usize, shape: &[usize], tag: u64) -> Result<Self> {
+        let src = Partition::new(vec![1], vec![root])?;
+        let ranks: Vec<usize> = (0..world).collect();
+        let dst = Partition::new(vec![world], ranks)?;
+        Broadcast::new(&src, &dst, vec![shape.to_vec()], tag)
+    }
+
+    /// Index of the group in which `rank` is the root.
+    fn group_as_root(&self, rank: usize) -> Option<usize> {
+        self.groups.iter().position(|g| g.root == rank)
+    }
+
+    /// Index of the group in which `rank` is a destination.
+    fn group_as_dest(&self, rank: usize) -> Option<usize> {
+        self.groups
+            .iter()
+            .position(|g| g.destinations.contains(&rank))
+    }
+
+    /// The broadcast groups (for introspection/benches).
+    pub fn groups(&self) -> &[BroadcastGroup] {
+        &self.groups
+    }
+
+    /// Run the forward tree for one group, from the perspective of `rank`.
+    fn run_group_forward<T: Scalar>(
+        &self,
+        gi: usize,
+        comm: &mut Comm,
+        seed: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let members = &self.members[gi];
+        let rank = comm.rank();
+        let me = members.iter().position(|&r| r == rank);
+        let Some(me) = me else { return Ok(None) };
+        let tag = self.tag + gi as u64 * 2;
+        let mut held: Option<Tensor<T>> = if me == 0 { seed } else { None };
+        for (from, to) in tree_schedule(members.len()) {
+            if from == me {
+                let t = held
+                    .as_ref()
+                    .ok_or_else(|| Error::Primitive("broadcast: forwarding before receive".into()))?;
+                comm.send_slice(members[to], tag, t.data())?;
+            } else if to == me {
+                let data = comm.recv_vec::<T>(members[from], tag)?;
+                held = Some(Tensor::from_vec(&self.shapes[gi], data)?);
+            }
+        }
+        Ok(held)
+    }
+
+    /// Run the adjoint (sum-reduce) tree for one group: reverse edge order,
+    /// copies become adds (Eq. 9).
+    fn run_group_adjoint<T: Scalar>(
+        &self,
+        gi: usize,
+        comm: &mut Comm,
+        seed: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let members = &self.members[gi];
+        let rank = comm.rank();
+        let Some(me) = members.iter().position(|&r| r == rank) else {
+            return Ok(None);
+        };
+        let tag = self.tag + gi as u64 * 2 + 1;
+        // Members that are destinations start from their cotangent; a root
+        // that is not a destination starts from zero (its forward buffer
+        // was transient).
+        let mut acc: Tensor<T> = match seed {
+            Some(t) => t,
+            None => Tensor::zeros(&self.shapes[gi]),
+        };
+        for (from, to) in tree_schedule(members.len()).into_iter().rev() {
+            if to == me {
+                comm.send_slice(members[from], tag, acc.data())?;
+            } else if from == me {
+                let data = comm.recv_vec::<T>(members[to], tag)?;
+                acc.add_assign(&Tensor::from_vec(&self.shapes[gi], data)?)?;
+            }
+        }
+        if me == 0 {
+            Ok(Some(acc))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for Broadcast {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.group_as_root(rank).map(|gi| self.shapes[gi].clone())
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.group_as_dest(rank).map(|gi| self.shapes[gi].clone())
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        let root_gi = self.group_as_root(rank);
+        let dest_gi = self.group_as_dest(rank);
+        let mut out: Option<Tensor<T>> = None;
+        if let Some(gi) = root_gi {
+            let held = self.run_group_forward(gi, comm, x)?;
+            if self.root_is_dest[gi] {
+                out = held;
+            }
+        }
+        match dest_gi {
+            Some(gi) if Some(gi) != root_gi => {
+                out = self.run_group_forward(gi, comm, None)?;
+            }
+            _ => {}
+        }
+        Ok(out)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        let root_gi = self.group_as_root(rank);
+        let dest_gi = self.group_as_dest(rank);
+        let mut out: Option<Tensor<T>> = None;
+        // As a destination of a *different* group: contribute y up that tree.
+        if let Some(gi) = dest_gi {
+            if Some(gi) != root_gi {
+                let r = self.run_group_adjoint(gi, comm, y.clone())?;
+                debug_assert!(r.is_none(), "non-root member produced a reduction");
+            }
+        }
+        // As a root: accumulate my group's reduction (seeding with y if I
+        // am also a destination in this group).
+        if let Some(gi) = root_gi {
+            let seed = if self.root_is_dest[gi] { y } else { None };
+            out = self.run_group_adjoint(gi, comm, seed)?;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Sum-reduce R_{{k}→a} = B*_{a→{k}} (§3): sums the replicas on the "many"
+/// partition onto the "few" partition. Its adjoint is the broadcast.
+#[derive(Debug, Clone)]
+pub struct SumReduce {
+    inner: Broadcast,
+}
+
+impl SumReduce {
+    /// Reduce from partition `src` (many) onto partition `dst` (few);
+    /// `group_shapes` as in [`Broadcast::new`], indexed by *destination*
+    /// cell.
+    pub fn new(
+        src: &Partition,
+        dst: &Partition,
+        group_shapes: Vec<Vec<usize>>,
+        tag: u64,
+    ) -> Result<Self> {
+        // A sum-reduce src→dst is the adjoint of the broadcast dst→src.
+        Ok(SumReduce {
+            inner: Broadcast::new(dst, src, group_shapes, tag)?,
+        })
+    }
+
+    /// Convenience: reduce one tensor of `shape` from every rank in
+    /// `0..world` onto `root`.
+    pub fn to_root(root: usize, world: usize, shape: &[usize], tag: u64) -> Result<Self> {
+        Ok(SumReduce {
+            inner: Broadcast::replicate(root, world, shape, tag)?,
+        })
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for SumReduce {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        <Broadcast as DistLinearOp<T>>::codomain_shape(&self.inner, rank)
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        <Broadcast as DistLinearOp<T>>::domain_shape(&self.inner, rank)
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.inner.adjoint(comm, x)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.inner.forward(comm, y)
+    }
+
+    fn name(&self) -> String {
+        format!("R = ({})*", <Broadcast as DistLinearOp<f64>>::name(&self.inner))
+    }
+}
+
+/// All-reduce A = B∘R (§3): every member ends with the sum of all members'
+/// tensors. Self-adjoint: A* = R*∘B* = B∘R = A.
+#[derive(Debug, Clone)]
+pub struct AllReduce {
+    reduce: Broadcast,
+}
+
+impl AllReduce {
+    /// All-reduce a tensor of `shape` over `ranks` (root = first rank).
+    pub fn new(ranks: &[usize], shape: &[usize], tag: u64) -> Result<Self> {
+        let src = Partition::new(vec![1], vec![ranks[0]])?;
+        let dst = Partition::new(vec![ranks.len()], ranks.to_vec())?;
+        Ok(AllReduce {
+            reduce: Broadcast::new(&src, &dst, vec![shape.to_vec()], tag)?,
+        })
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for AllReduce {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        <Broadcast as DistLinearOp<T>>::codomain_shape(&self.reduce, rank)
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        <Broadcast as DistLinearOp<T>>::codomain_shape(&self.reduce, rank)
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        // R then B through the shared root.
+        let reduced = self.reduce.adjoint(comm, x)?;
+        self.reduce.forward(comm, reduced)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        // A* = A.
+        self.forward(comm, y)
+    }
+
+    fn name(&self) -> String {
+        "AllReduce(B∘R)".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::{adjoint_residual, assert_coherent, linearity_residual};
+    use crate::comm::Cluster;
+
+    #[test]
+    fn replicate_forward_values() {
+        let op = Broadcast::replicate(1, 4, &[2], 100).unwrap();
+        let results = Cluster::run(4, |comm| {
+            let x = (comm.rank() == 1).then(|| Tensor::<f64>::from_vec(&[2], vec![3.0, 4.0]))
+                .transpose()?;
+            op.forward(comm, x)
+        })
+        .unwrap();
+        for r in results {
+            assert_eq!(r.unwrap().data(), &[3.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn adjoint_is_sum_reduce() {
+        let op = Broadcast::replicate(0, 4, &[1], 200).unwrap();
+        let results = Cluster::run(4, |comm| {
+            let y = Some(Tensor::<f64>::scalar((comm.rank() + 1) as f64).reshape(&[1])?);
+            op.adjoint(comm, y)
+        })
+        .unwrap();
+        assert_eq!(results[0].as_ref().unwrap().data(), &[10.0]); // 1+2+3+4
+        for r in &results[1..] {
+            assert!(r.is_none());
+        }
+    }
+
+    #[test]
+    fn broadcast_coherence_various_topologies() {
+        // one-to-all with root inside the destination set
+        for world in [1, 2, 3, 4, 8] {
+            let op = Broadcast::replicate(0, world, &[3, 2], 10).unwrap();
+            assert_coherent::<f64>(world, &op, 5);
+        }
+        // root outside destination set: src = rank 3, dst = ranks 0..3
+        let src = Partition::new(vec![1], vec![3]).unwrap();
+        let dst = Partition::new(vec![3], vec![0, 1, 2]).unwrap();
+        let op = Broadcast::new(&src, &dst, vec![vec![4]], 30).unwrap();
+        assert_coherent::<f64>(4, &op, 6);
+    }
+
+    #[test]
+    fn broadcast_multi_group_coherence() {
+        // 2x1 src (ranks 4, 5) broadcasting along columns to 2x3 dst (0..6)
+        let src = Partition::new(vec![2, 1], vec![4, 5]).unwrap();
+        let dst = Partition::new(vec![2, 3], vec![0, 1, 2, 3, 6, 5]).unwrap();
+        let op = Broadcast::new(&src, &dst, vec![vec![2, 2], vec![2, 2]], 40).unwrap();
+        assert_coherent::<f64>(7, &op, 11);
+        let r = linearity_residual::<f64>(7, &op, 12).unwrap();
+        assert!(r < 1e-12);
+    }
+
+    #[test]
+    fn sum_reduce_forward_values() {
+        let op = SumReduce::to_root(2, 3, &[2], 300).unwrap();
+        let results = Cluster::run(3, |comm| {
+            let x = Some(Tensor::<f64>::filled(&[2], comm.rank() as f64));
+            op.forward(comm, x)
+        })
+        .unwrap();
+        assert_eq!(results[2].as_ref().unwrap().data(), &[3.0, 3.0]); // 0+1+2
+        assert!(results[0].is_none() && results[1].is_none());
+    }
+
+    #[test]
+    fn sum_reduce_coherence() {
+        for world in [1, 2, 4, 6] {
+            let op = SumReduce::to_root(0, world, &[5], 20).unwrap();
+            assert_coherent::<f64>(world, &op, 21);
+        }
+    }
+
+    #[test]
+    fn all_reduce_values_and_self_adjointness() {
+        let op = AllReduce::new(&[0, 1, 2, 3], &[2], 400).unwrap();
+        let results = Cluster::run(4, |comm| {
+            let x = Some(Tensor::<f64>::filled(&[2], (comm.rank() + 1) as f64));
+            op.forward(comm, x)
+        })
+        .unwrap();
+        for r in results {
+            assert_eq!(r.unwrap().data(), &[10.0, 10.0]);
+        }
+        assert_coherent::<f64>(4, &op, 31);
+        // A is self-adjoint: forward and adjoint agree on the same input.
+        let fwd = Cluster::run(4, |comm| {
+            let x = Some(Tensor::<f64>::filled(&[2], (comm.rank() * 2) as f64));
+            <AllReduce as DistLinearOp<f64>>::forward(&op, comm, x)
+        })
+        .unwrap();
+        let adj = Cluster::run(4, |comm| {
+            let x = Some(Tensor::<f64>::filled(&[2], (comm.rank() * 2) as f64));
+            <AllReduce as DistLinearOp<f64>>::adjoint(&op, comm, x)
+        })
+        .unwrap();
+        assert_eq!(fwd, adj);
+    }
+
+    #[test]
+    fn subset_allreduce_leaves_outsiders_alone() {
+        let op = AllReduce::new(&[1, 3], &[1], 500).unwrap();
+        let results = Cluster::run(4, |comm| {
+            let x = <AllReduce as DistLinearOp<f64>>::domain_shape(&op, comm.rank())
+                .map(|s| Tensor::<f64>::filled(&s, 1.0));
+            op.forward(comm, x)
+        })
+        .unwrap();
+        assert!(results[0].is_none() && results[2].is_none());
+        assert_eq!(results[1].as_ref().unwrap().data(), &[2.0]);
+        assert_eq!(results[3].as_ref().unwrap().data(), &[2.0]);
+    }
+
+    #[test]
+    fn f32_coherence_looser_epsilon() {
+        let op = Broadcast::replicate(0, 4, &[16], 600).unwrap();
+        let r = adjoint_residual::<f32>(4, &op, 77).unwrap();
+        assert!(r < 1e-5, "f32 residual {r}");
+    }
+}

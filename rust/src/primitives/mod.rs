@@ -1,0 +1,80 @@
+//! Parallel data-movement primitives and their hand-derived adjoints (§3).
+//!
+//! Every operator here is a [`crate::adjoint::DistLinearOp`]: a *linear*
+//! map between distributed tensor spaces, built **only** from tagged
+//! send/receive (the paper: "The most basic distributed memory data
+//! movement operation, from which all others can be derived, is the
+//! send-receive operator"). The adjoints are not produced by an AD tool —
+//! they are the paper's §2/§3 derivations, implemented directly:
+//!
+//! | primitive          | adjoint                               | paper |
+//! |--------------------|---------------------------------------|-------|
+//! | send-recv (copy)   | receive-send with **add**             | §3    |
+//! | scatter (move)     | gather                                | §3    |
+//! | broadcast          | sum-reduce (Eq. 9)                    | §3    |
+//! | sum-reduce         | broadcast                             | §3    |
+//! | all-reduce = B∘R   | itself (self-adjoint)                 | §3    |
+//! | all-to-all         | all-to-all in the reverse direction   | §3    |
+//! | halo exchange      | reversed exchange with add-into-bulk  | §3, App. B |
+//!
+//! Each instance takes a `tag` base; sub-operations derive disjoint tags
+//! from it, so multiple primitives can be in flight on one communicator.
+
+mod alltoall;
+mod broadcast;
+mod halo_exchange;
+mod scatter;
+mod sendrecv;
+
+pub use alltoall::Repartition;
+pub use broadcast::{AllReduce, Broadcast, SumReduce};
+pub use halo_exchange::{HaloExchange, TrimPad};
+pub use scatter::{Gather, Scatter};
+pub use sendrecv::SendRecv;
+
+/// Binomial-tree schedule over `g` members (member 0 is the root): the
+/// ordered list of `(from_index, to_index)` copy edges executed by the
+/// canonical logarithmic broadcast. The paper notes the logarithmic
+/// implementation "has an equivalent [linear-algebraic] representation" —
+/// and its adjoint is exactly the same edge list executed in reverse with
+/// copies replaced by adds, which is how [`Broadcast::adjoint`] (the
+/// sum-reduce) is implemented.
+pub(crate) fn tree_schedule(g: usize) -> Vec<(usize, usize)> {
+    let mut edges = Vec::new();
+    let mut mask = 1usize;
+    while mask < g {
+        for from in 0..mask {
+            let to = from + mask;
+            if to < g {
+                edges.push((from, to));
+            }
+        }
+        mask <<= 1;
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_schedule_shapes() {
+        assert!(tree_schedule(1).is_empty());
+        assert_eq!(tree_schedule(2), vec![(0, 1)]);
+        assert_eq!(tree_schedule(4), vec![(0, 1), (0, 2), (1, 3)]);
+        // every member except the root receives exactly once
+        for g in 1..40 {
+            let edges = tree_schedule(g);
+            assert_eq!(edges.len(), g.saturating_sub(1));
+            let mut received = vec![false; g];
+            received[0] = true;
+            for (from, to) in edges {
+                assert!(received[from], "member {from} forwards before receiving");
+                assert!(!received[to], "member {to} receives twice");
+                received[to] = true;
+            }
+            assert!(received.iter().all(|&r| r));
+        }
+    }
+}

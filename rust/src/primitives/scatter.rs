@@ -1,0 +1,280 @@
+//! Scatter and gather (§3).
+//!
+//! A scatter is "essentially a sequence of send-receive pairs, where
+//! subsets of x_a are copied to multiple other workers" — linear-
+//! algebraically a block-diagonal matrix of send-receive blocks. These
+//! implementations use **move** semantics (the root's realization is
+//! consumed), for which the paper notes "the adjoint operation becomes an
+//! instance of the gather primitive" exactly; the pair is a permutation of
+//! the global index space.
+//!
+//! Used by the coordinator to distribute input batches onto a
+//! [`TensorDecomposition`] and to collect outputs/losses.
+
+use crate::adjoint::DistLinearOp;
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::partition::TensorDecomposition;
+use crate::tensor::{Region, Scalar, Tensor};
+
+/// Scatter a global tensor from `root` onto a decomposition (move
+/// semantics). Adjoint = [`Gather`].
+#[derive(Debug, Clone)]
+pub struct Scatter {
+    decomp: TensorDecomposition,
+    root: usize,
+    tag: u64,
+}
+
+impl Scatter {
+    /// Build a scatter from `root` over `decomp`.
+    pub fn new(decomp: TensorDecomposition, root: usize, tag: u64) -> Self {
+        Scatter { decomp, root, tag }
+    }
+
+    fn scatter_forward<T: Scalar>(
+        decomp: &TensorDecomposition,
+        root: usize,
+        tag: u64,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        let mut kept: Option<Tensor<T>> = None;
+        if rank == root {
+            let x = x.ok_or_else(|| Error::Primitive("scatter: root tensor missing".into()))?;
+            crate::tensor::check_same(x.shape(), decomp.global_shape(), "scatter input")?;
+            for (cell, dst, region) in decomp.cells() {
+                let shard = x.extract_region(&region)?;
+                if dst == rank {
+                    kept = Some(shard);
+                } else {
+                    comm.send_slice(dst, tag + cell as u64, shard.data())?;
+                }
+            }
+        }
+        if let Some(region) = decomp.region_of(rank) {
+            if rank == root {
+                return Ok(kept);
+            }
+            let cell = decomp
+                .cells()
+                .find(|(_, r, _)| *r == rank)
+                .map(|(c, _, _)| c)
+                .expect("rank in decomposition");
+            let data = comm.recv_vec::<T>(root, tag + cell as u64)?;
+            return Ok(Some(Tensor::from_vec(&region.shape, data)?));
+        }
+        Ok(None)
+    }
+
+    fn gather_forward<T: Scalar>(
+        decomp: &TensorDecomposition,
+        root: usize,
+        tag: u64,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        // Shard owners send (except the root's own shard).
+        let mut own_shard: Option<(Region, Tensor<T>)> = None;
+        if let Some(region) = decomp.region_of(rank) {
+            let shard =
+                x.ok_or_else(|| Error::Primitive("gather: local shard missing".into()))?;
+            crate::tensor::check_same(shard.shape(), &region.shape, "gather shard")?;
+            if rank == root {
+                own_shard = Some((region, shard));
+            } else {
+                let cell = decomp
+                    .cells()
+                    .find(|(_, r, _)| *r == rank)
+                    .map(|(c, _, _)| c)
+                    .expect("rank in decomposition");
+                comm.send_slice(root, tag + 1000 + cell as u64, shard.data())?;
+            }
+        }
+        if rank == root {
+            let mut out = Tensor::zeros(decomp.global_shape());
+            for (cell, src, region) in decomp.cells() {
+                let shard = if src == rank {
+                    own_shard
+                        .take()
+                        .map(|(_, s)| s)
+                        .ok_or_else(|| Error::Primitive("gather: root shard missing".into()))?
+                } else {
+                    let data = comm.recv_vec::<T>(src, tag + 1000 + cell as u64)?;
+                    Tensor::from_vec(&region.shape, data)?
+                };
+                out.copy_region_from(&shard, &Region::full(&region.shape), &region.start)?;
+            }
+            return Ok(Some(out));
+        }
+        Ok(None)
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for Scatter {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        (rank == self.root).then(|| self.decomp.global_shape().to_vec())
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.decomp.local_shape_of(rank)
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        Scatter::scatter_forward(&self.decomp, self.root, self.tag, comm, x)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        Scatter::gather_forward(&self.decomp, self.root, self.tag, comm, y)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "Scatter(root {} over {:?})",
+            self.root,
+            self.decomp.partition().shape()
+        )
+    }
+}
+
+/// Gather the shards of a decomposition into the global tensor at `root`
+/// (move semantics). Adjoint = [`Scatter`].
+#[derive(Debug, Clone)]
+pub struct Gather {
+    inner: Scatter,
+}
+
+impl Gather {
+    /// Build a gather onto `root` from `decomp`.
+    pub fn new(decomp: TensorDecomposition, root: usize, tag: u64) -> Self {
+        Gather {
+            inner: Scatter::new(decomp, root, tag),
+        }
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for Gather {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        <Scatter as DistLinearOp<T>>::codomain_shape(&self.inner, rank)
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        <Scatter as DistLinearOp<T>>::domain_shape(&self.inner, rank)
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.inner.adjoint(comm, x)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.inner.forward(comm, y)
+    }
+
+    fn name(&self) -> String {
+        format!("Gather = ({})*", <Scatter as DistLinearOp<f64>>::name(&self.inner))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::assert_coherent;
+    use crate::comm::Cluster;
+    use crate::partition::Partition;
+
+    fn decomp_1d(n: usize, p: usize) -> TensorDecomposition {
+        TensorDecomposition::new(Partition::from_shape(&[p]), &[n]).unwrap()
+    }
+
+    #[test]
+    fn scatter_values() {
+        let op = Scatter::new(decomp_1d(7, 3), 0, 10);
+        let results = Cluster::run(3, |comm| {
+            let x = (comm.rank() == 0).then(|| Tensor::<f64>::iota(&[7]));
+            op.forward(comm, x)
+        })
+        .unwrap();
+        assert_eq!(results[0].as_ref().unwrap().data(), &[0.0, 1.0, 2.0]);
+        assert_eq!(results[1].as_ref().unwrap().data(), &[3.0, 4.0]);
+        assert_eq!(results[2].as_ref().unwrap().data(), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn gather_reassembles() {
+        let op = Gather::new(decomp_1d(7, 3), 1, 20);
+        let results = Cluster::run(3, |comm| {
+            let shard = op
+                .inner
+                .decomp
+                .region_of(comm.rank())
+                .map(|r| Tensor::<f64>::filled(&r.shape, comm.rank() as f64));
+            op.forward(comm, shard)
+        })
+        .unwrap();
+        assert!(results[0].is_none() && results[2].is_none());
+        assert_eq!(
+            results[1].as_ref().unwrap().data(),
+            &[0.0, 0.0, 0.0, 1.0, 1.0, 2.0, 2.0]
+        );
+    }
+
+    #[test]
+    fn gather_of_scatter_is_identity() {
+        let sc = Scatter::new(decomp_1d(11, 4), 2, 30);
+        let ga = Gather::new(decomp_1d(11, 4), 2, 40);
+        let results = Cluster::run(4, |comm| {
+            let x = (comm.rank() == 2).then(|| Tensor::<f64>::iota(&[11]));
+            let shards = sc.forward(comm, x)?;
+            ga.forward(comm, shards)
+        })
+        .unwrap();
+        assert_eq!(results[2].as_ref().unwrap(), &Tensor::<f64>::iota(&[11]));
+    }
+
+    #[test]
+    fn scatter_2d_values() {
+        let p = Partition::from_shape(&[2, 2]);
+        let d = TensorDecomposition::new(p, &[4, 4]).unwrap();
+        let op = Scatter::new(d, 0, 50);
+        let results = Cluster::run(4, |comm| {
+            let x = (comm.rank() == 0).then(|| Tensor::<f64>::iota(&[4, 4]));
+            op.forward(comm, x)
+        })
+        .unwrap();
+        // rank 3 owns rows 2..4, cols 2..4
+        assert_eq!(
+            results[3].as_ref().unwrap().data(),
+            &[10.0, 11.0, 14.0, 15.0]
+        );
+    }
+
+    #[test]
+    fn coherence() {
+        for (n, p, root, world) in [(7usize, 3usize, 0usize, 3usize), (11, 4, 2, 5), (5, 5, 4, 5)] {
+            let sc = Scatter::new(decomp_1d(n, p), root, 60);
+            assert_coherent::<f64>(world, &sc, 42);
+            let ga = Gather::new(decomp_1d(n, p), root, 70);
+            assert_coherent::<f64>(world, &ga, 43);
+        }
+        // 2-D decomposition
+        let d =
+            TensorDecomposition::new(Partition::from_shape(&[2, 3]), &[5, 7]).unwrap();
+        let sc = Scatter::new(d, 1, 80);
+        assert_coherent::<f64>(6, &sc, 44);
+    }
+
+    #[test]
+    fn more_workers_than_rows() {
+        // empty shards are legal
+        let op = Scatter::new(decomp_1d(2, 3), 0, 90);
+        let results = Cluster::run(3, |comm| {
+            let x = (comm.rank() == 0).then(|| Tensor::<f64>::iota(&[2]));
+            op.forward(comm, x)
+        })
+        .unwrap();
+        assert_eq!(results[2].as_ref().unwrap().numel(), 0);
+        assert_coherent::<f64>(3, &op, 45);
+    }
+}

@@ -1,0 +1,145 @@
+//! Send-receive — the primitive "from which all others can be derived".
+//!
+//! Linear-algebraically a send-receive is just the copy operator C_{a→b}
+//! with x_a and x_b on different workers (§3). The forward pass keeps the
+//! source realization (copy, not move); the adjoint is therefore a
+//! receive-send pair where "the add operation may not be equivalent to
+//! assignment": y_a + y_b accumulates at the source and the destination
+//! buffer is deallocated.
+
+use crate::adjoint::DistLinearOp;
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::tensor::{Scalar, Tensor};
+
+/// Copy a tensor from rank `src` to rank `dst`.
+///
+/// * Domain: tensor of `shape` on `src`.
+/// * Codomain: tensor of `shape` on both `src` (kept) and `dst` (received).
+/// * Adjoint: `dst` returns its cotangent, which is **added** to the
+///   source's (C* = D_b S_{b→a}, Appendix A.2).
+#[derive(Debug, Clone)]
+pub struct SendRecv {
+    /// Source world rank.
+    pub src: usize,
+    /// Destination world rank.
+    pub dst: usize,
+    /// Tensor shape being moved.
+    pub shape: Vec<usize>,
+    /// Message tag base.
+    pub tag: u64,
+}
+
+impl SendRecv {
+    /// Build a send-receive copy operator.
+    pub fn new(src: usize, dst: usize, shape: &[usize], tag: u64) -> Self {
+        SendRecv {
+            src,
+            dst,
+            shape: shape.to_vec(),
+            tag,
+        }
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for SendRecv {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        (rank == self.src).then(|| self.shape.clone())
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        (rank == self.src || rank == self.dst).then(|| self.shape.clone())
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        if self.src == self.dst {
+            // degenerate local copy
+            return Ok(x);
+        }
+        if rank == self.src {
+            let x = x.ok_or_else(|| Error::Primitive("sendrecv: source shard missing".into()))?;
+            comm.send_slice(self.dst, self.tag, x.data())?;
+            Ok(Some(x))
+        } else if rank == self.dst {
+            let data = comm.recv_vec::<T>(self.src, self.tag)?;
+            Ok(Some(Tensor::from_vec(&self.shape, data)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let rank = comm.rank();
+        if self.src == self.dst {
+            return Ok(y);
+        }
+        if rank == self.dst {
+            let y = y.ok_or_else(|| Error::Primitive("sendrecv*: dst shard missing".into()))?;
+            comm.send_slice(self.src, self.tag + 1, y.data())?;
+            // destination buffer deallocated (D_b)
+            Ok(None)
+        } else if rank == self.src {
+            let mut y =
+                y.ok_or_else(|| Error::Primitive("sendrecv*: src shard missing".into()))?;
+            let incoming = comm.recv_vec::<T>(self.dst, self.tag + 1)?;
+            let inc = Tensor::from_vec(&self.shape, incoming)?;
+            y.add_assign(&inc)?;
+            Ok(Some(y))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("SendRecv({}→{}, {:?})", self.src, self.dst, self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::{adjoint_residual, assert_coherent};
+    use crate::comm::Cluster;
+
+    #[test]
+    fn forward_copies() {
+        let op = SendRecv::new(0, 2, &[2, 2], 10);
+        let results = Cluster::run(3, |comm| {
+            let x = (comm.rank() == 0).then(|| Tensor::<f64>::iota(&[2, 2]));
+            op.forward(comm, x)
+        })
+        .unwrap();
+        assert_eq!(results[0], Some(Tensor::iota(&[2, 2])));
+        assert_eq!(results[1], None);
+        assert_eq!(results[2], Some(Tensor::iota(&[2, 2])));
+    }
+
+    #[test]
+    fn adjoint_adds_at_source() {
+        let op = SendRecv::new(0, 1, &[3], 20);
+        let results = Cluster::run(2, |comm| {
+            let y = Some(Tensor::<f64>::filled(&[3], (comm.rank() + 1) as f64));
+            op.adjoint(comm, y)
+        })
+        .unwrap();
+        // src: 1 + 2 = 3; dst deallocated
+        assert_eq!(results[0], Some(Tensor::filled(&[3], 3.0)));
+        assert_eq!(results[1], None);
+    }
+
+    #[test]
+    fn coherence() {
+        for (src, dst, world) in [(0, 1, 2), (1, 0, 2), (0, 3, 4), (2, 1, 4)] {
+            let op = SendRecv::new(src, dst, &[4, 3], 7);
+            assert_coherent::<f64>(world, &op, 99);
+        }
+    }
+
+    #[test]
+    fn degenerate_self_copy() {
+        let op = SendRecv::new(1, 1, &[5], 3);
+        let r = adjoint_residual::<f64>(2, &op, 5).unwrap();
+        assert!(r < 1e-13);
+    }
+}

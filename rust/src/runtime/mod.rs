@@ -1,0 +1,486 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA/Pallas artifacts.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX functions (whose GEMM
+//! hot-spots are the L1 Pallas kernel) to **HLO text** — the interchange
+//! format this image's xla_extension 0.5.1 accepts (jax ≥ 0.5 serialized
+//! protos carry 64-bit instruction ids it rejects; the text parser
+//! reassigns ids). This module:
+//!
+//! * parses `artifacts/manifest.json` (hand-rolled JSON substrate);
+//! * compiles each module once, lazily, on a dedicated **service thread**
+//!   that owns the `PjRtClient` (the xla crate's handles are not `Send`,
+//!   while [`crate::nn::LocalKernels`] must be `Send + Sync` — jobs are
+//!   proxied over a channel, replies returned per call);
+//! * exposes [`PjrtKernels`], a [`LocalKernels`] backend that dispatches
+//!   conv/affine to artifacts when present and falls back to the native
+//!   kernels otherwise (pooling and activations are always native — they
+//!   are memory-bound and not the paper's hot-spot).
+
+use crate::error::{Error, Result};
+use crate::nn::kernels::{LocalKernels, NativeKernels};
+use crate::nn::native::{Conv2dSpec, Pool2dSpec};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+/// One artifact in the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Artifact name (encodes the op and its shapes).
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Expected input shapes.
+    pub inputs: Vec<Vec<usize>>,
+    /// Number of tuple outputs.
+    pub num_outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Entries by name.
+    pub entries: HashMap<String, ManifestEntry>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let dir = PathBuf::from(dir);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let mut entries = HashMap::new();
+        for e in j.get("entries")?.as_arr()? {
+            let name = e.get("name")?.as_str()?.to_string();
+            let file = e.get("file")?.as_str()?.to_string();
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    s.as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let num_outputs = e.get("num_outputs")?.as_usize()?;
+            entries.insert(
+                name.clone(),
+                ManifestEntry {
+                    name,
+                    file,
+                    inputs,
+                    num_outputs,
+                },
+            );
+        }
+        Ok(Manifest { entries, dir })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ManifestEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+enum Job {
+    Run {
+        name: String,
+        inputs: Vec<Tensor<f32>>,
+        reply: Sender<Result<Vec<Tensor<f32>>>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the PJRT service thread.
+pub struct PjrtRuntime {
+    manifest: Manifest,
+    jobs: Mutex<Sender<Job>>,
+    /// Names known to the manifest (fast membership checks without
+    /// bouncing through the service thread).
+    available: HashSet<String>,
+}
+
+impl PjrtRuntime {
+    /// Start the runtime for an artifacts directory.
+    pub fn new(dir: &str) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let available: HashSet<String> = manifest.entries.keys().cloned().collect();
+        let (tx, rx) = channel::<Job>();
+        let thread_manifest = manifest.clone();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                // The client and executables live only on this thread.
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        // Fail every job with the construction error.
+                        while let Ok(job) = rx.recv() {
+                            match job {
+                                Job::Run { reply, .. } => {
+                                    let _ = reply.send(Err(Error::Runtime(format!(
+                                        "PJRT client failed to start: {e}"
+                                    ))));
+                                }
+                                Job::Shutdown => break,
+                            }
+                        }
+                        return;
+                    }
+                };
+                let mut compiled: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Shutdown => break,
+                        Job::Run {
+                            name,
+                            inputs,
+                            reply,
+                        } => {
+                            let result =
+                                run_job(&client, &thread_manifest, &mut compiled, &name, inputs);
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("cannot spawn pjrt service: {e}")))?;
+        Ok(PjrtRuntime {
+            manifest,
+            jobs: Mutex::new(tx),
+            available,
+        })
+    }
+
+    /// Is an artifact available?
+    pub fn has(&self, name: &str) -> bool {
+        self.available.contains(name)
+    }
+
+    /// Names of all artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute an artifact.
+    pub fn run(&self, name: &str, inputs: Vec<Tensor<f32>>) -> Result<Vec<Tensor<f32>>> {
+        let (reply_tx, reply_rx) = channel();
+        self.jobs
+            .lock()
+            .map_err(|_| Error::Runtime("pjrt job queue poisoned".into()))?
+            .send(Job::Run {
+                name: name.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Runtime("pjrt service thread is gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt service dropped the reply".into()))?
+    }
+}
+
+impl Drop for PjrtRuntime {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.jobs.lock() {
+            let _ = tx.send(Job::Shutdown);
+        }
+    }
+}
+
+fn run_job(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    compiled: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    inputs: Vec<Tensor<f32>>,
+) -> Result<Vec<Tensor<f32>>> {
+    let entry = manifest
+        .entries
+        .get(name)
+        .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))?;
+    if inputs.len() != entry.inputs.len() {
+        return Err(Error::Runtime(format!(
+            "artifact '{name}': {} inputs given, {} expected",
+            inputs.len(),
+            entry.inputs.len()
+        )));
+    }
+    for (i, (t, exp)) in inputs.iter().zip(entry.inputs.iter()).enumerate() {
+        if t.shape() != &exp[..] {
+            return Err(Error::Runtime(format!(
+                "artifact '{name}': input {i} shape {:?} != manifest {:?}",
+                t.shape(),
+                exp
+            )));
+        }
+    }
+    if !compiled.contains_key(name) {
+        let path = manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        compiled.insert(name.to_string(), client.compile(&comp)?);
+    }
+    let exe = &compiled[name];
+    let literals: Vec<xla::Literal> = inputs
+        .into_iter()
+        .map(|t| {
+            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(t.data())
+                .reshape(&dims)
+                .map_err(Error::from)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True.
+    let parts = result.to_tuple()?;
+    if parts.len() != entry.num_outputs {
+        return Err(Error::Runtime(format!(
+            "artifact '{name}': {} outputs, manifest says {}",
+            parts.len(),
+            entry.num_outputs
+        )));
+    }
+    parts
+        .into_iter()
+        .map(|lit| {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>()?;
+            Tensor::from_vec(&dims, data)
+        })
+        .collect()
+}
+
+/// Artifact-name builders — must match `python/compile/aot.py`.
+pub mod names {
+    /// Conv forward artifact name.
+    pub fn conv_fwd(b: usize, ci: usize, h: usize, w: usize, co: usize, k: (usize, usize), s: (usize, usize)) -> String {
+        format!("conv_fwd_b{b}_ci{ci}_h{h}_w{w}_co{co}_k{}x{}_s{}x{}", k.0, k.1, s.0, s.1)
+    }
+
+    /// Conv backward artifact name.
+    pub fn conv_bwd(b: usize, ci: usize, h: usize, w: usize, co: usize, k: (usize, usize), s: (usize, usize)) -> String {
+        format!("conv_bwd_b{b}_ci{ci}_h{h}_w{w}_co{co}_k{}x{}_s{}x{}", k.0, k.1, s.0, s.1)
+    }
+
+    /// Affine forward artifact name (with bias).
+    pub fn affine_fwd(b: usize, fi: usize, fo: usize, bias: bool) -> String {
+        if bias {
+            format!("affine_fwd_b{b}_fi{fi}_fo{fo}")
+        } else {
+            format!("affine_fwd_nobias_b{b}_fi{fi}_fo{fo}")
+        }
+    }
+
+    /// Affine backward artifact name.
+    pub fn affine_bwd(b: usize, fi: usize, fo: usize) -> String {
+        format!("affine_bwd_b{b}_fi{fi}_fo{fo}")
+    }
+}
+
+/// [`LocalKernels`] backend over the PJRT runtime with native fallback.
+pub struct PjrtKernels {
+    rt: PjrtRuntime,
+    native: NativeKernels,
+    /// Count of artifact-served calls (perf evidence).
+    pub hits: std::sync::atomic::AtomicUsize,
+    /// Count of native-fallback calls.
+    pub misses: std::sync::atomic::AtomicUsize,
+}
+
+impl PjrtKernels {
+    /// Load the backend from an artifacts directory.
+    pub fn load(dir: &str) -> Result<PjrtKernels> {
+        Ok(PjrtKernels {
+            rt: PjrtRuntime::new(dir)?,
+            native: NativeKernels,
+            hits: Default::default(),
+            misses: Default::default(),
+        })
+    }
+
+    /// The underlying runtime.
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.rt
+    }
+
+    fn hit(&self) {
+        self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn miss(&self) {
+        self.misses
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+impl LocalKernels<f32> for PjrtKernels {
+    fn conv2d_forward(
+        &self,
+        x: &Tensor<f32>,
+        w: &Tensor<f32>,
+        bias: Option<&Tensor<f32>>,
+        spec: Conv2dSpec,
+    ) -> Result<Tensor<f32>> {
+        let (b, ci, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        let (co, kh, kw) = (w.shape()[0], w.shape()[2], w.shape()[3]);
+        let name = names::conv_fwd(b, ci, h, wd, co, (kh, kw), spec.stride);
+        if spec.dilation == (1, 1) && bias.is_some() && self.rt.has(&name) {
+            self.hit();
+            let out = self
+                .rt
+                .run(&name, vec![x.clone(), w.clone(), bias.unwrap().clone()])?;
+            return Ok(out.into_iter().next().expect("conv_fwd returns y"));
+        }
+        self.miss();
+        self.native.conv2d_forward(x, w, bias, spec)
+    }
+
+    fn conv2d_backward(
+        &self,
+        x: &Tensor<f32>,
+        w: &Tensor<f32>,
+        dy: &Tensor<f32>,
+        spec: Conv2dSpec,
+    ) -> Result<(Tensor<f32>, Tensor<f32>, Tensor<f32>)> {
+        let (b, ci, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        let (co, kh, kw) = (w.shape()[0], w.shape()[2], w.shape()[3]);
+        let name = names::conv_bwd(b, ci, h, wd, co, (kh, kw), spec.stride);
+        if spec.dilation == (1, 1) && self.rt.has(&name) {
+            self.hit();
+            let mut out = self
+                .rt
+                .run(&name, vec![x.clone(), w.clone(), dy.clone()])?
+                .into_iter();
+            let dx = out.next().expect("dx");
+            let dw = out.next().expect("dw");
+            let db = out.next().expect("db");
+            return Ok((dx, dw, db));
+        }
+        self.miss();
+        self.native.conv2d_backward(x, w, dy, spec)
+    }
+
+    fn pool2d_forward(
+        &self,
+        x: &Tensor<f32>,
+        spec: Pool2dSpec,
+    ) -> Result<(Tensor<f32>, Vec<usize>)> {
+        // Memory-bound; stays native (see module docs).
+        self.native.pool2d_forward(x, spec)
+    }
+
+    fn pool2d_backward(
+        &self,
+        x_shape: &[usize],
+        dy: &Tensor<f32>,
+        argmax: &[usize],
+        spec: Pool2dSpec,
+    ) -> Result<Tensor<f32>> {
+        self.native.pool2d_backward(x_shape, dy, argmax, spec)
+    }
+
+    fn affine_forward(
+        &self,
+        x: &Tensor<f32>,
+        w: &Tensor<f32>,
+        bias: Option<&Tensor<f32>>,
+    ) -> Result<Tensor<f32>> {
+        let (b, fi) = (x.shape()[0], x.shape()[1]);
+        let fo = w.shape()[0];
+        let name = names::affine_fwd(b, fi, fo, bias.is_some());
+        if self.rt.has(&name) {
+            self.hit();
+            let mut inputs = vec![x.clone(), w.clone()];
+            if let Some(bias) = bias {
+                inputs.push(bias.clone());
+            }
+            let out = self.rt.run(&name, inputs)?;
+            return Ok(out.into_iter().next().expect("affine_fwd returns y"));
+        }
+        self.miss();
+        self.native.affine_forward(x, w, bias)
+    }
+
+    fn affine_backward(
+        &self,
+        x: &Tensor<f32>,
+        w: &Tensor<f32>,
+        dy: &Tensor<f32>,
+    ) -> Result<(Tensor<f32>, Tensor<f32>, Tensor<f32>)> {
+        let (b, fi) = (x.shape()[0], x.shape()[1]);
+        let fo = w.shape()[0];
+        let name = names::affine_bwd(b, fi, fo);
+        if self.rt.has(&name) {
+            self.hit();
+            let mut out = self
+                .rt
+                .run(&name, vec![x.clone(), w.clone(), dy.clone()])?
+                .into_iter();
+            let dx = out.next().expect("dx");
+            let dw = out.next().expect("dw");
+            let db = out.next().expect("db");
+            return Ok((dx, dw, db));
+        }
+        self.miss();
+        self.native.affine_backward(x, w, dy)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("distdl_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"entries": [{"name": "affine_fwd_b4_fi3_fo2", "file": "a.hlo.txt",
+                 "inputs": [[4,3],[2,3],[2]], "num_outputs": 1}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries["affine_fwd_b4_fi3_fo2"];
+        assert_eq!(e.inputs, vec![vec![4, 3], vec![2, 3], vec![2]]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn name_builders() {
+        assert_eq!(
+            names::conv_fwd(64, 1, 18, 18, 6, (5, 5), (1, 1)),
+            "conv_fwd_b64_ci1_h18_w18_co6_k5x5_s1x1"
+        );
+        assert_eq!(names::affine_fwd(64, 200, 60, false), "affine_fwd_nobias_b64_fi200_fo60");
+        assert_eq!(names::affine_bwd(64, 200, 60), "affine_bwd_b64_fi200_fo60");
+    }
+}

@@ -1,0 +1,363 @@
+//! Dense row-major tensors.
+//!
+//! [`Tensor<T>`] is the single data container used everywhere: local shards
+//! of distributed tensors, communication pack buffers, network parameters,
+//! and gradients. It is deliberately simple — owned, contiguous, row-major —
+//! because the paper's machinery operates on *regions* of memory
+//! ([`Region`]), and a contiguous buffer plus region-copy loops (with a
+//! contiguous-innermost fast path) is all that the primitives need.
+
+mod scalar;
+mod shape;
+
+pub use scalar::Scalar;
+pub use shape::{
+    check_same, delinearize, for_each_index, linearize, numel, strides_for, Region,
+};
+
+use crate::error::{Error, Result};
+
+/// A dense, owned, row-major tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T: Scalar> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Tensor<T> {
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![T::ZERO; numel(shape)],
+        }
+    }
+
+    /// Tensor filled with `value`.
+    pub fn filled(shape: &[usize], value: T) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![value; numel(shape)],
+        }
+    }
+
+    /// Build from an existing buffer; `data.len()` must equal the shape's
+    /// element count.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Result<Self> {
+        if data.len() != numel(shape) {
+            return Err(Error::Shape(format!(
+                "from_vec: {} elements for shape {:?} ({} expected)",
+                data.len(),
+                shape,
+                numel(shape)
+            )));
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    /// Rank-0 scalar tensor.
+    pub fn scalar(value: T) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![value],
+        }
+    }
+
+    /// Tensor of `shape` filled by `f(multi_index)`.
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> T) -> Self {
+        let mut t = Tensor::zeros(shape);
+        let mut off = 0usize;
+        for_each_index(shape, |idx| {
+            t.data[off] = f(idx);
+            off += 1;
+        });
+        t
+    }
+
+    /// `0, 1, 2, ...` in row-major order — handy in tests.
+    pub fn iota(shape: &[usize]) -> Self {
+        let n = numel(shape);
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|i| T::from_f64(i as f64)).collect(),
+        }
+    }
+
+    /// Shape (row-major).
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Rank.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Element count.
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Flat data slice.
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Mutable flat data slice.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Element access by multi-index.
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[linearize(&self.shape, idx)]
+    }
+
+    /// Mutable element access by multi-index.
+    #[inline]
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut T {
+        &mut self.data[linearize(&self.shape, idx)]
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor<T>> {
+        if numel(shape) != self.numel() {
+            return Err(Error::Shape(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.shape, shape
+            )));
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// Cast between scalar types (through f64).
+    pub fn cast<U: Scalar>(&self) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| U::from_f64(v.to_f64())).collect(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Region machinery — the substrate for every §2/§3 operator.
+    // ------------------------------------------------------------------
+
+    /// Copy `src_region` of `src` into `self` starting at `dst_start`,
+    /// overwriting. Shapes of the region must fit in both tensors.
+    ///
+    /// This is the concrete realization of the paper's *copy* operator
+    /// C_{a→b} (§2) restricted to rectangular subsets; halo pack/unpack,
+    /// scatter, and all-to-all are built from it.
+    pub fn copy_region_from(
+        &mut self,
+        src: &Tensor<T>,
+        src_region: &Region,
+        dst_start: &[usize],
+    ) -> Result<()> {
+        self.region_op(src, src_region, dst_start, |d, s| *d = s)
+    }
+
+    /// Accumulate (`+=`) `src_region` of `src` into `self` at `dst_start`.
+    ///
+    /// The *add* operator S_{a→b} (§2). The adjoint of every copy is an add
+    /// in the reverse direction, so this is the workhorse of every adjoint
+    /// primitive (e.g. adjoint halo exchange adds into the bulk, App. B.2).
+    pub fn add_region_from(
+        &mut self,
+        src: &Tensor<T>,
+        src_region: &Region,
+        dst_start: &[usize],
+    ) -> Result<()> {
+        self.region_op(src, src_region, dst_start, |d, s| *d += s)
+    }
+
+    fn region_op(
+        &mut self,
+        src: &Tensor<T>,
+        src_region: &Region,
+        dst_start: &[usize],
+        mut apply: impl FnMut(&mut T, T),
+    ) -> Result<()> {
+        src_region.check_within(&src.shape, "region_op src")?;
+        let dst_region = Region::new(dst_start.to_vec(), src_region.shape.clone());
+        dst_region.check_within(&self.shape, "region_op dst")?;
+        if src_region.is_empty() {
+            return Ok(());
+        }
+        let rank = src_region.rank();
+        if rank == 0 {
+            apply(&mut self.data[0], src.data[0]);
+            return Ok(());
+        }
+        // Iterate over the outer dims; the innermost dim is a contiguous run
+        // in both tensors (row-major), processed as a slice.
+        let inner = src_region.shape[rank - 1];
+        let outer_shape = &src_region.shape[..rank - 1];
+        let src_strides = strides_for(&src.shape);
+        let dst_strides = strides_for(&self.shape);
+        for_each_index(outer_shape, |outer_idx| {
+            let mut s_off = 0usize;
+            let mut d_off = 0usize;
+            for d in 0..rank - 1 {
+                s_off += (src_region.start[d] + outer_idx[d]) * src_strides[d];
+                d_off += (dst_start[d] + outer_idx[d]) * dst_strides[d];
+            }
+            s_off += src_region.start[rank - 1] * src_strides[rank - 1];
+            d_off += dst_start[rank - 1] * dst_strides[rank - 1];
+            let s_run = &src.data[s_off..s_off + inner];
+            let d_run = &mut self.data[d_off..d_off + inner];
+            for (d, &s) in d_run.iter_mut().zip(s_run.iter()) {
+                apply(d, s);
+            }
+        });
+        Ok(())
+    }
+
+    /// Extract a region as a new (freshly *allocated*, in the paper's §2
+    /// sense) tensor.
+    pub fn extract_region(&self, region: &Region) -> Result<Tensor<T>> {
+        region.check_within(&self.shape, "extract_region")?;
+        let mut out = Tensor::zeros(&region.shape);
+        out.copy_region_from(self, region, &vec![0; region.rank()])?;
+        Ok(out)
+    }
+
+    /// Set every element of `region` to `value`. With `value == 0` this is
+    /// the *clear* operator K_b of §2.
+    pub fn fill_region(&mut self, region: &Region, value: T) -> Result<()> {
+        region.check_within(&self.shape, "fill_region")?;
+        if region.is_empty() {
+            return Ok(());
+        }
+        let rank = region.rank();
+        if rank == 0 {
+            self.data[0] = value;
+            return Ok(());
+        }
+        let inner = region.shape[rank - 1];
+        let strides = strides_for(&self.shape);
+        let outer_shape = region.shape[..rank - 1].to_vec();
+        // Collect offsets first to avoid borrowing issues in the closure.
+        let mut offsets = Vec::new();
+        for_each_index(&outer_shape, |outer_idx| {
+            let mut off = 0usize;
+            for d in 0..rank - 1 {
+                off += (region.start[d] + outer_idx[d]) * strides[d];
+            }
+            off += region.start[rank - 1] * strides[rank - 1];
+            offsets.push(off);
+        });
+        for off in offsets {
+            self.data[off..off + inner].fill(value);
+        }
+        Ok(())
+    }
+}
+
+pub mod ops;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::<f64>::iota(&[2, 3]);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::<f32>::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::<f32>::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn region_copy_2d() {
+        let src = Tensor::<f64>::iota(&[4, 4]);
+        let mut dst = Tensor::<f64>::zeros(&[3, 3]);
+        // copy the central 2x2 of src into dst at (1,1)
+        dst.copy_region_from(&src, &Region::new(vec![1, 1], vec![2, 2]), &[1, 1])
+            .unwrap();
+        assert_eq!(dst.at(&[1, 1]), 5.0);
+        assert_eq!(dst.at(&[1, 2]), 6.0);
+        assert_eq!(dst.at(&[2, 1]), 9.0);
+        assert_eq!(dst.at(&[2, 2]), 10.0);
+        assert_eq!(dst.at(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn region_add_accumulates() {
+        let src = Tensor::<f64>::filled(&[2, 2], 3.0);
+        let mut dst = Tensor::<f64>::filled(&[2, 2], 1.0);
+        dst.add_region_from(&src, &Region::full(&[2, 2]), &[0, 0])
+            .unwrap();
+        dst.add_region_from(&src, &Region::full(&[2, 2]), &[0, 0])
+            .unwrap();
+        assert_eq!(dst.data(), &[7.0; 4]);
+    }
+
+    #[test]
+    fn region_copy_bounds_checked() {
+        let src = Tensor::<f32>::zeros(&[2, 2]);
+        let mut dst = Tensor::<f32>::zeros(&[2, 2]);
+        let r = Region::new(vec![1, 1], vec![2, 2]);
+        assert!(dst.copy_region_from(&src, &r, &[0, 0]).is_err());
+    }
+
+    #[test]
+    fn extract_and_fill() {
+        let t = Tensor::<f64>::iota(&[3, 3]);
+        let sub = t.extract_region(&Region::new(vec![1, 0], vec![2, 2])).unwrap();
+        assert_eq!(sub.data(), &[3.0, 4.0, 6.0, 7.0]);
+        let mut t = t;
+        t.fill_region(&Region::new(vec![0, 0], vec![1, 3]), 0.0).unwrap();
+        assert_eq!(&t.data()[..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+    }
+
+    #[test]
+    fn rank0_scalar() {
+        let mut a = Tensor::<f64>::scalar(2.0);
+        let b = Tensor::<f64>::scalar(5.0);
+        a.add_region_from(&b, &Region::full(&[]), &[]).unwrap();
+        assert_eq!(a.at(&[]), 7.0);
+    }
+
+    #[test]
+    fn reshape_and_cast() {
+        let t = Tensor::<f32>::iota(&[2, 3]);
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(&[4]).is_err());
+        let d: Tensor<f64> = t.cast();
+        assert_eq!(d.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn from_fn_indexes() {
+        let t = Tensor::<f64>::from_fn(&[2, 2], |i| (i[0] * 10 + i[1]) as f64);
+        assert_eq!(t.data(), &[0.0, 1.0, 10.0, 11.0]);
+    }
+}

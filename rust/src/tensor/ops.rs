@@ -1,0 +1,288 @@
+//! Elementwise and reduction math on [`Tensor`].
+//!
+//! These are *local* (single-worker) operations; the distributed versions in
+//! [`crate::primitives`] compose them with data movement. The inner product
+//! here is the standard Euclidean inner product of Eq. (2), which fixes the
+//! adjoints of every operator in the paper.
+
+use super::{Scalar, Tensor};
+use crate::error::{Error, Result};
+
+impl<T: Scalar> Tensor<T> {
+    /// Elementwise `self + other` (new tensor).
+    pub fn add(&self, other: &Tensor<T>) -> Result<Tensor<T>> {
+        self.zip_with(other, |a, b| a + b)
+    }
+
+    /// Elementwise `self - other`.
+    pub fn sub(&self, other: &Tensor<T>) -> Result<Tensor<T>> {
+        self.zip_with(other, |a, b| a - b)
+    }
+
+    /// Elementwise (Hadamard) product.
+    pub fn mul(&self, other: &Tensor<T>) -> Result<Tensor<T>> {
+        self.zip_with(other, |a, b| a * b)
+    }
+
+    /// In-place `self += other`.
+    pub fn add_assign(&mut self, other: &Tensor<T>) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!(
+                "add_assign: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        for (a, &b) in self.data_mut().iter_mut().zip(other.data().iter()) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// In-place `self += alpha * other` (axpy).
+    pub fn axpy(&mut self, alpha: T, other: &Tensor<T>) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!(
+                "axpy: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        for (a, &b) in self.data_mut().iter_mut().zip(other.data().iter()) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// New tensor scaled by `alpha`.
+    pub fn scale(&self, alpha: T) -> Tensor<T> {
+        self.map(|v| v * alpha)
+    }
+
+    /// In-place scale.
+    pub fn scale_assign(&mut self, alpha: T) {
+        for v in self.data_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(T) -> T) -> Tensor<T> {
+        Tensor::from_vec(self.shape(), self.data().iter().map(|&v| f(v)).collect())
+            .expect("map preserves element count")
+    }
+
+    /// Zip two same-shaped tensors elementwise.
+    pub fn zip_with(&self, other: &Tensor<T>, f: impl Fn(T, T) -> T) -> Result<Tensor<T>> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!(
+                "zip_with: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        Ok(Tensor::from_vec(
+            self.shape(),
+            self.data()
+                .iter()
+                .zip(other.data().iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        )
+        .expect("zip preserves element count"))
+    }
+
+    /// Standard Euclidean inner product ⟨a,b⟩ of Eq. (2).
+    ///
+    /// Accumulates in f64 regardless of `T`: the paper's footnote 3 warns
+    /// that floating-point inner products "must be constructed carefully",
+    /// and the adjoint test of Eq. (13) needs all the bits we can get.
+    pub fn inner(&self, other: &Tensor<T>) -> Result<f64> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!(
+                "inner: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        Ok(self
+            .data()
+            .iter()
+            .zip(other.data().iter())
+            .map(|(&a, &b)| a.to_f64() * b.to_f64())
+            .sum())
+    }
+
+    /// Euclidean norm (f64 accumulation).
+    pub fn norm(&self) -> f64 {
+        self.data()
+            .iter()
+            .map(|&v| {
+                let x = v.to_f64();
+                x * x
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> T {
+        self.data().iter().copied().sum()
+    }
+
+    /// Maximum element (requires non-empty).
+    pub fn max(&self) -> T {
+        self.data()
+            .iter()
+            .copied()
+            .fold(T::neg_infinity(), |a, b| a.max_s(b))
+    }
+
+    /// Largest absolute difference against `other`.
+    pub fn max_abs_diff(&self, other: &Tensor<T>) -> Result<f64> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!(
+                "max_abs_diff: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        Ok(self
+            .data()
+            .iter()
+            .zip(other.data().iter())
+            .map(|(&a, &b)| (a.to_f64() - b.to_f64()).abs())
+            .fold(0.0, f64::max))
+    }
+
+    /// Check elementwise closeness with absolute + relative tolerance.
+    pub fn allclose(&self, other: &Tensor<T>, atol: f64, rtol: f64) -> bool {
+        if self.shape() != other.shape() {
+            return false;
+        }
+        self.data().iter().zip(other.data().iter()).all(|(&a, &b)| {
+            let (a, b) = (a.to_f64(), b.to_f64());
+            (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+        })
+    }
+}
+
+/// Dense 2-D matrix multiply `C[m,n] = A[m,k] @ B[k,n]` — the naive local
+/// GEMM used by tests and as the native fallback; the optimized paths are
+/// the blocked GEMM in [`crate::nn::native`] and the Pallas/MXU kernel at L1.
+pub fn matmul<T: Scalar>(a: &Tensor<T>, b: &Tensor<T>) -> Result<Tensor<T>> {
+    if a.rank() != 2 || b.rank() != 2 {
+        return Err(Error::Shape("matmul expects rank-2 tensors".into()));
+    }
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    if k != k2 {
+        return Err(Error::Shape(format!(
+            "matmul: inner dims {k} vs {k2} differ"
+        )));
+    }
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i in 0..m {
+        for p in 0..k {
+            let aip = ad[i * k + p];
+            if aip == T::ZERO {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// Transpose a rank-2 tensor.
+pub fn transpose2<T: Scalar>(a: &Tensor<T>) -> Result<Tensor<T>> {
+    if a.rank() != 2 {
+        return Err(Error::Shape("transpose2 expects rank-2".into()));
+    }
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut out = Tensor::zeros(&[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            *out.at_mut(&[j, i]) = a.at(&[i, j]);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise() {
+        let a = Tensor::<f64>::iota(&[2, 2]);
+        let b = Tensor::<f64>::filled(&[2, 2], 2.0);
+        assert_eq!(a.add(&b).unwrap().data(), &[2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(a.sub(&b).unwrap().data(), &[-2.0, -1.0, 0.0, 1.0]);
+        assert_eq!(a.mul(&b).unwrap().data(), &[0.0, 2.0, 4.0, 6.0]);
+        assert_eq!(a.scale(3.0).data(), &[0.0, 3.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let a = Tensor::<f64>::zeros(&[2]);
+        let b = Tensor::<f64>::zeros(&[3]);
+        assert!(a.add(&b).is_err());
+        assert!(a.inner(&b).is_err());
+    }
+
+    #[test]
+    fn inner_product_euclidean() {
+        let a = Tensor::<f64>::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::<f64>::from_vec(&[3], vec![4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(a.inner(&b).unwrap(), 32.0);
+        assert!((a.norm() - 14f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::<f32>::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::<f32>::filled(&[2, 2], 1.0);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rect_identity() {
+        let a = Tensor::<f64>::iota(&[3, 4]);
+        let id = Tensor::<f64>::from_fn(&[4, 4], |i| if i[0] == i[1] { 1.0 } else { 0.0 });
+        let c = matmul(&a, &id).unwrap();
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::<f64>::iota(&[2, 3]);
+        let t = transpose2(&a).unwrap();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.at(&[2, 1]), a.at(&[1, 2]));
+        assert_eq!(transpose2(&t).unwrap(), a);
+    }
+
+    #[test]
+    fn axpy_and_allclose() {
+        let mut a = Tensor::<f64>::filled(&[4], 1.0);
+        let b = Tensor::<f64>::filled(&[4], 2.0);
+        a.axpy(0.5, &b).unwrap();
+        assert!(a.allclose(&Tensor::filled(&[4], 2.0), 1e-12, 0.0));
+        assert!(!a.allclose(&Tensor::filled(&[4], 2.1), 1e-12, 0.0));
+    }
+
+    #[test]
+    fn reductions() {
+        let a = Tensor::<f64>::from_vec(&[4], vec![-3.0, 1.0, 2.0, -0.5]).unwrap();
+        assert_eq!(a.sum(), -0.5);
+        assert_eq!(a.max(), 2.0);
+    }
+}

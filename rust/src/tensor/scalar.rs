@@ -1,0 +1,168 @@
+//! Scalar element trait.
+//!
+//! The paper works over "the space of relevant computer numbers" 𝔽 (§2).
+//! We instantiate 𝔽 as IEEE floats: `f32` for the training hot path (what
+//! the PJRT kernels consume) and `f64` for adjoint-coherence tests, where
+//! the residual of Eq. (13) must be resolved well below the test threshold.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Element type usable in a [`crate::Tensor`] and transportable through the
+/// [`crate::comm`] substrate.
+pub trait Scalar:
+    Copy
+    + Clone
+    + Debug
+    + Display
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + Sum
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Size of the wire representation in bytes.
+    const WIRE_SIZE: usize;
+
+    /// Lossless (f32) or exact (f64) conversion to f64.
+    fn to_f64(self) -> f64;
+    /// Conversion from f64 (rounds for f32).
+    fn from_f64(v: f64) -> Self;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// Square root.
+    fn sqrt(self) -> Self;
+    /// Natural exponential.
+    fn exp(self) -> Self;
+    /// Natural logarithm.
+    fn ln(self) -> Self;
+    /// Maximum of two values (NaN-propagating like `f32::max` is fine here).
+    fn max_s(self, other: Self) -> Self;
+    /// Minimum of two values.
+    fn min_s(self, other: Self) -> Self;
+    /// Most negative finite value (identity for max-reduction).
+    fn neg_infinity() -> Self;
+
+    /// Serialize a slice into little-endian bytes (wire format for comm).
+    fn write_bytes(src: &[Self], dst: &mut Vec<u8>);
+    /// Deserialize little-endian bytes into values.
+    fn read_bytes(src: &[u8]) -> Vec<Self>;
+}
+
+macro_rules! impl_scalar {
+    ($t:ty, $bytes:expr) => {
+        impl Scalar for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const WIRE_SIZE: usize = $bytes;
+
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            #[inline]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            #[inline]
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            #[inline]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline]
+            fn exp(self) -> Self {
+                <$t>::exp(self)
+            }
+            #[inline]
+            fn ln(self) -> Self {
+                <$t>::ln(self)
+            }
+            #[inline]
+            fn max_s(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            #[inline]
+            fn min_s(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+            #[inline]
+            fn neg_infinity() -> Self {
+                <$t>::NEG_INFINITY
+            }
+
+            fn write_bytes(src: &[Self], dst: &mut Vec<u8>) {
+                dst.reserve(src.len() * $bytes);
+                for v in src {
+                    dst.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+
+            fn read_bytes(src: &[u8]) -> Vec<Self> {
+                assert!(
+                    src.len() % $bytes == 0,
+                    "wire buffer length {} not a multiple of {}",
+                    src.len(),
+                    $bytes
+                );
+                src.chunks_exact($bytes)
+                    .map(|c| <$t>::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            }
+        }
+    };
+}
+
+impl_scalar!(f32, 4);
+impl_scalar!(f64, 8);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let v = [1.5f32, -2.25, 0.0, f32::MAX];
+        let mut buf = Vec::new();
+        f32::write_bytes(&v, &mut buf);
+        assert_eq!(buf.len(), 16);
+        assert_eq!(f32::read_bytes(&buf), v.to_vec());
+    }
+
+    #[test]
+    fn roundtrip_f64() {
+        let v = [std::f64::consts::PI, -1e-300, 7.0];
+        let mut buf = Vec::new();
+        f64::write_bytes(&v, &mut buf);
+        assert_eq!(f64::read_bytes(&buf), v.to_vec());
+    }
+
+    #[test]
+    #[should_panic]
+    fn misaligned_wire_panics() {
+        f32::read_bytes(&[0u8; 5]);
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(f32::ZERO + f32::ONE, 1.0);
+        assert!(f64::neg_infinity() < f64::MIN);
+    }
+}

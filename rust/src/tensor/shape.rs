@@ -1,0 +1,285 @@
+//! Shape and index arithmetic for dense row-major tensors.
+//!
+//! The paper makes "no assumptions about the rank, ordering, size, or layout
+//! of the tensor" (§2); concretely we fix row-major (C) layout, which is
+//! what both our native kernels and the XLA artifacts use.
+
+use crate::error::{Error, Result};
+
+/// Row-major strides for `shape`.
+///
+/// The last dimension is contiguous; an empty shape (rank-0 scalar) has no
+/// strides.
+pub fn strides_for(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![0usize; shape.len()];
+    let mut acc = 1usize;
+    for (i, &d) in shape.iter().enumerate().rev() {
+        strides[i] = acc;
+        acc *= d;
+    }
+    strides
+}
+
+/// Total number of elements of `shape` (1 for rank-0).
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Flatten a multi-index into a row-major linear offset.
+///
+/// Panics in debug builds if `idx` is out of bounds.
+#[inline]
+pub fn linearize(shape: &[usize], idx: &[usize]) -> usize {
+    debug_assert_eq!(shape.len(), idx.len());
+    let mut off = 0usize;
+    for (d, (&i, &n)) in idx.iter().zip(shape.iter()).enumerate() {
+        debug_assert!(i < n, "index {i} out of bounds {n} in dim {d}");
+        let _ = d;
+        off = off * n + i;
+    }
+    off
+}
+
+/// Inverse of [`linearize`]: linear offset -> multi-index.
+pub fn delinearize(shape: &[usize], mut off: usize) -> Vec<usize> {
+    let mut idx = vec![0usize; shape.len()];
+    for i in (0..shape.len()).rev() {
+        idx[i] = off % shape[i];
+        off /= shape[i];
+    }
+    idx
+}
+
+/// Check two shapes are identical, returning a descriptive error otherwise.
+pub fn check_same(a: &[usize], b: &[usize], ctx: &str) -> Result<()> {
+    if a != b {
+        return Err(Error::Shape(format!("{ctx}: shape mismatch {a:?} vs {b:?}")));
+    }
+    Ok(())
+}
+
+/// An axis-aligned hyper-rectangular region of a tensor: `start[d] .. start[d]+shape[d]`
+/// in every dimension `d`.
+///
+/// Regions are the unit of all data movement in this crate: pack/unpack for
+/// halo exchange, subtensor extraction for scatter/all-to-all, and the
+/// paper's memory-model subsets `x_a`, `x_b` are all regions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    /// Per-dimension start index (inclusive).
+    pub start: Vec<usize>,
+    /// Per-dimension extent.
+    pub shape: Vec<usize>,
+}
+
+impl Region {
+    /// Build a region, validating ranks match.
+    pub fn new(start: Vec<usize>, shape: Vec<usize>) -> Self {
+        assert_eq!(start.len(), shape.len(), "region rank mismatch");
+        Region { start, shape }
+    }
+
+    /// The whole of a tensor with `shape`.
+    pub fn full(shape: &[usize]) -> Self {
+        Region {
+            start: vec![0; shape.len()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// Number of elements covered.
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    /// Rank.
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// True if any extent is zero.
+    pub fn is_empty(&self) -> bool {
+        self.shape.iter().any(|&d| d == 0)
+    }
+
+    /// Per-dimension end (exclusive).
+    pub fn end(&self) -> Vec<usize> {
+        self.start
+            .iter()
+            .zip(self.shape.iter())
+            .map(|(&s, &n)| s + n)
+            .collect()
+    }
+
+    /// Check that the region fits inside a tensor of `shape`.
+    pub fn check_within(&self, shape: &[usize], ctx: &str) -> Result<()> {
+        if self.rank() != shape.len() {
+            return Err(Error::Shape(format!(
+                "{ctx}: region rank {} vs tensor rank {}",
+                self.rank(),
+                shape.len()
+            )));
+        }
+        for d in 0..self.rank() {
+            if self.start[d] + self.shape[d] > shape[d] {
+                return Err(Error::Shape(format!(
+                    "{ctx}: region {:?}+{:?} exceeds tensor shape {:?} in dim {d}",
+                    self.start, self.shape, shape
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Intersection of two regions expressed in the same (global) index
+    /// space, or `None` if they do not overlap.
+    ///
+    /// This drives the generalized all-to-all: the data rank `i` must send
+    /// rank `j` is exactly `intersect(owned_by(i), owned_by(j'))` across the
+    /// two decompositions (§3, "Generalized all-to-all").
+    pub fn intersect(&self, other: &Region) -> Option<Region> {
+        assert_eq!(self.rank(), other.rank());
+        let mut start = Vec::with_capacity(self.rank());
+        let mut shape = Vec::with_capacity(self.rank());
+        for d in 0..self.rank() {
+            let lo = self.start[d].max(other.start[d]);
+            let hi = (self.start[d] + self.shape[d]).min(other.start[d] + other.shape[d]);
+            if hi <= lo {
+                return None;
+            }
+            start.push(lo);
+            shape.push(hi - lo);
+        }
+        Some(Region { start, shape })
+    }
+
+    /// Translate the region by subtracting `origin` (global -> local
+    /// coordinates of a subtensor that starts at `origin`).
+    pub fn relative_to(&self, origin: &[usize]) -> Region {
+        let start = self
+            .start
+            .iter()
+            .zip(origin.iter())
+            .map(|(&s, &o)| {
+                debug_assert!(s >= o, "region start {s} precedes origin {o}");
+                s - o
+            })
+            .collect();
+        Region {
+            start,
+            shape: self.shape.clone(),
+        }
+    }
+
+    /// Translate the region by adding `origin` (local -> global).
+    pub fn offset_by(&self, origin: &[usize]) -> Region {
+        let start = self
+            .start
+            .iter()
+            .zip(origin.iter())
+            .map(|(&s, &o)| s + o)
+            .collect();
+        Region {
+            start,
+            shape: self.shape.clone(),
+        }
+    }
+}
+
+/// Iterate over all multi-indices of `shape` in row-major order, calling
+/// `f(idx)`. Rank-0 calls `f(&[])` once.
+pub fn for_each_index(shape: &[usize], mut f: impl FnMut(&[usize])) {
+    let rank = shape.len();
+    if numel(shape) == 0 {
+        return;
+    }
+    let mut idx = vec![0usize; rank];
+    loop {
+        f(&idx);
+        // odometer increment
+        let mut d = rank;
+        loop {
+            if d == 0 {
+                return;
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_for(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_for(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn linearize_roundtrip() {
+        let shape = [3, 4, 5];
+        for off in 0..numel(&shape) {
+            let idx = delinearize(&shape, off);
+            assert_eq!(linearize(&shape, &idx), off);
+        }
+    }
+
+    #[test]
+    fn region_intersection() {
+        let a = Region::new(vec![0, 0], vec![4, 4]);
+        let b = Region::new(vec![2, 3], vec![4, 4]);
+        let i = a.intersect(&b).unwrap();
+        assert_eq!(i, Region::new(vec![2, 3], vec![2, 1]));
+        let c = Region::new(vec![4, 0], vec![1, 1]);
+        assert!(a.intersect(&c).is_none());
+    }
+
+    #[test]
+    fn region_translation() {
+        let g = Region::new(vec![5, 7], vec![2, 2]);
+        let l = g.relative_to(&[4, 6]);
+        assert_eq!(l, Region::new(vec![1, 1], vec![2, 2]));
+        assert_eq!(l.offset_by(&[4, 6]), g);
+    }
+
+    #[test]
+    fn region_bounds_check() {
+        let r = Region::new(vec![1], vec![3]);
+        assert!(r.check_within(&[4], "t").is_ok());
+        assert!(r.check_within(&[3], "t").is_err());
+    }
+
+    #[test]
+    fn index_iteration_order() {
+        let mut seen = Vec::new();
+        for_each_index(&[2, 2], |i| seen.push(i.to_vec()));
+        assert_eq!(
+            seen,
+            vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]
+        );
+    }
+
+    #[test]
+    fn empty_shape_iteration() {
+        let mut n = 0;
+        for_each_index(&[2, 0, 3], |_| n += 1);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn rank0_iteration() {
+        let mut n = 0;
+        for_each_index(&[], |i| {
+            assert!(i.is_empty());
+            n += 1;
+        });
+        assert_eq!(n, 1);
+    }
+}

@@ -1,0 +1,172 @@
+//! Minimal benchmark harness (criterion is not in the vendored crate
+//! set). Used by the `rust/benches/*` targets (`harness = false`).
+//!
+//! Methodology: warm-up runs, then timed iterations until both a minimum
+//! sample count and a minimum wall-clock budget are met; reports
+//! mean/median/min/std and derived throughput. Honors the standard
+//! `--bench` filter argument cargo passes through.
+
+use crate::util::timer::{Stats, Timer};
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Timing statistics (seconds per iteration).
+    pub stats: Stats,
+    /// Optional bytes moved per iteration (for GB/s).
+    pub bytes: Option<usize>,
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Minimum samples.
+    pub min_samples: usize,
+    /// Minimum measurement budget in seconds.
+    pub min_seconds: f64,
+    /// Warm-up iterations.
+    pub warmup: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            min_samples: 10,
+            min_seconds: 0.5,
+            warmup: 2,
+        }
+    }
+}
+
+/// A group of benchmarks printed as one table.
+pub struct BenchGroup {
+    title: String,
+    cfg: BenchConfig,
+    filter: Option<String>,
+    results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    /// Start a group; reads an optional substring filter from argv.
+    pub fn new(title: &str) -> Self {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        BenchGroup {
+            title: title.to_string(),
+            cfg: BenchConfig::default(),
+            filter,
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the harness configuration.
+    pub fn with_config(mut self, cfg: BenchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Run one benchmark; `f` is a full iteration.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        self.bench_with_bytes(name, None, &mut f)
+    }
+
+    /// Run one benchmark that moves `bytes` per iteration (reports GB/s).
+    pub fn bench_bytes(&mut self, name: &str, bytes: usize, mut f: impl FnMut()) {
+        self.bench_with_bytes(name, Some(bytes), &mut f)
+    }
+
+    fn bench_with_bytes(&mut self, name: &str, bytes: Option<usize>, f: &mut dyn FnMut()) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        for _ in 0..self.cfg.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let budget = Timer::start();
+        while samples.len() < self.cfg.min_samples || budget.elapsed_s() < self.cfg.min_seconds {
+            let t = Timer::start();
+            f();
+            samples.push(t.elapsed_s());
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            stats: Stats::of(&samples),
+            bytes,
+        });
+    }
+
+    /// Print the result table; returns the results for further reporting.
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!("\n== {} ==", self.title);
+        println!(
+            "{:<52} {:>12} {:>12} {:>12} {:>8} {:>12}",
+            "benchmark", "mean", "median", "min", "n", "throughput"
+        );
+        for r in &self.results {
+            let tput = r
+                .bytes
+                .map(|b| format!("{:.2} GB/s", b as f64 / r.stats.median / 1e9))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "{:<52} {:>12} {:>12} {:>12} {:>8} {:>12}",
+                r.name,
+                fmt_time(r.stats.mean),
+                fmt_time(r.stats.median),
+                fmt_time(r.stats.min),
+                r.stats.n,
+                tput
+            );
+        }
+        self.results
+    }
+}
+
+/// Human-friendly seconds formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_collects_samples() {
+        let mut g = BenchGroup::new("test").with_config(BenchConfig {
+            min_samples: 3,
+            min_seconds: 0.0,
+            warmup: 1,
+        });
+        let mut count = 0;
+        g.bench("noop", || count += 1);
+        let results = g.finish();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].stats.n >= 3);
+        assert!(count >= 4); // warmup + samples
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with("s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

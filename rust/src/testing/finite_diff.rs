@@ -1,0 +1,70 @@
+//! Finite-difference gradient checking for the *nonlinear* local kernels.
+//!
+//! The paper's Eq. (13) adjoint test covers the linear data-movement
+//! operators; the sequential layer functions (conv, pool, affine,
+//! activations, loss) are validated the classical way: the VJP against a
+//! central finite difference of the scalar pairing ⟨F(x), dy⟩.
+
+use crate::tensor::{Scalar, Tensor};
+
+/// Check that `dx` is the VJP of `f` at `x` against cotangent `dy`:
+/// for random directions v, ⟨dx, v⟩ ≈ d/dε ⟨f(x + εv), dy⟩.
+///
+/// Panics with a diagnostic on mismatch. `eps` is the FD step; `tol` the
+/// relative tolerance.
+pub fn check_vjp<T: Scalar>(
+    x: &Tensor<T>,
+    dx: &Tensor<T>,
+    dy: &Tensor<T>,
+    f: impl Fn(&Tensor<T>) -> Tensor<T>,
+    eps: f64,
+    tol: f64,
+) {
+    let mut rng = crate::util::rng::SplitMix64::new(0xFD);
+    for trial in 0..4 {
+        // random direction
+        let v = Tensor::<T>::from_vec(
+            x.shape(),
+            (0..x.numel())
+                .map(|_| T::from_f64(rng.next_f64() - 0.5))
+                .collect(),
+        )
+        .unwrap();
+        let analytic = dx.inner(&v).unwrap();
+        let mut xp = x.clone();
+        xp.axpy(T::from_f64(eps), &v).unwrap();
+        let mut xm = x.clone();
+        xm.axpy(T::from_f64(-eps), &v).unwrap();
+        let fp = f(&xp).inner(dy).unwrap();
+        let fm = f(&xm).inner(dy).unwrap();
+        let numeric = (fp - fm) / (2.0 * eps);
+        let scale = analytic.abs().max(numeric.abs()).max(1e-8);
+        assert!(
+            (analytic - numeric).abs() / scale < tol,
+            "VJP mismatch (trial {trial}): analytic {analytic:.8e} vs numeric {numeric:.8e}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_correct_gradient() {
+        // f(x) = x^2 elementwise; VJP = 2x ⊙ dy
+        let x = Tensor::<f64>::from_vec(&[3], vec![1.0, -2.0, 0.5]).unwrap();
+        let dy = Tensor::<f64>::from_vec(&[3], vec![1.0, 1.0, 2.0]).unwrap();
+        let dx = x.zip_with(&dy, |xi, di| 2.0 * xi * di).unwrap();
+        check_vjp(&x, &dx, &dy, |t| t.map(|v| v * v), 1e-6, 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "VJP mismatch")]
+    fn rejects_wrong_gradient() {
+        let x = Tensor::<f64>::from_vec(&[3], vec![1.0, -2.0, 0.5]).unwrap();
+        let dy = Tensor::<f64>::filled(&[3], 1.0);
+        let dx = Tensor::<f64>::filled(&[3], 1.0); // wrong
+        check_vjp(&x, &dx, &dy, |t| t.map(|v| v * v), 1e-6, 1e-5);
+    }
+}

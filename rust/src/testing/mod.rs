@@ -1,0 +1,6 @@
+//! Test harness substrates: property testing and finite-difference
+//! gradient checks (hand-rolled; proptest is not in the vendored set).
+
+pub mod finite_diff;
+pub mod prop;
+pub mod bench;

@@ -1,0 +1,79 @@
+//! Minimal property-testing harness (proptest is not in the vendored
+//! crate set).
+//!
+//! [`prop_check`] runs a predicate over `cases` deterministic random
+//! inputs drawn from a generator; on failure it reports the seed and the
+//! case index so the exact failure reproduces with
+//! `PROP_SEED=<seed> cargo test <name>`.
+
+use crate::util::rng::SplitMix64;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Read the base seed from `PROP_SEED` (default 0xD15D1).
+pub fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD15D1)
+}
+
+/// Run `property(rng, case_index)` for `cases` cases, panicking with a
+/// reproducible seed report on the first failure.
+pub fn prop_check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut SplitMix64, usize) -> Result<(), String>,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = SplitMix64::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = property(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a random shape with `rank` dims, each in `[lo, hi)`.
+pub fn random_shape(rng: &mut SplitMix64, rank: usize, lo: usize, hi: usize) -> Vec<usize> {
+    (0..rank).map(|_| rng.range(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        prop_check("trivial", 10, |_, _| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports() {
+        prop_check("fails", 5, |rng, _| {
+            if rng.next_f64() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shapes_in_range() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..50 {
+            let s = random_shape(&mut rng, 3, 2, 7);
+            assert_eq!(s.len(), 3);
+            assert!(s.iter().all(|&d| (2..7).contains(&d)));
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Hand-rolled utility substrates.
+//!
+//! The build environment is offline and the vendored crate set does not
+//! include serde_json, rand, or similar — so, in the spirit of the paper's
+//! "build every substrate" reproduction, this module provides the small
+//! pieces the system needs: a deterministic PRNG ([`rng`]), a minimal JSON
+//! parser/writer ([`json`]) for artifact manifests / configs / metric
+//! dumps, and a timing helper ([`timer`]).
+
+pub mod json;
+pub mod rng;
+pub mod timer;

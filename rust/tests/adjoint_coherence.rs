@@ -1,0 +1,157 @@
+//! E1 — the paper's verification methodology (Eq. 13) applied to every
+//! primitive, across worker counts, tensor shapes and partitions.
+//!
+//! "Fortunately, data movement operations are linear and we can exploit
+//! the fact that the forward operator is its own Jacobian ... to establish
+//! an equivalent test for correctness." The full sweep also runs from the
+//! CLI (`distdl adjoint-test`) and as a bench.
+
+use distdl::adjoint::{adjoint_residual, assert_coherent, linearity_residual};
+use distdl::coordinator::suites::suite_cases;
+use distdl::halo::{HaloGeometry, KernelSpec};
+use distdl::partition::{Partition, TensorDecomposition};
+use distdl::primitives::*;
+
+#[test]
+fn full_suite_is_coherent() {
+    for scale in [4, 16] {
+        for case in suite_cases(scale).unwrap() {
+            let r = adjoint_residual(case.world, case.op.as_ref(), 0xC0FE).unwrap();
+            assert!(
+                r < 1e-12,
+                "{} (scale {scale}): residual {r:.3e}",
+                case.label
+            );
+        }
+    }
+}
+
+#[test]
+fn full_suite_is_linear() {
+    for case in suite_cases(8).unwrap() {
+        let r = linearity_residual(case.world, case.op.as_ref(), 0x11EA).unwrap();
+        assert!(r < 1e-10, "{}: linearity residual {r:.3e}", case.label);
+    }
+}
+
+#[test]
+fn broadcast_wide_worlds() {
+    // log-tree broadcast must stay coherent at non-power-of-two widths
+    for world in [3, 5, 6, 7, 12, 16] {
+        let op = Broadcast::replicate(0, world, &[9], 1).unwrap();
+        assert_coherent::<f64>(world, &op, world as u64);
+        let op = SumReduce::to_root(world - 1, world, &[4, 3], 60).unwrap();
+        assert_coherent::<f64>(world, &op, world as u64 + 31);
+    }
+}
+
+#[test]
+fn repartition_many_geometries() {
+    let mk = |shape: &[usize], grid: &[usize]| {
+        TensorDecomposition::new(Partition::from_shape(grid), shape).unwrap()
+    };
+    let cases = [
+        (vec![12, 12], vec![4, 1], vec![1, 4]),
+        (vec![13, 7], vec![2, 2], vec![4, 1]),
+        (vec![5, 5, 5], vec![1, 1, 4], vec![4, 1, 1]),
+        (vec![30], vec![4], vec![2]),
+    ];
+    for (shape, g1, g2) in cases {
+        let op = Repartition::new(mk(&shape, &g1), mk(&shape, &g2), 7).unwrap();
+        assert_coherent::<f64>(4, &op, 99);
+    }
+}
+
+#[test]
+fn halo_exchange_stride_dilation_padding_matrix() {
+    // a grid of kernel configurations, all must be coherent
+    for (k, s, dil, pad) in [
+        (3usize, 1usize, 1usize, 0usize),
+        (3, 1, 1, 1),
+        (5, 2, 1, 2),
+        (2, 2, 1, 0),
+        (3, 1, 2, 0),
+        (4, 3, 1, 1),
+    ] {
+        let spec = KernelSpec {
+            size: k,
+            stride: s,
+            dilation: dil,
+            pad_lo: pad,
+            pad_hi: pad,
+        };
+        let n = 29;
+        let p = 3;
+        if spec.output_size(n).is_err() {
+            continue;
+        }
+        let Ok(geom) = HaloGeometry::new(&[n], &[p], &[spec]) else {
+            continue;
+        };
+        let op = HaloExchange::new(Partition::from_shape(&[p]), geom.clone(), 11).unwrap();
+        let r = adjoint_residual::<f64>(p, &op, 0xDEED).unwrap();
+        assert!(r < 1e-12, "halo k={k} s={s} dil={dil} pad={pad}: {r:.3e}");
+        let shim = TrimPad::new(Partition::from_shape(&[p]), geom);
+        let r = adjoint_residual::<f64>(p, &shim, 0xFEED).unwrap();
+        assert!(r < 1e-12, "shim k={k} s={s} dil={dil} pad={pad}: {r:.3e}");
+    }
+}
+
+#[test]
+fn composition_is_coherent() {
+    // H followed by TrimPad: (T∘H)* = H*∘T* — composition test through a
+    // tiny wrapper operator.
+    use distdl::adjoint::DistLinearOp;
+    use distdl::comm::Comm;
+    use distdl::tensor::Tensor;
+
+    struct Composed {
+        h: HaloExchange,
+        t: TrimPad,
+    }
+    impl DistLinearOp<f64> for Composed {
+        fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+            <HaloExchange as DistLinearOp<f64>>::domain_shape(&self.h, rank)
+        }
+        fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+            <TrimPad as DistLinearOp<f64>>::codomain_shape(&self.t, rank)
+        }
+        fn forward(
+            &self,
+            comm: &mut Comm,
+            x: Option<Tensor<f64>>,
+        ) -> distdl::Result<Option<Tensor<f64>>> {
+            let mid = self.h.forward(comm, x)?;
+            self.t.forward(comm, mid)
+        }
+        fn adjoint(
+            &self,
+            comm: &mut Comm,
+            y: Option<Tensor<f64>>,
+        ) -> distdl::Result<Option<Tensor<f64>>> {
+            let mid = self.t.adjoint(comm, y)?;
+            self.h.adjoint(comm, mid)
+        }
+        fn name(&self) -> String {
+            "TrimPad∘HaloExchange".into()
+        }
+    }
+
+    let geom = HaloGeometry::new(&[20], &[6], &[KernelSpec::pool(2, 2)]).unwrap();
+    let op = Composed {
+        h: HaloExchange::new(Partition::from_shape(&[6]), geom.clone(), 21).unwrap(),
+        t: TrimPad::new(Partition::from_shape(&[6]), geom),
+    };
+    assert_coherent::<f64>(6, &op, 0xABCD);
+}
+
+#[test]
+fn f32_residuals_scale_with_precision() {
+    // Same operator, both scalar types: f64 residual ~1e-15, f32 ~1e-7 —
+    // evidence the residual is rounding noise, not a structural error.
+    let op = Broadcast::replicate(0, 4, &[32, 32], 5).unwrap();
+    let r64 = adjoint_residual::<f64>(4, &op, 1).unwrap();
+    let r32 = adjoint_residual::<f32>(4, &op, 1).unwrap();
+    assert!(r64 < 1e-12);
+    assert!(r32 < 1e-4);
+}

@@ -1,0 +1,176 @@
+//! E2–E6 — the Appendix B halo-geometry case studies, regenerated and
+//! asserted figure by figure, plus the B.2 two-dimensional unbalanced
+//! forward/adjoint exchange (Figs. B6–B9).
+
+use distdl::adjoint::{assert_coherent, DistLinearOp};
+use distdl::comm::Cluster;
+use distdl::halo::{dim_halos, KernelSpec};
+use distdl::halo::HaloGeometry;
+use distdl::partition::Partition;
+use distdl::primitives::HaloExchange;
+use distdl::tensor::Tensor;
+
+/// Fig. B2 — "normal" convolution: k=5 centered, width-2 padding, n=11,
+/// P=3 ⇒ *uniform* halo sizes of width 2.
+#[test]
+fn fig_b2() {
+    let h = dim_halos(11, 3, &KernelSpec::padded(5, 2)).unwrap();
+    assert_eq!(
+        h.iter().map(|x| (x.left_halo, x.right_halo)).collect::<Vec<_>>(),
+        vec![(0, 2), (2, 2), (2, 0)]
+    );
+    // boundary workers absorb the implicit zero padding instead
+    assert_eq!((h[0].left_zero_pad, h[2].right_zero_pad), (2, 2));
+    // perfectly balanced: every worker computes from an 18-wide... (here
+    // compute_len = pad/halo(2) + own + halo(2))
+    assert!(h.iter().all(|x| x.compute_len() == x.out_len + 4));
+}
+
+/// Fig. B3 — unbalanced convolution: k=5 centered, no padding, n=11, P=3
+/// ⇒ "the first and last workers have large, one-sided halos and the
+/// middle worker has small, balanced halos".
+#[test]
+fn fig_b3() {
+    let h = dim_halos(11, 3, &KernelSpec::plain(5)).unwrap();
+    let halos: Vec<_> = h.iter().map(|x| (x.left_halo, x.right_halo)).collect();
+    assert_eq!(halos, vec![(0, 3), (1, 1), (3, 0)]);
+    // large and one-sided at the edges:
+    assert!(halos[0].1 >= 3 && halos[0].0 == 0);
+    assert!(halos[2].0 >= 3 && halos[2].1 == 0);
+    // small and balanced in the middle:
+    assert_eq!(halos[1].0, halos[1].1);
+}
+
+/// Fig. B4 — simple unbalanced pooling: k=2 right-looking, s=2, n=11,
+/// P=3 under the balanced-output convention of Fig. B5 (the B4 prose in
+/// the paper describes a different worker assignment than B5's
+/// convention produces; B5 — same kernel, larger case — matches our
+/// formulas exactly, so we pin B4 to the same convention and record the
+/// discrepancy in EXPERIMENTS.md E4).
+#[test]
+fn fig_b4() {
+    let h = dim_halos(11, 3, &KernelSpec::pool(2, 2)).unwrap();
+    // outputs {2,2,1}: needs [0,4), [4,8), [8,10)
+    assert_eq!(
+        h.iter().map(|x| (x.out_start, x.out_len)).collect::<Vec<_>>(),
+        vec![(0, 2), (2, 2), (4, 1)]
+    );
+    // no halos anywhere; the unused "extra input" appears on worker 2
+    assert!(h.iter().all(|x| x.left_halo == 0 && x.right_halo == 0));
+    assert_eq!(h[2].right_unused, 1);
+    // the paper's headline point survives: unbalanced structure with
+    // entries that "must be removed when the input is provided to the
+    // local pooling operator"
+    assert!(h.iter().any(|x| x.left_unused + x.right_unused > 0));
+}
+
+/// Fig. B5 — complex unbalanced pooling: k=2 right-looking, s=2, n=20,
+/// P=6 — matches the paper's prose worker by worker.
+#[test]
+fn fig_b5() {
+    let h = dim_halos(20, 6, &KernelSpec::pool(2, 2)).unwrap();
+    // "For the first and second workers, there are no halos."
+    assert_eq!((h[0].left_halo, h[0].right_halo), (0, 0));
+    assert_eq!((h[1].left_halo, h[1].right_halo), (0, 0));
+    // "The third worker has a right halo but no left halo."
+    assert_eq!(h[2].left_halo, 0);
+    assert!(h[2].right_halo > 0);
+    // "The 4th worker has 1 extra input on the left and a halo of length
+    //  2 on the right."
+    assert_eq!((h[3].left_unused, h[3].right_halo), (1, 2));
+    // "The 5th worker has 2 extra input on the left and a halo of length
+    //  1 on the right."
+    assert_eq!((h[4].left_unused, h[4].right_halo), (2, 1));
+    // "The final worker has no halos, but one extra input on the left."
+    assert_eq!((h[5].left_halo, h[5].right_halo, h[5].left_unused), (0, 0, 1));
+}
+
+/// Figs. B6–B9 — the rank-2, P=2×2 generalized unbalanced exchange: the
+/// forward fills every halo with the owning neighbour's data (including
+/// corners, via nesting) and the adjoint pushes cotangents back with
+/// *adds into the bulk* and clears the halos.
+#[test]
+fn figs_b6_to_b9_forward_and_adjoint_2d() {
+    // Unequal but balanced decomposition from asymmetric kernels.
+    let geom = HaloGeometry::new(
+        &[9, 7],
+        &[2, 2],
+        &[KernelSpec::plain(4), KernelSpec::plain(3)],
+    )
+    .unwrap();
+    let part = Partition::from_shape(&[2, 2]);
+    let op = HaloExchange::new(part.clone(), geom.clone(), 500).unwrap();
+
+    // Forward: every halo cell must equal the global value it mirrors.
+    let outputs = Cluster::run(4, |comm| {
+        let coords = part.coords_of(comm.rank()).unwrap();
+        let halos = op.halos_at(&coords);
+        let mut buf = Tensor::<f64>::filled(&op.buffer_shape(&coords), -1.0);
+        for r in 0..halos[0].in_len {
+            for c in 0..halos[1].in_len {
+                *buf.at_mut(&[halos[0].left_halo + r, halos[1].left_halo + c]) =
+                    ((halos[0].in_start + r) * 100 + halos[1].in_start + c) as f64;
+            }
+        }
+        let out = op.forward(comm, Some(buf))?.unwrap();
+        // every cell of the buffer maps to global (row, col):
+        for r in 0..out.shape()[0] {
+            for c in 0..out.shape()[1] {
+                let grow = halos[0].in_start - halos[0].left_halo + r;
+                let gcol = halos[1].in_start - halos[1].left_halo + c;
+                assert_eq!(
+                    out.at(&[r, c]),
+                    (grow * 100 + gcol) as f64,
+                    "rank {} cell ({r},{c})",
+                    comm.rank()
+                );
+            }
+        }
+        Ok(out)
+    })
+    .unwrap();
+    assert_eq!(outputs.len(), 4);
+
+    // Adjoint: with all-ones cotangents, each bulk cell accumulates
+    // 1 + (number of remote halos mirroring it); halos end cleared; the
+    // global sum is conserved (adds, never drops).
+    let adj = Cluster::run(4, |comm| {
+        let coords = part.coords_of(comm.rank()).unwrap();
+        let buf = Tensor::<f64>::filled(&op.buffer_shape(&coords), 1.0);
+        Ok(op.adjoint(comm, Some(buf))?.unwrap())
+    })
+    .unwrap();
+    let mut total = 0.0;
+    let mut buffer_cells = 0usize;
+    for (rank, out) in adj.iter().enumerate() {
+        let coords = part.coords_of(rank).unwrap();
+        let halos = op.halos_at(&coords);
+        buffer_cells += out.numel();
+        total += out.sum();
+        // halo regions cleared
+        for r in 0..out.shape()[0] {
+            for c in 0..out.shape()[1] {
+                let in_bulk = r >= halos[0].left_halo
+                    && r < halos[0].left_halo + halos[0].in_len
+                    && c >= halos[1].left_halo
+                    && c < halos[1].left_halo + halos[1].in_len;
+                if !in_bulk {
+                    assert_eq!(out.at(&[r, c]), 0.0, "rank {rank} halo not cleared");
+                }
+            }
+        }
+    }
+    // conservation: total mass equals the number of buffer cells seeded
+    assert_eq!(total, buffer_cells as f64);
+    // and of course Eq. (13) holds for this geometry
+    assert_coherent::<f64>(4, &op, 0xB6B9);
+}
+
+/// Halos wider than a direct neighbour's bulk are rejected with the
+/// paper's "sensibly decomposed" assumption named in the error.
+#[test]
+fn unreachable_halo_rejected() {
+    let err = dim_halos(8, 4, &KernelSpec::plain(7)).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("sensibly"), "{msg}");
+}

@@ -1,0 +1,279 @@
+//! Cross-module integration tests: the PJRT runtime against the native
+//! kernels (the L1/L2 ⇄ L3 bridge), Table 1, and layer-level distributed
+//! correctness.
+//!
+//! The PJRT tests require `make artifacts` to have run; they are skipped
+//! (with a notice) when `artifacts/manifest.json` is absent so that
+//! `cargo test` stays meaningful on a fresh checkout.
+
+use distdl::comm::Cluster;
+use distdl::config::{Backend, TrainConfig};
+use distdl::models::{lenet5, LeNetConfig, LeNetLayout};
+use distdl::nn::kernels::LocalKernels;
+use distdl::nn::native::Conv2dSpec;
+use distdl::nn::NativeKernels;
+use distdl::runtime::PjrtKernels;
+use distdl::tensor::Tensor;
+use distdl::util::rng::SplitMix64;
+use std::sync::Arc;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn rand_t(shape: &[usize], rng: &mut SplitMix64) -> Tensor<f32> {
+    Tensor::from_vec(
+        shape,
+        (0..shape.iter().product::<usize>())
+            .map(|_| rng.next_f64() as f32 - 0.5)
+            .collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn pjrt_conv_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let pjrt = PjrtKernels::load("artifacts").unwrap();
+    let native = NativeKernels;
+    let mut rng = SplitMix64::new(1);
+    // the C1-distributed local shape, batch 8 (a generated artifact)
+    let x = rand_t(&[8, 1, 18, 18], &mut rng);
+    let w = rand_t(&[6, 1, 5, 5], &mut rng);
+    let b = rand_t(&[6], &mut rng);
+    let spec = Conv2dSpec::default();
+    let y_pjrt = pjrt.conv2d_forward(&x, &w, Some(&b), spec).unwrap();
+    let y_native = native.conv2d_forward(&x, &w, Some(&b), spec).unwrap();
+    assert_eq!(y_pjrt.shape(), &[8, 6, 14, 14]);
+    assert!(
+        y_pjrt.allclose(&y_native, 1e-4, 1e-4),
+        "XLA/Pallas conv diverges from native: max|Δ| = {:.3e}",
+        y_pjrt.max_abs_diff(&y_native).unwrap()
+    );
+    assert!(pjrt.hits.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+    // backward
+    let dy = rand_t(&[8, 6, 14, 14], &mut rng);
+    let (dx_p, dw_p, db_p) = pjrt.conv2d_backward(&x, &w, &dy, spec).unwrap();
+    let (dx_n, dw_n, db_n) = native.conv2d_backward(&x, &w, &dy, spec).unwrap();
+    assert!(dx_p.allclose(&dx_n, 1e-3, 1e-3));
+    assert!(dw_p.allclose(&dw_n, 1e-3, 1e-3));
+    assert!(db_p.allclose(&db_n, 1e-3, 1e-3));
+}
+
+#[test]
+fn pjrt_affine_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let pjrt = PjrtKernels::load("artifacts").unwrap();
+    let native = NativeKernels;
+    let mut rng = SplitMix64::new(2);
+    let x = rand_t(&[16, 200], &mut rng);
+    let w = rand_t(&[60, 200], &mut rng);
+    let b = rand_t(&[60], &mut rng);
+    let y_p = pjrt.affine_forward(&x, &w, Some(&b)).unwrap();
+    let y_n = native.affine_forward(&x, &w, Some(&b)).unwrap();
+    assert!(y_p.allclose(&y_n, 1e-3, 1e-3));
+    // no-bias variant (the non-bias weight-grid cells)
+    let y_p = pjrt.affine_forward(&x, &w, None).unwrap();
+    let y_n = native.affine_forward(&x, &w, None).unwrap();
+    assert!(y_p.allclose(&y_n, 1e-3, 1e-3));
+    // backward
+    let dy = rand_t(&[16, 60], &mut rng);
+    let (dx_p, dw_p, db_p) = pjrt.affine_backward(&x, &w, &dy).unwrap();
+    let (dx_n, dw_n, db_n) = native.affine_backward(&x, &w, &dy).unwrap();
+    assert!(dx_p.allclose(&dx_n, 1e-3, 1e-3));
+    assert!(dw_p.allclose(&dw_n, 1e-3, 1e-3));
+    assert!(db_p.allclose(&db_n, 1e-3, 1e-3));
+}
+
+#[test]
+fn pjrt_fallback_on_unknown_shape() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let pjrt = PjrtKernels::load("artifacts").unwrap();
+    let mut rng = SplitMix64::new(3);
+    // a shape no artifact was generated for
+    let x = rand_t(&[3, 2, 7, 7], &mut rng);
+    let w = rand_t(&[4, 2, 3, 3], &mut rng);
+    let y = pjrt
+        .conv2d_forward(&x, &w, Some(&rand_t(&[4], &mut rng)), Conv2dSpec::default())
+        .unwrap();
+    assert_eq!(y.shape(), &[3, 4, 5, 5]);
+    assert!(pjrt.misses.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn pjrt_distributed_training_step_runs() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // Full distributed LeNet with the PJRT backend: the production stack.
+    let cfg = TrainConfig {
+        batch: 8,
+        steps: 2,
+        dataset: 64,
+        distributed: true,
+        backend: Backend::Pjrt,
+        ..TrainConfig::default()
+    };
+    let report = distdl::coordinator::train(&cfg).unwrap();
+    assert!(report.log.steps.iter().all(|s| s.loss.is_finite()));
+}
+
+#[test]
+fn pjrt_and_native_training_agree() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let base = TrainConfig {
+        batch: 8,
+        steps: 3,
+        dataset: 64,
+        distributed: true,
+        seed: 9,
+        ..TrainConfig::default()
+    };
+    let mut native_cfg = base.clone();
+    native_cfg.backend = Backend::Native;
+    let mut pjrt_cfg = base;
+    pjrt_cfg.backend = Backend::Pjrt;
+    let native = distdl::coordinator::train(&native_cfg).unwrap();
+    let pjrt = distdl::coordinator::train(&pjrt_cfg).unwrap();
+    for (a, b) in native.log.steps.iter().zip(pjrt.log.steps.iter()) {
+        assert!(
+            (a.loss - b.loss).abs() < 1e-2 * (1.0 + a.loss.abs()),
+            "step {}: native {} vs pjrt {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+#[test]
+fn table1_parameter_placement() {
+    // E8 — Table 1: learnable parameters per worker per layer.
+    let net = lenet5::<f32>(
+        &LeNetConfig {
+            batch: 256,
+            layout: LeNetLayout::FourWorker,
+        },
+        Arc::new(NativeKernels),
+    )
+    .unwrap();
+    let placement: Vec<_> = (0..4).map(|r| net.placement_report(r)).collect();
+    let find = |layer: &str, rank: usize| -> Vec<(String, Vec<usize>)> {
+        placement[rank]
+            .iter()
+            .find(|(n, _)| n == layer)
+            .map(|(_, p)| p.clone())
+            .unwrap()
+    };
+    // C1: w (6,1,5,5), b (6) on worker 0 only
+    assert_eq!(
+        find("C1", 0),
+        vec![("w".to_string(), vec![6, 1, 5, 5]), ("b".to_string(), vec![6])]
+    );
+    for r in 1..4 {
+        assert!(find("C1", r).is_empty(), "worker {r} must not hold C1 params");
+    }
+    // C3: w (16,6,5,5), b (16) on worker 0 only
+    assert_eq!(
+        find("C3", 0),
+        vec![("w".to_string(), vec![16, 6, 5, 5]), ("b".to_string(), vec![16])]
+    );
+    // C5: w (60,200) everywhere; b (60) on workers 0 and 2
+    for r in 0..4 {
+        let p = find("C5", r);
+        assert_eq!(p[0], ("w".to_string(), vec![60, 200]), "worker {r}");
+        if r == 0 || r == 2 {
+            assert_eq!(p[1], ("b".to_string(), vec![60]), "worker {r}");
+        } else {
+            assert_eq!(p.len(), 1, "worker {r} must not hold C5 bias");
+        }
+    }
+    // F6: w (42,60); Output: w (5,42); bias on workers 0,2
+    for r in 0..4 {
+        assert_eq!(find("F6", r)[0].1, vec![42, 60]);
+        assert_eq!(find("Output", r)[0].1, vec![5, 42]);
+    }
+    assert_eq!(find("F6", 2)[1].1, vec![42]);
+    assert_eq!(find("Output", 0)[1].1, vec![5]);
+}
+
+#[test]
+fn pool_layer_distributed_matches_sequential() {
+    use distdl::nn::layers::{DistPool2d, Pool2dConfig};
+    use distdl::nn::native::PoolMode;
+    use distdl::autograd::Layer;
+    // 4-worker max pool against single-worker max pool on the same global
+    // tensor (B4/B5-style unbalanced halos exercised via 10x10 -> 5x5).
+    let global = Tensor::<f64>::from_fn(&[2, 3, 10, 10], |i| {
+        ((i[0] * 313 + i[1] * 71 + i[2] * 13 + i[3] * 7) % 97) as f64
+    });
+    let make = |grid: (usize, usize), ranks: Vec<usize>| {
+        DistPool2d::<f64>::new(
+            "pool",
+            Pool2dConfig {
+                global_in: [2, 3, 10, 10],
+                kernel: (2, 2),
+                stride: (2, 2),
+                mode: PoolMode::Max,
+                grid,
+                ranks,
+                tag: 100,
+            },
+            Arc::new(NativeKernels),
+        )
+        .unwrap()
+    };
+    // sequential
+    let seq = make((1, 1), vec![0]);
+    let seq_out = Cluster::run(1, |comm| {
+        let mut st = seq.init(0, 0)?;
+        Ok(seq
+            .forward(&mut st, comm, Some(global.clone()), false)?
+            .unwrap())
+    })
+    .unwrap()
+    .remove(0);
+    // distributed over 2x2
+    let dist = make((2, 2), vec![0, 1, 2, 3]);
+    let in_decomp = distdl::partition::TensorDecomposition::new(
+        distdl::partition::Partition::new(vec![1, 1, 2, 2], vec![0, 1, 2, 3]).unwrap(),
+        &[2, 3, 10, 10],
+    )
+    .unwrap();
+    let out_decomp = distdl::partition::TensorDecomposition::new(
+        distdl::partition::Partition::new(vec![1, 1, 2, 2], vec![0, 1, 2, 3]).unwrap(),
+        &[2, 3, 5, 5],
+    )
+    .unwrap();
+    let shards = Cluster::run(4, |comm| {
+        let mut st = dist.init(comm.rank(), 0)?;
+        let local = global
+            .extract_region(&in_decomp.region_of(comm.rank()).unwrap())
+            .unwrap();
+        Ok(dist.forward(&mut st, comm, Some(local), false)?.unwrap())
+    })
+    .unwrap();
+    // reassemble and compare
+    let mut assembled = Tensor::<f64>::zeros(&[2, 3, 5, 5]);
+    for (rank, shard) in shards.into_iter().enumerate() {
+        let region = out_decomp.region_of(rank).unwrap();
+        assembled
+            .copy_region_from(&shard, &distdl::tensor::Region::full(&region.shape), &region.start)
+            .unwrap();
+    }
+    assert_eq!(assembled, seq_out);
+}

@@ -1,0 +1,266 @@
+//! Property-based tests (hand-rolled harness, see `distdl::testing::prop`)
+//! over randomized shapes, partitions and kernel parameters.
+//!
+//! Invariants:
+//! * Eq. (13) adjoint coherence for randomly-configured primitives;
+//! * repartition round-trip = identity; gather∘scatter = identity;
+//! * halo geometry covers exactly each worker's needed input span;
+//! * distributed sparse layers reproduce the sequential kernel exactly.
+
+use distdl::adjoint::adjoint_residual;
+use distdl::comm::Cluster;
+use distdl::halo::{dim_halos, HaloGeometry, KernelSpec};
+use distdl::partition::{Partition, TensorDecomposition};
+use distdl::primitives::{Broadcast, Gather, HaloExchange, Repartition, Scatter, TrimPad};
+use distdl::tensor::{Region, Tensor};
+use distdl::testing::prop::{prop_check, random_shape};
+use distdl::util::rng::SplitMix64;
+
+fn random_tensor(shape: &[usize], rng: &mut SplitMix64) -> Tensor<f64> {
+    Tensor::from_vec(
+        shape,
+        (0..shape.iter().product()).map(|_| rng.next_f64() - 0.5).collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn prop_broadcast_coherent_random_topology() {
+    prop_check("broadcast coherent", 24, |rng, case| {
+        let world = rng.range(1, 9);
+        let root = rng.below(world);
+        let rank = rng.range(1, 4);
+        let shape = random_shape(rng, rank, 1, 6);
+        let op = Broadcast::replicate(root, world, &shape, 3)
+            .map_err(|e| format!("build: {e}"))?;
+        let r = adjoint_residual::<f64>(world, &op, case as u64)
+            .map_err(|e| format!("run: {e}"))?;
+        if r < 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("world {world} root {root} shape {shape:?}: residual {r:.3e}"))
+        }
+    });
+}
+
+#[test]
+fn prop_repartition_roundtrip_identity() {
+    prop_check("repartition roundtrip", 24, |rng, _| {
+        let rank = rng.range(1, 4);
+        let shape = random_shape(rng, rank, 2, 10);
+        // two random grids with ≤ 6 workers
+        let grid = |rng: &mut SplitMix64| -> Vec<usize> {
+            (0..rank)
+                .map(|_| if rng.next_f64() < 0.5 { 1 } else { rng.range(1, 4) })
+                .collect()
+        };
+        let g1 = grid(rng);
+        let g2 = grid(rng);
+        let w1: usize = g1.iter().product();
+        let w2: usize = g2.iter().product();
+        let world = w1.max(w2);
+        let d1 = TensorDecomposition::new(Partition::from_shape(&g1), &shape).unwrap();
+        let d2 = TensorDecomposition::new(Partition::from_shape(&g2), &shape).unwrap();
+        let fwd = Repartition::new(d1.clone(), d2.clone(), 5).unwrap();
+        let back = Repartition::new(d2, d1.clone(), 6).unwrap();
+        let seed = rng.next_u64();
+        let ok = Cluster::run(world, |comm| {
+            let mut r = SplitMix64::new(seed ^ comm.rank() as u64);
+            let x = d1
+                .region_of(comm.rank())
+                .map(|reg| random_tensor(&reg.shape, &mut r));
+            let mid = distdl::adjoint::DistLinearOp::forward(&fwd, comm, x.clone())?;
+            let round = distdl::adjoint::DistLinearOp::forward(&back, comm, mid)?;
+            Ok(round == x)
+        })
+        .map_err(|e| format!("{e}"))?;
+        if ok.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!("roundtrip broke: shape {shape:?} {g1:?}→{g2:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_gather_of_scatter_identity() {
+    prop_check("gather∘scatter identity", 20, |rng, _| {
+        let rank = rng.range(1, 3);
+        let shape = random_shape(rng, rank, 1, 12);
+        let grid = random_shape(rng, rank, 1, 4);
+        let world: usize = grid.iter().product();
+        let root = rng.below(world);
+        let d = TensorDecomposition::new(Partition::from_shape(&grid), &shape).unwrap();
+        let sc = Scatter::new(d.clone(), root, 7);
+        let ga = Gather::new(d, root, 8);
+        let seed = rng.next_u64();
+        let ok = Cluster::run(world, |comm| {
+            let mut r = SplitMix64::new(seed);
+            let x = (comm.rank() == root).then(|| random_tensor(&shape, &mut r));
+            let shards = distdl::adjoint::DistLinearOp::forward(&sc, comm, x.clone())?;
+            let back = distdl::adjoint::DistLinearOp::forward(&ga, comm, shards)?;
+            Ok(back == x)
+        })
+        .map_err(|e| format!("{e}"))?;
+        if ok.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!("identity broke: shape {shape:?} grid {grid:?} root {root}"))
+        }
+    });
+}
+
+#[test]
+fn prop_halo_geometry_covers_needed_span() {
+    prop_check("halo covers span", 120, |rng, _| {
+        let n = rng.range(6, 80);
+        let p = rng.range(1, 6);
+        let k = rng.range(1, 7);
+        let s = rng.range(1, 4);
+        let pad = rng.range(0, k);
+        let spec = KernelSpec {
+            size: k,
+            stride: s,
+            dilation: rng.range(1, 3),
+            pad_lo: pad,
+            pad_hi: pad,
+        };
+        if spec.output_size(n).is_err() {
+            return Ok(()); // degenerate kernel
+        }
+        let Ok(halos) = dim_halos(n, p, &spec) else {
+            return Ok(()); // legitimately rejected (beyond direct neighbour)
+        };
+        for h in &halos {
+            if h.out_len == 0 {
+                continue;
+            }
+            let need_lo = (h.out_start * s) as i64 - pad as i64;
+            let need_hi = ((h.out_start + h.out_len - 1) * s + spec.extent()) as i64 - pad as i64;
+            if h.compute_len() as i64 != need_hi - need_lo {
+                return Err(format!("n={n} p={p} spec={spec:?}: {h:?}"));
+            }
+        }
+        // halos + bulks tile the input exactly once per owner
+        let covered: usize = halos.iter().map(|h| h.in_len).sum();
+        if covered != n {
+            return Err(format!("ownership does not cover input: {covered} != {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_halo_exchange_coherent_random() {
+    prop_check("halo exchange coherent", 16, |rng, case| {
+        let p = rng.range(2, 5);
+        let n = rng.range(4 * p, 8 * p);
+        let k = rng.range(2, 5);
+        let pad = rng.range(0, k.min(2));
+        let spec = KernelSpec {
+            size: k,
+            stride: rng.range(1, 3),
+            dilation: 1,
+            pad_lo: pad,
+            pad_hi: pad,
+        };
+        if spec.output_size(n).is_err() {
+            return Ok(());
+        }
+        let Ok(geom) = HaloGeometry::new(&[n], &[p], &[spec]) else {
+            return Ok(());
+        };
+        let part = Partition::from_shape(&[p]);
+        let op = HaloExchange::new(part.clone(), geom.clone(), 9).unwrap();
+        let r = adjoint_residual::<f64>(p, &op, case as u64)
+            .map_err(|e| format!("{e}"))?;
+        if r >= 1e-12 {
+            return Err(format!("exchange n={n} p={p} {spec:?}: residual {r:.3e}"));
+        }
+        let shim = TrimPad::new(part, geom);
+        let r = adjoint_residual::<f64>(p, &shim, case as u64).map_err(|e| format!("{e}"))?;
+        if r >= 1e-12 {
+            return Err(format!("shim n={n} p={p} {spec:?}: residual {r:.3e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_distributed_conv_matches_sequential_kernel() {
+    use distdl::nn::native::{conv2d_forward, Conv2dSpec};
+    // Random global tensors + partitions: exchange/trim/local-conv must
+    // reproduce the global valid convolution exactly (f64).
+    prop_check("dist conv ≡ seq conv", 10, |rng, _| {
+        let b = rng.range(1, 3);
+        let ci = rng.range(1, 3);
+        let h = rng.range(10, 18);
+        let w = rng.range(10, 18);
+        let co = rng.range(1, 3);
+        let k = rng.range(2, 4);
+        let pad = rng.range(0, 2);
+        let ph = rng.range(1, 3);
+        let pw = rng.range(1, 3);
+        let world = ph * pw;
+        let kspec = KernelSpec {
+            size: k,
+            stride: 1,
+            dilation: 1,
+            pad_lo: pad,
+            pad_hi: pad,
+        };
+        let (oh, ow) = (kspec.output_size(h).unwrap(), kspec.output_size(w).unwrap());
+        let Ok(geom) = HaloGeometry::new(
+            &[b, ci, h, w],
+            &[1, 1, ph, pw],
+            &[KernelSpec::plain(1), KernelSpec::plain(1), kspec, kspec],
+        ) else {
+            return Ok(());
+        };
+        let grid = Partition::from_shape(&[1, 1, ph, pw]);
+        let exchange = HaloExchange::new(grid.clone(), geom.clone(), 31).unwrap();
+        let shim = TrimPad::new(grid.clone(), geom);
+        let seed = rng.next_u64();
+        let mut gen = SplitMix64::new(seed);
+        let x_global = random_tensor(&[b, ci, h, w], &mut gen);
+        let w_global = random_tensor(&[co, ci, k, k], &mut gen);
+        // sequential reference with materialised zero padding
+        let mut x_padded = Tensor::<f64>::zeros(&[b, ci, h + 2 * pad, w + 2 * pad]);
+        x_padded
+            .copy_region_from(&x_global, &Region::full(&[b, ci, h, w]), &[0, 0, pad, pad])
+            .unwrap();
+        let y_seq = conv2d_forward(&x_padded, &w_global, None, Conv2dSpec::default()).unwrap();
+        // distributed
+        let in_decomp = TensorDecomposition::new(grid.clone(), &[b, ci, h, w]).unwrap();
+        let out_decomp = TensorDecomposition::new(grid.clone(), &[b, co, oh, ow]).unwrap();
+        let shards = Cluster::run(world, |comm| {
+            let coords = grid.coords_of(comm.rank()).unwrap();
+            let local = x_global
+                .extract_region(&in_decomp.region_of(comm.rank()).unwrap())
+                .unwrap();
+            let mut buf = Tensor::<f64>::zeros(&exchange.buffer_shape(&coords));
+            let bulk = exchange.bulk_region(&coords);
+            buf.copy_region_from(&local, &Region::full(local.shape()), &bulk.start)?;
+            let buf = distdl::adjoint::DistLinearOp::forward(&exchange, comm, Some(buf))?
+                .unwrap();
+            let x_hat = shim.apply(&coords, &buf)?;
+            conv2d_forward(&x_hat, &w_global, None, Conv2dSpec::default())
+        })
+        .map_err(|e| format!("{e}"))?;
+        let mut y_dist = Tensor::<f64>::zeros(&[b, co, oh, ow]);
+        for (rank, shard) in shards.into_iter().enumerate() {
+            let region = out_decomp.region_of(rank).unwrap();
+            y_dist
+                .copy_region_from(&shard, &Region::full(&region.shape), &region.start)
+                .unwrap();
+        }
+        let diff = y_dist.max_abs_diff(&y_seq).unwrap();
+        if diff < 1e-11 {
+            Ok(())
+        } else {
+            Err(format!(
+                "dist conv diverges: b={b} ci={ci} h={h} w={w} k={k} pad={pad} grid={ph}x{pw}: {diff:.3e}"
+            ))
+        }
+    });
+}
