@@ -7,7 +7,7 @@
 //! cargo run --release --example adjoint_suite -- 64      # single scale
 //! ```
 
-use anyhow::Result;
+use distdl::error::Result;
 use distdl::coordinator::suites::run_adjoint_suite;
 
 fn main() -> Result<()> {

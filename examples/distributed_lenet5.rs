@@ -13,7 +13,7 @@
 //! cargo run --release --example distributed_lenet5 -- --backend pjrt
 //! ```
 
-use anyhow::Result;
+use distdl::error::Result;
 use distdl::cli::Args;
 use distdl::config::{Backend, TrainConfig};
 use distdl::coordinator::train;

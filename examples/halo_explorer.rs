@@ -7,7 +7,7 @@
 //! cargo run --release --example halo_explorer -- 37 4 5 2 1   # n P k s pad
 //! ```
 
-use anyhow::Result;
+use distdl::error::Result;
 use distdl::adjoint::DistLinearOp;
 use distdl::comm::Cluster;
 use distdl::coordinator::suites::print_halo_tables;

@@ -14,7 +14,7 @@ use distdl::halo::{HaloGeometry, KernelSpec};
 use distdl::partition::{Partition, TensorDecomposition};
 use distdl::primitives::{Broadcast, HaloExchange, Repartition, SumReduce};
 use distdl::tensor::Tensor;
-use anyhow::Result;
+use distdl::error::Result;
 
 fn main() -> Result<()> {
     println!("distdl quickstart — linear-algebraic model parallelism\n");

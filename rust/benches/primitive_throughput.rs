@@ -1,84 +1,203 @@
-//! Bench E10/E11 — collective primitive throughput: broadcast,
-//! sum-reduce, all-reduce, scatter/gather, all-to-all across worker
-//! counts and message sizes. Verifies the log-tree structure (broadcast
-//! cost growing ~log P, not ~P) and gives the per-primitive baseline the
-//! LeNet step decomposes into.
+//! Bench E10/E11 — collective primitive throughput on the nonblocking
+//! request engine, against the blocking/serializing baseline.
+//!
+//! Every primitive is timed twice over identical traffic:
+//!
+//! * `[blocking-wire]` — `Comm::set_wire_format(true)` forces the
+//!   length-checked serialize/deserialize wire path the seed engine used
+//!   for every message (the blocking baseline);
+//! * `[nonblocking]` — the default engine: post-all-then-complete
+//!   schedules with typed zero-copy `Arc` payloads.
+//!
+//! A raw comm-level microbench additionally isolates the *schedule* win:
+//! an 8-peer pairwise exchange with interleaved send→recv pairs versus
+//! posting every send and receive before completing any.
+//!
+//! The trailing table reports the per-benchmark speedup — the acceptance
+//! evidence that the nonblocking engine beats the blocking baseline.
 
 use distdl::adjoint::DistLinearOp;
-use distdl::comm::Cluster;
+use distdl::comm::{Cluster, Comm};
+use distdl::error::Result;
 use distdl::partition::{Partition, TensorDecomposition};
 use distdl::primitives::{AllReduce, Broadcast, Gather, Repartition, Scatter, SumReduce};
 use distdl::tensor::Tensor;
-use distdl::testing::bench::BenchGroup;
+use distdl::testing::bench::{BenchGroup, BenchResult};
 
-fn main() {
-    let mut g = BenchGroup::new("E10/E11: primitive throughput");
-    for p in [2usize, 4, 8, 16] {
-        for n in [1usize << 12, 1 << 16, 1 << 20] {
-            let bytes = n * 8;
-            let bcast = Broadcast::replicate(0, p, &[n], 1).unwrap();
-            g.bench_bytes(&format!("broadcast   P={p:<2} n={n}"), bytes * (p - 1), || {
-                Cluster::run(p, |comm| {
-                    let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
-                    bcast.forward(comm, x)
-                })
-                .unwrap();
-            });
-            let reduce = SumReduce::to_root(0, p, &[n], 2).unwrap();
-            g.bench_bytes(&format!("sum-reduce  P={p:<2} n={n}"), bytes * (p - 1), || {
-                Cluster::run(p, |comm| {
-                    let x = Some(Tensor::<f64>::zeros(&[n]));
-                    reduce.forward(comm, x)
-                })
-                .unwrap();
-            });
-            if p <= 8 {
-                let ranks: Vec<usize> = (0..p).collect();
-                let ar = AllReduce::new(&ranks, &[n], 3).unwrap();
-                g.bench_bytes(&format!("all-reduce  P={p:<2} n={n}"), 2 * bytes * (p - 1), || {
-                    Cluster::run(p, |comm| {
-                        let x = Some(Tensor::<f64>::zeros(&[n]));
-                        <AllReduce as DistLinearOp<f64>>::forward(&ar, comm, x)
-                    })
-                    .unwrap();
-                });
+const WIRE: &str = "blocking-wire";
+const NB: &str = "nonblocking";
+
+/// Run one collective body under both engines.
+fn bench_both<F>(g: &mut BenchGroup, name: &str, bytes: usize, world: usize, body: F)
+where
+    F: Fn(&mut Comm) -> Result<()> + Send + Sync + Copy,
+{
+    g.bench_bytes(&format!("{name} [{WIRE}]"), bytes, || {
+        Cluster::run(world, move |comm| {
+            comm.set_wire_format(true);
+            body(comm)
+        })
+        .unwrap();
+    });
+    g.bench_bytes(&format!("{name} [{NB}]"), bytes, || {
+        Cluster::run(world, body).unwrap();
+    });
+}
+
+fn report_speedup(results: &[BenchResult]) {
+    println!("\n== speedup: nonblocking zero-copy engine vs blocking wire baseline ==");
+    println!("{:<52} {:>10}", "benchmark", "speedup");
+    let nb_suffix = format!(" [{NB}]");
+    let wire_suffix = format!(" [{WIRE}]");
+    for r in results {
+        if let Some(base_name) = r.name.strip_suffix(nb_suffix.as_str()) {
+            let wire_name = format!("{base_name}{wire_suffix}");
+            if let Some(base) = results.iter().find(|x| x.name == wire_name) {
+                println!(
+                    "{:<52} {:>9.2}x",
+                    base_name,
+                    base.stats.median / r.stats.median
+                );
             }
         }
     }
-    // scatter / gather / all-to-all at fixed world 4
-    for n in [1usize << 12, 1 << 18] {
-        let d = TensorDecomposition::new(Partition::from_shape(&[4]), &[n]).unwrap();
-        let sc = Scatter::new(d.clone(), 0, 4);
-        g.bench_bytes(&format!("scatter     P=4  n={n}"), n * 8, || {
-            Cluster::run(4, |comm| {
-                let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
-                sc.forward(comm, x)
-            })
-            .unwrap();
-        });
-        let ga = Gather::new(d.clone(), 0, 5);
-        g.bench_bytes(&format!("gather      P=4  n={n}"), n * 8, || {
-            Cluster::run(4, |comm| {
-                let x = d.region_of(comm.rank()).map(|r| Tensor::<f64>::zeros(&r.shape));
-                ga.forward(comm, x)
-            })
-            .unwrap();
-        });
-        let side = (n as f64).sqrt() as usize;
-        let d1 = TensorDecomposition::new(Partition::from_shape(&[4, 1]), &[side, side]).unwrap();
-        let d2 = TensorDecomposition::new(Partition::from_shape(&[1, 4]), &[side, side]).unwrap();
-        let rep = Repartition::new(d1.clone(), d2, 6).unwrap();
+}
+
+fn main() {
+    let mut g = BenchGroup::new(
+        "E10/E11: primitive throughput — blocking-wire baseline vs nonblocking engine",
+    );
+
+    // Schedule isolation: pairwise exchange among 8 peers, interleaved
+    // send→recv pairs vs post-all-then-complete (both on the typed path).
+    {
+        let p = 8usize;
+        let n = 1usize << 14;
         g.bench_bytes(
-            &format!("all-to-all  P=4  {side}x{side}"),
-            side * side * 8,
+            &format!("pairwise P={p} n={n} interleaved send/recv"),
+            (p - 1) * n * 8,
             || {
-                Cluster::run(4, |comm| {
-                    let x = d1.region_of(comm.rank()).map(|r| Tensor::<f64>::zeros(&r.shape));
-                    rep.forward(comm, x)
+                Cluster::run(p, |comm| {
+                    let mine = vec![comm.rank() as f64; n];
+                    for peer in 0..comm.size() {
+                        if peer == comm.rank() {
+                            continue;
+                        }
+                        comm.send_slice::<f64>(peer, 1, &mine)?;
+                        let _ = comm.recv_vec::<f64>(peer, 1)?;
+                    }
+                    Ok(())
+                })
+                .unwrap();
+            },
+        );
+        g.bench_bytes(
+            &format!("pairwise P={p} n={n} post-all-then-wait"),
+            (p - 1) * n * 8,
+            || {
+                Cluster::run(p, |comm| {
+                    let mine = vec![comm.rank() as f64; n];
+                    let mut reqs = Vec::new();
+                    for peer in 0..comm.size() {
+                        if peer == comm.rank() {
+                            continue;
+                        }
+                        let s = comm.isend_slice::<f64>(peer, 1, &mine)?;
+                        comm.wait_send(s)?;
+                        reqs.push(comm.irecv::<f64>(peer, 1)?);
+                    }
+                    comm.wait_all(reqs)?;
+                    Ok(())
                 })
                 .unwrap();
             },
         );
     }
-    g.finish();
+
+    // Collective primitives under both engines.
+    for p in [2usize, 4, 8] {
+        for n in [1usize << 12, 1 << 16, 1 << 20] {
+            let bytes = n * 8;
+            let bcast = Broadcast::replicate(0, p, &[n], 1).unwrap();
+            bench_both(
+                &mut g,
+                &format!("broadcast   P={p:<2} n={n}"),
+                bytes * (p - 1),
+                p,
+                |comm| {
+                    let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
+                    bcast.forward(comm, x)?;
+                    Ok(())
+                },
+            );
+            let reduce = SumReduce::to_root(0, p, &[n], 2).unwrap();
+            bench_both(
+                &mut g,
+                &format!("sum-reduce  P={p:<2} n={n}"),
+                bytes * (p - 1),
+                p,
+                |comm| {
+                    let x = Some(Tensor::<f64>::zeros(&[n]));
+                    reduce.forward(comm, x)?;
+                    Ok(())
+                },
+            );
+            if n <= 1 << 16 {
+                let ranks: Vec<usize> = (0..p).collect();
+                let ar = AllReduce::new(&ranks, &[n], 3).unwrap();
+                bench_both(
+                    &mut g,
+                    &format!("all-reduce  P={p:<2} n={n}"),
+                    2 * bytes * (p - 1),
+                    p,
+                    |comm| {
+                        let x = Some(Tensor::<f64>::zeros(&[n]));
+                        <AllReduce as DistLinearOp<f64>>::forward(&ar, comm, x)?;
+                        Ok(())
+                    },
+                );
+            }
+        }
+    }
+
+    // scatter / gather / all-to-all at fixed world 4
+    for n in [1usize << 12, 1 << 18] {
+        let d = TensorDecomposition::new(Partition::from_shape(&[4]), &[n]).unwrap();
+        let sc = Scatter::new(d.clone(), 0, 4);
+        bench_both(&mut g, &format!("scatter     P=4  n={n}"), n * 8, 4, |comm| {
+            let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
+            sc.forward(comm, x)?;
+            Ok(())
+        });
+        let ga = Gather::new(d.clone(), 0, 5);
+        bench_both(&mut g, &format!("gather      P=4  n={n}"), n * 8, 4, |comm| {
+            let x = d
+                .region_of(comm.rank())
+                .map(|r| Tensor::<f64>::zeros(&r.shape));
+            ga.forward(comm, x)?;
+            Ok(())
+        });
+        let side = (n as f64).sqrt() as usize;
+        let d1 =
+            TensorDecomposition::new(Partition::from_shape(&[4, 1]), &[side, side]).unwrap();
+        let d2 =
+            TensorDecomposition::new(Partition::from_shape(&[1, 4]), &[side, side]).unwrap();
+        let rep = Repartition::new(d1.clone(), d2, 6).unwrap();
+        bench_both(
+            &mut g,
+            &format!("all-to-all  P=4  {side}x{side}"),
+            side * side * 8,
+            4,
+            |comm| {
+                let x = d1
+                    .region_of(comm.rank())
+                    .map(|r| Tensor::<f64>::zeros(&r.shape));
+                rep.forward(comm, x)?;
+                Ok(())
+            },
+        );
+    }
+
+    let results = g.finish();
+    report_speedup(&results);
 }

@@ -9,6 +9,12 @@
 //! optimizer step. Python never appears anywhere on this path; local
 //! compute goes through the configured [`LocalKernels`] backend (native
 //! Rust or AOT XLA/Pallas executables).
+//!
+//! On the nonblocking comm engine the loop is lightly pipelined: the next
+//! micro-batch's input tensor is prepared in the overlap window between
+//! the backward pass (whose gradient sum-reduce sends are posted eagerly)
+//! and the local optimizer step, and the engine's in-flight/wait-time
+//! counters are surfaced on the [`MetricLog`] (`comm_*` meta keys).
 
 use crate::autograd::NetworkState;
 use crate::comm::{Cluster, Comm};
@@ -80,12 +86,33 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         log.set_meta("backend", format!("{:?}", cfg.backend));
         log.set_meta("batch", cfg.batch);
         log.set_meta("lr", cfg.lr);
+        let rank = comm.rank();
+        // Micro-batch pipelining: the input tensor for step t+1 is
+        // prepared inside step t's overlap window (after the backward
+        // pass's gradient sends are posted, before the local optimizer
+        // step), so forward setup rides the tail of the gradient
+        // sum-reduce instead of serializing after it.
+        let mut next_x: Option<Tensor<f32>> =
+            (rank == 0).then(|| train_batches[0].images_as::<f32>());
         for step in 0..cfg.steps {
             let timer = Timer::start();
             let batch = &train_batches[step % train_batches.len()];
-            let (loss, acc) =
-                train_step(&net, &mut state, comm, batch, &mut opt)?;
-            if comm.rank() == 0 {
+            let x = next_x.take();
+            let prefetch_idx = (step + 1) % train_batches.len();
+            let want_prefetch = rank == 0 && step + 1 < cfg.steps;
+            let (loss, acc) = train_step_prepared(
+                &net,
+                &mut state,
+                comm,
+                x,
+                &batch.labels,
+                &mut opt,
+                &mut || {
+                    next_x = want_prefetch
+                        .then(|| train_batches[prefetch_idx].images_as::<f32>());
+                },
+            )?;
+            if rank == 0 {
                 log.push(StepRecord {
                     step,
                     loss,
@@ -111,6 +138,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         } else {
             None
         };
+        // Surface the comm engine's overlap counters on the metric log.
+        if comm.rank() == 0 {
+            log.set_comm_stats(&comm.stats());
+        }
         Ok((log, state.param_count(), eval_acc))
     })?;
 
@@ -137,19 +168,40 @@ pub fn train_step(
     opt: &mut Adam<f32>,
 ) -> Result<(f64, f64)> {
     let x = (comm.rank() == 0).then(|| batch.images_as::<f32>());
+    train_step_prepared(net, state, comm, x, &batch.labels, opt, &mut || {})
+}
+
+/// [`train_step`] with a pre-built input tensor and an overlap hook.
+///
+/// `overlap` runs after the backward pass returns on this rank and before
+/// the (purely local) optimizer step. The gradient sum-reduce sends are
+/// posted eagerly inside `backward`, and on every rank but the reduce
+/// roots the final backward actions *are* sends — so work done in the
+/// hook (the training loop prepares the next micro-batch's input there)
+/// proceeds while peers are still draining those gradient messages.
+pub fn train_step_prepared(
+    net: &crate::autograd::Network<f32>,
+    state: &mut NetworkState<f32>,
+    comm: &mut Comm,
+    x: Option<Tensor<f32>>,
+    labels: &[usize],
+    opt: &mut Adam<f32>,
+    overlap: &mut dyn FnMut(),
+) -> Result<(f64, f64)> {
     let logits = net.forward(state, comm, x, true)?;
     let mut dlogits: Option<Tensor<f32>> = None;
     let mut loss = 0f64;
     let mut acc = 0f64;
     if comm.rank() == 0 {
         let logits = logits.ok_or_else(|| Error::Autograd("root lost the logits".into()))?;
-        let (l, probs) = cross_entropy_forward(&logits, &batch.labels)?;
+        let (l, probs) = cross_entropy_forward(&logits, labels)?;
         loss = l;
-        acc = count_correct(&logits, &batch.labels) as f64 / batch.labels.len() as f64;
-        dlogits = Some(cross_entropy_backward(&probs, &batch.labels));
+        acc = count_correct(&logits, labels) as f64 / labels.len() as f64;
+        dlogits = Some(cross_entropy_backward(&probs, labels));
     }
     state.zero_grads();
     net.backward(state, comm, dlogits)?;
+    overlap();
     opt.step(state)?;
     Ok((loss, acc))
 }

@@ -3,55 +3,82 @@
 //! Every fallible public API in the crate returns [`Result`]. The variants
 //! mirror the subsystems: shape/partition logic, the communication
 //! substrate, the PJRT runtime, configuration, and I/O.
+//!
+//! `Display`/`Error` are implemented by hand: the crate builds with zero
+//! external dependencies by default (the `pjrt` feature pulls in the
+//! vendored `xla` crate when available).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by distdl.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape or dimension mismatch in tensor math.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Invalid partition description or rank out of range.
-    #[error("partition error: {0}")]
     Partition(String),
 
     /// Failure in the message-passing substrate (disconnected peer,
     /// tag/type mismatch, ...).
-    #[error("comm error: {0}")]
     Comm(String),
 
     /// A primitive was configured inconsistently (e.g. halo wider than the
     /// neighbouring bulk region).
-    #[error("primitive error: {0}")]
     Primitive(String),
 
     /// Autograd tape misuse (backward before forward, missing grad, ...).
-    #[error("autograd error: {0}")]
     Autograd(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Malformed JSON in a manifest or config file.
-    #[error("json error: {0}")]
     Json(String),
 
     /// Bad configuration value.
-    #[error("config error: {0}")]
     Config(String),
 
     /// CLI usage error.
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Partition(m) => write!(f, "partition error: {m}"),
+            Error::Comm(m) => write!(f, "comm error: {m}"),
+            Error::Primitive(m) => write!(f, "primitive error: {m}"),
+            Error::Autograd(m) => write!(f, "autograd error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(format!("xla: {e}"))

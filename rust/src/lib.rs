@@ -21,12 +21,20 @@
 //!   decompositions (§3–4 of the paper).
 //! * [`memory`] — the linear-algebraic memory model of §2 / Appendix A:
 //!   allocate, clear, add, copy, move, and their adjoints.
-//! * [`comm`] — an MPI-like message-passing substrate (threads + channels);
-//!   the paper's model is explicitly back-end independent.
+//! * [`comm`] — an MPI-like message-passing substrate (threads + channels)
+//!   built as a **nonblocking request engine**: `isend`/`irecv` post
+//!   operations and return requests completed by `wait`/`wait_all`/`test`,
+//!   payloads travel a typed zero-copy `Arc` path (the length-checked wire
+//!   format remains as fallback), and the blocking API survives as thin
+//!   wrappers. The paper's model is explicitly back-end independent.
 //! * [`primitives`] — §3: send/recv, scatter/gather, broadcast, sum-reduce,
 //!   all-reduce, generalized all-to-all (repartition), and the generalized
 //!   unbalanced halo exchange — each a [`adjoint::LinearOp`] with a
-//!   hand-derived adjoint.
+//!   hand-derived adjoint, all scheduled post-all-then-complete on the
+//!   request engine; the halo exchange additionally splits into
+//!   `start`/`finish` so layers overlap compute with communication (the
+//!   distributed conv computes its halo-independent interior while halo
+//!   messages are in flight).
 //! * [`halo`] — Appendix B halo geometry: per-worker left/right halo widths
 //!   and "unused input" regions for arbitrary kernel size/stride/dilation/
 //!   padding.
@@ -37,7 +45,9 @@
 //!   pointwise) over both native Rust kernels and AOT-compiled XLA
 //!   executables.
 //! * [`runtime`] — PJRT loading/execution of `artifacts/*.hlo.txt` produced
-//!   by the JAX/Pallas compile path (`python/compile`).
+//!   by the JAX/Pallas compile path (`python/compile`); gated behind the
+//!   `pjrt` cargo feature (off by default — the crate builds with zero
+//!   external dependencies), with a native-fallback stub otherwise.
 //! * [`models`], [`data`], [`optim`], [`coordinator`] — the distributed
 //!   LeNet-5 of §5 / Appendix C, a synthetic MNIST, optimizers, and the SPMD
 //!   training orchestrator.

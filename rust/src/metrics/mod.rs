@@ -1,5 +1,6 @@
 //! Training metrics: per-step records, aggregation, and JSON export.
 
+use crate::comm::CommStats;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -39,6 +40,21 @@ impl MetricLog {
     /// Attach metadata.
     pub fn set_meta(&mut self, key: &str, value: impl ToString) {
         self.meta.insert(key.to_string(), value.to_string());
+    }
+
+    /// Surface the comm engine's traffic and overlap counters as run
+    /// metadata (`comm_*` keys) — the in-flight/wait-time evidence for the
+    /// nonblocking request engine.
+    pub fn set_comm_stats(&mut self, s: &CommStats) {
+        self.set_meta("comm_messages_sent", s.messages_sent);
+        self.set_meta("comm_bytes_sent", s.bytes_sent);
+        self.set_meta("comm_messages_received", s.messages_received);
+        self.set_meta("comm_bytes_received", s.bytes_received);
+        self.set_meta("comm_irecvs_posted", s.irecvs_posted);
+        self.set_meta("comm_max_in_flight", s.max_in_flight);
+        self.set_meta("comm_zero_copy_msgs", s.zero_copy_msgs);
+        self.set_meta("comm_wire_msgs", s.wire_msgs);
+        self.set_meta("comm_wait_s", format!("{:.6}", s.wait_time_s));
     }
 
     /// Mean loss over the last `n` steps.
@@ -133,5 +149,22 @@ mod tests {
     fn empty_log_is_nan() {
         let log = MetricLog::new();
         assert!(log.recent_loss(3).is_nan());
+    }
+
+    #[test]
+    fn comm_stats_surface_as_meta() {
+        let mut log = MetricLog::new();
+        let stats = CommStats {
+            messages_sent: 7,
+            bytes_sent: 1234,
+            irecvs_posted: 5,
+            max_in_flight: 3,
+            wait_time_s: 0.25,
+            ..CommStats::default()
+        };
+        log.set_comm_stats(&stats);
+        assert_eq!(log.meta["comm_messages_sent"], "7");
+        assert_eq!(log.meta["comm_max_in_flight"], "3");
+        assert_eq!(log.meta["comm_wait_s"], "0.250000");
     }
 }

@@ -9,19 +9,30 @@
 //! all-reduce — "a broadcast in the forward implementation naturally
 //! induces a sum-reduce in the adjoint phase".
 //!
-//! Forward (paper's Forward Convolution Algorithm, P_ci = P_co = 1):
+//! Forward (paper's Forward Convolution Algorithm, P_ci = P_co = 1),
+//! scheduled for compute/communication overlap on the nonblocking engine:
 //! ```text
-//!   x ← H x                 (halo exchange + trim/pad shim)
-//!   ŵ, b̂ ← B_{root→grid} (w, b)
-//!   y ← Conv(ŵ, b̂; x)
+//!   H.start x               (halo sends/receives posted, in flight)
+//!   ŵ, b̂ ← B_{root→grid} (w, b)        — overlaps the halo messages
+//!   y[interior] ← Conv(ŵ, b̂; x)        — halo-independent output region,
+//!                                         computed while messages move
+//!   x ← H.finish            (complete the exchange, trim/pad shim)
+//!   y[boundary] ← Conv(ŵ, b̂; x)        — the halo-dependent slabs
 //! ```
 //! Adjoint: local VJP, then δw, δb ← R_{grid→root}, δx ← H* δx.
+//!
+//! The interior region is derived from the halo geometry: along the
+//! exchange's split dimension, an output column is halo-independent iff
+//! its kernel window touches neither the used left-halo entries nor the
+//! used right-halo entries of the trim/pad buffer. Because local kernels
+//! are translation invariant, the interior and boundary slabs are computed
+//! by running the ordinary kernel on extracted input slabs.
 
 use crate::adjoint::DistLinearOp;
 use crate::autograd::{Layer, LayerState};
 use crate::comm::Comm;
 use crate::error::{Error, Result};
-use crate::halo::{HaloGeometry, KernelSpec};
+use crate::halo::{DimHalo, HaloGeometry, KernelSpec};
 use crate::nn::kernels::LocalKernels;
 use crate::nn::native::Conv2dSpec;
 use crate::partition::Partition;
@@ -159,6 +170,72 @@ impl<T: Scalar> DistConv2d<T> {
         })
     }
 
+    /// Stride and kernel extent along buffer dimension `d` (`[b, ci, h, w]`
+    /// layout; batch and channel dims carry a size-1 kernel).
+    fn dim_spec(&self, d: usize) -> (usize, usize) {
+        match d {
+            2 => (self.cfg.stride.0, self.cfg.kernel.0),
+            3 => (self.cfg.stride.1, self.cfg.kernel.1),
+            _ => (1, 1),
+        }
+    }
+
+    /// Halo-independent output range `[o_lo, o_hi)` along one dimension:
+    /// outputs whose kernel window reads only bulk data and implicit zero
+    /// padding in the trim/pad buffer — identical before and after the
+    /// exchange completes, hence computable while messages are in flight.
+    fn interior_out_range(h: &DimHalo, stride: usize, ext: usize) -> (usize, usize) {
+        // Halo entries the kernel actually consumes (the trim/pad shim
+        // drops `left_unused`/`right_unused` entries from the buffer ends,
+        // which may swallow part or all of a halo).
+        let lh_used = h.left_halo.saturating_sub(h.left_unused);
+        let rh_used = h.right_halo.saturating_sub(h.right_unused);
+        let compute_len = h.compute_len();
+        let o_lo = if lh_used > 0 {
+            let l_end = h.left_zero_pad + lh_used; // first compute coord past the left halo
+            (l_end + stride - 1) / stride
+        } else {
+            0
+        };
+        let o_hi = if rh_used > 0 {
+            let r_start = compute_len - h.right_zero_pad - rh_used; // first right-halo coord
+            if r_start >= ext {
+                (r_start - ext) / stride + 1
+            } else {
+                0
+            }
+        } else {
+            h.out_len
+        };
+        let o_lo = o_lo.min(h.out_len);
+        let o_hi = o_hi.min(h.out_len).max(o_lo);
+        (o_lo, o_hi)
+    }
+
+    /// Convolve the input slab that produces outputs `[o_lo, o_hi)` along
+    /// buffer dimension `d` (full extent elsewhere). Translation
+    /// invariance makes the slab result exactly the corresponding output
+    /// slab.
+    fn conv_slab(
+        &self,
+        x_hat: &Tensor<T>,
+        w_hat: &Tensor<T>,
+        b_hat: &Tensor<T>,
+        d: usize,
+        o_lo: usize,
+        o_hi: usize,
+    ) -> Result<Tensor<T>> {
+        let (stride, ext) = self.dim_spec(d);
+        let n_out = o_hi - o_lo;
+        let mut start = vec![0usize; 4];
+        let mut shape = x_hat.shape().to_vec();
+        start[d] = o_lo * stride;
+        shape[d] = (n_out - 1) * stride + ext;
+        let slab = x_hat.extract_region(&Region::new(start, shape))?;
+        self.kernels
+            .conv2d_forward(&slab, w_hat, Some(b_hat), self.spec)
+    }
+
     /// Generate the deterministic *global* parameters for `seed` (uniform
     /// Kaiming-style bound, as PyTorch's Conv2d default).
     fn global_params(&self, seed: u64) -> (Tensor<T>, Tensor<T>) {
@@ -212,32 +289,84 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
         train: bool,
     ) -> Result<Option<Tensor<T>>> {
         let rank = comm.rank();
-        let coords = self.grid.coords_of(rank);
-        // Broadcast weights and bias from the root (Eq. 8) — collective
-        // over grid ranks.
         let w_seed = (rank == self.root).then(|| st.params[0].clone());
         let b_seed = (rank == self.root).then(|| st.params[1].clone());
-        let w_hat = self.w_bcast.forward(comm, w_seed)?;
-        let b_hat = self.b_bcast.forward(comm, b_seed)?;
-        let Some(coords) = coords else {
+        let Some(coords) = self.grid.coords_of(rank) else {
+            // Off-grid ranks only participate in the parameter broadcasts.
+            self.w_bcast.forward(comm, w_seed)?;
+            self.b_bcast.forward(comm, b_seed)?;
             return Ok(None);
         };
         let x = x.ok_or_else(|| Error::Primitive(format!("{}: input missing", self.name)))?;
-        // Embed bulk into the halo buffer, exchange, trim/pad.
+        // Embed bulk into the halo buffer and *post* the exchange: halo
+        // sends and the split dimension's receives go out now.
         let mut buf = Tensor::zeros(&self.exchange.buffer_shape(&coords));
         let bulk = self.exchange.bulk_region(&coords);
         crate::tensor::check_same(x.shape(), &bulk.shape, "conv input shard")?;
         buf.copy_region_from(&x, &Region::full(x.shape()), &bulk.start)?;
-        let buf = self
-            .exchange
-            .forward(comm, Some(buf))?
-            .expect("grid rank exchanged");
+        let inflight = self.exchange.start(comm, buf)?;
+        // Broadcast weights and bias from the root (Eq. 8) — this
+        // collective runs while the halo messages are in flight.
+        let w_hat = self
+            .w_bcast
+            .forward(comm, w_seed)?
+            .ok_or_else(|| Error::Primitive("conv: broadcast w missing".into()))?;
+        let b_hat = self
+            .b_bcast
+            .forward(comm, b_seed)?
+            .ok_or_else(|| Error::Primitive("conv: broadcast b missing".into()))?;
+        // Interior compute while the exchange is still in flight: outputs
+        // whose windows avoid the split dimension's halo entries read the
+        // same values before and after completion (dimensions before the
+        // split are already final inside `inflight`).
+        let halos = self.exchange.halos_at(&coords);
+        let out_shape = [
+            halos[0].out_len,
+            self.cfg.out_channels,
+            halos[2].out_len,
+            halos[3].out_len,
+        ];
+        let mut partial: Option<(usize, usize, usize, Tensor<T>)> = None;
+        // The PJRT backend dispatches AOT artifacts by exact input shape;
+        // slab shapes would never match one, silently demoting every call
+        // to the native fallback — so overlap compute only on backends
+        // whose kernels are shape-agnostic.
+        let slabs_ok = self.kernels.backend_name() != "pjrt";
+        if let (true, Some(d)) = (slabs_ok, self.exchange.split_dim()) {
+            let (stride, ext) = self.dim_spec(d);
+            let (o_lo, o_hi) = Self::interior_out_range(&halos[d], stride, ext);
+            if o_lo < o_hi {
+                let x_pre = self.shim.apply(&coords, inflight.buffer())?;
+                let y_int = self.conv_slab(&x_pre, &w_hat, &b_hat, d, o_lo, o_hi)?;
+                let mut y = Tensor::zeros(&out_shape);
+                let mut dst = vec![0usize; 4];
+                dst[d] = o_lo;
+                y.copy_region_from(&y_int, &Region::full(y_int.shape()), &dst)?;
+                partial = Some((d, o_lo, o_hi, y));
+            }
+        }
+        // Complete the exchange and fill in the halo-dependent boundary.
+        let buf = self.exchange.finish(comm, inflight)?;
         let x_hat = self.shim.apply(&coords, &buf)?;
-        let w_hat = w_hat.ok_or_else(|| Error::Primitive("conv: broadcast w missing".into()))?;
-        let b_hat = b_hat.ok_or_else(|| Error::Primitive("conv: broadcast b missing".into()))?;
-        let y = self
-            .kernels
-            .conv2d_forward(&x_hat, &w_hat, Some(&b_hat), self.spec)?;
+        let y = match partial {
+            Some((d, o_lo, o_hi, mut y)) => {
+                if o_lo > 0 {
+                    let y_b = self.conv_slab(&x_hat, &w_hat, &b_hat, d, 0, o_lo)?;
+                    y.copy_region_from(&y_b, &Region::full(y_b.shape()), &vec![0usize; 4])?;
+                }
+                if o_hi < out_shape[d] {
+                    let y_b = self.conv_slab(&x_hat, &w_hat, &b_hat, d, o_hi, out_shape[d])?;
+                    let mut dst = vec![0usize; 4];
+                    dst[d] = o_hi;
+                    y.copy_region_from(&y_b, &Region::full(y_b.shape()), &dst)?;
+                }
+                y
+            }
+            // No partitioned dimension or no interior: plain full compute.
+            None => self
+                .kernels
+                .conv2d_forward(&x_hat, &w_hat, Some(&b_hat), self.spec)?,
+        };
         if train {
             st.saved = vec![x_hat, w_hat];
         }

@@ -119,17 +119,27 @@ impl<T: Scalar> Layer<T> for DistPool2d<T> {
         let bulk = self.exchange.bulk_region(&coords);
         crate::tensor::check_same(x.shape(), &bulk.shape, "pool input shard")?;
         buf.copy_region_from(&x, &Region::full(x.shape()), &bulk.start)?;
-        let buf = self
-            .exchange
-            .forward(comm, Some(buf))?
-            .expect("grid rank exchanged");
+        // Post the exchange; the VJP bookkeeping below (shape snapshot for
+        // the backward scatter) runs while the halo messages are in
+        // flight. Pooling keeps its compute whole because the max-pool VJP
+        // routes through saved flat argmax indices, which a slab-split
+        // would invalidate (see the conv layer for the interior/boundary
+        // overlap pattern on index-free kernels).
+        let inflight = self.exchange.start(comm, buf)?;
+        let x_hat_shape = self.shim.compute_shape(&coords);
+        let saved_shape = train
+            .then(|| {
+                Tensor::from_vec(
+                    &[x_hat_shape.len()],
+                    x_hat_shape.iter().map(|&d| T::from_f64(d as f64)).collect(),
+                )
+            })
+            .transpose()?;
+        let buf = self.exchange.finish(comm, inflight)?;
         let x_hat = self.shim.apply(&coords, &buf)?;
         let (y, argmax) = self.kernels.pool2d_forward(&x_hat, self.spec)?;
         if train {
-            st.saved = vec![Tensor::from_vec(
-                &[x_hat.rank()],
-                x_hat.shape().iter().map(|&d| T::from_f64(d as f64)).collect(),
-            )?];
+            st.saved = vec![saved_shape.expect("shape snapshot built under train")];
             st.saved_indices = vec![argmax];
         }
         Ok(Some(y))

@@ -66,8 +66,9 @@ impl Repartition {
         // this rank).
         let mut local_piece: Option<(crate::tensor::Region, Tensor<T>)> = None;
 
-        // Phase 1: send every overlap of my source region with remote
-        // destination regions (sends never block).
+        // Phase 1: post a send for every overlap of my source region with
+        // a remote destination region; each extracted piece is moved into
+        // its message (zero-copy, move semantics).
         if let Some(src_region) = &my_src {
             let shard = x
                 .as_ref()
@@ -82,27 +83,45 @@ impl Repartition {
                 if dst_rank == rank {
                     local_piece = Some((overlap, piece));
                 } else {
-                    comm.send_slice(dst_rank, tag, piece.data())?;
+                    let req = comm.isend_vec(dst_rank, tag, piece.into_vec())?;
+                    comm.wait_send(req)?;
                 }
             }
         }
 
-        // Phase 2: assemble my destination shard from the overlaps with
-        // every source region.
+        // Phase 2: post every receive for my destination shard, then
+        // complete them and assemble (post-all-then-complete — no rank
+        // serializes on one sender while another's piece is already in).
         if let Some(dst_region) = &my_dst {
-            let mut out = Tensor::zeros(&dst_region.shape);
-            for (src_rank, overlap) in from.owners_of(dst_region) {
-                if overlap.is_empty() {
-                    continue;
-                }
-                let piece = if src_rank == rank {
-                    local_piece
-                        .take()
-                        .map(|(_, p)| p)
-                        .ok_or_else(|| Error::Primitive("repartition: lost local piece".into()))?
+            let overlaps: Vec<(usize, crate::tensor::Region)> = from
+                .owners_of(dst_region)
+                .into_iter()
+                .filter(|(_, overlap)| !overlap.is_empty())
+                .collect();
+            let mut pending = Vec::with_capacity(overlaps.len());
+            for (src_rank, _) in &overlaps {
+                if *src_rank == rank {
+                    pending.push(None);
                 } else {
-                    let data = comm.recv_vec::<T>(src_rank, tag)?;
-                    Tensor::from_vec(&overlap.shape, data)?
+                    pending.push(Some(comm.irecv::<T>(*src_rank, tag)?));
+                }
+            }
+            let mut out = Tensor::zeros(&dst_region.shape);
+            for ((src_rank, overlap), req) in overlaps.into_iter().zip(pending) {
+                let piece = match req {
+                    None => {
+                        debug_assert_eq!(src_rank, rank);
+                        local_piece
+                            .take()
+                            .map(|(_, p)| p)
+                            .ok_or_else(|| {
+                                Error::Primitive("repartition: lost local piece".into())
+                            })?
+                    }
+                    Some(req) => {
+                        let data = comm.wait(req)?;
+                        Tensor::from_vec(&overlap.shape, data)?
+                    }
                 };
                 let local = overlap.relative_to(&dst_region.start);
                 out.copy_region_from(

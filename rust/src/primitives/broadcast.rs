@@ -18,6 +18,7 @@ use crate::comm::Comm;
 use crate::error::{Error, Result};
 use crate::partition::{broadcast_groups, BroadcastGroup, Partition};
 use crate::tensor::{Scalar, Tensor};
+use std::sync::Arc;
 
 /// Generalized partition broadcast B_{src→dst}.
 #[derive(Debug, Clone)]
@@ -100,6 +101,11 @@ impl Broadcast {
     }
 
     /// Run the forward tree for one group, from the perspective of `rank`.
+    ///
+    /// The held payload is an `Arc`-shared buffer: forwarding to several
+    /// children across tree rounds clones only the `Arc`, and the receive
+    /// is posted before the edge walk starts so the parent's eager send
+    /// can land while earlier rounds are still in progress.
     fn run_group_forward<T: Scalar>(
         &self,
         gi: usize,
@@ -111,23 +117,44 @@ impl Broadcast {
         let me = members.iter().position(|&r| r == rank);
         let Some(me) = me else { return Ok(None) };
         let tag = self.tag + gi as u64 * 2;
-        let mut held: Option<Tensor<T>> = if me == 0 { seed } else { None };
-        for (from, to) in tree_schedule(members.len()) {
-            if from == me {
-                let t = held
-                    .as_ref()
-                    .ok_or_else(|| Error::Primitive("broadcast: forwarding before receive".into()))?;
-                comm.send_slice(members[to], tag, t.data())?;
-            } else if to == me {
-                let data = comm.recv_vec::<T>(members[from], tag)?;
-                held = Some(Tensor::from_vec(&self.shapes[gi], data)?);
+        let schedule = tree_schedule(members.len());
+        // Every non-root member receives exactly once; post that receive
+        // up front.
+        let mut posted = None;
+        if me != 0 {
+            if let Some(&(from, _)) = schedule.iter().find(|&&(_, to)| to == me) {
+                posted = Some(comm.irecv::<T>(members[from], tag)?);
             }
         }
-        Ok(held)
+        let mut held: Option<Arc<Vec<T>>> = if me == 0 {
+            seed.map(|t| Arc::new(t.into_vec()))
+        } else {
+            None
+        };
+        for (from, to) in schedule {
+            if from == me {
+                let buf = held.as_ref().ok_or_else(|| {
+                    Error::Primitive("broadcast: forwarding before receive".into())
+                })?;
+                let req = comm.isend_shared(members[to], tag, buf)?;
+                comm.wait_send(req)?;
+            } else if to == me {
+                let req = posted.take().expect("receive posted before edge walk");
+                held = Some(Arc::new(comm.wait(req)?));
+            }
+        }
+        match held {
+            Some(arc) => {
+                let data = Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone());
+                Ok(Some(Tensor::from_vec(&self.shapes[gi], data)?))
+            }
+            None => Ok(None),
+        }
     }
 
     /// Run the adjoint (sum-reduce) tree for one group: reverse edge order,
-    /// copies become adds (Eq. 9).
+    /// copies become adds (Eq. 9). All receives this member will need are
+    /// posted before the edge walk (post-all-then-complete).
     fn run_group_adjoint<T: Scalar>(
         &self,
         gi: usize,
@@ -140,23 +167,44 @@ impl Broadcast {
             return Ok(None);
         };
         let tag = self.tag + gi as u64 * 2 + 1;
+        let reversed: Vec<(usize, usize)> =
+            tree_schedule(members.len()).into_iter().rev().collect();
+        // In the reversed schedule this member first accumulates every
+        // child's contribution (edges with `from == me`), then ships the
+        // total to its parent (its single `to == me` edge). Post all the
+        // child receives up front.
+        let mut posted: std::collections::VecDeque<_> = std::collections::VecDeque::new();
+        for &(from, to) in &reversed {
+            if from == me {
+                posted.push_back(comm.irecv::<T>(members[to], tag)?);
+            }
+        }
         // Members that are destinations start from their cotangent; a root
         // that is not a destination starts from zero (its forward buffer
         // was transient).
-        let mut acc: Tensor<T> = match seed {
+        let mut acc: Option<Tensor<T>> = Some(match seed {
             Some(t) => t,
             None => Tensor::zeros(&self.shapes[gi]),
-        };
-        for (from, to) in tree_schedule(members.len()).into_iter().rev() {
+        });
+        for (from, to) in reversed {
             if to == me {
-                comm.send_slice(members[from], tag, acc.data())?;
+                // Final action for this member: the accumulated cotangent
+                // moves to the parent (zero-copy).
+                let t = acc
+                    .take()
+                    .ok_or_else(|| Error::Primitive("sum-reduce: accumulator consumed".into()))?;
+                let req = comm.isend_vec(members[from], tag, t.into_vec())?;
+                comm.wait_send(req)?;
             } else if from == me {
-                let data = comm.recv_vec::<T>(members[to], tag)?;
-                acc.add_assign(&Tensor::from_vec(&self.shapes[gi], data)?)?;
+                let req = posted.pop_front().expect("child receive posted");
+                let data = comm.wait(req)?;
+                acc.as_mut()
+                    .ok_or_else(|| Error::Primitive("sum-reduce: accumulator consumed".into()))?
+                    .add_assign(&Tensor::from_vec(&self.shapes[gi], data)?)?;
             }
         }
         if me == 0 {
-            Ok(Some(acc))
+            Ok(acc)
         } else {
             Ok(None)
         }

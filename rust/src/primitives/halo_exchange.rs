@@ -22,11 +22,43 @@
 //! local sliding-kernel operator is applied.
 
 use crate::adjoint::DistLinearOp;
-use crate::comm::Comm;
+use crate::comm::{Comm, RecvRequest};
 use crate::error::{Error, Result};
 use crate::halo::{DimHalo, HaloGeometry};
 use crate::partition::Partition;
 use crate::tensor::{Region, Scalar, Tensor};
+
+/// A halo exchange whose sends (and the final dimension's receives) have
+/// been posted but not completed — returned by [`HaloExchange::start`],
+/// consumed by [`HaloExchange::finish`].
+///
+/// Between `start` and `finish` the caller may freely compute on the
+/// halo-independent region of [`HaloInFlight::buffer`] (bulk data and
+/// already-completed dimensions are final; only the split dimension's halo
+/// regions are still pending) while the posted messages move.
+pub struct HaloInFlight<T: Scalar> {
+    buf: Tensor<T>,
+    coords: Vec<usize>,
+    pending: Vec<(RecvRequest<T>, Region)>,
+}
+
+impl<T: Scalar> HaloInFlight<T> {
+    /// The exchange buffer in its current state: bulk and completed
+    /// dimensions are final, the split dimension's halos are pending.
+    pub fn buffer(&self) -> &Tensor<T> {
+        &self.buf
+    }
+
+    /// Grid coordinates of this worker.
+    pub fn coords(&self) -> &[usize] {
+        &self.coords
+    }
+
+    /// Receives still outstanding.
+    pub fn pending_recvs(&self) -> usize {
+        self.pending.len()
+    }
+}
 
 /// In-place halo exchange over a cartesian partition.
 #[derive(Debug, Clone)]
@@ -92,37 +124,25 @@ impl HaloExchange {
         )
     }
 
-    /// Exchange along one dimension, from the perspective of one worker.
-    ///
-    /// `adjoint = false`: pack my bulk edges, send to neighbours, unpack
-    /// received data into my halo regions (overwrite).
-    /// `adjoint = true`: send my halo regions back to the neighbours that
-    /// filled them, **add** received data into my bulk edges, clear my
-    /// halo regions.
-    fn exchange_dim<T: Scalar>(
+    /// Neighbour bookkeeping for one dimension: `(rank, send_w, recv_w)`
+    /// per side, plus the bulk bounds and a cross-section region factory.
+    fn dim_plan(
         &self,
-        comm: &mut Comm,
-        buf: &mut Tensor<T>,
         coords: &[usize],
         d: usize,
-        adjoint: bool,
-    ) -> Result<()> {
+    ) -> (
+        Option<(usize, usize, usize)>, // left neighbour
+        Option<(usize, usize, usize)>, // right neighbour
+        usize,                         // bulk_lo
+        usize,                         // bulk_hi
+        Vec<usize>,                    // buffer extents
+    ) {
         let halos = self.geometry.at(coords);
         let h = &halos[d];
         let extents: Vec<usize> = halos.iter().map(|x| x.exchanged_len()).collect();
-        let bulk_lo = h.left_halo; // bulk start along dim d
-        let bulk_hi = h.left_halo + h.in_len; // bulk end (exclusive)
-
-        // Cross-section helper: full extent in all dims except d.
-        let xsect = |lo: usize, len: usize| -> Region {
-            let mut start = vec![0usize; extents.len()];
-            let mut shape = extents.clone();
-            start[d] = lo;
-            shape[d] = len;
-            Region::new(start, shape)
-        };
-
-        let mut left: Option<(usize, usize, usize)> = None; // (rank, send_w, recv_w)
+        let bulk_lo = h.left_halo;
+        let bulk_hi = h.left_halo + h.in_len;
+        let mut left = None;
         if coords[d] > 0 {
             let mut nc = coords.to_vec();
             nc[d] -= 1;
@@ -130,7 +150,7 @@ impl HaloExchange {
             let nbr = &self.geometry.dims[d][coords[d] - 1];
             left = Some((nbr_rank, nbr.right_halo, h.left_halo));
         }
-        let mut right: Option<(usize, usize, usize)> = None;
+        let mut right = None;
         if coords[d] + 1 < self.partition.shape()[d] {
             let mut nc = coords.to_vec();
             nc[d] += 1;
@@ -138,85 +158,193 @@ impl HaloExchange {
             let nbr = &self.geometry.dims[d][coords[d] + 1];
             right = Some((nbr_rank, nbr.left_halo, h.right_halo));
         }
+        (left, right, bulk_lo, bulk_hi, extents)
+    }
 
+    /// Forward exchange along dim `d`, posting phase: pack both bulk edges
+    /// (C_P), post both sends and both receives (C_E), return the pending
+    /// receives with the halo regions they unpack into.
+    fn post_dim_forward<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        buf: &mut Tensor<T>,
+        coords: &[usize],
+        d: usize,
+    ) -> Result<Vec<(RecvRequest<T>, Region)>> {
+        let (left, right, bulk_lo, bulk_hi, extents) = self.dim_plan(coords, d);
+        let xsect = |lo: usize, len: usize| -> Region {
+            let mut start = vec![0usize; extents.len()];
+            let mut shape = extents.clone();
+            start[d] = lo;
+            shape[d] = len;
+            Region::new(start, shape)
+        };
         let tag_fwd_l = self.tag + (d as u64) * 8; // bulk -> left neighbour
         let tag_fwd_r = self.tag + (d as u64) * 8 + 1; // bulk -> right neighbour
+
+        // Post both sends; each packed edge is moved into its message.
+        if let Some((nbr, send_w, _)) = left {
+            if send_w > 0 {
+                let piece = buf.extract_region(&xsect(bulk_lo, send_w))?;
+                let req = comm.isend_vec(nbr, tag_fwd_l, piece.into_vec())?;
+                comm.wait_send(req)?;
+            }
+        }
+        if let Some((nbr, send_w, _)) = right {
+            if send_w > 0 {
+                let piece = buf.extract_region(&xsect(bulk_hi - send_w, send_w))?;
+                let req = comm.isend_vec(nbr, tag_fwd_r, piece.into_vec())?;
+                comm.wait_send(req)?;
+            }
+        }
+        // Post both receives before completing either.
+        let mut pending = Vec::new();
+        if let Some((nbr, _, recv_w)) = left {
+            if recv_w > 0 {
+                pending.push((comm.irecv::<T>(nbr, tag_fwd_r)?, xsect(0, recv_w)));
+            }
+        }
+        if let Some((nbr, _, recv_w)) = right {
+            if recv_w > 0 {
+                pending.push((comm.irecv::<T>(nbr, tag_fwd_l)?, xsect(bulk_hi, recv_w)));
+            }
+        }
+        Ok(pending)
+    }
+
+    /// Forward exchange, completion phase: wait each pending receive and
+    /// unpack it into its halo region (C_U).
+    fn complete_dim_forward<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        buf: &mut Tensor<T>,
+        pending: Vec<(RecvRequest<T>, Region)>,
+    ) -> Result<()> {
+        for (req, region) in pending {
+            let data = comm.wait(req)?;
+            let piece = Tensor::from_vec(&region.shape, data)?;
+            buf.copy_region_from(&piece, &Region::full(&region.shape), &region.start)?;
+        }
+        Ok(())
+    }
+
+    /// Adjoint exchange along dim `d` (post-all-then-complete): ship both
+    /// halo regions back and clear them (C_U*), post both receives, then
+    /// **add** the returned cotangents into the bulk edges (C_P*).
+    fn exchange_dim_adjoint<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        buf: &mut Tensor<T>,
+        coords: &[usize],
+        d: usize,
+    ) -> Result<()> {
+        let (left, right, bulk_lo, bulk_hi, extents) = self.dim_plan(coords, d);
+        let xsect = |lo: usize, len: usize| -> Region {
+            let mut start = vec![0usize; extents.len()];
+            let mut shape = extents.clone();
+            start[d] = lo;
+            shape[d] = len;
+            Region::new(start, shape)
+        };
         let tag_adj_l = self.tag + (d as u64) * 8 + 2; // halo -> left neighbour
         let tag_adj_r = self.tag + (d as u64) * 8 + 3; // halo -> right neighbour
 
-        if !adjoint {
-            // C_P + C_E (send half): pack bulk edges and ship them.
-            if let Some((nbr, send_w, _)) = left {
-                if send_w > 0 {
-                    let piece = buf.extract_region(&xsect(bulk_lo, send_w))?;
-                    comm.send_slice(nbr, tag_fwd_l, piece.data())?;
-                }
-            }
-            if let Some((nbr, send_w, _)) = right {
-                if send_w > 0 {
-                    let piece = buf.extract_region(&xsect(bulk_hi - send_w, send_w))?;
-                    comm.send_slice(nbr, tag_fwd_r, piece.data())?;
-                }
-            }
-            // C_E (receive half) + C_U: unpack into my halo regions.
-            if let Some((nbr, _, recv_w)) = left {
-                if recv_w > 0 {
-                    let region = xsect(0, recv_w);
-                    let data = comm.recv_vec::<T>(nbr, tag_fwd_r)?;
-                    let piece = Tensor::from_vec(&region.shape, data)?;
-                    buf.copy_region_from(&piece, &Region::full(&region.shape), &region.start)?;
-                }
-            }
-            if let Some((nbr, _, recv_w)) = right {
-                if recv_w > 0 {
-                    let region = xsect(bulk_hi, recv_w);
-                    let data = comm.recv_vec::<T>(nbr, tag_fwd_l)?;
-                    let piece = Tensor::from_vec(&region.shape, data)?;
-                    buf.copy_region_from(&piece, &Region::full(&region.shape), &region.start)?;
-                }
-            }
-        } else {
-            // Adjoint: C_U* — ship my halo regions back and clear them
-            // (the halo was overwritten in forward, so its input value is
-            // annihilated: K after the add-extract).
-            if let Some((nbr, _, w)) = left {
-                if w > 0 {
-                    let region = xsect(0, w);
-                    let piece = buf.extract_region(&region)?;
-                    comm.send_slice(nbr, tag_adj_l, piece.data())?;
-                    buf.fill_region(&region, T::ZERO)?;
-                }
-            }
-            if let Some((nbr, _, w)) = right {
-                if w > 0 {
-                    let region = xsect(bulk_hi, w);
-                    let piece = buf.extract_region(&region)?;
-                    comm.send_slice(nbr, tag_adj_r, piece.data())?;
-                    buf.fill_region(&region, T::ZERO)?;
-                }
-            }
-            // C_P*: add the returned cotangents into the bulk edges I
-            // packed from in the forward pass.
-            if let Some((nbr, w, _)) = left {
-                // I sent [bulk_lo, bulk_lo+w) to the left neighbour's right
-                // halo; its cotangent comes back tagged adj_r.
-                if w > 0 {
-                    let region = xsect(bulk_lo, w);
-                    let data = comm.recv_vec::<T>(nbr, tag_adj_r)?;
-                    let piece = Tensor::from_vec(&region.shape, data)?;
-                    buf.add_region_from(&piece, &Region::full(&region.shape), &region.start)?;
-                }
-            }
-            if let Some((nbr, w, _)) = right {
-                if w > 0 {
-                    let region = xsect(bulk_hi - w, w);
-                    let data = comm.recv_vec::<T>(nbr, tag_adj_l)?;
-                    let piece = Tensor::from_vec(&region.shape, data)?;
-                    buf.add_region_from(&piece, &Region::full(&region.shape), &region.start)?;
-                }
+        // C_U*: ship my halo regions back and clear them (the halo was
+        // overwritten in forward, so its input value is annihilated: K
+        // after the add-extract).
+        if let Some((nbr, _, w)) = left {
+            if w > 0 {
+                let region = xsect(0, w);
+                let piece = buf.extract_region(&region)?;
+                let req = comm.isend_vec(nbr, tag_adj_l, piece.into_vec())?;
+                comm.wait_send(req)?;
+                buf.fill_region(&region, T::ZERO)?;
             }
         }
+        if let Some((nbr, _, w)) = right {
+            if w > 0 {
+                let region = xsect(bulk_hi, w);
+                let piece = buf.extract_region(&region)?;
+                let req = comm.isend_vec(nbr, tag_adj_r, piece.into_vec())?;
+                comm.wait_send(req)?;
+                buf.fill_region(&region, T::ZERO)?;
+            }
+        }
+        // Post both receives, then complete. I sent [bulk_lo, bulk_lo+w)
+        // to the left neighbour's right halo; its cotangent comes back
+        // tagged adj_r (and symmetrically for the right neighbour).
+        let mut pending = Vec::new();
+        if let Some((nbr, w, _)) = left {
+            if w > 0 {
+                pending.push((comm.irecv::<T>(nbr, tag_adj_r)?, xsect(bulk_lo, w)));
+            }
+        }
+        if let Some((nbr, w, _)) = right {
+            if w > 0 {
+                pending.push((comm.irecv::<T>(nbr, tag_adj_l)?, xsect(bulk_hi - w, w)));
+            }
+        }
+        for (req, region) in pending {
+            let data = comm.wait(req)?;
+            let piece = Tensor::from_vec(&region.shape, data)?;
+            buf.add_region_from(&piece, &Region::full(&region.shape), &region.start)?;
+        }
         Ok(())
+    }
+
+    /// The dimension whose receives `start` leaves pending: the last
+    /// partitioned dimension (a global property, so every worker splits
+    /// the schedule identically). `None` when nothing is partitioned.
+    pub fn split_dim(&self) -> Option<usize> {
+        (0..self.partition.grid_rank())
+            .rev()
+            .find(|&d| self.partition.shape()[d] > 1)
+    }
+
+    /// Begin the exchange: run every dimension before [`Self::split_dim`]
+    /// to completion (the nesting of Eq. 11 requires it — later sends
+    /// carry earlier halos), then post the split dimension's sends and
+    /// receives and return with them in flight.
+    ///
+    /// The caller may compute on the halo-independent output region while
+    /// the messages move, then call [`Self::finish`].
+    pub fn start<T: Scalar>(&self, comm: &mut Comm, buf: Tensor<T>) -> Result<HaloInFlight<T>> {
+        let coords = self
+            .partition
+            .coords_of(comm.rank())
+            .ok_or_else(|| Error::Primitive("halo start: rank not on the partition".into()))?;
+        let mut buf = buf;
+        crate::tensor::check_same(buf.shape(), &self.buffer_shape(&coords), "halo buffer")?;
+        let split = self.split_dim();
+        let mut pending = Vec::new();
+        for d in 0..self.partition.grid_rank() {
+            let recvs = self.post_dim_forward(comm, &mut buf, &coords, d)?;
+            if Some(d) == split {
+                pending = recvs;
+            } else {
+                self.complete_dim_forward(comm, &mut buf, recvs)?;
+            }
+        }
+        Ok(HaloInFlight {
+            buf,
+            coords,
+            pending,
+        })
+    }
+
+    /// Complete an exchange begun with [`Self::start`]: wait the split
+    /// dimension's receives and unpack them, yielding the fully exchanged
+    /// buffer.
+    pub fn finish<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        inflight: HaloInFlight<T>,
+    ) -> Result<Tensor<T>> {
+        let HaloInFlight {
+            mut buf, pending, ..
+        } = inflight;
+        self.complete_dim_forward(comm, &mut buf, pending)?;
+        Ok(buf)
     }
 }
 
@@ -232,16 +360,12 @@ impl<T: Scalar> DistLinearOp<T> for HaloExchange {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
-        let Some(coords) = self.partition.coords_of(comm.rank()) else {
+        if self.partition.coords_of(comm.rank()).is_none() {
             return Ok(None);
-        };
-        let mut buf =
-            x.ok_or_else(|| Error::Primitive("halo exchange: buffer missing".into()))?;
-        crate::tensor::check_same(buf.shape(), &self.buffer_shape(&coords), "halo buffer")?;
-        for d in 0..self.partition.grid_rank() {
-            self.exchange_dim(comm, &mut buf, &coords, d, false)?;
         }
-        Ok(Some(buf))
+        let buf = x.ok_or_else(|| Error::Primitive("halo exchange: buffer missing".into()))?;
+        let inflight = self.start(comm, buf)?;
+        Ok(Some(self.finish(comm, inflight)?))
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
@@ -253,7 +377,7 @@ impl<T: Scalar> DistLinearOp<T> for HaloExchange {
         crate::tensor::check_same(buf.shape(), &self.buffer_shape(&coords), "halo buffer")?;
         // Eq. (12): dimensions in reverse order.
         for d in (0..self.partition.grid_rank()).rev() {
-            self.exchange_dim(comm, &mut buf, &coords, d, true)?;
+            self.exchange_dim_adjoint(comm, &mut buf, &coords, d)?;
         }
         Ok(Some(buf))
     }

@@ -19,6 +19,13 @@
 //!
 //! Each instance takes a `tag` base; sub-operations derive disjoint tags
 //! from it, so multiple primitives can be in flight on one communicator.
+//!
+//! All primitives run on the nonblocking request engine of [`crate::comm`]
+//! with **post-all-then-complete** schedules: every send and receive of a
+//! phase is posted before any receive is waited on, payloads move through
+//! the typed zero-copy path, and the halo exchange additionally offers a
+//! [`HaloExchange::start`]/[`HaloExchange::finish`] split so layers can
+//! compute on the halo-independent region while messages are in flight.
 
 mod alltoall;
 mod broadcast;
@@ -28,7 +35,7 @@ mod sendrecv;
 
 pub use alltoall::Repartition;
 pub use broadcast::{AllReduce, Broadcast, SumReduce};
-pub use halo_exchange::{HaloExchange, TrimPad};
+pub use halo_exchange::{HaloExchange, HaloInFlight, TrimPad};
 pub use scatter::{Gather, Scatter};
 pub use sendrecv::SendRecv;
 

@@ -42,6 +42,8 @@ impl Scatter {
         let rank = comm.rank();
         let mut kept: Option<Tensor<T>> = None;
         if rank == root {
+            // Post every shard's send up front; each extracted shard is
+            // *moved* into its message (zero-copy, move semantics).
             let x = x.ok_or_else(|| Error::Primitive("scatter: root tensor missing".into()))?;
             crate::tensor::check_same(x.shape(), decomp.global_shape(), "scatter input")?;
             for (cell, dst, region) in decomp.cells() {
@@ -49,7 +51,8 @@ impl Scatter {
                 if dst == rank {
                     kept = Some(shard);
                 } else {
-                    comm.send_slice(dst, tag + cell as u64, shard.data())?;
+                    let req = comm.isend_vec(dst, tag + cell as u64, shard.into_vec())?;
+                    comm.wait_send(req)?;
                 }
             }
         }
@@ -62,7 +65,8 @@ impl Scatter {
                 .find(|(_, r, _)| *r == rank)
                 .map(|(c, _, _)| c)
                 .expect("rank in decomposition");
-            let data = comm.recv_vec::<T>(root, tag + cell as u64)?;
+            let req = comm.irecv::<T>(root, tag + cell as u64)?;
+            let data = comm.wait(req)?;
             return Ok(Some(Tensor::from_vec(&region.shape, data)?));
         }
         Ok(None)
@@ -76,7 +80,8 @@ impl Scatter {
         x: Option<Tensor<T>>,
     ) -> Result<Option<Tensor<T>>> {
         let rank = comm.rank();
-        // Shard owners send (except the root's own shard).
+        // Shard owners send (except the root's own shard); move semantics
+        // let the send consume the local buffer.
         let mut own_shard: Option<(Region, Tensor<T>)> = None;
         if let Some(region) = decomp.region_of(rank) {
             let shard =
@@ -90,20 +95,35 @@ impl Scatter {
                     .find(|(_, r, _)| *r == rank)
                     .map(|(c, _, _)| c)
                     .expect("rank in decomposition");
-                comm.send_slice(root, tag + 1000 + cell as u64, shard.data())?;
+                let req = comm.isend_vec(root, tag + 1000 + cell as u64, shard.into_vec())?;
+                comm.wait_send(req)?;
             }
         }
         if rank == root {
-            let mut out = Tensor::zeros(decomp.global_shape());
+            // Post-all-then-complete: every receive goes out before any is
+            // waited on, so the assembly below drains arrivals instead of
+            // serializing on one sender at a time.
+            let mut pending: Vec<(usize, Region, Option<crate::comm::RecvRequest<T>>)> =
+                Vec::new();
             for (cell, src, region) in decomp.cells() {
-                let shard = if src == rank {
-                    own_shard
+                if src == rank {
+                    pending.push((cell, region, None));
+                } else {
+                    let req = comm.irecv::<T>(src, tag + 1000 + cell as u64)?;
+                    pending.push((cell, region, Some(req)));
+                }
+            }
+            let mut out = Tensor::zeros(decomp.global_shape());
+            for (_, region, req) in pending {
+                let shard = match req {
+                    None => own_shard
                         .take()
                         .map(|(_, s)| s)
-                        .ok_or_else(|| Error::Primitive("gather: root shard missing".into()))?
-                } else {
-                    let data = comm.recv_vec::<T>(src, tag + 1000 + cell as u64)?;
-                    Tensor::from_vec(&region.shape, data)?
+                        .ok_or_else(|| Error::Primitive("gather: root shard missing".into()))?,
+                    Some(req) => {
+                        let data = comm.wait(req)?;
+                        Tensor::from_vec(&region.shape, data)?
+                    }
                 };
                 out.copy_region_from(&shard, &Region::full(&region.shape), &region.start)?;
             }

@@ -58,11 +58,15 @@ impl<T: Scalar> DistLinearOp<T> for SendRecv {
             return Ok(x);
         }
         if rank == self.src {
+            // Copy semantics: the source keeps its realization, so the
+            // posted send copies the buffer once (no serialization).
             let x = x.ok_or_else(|| Error::Primitive("sendrecv: source shard missing".into()))?;
-            comm.send_slice(self.dst, self.tag, x.data())?;
+            let req = comm.isend_slice(self.dst, self.tag, x.data())?;
+            comm.wait_send(req)?;
             Ok(Some(x))
         } else if rank == self.dst {
-            let data = comm.recv_vec::<T>(self.src, self.tag)?;
+            let req = comm.irecv::<T>(self.src, self.tag)?;
+            let data = comm.wait(req)?;
             Ok(Some(Tensor::from_vec(&self.shape, data)?))
         } else {
             Ok(None)
@@ -76,13 +80,16 @@ impl<T: Scalar> DistLinearOp<T> for SendRecv {
         }
         if rank == self.dst {
             let y = y.ok_or_else(|| Error::Primitive("sendrecv*: dst shard missing".into()))?;
-            comm.send_slice(self.src, self.tag + 1, y.data())?;
-            // destination buffer deallocated (D_b)
+            // Destination buffer deallocated (D_b): the send *moves* the
+            // cotangent — the zero-copy path.
+            let req = comm.isend_vec(self.src, self.tag + 1, y.into_vec())?;
+            comm.wait_send(req)?;
             Ok(None)
         } else if rank == self.src {
             let mut y =
                 y.ok_or_else(|| Error::Primitive("sendrecv*: src shard missing".into()))?;
-            let incoming = comm.recv_vec::<T>(self.dst, self.tag + 1)?;
+            let req = comm.irecv::<T>(self.dst, self.tag + 1)?;
+            let incoming = comm.wait(req)?;
             let inc = Tensor::from_vec(&self.shape, incoming)?;
             y.add_assign(&inc)?;
             Ok(Some(y))

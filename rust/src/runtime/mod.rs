@@ -16,14 +16,23 @@
 //!   kernels otherwise (pooling and activations are always native — they
 //!   are memory-bound and not the paper's hot-spot).
 
+//! Without the `pjrt` cargo feature (the default — the `xla` crate is not
+//! in the baseline dependency set), the manifest/naming machinery still
+//! compiles and [`PjrtRuntime::new`] returns a descriptive error, so every
+//! caller falls back to the native kernels at runtime.
+
 use crate::error::{Error, Result};
 use crate::nn::kernels::{LocalKernels, NativeKernels};
 use crate::nn::native::{Conv2dSpec, Pool2dSpec};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
-use std::collections::{HashMap, HashSet};
+#[cfg(feature = "pjrt")]
+use std::collections::HashSet;
+use std::collections::HashMap;
 use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::sync::mpsc::{channel, Sender};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 /// One artifact in the manifest.
@@ -94,6 +103,7 @@ impl Manifest {
     }
 }
 
+#[cfg(feature = "pjrt")]
 enum Job {
     Run {
         name: String,
@@ -104,6 +114,7 @@ enum Job {
 }
 
 /// Handle to the PJRT service thread.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     manifest: Manifest,
     jobs: Mutex<Sender<Job>>,
@@ -112,6 +123,7 @@ pub struct PjrtRuntime {
     available: HashSet<String>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Start the runtime for an artifacts directory.
     pub fn new(dir: &str) -> Result<PjrtRuntime> {
@@ -192,6 +204,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Drop for PjrtRuntime {
     fn drop(&mut self) {
         if let Ok(tx) = self.jobs.lock() {
@@ -200,6 +213,42 @@ impl Drop for PjrtRuntime {
     }
 }
 
+/// Stub runtime for builds without the `pjrt` feature: construction fails
+/// with a descriptive error, so [`PjrtKernels::load`] surfaces the missing
+/// capability instead of silently degrading.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    /// Always fails: this build carries no XLA runtime.
+    pub fn new(_dir: &str) -> Result<PjrtRuntime> {
+        Err(Error::Runtime(
+            "built without the `pjrt` feature: the XLA/PJRT runtime is unavailable; \
+             use the native backend"
+                .into(),
+        ))
+    }
+
+    /// No artifacts are ever available in a stub build.
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    /// No artifacts are ever available in a stub build.
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// Unreachable in practice (`new` never succeeds); kept for API parity.
+    pub fn run(&self, name: &str, _inputs: Vec<Tensor<f32>>) -> Result<Vec<Tensor<f32>>> {
+        Err(Error::Runtime(format!(
+            "artifact '{name}' cannot run: built without the `pjrt` feature"
+        )))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 fn run_job(
     client: &xla::PjRtClient,
     manifest: &Manifest,
