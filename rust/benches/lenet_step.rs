@@ -3,6 +3,15 @@
 //! only when `make artifacts` has run). This is the end-to-end cost the
 //! §5 experiment pays per batch.
 //!
+//! Two kernel-level reports ride along:
+//!
+//! * **E12** times the naive scalar-loop conv kernels against the
+//!   im2col/GEMM kernels on the LeNet shapes (forward + VJP) — the
+//!   acceptance evidence for the shared GEMM core;
+//! * the step table's `allocs/step` column counts fresh scratch-arena
+//!   allocations per steady-state step on rank 0 (warm-up excluded) —
+//!   zero means every im2col/staging buffer was reused.
+//!
 //! Setup (network build, parameter init, PJRT compilation) happens once
 //! per configuration inside a single cluster; the timed region is the
 //! steady-state per-step cost, which is what the training loop pays.
@@ -11,8 +20,15 @@ use distdl::comm::Cluster;
 use distdl::config::Backend;
 use distdl::coordinator::{kernels_for, train_step};
 use distdl::data::SyntheticMnist;
+use distdl::memory::scratch_stats;
 use distdl::models::{lenet5, LeNetConfig, LeNetLayout};
+use distdl::nn::native::{
+    conv2d_backward, conv2d_backward_naive, conv2d_forward, conv2d_forward_naive, Conv2dSpec,
+};
 use distdl::optim::Adam;
+use distdl::tensor::{numel, Tensor};
+use distdl::testing::bench::fmt_time;
+use distdl::util::rng::SplitMix64;
 use distdl::util::timer::{Stats, Timer};
 
 fn measure(
@@ -21,7 +37,7 @@ fn measure(
     batch: usize,
     forward_only: bool,
     iters: usize,
-) -> Stats {
+) -> (Stats, f64) {
     let data = SyntheticMnist::new(1, batch * 2);
     let batches = data.batches(batch);
     let batch0 = batches[0].clone();
@@ -32,7 +48,8 @@ fn measure(
         let net = lenet5::<f32>(&cfg, kernels)?;
         let mut st = net.init(comm.rank(), 1)?;
         let mut opt = Adam::new(1e-3);
-        // warm-up (includes PJRT compilation on first use)
+        // warm-up (includes PJRT compilation on first use, and fills the
+        // per-rank scratch arena's working set)
         for _ in 0..2 {
             if forward_only {
                 let x = (comm.rank() == 0).then(|| batch0.images_as::<f32>());
@@ -41,6 +58,7 @@ fn measure(
                 train_step(&net, &mut st, comm, &batch0, &mut opt)?;
             }
         }
+        let alloc0 = scratch_stats::<f32>().allocations;
         let mut times = Vec::with_capacity(iters);
         for _ in 0..iters {
             comm.barrier();
@@ -54,17 +72,83 @@ fn measure(
             comm.barrier();
             times.push(t.elapsed_s());
         }
-        Ok(times)
+        let allocs = scratch_stats::<f32>().allocations - alloc0;
+        Ok((times, allocs))
     })
     .expect("bench cluster");
-    Stats::of(&samples[0])
+    let (times, allocs) = &samples[0];
+    (Stats::of(times), *allocs as f64 / iters as f64)
+}
+
+fn rand_t(shape: &[usize], rng: &mut SplitMix64) -> Tensor<f32> {
+    Tensor::from_vec(
+        shape,
+        (0..numel(shape))
+            .map(|_| (rng.next_f64() - 0.5) as f32)
+            .collect(),
+    )
+    .unwrap()
+}
+
+fn median_time(iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm-up
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t = Timer::start();
+            f();
+            t.elapsed_s()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite timings"));
+    samples[samples.len() / 2]
+}
+
+/// E12: naive scalar loops vs im2col/GEMM, forward + VJP, on the LeNet
+/// conv shapes at batch 64 (C1 sees its padded 32x32 input; the kernels
+/// themselves are always "valid").
+fn kernel_speedup() {
+    println!("\n== E12: conv kernels, naive loops vs im2col/GEMM (batch 64, f32, fwd+VJP) ==");
+    println!(
+        "{:<34} {:>12} {:>12} {:>9}",
+        "kernel", "naive", "im2col/GEMM", "speedup"
+    );
+    let mut rng = SplitMix64::new(4);
+    let cases: [(&str, [usize; 4], [usize; 4]); 2] = [
+        ("C1 conv 1->6 k5 (padded 32x32)", [64, 1, 32, 32], [6, 1, 5, 5]),
+        ("C3 conv 6->16 k5 (14x14)", [64, 6, 14, 14], [16, 6, 5, 5]),
+    ];
+    let spec = Conv2dSpec::default();
+    let iters = 5;
+    for (name, xs, ws) in cases {
+        let x = rand_t(&xs, &mut rng);
+        let w = rand_t(&ws, &mut rng);
+        let bias = rand_t(&[ws[0]], &mut rng);
+        let y = conv2d_forward(&x, &w, Some(&bias), spec).unwrap();
+        let dy = rand_t(y.shape(), &mut rng);
+        let naive = median_time(iters, || {
+            conv2d_forward_naive(&x, &w, Some(&bias), spec).unwrap();
+            conv2d_backward_naive(&x, &w, &dy, spec).unwrap();
+        });
+        let fast = median_time(iters, || {
+            conv2d_forward(&x, &w, Some(&bias), spec).unwrap();
+            conv2d_backward(&x, &w, &dy, spec).unwrap();
+        });
+        println!(
+            "{:<34} {:>12} {:>12} {:>8.2}x",
+            name,
+            fmt_time(naive),
+            fmt_time(fast),
+            naive / fast
+        );
+    }
 }
 
 fn main() {
+    kernel_speedup();
     println!("\n== E9: LeNet-5 step latency (batch 64, steady state) ==");
     println!(
-        "{:<44} {:>12} {:>12} {:>12} {:>6}",
-        "configuration", "mean", "median", "min", "n"
+        "{:<44} {:>12} {:>12} {:>12} {:>6} {:>12}",
+        "configuration", "mean", "median", "min", "n", "allocs/step"
     );
     let batch = 64;
     let iters = 10;
@@ -95,14 +179,15 @@ fn main() {
                         continue;
                     }
                 }
-                let stats = measure(layout, backend, batch, forward_only, iters);
+                let (stats, allocs_per_step) = measure(layout, backend, batch, forward_only, iters);
                 println!(
-                    "{:<44} {:>12} {:>12} {:>12} {:>6}",
+                    "{:<44} {:>12} {:>12} {:>12} {:>6} {:>12.1}",
                     name,
-                    distdl::testing::bench::fmt_time(stats.mean),
-                    distdl::testing::bench::fmt_time(stats.median),
-                    distdl::testing::bench::fmt_time(stats.min),
-                    stats.n
+                    fmt_time(stats.mean),
+                    fmt_time(stats.median),
+                    fmt_time(stats.min),
+                    stats.n,
+                    allocs_per_step
                 );
             }
         }

@@ -13,19 +13,27 @@
 //! an 8-peer pairwise exchange with interleaved send→recv pairs versus
 //! posting every send and receive before completing any.
 //!
-//! The trailing table reports the per-benchmark speedup — the acceptance
-//! evidence that the nonblocking engine beats the blocking baseline.
+//! A compute-kernel section benchmarks the local matmul through the
+//! shared blocked multi-threaded GEMM core against the retained naive
+//! triple loop (gather and all-to-all run their assemblies on
+//! `Comm::wait_any`, so the collective numbers above already include the
+//! arrival-order drain).
+//!
+//! The trailing table reports the per-benchmark speedups — nonblocking
+//! engine vs blocking wire baseline, and GEMM vs naive kernels.
 
 use distdl::adjoint::DistLinearOp;
 use distdl::comm::{Cluster, Comm};
 use distdl::error::Result;
 use distdl::partition::{Partition, TensorDecomposition};
 use distdl::primitives::{AllReduce, Broadcast, Gather, Repartition, Scatter, SumReduce};
-use distdl::tensor::Tensor;
+use distdl::tensor::{ops, Tensor};
 use distdl::testing::bench::{BenchGroup, BenchResult};
 
 const WIRE: &str = "blocking-wire";
 const NB: &str = "nonblocking";
+const NAIVE: &str = "naive";
+const GEMM: &str = "gemm";
 
 /// Run one collective body under both engines.
 fn bench_both<F>(g: &mut BenchGroup, name: &str, bytes: usize, world: usize, body: F)
@@ -45,19 +53,21 @@ where
 }
 
 fn report_speedup(results: &[BenchResult]) {
-    println!("\n== speedup: nonblocking zero-copy engine vs blocking wire baseline ==");
+    println!("\n== speedups: nonblocking vs blocking-wire, GEMM vs naive kernels ==");
     println!("{:<52} {:>10}", "benchmark", "speedup");
-    let nb_suffix = format!(" [{NB}]");
-    let wire_suffix = format!(" [{WIRE}]");
-    for r in results {
-        if let Some(base_name) = r.name.strip_suffix(nb_suffix.as_str()) {
-            let wire_name = format!("{base_name}{wire_suffix}");
-            if let Some(base) = results.iter().find(|x| x.name == wire_name) {
-                println!(
-                    "{:<52} {:>9.2}x",
-                    base_name,
-                    base.stats.median / r.stats.median
-                );
+    for (fast, base) in [(NB, WIRE), (GEMM, NAIVE)] {
+        let fast_suffix = format!(" [{fast}]");
+        let base_suffix = format!(" [{base}]");
+        for r in results {
+            if let Some(base_name) = r.name.strip_suffix(fast_suffix.as_str()) {
+                let base_full = format!("{base_name}{base_suffix}");
+                if let Some(b) = results.iter().find(|x| x.name == base_full) {
+                    println!(
+                        "{:<52} {:>9.2}x",
+                        base_name,
+                        b.stats.median / r.stats.median
+                    );
+                }
             }
         }
     }
@@ -196,6 +206,32 @@ fn main() {
                 Ok(())
             },
         );
+    }
+
+    // Local GEMM core vs the retained naive triple loop (f32 and f64).
+    {
+        for n in [64usize, 192] {
+            let a32 = Tensor::<f32>::from_fn(&[n, n], |i| {
+                ((i[0] * 31 + i[1] * 7) % 13) as f32 * 0.1 - 0.6
+            });
+            let b32 = Tensor::<f32>::from_fn(&[n, n], |i| {
+                ((i[0] * 17 + i[1] * 3) % 11) as f32 * 0.1 - 0.5
+            });
+            g.bench(&format!("matmul f32 {n}x{n} [{NAIVE}]"), || {
+                ops::matmul_naive(&a32, &b32).unwrap();
+            });
+            g.bench(&format!("matmul f32 {n}x{n} [{GEMM}]"), || {
+                ops::matmul(&a32, &b32).unwrap();
+            });
+            let a64: Tensor<f64> = a32.cast();
+            let b64: Tensor<f64> = b32.cast();
+            g.bench(&format!("matmul f64 {n}x{n} [{NAIVE}]"), || {
+                ops::matmul_naive(&a64, &b64).unwrap();
+            });
+            g.bench(&format!("matmul f64 {n}x{n} [{GEMM}]"), || {
+                ops::matmul(&a64, &b64).unwrap();
+            });
+        }
     }
 
     let results = g.finish();

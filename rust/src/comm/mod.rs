@@ -21,10 +21,11 @@
 //!   completes the handle.
 //! * [`Comm::irecv`] posts a receive and returns a typed
 //!   [`RecvRequest<T>`]. Completion is [`Comm::wait`] (blocking),
-//!   [`Comm::wait_all`], or the nonblocking probe [`Comm::test`].
-//!   Requests posted on the same `(source, tag)` match arrivals **in post
-//!   order** (MPI's nonovertaking rule), independent of the order they are
-//!   waited on.
+//!   [`Comm::wait_all`], [`Comm::wait_any`] (first *arrival* wins — the
+//!   `Waitany` the gather and all-to-all assemblies drain on), or the
+//!   nonblocking probe [`Comm::test`]. Requests posted on the same
+//!   `(source, tag)` match arrivals **in post order** (MPI's
+//!   nonovertaking rule), independent of the order they are waited on.
 //!
 //! The primitives post *all* their sends and receives for a phase before
 //! completing any of them ("post-all-then-complete"), and the hot layers
@@ -565,6 +566,78 @@ impl Comm {
         Ok(out)
     }
 
+    /// Complete **whichever** posted receive's message is available first
+    /// — MPI's `Waitany`. Returns the completed request's index in `reqs`
+    /// (at call time) and its payload, removing the request from `reqs`;
+    /// callers holding per-request metadata in a parallel `Vec` should
+    /// `remove(idx)` from it symmetrically.
+    ///
+    /// Where [`Comm::wait_all`] drains receives in *post* order — so a
+    /// slow first sender stalls the assembly of messages that already
+    /// arrived — this drains them in *arrival* order. The nonovertaking
+    /// rule still applies per `(source, tag)` stream: a request only
+    /// completes once the arrivals it is sequenced behind have been
+    /// matched. Gather and all-to-all assembly post distinct
+    /// `(source, tag)` pairs, so for them arrival order is unconstrained.
+    ///
+    /// On timeout every outstanding request in `reqs` is abandoned (their
+    /// slots retired, mirroring [`Comm::wait_all`]'s error path) and the
+    /// error is returned.
+    pub fn wait_any<T: Scalar>(
+        &mut self,
+        reqs: &mut Vec<RecvRequest<T>>,
+    ) -> Result<(usize, Vec<T>)> {
+        if reqs.is_empty() {
+            return Err(Error::Comm("wait_any: no posted receives".into()));
+        }
+        let t0 = Instant::now();
+        let deadline = t0 + self.recv_timeout;
+        loop {
+            self.drain_inbox();
+            let keys: Vec<(usize, u64)> = reqs.iter().map(|r| (r.src, r.tag)).collect();
+            for (src, tag) in keys {
+                while self.promote_parked(src, tag) {}
+            }
+            if let Some(idx) = reqs
+                .iter()
+                .position(|r| self.ready.contains_key(&(r.src, r.tag, r.seq)))
+            {
+                let req = reqs.remove(idx);
+                let body = self
+                    .ready
+                    .remove(&(req.src, req.tag, req.seq))
+                    .expect("readiness probed above");
+                self.stats.wait_time_s += t0.elapsed().as_secs_f64();
+                self.in_flight -= 1;
+                self.stats.messages_received += 1;
+                self.stats.bytes_received += body.wire_len();
+                return Ok((idx, self.decode_vec(body)?));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let timed_out = remaining.is_zero()
+                || match self.inbox.recv_timeout(remaining) {
+                    Ok(msg) => {
+                        self.parked
+                            .entry((msg.src, msg.tag))
+                            .or_default()
+                            .push_back(msg.body);
+                        false
+                    }
+                    Err(_) => true,
+                };
+            if timed_out {
+                self.stats.wait_time_s += t0.elapsed().as_secs_f64();
+                self.in_flight -= reqs.len();
+                let outstanding = reqs.len();
+                reqs.clear();
+                return Err(Error::Comm(format!(
+                    "rank {} timed out after {:?} in wait_any with {outstanding} receives outstanding",
+                    self.rank, self.recv_timeout
+                )));
+            }
+        }
+    }
+
     /// Nonblocking probe: has the message for `req` already arrived?
     /// Never blocks; a `true` result means `wait` will return immediately.
     pub fn test<T: Scalar>(&mut self, req: &RecvRequest<T>) -> bool {
@@ -894,6 +967,75 @@ mod tests {
         })
         .unwrap();
         assert_eq!(results[1], 42.0);
+    }
+
+    #[test]
+    fn wait_any_drains_in_arrival_order() {
+        // Rank 0 posts receives from ranks 1..4 on distinct tags, then
+        // releases the senders one at a time in reverse rank order (3, 2,
+        // 1) with a "go" token, completing one wait_any between releases.
+        // Each wait_any must surface the one sender that was released —
+        // i.e. completion follows arrival order, not the post order the
+        // requests were issued in.
+        let results = Cluster::run(4, |comm| {
+            if comm.rank() == 0 {
+                let mut reqs: Vec<RecvRequest<f64>> = Vec::new();
+                let mut srcs = Vec::new();
+                for src in 1..4usize {
+                    reqs.push(comm.irecv::<f64>(src, 40 + src as u64)?);
+                    srcs.push(src);
+                }
+                let mut order = Vec::new();
+                for release in [3usize, 2, 1] {
+                    comm.send_slice::<f64>(release, 90, &[0.0])?;
+                    let (idx, data) = comm.wait_any(&mut reqs)?;
+                    let src = srcs.remove(idx);
+                    assert_eq!(src, release, "wait_any surfaced the wrong sender");
+                    assert_eq!(data[0] as usize, src);
+                    order.push(src);
+                }
+                assert!(reqs.is_empty());
+                assert_eq!(comm.in_flight(), 0);
+                Ok(order)
+            } else {
+                let _ = comm.recv_vec::<f64>(0, 90)?;
+                comm.send_slice::<f64>(0, 40 + comm.rank() as u64, &[comm.rank() as f64])?;
+                Ok(vec![])
+            }
+        })
+        .unwrap();
+        assert_eq!(results[0], vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn wait_any_respects_nonovertaking_per_stream() {
+        // Two receives on the same (source, tag): the first-posted request
+        // must get the first-sent payload even when completed via wait_any.
+        let results = Cluster::run(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send_slice::<f64>(1, 7, &[10.0])?;
+                comm.send_slice::<f64>(1, 7, &[20.0])?;
+                Ok(vec![])
+            } else {
+                let mut reqs = vec![comm.irecv::<f64>(0, 7)?, comm.irecv::<f64>(0, 7)?];
+                let (i1, d1) = comm.wait_any(&mut reqs)?;
+                let (i2, d2) = comm.wait_any(&mut reqs)?;
+                assert_eq!((i1, i2), (0, 0));
+                Ok(vec![d1[0], d2[0]])
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn wait_any_on_empty_set_errors() {
+        Cluster::run(1, |comm| {
+            let mut reqs: Vec<RecvRequest<f64>> = Vec::new();
+            assert!(comm.wait_any(&mut reqs).is_err());
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

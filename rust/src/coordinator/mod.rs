@@ -14,7 +14,12 @@
 //! micro-batch's input tensor is prepared in the overlap window between
 //! the backward pass (whose gradient sum-reduce sends are posted eagerly)
 //! and the local optimizer step, and the engine's in-flight/wait-time
-//! counters are surfaced on the [`MetricLog`] (`comm_*` meta keys).
+//! counters are surfaced on the [`MetricLog`] (`comm_*` meta keys). Each
+//! rank thread owns a [`crate::memory`] scratch arena that the layer
+//! kernels stage im2col columns, GEMM pack panels, and halo buffers in;
+//! rank 0's reuse counters land on the log as `scratch_*` keys — after
+//! warm-up, steady-state steps should add nothing to
+//! `scratch_allocations`.
 
 use crate::autograd::NetworkState;
 use crate::comm::{Cluster, Comm};
@@ -138,9 +143,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         } else {
             None
         };
-        // Surface the comm engine's overlap counters on the metric log.
+        // Surface the comm engine's overlap counters and this rank
+        // thread's scratch-arena reuse counters on the metric log. The
+        // arena is thread-local, so these are exactly the allocations the
+        // rank-0 coordinator thread's kernels performed.
         if comm.rank() == 0 {
             log.set_comm_stats(&comm.stats());
+            log.set_scratch_stats(&crate::memory::scratch_stats::<f32>());
         }
         Ok((log, state.param_count(), eval_acc))
     })?;

@@ -16,14 +16,23 @@
 //! This crate implements the whole stack:
 //!
 //! * [`tensor`] — dense row-major tensors (`f32`/`f64`) with the region-copy
-//!   machinery every primitive is built on.
+//!   machinery every primitive is built on; `tensor::ops::matmul` routes
+//!   through the shared GEMM core below.
 //! * [`partition`] — cartesian worker grids and load-balanced tensor
 //!   decompositions (§3–4 of the paper).
 //! * [`memory`] — the linear-algebraic memory model of §2 / Appendix A:
-//!   allocate, clear, add, copy, move, and their adjoints.
+//!   allocate, clear, add, copy, move, and their adjoints — plus the
+//!   [`memory::Scratch`] arena that applies the same algebra to the hot
+//!   path: each coordinator rank thread owns a buffer pool whose `take`
+//!   replaces a deallocate/re-allocate round trip with the clear operator
+//!   `K_b`, so im2col columns, GEMM pack panels, and halo staging are
+//!   reused across micro-batches (counters prove steady-state steps
+//!   allocate nothing).
 //! * [`comm`] — an MPI-like message-passing substrate (threads + channels)
 //!   built as a **nonblocking request engine**: `isend`/`irecv` post
-//!   operations and return requests completed by `wait`/`wait_all`/`test`,
+//!   operations and return requests completed by
+//!   `wait`/`wait_all`/`wait_any`/`test` (`wait_any` drains arrivals in
+//!   arrival order — the gather and all-to-all assemblies run on it),
 //!   payloads travel a typed zero-copy `Arc` path (the length-checked wire
 //!   format remains as fallback), and the blocking API survives as thin
 //!   wrappers. The paper's model is explicitly back-end independent.
@@ -34,7 +43,8 @@
 //!   request engine; the halo exchange additionally splits into
 //!   `start`/`finish` so layers overlap compute with communication (the
 //!   distributed conv computes its halo-independent interior while halo
-//!   messages are in flight).
+//!   messages are in flight, on slabs its trim/pad shim extracts straight
+//!   from the exchange buffer).
 //! * [`halo`] — Appendix B halo geometry: per-worker left/right halo widths
 //!   and "unused input" regions for arbitrary kernel size/stride/dilation/
 //!   padding.
@@ -43,7 +53,11 @@
 //!   torch.autograd; primitives register their adjoints as backward ops.
 //! * [`nn`] — §4 distributed layers (conv, pool, affine, transpose,
 //!   pointwise) over both native Rust kernels and AOT-compiled XLA
-//!   executables.
+//!   executables. The native sequential layer functions share one compute
+//!   core: the cache-blocked, multi-threaded GEMM in `nn::native::gemm`,
+//!   reached directly by the affine kernel and through im2col/col2im by
+//!   the convolution kernels; the original scalar loops survive as
+//!   `*_naive` references for parity tests and kernel-speedup benches.
 //! * [`runtime`] — PJRT loading/execution of `artifacts/*.hlo.txt` produced
 //!   by the JAX/Pallas compile path (`python/compile`); gated behind the
 //!   `pjrt` cargo feature (off by default — the crate builds with zero
@@ -57,6 +71,16 @@
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! request/training path is pure Rust + PJRT.
+
+// Numeric-kernel idiom: explicit index loops mirror the paper's subscript
+// algebra and keep packed-buffer offset arithmetic auditable; the GEMM
+// entry points legitimately take the full (m, n, k, operands, layout)
+// parameter set. `unknown_lints` keeps older clippy versions from choking
+// on newer lint names.
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
 
 pub mod adjoint;
 pub mod autograd;

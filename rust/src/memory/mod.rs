@@ -20,10 +20,23 @@
 //! adds in adjoints) are compositions of exactly these five operators, and
 //! the unit tests here verify the §2 algebra (the crate's "theoretical
 //! glue") independently of any communication.
+//!
+//! [`Scratch`] puts the same algebra to work on the compute hot path: the
+//! observation behind Eq. (3)–(4) is that `D_b A_b = I` — a deallocation
+//! immediately followed by a re-allocation of the same subset is the
+//! identity up to a clear, so a training loop that allocates and frees the
+//! same staging buffers (im2col columns, GEMM pack panels, halo staging)
+//! every micro-batch can replace each `D_b … A_b` pair with the *clear*
+//! operator `K_b` (Eq. 5) on a pooled buffer. Each coordinator rank thread
+//! owns one arena (thread-local), the layers borrow buffers from it, and
+//! its counters distinguish true allocations (`A_b`) from clears of pooled
+//! memory (`K_b`) — the evidence that steady-state steps stop allocating.
 
 use crate::error::{Error, Result};
 use crate::tensor::Scalar;
-use std::collections::BTreeMap;
+use std::any::{Any, TypeId};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
 
 /// A memory: an ordered collection of named subsets ("realizations").
 ///
@@ -399,6 +412,178 @@ pub fn memop_adjoint_residual<T: Scalar>(
     Ok((lhs - rhs).abs() / denom)
 }
 
+// ---------------------------------------------------------------------
+// Scratch arena — the §2 allocation algebra applied to the hot path.
+// ---------------------------------------------------------------------
+
+/// Counters describing how an arena served its `take` requests.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// `take` calls that had to mint a fresh buffer — a true allocation
+    /// operator `A_b` (Eq. 3). After warm-up a steady-state training step
+    /// should add **zero** to this counter.
+    pub allocations: usize,
+    /// `take` calls served by clearing a pooled buffer — `K_b` (Eq. 5)
+    /// substituted for the `D_b … A_b` round trip.
+    pub reuses: usize,
+    /// Buffers currently parked in the pool.
+    pub pooled: usize,
+    /// Total capacity (elements) across parked buffers.
+    pub pooled_elems: usize,
+}
+
+/// A reusable buffer pool for one scalar type.
+///
+/// `take(len)` returns a zero-filled buffer of exactly `len` elements,
+/// preferring to *clear* a pooled buffer over allocating a fresh one;
+/// `give` parks a buffer for later reuse instead of deallocating it. The
+/// semantics seen by the borrower are identical to `A_b` (a zeroed subset
+/// comes into scope) — only the counters reveal which operator ran.
+#[derive(Debug, Default)]
+pub struct Scratch<T: Scalar> {
+    free: Vec<Vec<T>>,
+    allocations: usize,
+    reuses: usize,
+}
+
+impl<T: Scalar> Scratch<T> {
+    /// Empty arena.
+    pub fn new() -> Self {
+        Scratch {
+            free: Vec::new(),
+            allocations: 0,
+            reuses: 0,
+        }
+    }
+
+    /// Borrow a zero-filled buffer of `len` elements. Best-fit: the
+    /// smallest pooled buffer whose capacity covers `len` is cleared and
+    /// returned; only when none fits is a fresh buffer allocated.
+    pub fn take(&mut self, len: usize) -> Vec<T> {
+        self.take_inner(len, true)
+    }
+
+    /// Like [`Scratch::take`], but with **unspecified contents** (stale
+    /// values from the buffer's previous life): skips the clear for
+    /// consumers that fully overwrite every element they later read, such
+    /// as GEMM pack panels and im2col column buffers. In §2 terms this is
+    /// a bare `A_b` whose following `K_b` is elided because the operator
+    /// applied next annihilates the incoming value anyway.
+    pub fn take_dirty(&mut self, len: usize) -> Vec<T> {
+        let mut buf = self.take_inner(len, false);
+        // only the tail beyond the buffer's previous length is zero; that
+        // is fine — and cheaper — for full-overwrite consumers
+        buf.resize(len, T::ZERO);
+        buf
+    }
+
+    fn take_inner(&mut self, len: usize, zeroed: bool) -> Vec<T> {
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, buf) in self.free.iter().enumerate() {
+            let cap = buf.capacity();
+            let tighter = match best {
+                None => true,
+                Some((_, c)) => cap < c,
+            };
+            if cap >= len && tighter {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                self.reuses += 1;
+                let mut buf = self.free.swap_remove(i);
+                if zeroed {
+                    buf.clear();
+                    buf.resize(len, T::ZERO);
+                }
+                buf
+            }
+            None => {
+                self.allocations += 1;
+                vec![T::ZERO; len]
+            }
+        }
+    }
+
+    /// Return a borrowed buffer to the pool (the deferred `D_b`).
+    pub fn give(&mut self, buf: Vec<T>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> ScratchStats {
+        ScratchStats {
+            allocations: self.allocations,
+            reuses: self.reuses,
+            pooled: self.free.len(),
+            pooled_elems: self.free.iter().map(|b| b.capacity()).sum(),
+        }
+    }
+
+    /// Zero the counters (the pool itself is kept).
+    pub fn reset_stats(&mut self) {
+        self.allocations = 0;
+        self.reuses = 0;
+    }
+}
+
+thread_local! {
+    /// One arena per scalar type per thread. [`crate::comm::Cluster`] runs
+    /// each world rank on its own OS thread, so this realizes "the
+    /// coordinator thread owns a per-rank arena" with no locking: layers
+    /// and kernels running on a rank's thread all borrow from that rank's
+    /// pool.
+    static SCRATCH_POOLS: RefCell<HashMap<TypeId, Box<dyn Any>>> =
+        RefCell::new(HashMap::new());
+}
+
+fn with_scratch<T: Scalar, R>(f: impl FnOnce(&mut Scratch<T>) -> R) -> R {
+    SCRATCH_POOLS.with(|pools| {
+        let mut pools = pools.borrow_mut();
+        let entry = pools
+            .entry(TypeId::of::<T>())
+            .or_insert_with(|| Box::new(Scratch::<T>::new()));
+        f(entry
+            .downcast_mut::<Scratch<T>>()
+            .expect("scratch pool entry matches its TypeId"))
+    })
+}
+
+/// Borrow a zero-filled scratch buffer of `len` elements from the calling
+/// thread's (= rank's) arena.
+pub fn scratch_take<T: Scalar>(len: usize) -> Vec<T> {
+    with_scratch(|s: &mut Scratch<T>| s.take(len))
+}
+
+/// Borrow a scratch buffer of `len` elements with **unspecified
+/// contents** from the calling thread's arena — for consumers that fully
+/// overwrite everything they later read (GEMM pack panels, im2col
+/// columns), where the zeroing memset of [`scratch_take`] would be pure
+/// overhead.
+pub fn scratch_take_dirty<T: Scalar>(len: usize) -> Vec<T> {
+    with_scratch(|s: &mut Scratch<T>| s.take_dirty(len))
+}
+
+/// Return a scratch buffer to the calling thread's arena. Forgetting to
+/// call this is safe — the buffer is simply deallocated and the next
+/// `take` mints a fresh one (an `A_b` the counters will show).
+pub fn scratch_give<T: Scalar>(buf: Vec<T>) {
+    with_scratch(|s: &mut Scratch<T>| s.give(buf))
+}
+
+/// Counters of the calling thread's arena for `T`.
+pub fn scratch_stats<T: Scalar>() -> ScratchStats {
+    with_scratch(|s: &mut Scratch<T>| s.stats())
+}
+
+/// Reset the calling thread's arena counters for `T`.
+pub fn scratch_reset_stats<T: Scalar>() {
+    with_scratch(|s: &mut Scratch<T>| s.reset_stats())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -554,5 +739,96 @@ mod tests {
             let r = memop_adjoint_residual(&c, &x, &y).unwrap();
             assert!(r < 1e-14, "residual {r}");
         }
+    }
+
+    #[test]
+    fn scratch_take_is_zero_filled_and_reused() {
+        let mut s = Scratch::<f64>::new();
+        let mut a = s.take(8);
+        assert_eq!(a, vec![0.0; 8]);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        s.give(a);
+        // a smaller request clears and reuses the pooled buffer
+        let b = s.take(5);
+        assert_eq!(b, vec![0.0; 5]);
+        let st = s.stats();
+        assert_eq!(st.allocations, 1);
+        assert_eq!(st.reuses, 1);
+        assert_eq!(st.pooled, 0);
+        s.give(b);
+        assert_eq!(s.stats().pooled, 1);
+    }
+
+    #[test]
+    fn scratch_take_dirty_skips_the_clear() {
+        let mut s = Scratch::<f64>::new();
+        let mut a = s.take(4);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        s.give(a);
+        // dirty take reuses the buffer without zeroing its contents...
+        let b = s.take_dirty(4);
+        assert_eq!(b, vec![7.0; 4], "dirty take must skip the clear");
+        s.give(b);
+        // ...while a larger request no pooled buffer can serve still
+        // mints a fresh zeroed buffer
+        let c = s.take_dirty(6);
+        assert_eq!(c, vec![0.0; 6]);
+        let st = s.stats();
+        assert_eq!(st.allocations, 2); // the 4-capacity buffer cannot serve 6
+        assert_eq!(st.reuses, 1);
+    }
+
+    #[test]
+    fn scratch_best_fit_prefers_smallest_cover() {
+        let mut s = Scratch::<f32>::new();
+        let big = s.take(100);
+        let small = s.take(10);
+        s.give(big);
+        s.give(small);
+        // a 10-element request must come from the 10-capacity buffer
+        let got = s.take(10);
+        assert!(got.capacity() < 100, "best fit picked the oversized buffer");
+        // a 50-element request grows nothing: the 100-capacity buffer serves
+        let got2 = s.take(50);
+        assert!(got2.capacity() >= 100);
+        assert_eq!(s.stats().allocations, 2);
+        assert_eq!(s.stats().reuses, 2);
+    }
+
+    #[test]
+    fn scratch_steady_state_allocates_nothing() {
+        let mut s = Scratch::<f64>::new();
+        // warm-up: the working set is two live buffers of distinct sizes
+        let a = s.take(16);
+        let b = s.take(32);
+        s.give(a);
+        s.give(b);
+        let warm = s.stats().allocations;
+        for _ in 0..10 {
+            let a = s.take(16);
+            let b = s.take(32);
+            s.give(a);
+            s.give(b);
+        }
+        assert_eq!(s.stats().allocations, warm, "steady state allocated");
+        s.reset_stats();
+        assert_eq!(s.stats().allocations, 0);
+    }
+
+    #[test]
+    fn thread_local_scratch_roundtrip() {
+        scratch_reset_stats::<f64>();
+        let before = scratch_stats::<f64>();
+        let buf = scratch_take::<f64>(12);
+        assert_eq!(buf, vec![0.0; 12]);
+        scratch_give(buf);
+        let buf2 = scratch_take::<f64>(12);
+        scratch_give(buf2);
+        let after = scratch_stats::<f64>();
+        // the second take must have been served by the pool
+        assert!(after.reuses >= before.reuses + 1);
+        // f32 and f64 arenas are independent
+        let f = scratch_take::<f32>(4);
+        scratch_give(f);
     }
 }

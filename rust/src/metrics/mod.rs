@@ -1,6 +1,7 @@
 //! Training metrics: per-step records, aggregation, and JSON export.
 
 use crate::comm::CommStats;
+use crate::memory::ScratchStats;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -55,6 +56,17 @@ impl MetricLog {
         self.set_meta("comm_zero_copy_msgs", s.zero_copy_msgs);
         self.set_meta("comm_wire_msgs", s.wire_msgs);
         self.set_meta("comm_wait_s", format!("{:.6}", s.wait_time_s));
+    }
+
+    /// Surface a rank's scratch-arena counters as run metadata
+    /// (`scratch_*` keys, mirroring the `comm_*` convention) — the
+    /// evidence that steady-state training steps reuse their im2col/
+    /// staging buffers instead of re-allocating them.
+    pub fn set_scratch_stats(&mut self, s: &ScratchStats) {
+        self.set_meta("scratch_allocations", s.allocations);
+        self.set_meta("scratch_reuses", s.reuses);
+        self.set_meta("scratch_pooled", s.pooled);
+        self.set_meta("scratch_pooled_elems", s.pooled_elems);
     }
 
     /// Mean loss over the last `n` steps.
@@ -149,6 +161,22 @@ mod tests {
     fn empty_log_is_nan() {
         let log = MetricLog::new();
         assert!(log.recent_loss(3).is_nan());
+    }
+
+    #[test]
+    fn scratch_stats_surface_as_meta() {
+        let mut log = MetricLog::new();
+        let stats = ScratchStats {
+            allocations: 4,
+            reuses: 96,
+            pooled: 6,
+            pooled_elems: 4096,
+        };
+        log.set_scratch_stats(&stats);
+        assert_eq!(log.meta["scratch_allocations"], "4");
+        assert_eq!(log.meta["scratch_reuses"], "96");
+        assert_eq!(log.meta["scratch_pooled"], "6");
+        assert_eq!(log.meta["scratch_pooled_elems"], "4096");
     }
 
     #[test]

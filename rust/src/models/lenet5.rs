@@ -21,6 +21,13 @@
 //! The per-worker parameter shapes above are exactly Table 1; the
 //! `table1` integration test asserts them via
 //! [`crate::autograd::Network::placement_report`].
+//!
+//! On the native backend every layer's sequential function now runs on
+//! the shared im2col/GEMM compute core with per-rank scratch-arena
+//! staging (see [`crate::nn::native`]): a steady-state training step of
+//! this network performs zero im2col/halo-staging allocations after
+//! warm-up, which the `lenet_step` bench's `allocs/step` column and the
+//! coordinator's `scratch_*` metrics verify.
 
 use crate::autograd::Network;
 use crate::error::Result;

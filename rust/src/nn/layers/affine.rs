@@ -13,7 +13,10 @@
 //!           δx ← R_{Pw→Px} δx̂
 //! ```
 //! No explicit all-reduce anywhere: the forward broadcasts induce the
-//! adjoint sum-reduces and vice versa.
+//! adjoint sum-reduces and vice versa. The local `Affine`/`[δAffine]*`
+//! on each grid cell runs on the shared blocked multi-threaded GEMM core
+//! ([`crate::nn::native::gemm`]), with pack buffers staged in the
+//! per-rank scratch arena.
 
 use crate::adjoint::DistLinearOp;
 use crate::autograd::{Layer, LayerState};

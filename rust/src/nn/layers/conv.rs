@@ -26,7 +26,13 @@
 //! its kernel window touches neither the used left-halo entries nor the
 //! used right-halo entries of the trim/pad buffer. Because local kernels
 //! are translation invariant, the interior and boundary slabs are computed
-//! by running the ordinary kernel on extracted input slabs.
+//! by running the ordinary (arena-backed im2col/GEMM) kernel on input
+//! slabs that [`TrimPad::apply_slab`] extracts **directly from the
+//! exchange buffer** — the full trim/pad compute buffer is materialised at
+//! most once per forward (as the backward stash, under training), where it
+//! used to be built twice. Halo staging and slab buffers are borrowed from
+//! the per-rank [`crate::memory`] scratch arena and returned after use, so
+//! steady-state steps re-allocate none of them.
 
 use crate::adjoint::DistLinearOp;
 use crate::autograd::{Layer, LayerState};
@@ -170,6 +176,19 @@ impl<T: Scalar> DistConv2d<T> {
         })
     }
 
+    /// Local output shard shape for `rank`.
+    pub fn local_out_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.grid.coords_of(rank).map(|c| {
+            let halos = self.exchange.halos_at(&c);
+            vec![
+                halos[0].out_len,
+                self.cfg.out_channels,
+                halos[2].out_len,
+                halos[3].out_len,
+            ]
+        })
+    }
+
     /// Stride and kernel extent along buffer dimension `d` (`[b, ci, h, w]`
     /// layout; batch and channel dims carry a size-1 kernel).
     fn dim_spec(&self, d: usize) -> (usize, usize) {
@@ -213,12 +232,16 @@ impl<T: Scalar> DistConv2d<T> {
     }
 
     /// Convolve the input slab that produces outputs `[o_lo, o_hi)` along
-    /// buffer dimension `d` (full extent elsewhere). Translation
-    /// invariance makes the slab result exactly the corresponding output
-    /// slab.
+    /// buffer dimension `d` (full extent elsewhere). The slab is extracted
+    /// straight from the exchange buffer by [`TrimPad::apply_slab`] — the
+    /// full trim/pad compute buffer is never materialised for slab calls —
+    /// into arena-backed staging that is reclaimed after the kernel runs.
+    /// Translation invariance makes the slab result exactly the
+    /// corresponding output slab.
     fn conv_slab(
         &self,
-        x_hat: &Tensor<T>,
+        coords: &[usize],
+        buf: &Tensor<T>,
         w_hat: &Tensor<T>,
         b_hat: &Tensor<T>,
         d: usize,
@@ -227,13 +250,14 @@ impl<T: Scalar> DistConv2d<T> {
     ) -> Result<Tensor<T>> {
         let (stride, ext) = self.dim_spec(d);
         let n_out = o_hi - o_lo;
-        let mut start = vec![0usize; 4];
-        let mut shape = x_hat.shape().to_vec();
-        start[d] = o_lo * stride;
-        shape[d] = (n_out - 1) * stride + ext;
-        let slab = x_hat.extract_region(&Region::new(start, shape))?;
-        self.kernels
-            .conv2d_forward(&slab, w_hat, Some(b_hat), self.spec)
+        let c_lo = o_lo * stride;
+        let c_len = (n_out - 1) * stride + ext;
+        let slab = self.shim.apply_slab(coords, buf, d, c_lo, c_len)?;
+        let y = self
+            .kernels
+            .conv2d_forward(&slab, w_hat, Some(b_hat), self.spec)?;
+        crate::memory::scratch_give(slab.into_vec());
+        Ok(y)
     }
 
     /// Generate the deterministic *global* parameters for `seed` (uniform
@@ -298,9 +322,14 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
             return Ok(None);
         };
         let x = x.ok_or_else(|| Error::Primitive(format!("{}: input missing", self.name)))?;
-        // Embed bulk into the halo buffer and *post* the exchange: halo
-        // sends and the split dimension's receives go out now.
-        let mut buf = Tensor::zeros(&self.exchange.buffer_shape(&coords));
+        // Embed bulk into the halo buffer (arena-backed staging, reused
+        // across micro-batches) and *post* the exchange: halo sends and
+        // the split dimension's receives go out now.
+        let buf_shape = self.exchange.buffer_shape(&coords);
+        let mut buf = Tensor::from_vec(
+            &buf_shape,
+            crate::memory::scratch_take::<T>(crate::tensor::numel(&buf_shape)),
+        )?;
         let bulk = self.exchange.bulk_region(&coords);
         crate::tensor::check_same(x.shape(), &bulk.shape, "conv input shard")?;
         buf.copy_region_from(&x, &Region::full(x.shape()), &bulk.start)?;
@@ -336,8 +365,12 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
             let (stride, ext) = self.dim_spec(d);
             let (o_lo, o_hi) = Self::interior_out_range(&halos[d], stride, ext);
             if o_lo < o_hi {
-                let x_pre = self.shim.apply(&coords, inflight.buffer())?;
-                let y_int = self.conv_slab(&x_pre, &w_hat, &b_hat, d, o_lo, o_hi)?;
+                // Interior slab straight from the in-flight buffer — its
+                // window touches no pending halo entry, so the values are
+                // final while the messages are still moving. (The full
+                // trim/pad buffer is *not* materialised here.)
+                let y_int =
+                    self.conv_slab(&coords, inflight.buffer(), &w_hat, &b_hat, d, o_lo, o_hi)?;
                 let mut y = Tensor::zeros(&out_shape);
                 let mut dst = vec![0usize; 4];
                 dst[d] = o_lo;
@@ -345,30 +378,48 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
                 partial = Some((d, o_lo, o_hi, y));
             }
         }
-        // Complete the exchange and fill in the halo-dependent boundary.
+        // Complete the exchange and fill in the halo-dependent boundary,
+        // again via slabs extracted directly from the exchanged buffer.
         let buf = self.exchange.finish(comm, inflight)?;
-        let x_hat = self.shim.apply(&coords, &buf)?;
-        let y = match partial {
+        let (y, x_hat) = match partial {
             Some((d, o_lo, o_hi, mut y)) => {
                 if o_lo > 0 {
-                    let y_b = self.conv_slab(&x_hat, &w_hat, &b_hat, d, 0, o_lo)?;
-                    y.copy_region_from(&y_b, &Region::full(y_b.shape()), &vec![0usize; 4])?;
+                    let y_b = self.conv_slab(&coords, &buf, &w_hat, &b_hat, d, 0, o_lo)?;
+                    y.copy_region_from(&y_b, &Region::full(y_b.shape()), &[0usize; 4])?;
                 }
                 if o_hi < out_shape[d] {
-                    let y_b = self.conv_slab(&x_hat, &w_hat, &b_hat, d, o_hi, out_shape[d])?;
+                    let y_b =
+                        self.conv_slab(&coords, &buf, &w_hat, &b_hat, d, o_hi, out_shape[d])?;
                     let mut dst = vec![0usize; 4];
                     dst[d] = o_hi;
                     y.copy_region_from(&y_b, &Region::full(y_b.shape()), &dst)?;
                 }
-                y
+                // The full compute buffer is only needed as the backward
+                // stash — evaluation forwards skip it entirely.
+                let x_hat = if train {
+                    Some(self.shim.apply(&coords, &buf)?)
+                } else {
+                    None
+                };
+                (y, x_hat)
             }
             // No partitioned dimension or no interior: plain full compute.
-            None => self
-                .kernels
-                .conv2d_forward(&x_hat, &w_hat, Some(&b_hat), self.spec)?,
+            None => {
+                let x_hat = self.shim.apply(&coords, &buf)?;
+                let y = self
+                    .kernels
+                    .conv2d_forward(&x_hat, &w_hat, Some(&b_hat), self.spec)?;
+                (y, Some(x_hat))
+            }
         };
+        // The exchange staging buffer goes back to the arena for the next
+        // micro-batch.
+        crate::memory::scratch_give(buf.into_vec());
         if train {
-            st.saved = vec![x_hat, w_hat];
+            st.saved = vec![
+                x_hat.expect("train forward materialises the compute buffer"),
+                w_hat,
+            ];
         }
         Ok(Some(y))
     }
@@ -413,6 +464,7 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
             .expect("grid rank exchanged");
         let bulk = self.exchange.bulk_region(&coords);
         let dx = dbuf.extract_region(&bulk)?;
+        crate::memory::scratch_give(dbuf.into_vec());
         st.clear_saved();
         Ok(Some(dx))
     }

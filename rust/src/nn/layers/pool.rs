@@ -83,6 +83,28 @@ impl<T: Scalar> DistPool2d<T> {
         })
     }
 
+    /// Local input shard shape for `rank` (bulk only, no halos).
+    pub fn local_in_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.grid.coords_of(rank).map(|c| {
+            self.exchange
+                .halos_at(&c)
+                .iter()
+                .map(|h| h.in_len)
+                .collect()
+        })
+    }
+
+    /// Local output shard shape for `rank`.
+    pub fn local_out_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.grid.coords_of(rank).map(|c| {
+            self.exchange
+                .halos_at(&c)
+                .iter()
+                .map(|h| h.out_len)
+                .collect()
+        })
+    }
+
     /// Global output shape.
     pub fn global_out(&self) -> Result<[usize; 4]> {
         let [b, c, h, w] = self.cfg.global_in;
@@ -115,7 +137,12 @@ impl<T: Scalar> Layer<T> for DistPool2d<T> {
             return Ok(None);
         };
         let x = x.ok_or_else(|| Error::Primitive(format!("{}: input missing", self.name)))?;
-        let mut buf = Tensor::zeros(&self.exchange.buffer_shape(&coords));
+        // Arena-backed halo staging, reused across micro-batches.
+        let buf_shape = self.exchange.buffer_shape(&coords);
+        let mut buf = Tensor::from_vec(
+            &buf_shape,
+            crate::memory::scratch_take::<T>(crate::tensor::numel(&buf_shape)),
+        )?;
         let bulk = self.exchange.bulk_region(&coords);
         crate::tensor::check_same(x.shape(), &bulk.shape, "pool input shard")?;
         buf.copy_region_from(&x, &Region::full(x.shape()), &bulk.start)?;
@@ -137,6 +164,7 @@ impl<T: Scalar> Layer<T> for DistPool2d<T> {
             .transpose()?;
         let buf = self.exchange.finish(comm, inflight)?;
         let x_hat = self.shim.apply(&coords, &buf)?;
+        crate::memory::scratch_give(buf.into_vec());
         let (y, argmax) = self.kernels.pool2d_forward(&x_hat, self.spec)?;
         if train {
             st.saved = vec![saved_shape.expect("shape snapshot built under train")];
@@ -167,6 +195,7 @@ impl<T: Scalar> Layer<T> for DistPool2d<T> {
             .expect("grid rank exchanged");
         let bulk = self.exchange.bulk_region(&coords);
         let dx = dbuf.extract_region(&bulk)?;
+        crate::memory::scratch_give(dbuf.into_vec());
         st.clear_saved();
         Ok(Some(dx))
     }

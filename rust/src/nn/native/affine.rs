@@ -1,22 +1,26 @@
 //! Native affine (dense / fully-connected) kernel, forward + VJP.
 //!
 //! `y = x Wᵀ + b` with `x[b, fi]`, `W[fo, fi]`, `b[fo]` — the sequential
-//! layer function inside the §4 distributed affine algorithm. The GEMM is
-//! blocked for cache locality; the AOT XLA/Pallas executable replaces it
-//! on the LeNet hot path.
+//! layer function inside the §4 distributed affine algorithm. All three
+//! products (forward, `δx`, `δW`) are routed through the shared blocked
+//! multi-threaded GEMM core in [`super::gemm`]; the previous ad-hoc
+//! cache-blocked loops survive as [`affine_forward_naive`] /
+//! [`affine_backward_naive`], the references the parity tests and benches
+//! compare against. The AOT XLA/Pallas executable still replaces the
+//! whole kernel on the LeNet hot path.
 
+use super::gemm::gemm;
 use crate::error::{Error, Result};
 use crate::tensor::{Scalar, Tensor};
 
-/// Cache block edge for the blocked GEMM.
+/// Cache block edge for the reference blocked loops.
 const BLOCK: usize = 64;
 
-/// Forward affine: `y[b,fo] = x[b,fi] @ W[fo,fi]^T + bias[fo]`.
-pub fn affine_forward<T: Scalar>(
+fn affine_dims<T: Scalar>(
     x: &Tensor<T>,
     w: &Tensor<T>,
     bias: Option<&Tensor<T>>,
-) -> Result<Tensor<T>> {
+) -> Result<(usize, usize, usize)> {
     if x.rank() != 2 || w.rank() != 2 {
         return Err(Error::Shape("affine expects rank-2 x and w".into()));
     }
@@ -33,6 +37,70 @@ pub fn affine_forward<T: Scalar>(
             )));
         }
     }
+    Ok((b, fi, fo))
+}
+
+/// Forward affine: `y[b,fo] = x[b,fi] @ W[fo,fi]^T + bias[fo]` — one GEMM
+/// with B transposed (`W` is consumed in its stored layout).
+pub fn affine_forward<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    bias: Option<&Tensor<T>>,
+) -> Result<Tensor<T>> {
+    let (b, fi, fo) = affine_dims(x, w, bias)?;
+    let mut y = Tensor::zeros(&[b, fo]);
+    gemm(b, fo, fi, x.data(), false, w.data(), true, y.data_mut())?;
+    if let Some(bias) = bias {
+        let bd = bias.data();
+        let yd = y.data_mut();
+        for i in 0..b {
+            let yrow = &mut yd[i * fo..(i + 1) * fo];
+            for (v, &bv) in yrow.iter_mut().zip(bd.iter()) {
+                *v += bv;
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Affine VJP: `(dx, dw, db)` from `dy[b,fo]` — two GEMMs and a column
+/// reduction.
+pub fn affine_backward<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    dy: &Tensor<T>,
+) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)> {
+    let (b, fi, fo) = affine_dims(x, w, None)?;
+    crate::tensor::check_same(dy.shape(), &[b, fo], "affine_backward dy")?;
+    let dyd = dy.data();
+    // dx[b,fi] = dy[b,fo] @ W[fo,fi]
+    let mut dx = Tensor::zeros(&[b, fi]);
+    gemm(b, fi, fo, dyd, false, w.data(), false, dx.data_mut())?;
+    // dw[fo,fi] = dy[b,fo]^T @ x[b,fi]
+    let mut dw = Tensor::zeros(&[fo, fi]);
+    gemm(fo, fi, b, dyd, true, x.data(), false, dw.data_mut())?;
+    // db[o] = sum_i dy[i,o]
+    let mut db = Tensor::zeros(&[fo]);
+    {
+        let dbd = db.data_mut();
+        for i in 0..b {
+            let dyrow = &dyd[i * fo..(i + 1) * fo];
+            for (acc, &g) in dbd.iter_mut().zip(dyrow.iter()) {
+                *acc += g;
+            }
+        }
+    }
+    Ok((dx, dw, db))
+}
+
+/// Reference forward affine — the original ad-hoc blocked loops, retained
+/// for the parity tests and the kernel-speedup benches.
+pub fn affine_forward_naive<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    bias: Option<&Tensor<T>>,
+) -> Result<Tensor<T>> {
+    let (b, fi, fo) = affine_dims(x, w, bias)?;
     let mut y = Tensor::zeros(&[b, fo]);
     let xd = x.data();
     let wd = w.data();
@@ -67,14 +135,14 @@ pub fn affine_forward<T: Scalar>(
     Ok(y)
 }
 
-/// Affine VJP: `(dx, dw, db)` from `dy[b,fo]`.
-pub fn affine_backward<T: Scalar>(
+/// Reference affine VJP — the original loops, retained for the parity
+/// tests and the kernel-speedup benches.
+pub fn affine_backward_naive<T: Scalar>(
     x: &Tensor<T>,
     w: &Tensor<T>,
     dy: &Tensor<T>,
 ) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)> {
-    let (b, fi) = (x.shape()[0], x.shape()[1]);
-    let fo = w.shape()[0];
+    let (b, fi, fo) = affine_dims(x, w, None)?;
     crate::tensor::check_same(dy.shape(), &[b, fo], "affine_backward dy")?;
     let xd = x.data();
     let wd = w.data();
@@ -164,6 +232,23 @@ mod tests {
         let wt = crate::tensor::ops::transpose2(&w).unwrap();
         let naive = crate::tensor::ops::matmul(&x, &wt).unwrap();
         assert!(y.allclose(&naive, 1e-10, 1e-10));
+    }
+
+    #[test]
+    fn gemm_path_matches_naive_reference() {
+        let mut rng = SplitMix64::new(8);
+        let x = rand_t(&[9, 137], &mut rng);
+        let w = rand_t(&[71, 137], &mut rng);
+        let bias = rand_t(&[71], &mut rng);
+        let y = affine_forward(&x, &w, Some(&bias)).unwrap();
+        let y_ref = affine_forward_naive(&x, &w, Some(&bias)).unwrap();
+        assert!(y.allclose(&y_ref, 1e-11, 1e-11));
+        let dy = rand_t(&[9, 71], &mut rng);
+        let (dx, dw, db) = affine_backward(&x, &w, &dy).unwrap();
+        let (dx_r, dw_r, db_r) = affine_backward_naive(&x, &w, &dy).unwrap();
+        assert!(dx.allclose(&dx_r, 1e-11, 1e-11));
+        assert!(dw.allclose(&dw_r, 1e-11, 1e-11));
+        assert!(db.allclose(&db_r, 1e-11, 1e-11));
     }
 
     #[test]

@@ -5,12 +5,25 @@
 //! materialise implicit zero padding through the [`crate::primitives::TrimPad`]
 //! shim before calling the kernel, so the kernel itself is always "valid".
 //!
-//! The production hot path for the fixed LeNet shapes is the AOT-compiled
-//! XLA/Pallas executable in [`crate::runtime`]; this native version covers
-//! arbitrary shapes (property tests, f64 adjoint checks) and acts as the
-//! reference the runtime path is validated against.
+//! The kernels are lowered onto the shared blocked GEMM core
+//! ([`super::gemm`]) through the classic **im2col/col2im** transform: per
+//! image, the input windows are unrolled into a `[ci·kh·kw, oh·ow]` column
+//! matrix so the forward pass is one `W_mat · cols` product, the weight
+//! gradient is `δy · colsᵀ` (accumulated across the batch directly by the
+//! GEMM), and the input gradient scatters `W_matᵀ · δy` back through
+//! col2im. Column and gradient staging buffers come from the per-rank
+//! [`crate::memory`] scratch arena, so steady-state training steps reuse
+//! them instead of re-allocating.
+//!
+//! [`conv2d_forward_naive`] / [`conv2d_backward_naive`] retain the original
+//! scalar loops as the reference implementations that the randomized
+//! parity tests and the kernel-speedup benches compare against. The
+//! production hot path for the fixed LeNet shapes remains the AOT-compiled
+//! XLA/Pallas executable in [`crate::runtime`].
 
+use super::gemm::gemm;
 use crate::error::{Error, Result};
+use crate::memory::{scratch_give, scratch_take_dirty};
 use crate::tensor::{Scalar, Tensor};
 
 /// Convolution hyper-parameters (per spatial dimension pair).
@@ -41,13 +54,25 @@ fn out_dim(n: usize, k: usize, s: usize, d: usize) -> Result<usize> {
     Ok((n - ext) / s + 1)
 }
 
-/// Forward convolution: `x[b,ci,h,w] * w[co,ci,kh,kw] (+ bias[co]) -> y[b,co,oh,ow]`.
-pub fn conv2d_forward<T: Scalar>(
+/// Validated problem geometry shared by the GEMM and naive kernels.
+struct ConvDims {
+    b: usize,
+    ci: usize,
+    h: usize,
+    wd: usize,
+    co: usize,
+    kh: usize,
+    kw: usize,
+    oh: usize,
+    ow: usize,
+}
+
+fn conv_dims<T: Scalar>(
     x: &Tensor<T>,
     w: &Tensor<T>,
     bias: Option<&Tensor<T>>,
     spec: Conv2dSpec,
-) -> Result<Tensor<T>> {
+) -> Result<ConvDims> {
     if x.rank() != 4 || w.rank() != 4 {
         return Err(Error::Shape("conv2d expects rank-4 x and w".into()));
     }
@@ -70,6 +95,206 @@ pub fn conv2d_forward<T: Scalar>(
     let (dh, dw) = spec.dilation;
     let oh = out_dim(h, kh, sh, dh)?;
     let ow = out_dim(wd, kw, sw, dw)?;
+    Ok(ConvDims {
+        b,
+        ci,
+        h,
+        wd,
+        co,
+        kh,
+        kw,
+        oh,
+        ow,
+    })
+}
+
+/// Unroll one image's kernel windows into the `[ci·kh·kw, oh·ow]` column
+/// matrix (`cols` is fully overwritten). `xoff` is the image's offset into
+/// the input buffer.
+#[allow(clippy::too_many_arguments)]
+fn im2col<T: Scalar>(xd: &[T], xoff: usize, d: &ConvDims, spec: Conv2dSpec, cols: &mut [T]) {
+    let (sh, sw) = spec.stride;
+    let (dh, dw_) = spec.dilation;
+    let ohow = d.oh * d.ow;
+    let mut row = 0usize;
+    for ic in 0..d.ci {
+        let xbase = xoff + ic * d.h * d.wd;
+        for p in 0..d.kh {
+            for q in 0..d.kw {
+                let dst_base = row * ohow;
+                for i in 0..d.oh {
+                    let src = xbase + (i * sh + p * dh) * d.wd + q * dw_;
+                    let dst = dst_base + i * d.ow;
+                    if sw == 1 {
+                        cols[dst..dst + d.ow].copy_from_slice(&xd[src..src + d.ow]);
+                    } else {
+                        for j in 0..d.ow {
+                            cols[dst + j] = xd[src + j * sw];
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Scatter-add a column matrix back through the window structure — the
+/// adjoint of [`im2col`] (overlapping windows accumulate).
+#[allow(clippy::too_many_arguments)]
+fn col2im_add<T: Scalar>(cols: &[T], dxd: &mut [T], xoff: usize, d: &ConvDims, spec: Conv2dSpec) {
+    let (sh, sw) = spec.stride;
+    let (dh, dw_) = spec.dilation;
+    let ohow = d.oh * d.ow;
+    let mut row = 0usize;
+    for ic in 0..d.ci {
+        let xbase = xoff + ic * d.h * d.wd;
+        for p in 0..d.kh {
+            for q in 0..d.kw {
+                let src_base = row * ohow;
+                for i in 0..d.oh {
+                    let dst = xbase + (i * sh + p * dh) * d.wd + q * dw_;
+                    let src = src_base + i * d.ow;
+                    if sw == 1 {
+                        for (acc, &v) in
+                            dxd[dst..dst + d.ow].iter_mut().zip(cols[src..src + d.ow].iter())
+                        {
+                            *acc += v;
+                        }
+                    } else {
+                        for j in 0..d.ow {
+                            dxd[dst + j * sw] += cols[src + j];
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Forward convolution: `x[b,ci,h,w] * w[co,ci,kh,kw] (+ bias[co]) -> y[b,co,oh,ow]`.
+///
+/// Lowered per image onto `y_ib = W_mat · im2col(x_ib)` on the shared
+/// blocked GEMM; the weight tensor's `[co, ci·kh·kw]` flattening is
+/// exactly its storage layout, so no weight reshaping happens at run time.
+pub fn conv2d_forward<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    bias: Option<&Tensor<T>>,
+    spec: Conv2dSpec,
+) -> Result<Tensor<T>> {
+    let d = conv_dims(x, w, bias, spec)?;
+    let kdim = d.ci * d.kh * d.kw;
+    let ohow = d.oh * d.ow;
+    let mut y = Tensor::zeros(&[d.b, d.co, d.oh, d.ow]);
+    let xd = x.data();
+    let wdt = w.data();
+    let yd = y.data_mut();
+    if kdim > 0 && ohow > 0 && d.co > 0 {
+        // im2col fully overwrites the column matrix — dirty take.
+        let mut cols = scratch_take_dirty::<T>(kdim * ohow);
+        for ib in 0..d.b {
+            im2col(xd, ib * d.ci * d.h * d.wd, &d, spec, &mut cols);
+            let yimg = &mut yd[ib * d.co * ohow..(ib + 1) * d.co * ohow];
+            gemm(d.co, ohow, kdim, wdt, false, &cols, false, yimg)?;
+        }
+        scratch_give(cols);
+    }
+    if let Some(bias) = bias {
+        let bd = bias.data();
+        for ib in 0..d.b {
+            for oc in 0..d.co {
+                let base = (ib * d.co + oc) * ohow;
+                let bv = bd[oc];
+                for v in &mut yd[base..base + ohow] {
+                    *v += bv;
+                }
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Convolution VJP: given `dy`, return `(dx, dw, db)`.
+///
+/// GEMM lowering: `δW_mat += δy_ib · colsᵀ` (batch accumulation happens
+/// inside the GEMM's `C +=` semantics), `δcols = W_matᵀ · δy_ib` scattered
+/// back by col2im, `δb` by direct reduction.
+pub fn conv2d_backward<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    dy: &Tensor<T>,
+    spec: Conv2dSpec,
+) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)> {
+    let d = conv_dims(x, w, None, spec)?;
+    crate::tensor::check_same(dy.shape(), &[d.b, d.co, d.oh, d.ow], "conv2d_backward dy")?;
+    let kdim = d.ci * d.kh * d.kw;
+    let ohow = d.oh * d.ow;
+    let mut dx = Tensor::zeros(x.shape());
+    let mut dwt = Tensor::zeros(w.shape());
+    let mut db = Tensor::zeros(&[d.co]);
+    let xd = x.data();
+    let wdt = w.data();
+    let dyd = dy.data();
+    if kdim > 0 && ohow > 0 && d.co > 0 {
+        let dxd = dx.data_mut();
+        let dwd = dwt.data_mut();
+        // dirty takes: cols is fully rewritten by im2col and dcols is
+        // explicitly zeroed before each accumulating GEMM below
+        let mut cols = scratch_take_dirty::<T>(kdim * ohow);
+        let mut dcols = scratch_take_dirty::<T>(kdim * ohow);
+        for ib in 0..d.b {
+            let dy_img = &dyd[ib * d.co * ohow..(ib + 1) * d.co * ohow];
+            let xoff = ib * d.ci * d.h * d.wd;
+            // δW[co, kdim] += δy[co, ohow] · cols[kdim, ohow]ᵀ
+            im2col(xd, xoff, &d, spec, &mut cols);
+            gemm(d.co, kdim, ohow, dy_img, false, &cols, true, dwd)?;
+            // δcols[kdim, ohow] = W_mat[co, kdim]ᵀ · δy[co, ohow]
+            dcols.fill(T::ZERO);
+            gemm(kdim, ohow, d.co, wdt, true, dy_img, false, &mut dcols)?;
+            col2im_add(&dcols, dxd, xoff, &d, spec);
+        }
+        scratch_give(cols);
+        scratch_give(dcols);
+    }
+    {
+        let dbd = db.data_mut();
+        for ib in 0..d.b {
+            for oc in 0..d.co {
+                let base = (ib * d.co + oc) * ohow;
+                let mut acc = T::ZERO;
+                for v in &dyd[base..base + ohow] {
+                    acc += *v;
+                }
+                dbd[oc] += acc;
+            }
+        }
+    }
+    Ok((dx, dwt, db))
+}
+
+/// Reference forward convolution — the original scalar loops, retained
+/// for the randomized parity tests and the kernel-speedup benches.
+pub fn conv2d_forward_naive<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    bias: Option<&Tensor<T>>,
+    spec: Conv2dSpec,
+) -> Result<Tensor<T>> {
+    let ConvDims {
+        b,
+        ci,
+        h,
+        wd,
+        co,
+        kh,
+        kw,
+        oh,
+        ow,
+    } = conv_dims(x, w, bias, spec)?;
+    let (sh, sw) = spec.stride;
+    let (dh, dw) = spec.dilation;
     let mut y = Tensor::zeros(&[b, co, oh, ow]);
     let xd = x.data();
     let wdt = w.data();
@@ -113,8 +338,9 @@ pub fn conv2d_forward<T: Scalar>(
     Ok(y)
 }
 
-/// Convolution VJP: given `dy`, return `(dx, dw, db)`.
-pub fn conv2d_backward<T: Scalar>(
+/// Reference convolution VJP — the original scalar loops, retained for
+/// the randomized parity tests and the kernel-speedup benches.
+pub fn conv2d_backward_naive<T: Scalar>(
     x: &Tensor<T>,
     w: &Tensor<T>,
     dy: &Tensor<T>,
@@ -260,6 +486,35 @@ mod tests {
         .unwrap();
         // rows: (8-3)/2+1 = 3; cols ext = 2*2+1 = 5: (9-5)/3+1 = 2
         assert_eq!(y.shape(), &[1, 1, 3, 2]);
+    }
+
+    #[test]
+    fn gemm_path_matches_naive_reference() {
+        let mut rng = SplitMix64::new(31);
+        for spec in [
+            Conv2dSpec::default(),
+            Conv2dSpec {
+                stride: (2, 3),
+                dilation: (1, 1),
+            },
+            Conv2dSpec {
+                stride: (1, 2),
+                dilation: (2, 1),
+            },
+        ] {
+            let x = rand_t(&[2, 3, 8, 9], &mut rng);
+            let w = rand_t(&[4, 3, 3, 2], &mut rng);
+            let bias = rand_t(&[4], &mut rng);
+            let y = conv2d_forward(&x, &w, Some(&bias), spec).unwrap();
+            let y_ref = conv2d_forward_naive(&x, &w, Some(&bias), spec).unwrap();
+            assert!(y.allclose(&y_ref, 1e-12, 1e-12), "forward {spec:?}");
+            let dy = rand_t(y.shape(), &mut rng);
+            let (dx, dw, db) = conv2d_backward(&x, &w, &dy, spec).unwrap();
+            let (dx_r, dw_r, db_r) = conv2d_backward_naive(&x, &w, &dy, spec).unwrap();
+            assert!(dx.allclose(&dx_r, 1e-12, 1e-12), "dx {spec:?}");
+            assert!(dw.allclose(&dw_r, 1e-12, 1e-12), "dw {spec:?}");
+            assert!(db.allclose(&db_r, 1e-12, 1e-12), "db {spec:?}");
+        }
     }
 
     #[test]

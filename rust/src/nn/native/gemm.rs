@@ -1,0 +1,399 @@
+//! The shared GEMM core every native compute kernel lowers onto.
+//!
+//! One cache-blocked, register-tiled matrix multiply serves the whole
+//! sequential-compute hot path: [`crate::tensor::ops::matmul`], the affine
+//! layer kernels, and the im2col/col2im convolution kernels in
+//! [`super::conv`]. The structure is the classic three-level blocking of
+//! high-performance BLAS:
+//!
+//! * panels of A (`MC × KC`) and B (`KC × NC`) are **packed** into
+//!   contiguous, microkernel-ordered buffers so the inner loops stream
+//!   unit-stride regardless of the operands' logical transposition;
+//! * an `MR × NR` **microkernel** keeps a register-resident accumulator
+//!   tile and performs `2·MR·NR` flops per `MR + NR` loads;
+//! * large products are split row-wise across **std scoped threads**
+//!   (zero new dependencies), each worker owning a disjoint slab of C.
+//!
+//! Pack buffers come from the per-rank [`crate::memory`] scratch arena, so
+//! steady-state training steps perform no GEMM-related allocations. The
+//! operation is always `C += op(A) · op(B)` (accumulating): callers start
+//! from a zeroed C for a plain product, and the convolution weight
+//! gradient exploits the accumulation directly to sum over the batch.
+
+use crate::error::{Error, Result};
+use crate::memory::{scratch_give, scratch_take_dirty};
+use crate::tensor::Scalar;
+
+/// Microkernel rows (accumulator tile height).
+const MR: usize = 4;
+/// Microkernel columns (accumulator tile width).
+const NR: usize = 8;
+/// Row-panel height of packed A (multiple of `MR`).
+const MC: usize = 64;
+/// Shared inner (depth) blocking of both packed panels.
+const KC: usize = 256;
+/// Column-panel width of packed B (multiple of `NR`).
+const NC: usize = 256;
+
+/// Packed-panel capacities (elements) taken from the scratch arena.
+const APACK_ELEMS: usize = MC * KC;
+const BPACK_ELEMS: usize = NC * KC;
+
+/// Products below this many flops run single-threaded: thread spawn and
+/// join dominate, and the SPMD cluster already runs one thread per rank.
+const PAR_FLOPS: usize = 1 << 23;
+/// Upper bound on worker threads for one product.
+const MAX_THREADS: usize = 8;
+
+/// `C[m,n] += op(A) · op(B)` over row-major storage.
+///
+/// * `a` holds `m × k` row-major when `trans_a` is false, `k × m` when
+///   true (the logical operand is then `Aᵀ`);
+/// * `b` holds `k × n` row-major when `trans_b` is false, `n × k` when
+///   true;
+/// * `c` is `m × n` row-major and is **accumulated into** (zero it first
+///   for a plain product).
+pub fn gemm<T: Scalar>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[T],
+    trans_a: bool,
+    b: &[T],
+    trans_b: bool,
+    c: &mut [T],
+) -> Result<()> {
+    if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+        return Err(Error::Shape(format!(
+            "gemm: buffers {}/{}/{} vs m={m} n={n} k={k}",
+            a.len(),
+            b.len(),
+            c.len()
+        )));
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return Ok(());
+    }
+    // Row/column strides of the *logical* (post-transposition) operands.
+    let (a_rs, a_cs) = if trans_a { (1, m) } else { (k, 1) };
+    let (b_rs, b_cs) = if trans_b { (1, k) } else { (n, 1) };
+
+    let workers = worker_count(m, n, k);
+    if workers <= 1 {
+        // Dirty takes: pack_a/pack_b overwrite every packed element the
+        // microkernel reads (ragged tiles included), so zeroing here would
+        // be a pure memset tax on every call.
+        let mut apack = scratch_take_dirty::<T>(APACK_ELEMS);
+        let mut bpack = scratch_take_dirty::<T>(BPACK_ELEMS);
+        gemm_block(m, n, k, a, a_rs, a_cs, 0, b, b_rs, b_cs, c, &mut apack, &mut bpack);
+        scratch_give(apack);
+        scratch_give(bpack);
+        return Ok(());
+    }
+    // Split C row-wise in MR-aligned slabs; each worker runs the full
+    // blocked product on its disjoint slab, with its own pack buffers
+    // (taken here, on the owning rank's thread, so transient workers
+    // allocate nothing).
+    let rows = round_up((m + workers - 1) / workers, MR);
+    let slabs = (m + rows - 1) / rows;
+    let mut apack = scratch_take_dirty::<T>(slabs * APACK_ELEMS);
+    let mut bpack = scratch_take_dirty::<T>(slabs * BPACK_ELEMS);
+    std::thread::scope(|scope| {
+        for (w, ((c_slab, ap), bp)) in c
+            .chunks_mut(rows * n)
+            .zip(apack.chunks_mut(APACK_ELEMS))
+            .zip(bpack.chunks_mut(BPACK_ELEMS))
+            .enumerate()
+        {
+            let row0 = w * rows;
+            let m_slab = c_slab.len() / n;
+            scope.spawn(move || {
+                gemm_block(m_slab, n, k, a, a_rs, a_cs, row0, b, b_rs, b_cs, c_slab, ap, bp);
+            });
+        }
+    });
+    scratch_give(apack);
+    scratch_give(bpack);
+    Ok(())
+}
+
+/// Smallest multiple of `q` that is `>= v` (for `q > 0`).
+fn round_up(v: usize, q: usize) -> usize {
+    ((v + q - 1) / q) * q
+}
+
+/// Worker threads for an `m·n·k` product.
+fn worker_count(m: usize, n: usize, k: usize) -> usize {
+    let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    if flops < PAR_FLOPS {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    hw.min(MAX_THREADS).min((m + MR - 1) / MR).max(1)
+}
+
+/// The single-threaded blocked product on logical rows
+/// `[row0, row0 + m)` of A, writing the `m × n` row-major slab `c`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_block<T: Scalar>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[T],
+    a_rs: usize,
+    a_cs: usize,
+    row0: usize,
+    b: &[T],
+    b_rs: usize,
+    b_cs: usize,
+    c: &mut [T],
+    apack: &mut [T],
+    bpack: &mut [T],
+) {
+    for p0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - p0);
+        for j0 in (0..n).step_by(NC) {
+            let nc = NC.min(n - j0);
+            pack_b(b, b_rs, b_cs, p0, kc, j0, nc, bpack);
+            for i0 in (0..m).step_by(MC) {
+                let mc = MC.min(m - i0);
+                pack_a(a, a_rs, a_cs, row0 + i0, mc, p0, kc, apack);
+                let n_tiles = (nc + NR - 1) / NR;
+                let m_tiles = (mc + MR - 1) / MR;
+                for jt in 0..n_tiles {
+                    let n_eff = NR.min(nc - jt * NR);
+                    let bpanel = &bpack[jt * kc * NR..(jt + 1) * kc * NR];
+                    for it in 0..m_tiles {
+                        let m_eff = MR.min(mc - it * MR);
+                        let apanel = &apack[it * kc * MR..(it + 1) * kc * MR];
+                        let coff = (i0 + it * MR) * n + j0 + jt * NR;
+                        microkernel(kc, apanel, bpanel, &mut c[coff..], n, m_eff, n_eff);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack `mc` logical rows of A starting at `row0`, depth `[p0, p0+kc)`,
+/// into `MR`-interleaved micro-panels (`[tile][depth][MR]`), zero-padding
+/// the ragged last tile.
+#[allow(clippy::too_many_arguments)]
+fn pack_a<T: Scalar>(
+    a: &[T],
+    rs: usize,
+    cs: usize,
+    row0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+    out: &mut [T],
+) {
+    let tiles = (mc + MR - 1) / MR;
+    for t in 0..tiles {
+        let base = t * kc * MR;
+        for p in 0..kc {
+            let col = (p0 + p) * cs;
+            for i in 0..MR {
+                let r = t * MR + i;
+                out[base + p * MR + i] = if r < mc {
+                    a[(row0 + r) * rs + col]
+                } else {
+                    T::ZERO
+                };
+            }
+        }
+    }
+}
+
+/// Pack `nc` logical columns of B starting at `col0`, depth `[p0, p0+kc)`,
+/// into `NR`-interleaved micro-panels (`[tile][depth][NR]`).
+#[allow(clippy::too_many_arguments)]
+fn pack_b<T: Scalar>(
+    b: &[T],
+    rs: usize,
+    cs: usize,
+    p0: usize,
+    kc: usize,
+    col0: usize,
+    nc: usize,
+    out: &mut [T],
+) {
+    let tiles = (nc + NR - 1) / NR;
+    for t in 0..tiles {
+        let base = t * kc * NR;
+        for p in 0..kc {
+            let row = (p0 + p) * rs;
+            for j in 0..NR {
+                let cidx = t * NR + j;
+                out[base + p * NR + j] = if cidx < nc {
+                    b[row + (col0 + cidx) * cs]
+                } else {
+                    T::ZERO
+                };
+            }
+        }
+    }
+}
+
+/// `MR × NR` register-tile kernel over a depth-`kc` packed panel pair;
+/// accumulates the valid `m_eff × n_eff` corner into `c` (row stride
+/// `ldc`, `c[0]` = tile origin).
+fn microkernel<T: Scalar>(
+    kc: usize,
+    apanel: &[T],
+    bpanel: &[T],
+    c: &mut [T],
+    ldc: usize,
+    m_eff: usize,
+    n_eff: usize,
+) {
+    let mut acc = [[T::ZERO; NR]; MR];
+    for p in 0..kc {
+        let arow = &apanel[p * MR..p * MR + MR];
+        let brow = &bpanel[p * NR..p * NR + NR];
+        for i in 0..MR {
+            let ai = arow[i];
+            for j in 0..NR {
+                acc[i][j] += ai * brow[j];
+            }
+        }
+    }
+    for i in 0..m_eff {
+        let crow = &mut c[i * ldc..i * ldc + n_eff];
+        for (j, dst) in crow.iter_mut().enumerate() {
+            *dst += acc[i][j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    /// Direct triple loop over logical operands — the oracle.
+    fn naive(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f64],
+        trans_a: bool,
+        b: &[f64],
+        trans_b: bool,
+    ) -> Vec<f64> {
+        let at = |i: usize, p: usize| if trans_a { a[p * m + i] } else { a[i * k + p] };
+        let bt = |p: usize, j: usize| if trans_b { b[j * k + p] } else { b[p * n + j] };
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += at(i, p) * bt(p, j);
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn rand_vec(n: usize, rng: &mut SplitMix64) -> Vec<f64> {
+        (0..n).map(|_| rng.next_f64() - 0.5).collect()
+    }
+
+    fn check(m: usize, n: usize, k: usize, trans_a: bool, trans_b: bool, seed: u64) {
+        let mut rng = SplitMix64::new(seed);
+        let a = rand_vec(m * k, &mut rng);
+        let b = rand_vec(k * n, &mut rng);
+        let want = naive(m, n, k, &a, trans_a, &b, trans_b);
+        let mut c = vec![0.0; m * n];
+        gemm(m, n, k, &a, trans_a, &b, trans_b, &mut c).unwrap();
+        for (i, (&got, &exp)) in c.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (got - exp).abs() < 1e-10 * (1.0 + exp.abs()),
+                "({m}x{n}x{k}, tA={trans_a}, tB={trans_b}) mismatch at {i}: {got} vs {exp}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_all_transpositions() {
+        for &(m, n, k) in &[(1, 1, 1), (3, 5, 7), (4, 8, 16), (17, 23, 9), (13, 1, 4)] {
+            for &ta in &[false, true] {
+                for &tb in &[false, true] {
+                    let seed = 11 + m as u64 + 2 * n as u64 + 4 * ta as u64 + 8 * tb as u64;
+                    check(m, n, k, ta, tb, seed);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_across_block_edges() {
+        // sizes straddling MR/NR/MC/KC/NC boundaries
+        for &(m, n, k) in &[
+            (MR, NR, 3),
+            (MR + 1, NR + 1, KC + 3),
+            (MC, NC, 5),
+            (MC + 5, NC + 9, 7),
+            (2 * MC + 1, 17, KC + 1),
+        ] {
+            check(m, n, k, false, false, 71 + m as u64 + n as u64 + k as u64);
+        }
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let mut rng = SplitMix64::new(5);
+        let (m, n, k) = (6, 10, 4);
+        let a = rand_vec(m * k, &mut rng);
+        let b = rand_vec(k * n, &mut rng);
+        let mut c = vec![1.0; m * n];
+        gemm(m, n, k, &a, false, &b, false, &mut c).unwrap();
+        let want = naive(m, n, k, &a, false, &b, false);
+        for (got, exp) in c.iter().zip(want.iter()) {
+            assert!((got - (exp + 1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_path_matches_naive() {
+        // big enough to clear PAR_FLOPS with several row slabs
+        let (m, n, k) = (190, 170, 140);
+        check(m, n, k, false, false, 99);
+        check(m, n, k, true, false, 100);
+    }
+
+    #[test]
+    fn degenerate_dims_are_noops() {
+        let mut c: Vec<f64> = vec![3.0; 6];
+        gemm(2, 3, 0, &[], false, &[], false, &mut c).unwrap();
+        assert_eq!(c, vec![3.0; 6]);
+        let mut empty: Vec<f64> = Vec::new();
+        gemm(0, 5, 2, &[], false, &[0.0; 10], false, &mut empty).unwrap();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut c = vec![0.0f64; 4];
+        assert!(gemm(2, 2, 2, &[0.0; 3], false, &[0.0; 4], false, &mut c).is_err());
+    }
+
+    #[test]
+    fn f32_path_matches_f64_reference() {
+        let mut rng = SplitMix64::new(21);
+        let (m, n, k) = (9, 14, 20);
+        let a: Vec<f32> = (0..m * k).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+        let a64: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+        let b64: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+        let want = naive(m, n, k, &a64, false, &b64, true);
+        let mut c = vec![0.0f32; m * n];
+        gemm(m, n, k, &a, false, &b, true, &mut c).unwrap();
+        for (&got, &exp) in c.iter().zip(want.iter()) {
+            assert!((got as f64 - exp).abs() < 1e-4);
+        }
+    }
+}

@@ -2,18 +2,30 @@
 //!
 //! These are the "sequential layer implementations" the paper composes
 //! parallel primitives with (§4). They support arbitrary shapes and both
-//! scalar types, serving property tests and f64 coherence checks; the
-//! LeNet hot path swaps in the AOT-compiled XLA/Pallas executables via
-//! [`crate::runtime::PjrtKernels`].
+//! scalar types. The compute hot path is a single shared core: the
+//! cache-blocked, multi-threaded GEMM in [`gemm`], which the affine kernel
+//! calls directly and the convolution kernels reach through im2col/col2im;
+//! staging buffers (im2col columns, GEMM pack panels) are reused across
+//! micro-batches via the per-rank [`crate::memory`] scratch arena. Each
+//! optimized kernel retains its original scalar-loop implementation
+//! (`*_naive`) as the reference for randomized parity tests and the
+//! kernel-speedup benches. The LeNet hot path can still swap in the
+//! AOT-compiled XLA/Pallas executables via [`crate::runtime::PjrtKernels`].
 
 pub mod activation;
 pub mod affine;
 pub mod conv;
+pub mod gemm;
 pub mod loss;
 pub mod pool;
 
 pub use activation::Activation;
-pub use affine::{affine_backward, affine_forward};
-pub use conv::{conv2d_backward, conv2d_forward, Conv2dSpec};
+pub use affine::{affine_backward, affine_backward_naive, affine_forward, affine_forward_naive};
+pub use conv::{
+    conv2d_backward, conv2d_backward_naive, conv2d_forward, conv2d_forward_naive, Conv2dSpec,
+};
 pub use loss::{count_correct, cross_entropy_backward, cross_entropy_forward};
-pub use pool::{pool2d_backward, pool2d_forward, Pool2dSpec, PoolMode};
+pub use pool::{
+    pool2d_backward, pool2d_backward_naive, pool2d_forward, pool2d_forward_naive, Pool2dSpec,
+    PoolMode,
+};

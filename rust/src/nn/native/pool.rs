@@ -41,7 +41,160 @@ fn out_dim(n: usize, k: usize, s: usize) -> Result<usize> {
 /// Forward pooling: `x[b,c,h,w] -> (y[b,c,oh,ow], argmax)` — `argmax`
 /// stores, for max pooling, the flat input offset that won each window
 /// (needed by the VJP); empty for average pooling.
+///
+/// The loops are organised like the im2col lowering of the conv kernels:
+/// window offsets `(p, q)` on the outside, contiguous output rows on the
+/// inside, so each pass streams one input row slice against one output row
+/// slice (the non-linear max/argmax is what stops pooling short of a
+/// literal GEMM). [`pool2d_forward_naive`] keeps the original
+/// window-gather loops as the parity reference.
 pub fn pool2d_forward<T: Scalar>(
+    x: &Tensor<T>,
+    spec: Pool2dSpec,
+) -> Result<(Tensor<T>, Vec<usize>)> {
+    if x.rank() != 4 {
+        return Err(Error::Shape("pool2d expects rank-4 input".into()));
+    }
+    let (b, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (kh, kw) = spec.kernel;
+    let (sh, sw) = spec.stride;
+    let oh = out_dim(h, kh, sh)?;
+    let ow = out_dim(w, kw, sw)?;
+    let mut y = Tensor::zeros(&[b, c, oh, ow]);
+    let mut argmax = if spec.mode == PoolMode::Max {
+        vec![0usize; b * c * oh * ow]
+    } else {
+        Vec::new()
+    };
+    let xd = x.data();
+    let yd = y.data_mut();
+    let inv = T::from_f64(1.0 / (kh * kw) as f64);
+    for ibc in 0..b * c {
+        let xbase = ibc * h * w;
+        let ybase = ibc * oh * ow;
+        match spec.mode {
+            PoolMode::Max => {
+                for i in 0..oh {
+                    let yrow = ybase + i * ow;
+                    // seed with the window's top-left entry, then sweep the
+                    // remaining offsets in the same (p, q) order as the
+                    // reference so strict-> ties resolve identically
+                    let row0 = xbase + i * sh * w;
+                    for j in 0..ow {
+                        yd[yrow + j] = xd[row0 + j * sw];
+                        argmax[yrow + j] = row0 + j * sw;
+                    }
+                    for p in 0..kh {
+                        let row = xbase + (i * sh + p) * w;
+                        for q in 0..kw {
+                            if p == 0 && q == 0 {
+                                continue;
+                            }
+                            for j in 0..ow {
+                                let off = row + j * sw + q;
+                                let v = xd[off];
+                                if v > yd[yrow + j] {
+                                    yd[yrow + j] = v;
+                                    argmax[yrow + j] = off;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            PoolMode::Avg => {
+                for i in 0..oh {
+                    let yrow = ybase + i * ow;
+                    for p in 0..kh {
+                        let row = xbase + (i * sh + p) * w;
+                        for q in 0..kw {
+                            if sw == 1 {
+                                let src = &xd[row + q..row + q + ow];
+                                for (acc, &v) in yd[yrow..yrow + ow].iter_mut().zip(src.iter())
+                                {
+                                    *acc += v;
+                                }
+                            } else {
+                                for j in 0..ow {
+                                    yd[yrow + j] += xd[row + j * sw + q];
+                                }
+                            }
+                        }
+                    }
+                    for v in &mut yd[yrow..yrow + ow] {
+                        *v *= inv;
+                    }
+                }
+            }
+        }
+    }
+    Ok((y, argmax))
+}
+
+/// Pooling VJP: scatter `dy` back through the window structure. The
+/// average branch is a col2im-style scatter with contiguous row runs; the
+/// max branch routes through the saved argmax (already a single sweep).
+pub fn pool2d_backward<T: Scalar>(
+    x_shape: &[usize],
+    dy: &Tensor<T>,
+    argmax: &[usize],
+    spec: Pool2dSpec,
+) -> Result<Tensor<T>> {
+    let (b, c) = (x_shape[0], x_shape[1]);
+    let (h, w) = (x_shape[2], x_shape[3]);
+    let (kh, kw) = spec.kernel;
+    let (sh, sw) = spec.stride;
+    let (oh, ow) = (dy.shape()[2], dy.shape()[3]);
+    crate::tensor::check_same(dy.shape(), &[b, c, oh, ow], "pool2d_backward dy")?;
+    let mut dx = Tensor::zeros(x_shape);
+    let dyd = dy.data();
+    let dxd = dx.data_mut();
+    match spec.mode {
+        PoolMode::Max => {
+            if argmax.len() != dyd.len() {
+                return Err(Error::Shape(format!(
+                    "pool2d_backward: argmax len {} vs dy {}",
+                    argmax.len(),
+                    dyd.len()
+                )));
+            }
+            for (yoff, &xoff) in argmax.iter().enumerate() {
+                dxd[xoff] += dyd[yoff];
+            }
+        }
+        PoolMode::Avg => {
+            let inv = T::from_f64(1.0 / (kh * kw) as f64);
+            for ibc in 0..b * c {
+                let xbase = ibc * h * w;
+                let ybase = ibc * oh * ow;
+                for i in 0..oh {
+                    let dyrow = &dyd[ybase + i * ow..ybase + (i + 1) * ow];
+                    for p in 0..kh {
+                        let row = xbase + (i * sh + p) * w;
+                        for q in 0..kw {
+                            if sw == 1 {
+                                for (acc, &g) in
+                                    dxd[row + q..row + q + ow].iter_mut().zip(dyrow.iter())
+                                {
+                                    *acc += g * inv;
+                                }
+                            } else {
+                                for (j, &g) in dyrow.iter().enumerate() {
+                                    dxd[row + j * sw + q] += g * inv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(dx)
+}
+
+/// Reference forward pooling — the original per-window gather loops,
+/// retained for the randomized parity tests and the kernel benches.
+pub fn pool2d_forward_naive<T: Scalar>(
     x: &Tensor<T>,
     spec: Pool2dSpec,
 ) -> Result<(Tensor<T>, Vec<usize>)> {
@@ -102,8 +255,8 @@ pub fn pool2d_forward<T: Scalar>(
     Ok((y, argmax))
 }
 
-/// Pooling VJP: scatter `dy` back through the window structure.
-pub fn pool2d_backward<T: Scalar>(
+/// Reference pooling VJP — original loops, retained for parity tests.
+pub fn pool2d_backward_naive<T: Scalar>(
     x_shape: &[usize],
     dy: &Tensor<T>,
     argmax: &[usize],
@@ -240,6 +393,35 @@ mod tests {
             1e-4,
             1e-4,
         );
+    }
+
+    #[test]
+    fn restructured_kernels_match_naive_reference() {
+        let mut rng = SplitMix64::new(17);
+        for spec in [
+            MAX22,
+            AVG22,
+            Pool2dSpec {
+                kernel: (3, 2),
+                stride: (1, 2),
+                mode: PoolMode::Max,
+            },
+            Pool2dSpec {
+                kernel: (2, 3),
+                stride: (2, 1),
+                mode: PoolMode::Avg,
+            },
+        ] {
+            let x = Tensor::<f64>::from_fn(&[2, 3, 7, 8], |_| rng.next_f64() - 0.5);
+            let (y, am) = pool2d_forward(&x, spec).unwrap();
+            let (y_ref, am_ref) = pool2d_forward_naive(&x, spec).unwrap();
+            assert!(y.allclose(&y_ref, 1e-14, 1e-14), "forward {spec:?}");
+            assert_eq!(am, am_ref, "argmax {spec:?}");
+            let dy = Tensor::<f64>::from_fn(y.shape(), |_| rng.next_f64() - 0.5);
+            let dx = pool2d_backward(x.shape(), &dy, &am, spec).unwrap();
+            let dx_ref = pool2d_backward_naive(x.shape(), &dy, &am_ref, spec).unwrap();
+            assert!(dx.allclose(&dx_ref, 1e-14, 1e-14), "backward {spec:?}");
+        }
     }
 
     #[test]

@@ -90,39 +90,36 @@ impl Repartition {
         }
 
         // Phase 2: post every receive for my destination shard, then
-        // complete them and assemble (post-all-then-complete — no rank
-        // serializes on one sender while another's piece is already in).
+        // assemble pieces in *arrival* order via wait_any (each peer owns
+        // one source region, so every receive is a distinct source and the
+        // unpack of an early piece never queues behind a slow one).
         if let Some(dst_region) = &my_dst {
-            let overlaps: Vec<(usize, crate::tensor::Region)> = from
-                .owners_of(dst_region)
-                .into_iter()
-                .filter(|(_, overlap)| !overlap.is_empty())
-                .collect();
-            let mut pending = Vec::with_capacity(overlaps.len());
-            for (src_rank, _) in &overlaps {
-                if *src_rank == rank {
-                    pending.push(None);
+            let mut out = Tensor::zeros(&dst_region.shape);
+            let mut reqs = Vec::new();
+            let mut regions: Vec<crate::tensor::Region> = Vec::new();
+            for (src_rank, overlap) in from.owners_of(dst_region) {
+                if overlap.is_empty() {
+                    continue;
+                }
+                if src_rank == rank {
+                    let (_, piece) = local_piece.take().ok_or_else(|| {
+                        Error::Primitive("repartition: lost local piece".into())
+                    })?;
+                    let local = overlap.relative_to(&dst_region.start);
+                    out.copy_region_from(
+                        &piece,
+                        &crate::tensor::Region::full(&overlap.shape),
+                        &local.start,
+                    )?;
                 } else {
-                    pending.push(Some(comm.irecv::<T>(*src_rank, tag)?));
+                    reqs.push(comm.irecv::<T>(src_rank, tag)?);
+                    regions.push(overlap);
                 }
             }
-            let mut out = Tensor::zeros(&dst_region.shape);
-            for ((src_rank, overlap), req) in overlaps.into_iter().zip(pending) {
-                let piece = match req {
-                    None => {
-                        debug_assert_eq!(src_rank, rank);
-                        local_piece
-                            .take()
-                            .map(|(_, p)| p)
-                            .ok_or_else(|| {
-                                Error::Primitive("repartition: lost local piece".into())
-                            })?
-                    }
-                    Some(req) => {
-                        let data = comm.wait(req)?;
-                        Tensor::from_vec(&overlap.shape, data)?
-                    }
-                };
+            while !reqs.is_empty() {
+                let (idx, data) = comm.wait_any(&mut reqs)?;
+                let overlap = regions.remove(idx);
+                let piece = Tensor::from_vec(&overlap.shape, data)?;
                 let local = overlap.relative_to(&dst_region.start);
                 out.copy_region_from(
                     &piece,

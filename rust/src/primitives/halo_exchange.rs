@@ -448,19 +448,75 @@ impl TrimPad {
         Ok(out)
     }
 
+    /// Forward shim restricted to the compute-coordinate window
+    /// `[c_lo, c_lo + c_len)` along buffer dimension `d` (full extent
+    /// elsewhere): the slab is extracted **directly from the exchange
+    /// buffer**, without materialising the full compute buffer first.
+    ///
+    /// This is what lets the conv layer's overlap schedule feed its
+    /// interior and boundary kernel calls straight from the (possibly
+    /// still in-flight) buffer — previously each forward built the full
+    /// trim/pad buffer twice, once before and once after completion. The
+    /// slab's storage is borrowed from the per-rank scratch arena; pass it
+    /// back via [`crate::memory::scratch_give`] when done.
+    pub fn apply_slab<T: Scalar>(
+        &self,
+        coords: &[usize],
+        buf: &Tensor<T>,
+        d: usize,
+        c_lo: usize,
+        c_len: usize,
+    ) -> Result<Tensor<T>> {
+        let (span, dst) = self.spans(coords);
+        let mut out_shape = self.compute_shape(coords);
+        if d >= out_shape.len() || c_lo + c_len > out_shape[d] {
+            return Err(Error::Primitive(format!(
+                "apply_slab: window [{c_lo}, {}) outside compute dim {d} (extent {})",
+                c_lo + c_len,
+                out_shape.get(d).copied().unwrap_or(0)
+            )));
+        }
+        out_shape[d] = c_len;
+        let mut out = Tensor::from_vec(
+            &out_shape,
+            crate::memory::scratch_take::<T>(crate::tensor::numel(&out_shape)),
+        )?;
+        // Intersect the needed span (which lands at dst[d] in compute
+        // coordinates) with the requested window; everything outside the
+        // intersection is implicit zero padding, already present in `out`.
+        let span_c_lo = dst[d];
+        let span_c_hi = dst[d] + span.shape[d];
+        let lo = span_c_lo.max(c_lo);
+        let hi = span_c_hi.min(c_lo + c_len);
+        if lo < hi {
+            let mut src = span.clone();
+            src.start[d] += lo - span_c_lo;
+            src.shape[d] = hi - lo;
+            let mut dst_start = dst.clone();
+            dst_start[d] = lo - c_lo;
+            out.copy_region_from(buf, &src, &dst_start)?;
+        }
+        Ok(out)
+    }
+
     /// Adjoint: extract the needed span from the cotangent and zero-extend
-    /// into the buffer layout.
+    /// into the buffer layout — one direct region copy. The returned
+    /// buffer is borrowed from the per-rank scratch arena (the layers give
+    /// it back once the adjoint exchange has consumed it, closing the
+    /// reuse cycle).
     pub fn apply_adjoint<T: Scalar>(
         &self,
         coords: &[usize],
         cot: &Tensor<T>,
     ) -> Result<Tensor<T>> {
         let (span, dst) = self.spans(coords);
-        let mut out = Tensor::zeros(&self.buffer_shape(coords));
+        let buf_shape = self.buffer_shape(coords);
+        let mut out = Tensor::from_vec(
+            &buf_shape,
+            crate::memory::scratch_take::<T>(crate::tensor::numel(&buf_shape)),
+        )?;
         let src = Region::new(dst, span.shape.clone());
-        let mut piece = Tensor::zeros(&span.shape);
-        piece.copy_region_from(cot, &src, &vec![0; span.rank()])?;
-        out.copy_region_from(&piece, &Region::full(&span.shape), &span.start)?;
+        out.copy_region_from(cot, &src, &span.start)?;
         Ok(out)
     }
 }
@@ -677,6 +733,54 @@ mod tests {
         let buf = Tensor::<f64>::from_vec(&[6], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
         let out = shim.apply(&[0], &buf).unwrap();
         assert_eq!(out.data(), &[0.0, 0.0, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn trimpad_apply_slab_matches_apply_window() {
+        // Every window of apply_slab must equal the corresponding region of
+        // the fully materialised compute buffer, across geometries with
+        // halos, unused entries, and zero padding on either side.
+        let mut rng = crate::util::rng::SplitMix64::new(93);
+        for (n, p, k) in [
+            (20, 6, KernelSpec::pool(2, 2)),
+            (11, 3, KernelSpec::padded(5, 2)),
+            (11, 3, KernelSpec::plain(5)),
+            (23, 4, KernelSpec {
+                size: 4,
+                stride: 2,
+                dilation: 1,
+                pad_lo: 1,
+                pad_hi: 1,
+            }),
+        ] {
+            let geom = HaloGeometry::new(&[n], &[p], &[k]).unwrap();
+            let shim = TrimPad::new(Partition::from_shape(&[p]), geom);
+            for w in 0..p {
+                let coords = [w];
+                let buf_shape = shim.buffer_shape(&coords);
+                let buf = Tensor::<f64>::from_fn(&buf_shape, |_| rng.next_f64() - 0.5);
+                let full = shim.apply(&coords, &buf).unwrap();
+                let ext = full.shape()[0];
+                // full window, plus every sub-window of length <= 3
+                let mut windows = vec![(0usize, ext)];
+                for lo in 0..ext {
+                    for len in 1..=3usize.min(ext - lo) {
+                        windows.push((lo, len));
+                    }
+                }
+                for (lo, len) in windows {
+                    let slab = shim.apply_slab(&coords, &buf, 0, lo, len).unwrap();
+                    let want = full
+                        .extract_region(&Region::new(vec![lo], vec![len]))
+                        .unwrap();
+                    assert_eq!(slab, want, "worker {w}, window [{lo}, {})", lo + len);
+                    crate::memory::scratch_give(slab.into_vec());
+                }
+                // out-of-range windows are rejected
+                assert!(shim.apply_slab(&coords, &buf, 0, ext, 1).is_err());
+                assert!(shim.apply_slab(&coords, &buf, 1, 0, 1).is_err());
+            }
+        }
     }
 
     #[test]

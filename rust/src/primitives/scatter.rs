@@ -100,31 +100,26 @@ impl Scatter {
             }
         }
         if rank == root {
-            // Post-all-then-complete: every receive goes out before any is
-            // waited on, so the assembly below drains arrivals instead of
-            // serializing on one sender at a time.
-            let mut pending: Vec<(usize, Region, Option<crate::comm::RecvRequest<T>>)> =
-                Vec::new();
+            // Post-all-then-complete, drained by wait_any: every receive
+            // goes out before any is completed, and the assembly consumes
+            // shards in *arrival* order — the copy of an early shard is no
+            // longer serialized behind a slow earlier-posted sender.
+            let mut out = Tensor::zeros(decomp.global_shape());
+            if let Some((region, shard)) = own_shard.take() {
+                out.copy_region_from(&shard, &Region::full(&region.shape), &region.start)?;
+            }
+            let mut reqs = Vec::new();
+            let mut regions = Vec::new();
             for (cell, src, region) in decomp.cells() {
-                if src == rank {
-                    pending.push((cell, region, None));
-                } else {
-                    let req = comm.irecv::<T>(src, tag + 1000 + cell as u64)?;
-                    pending.push((cell, region, Some(req)));
+                if src != rank {
+                    reqs.push(comm.irecv::<T>(src, tag + 1000 + cell as u64)?);
+                    regions.push(region);
                 }
             }
-            let mut out = Tensor::zeros(decomp.global_shape());
-            for (_, region, req) in pending {
-                let shard = match req {
-                    None => own_shard
-                        .take()
-                        .map(|(_, s)| s)
-                        .ok_or_else(|| Error::Primitive("gather: root shard missing".into()))?,
-                    Some(req) => {
-                        let data = comm.wait(req)?;
-                        Tensor::from_vec(&region.shape, data)?
-                    }
-                };
+            while !reqs.is_empty() {
+                let (idx, data) = comm.wait_any(&mut reqs)?;
+                let region = regions.remove(idx);
+                let shard = Tensor::from_vec(&region.shape, data)?;
                 out.copy_region_from(&shard, &Region::full(&region.shape), &region.start)?;
             }
             return Ok(Some(out));

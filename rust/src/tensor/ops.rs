@@ -167,20 +167,24 @@ impl<T: Scalar> Tensor<T> {
     }
 }
 
-/// Dense 2-D matrix multiply `C[m,n] = A[m,k] @ B[k,n]` — the naive local
-/// GEMM used by tests and as the native fallback; the optimized paths are
-/// the blocked GEMM in [`crate::nn::native`] and the Pallas/MXU kernel at L1.
+/// Dense 2-D matrix multiply `C[m,n] = A[m,k] @ B[k,n]`, routed through
+/// the shared cache-blocked, multi-threaded GEMM core in
+/// [`crate::nn::native::gemm`] — the same kernel the affine and im2col
+/// convolution layer functions lower onto. [`matmul_naive`] retains the
+/// unblocked triple loop as the reference the parity tests and benches
+/// compare against; the Pallas/MXU kernel remains the L1 path.
 pub fn matmul<T: Scalar>(a: &Tensor<T>, b: &Tensor<T>) -> Result<Tensor<T>> {
-    if a.rank() != 2 || b.rank() != 2 {
-        return Err(Error::Shape("matmul expects rank-2 tensors".into()));
-    }
-    let (m, k) = (a.shape()[0], a.shape()[1]);
-    let (k2, n) = (b.shape()[0], b.shape()[1]);
-    if k != k2 {
-        return Err(Error::Shape(format!(
-            "matmul: inner dims {k} vs {k2} differ"
-        )));
-    }
+    let (m, k, n) = matmul_dims(a, b)?;
+    let mut c = Tensor::zeros(&[m, n]);
+    crate::nn::native::gemm::gemm(m, n, k, a.data(), false, b.data(), false, c.data_mut())?;
+    Ok(c)
+}
+
+/// Reference matrix multiply: the unblocked triple loop. Kept (not
+/// `cfg(test)`) so integration tests and the kernel-speedup benches can
+/// compare the optimized GEMM against it.
+pub fn matmul_naive<T: Scalar>(a: &Tensor<T>, b: &Tensor<T>) -> Result<Tensor<T>> {
+    let (m, k, n) = matmul_dims(a, b)?;
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
     let cd = c.data_mut();
@@ -198,6 +202,21 @@ pub fn matmul<T: Scalar>(a: &Tensor<T>, b: &Tensor<T>) -> Result<Tensor<T>> {
         }
     }
     Ok(c)
+}
+
+/// Validate rank-2 operands and return `(m, k, n)`.
+fn matmul_dims<T: Scalar>(a: &Tensor<T>, b: &Tensor<T>) -> Result<(usize, usize, usize)> {
+    if a.rank() != 2 || b.rank() != 2 {
+        return Err(Error::Shape("matmul expects rank-2 tensors".into()));
+    }
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    if k != k2 {
+        return Err(Error::Shape(format!(
+            "matmul: inner dims {k} vs {k2} differ"
+        )));
+    }
+    Ok((m, k, n))
 }
 
 /// Transpose a rank-2 tensor.
@@ -251,6 +270,18 @@ mod tests {
         let b = Tensor::<f32>::filled(&[2, 2], 1.0);
         let c = matmul(&a, &b).unwrap();
         assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_blocked_matches_naive() {
+        let mut rng = crate::util::rng::SplitMix64::new(77);
+        for (m, k, n) in [(1, 1, 1), (7, 5, 9), (33, 70, 12), (65, 8, 130)] {
+            let a = Tensor::<f64>::from_fn(&[m, k], |_| rng.next_f64() - 0.5);
+            let b = Tensor::<f64>::from_fn(&[k, n], |_| rng.next_f64() - 0.5);
+            let fast = matmul(&a, &b).unwrap();
+            let slow = matmul_naive(&a, &b).unwrap();
+            assert!(fast.allclose(&slow, 1e-12, 1e-12), "({m},{k},{n})");
+        }
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! E12 — the im2col/GEMM compute stack against its retained naive
+//! references, plus the Eq. (13) adjoint sweep through the arena-backed
+//! distributed layer path.
+//!
+//! The optimized kernels (blocked GEMM, im2col conv forward/VJP, GEMM
+//! affine, restructured pooling) must be bit-plausible stand-ins for the
+//! original scalar loops: randomized shape/stride/dilation sweeps in both
+//! f32 and f64 compare every output. The distributed conv and avg-pool
+//! layers — whose forward now runs arena-backed slab extraction straight
+//! from the exchange buffer — are additionally checked as *linear
+//! operators* via the paper's adjoint-coherence test, and the scratch
+//! arena's counters must show zero fresh allocations once the working set
+//! is warm.
+
+use distdl::adjoint::{adjoint_residual, DistLinearOp};
+use distdl::autograd::{Layer, LayerState};
+use distdl::comm::{Cluster, Comm};
+use distdl::error::Result;
+use distdl::memory::scratch_stats;
+use distdl::nn::layers::{Conv2dConfig, DistConv2d, DistPool2d, Pool2dConfig};
+use distdl::nn::native::{
+    affine_backward, affine_backward_naive, affine_forward, affine_forward_naive,
+    conv2d_backward, conv2d_backward_naive, conv2d_forward, conv2d_forward_naive,
+    pool2d_backward, pool2d_backward_naive, pool2d_forward, pool2d_forward_naive, Conv2dSpec,
+    Pool2dSpec, PoolMode,
+};
+use distdl::nn::NativeKernels;
+use distdl::tensor::{numel, ops, Scalar, Tensor};
+use distdl::util::rng::SplitMix64;
+use std::sync::Arc;
+
+fn rand_t<T: Scalar>(shape: &[usize], rng: &mut SplitMix64) -> Tensor<T> {
+    Tensor::from_vec(
+        shape,
+        (0..numel(shape))
+            .map(|_| T::from_f64(rng.next_f64() - 0.5))
+            .collect(),
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------------------
+// GEMM and matmul parity
+// ---------------------------------------------------------------------
+
+fn check_matmul<T: Scalar>(seed: u64, atol: f64, rtol: f64) {
+    let mut rng = SplitMix64::new(seed);
+    for (m, k, n) in [(1, 1, 1), (5, 9, 3), (31, 64, 17), (70, 13, 130), (64, 64, 64)] {
+        let a = rand_t::<T>(&[m, k], &mut rng);
+        let b = rand_t::<T>(&[k, n], &mut rng);
+        let fast = ops::matmul(&a, &b).unwrap();
+        let slow = ops::matmul_naive(&a, &b).unwrap();
+        assert!(
+            fast.allclose(&slow, atol, rtol),
+            "matmul ({m},{k},{n}) diverges from naive"
+        );
+    }
+}
+
+#[test]
+fn matmul_parity_f64() {
+    check_matmul::<f64>(0xA1, 1e-11, 1e-11);
+}
+
+#[test]
+fn matmul_parity_f32() {
+    check_matmul::<f32>(0xA2, 5e-4, 5e-4);
+}
+
+// ---------------------------------------------------------------------
+// Convolution parity (forward + VJP), randomized shapes/strides/dilations
+// ---------------------------------------------------------------------
+
+fn check_conv_sweep<T: Scalar>(seed: u64, atol: f64, rtol: f64) {
+    let mut rng = SplitMix64::new(seed);
+    for _ in 0..12 {
+        let b = 1 + (rng.next_u64() % 3) as usize;
+        let ci = 1 + (rng.next_u64() % 4) as usize;
+        let co = 1 + (rng.next_u64() % 5) as usize;
+        let kh = 1 + (rng.next_u64() % 3) as usize;
+        let kw = 1 + (rng.next_u64() % 3) as usize;
+        let spec = Conv2dSpec {
+            stride: (
+                1 + (rng.next_u64() % 3) as usize,
+                1 + (rng.next_u64() % 2) as usize,
+            ),
+            dilation: (
+                1 + (rng.next_u64() % 2) as usize,
+                1 + (rng.next_u64() % 2) as usize,
+            ),
+        };
+        let h = spec.dilation.0 * (kh - 1) + 1 + (rng.next_u64() % 6) as usize;
+        let w = spec.dilation.1 * (kw - 1) + 1 + (rng.next_u64() % 6) as usize;
+        let x = rand_t::<T>(&[b, ci, h, w], &mut rng);
+        let wt = rand_t::<T>(&[co, ci, kh, kw], &mut rng);
+        let bias = rand_t::<T>(&[co], &mut rng);
+        let ctx = format!("b{b} ci{ci} co{co} k({kh},{kw}) {spec:?} in({h},{w})");
+        let y = conv2d_forward(&x, &wt, Some(&bias), spec).unwrap();
+        let y_ref = conv2d_forward_naive(&x, &wt, Some(&bias), spec).unwrap();
+        assert!(y.allclose(&y_ref, atol, rtol), "conv forward: {ctx}");
+        let dy = rand_t::<T>(y.shape(), &mut rng);
+        let (dx, dw, db) = conv2d_backward(&x, &wt, &dy, spec).unwrap();
+        let (dx_r, dw_r, db_r) = conv2d_backward_naive(&x, &wt, &dy, spec).unwrap();
+        assert!(dx.allclose(&dx_r, atol, rtol), "conv dx: {ctx}");
+        assert!(dw.allclose(&dw_r, atol, rtol), "conv dw: {ctx}");
+        assert!(db.allclose(&db_r, atol, rtol), "conv db: {ctx}");
+    }
+}
+
+#[test]
+fn conv_parity_f64() {
+    check_conv_sweep::<f64>(0xB1, 1e-11, 1e-11);
+}
+
+#[test]
+fn conv_parity_f32() {
+    check_conv_sweep::<f32>(0xB2, 1e-3, 1e-3);
+}
+
+// ---------------------------------------------------------------------
+// Affine parity
+// ---------------------------------------------------------------------
+
+fn check_affine_sweep<T: Scalar>(seed: u64, atol: f64, rtol: f64) {
+    let mut rng = SplitMix64::new(seed);
+    for (b, fi, fo) in [(1, 1, 1), (4, 7, 5), (16, 130, 70), (65, 33, 129)] {
+        let x = rand_t::<T>(&[b, fi], &mut rng);
+        let w = rand_t::<T>(&[fo, fi], &mut rng);
+        let bias = rand_t::<T>(&[fo], &mut rng);
+        let y = affine_forward(&x, &w, Some(&bias)).unwrap();
+        let y_ref = affine_forward_naive(&x, &w, Some(&bias)).unwrap();
+        assert!(y.allclose(&y_ref, atol, rtol), "affine forward ({b},{fi},{fo})");
+        let dy = rand_t::<T>(&[b, fo], &mut rng);
+        let (dx, dw, db) = affine_backward(&x, &w, &dy).unwrap();
+        let (dx_r, dw_r, db_r) = affine_backward_naive(&x, &w, &dy).unwrap();
+        assert!(dx.allclose(&dx_r, atol, rtol), "affine dx ({b},{fi},{fo})");
+        assert!(dw.allclose(&dw_r, atol, rtol), "affine dw ({b},{fi},{fo})");
+        assert!(db.allclose(&db_r, atol, rtol), "affine db ({b},{fi},{fo})");
+    }
+}
+
+#[test]
+fn affine_parity_f64() {
+    check_affine_sweep::<f64>(0xC1, 1e-11, 1e-11);
+}
+
+#[test]
+fn affine_parity_f32() {
+    check_affine_sweep::<f32>(0xC2, 1e-3, 1e-3);
+}
+
+// ---------------------------------------------------------------------
+// Pooling parity (restructured loops vs per-window gathers)
+// ---------------------------------------------------------------------
+
+fn check_pool_sweep<T: Scalar>(seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    for mode in [PoolMode::Max, PoolMode::Avg] {
+        for _ in 0..8 {
+            let kh = 1 + (rng.next_u64() % 3) as usize;
+            let kw = 1 + (rng.next_u64() % 3) as usize;
+            let spec = Pool2dSpec {
+                kernel: (kh, kw),
+                stride: (
+                    1 + (rng.next_u64() % 3) as usize,
+                    1 + (rng.next_u64() % 3) as usize,
+                ),
+                mode,
+            };
+            let b = 1 + (rng.next_u64() % 2) as usize;
+            let c = 1 + (rng.next_u64() % 3) as usize;
+            let h = kh + (rng.next_u64() % 7) as usize;
+            let w = kw + (rng.next_u64() % 7) as usize;
+            let x = rand_t::<T>(&[b, c, h, w], &mut rng);
+            let ctx = format!("{spec:?} in({h},{w})");
+            let (y, am) = pool2d_forward(&x, spec).unwrap();
+            let (y_ref, am_ref) = pool2d_forward_naive(&x, spec).unwrap();
+            assert!(y.allclose(&y_ref, 1e-6, 1e-6), "pool forward: {ctx}");
+            assert_eq!(am, am_ref, "pool argmax: {ctx}");
+            let dy = rand_t::<T>(y.shape(), &mut rng);
+            let dx = pool2d_backward(x.shape(), &dy, &am, spec).unwrap();
+            let dx_ref = pool2d_backward_naive(x.shape(), &dy, &am_ref, spec).unwrap();
+            assert!(dx.allclose(&dx_ref, 1e-6, 1e-6), "pool backward: {ctx}");
+        }
+    }
+}
+
+#[test]
+fn pool_parity_f64() {
+    check_pool_sweep::<f64>(0xD1);
+}
+
+#[test]
+fn pool_parity_f32() {
+    check_pool_sweep::<f32>(0xD2);
+}
+
+// ---------------------------------------------------------------------
+// Eq. (13) adjoint coherence through the arena-backed layer path
+// ---------------------------------------------------------------------
+
+/// The distributed convolution's *linear part* (bias zeroed) viewed as a
+/// distributed linear operator: forward is the layer's overlap-scheduled,
+/// slab-extracted, im2col/GEMM forward; the adjoint is the layer's
+/// backward (whose x-adjoint is independent of the linearization point, so
+/// the stash is populated by a zero-input forward).
+struct ConvLinear {
+    layer: DistConv2d<f64>,
+    seed: u64,
+}
+
+fn zero_bias(st: &mut LayerState<f64>) {
+    if st.params.len() == 2 {
+        st.params[1].scale_assign(0.0);
+    }
+}
+
+impl DistLinearOp<f64> for ConvLinear {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.layer.local_in_shape(rank)
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.layer.local_out_shape(rank)
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+        let mut st = self.layer.init(comm.rank(), self.seed)?;
+        zero_bias(&mut st);
+        self.layer.forward(&mut st, comm, x, false)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+        let mut st = self.layer.init(comm.rank(), self.seed)?;
+        zero_bias(&mut st);
+        let x0 = self
+            .layer
+            .local_in_shape(comm.rank())
+            .map(|s| Tensor::zeros(&s));
+        self.layer.forward(&mut st, comm, x0, true)?;
+        self.layer.backward(&mut st, comm, y)
+    }
+
+    fn name(&self) -> String {
+        "DistConv2d[linear part]".into()
+    }
+}
+
+#[test]
+fn conv_layer_coherent_through_arena_backed_overlap_path() {
+    for (global_in, co, kernel, stride, padding, grid, tag) in [
+        ([2, 2, 9, 9], 3, (3, 3), (1, 1), (1, 1), (2, 2), 7_000),
+        ([1, 2, 6, 11], 2, (3, 3), (1, 2), (0, 1), (1, 3), 8_000),
+        ([2, 1, 13, 7], 2, (5, 3), (2, 1), (2, 0), (3, 1), 9_000),
+    ] {
+        let world = grid.0 * grid.1;
+        let layer = DistConv2d::<f64>::new(
+            "c",
+            Conv2dConfig {
+                global_in,
+                out_channels: co,
+                kernel,
+                stride,
+                padding,
+                grid,
+                ranks: (0..world).collect(),
+                tag,
+            },
+            Arc::new(NativeKernels),
+        )
+        .unwrap();
+        let op = ConvLinear { layer, seed: 5 };
+        let r = adjoint_residual(world, &op, 61).unwrap();
+        assert!(
+            r < 1e-12,
+            "conv layer fails Eq. (13) through the arena path: residual {r:.3e} (grid {grid:?})"
+        );
+    }
+}
+
+/// Average pooling is linear, so the distributed pooling layer (halo
+/// exchange + trim/pad + restructured kernel, all arena-staged) admits the
+/// same treatment.
+struct AvgPoolLinear {
+    layer: DistPool2d<f64>,
+}
+
+impl DistLinearOp<f64> for AvgPoolLinear {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.layer.local_in_shape(rank)
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.layer.local_out_shape(rank)
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+        let mut st = self.layer.init(comm.rank(), 0)?;
+        self.layer.forward(&mut st, comm, x, false)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+        let mut st = self.layer.init(comm.rank(), 0)?;
+        let x0 = self
+            .layer
+            .local_in_shape(comm.rank())
+            .map(|s| Tensor::zeros(&s));
+        self.layer.forward(&mut st, comm, x0, true)?;
+        self.layer.backward(&mut st, comm, y)
+    }
+
+    fn name(&self) -> String {
+        "DistPool2d[avg]".into()
+    }
+}
+
+#[test]
+fn avg_pool_layer_coherent_through_arena_path() {
+    for (global_in, kernel, stride, grid, tag) in [
+        ([2, 2, 8, 8], (2, 2), (1, 1), (2, 2), 17_000),
+        ([1, 3, 9, 6], (3, 2), (2, 2), (2, 1), 18_000),
+    ] {
+        let world = grid.0 * grid.1;
+        let layer = DistPool2d::<f64>::new(
+            "p",
+            Pool2dConfig {
+                global_in,
+                kernel,
+                stride,
+                mode: PoolMode::Avg,
+                grid,
+                ranks: (0..world).collect(),
+                tag,
+            },
+            Arc::new(NativeKernels),
+        )
+        .unwrap();
+        let op = AvgPoolLinear { layer };
+        let r = adjoint_residual(world, &op, 67).unwrap();
+        assert!(
+            r < 1e-12,
+            "avg-pool layer fails Eq. (13) through the arena path: residual {r:.3e}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Arena reuse: warm steady state performs zero fresh allocations
+// ---------------------------------------------------------------------
+
+#[test]
+fn sequential_conv_steady_state_allocates_nothing() {
+    let mut rng = SplitMix64::new(0xE1);
+    let x = rand_t::<f32>(&[2, 3, 12, 12], &mut rng);
+    let w = rand_t::<f32>(&[4, 3, 3, 3], &mut rng);
+    let bias = rand_t::<f32>(&[4], &mut rng);
+    let spec = Conv2dSpec::default();
+    let step = |dy_seed: u64| {
+        let y = conv2d_forward(&x, &w, Some(&bias), spec).unwrap();
+        let mut r = SplitMix64::new(dy_seed);
+        let dy = rand_t::<f32>(y.shape(), &mut r);
+        conv2d_backward(&x, &w, &dy, spec).unwrap();
+    };
+    // warm-up fills the working set
+    step(1);
+    step(2);
+    let base = scratch_stats::<f32>().allocations;
+    for s in 3..9 {
+        step(s);
+    }
+    let after = scratch_stats::<f32>();
+    assert_eq!(
+        after.allocations, base,
+        "steady-state conv steps allocated fresh scratch buffers"
+    );
+    assert!(after.reuses > 0, "arena reuse counters never moved");
+}
+
+#[test]
+fn distributed_conv_steady_state_reuses_arena_per_rank() {
+    let layer = DistConv2d::<f32>::new(
+        "c",
+        Conv2dConfig {
+            global_in: [2, 2, 12, 12],
+            out_channels: 3,
+            kernel: (3, 3),
+            stride: (1, 1),
+            padding: (1, 1),
+            grid: (2, 2),
+            ranks: vec![0, 1, 2, 3],
+            tag: 27_000,
+        },
+        Arc::new(NativeKernels),
+    )
+    .unwrap();
+    let deltas = Cluster::run(4, |comm| {
+        let rank = comm.rank();
+        let in_shape = layer.local_in_shape(rank).expect("on grid");
+        let mut train_step = |seed: u64| -> Result<()> {
+            let mut st = layer.init(rank, 3)?;
+            let mut rng = SplitMix64::new(seed ^ rank as u64);
+            let x = rand_t::<f32>(&in_shape, &mut rng);
+            let y = layer
+                .forward(&mut st, comm, Some(x), true)?
+                .expect("grid output");
+            let dy = rand_t::<f32>(y.shape(), &mut rng);
+            layer.backward(&mut st, comm, Some(dy))?;
+            Ok(())
+        };
+        // warm-up: the rank thread's arena learns the working set
+        train_step(1)?;
+        train_step(2)?;
+        let base = scratch_stats::<f32>().allocations;
+        for s in 3..7 {
+            train_step(s)?;
+        }
+        Ok(scratch_stats::<f32>().allocations - base)
+    })
+    .unwrap();
+    assert_eq!(
+        deltas,
+        vec![0, 0, 0, 0],
+        "steady-state distributed conv steps allocated on some rank"
+    );
+}
