@@ -8,9 +8,13 @@
 //! * **E12** times the naive scalar-loop conv kernels against the
 //!   im2col/GEMM kernels on the LeNet shapes (forward + VJP) — the
 //!   acceptance evidence for the shared GEMM core;
+//! * **E13** times the distributed train step under the backward overlap
+//!   schedule (split adjoint halo exchange with the δw/δb GEMMs and
+//!   parameter sum-reduce in flight) against the serialized parity
+//!   schedule — the measured backward-pass overlap speedup;
 //! * the step table's `allocs/step` column counts fresh scratch-arena
 //!   allocations per steady-state step on rank 0 (warm-up excluded) —
-//!   zero means every im2col/staging buffer was reused.
+//!   zero means every im2col/staging/stash/message buffer was reused.
 //!
 //! Setup (network build, parameter init, PJRT compilation) happens once
 //! per configuration inside a single cluster; the timed region is the
@@ -22,6 +26,7 @@ use distdl::coordinator::{kernels_for, train_step};
 use distdl::data::SyntheticMnist;
 use distdl::memory::scratch_stats;
 use distdl::models::{lenet5, LeNetConfig, LeNetLayout};
+use distdl::nn::layers::set_adjoint_overlap;
 use distdl::nn::native::{
     conv2d_backward, conv2d_backward_naive, conv2d_forward, conv2d_forward_naive, Conv2dSpec,
 };
@@ -143,6 +148,29 @@ fn kernel_speedup() {
     }
 }
 
+/// E13: the distributed backward pass with the split-adjoint overlap
+/// schedule vs the serialized parity schedule (one-shot VJP, sum-reduce,
+/// monolithic adjoint exchange), on the native backend.
+fn backward_overlap_speedup(batch: usize, iters: usize) {
+    println!("\n== E13: backward overlap — serialized vs split-adjoint train step (4 workers, native) ==");
+    println!(
+        "{:<34} {:>12} {:>12} {:>9} {:>12}",
+        "schedule pair", "serialized", "overlapped", "speedup", "allocs/step"
+    );
+    set_adjoint_overlap(false);
+    let (serial, _) = measure(LeNetLayout::FourWorker, Backend::Native, batch, false, iters);
+    set_adjoint_overlap(true);
+    let (overlap, allocs) = measure(LeNetLayout::FourWorker, Backend::Native, batch, false, iters);
+    println!(
+        "{:<34} {:>12} {:>12} {:>8.2}x {:>12.1}",
+        "train-step median",
+        fmt_time(serial.median),
+        fmt_time(overlap.median),
+        serial.median / overlap.median,
+        allocs
+    );
+}
+
 fn main() {
     kernel_speedup();
     println!("\n== E9: LeNet-5 step latency (batch 64, steady state) ==");
@@ -191,5 +219,8 @@ fn main() {
                 );
             }
         }
+    }
+    if filter.is_none() {
+        backward_overlap_speedup(batch, iters);
     }
 }

@@ -17,14 +17,19 @@
 //! shared blocked multi-threaded GEMM core against the retained naive
 //! triple loop (gather and all-to-all run their assemblies on
 //! `Comm::wait_any`, so the collective numbers above already include the
-//! arrival-order drain).
+//! arrival-order drain), and the **persistent GEMM worker pool** against
+//! the retained scoped-spawn scheduler — skinny-m products are the
+//! spawn-overhead regime the pool targets — plus a worker-count scaling
+//! sweep (`gemm_with_workers`).
 //!
 //! The trailing table reports the per-benchmark speedups — nonblocking
-//! engine vs blocking wire baseline, and GEMM vs naive kernels.
+//! engine vs blocking wire baseline, GEMM vs naive kernels, and pooled vs
+//! scoped-spawn scheduling.
 
 use distdl::adjoint::DistLinearOp;
 use distdl::comm::{Cluster, Comm};
 use distdl::error::Result;
+use distdl::nn::native::gemm::{gemm_scoped, gemm_with_workers, pool_threads};
 use distdl::partition::{Partition, TensorDecomposition};
 use distdl::primitives::{AllReduce, Broadcast, Gather, Repartition, Scatter, SumReduce};
 use distdl::tensor::{ops, Tensor};
@@ -34,6 +39,8 @@ const WIRE: &str = "blocking-wire";
 const NB: &str = "nonblocking";
 const NAIVE: &str = "naive";
 const GEMM: &str = "gemm";
+const SCOPED: &str = "scoped-spawn";
+const POOLED: &str = "pooled";
 
 /// Run one collective body under both engines.
 fn bench_both<F>(g: &mut BenchGroup, name: &str, bytes: usize, world: usize, body: F)
@@ -53,9 +60,11 @@ where
 }
 
 fn report_speedup(results: &[BenchResult]) {
-    println!("\n== speedups: nonblocking vs blocking-wire, GEMM vs naive kernels ==");
+    println!(
+        "\n== speedups: nonblocking vs blocking-wire, GEMM vs naive, pooled vs scoped-spawn =="
+    );
     println!("{:<52} {:>10}", "benchmark", "speedup");
-    for (fast, base) in [(NB, WIRE), (GEMM, NAIVE)] {
+    for (fast, base) in [(NB, WIRE), (GEMM, NAIVE), (POOLED, SCOPED)] {
         let fast_suffix = format!(" [{fast}]");
         let base_suffix = format!(" [{base}]");
         for r in results {
@@ -230,6 +239,53 @@ fn main() {
             });
             g.bench(&format!("matmul f64 {n}x{n} [{GEMM}]"), || {
                 ops::matmul(&a64, &b64).unwrap();
+            });
+        }
+    }
+
+    // Persistent worker pool vs per-call scoped spawns, at the pool's
+    // worker count. Skinny-m products are the spawn-overhead regime:
+    // little compute per slab, so the scoped scheduler's thread
+    // spawn/join and per-worker B re-packing dominate; the pool's parked
+    // helpers and shared packed-B panels are exactly that overhead
+    // removed. The square product shows the large-product behaviour.
+    {
+        let hw = pool_threads();
+        for (m, n, k) in [(8usize, 256usize, 512usize), (16, 384, 384), (256, 256, 256)] {
+            let a = Tensor::<f32>::from_fn(&[m, k], |i| {
+                ((i[0] * 13 + i[1] * 5) % 17) as f32 * 0.1 - 0.8
+            });
+            let b = Tensor::<f32>::from_fn(&[k, n], |i| {
+                ((i[0] * 7 + i[1] * 11) % 19) as f32 * 0.1 - 0.9
+            });
+            let mut c = vec![0.0f32; m * n];
+            let name = format!("gemm f32 {m}x{n}x{k} w={hw}");
+            g.bench(&format!("{name} [{SCOPED}]"), || {
+                c.fill(0.0);
+                gemm_scoped(m, n, k, a.data(), false, b.data(), false, &mut c, hw).unwrap();
+            });
+            g.bench(&format!("{name} [{POOLED}]"), || {
+                c.fill(0.0);
+                gemm_with_workers(m, n, k, a.data(), false, b.data(), false, &mut c, hw)
+                    .unwrap();
+            });
+        }
+        // Worker-count scaling sweep on a mid-size square product.
+        let (m, n, k) = (256usize, 256usize, 256usize);
+        let a = Tensor::<f64>::from_fn(&[m, k], |i| {
+            ((i[0] * 29 + i[1] * 3) % 23) as f64 * 0.05 - 0.55
+        });
+        let b = Tensor::<f64>::from_fn(&[k, n], |i| {
+            ((i[0] * 19 + i[1] * 13) % 21) as f64 * 0.05 - 0.5
+        });
+        let mut c = vec![0.0f64; m * n];
+        let mut sweep = vec![1usize, 2, 4, hw];
+        sweep.sort_unstable();
+        sweep.dedup();
+        for w in sweep {
+            g.bench(&format!("gemm f64 256x256x256 pooled workers={w}"), || {
+                c.fill(0.0);
+                gemm_with_workers(m, n, k, a.data(), false, b.data(), false, &mut c, w).unwrap();
             });
         }
     }

@@ -30,7 +30,12 @@
 //! The primitives post *all* their sends and receives for a phase before
 //! completing any of them ("post-all-then-complete"), and the hot layers
 //! ([`crate::nn::layers`] conv, [`crate::coordinator`]) compute while
-//! messages are in flight.
+//! messages are in flight — in both directions: the conv forward runs
+//! its interior kernel against the in-flight halo exchange, and the conv
+//! backward runs its δw/δb GEMMs and parameter sum-reduce against the
+//! in-flight δx halo-adjoint messages (the split adjoint exchange).
+//! Message payloads that travel the halo paths are staged in per-rank
+//! [`crate::memory`] scratch buffers that the receiver recycles.
 //!
 //! ## Payload paths
 //!

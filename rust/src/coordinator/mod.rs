@@ -150,6 +150,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         if comm.rank() == 0 {
             log.set_comm_stats(&comm.stats());
             log.set_scratch_stats(&crate::memory::scratch_stats::<f32>());
+            log.set_gemm_pool_stats(&crate::nn::native::gemm::gemm_pool_stats());
         }
         Ok((log, state.param_count(), eval_acc))
     })?;

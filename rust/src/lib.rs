@@ -25,9 +25,12 @@
 //!   [`memory::Scratch`] arena that applies the same algebra to the hot
 //!   path: each coordinator rank thread owns a buffer pool whose `take`
 //!   replaces a deallocate/re-allocate round trip with the clear operator
-//!   `K_b`, so im2col columns, GEMM pack panels, and halo staging are
-//!   reused across micro-batches (counters prove steady-state steps
-//!   allocate nothing).
+//!   `K_b`, so im2col columns, GEMM pack panels, halo staging, activation
+//!   stashes, and halo-adjoint message pieces are reused across
+//!   micro-batches (counters prove steady-state steps allocate nothing);
+//!   a `PALLAS_SCRATCH_CAP_BYTES` cap (default 64 MiB per arena, `0` =
+//!   uncapped) turns oversized `give`s into real deallocations (counted
+//!   as evictions) so long-lived ranks don't hoard peak-shaped buffers.
 //! * [`comm`] — an MPI-like message-passing substrate (threads + channels)
 //!   built as a **nonblocking request engine**: `isend`/`irecv` post
 //!   operations and return requests completed by
@@ -40,11 +43,13 @@
 //!   all-reduce, generalized all-to-all (repartition), and the generalized
 //!   unbalanced halo exchange — each a [`adjoint::LinearOp`] with a
 //!   hand-derived adjoint, all scheduled post-all-then-complete on the
-//!   request engine; the halo exchange additionally splits into
-//!   `start`/`finish` so layers overlap compute with communication (the
-//!   distributed conv computes its halo-independent interior while halo
-//!   messages are in flight, on slabs its trim/pad shim extracts straight
-//!   from the exchange buffer).
+//!   request engine; the halo exchange splits into `start`/`finish` in
+//!   **both directions** — the distributed conv computes its
+//!   halo-independent interior while forward halo messages are in flight
+//!   (on slabs its trim/pad shim extracts straight from the exchange
+//!   buffer), and its backward runs the δw/δb GEMMs and the parameter
+//!   sum-reduce while the δx halo-adjoint messages move
+//!   (`adjoint_start`/`adjoint_finish`).
 //! * [`halo`] — Appendix B halo geometry: per-worker left/right halo widths
 //!   and "unused input" regions for arbitrary kernel size/stride/dilation/
 //!   padding.
@@ -54,10 +59,17 @@
 //! * [`nn`] — §4 distributed layers (conv, pool, affine, transpose,
 //!   pointwise) over both native Rust kernels and AOT-compiled XLA
 //!   executables. The native sequential layer functions share one compute
-//!   core: the cache-blocked, multi-threaded GEMM in `nn::native::gemm`,
-//!   reached directly by the affine kernel and through im2col/col2im by
-//!   the convolution kernels; the original scalar loops survive as
-//!   `*_naive` references for parity tests and kernel-speedup benches.
+//!   core: the cache-blocked GEMM in `nn::native::gemm`, running on a
+//!   **persistent per-rank worker pool** (parked std threads, sized by
+//!   `available_parallelism` with a `PALLAS_GEMM_THREADS` override) with
+//!   shared packed-B panels and a SIMD-width-aware microkernel dispatch
+//!   (4×16 `f32` / 4×8 `f64` register tiles) — bitwise reproducible
+//!   across worker counts. The affine kernel reaches it directly, the
+//!   convolution kernels through im2col/col2im; the conv VJP splits into
+//!   δx and δw/δb halves so the layer's backward overlaps them with the
+//!   adjoint exchange. The original scalar loops and the scoped-spawn
+//!   GEMM scheduler survive as `*_naive`/`gemm_scoped` references for
+//!   parity tests and speedup benches.
 //! * [`runtime`] — PJRT loading/execution of `artifacts/*.hlo.txt` produced
 //!   by the JAX/Pallas compile path (`python/compile`); gated behind the
 //!   `pjrt` cargo feature (off by default — the crate builds with zero

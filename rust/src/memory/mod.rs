@@ -31,6 +31,13 @@
 //! owns one arena (thread-local), the layers borrow buffers from it, and
 //! its counters distinguish true allocations (`A_b`) from clears of pooled
 //! memory (`K_b`) — the evidence that steady-state steps stop allocating.
+//! A byte cap (`PALLAS_SCRATCH_CAP_BYTES`, default 64 MiB per arena,
+//! `0` = uncapped) bounds each arena's parked capacity: a `give` that
+//! would exceed it executes the deallocation `D_b` for real instead of
+//! deferring it (counted as an eviction), so a long-lived rank that once
+//! staged a peak-shaped buffer — or keeps receiving halo pieces it never
+//! re-sends, as in a forward-only inference loop — does not hoard memory
+//! forever.
 
 use crate::error::{Error, Result};
 use crate::tensor::Scalar;
@@ -416,6 +423,36 @@ pub fn memop_adjoint_residual<T: Scalar>(
 // Scratch arena — the §2 allocation algebra applied to the hot path.
 // ---------------------------------------------------------------------
 
+/// Environment variable capping the pooled bytes each (thread, scalar
+/// type) arena may park (`give`s that would exceed it are dropped — the
+/// deferred `D_b` executes for real). Absent or unparseable means the
+/// [`DEFAULT_SCRATCH_CAP_BYTES`] default; an explicit `0` means uncapped.
+/// Read once per arena, at first use on its thread.
+pub const SCRATCH_CAP_ENV: &str = "PALLAS_SCRATCH_CAP_BYTES";
+
+/// Default per-arena pool cap: far above any steady-state working set in
+/// this crate (so training-path reuse is never evicted), but a hard
+/// bound on pathological growth — e.g. forward-only inference loops over
+/// asymmetric halo geometries, where the halo message circulation is
+/// one-way and a receive-heavy rank would otherwise park one buffer per
+/// step forever (training steps are exactly balanced; see
+/// [`crate::primitives::HaloExchange`]).
+pub const DEFAULT_SCRATCH_CAP_BYTES: usize = 64 << 20;
+
+/// Parse a `PALLAS_SCRATCH_CAP_BYTES` value into the effective cap.
+fn parse_scratch_cap(raw: Option<&str>) -> Option<usize> {
+    match raw.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(0) => None,
+        Some(b) => Some(b),
+        None => Some(DEFAULT_SCRATCH_CAP_BYTES),
+    }
+}
+
+/// The per-arena pool cap currently configured by the environment.
+fn configured_scratch_cap() -> Option<usize> {
+    parse_scratch_cap(std::env::var(SCRATCH_CAP_ENV).ok().as_deref())
+}
+
 /// Counters describing how an arena served its `take` requests.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct ScratchStats {
@@ -430,6 +467,10 @@ pub struct ScratchStats {
     pub pooled: usize,
     /// Total capacity (elements) across parked buffers.
     pub pooled_elems: usize,
+    /// `give`s dropped by the pool cap (`PALLAS_SCRATCH_CAP_BYTES`) — a
+    /// real deallocation `D_b` instead of a deferral, so long-lived ranks
+    /// stop hoarding peak-shaped buffers.
+    pub evictions: usize,
 }
 
 /// A reusable buffer pool for one scalar type.
@@ -439,20 +480,31 @@ pub struct ScratchStats {
 /// `give` parks a buffer for later reuse instead of deallocating it. The
 /// semantics seen by the borrower are identical to `A_b` (a zeroed subset
 /// comes into scope) — only the counters reveal which operator ran.
+///
+/// A byte cap (the shrink policy) bounds how much a long-lived rank may
+/// hoard: a `give` that would push the pool's parked capacity past
+/// `cap_bytes` is dropped instead of parked, counted as an eviction.
 #[derive(Debug, Default)]
 pub struct Scratch<T: Scalar> {
     free: Vec<Vec<T>>,
     allocations: usize,
     reuses: usize,
+    evictions: usize,
+    pooled_bytes: usize,
+    cap_bytes: Option<usize>,
 }
 
 impl<T: Scalar> Scratch<T> {
-    /// Empty arena.
+    /// Empty, uncapped arena.
     pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    /// Empty arena with a parked-capacity byte cap (`None` = uncapped).
+    pub fn with_cap_bytes(cap_bytes: Option<usize>) -> Self {
         Scratch {
-            free: Vec::new(),
-            allocations: 0,
-            reuses: 0,
+            cap_bytes,
+            ..Scratch::default()
         }
     }
 
@@ -490,8 +542,9 @@ impl<T: Scalar> Scratch<T> {
             }
         }
         match best {
-            Some((i, _)) => {
+            Some((i, cap)) => {
                 self.reuses += 1;
+                self.pooled_bytes -= cap * std::mem::size_of::<T>();
                 let mut buf = self.free.swap_remove(i);
                 if zeroed {
                     buf.clear();
@@ -506,11 +559,22 @@ impl<T: Scalar> Scratch<T> {
         }
     }
 
-    /// Return a borrowed buffer to the pool (the deferred `D_b`).
+    /// Return a borrowed buffer to the pool (the deferred `D_b`) — unless
+    /// parking it would push the pool past its byte cap, in which case the
+    /// deallocation happens for real and is counted as an eviction.
     pub fn give(&mut self, buf: Vec<T>) {
-        if buf.capacity() > 0 {
-            self.free.push(buf);
+        if buf.capacity() == 0 {
+            return;
         }
+        let bytes = buf.capacity() * std::mem::size_of::<T>();
+        if let Some(cap) = self.cap_bytes {
+            if self.pooled_bytes + bytes > cap {
+                self.evictions += 1;
+                return;
+            }
+        }
+        self.pooled_bytes += bytes;
+        self.free.push(buf);
     }
 
     /// Current counters.
@@ -520,6 +584,7 @@ impl<T: Scalar> Scratch<T> {
             reuses: self.reuses,
             pooled: self.free.len(),
             pooled_elems: self.free.iter().map(|b| b.capacity()).sum(),
+            evictions: self.evictions,
         }
     }
 
@@ -527,6 +592,7 @@ impl<T: Scalar> Scratch<T> {
     pub fn reset_stats(&mut self) {
         self.allocations = 0;
         self.reuses = 0;
+        self.evictions = 0;
     }
 }
 
@@ -545,7 +611,7 @@ fn with_scratch<T: Scalar, R>(f: impl FnOnce(&mut Scratch<T>) -> R) -> R {
         let mut pools = pools.borrow_mut();
         let entry = pools
             .entry(TypeId::of::<T>())
-            .or_insert_with(|| Box::new(Scratch::<T>::new()));
+            .or_insert_with(|| Box::new(Scratch::<T>::with_cap_bytes(configured_scratch_cap())));
         f(entry
             .downcast_mut::<Scratch<T>>()
             .expect("scratch pool entry matches its TypeId"))
@@ -813,6 +879,68 @@ mod tests {
         assert_eq!(s.stats().allocations, warm, "steady state allocated");
         s.reset_stats();
         assert_eq!(s.stats().allocations, 0);
+    }
+
+    #[test]
+    fn scratch_cap_parsing() {
+        // absent or garbage -> the default cap; explicit 0 -> uncapped
+        assert_eq!(parse_scratch_cap(None), Some(DEFAULT_SCRATCH_CAP_BYTES));
+        assert_eq!(
+            parse_scratch_cap(Some("nope")),
+            Some(DEFAULT_SCRATCH_CAP_BYTES)
+        );
+        assert_eq!(parse_scratch_cap(Some("0")), None);
+        assert_eq!(parse_scratch_cap(Some(" 4096 ")), Some(4096));
+    }
+
+    #[test]
+    fn scratch_cap_drops_oversized_gives() {
+        // cap of 200 bytes = 25 f64
+        let mut s = Scratch::<f64>::with_cap_bytes(Some(200));
+        let a = s.take(20); // 160 bytes
+        let b = s.take(10); // 80 bytes
+        s.give(a); // parked: 160 bytes
+        s.give(b); // 160 + 80 > 200 → dropped
+        let st = s.stats();
+        assert_eq!(st.pooled, 1);
+        assert_eq!(st.evictions, 1);
+        // a single give larger than the whole cap is dropped even into an
+        // empty pool
+        let mut t = Scratch::<f64>::with_cap_bytes(Some(64));
+        let big = t.take(16); // 128 bytes
+        t.give(big);
+        assert_eq!(t.stats().pooled, 0);
+        assert_eq!(t.stats().evictions, 1);
+        t.reset_stats();
+        assert_eq!(t.stats().evictions, 0);
+    }
+
+    #[test]
+    fn scratch_cap_accounts_for_reuse() {
+        // Taking a parked buffer frees its bytes: steady-state take/give
+        // cycles never evict under a cap sized for the working set.
+        let mut s = Scratch::<f32>::with_cap_bytes(Some(1024));
+        for _ in 0..5 {
+            let a = s.take(100); // 400 bytes
+            let b = s.take(50); // 200 bytes
+            s.give(a);
+            s.give(b);
+        }
+        let st = s.stats();
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.pooled, 2);
+        assert_eq!(st.allocations, 2);
+    }
+
+    #[test]
+    fn uncapped_scratch_never_evicts() {
+        let mut s = Scratch::<f64>::new();
+        for len in [10usize, 100, 1000] {
+            let b = s.take(len);
+            s.give(b);
+        }
+        assert_eq!(s.stats().evictions, 0);
+        assert_eq!(s.stats().pooled, 3);
     }
 
     #[test]

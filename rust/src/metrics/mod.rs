@@ -2,6 +2,7 @@
 
 use crate::comm::CommStats;
 use crate::memory::ScratchStats;
+use crate::nn::native::gemm::GemmPoolStats;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -67,6 +68,16 @@ impl MetricLog {
         self.set_meta("scratch_reuses", s.reuses);
         self.set_meta("scratch_pooled", s.pooled);
         self.set_meta("scratch_pooled_elems", s.pooled_elems);
+        self.set_meta("scratch_evictions", s.evictions);
+    }
+
+    /// Surface the persistent GEMM worker pool's counters as run metadata
+    /// (`gemm_*` keys) — worker count plus how many pooled products and
+    /// row-slab tasks the run dispatched.
+    pub fn set_gemm_pool_stats(&mut self, s: &GemmPoolStats) {
+        self.set_meta("gemm_pool_workers", s.workers);
+        self.set_meta("gemm_pool_jobs", s.jobs);
+        self.set_meta("gemm_pool_tasks", s.tasks);
     }
 
     /// Mean loss over the last `n` steps.
@@ -171,12 +182,28 @@ mod tests {
             reuses: 96,
             pooled: 6,
             pooled_elems: 4096,
+            evictions: 2,
         };
         log.set_scratch_stats(&stats);
         assert_eq!(log.meta["scratch_allocations"], "4");
         assert_eq!(log.meta["scratch_reuses"], "96");
         assert_eq!(log.meta["scratch_pooled"], "6");
         assert_eq!(log.meta["scratch_pooled_elems"], "4096");
+        assert_eq!(log.meta["scratch_evictions"], "2");
+    }
+
+    #[test]
+    fn gemm_pool_stats_surface_as_meta() {
+        let mut log = MetricLog::new();
+        let stats = GemmPoolStats {
+            workers: 4,
+            jobs: 120,
+            tasks: 480,
+        };
+        log.set_gemm_pool_stats(&stats);
+        assert_eq!(log.meta["gemm_pool_workers"], "4");
+        assert_eq!(log.meta["gemm_pool_jobs"], "120");
+        assert_eq!(log.meta["gemm_pool_tasks"], "480");
     }
 
     #[test]

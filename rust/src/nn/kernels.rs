@@ -32,6 +32,43 @@ pub trait LocalKernels<T: Scalar>: Send + Sync {
         spec: Conv2dSpec,
     ) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)>;
 
+    /// Input-gradient half of the convolution VJP (`δx` only). The
+    /// default runs the full VJP and discards the parameter gradients;
+    /// backends whose halves share no work override it (the native
+    /// im2col/GEMM kernels) and report so via
+    /// [`LocalKernels::supports_split_conv_backward`].
+    fn conv2d_backward_dx(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        dy: &Tensor<T>,
+        spec: Conv2dSpec,
+    ) -> Result<Tensor<T>> {
+        Ok(self.conv2d_backward(x, w, dy, spec)?.0)
+    }
+
+    /// Parameter-gradient half of the convolution VJP (`(δw, δb)` only);
+    /// see [`LocalKernels::conv2d_backward_dx`].
+    fn conv2d_backward_dw_db(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        dy: &Tensor<T>,
+        spec: Conv2dSpec,
+    ) -> Result<(Tensor<T>, Tensor<T>)> {
+        let (_, dw, db) = self.conv2d_backward(x, w, dy, spec)?;
+        Ok((dw, db))
+    }
+
+    /// Whether the split VJP halves avoid redundant work. Gates the
+    /// distributed conv layer's backward overlap schedule: when `false`
+    /// (the default, and the PJRT executables, whose VJP is one fused
+    /// artifact) the layer runs the one-shot VJP before starting the
+    /// adjoint exchange instead of paying the halves' duplicated compute.
+    fn supports_split_conv_backward(&self) -> bool {
+        false
+    }
+
     /// Pooling forward (returns argmax stash for max pooling).
     fn pool2d_forward(&self, x: &Tensor<T>, spec: Pool2dSpec) -> Result<(Tensor<T>, Vec<usize>)>;
 
@@ -89,6 +126,30 @@ impl<T: Scalar> LocalKernels<T> for NativeKernels {
         spec: Conv2dSpec,
     ) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)> {
         native::conv2d_backward(x, w, dy, spec)
+    }
+
+    fn conv2d_backward_dx(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        dy: &Tensor<T>,
+        spec: Conv2dSpec,
+    ) -> Result<Tensor<T>> {
+        native::conv2d_backward_dx(x, w, dy, spec)
+    }
+
+    fn conv2d_backward_dw_db(
+        &self,
+        x: &Tensor<T>,
+        w: &Tensor<T>,
+        dy: &Tensor<T>,
+        spec: Conv2dSpec,
+    ) -> Result<(Tensor<T>, Tensor<T>)> {
+        native::conv2d_backward_dw_db(x, w, dy, spec)
+    }
+
+    fn supports_split_conv_backward(&self) -> bool {
+        true
     }
 
     fn pool2d_forward(&self, x: &Tensor<T>, spec: Pool2dSpec) -> Result<(Tensor<T>, Vec<usize>)> {

@@ -14,9 +14,13 @@
 //! ```
 //! No explicit all-reduce anywhere: the forward broadcasts induce the
 //! adjoint sum-reduces and vice versa. The local `Affine`/`[δAffine]*`
-//! on each grid cell runs on the shared blocked multi-threaded GEMM core
-//! ([`crate::nn::native::gemm`]), with pack buffers staged in the
-//! per-rank scratch arena.
+//! on each grid cell runs on the shared blocked GEMM core
+//! ([`crate::nn::native::gemm`]) — and therefore on the same persistent
+//! per-rank worker pool (shared packed-B panels, SIMD-width-aware
+//! microkernel dispatch) as every other kernel, with pack buffers staged
+//! in the per-rank scratch arena. Its gradient sum-reduce benefits from
+//! the broadcast adjoint's move-not-clone cotangent path on every
+//! non-root grid cell.
 
 use crate::adjoint::DistLinearOp;
 use crate::autograd::{Layer, LayerState};

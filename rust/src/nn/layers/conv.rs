@@ -19,7 +19,19 @@
 //!   x ← H.finish            (complete the exchange, trim/pad shim)
 //!   y[boundary] ← Conv(ŵ, b̂; x)        — the halo-dependent slabs
 //! ```
-//! Adjoint: local VJP, then δw, δb ← R_{grid→root}, δx ← H* δx.
+//! The adjoint gets the symmetric schedule (Eq. 12–13: the adjoint is the
+//! same data movement run backwards, so it deserves the same overlap):
+//! ```text
+//!   δx̂ ← [δConv]_x*(ŵ; δy)             — the input-gradient VJP half
+//!   H*.start δx̂             (δx halo-adjoint sends/receives posted)
+//!   δŵ, δb̂ ← [δConv]_w*(x̂; δy)         — δw/δb GEMMs overlap the messages
+//!   δw, δb ← R_{grid→root} (δŵ, δb̂)    — the sum-reduce also overlaps
+//!   δx ← H*.finish          (complete the adjoint exchange)
+//! ```
+//! Backends without cost-free split VJP halves (PJRT's fused artifact),
+//! and the serialized parity reference toggled by
+//! [`set_adjoint_overlap`], run the one-shot VJP before `H*.start`
+//! instead — the sum-reduce still overlaps the δx messages.
 //!
 //! The interior region is derived from the halo geometry: along the
 //! exchange's split dimension, an output column is halo-independent iff
@@ -45,7 +57,26 @@ use crate::partition::Partition;
 use crate::primitives::{Broadcast, HaloExchange, TrimPad};
 use crate::tensor::{Region, Scalar, Tensor};
 use crate::util::rng::SplitMix64;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// Backward-pass overlap switch (process-global, default on). The
+/// serialized path — one-shot VJP, sum-reduce, then the monolithic
+/// adjoint exchange — is the parity reference the overlap benches and
+/// tests compare against.
+static ADJOINT_OVERLAP: AtomicBool = AtomicBool::new(true);
+
+/// Enable (default) or disable the conv backward overlap schedule — the
+/// split adjoint halo exchange with δw/δb compute and the parameter
+/// sum-reduce running while the δx messages are in flight.
+pub fn set_adjoint_overlap(on: bool) {
+    ADJOINT_OVERLAP.store(on, Ordering::Relaxed);
+}
+
+/// Whether the conv backward overlap schedule is currently enabled.
+pub fn adjoint_overlap() -> bool {
+    ADJOINT_OVERLAP.load(Ordering::Relaxed)
+}
 
 /// Configuration for [`DistConv2d`].
 #[derive(Debug, Clone)]
@@ -260,6 +291,26 @@ impl<T: Scalar> DistConv2d<T> {
         Ok(y)
     }
 
+    /// Adjoint of the parameter broadcasts: sum-reduce `δw`/`δb` onto the
+    /// root (Eq. 9) — a collective every rank joins (off-grid ranks with
+    /// `None`) — and accumulate into the root's gradient state.
+    fn reduce_params(
+        &self,
+        st: &mut LayerState<T>,
+        comm: &mut Comm,
+        rank: usize,
+        dw: Option<Tensor<T>>,
+        db: Option<Tensor<T>>,
+    ) -> Result<()> {
+        let dw_root = self.w_bcast.adjoint(comm, dw)?;
+        let db_root = self.b_bcast.adjoint(comm, db)?;
+        if rank == self.root {
+            st.grads[0].add_assign(&dw_root.expect("root receives dw"))?;
+            st.grads[1].add_assign(&db_root.expect("root receives db"))?;
+        }
+        Ok(())
+    }
+
     /// Generate the deterministic *global* parameters for `seed` (uniform
     /// Kaiming-style bound, as PyTorch's Conv2d default).
     fn global_params(&self, seed: u64) -> (Tensor<T>, Tensor<T>) {
@@ -404,12 +455,19 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
                 (y, x_hat)
             }
             // No partitioned dimension or no interior: plain full compute.
+            // The arena-staged compute buffer survives only as the
+            // backward stash; evaluation forwards return it immediately.
             None => {
                 let x_hat = self.shim.apply(&coords, &buf)?;
                 let y = self
                     .kernels
                     .conv2d_forward(&x_hat, &w_hat, Some(&b_hat), self.spec)?;
-                (y, Some(x_hat))
+                if train {
+                    (y, Some(x_hat))
+                } else {
+                    crate::memory::scratch_give(x_hat.into_vec());
+                    (y, None)
+                }
             }
         };
         // The exchange staging buffer goes back to the arena for the next
@@ -431,37 +489,52 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
         dy: Option<Tensor<T>>,
     ) -> Result<Option<Tensor<T>>> {
         let rank = comm.rank();
-        let coords = self.grid.coords_of(rank);
-        let mut dw_local = None;
-        let mut db_local = None;
-        let mut dx_hat = None;
-        if let Some(coords) = &coords {
-            let dy =
-                dy.ok_or_else(|| Error::Primitive(format!("{}: cotangent missing", self.name)))?;
-            let x_hat = &st.saved[0];
-            let w_hat = &st.saved[1];
-            let (dxh, dw, db) = self.kernels.conv2d_backward(x_hat, w_hat, &dy, self.spec)?;
-            dw_local = Some(dw);
-            db_local = Some(db);
-            dx_hat = Some((coords.clone(), dxh));
-        }
-        // Adjoint of the parameter broadcasts: sum-reduce onto the root
-        // (Eq. 9) — collective.
-        let dw_root = self.w_bcast.adjoint(comm, dw_local)?;
-        let db_root = self.b_bcast.adjoint(comm, db_local)?;
-        if rank == self.root {
-            st.grads[0].add_assign(&dw_root.expect("root receives dw"))?;
-            st.grads[1].add_assign(&db_root.expect("root receives db"))?;
-        }
-        let Some((coords, dxh)) = dx_hat else {
+        let Some(coords) = self.grid.coords_of(rank) else {
+            // Off-grid ranks only participate in the parameter sum-reduces.
+            self.reduce_params(st, comm, rank, None, None)?;
             return Ok(None);
         };
-        // Adjoint of shim then exchange (Eq. 12), then extract the bulk.
-        let dbuf = self.shim.apply_adjoint(&coords, &dxh)?;
-        let dbuf = self
-            .exchange
-            .adjoint(comm, Some(dbuf))?
-            .expect("grid rank exchanged");
+        let dy =
+            dy.ok_or_else(|| Error::Primitive(format!("{}: cotangent missing", self.name)))?;
+        let mut saved = std::mem::take(&mut st.saved);
+        let w_hat = saved.pop().expect("train forward stashed ŵ");
+        let x_hat = saved.pop().expect("train forward stashed x̂");
+        let dbuf = if !adjoint_overlap() {
+            // Serialized parity reference (the pre-overlap schedule): one-
+            // shot VJP, sum-reduce, then the monolithic adjoint exchange.
+            let (dxh, dw, db) = self.kernels.conv2d_backward(&x_hat, &w_hat, &dy, self.spec)?;
+            self.reduce_params(st, comm, rank, Some(dw), Some(db))?;
+            let dbuf = self.shim.apply_adjoint(&coords, &dxh)?;
+            self.exchange
+                .adjoint(comm, Some(dbuf))?
+                .expect("grid rank exchanged")
+        } else if self.kernels.supports_split_conv_backward() {
+            // Full overlap: δx first, so its halo-adjoint messages (and
+            // then the parameter sum-reduce) are in flight while the
+            // δw/δb GEMMs run.
+            let dxh = self
+                .kernels
+                .conv2d_backward_dx(&x_hat, &w_hat, &dy, self.spec)?;
+            let dbuf = self.shim.apply_adjoint(&coords, &dxh)?;
+            let inflight = self.exchange.adjoint_start(comm, dbuf)?;
+            let (dw, db) = self
+                .kernels
+                .conv2d_backward_dw_db(&x_hat, &w_hat, &dy, self.spec)?;
+            self.reduce_params(st, comm, rank, Some(dw), Some(db))?;
+            self.exchange.adjoint_finish(comm, inflight)?
+        } else {
+            // Fused-VJP backends (PJRT): the halves would duplicate the
+            // artifact's work, so run the one-shot VJP first and overlap
+            // only the sum-reduce with the posted δx messages.
+            let (dxh, dw, db) = self.kernels.conv2d_backward(&x_hat, &w_hat, &dy, self.spec)?;
+            let dbuf = self.shim.apply_adjoint(&coords, &dxh)?;
+            let inflight = self.exchange.adjoint_start(comm, dbuf)?;
+            self.reduce_params(st, comm, rank, Some(dw), Some(db))?;
+            self.exchange.adjoint_finish(comm, inflight)?
+        };
+        // The arena-staged activation stash has served its purpose (the
+        // broadcast replica ŵ is comm-owned and falls out of scope).
+        crate::memory::scratch_give(x_hat.into_vec());
         let bulk = self.exchange.bulk_region(&coords);
         let dx = dbuf.extract_region(&bulk)?;
         crate::memory::scratch_give(dbuf.into_vec());

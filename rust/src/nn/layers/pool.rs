@@ -156,16 +156,21 @@ impl<T: Scalar> Layer<T> for DistPool2d<T> {
         let x_hat_shape = self.shim.compute_shape(&coords);
         let saved_shape = train
             .then(|| {
-                Tensor::from_vec(
-                    &[x_hat_shape.len()],
-                    x_hat_shape.iter().map(|&d| T::from_f64(d as f64)).collect(),
-                )
+                // Arena-staged shape snapshot (given back by `backward`).
+                let mut snap = crate::memory::scratch_take_dirty::<T>(x_hat_shape.len());
+                for (dst, &d) in snap.iter_mut().zip(x_hat_shape.iter()) {
+                    *dst = T::from_f64(d as f64);
+                }
+                Tensor::from_vec(&[x_hat_shape.len()], snap)
             })
             .transpose()?;
         let buf = self.exchange.finish(comm, inflight)?;
         let x_hat = self.shim.apply(&coords, &buf)?;
         crate::memory::scratch_give(buf.into_vec());
         let (y, argmax) = self.kernels.pool2d_forward(&x_hat, self.spec)?;
+        // The arena-staged compute buffer is consumed by the kernel; the
+        // VJP needs only its shape (stashed above) and the argmax indices.
+        crate::memory::scratch_give(x_hat.into_vec());
         if train {
             st.saved = vec![saved_shape.expect("shape snapshot built under train")];
             st.saved_indices = vec![argmax];
@@ -184,7 +189,9 @@ impl<T: Scalar> Layer<T> for DistPool2d<T> {
         };
         let dy =
             dy.ok_or_else(|| Error::Primitive(format!("{}: cotangent missing", self.name)))?;
-        let x_shape: Vec<usize> = st.saved[0].data().iter().map(|v| v.to_f64() as usize).collect();
+        let shape_snap = st.saved.pop().expect("train forward stashed the shape");
+        let x_shape: Vec<usize> = shape_snap.data().iter().map(|v| v.to_f64() as usize).collect();
+        crate::memory::scratch_give(shape_snap.into_vec());
         let dx_hat = self
             .kernels
             .pool2d_backward(&x_shape, &dy, &st.saved_indices[0], self.spec)?;

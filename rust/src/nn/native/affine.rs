@@ -3,8 +3,9 @@
 //! `y = x Wᵀ + b` with `x[b, fi]`, `W[fo, fi]`, `b[fo]` — the sequential
 //! layer function inside the §4 distributed affine algorithm. All three
 //! products (forward, `δx`, `δW`) are routed through the shared blocked
-//! multi-threaded GEMM core in [`super::gemm`]; the previous ad-hoc
-//! cache-blocked loops survive as [`affine_forward_naive`] /
+//! GEMM core in [`super::gemm`] and hence through its persistent worker
+//! pool and dispatched microkernels; the previous ad-hoc cache-blocked
+//! loops survive as [`affine_forward_naive`] /
 //! [`affine_backward_naive`], the references the parity tests and benches
 //! compare against. The AOT XLA/Pallas executable still replaces the
 //! whole kernel on the LeNet hot path.

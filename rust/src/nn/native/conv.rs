@@ -216,47 +216,85 @@ pub fn conv2d_forward<T: Scalar>(
     Ok(y)
 }
 
-/// Convolution VJP: given `dy`, return `(dx, dw, db)`.
-///
-/// GEMM lowering: `δW_mat += δy_ib · colsᵀ` (batch accumulation happens
-/// inside the GEMM's `C +=` semantics), `δcols = W_matᵀ · δy_ib` scattered
-/// back by col2im, `δb` by direct reduction.
+/// Convolution VJP: given `dy`, return `(dx, dw, db)` — the composition
+/// of the two split halves below (identical numerics; the splits share no
+/// staging, so composing them costs no extra GEMM work).
 pub fn conv2d_backward<T: Scalar>(
     x: &Tensor<T>,
     w: &Tensor<T>,
     dy: &Tensor<T>,
     spec: Conv2dSpec,
 ) -> Result<(Tensor<T>, Tensor<T>, Tensor<T>)> {
+    let dx = conv2d_backward_dx(x, w, dy, spec)?;
+    let (dw, db) = conv2d_backward_dw_db(x, w, dy, spec)?;
+    Ok((dx, dw, db))
+}
+
+/// Input-gradient half of the convolution VJP: `δcols = W_matᵀ · δy_ib`
+/// scattered back by col2im. Needs no im2col of `x`, so the distributed
+/// layer computes it *first* and has the δx halo-adjoint messages in
+/// flight while [`conv2d_backward_dw_db`] runs.
+pub fn conv2d_backward_dx<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    dy: &Tensor<T>,
+    spec: Conv2dSpec,
+) -> Result<Tensor<T>> {
     let d = conv_dims(x, w, None, spec)?;
     crate::tensor::check_same(dy.shape(), &[d.b, d.co, d.oh, d.ow], "conv2d_backward dy")?;
     let kdim = d.ci * d.kh * d.kw;
     let ohow = d.oh * d.ow;
     let mut dx = Tensor::zeros(x.shape());
-    let mut dwt = Tensor::zeros(w.shape());
-    let mut db = Tensor::zeros(&[d.co]);
-    let xd = x.data();
     let wdt = w.data();
     let dyd = dy.data();
     if kdim > 0 && ohow > 0 && d.co > 0 {
         let dxd = dx.data_mut();
-        let dwd = dwt.data_mut();
-        // dirty takes: cols is fully rewritten by im2col and dcols is
-        // explicitly zeroed before each accumulating GEMM below
-        let mut cols = scratch_take_dirty::<T>(kdim * ohow);
+        // dirty take: dcols is explicitly zeroed before each accumulating
+        // GEMM below
         let mut dcols = scratch_take_dirty::<T>(kdim * ohow);
+        for ib in 0..d.b {
+            let dy_img = &dyd[ib * d.co * ohow..(ib + 1) * d.co * ohow];
+            let xoff = ib * d.ci * d.h * d.wd;
+            // δcols[kdim, ohow] = W_mat[co, kdim]ᵀ · δy[co, ohow]
+            dcols.fill(T::ZERO);
+            gemm(kdim, ohow, d.co, wdt, true, dy_img, false, &mut dcols)?;
+            col2im_add(&dcols, dxd, xoff, &d, spec);
+        }
+        scratch_give(dcols);
+    }
+    Ok(dx)
+}
+
+/// Parameter-gradient half of the convolution VJP: `δW_mat += δy_ib ·
+/// colsᵀ` (batch accumulation happens inside the GEMM's `C +=`
+/// semantics) and `δb` by direct reduction. `w` supplies only the weight
+/// shape.
+pub fn conv2d_backward_dw_db<T: Scalar>(
+    x: &Tensor<T>,
+    w: &Tensor<T>,
+    dy: &Tensor<T>,
+    spec: Conv2dSpec,
+) -> Result<(Tensor<T>, Tensor<T>)> {
+    let d = conv_dims(x, w, None, spec)?;
+    crate::tensor::check_same(dy.shape(), &[d.b, d.co, d.oh, d.ow], "conv2d_backward dy")?;
+    let kdim = d.ci * d.kh * d.kw;
+    let ohow = d.oh * d.ow;
+    let mut dwt = Tensor::zeros(w.shape());
+    let mut db = Tensor::zeros(&[d.co]);
+    let xd = x.data();
+    let dyd = dy.data();
+    if kdim > 0 && ohow > 0 && d.co > 0 {
+        let dwd = dwt.data_mut();
+        // dirty take: cols is fully rewritten by im2col
+        let mut cols = scratch_take_dirty::<T>(kdim * ohow);
         for ib in 0..d.b {
             let dy_img = &dyd[ib * d.co * ohow..(ib + 1) * d.co * ohow];
             let xoff = ib * d.ci * d.h * d.wd;
             // δW[co, kdim] += δy[co, ohow] · cols[kdim, ohow]ᵀ
             im2col(xd, xoff, &d, spec, &mut cols);
             gemm(d.co, kdim, ohow, dy_img, false, &cols, true, dwd)?;
-            // δcols[kdim, ohow] = W_mat[co, kdim]ᵀ · δy[co, ohow]
-            dcols.fill(T::ZERO);
-            gemm(kdim, ohow, d.co, wdt, true, dy_img, false, &mut dcols)?;
-            col2im_add(&dcols, dxd, xoff, &d, spec);
         }
         scratch_give(cols);
-        scratch_give(dcols);
     }
     {
         let dbd = db.data_mut();
@@ -271,7 +309,7 @@ pub fn conv2d_backward<T: Scalar>(
             }
         }
     }
-    Ok((dx, dwt, db))
+    Ok((dwt, db))
 }
 
 /// Reference forward convolution — the original scalar loops, retained

@@ -1,4 +1,6 @@
-//! The shared GEMM core every native compute kernel lowers onto.
+//! The shared GEMM core every native compute kernel lowers onto — now a
+//! **persistent per-rank runtime**: a parked worker pool, shared packed-B
+//! panels, and a SIMD-width-aware microkernel dispatch.
 //!
 //! One cache-blocked, register-tiled matrix multiply serves the whole
 //! sequential-compute hot path: [`crate::tensor::ops::matmul`], the affine
@@ -11,171 +13,207 @@
 //!   unit-stride regardless of the operands' logical transposition;
 //! * an `MR × NR` **microkernel** keeps a register-resident accumulator
 //!   tile and performs `2·MR·NR` flops per `MR + NR` loads;
-//! * large products are split row-wise across **std scoped threads**
-//!   (zero new dependencies), each worker owning a disjoint slab of C.
+//! * large products are split row-wise across the **worker pool**, each
+//!   worker owning a disjoint slab of C.
 //!
-//! Pack buffers come from the per-rank [`crate::memory`] scratch arena, so
-//! steady-state training steps perform no GEMM-related allocations. The
-//! operation is always `C += op(A) · op(B)` (accumulating): callers start
-//! from a zeroed C for a plain product, and the convolution weight
+//! ## Worker pool lifecycle
+//!
+//! The pool is process-global and **lazily initialized**: the first
+//! product big enough to parallelize spawns `threads − 1` helper threads
+//! (`threads` = `available_parallelism` capped at [`MAX_THREADS`], or the
+//! `PALLAS_GEMM_THREADS` override, read once). Helpers park in a condvar
+//! wait between products — no per-call `thread::scope` spawn/join, which
+//! dominated small and skinny-m products. Every call enqueues one task
+//! per row slab; the **calling rank's thread is worker zero**: it drains
+//! its own job's tasks from the queue alongside the helpers, so progress
+//! never depends on helpers being free (other ranks' products may have
+//! them busy) and `PALLAS_GEMM_THREADS=1` degenerates to the
+//! single-threaded path with no pool at all. `gemm` returns only after
+//! every slab task has completed, which is what makes the borrowed
+//! operand/pack pointers handed to the helpers sound.
+//!
+//! ## Shared packed-B ownership
+//!
+//! The pooled path packs **every (`kc`, `nc`) panel of B exactly once**:
+//! for each depth panel `[p0, p0+kc)` the caller packs the full row of
+//! column panels (panel `jn` at element stride `KC·NC`, so packer and
+//! workers compute offsets identically) into one arena buffer, then
+//! dispatches one task batch in which all row-slab workers *read* the
+//! shared pack; the next depth panel re-packs the same buffer, keeping
+//! shared-pack memory at `O(round_up(n, NC)·KC)` elements rather than a
+//! full packed copy of B. Under the scoped-spawn scheme each worker
+//! re-packed an identical B — an `O(workers · k·n)` overhead that
+//! mattered for skinny-m products. A panels stay per-worker (each slab
+//! packs its own `MC × KC` tiles into its private chunk of the arena
+//! buffer). Both buffers are taken from the *caller's* per-rank scratch
+//! arena before any task is enqueued and given back after the last batch
+//! completes; helper threads never touch an arena. A task that panics
+//! poisons its job (the latch still releases, the helper survives) and
+//! the panic is re-raised on the calling thread.
+//!
+//! ## Microkernel dispatch table
+//!
+//! The register tile is selected per scalar type at run time
+//! ([`tile_for`]), sized for 256-bit lanes:
+//!
+//! | scalar | MR × NR | accumulator            |
+//! |--------|---------|------------------------|
+//! | `f32`  | 4 × 16  | 8 × 256-bit (2/row)    |
+//! | `f64`  | 4 × 8   | 8 × 256-bit (2/row)    |
+//! | other  | 4 × 8   | generic fallback tile  |
+//!
+//! The `f32`/`f64` paths are monomorphized fixed-width kernels
+//! ([`microkernel_fixed`]) whose fully-unrolled accumulator rows
+//! autovectorize to packed FMAs; [`microkernel_generic`] keeps a
+//! runtime-width fallback. Accumulation order over the depth dimension is
+//! identical across tile widths, worker counts, and the scoped/pooled
+//! schedulers, so results are **bitwise reproducible** across all of them
+//! (the determinism tests and the `PALLAS_GEMM_THREADS=1` CI run rely on
+//! this).
+//!
+//! The operation is always `C += op(A) · op(B)` (accumulating): callers
+//! start from a zeroed C for a plain product, and the convolution weight
 //! gradient exploits the accumulation directly to sum over the batch.
+//! [`gemm_scoped`] retains the PR-2 scoped-spawn scheduler (per-worker B
+//! packs) as the parity reference the benches and determinism tests
+//! compare against.
 
 use crate::error::{Error, Result};
 use crate::memory::{scratch_give, scratch_take_dirty};
 use crate::tensor::Scalar;
 
-/// Microkernel rows (accumulator tile height).
+/// Microkernel rows (accumulator tile height, all dispatch entries).
 const MR: usize = 4;
-/// Microkernel columns (accumulator tile width).
-const NR: usize = 8;
+/// Widest dispatchable microkernel column count.
+const NR_MAX: usize = 16;
 /// Row-panel height of packed A (multiple of `MR`).
 const MC: usize = 64;
 /// Shared inner (depth) blocking of both packed panels.
 const KC: usize = 256;
-/// Column-panel width of packed B (multiple of `NR`).
+/// Column-panel width of packed B (multiple of every dispatched NR).
 const NC: usize = 256;
 
-/// Packed-panel capacities (elements) taken from the scratch arena.
+/// Packed-panel capacities (elements) taken from the scratch arena. A
+/// `KC × NC` B panel holds at most `KC · round_up(NC, nr) = KC · NC`
+/// packed elements for every dispatched tile width.
 const APACK_ELEMS: usize = MC * KC;
 const BPACK_ELEMS: usize = NC * KC;
 
-/// Products below this many flops run single-threaded: thread spawn and
-/// join dominate, and the SPMD cluster already runs one thread per rank.
+/// Products below this many flops run single-threaded: task dispatch and
+/// completion overhead dominates, and the SPMD cluster already runs one
+/// thread per rank.
 const PAR_FLOPS: usize = 1 << 23;
-/// Upper bound on worker threads for one product.
+/// Default upper bound on pool threads (`PALLAS_GEMM_THREADS` overrides).
 const MAX_THREADS: usize = 8;
 
-/// `C[m,n] += op(A) · op(B)` over row-major storage.
-///
-/// * `a` holds `m × k` row-major when `trans_a` is false, `k × m` when
-///   true (the logical operand is then `Aᵀ`);
-/// * `b` holds `k × n` row-major when `trans_b` is false, `n × k` when
-///   true;
-/// * `c` is `m × n` row-major and is **accumulated into** (zero it first
-///   for a plain product).
-pub fn gemm<T: Scalar>(
-    m: usize,
-    n: usize,
-    k: usize,
-    a: &[T],
-    trans_a: bool,
-    b: &[T],
-    trans_b: bool,
+/// Environment variable fixing the pool's total worker count (including
+/// the calling thread). Read once, at pool initialization.
+pub const GEMM_THREADS_ENV: &str = "PALLAS_GEMM_THREADS";
+
+// ---------------------------------------------------------------------
+// Microkernel dispatch
+// ---------------------------------------------------------------------
+
+/// A dispatched register tile: the packed-B interleave width and the
+/// kernel that consumes panels packed at that width.
+#[derive(Clone, Copy)]
+struct Tile<T: Scalar> {
+    nr: usize,
+    kernel: fn(usize, &[T], &[T], &mut [T], usize, usize, usize),
+}
+
+/// Runtime tile selection by scalar width: 256-bit lanes hold 8 `f32` or
+/// 4 `f64`, and two lanes per accumulator row fill 8 of the 16 vector
+/// registers with the tile.
+fn tile_for<T: Scalar>() -> Tile<T> {
+    match T::WIRE_SIZE {
+        4 => Tile {
+            nr: 16,
+            kernel: microkernel_fixed::<T, 16>,
+        },
+        8 => Tile {
+            nr: 8,
+            kernel: microkernel_fixed::<T, 8>,
+        },
+        _ => Tile {
+            nr: 8,
+            kernel: microkernel_generic::<T>,
+        },
+    }
+}
+
+/// Fixed-width `MR × NRC` register-tile kernel over a depth-`kc` packed
+/// panel pair (`apanel` is `[depth][MR]`-interleaved, `bpanel` is
+/// `[depth][NRC]`-interleaved); accumulates the valid `m_eff × n_eff`
+/// corner into `c` (row stride `ldc`, `c[0]` = tile origin). The
+/// accumulator rows are unrolled so the fixed-trip inner loops compile to
+/// packed multiply-adds.
+fn microkernel_fixed<T: Scalar, const NRC: usize>(
+    kc: usize,
+    apanel: &[T],
+    bpanel: &[T],
     c: &mut [T],
-) -> Result<()> {
-    if a.len() != m * k || b.len() != k * n || c.len() != m * n {
-        return Err(Error::Shape(format!(
-            "gemm: buffers {}/{}/{} vs m={m} n={n} k={k}",
-            a.len(),
-            b.len(),
-            c.len()
-        )));
-    }
-    if m == 0 || n == 0 || k == 0 {
-        return Ok(());
-    }
-    // Row/column strides of the *logical* (post-transposition) operands.
-    let (a_rs, a_cs) = if trans_a { (1, m) } else { (k, 1) };
-    let (b_rs, b_cs) = if trans_b { (1, k) } else { (n, 1) };
-
-    let workers = worker_count(m, n, k);
-    if workers <= 1 {
-        // Dirty takes: pack_a/pack_b overwrite every packed element the
-        // microkernel reads (ragged tiles included), so zeroing here would
-        // be a pure memset tax on every call.
-        let mut apack = scratch_take_dirty::<T>(APACK_ELEMS);
-        let mut bpack = scratch_take_dirty::<T>(BPACK_ELEMS);
-        gemm_block(m, n, k, a, a_rs, a_cs, 0, b, b_rs, b_cs, c, &mut apack, &mut bpack);
-        scratch_give(apack);
-        scratch_give(bpack);
-        return Ok(());
-    }
-    // Split C row-wise in MR-aligned slabs; each worker runs the full
-    // blocked product on its disjoint slab, with its own pack buffers
-    // (taken here, on the owning rank's thread, so transient workers
-    // allocate nothing).
-    let rows = round_up((m + workers - 1) / workers, MR);
-    let slabs = (m + rows - 1) / rows;
-    let mut apack = scratch_take_dirty::<T>(slabs * APACK_ELEMS);
-    let mut bpack = scratch_take_dirty::<T>(slabs * BPACK_ELEMS);
-    std::thread::scope(|scope| {
-        for (w, ((c_slab, ap), bp)) in c
-            .chunks_mut(rows * n)
-            .zip(apack.chunks_mut(APACK_ELEMS))
-            .zip(bpack.chunks_mut(BPACK_ELEMS))
-            .enumerate()
-        {
-            let row0 = w * rows;
-            let m_slab = c_slab.len() / n;
-            scope.spawn(move || {
-                gemm_block(m_slab, n, k, a, a_rs, a_cs, row0, b, b_rs, b_cs, c_slab, ap, bp);
-            });
-        }
-    });
-    scratch_give(apack);
-    scratch_give(bpack);
-    Ok(())
-}
-
-/// Smallest multiple of `q` that is `>= v` (for `q > 0`).
-fn round_up(v: usize, q: usize) -> usize {
-    ((v + q - 1) / q) * q
-}
-
-/// Worker threads for an `m·n·k` product.
-fn worker_count(m: usize, n: usize, k: usize) -> usize {
-    let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
-    if flops < PAR_FLOPS {
-        return 1;
-    }
-    let hw = std::thread::available_parallelism()
-        .map(|v| v.get())
-        .unwrap_or(1);
-    hw.min(MAX_THREADS).min((m + MR - 1) / MR).max(1)
-}
-
-/// The single-threaded blocked product on logical rows
-/// `[row0, row0 + m)` of A, writing the `m × n` row-major slab `c`.
-#[allow(clippy::too_many_arguments)]
-fn gemm_block<T: Scalar>(
-    m: usize,
-    n: usize,
-    k: usize,
-    a: &[T],
-    a_rs: usize,
-    a_cs: usize,
-    row0: usize,
-    b: &[T],
-    b_rs: usize,
-    b_cs: usize,
-    c: &mut [T],
-    apack: &mut [T],
-    bpack: &mut [T],
+    ldc: usize,
+    m_eff: usize,
+    n_eff: usize,
 ) {
-    for p0 in (0..k).step_by(KC) {
-        let kc = KC.min(k - p0);
-        for j0 in (0..n).step_by(NC) {
-            let nc = NC.min(n - j0);
-            pack_b(b, b_rs, b_cs, p0, kc, j0, nc, bpack);
-            for i0 in (0..m).step_by(MC) {
-                let mc = MC.min(m - i0);
-                pack_a(a, a_rs, a_cs, row0 + i0, mc, p0, kc, apack);
-                let n_tiles = (nc + NR - 1) / NR;
-                let m_tiles = (mc + MR - 1) / MR;
-                for jt in 0..n_tiles {
-                    let n_eff = NR.min(nc - jt * NR);
-                    let bpanel = &bpack[jt * kc * NR..(jt + 1) * kc * NR];
-                    for it in 0..m_tiles {
-                        let m_eff = MR.min(mc - it * MR);
-                        let apanel = &apack[it * kc * MR..(it + 1) * kc * MR];
-                        let coff = (i0 + it * MR) * n + j0 + jt * NR;
-                        microkernel(kc, apanel, bpanel, &mut c[coff..], n, m_eff, n_eff);
-                    }
-                }
+    debug_assert!(apanel.len() >= kc * MR && bpanel.len() >= kc * NRC);
+    let mut acc = [[T::ZERO; NRC]; MR];
+    for p in 0..kc {
+        let arow = &apanel[p * MR..p * MR + MR];
+        let (a0, a1, a2, a3) = (arow[0], arow[1], arow[2], arow[3]);
+        let brow = &bpanel[p * NRC..(p + 1) * NRC];
+        for j in 0..NRC {
+            let bv = brow[j];
+            acc[0][j] += a0 * bv;
+            acc[1][j] += a1 * bv;
+            acc[2][j] += a2 * bv;
+            acc[3][j] += a3 * bv;
+        }
+    }
+    for i in 0..m_eff {
+        let crow = &mut c[i * ldc..i * ldc + n_eff];
+        for (j, dst) in crow.iter_mut().enumerate() {
+            *dst += acc[i][j];
+        }
+    }
+}
+
+/// Runtime-width fallback tile (`nr = bpanel.len() / kc`), for scalar
+/// types without a fixed-width entry in the dispatch table.
+fn microkernel_generic<T: Scalar>(
+    kc: usize,
+    apanel: &[T],
+    bpanel: &[T],
+    c: &mut [T],
+    ldc: usize,
+    m_eff: usize,
+    n_eff: usize,
+) {
+    let nr = bpanel.len() / kc.max(1);
+    debug_assert!(nr <= NR_MAX);
+    let mut acc = [[T::ZERO; NR_MAX]; MR];
+    for p in 0..kc {
+        let arow = &apanel[p * MR..p * MR + MR];
+        let brow = &bpanel[p * nr..p * nr + nr];
+        for i in 0..MR {
+            let ai = arow[i];
+            for (j, &bv) in brow.iter().enumerate() {
+                acc[i][j] += ai * bv;
             }
         }
     }
+    for i in 0..m_eff {
+        let crow = &mut c[i * ldc..i * ldc + n_eff];
+        for (j, dst) in crow.iter_mut().enumerate() {
+            *dst += acc[i][j];
+        }
+    }
 }
+
+// ---------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------
 
 /// Pack `mc` logical rows of A starting at `row0`, depth `[p0, p0+kc)`,
 /// into `MR`-interleaved micro-panels (`[tile][depth][MR]`), zero-padding
@@ -209,7 +247,8 @@ fn pack_a<T: Scalar>(
 }
 
 /// Pack `nc` logical columns of B starting at `col0`, depth `[p0, p0+kc)`,
-/// into `NR`-interleaved micro-panels (`[tile][depth][NR]`).
+/// into `nr`-interleaved micro-panels (`[tile][depth][nr]`), zero-padding
+/// the ragged last tile.
 #[allow(clippy::too_many_arguments)]
 fn pack_b<T: Scalar>(
     b: &[T],
@@ -219,16 +258,17 @@ fn pack_b<T: Scalar>(
     kc: usize,
     col0: usize,
     nc: usize,
+    nr: usize,
     out: &mut [T],
 ) {
-    let tiles = (nc + NR - 1) / NR;
+    let tiles = (nc + nr - 1) / nr;
     for t in 0..tiles {
-        let base = t * kc * NR;
+        let base = t * kc * nr;
         for p in 0..kc {
             let row = (p0 + p) * rs;
-            for j in 0..NR {
-                let cidx = t * NR + j;
-                out[base + p * NR + j] = if cidx < nc {
+            for j in 0..nr {
+                let cidx = t * nr + j;
+                out[base + p * nr + j] = if cidx < nc {
                     b[row + (col0 + cidx) * cs]
                 } else {
                     T::ZERO
@@ -238,35 +278,544 @@ fn pack_b<T: Scalar>(
     }
 }
 
-/// `MR × NR` register-tile kernel over a depth-`kc` packed panel pair;
-/// accumulates the valid `m_eff × n_eff` corner into `c` (row stride
-/// `ldc`, `c[0]` = tile origin).
-fn microkernel<T: Scalar>(
-    kc: usize,
-    apanel: &[T],
-    bpanel: &[T],
+// ---------------------------------------------------------------------
+// Blocked products
+// ---------------------------------------------------------------------
+
+/// Single-worker blocked product on logical rows `[row0, row0 + m)` of A,
+/// writing the `m × n` row-major slab `c`, packing its **own** B panels
+/// into `bpack` (the single-threaded and scoped-spawn building block).
+#[allow(clippy::too_many_arguments)]
+fn gemm_block<T: Scalar>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[T],
+    a_rs: usize,
+    a_cs: usize,
+    row0: usize,
+    b: &[T],
+    b_rs: usize,
+    b_cs: usize,
     c: &mut [T],
-    ldc: usize,
-    m_eff: usize,
-    n_eff: usize,
+    apack: &mut [T],
+    bpack: &mut [T],
+    tile: Tile<T>,
 ) {
-    let mut acc = [[T::ZERO; NR]; MR];
-    for p in 0..kc {
-        let arow = &apanel[p * MR..p * MR + MR];
-        let brow = &bpanel[p * NR..p * NR + NR];
-        for i in 0..MR {
-            let ai = arow[i];
-            for j in 0..NR {
-                acc[i][j] += ai * brow[j];
+    let nr = tile.nr;
+    for p0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - p0);
+        for j0 in (0..n).step_by(NC) {
+            let nc = NC.min(n - j0);
+            pack_b(b, b_rs, b_cs, p0, kc, j0, nc, nr, bpack);
+            inner_block(m, n, a, a_rs, a_cs, row0, c, apack, bpack, tile, p0, kc, j0, nc);
+        }
+    }
+}
+
+/// Single-worker sweep of one depth panel `[p0, p0+kc)` reading
+/// **shared, pre-packed** B panels (column panel `jn` at element offset
+/// `jn·KC·NC` of `bpack_row`) — the pooled path's building block. The
+/// caller iterates the depth panels and re-packs `bpack_row` between
+/// task batches, so shared packed-B memory stays `O(n·KC)` instead of
+/// `O(k·n)`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_kpanel_shared<T: Scalar>(
+    m: usize,
+    n: usize,
+    a: &[T],
+    a_rs: usize,
+    a_cs: usize,
+    row0: usize,
+    p0: usize,
+    kc: usize,
+    bpack_row: &[T],
+    c: &mut [T],
+    apack: &mut [T],
+    tile: Tile<T>,
+) {
+    for (jn, j0) in (0..n).step_by(NC).enumerate() {
+        let nc = NC.min(n - j0);
+        let base = jn * BPACK_ELEMS;
+        let bpack = &bpack_row[base..base + BPACK_ELEMS];
+        inner_block(m, n, a, a_rs, a_cs, row0, c, apack, bpack, tile, p0, kc, j0, nc);
+    }
+}
+
+/// The A-pack + microkernel sweep shared by both blocked products: one
+/// `(kc, nc)` B panel (already packed in `bpack`) against every `MC` row
+/// block of this worker's slab.
+#[allow(clippy::too_many_arguments)]
+fn inner_block<T: Scalar>(
+    m: usize,
+    n: usize,
+    a: &[T],
+    a_rs: usize,
+    a_cs: usize,
+    row0: usize,
+    c: &mut [T],
+    apack: &mut [T],
+    bpack: &[T],
+    tile: Tile<T>,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+) {
+    let nr = tile.nr;
+    for i0 in (0..m).step_by(MC) {
+        let mc = MC.min(m - i0);
+        pack_a(a, a_rs, a_cs, row0 + i0, mc, p0, kc, apack);
+        let n_tiles = (nc + nr - 1) / nr;
+        let m_tiles = (mc + MR - 1) / MR;
+        for jt in 0..n_tiles {
+            let n_eff = nr.min(nc - jt * nr);
+            let bpanel = &bpack[jt * kc * nr..(jt + 1) * kc * nr];
+            for it in 0..m_tiles {
+                let m_eff = MR.min(mc - it * MR);
+                let apanel = &apack[it * kc * MR..(it + 1) * kc * MR];
+                let coff = (i0 + it * MR) * n + j0 + jt * nr;
+                (tile.kernel)(kc, apanel, bpanel, &mut c[coff..], n, m_eff, n_eff);
             }
         }
     }
-    for i in 0..m_eff {
-        let crow = &mut c[i * ldc..i * ldc + n_eff];
-        for (j, dst) in crow.iter_mut().enumerate() {
-            *dst += acc[i][j];
+}
+
+// ---------------------------------------------------------------------
+// The persistent worker pool
+// ---------------------------------------------------------------------
+
+mod pool {
+    use std::collections::VecDeque;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+    /// Completion latch for one GEMM call's batch of slab tasks.
+    pub(super) struct JobState {
+        remaining: Mutex<usize>,
+        done: Condvar,
+        /// Set when a task panicked; the latch is still released (so the
+        /// caller never hangs) and `run_tasks` re-raises on the caller,
+        /// matching the loud failure `thread::scope` used to give.
+        poisoned: AtomicBool,
+    }
+
+    impl JobState {
+        fn new(count: usize) -> Self {
+            JobState {
+                remaining: Mutex::new(count),
+                done: Condvar::new(),
+                poisoned: AtomicBool::new(false),
+            }
+        }
+
+        fn finish_one(&self) {
+            let mut r = self.remaining.lock().expect("gemm job latch");
+            *r -= 1;
+            if *r == 0 {
+                self.done.notify_all();
+            }
+        }
+
+        fn wait(&self) {
+            let mut r = self.remaining.lock().expect("gemm job latch");
+            while *r > 0 {
+                r = self.done.wait(r).expect("gemm job latch");
+            }
         }
     }
+
+    /// Run one task, absorbing a panic into the job's poison flag so the
+    /// latch always releases and the executing thread survives.
+    fn run_task(task: Task) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task.run));
+        if result.is_err() {
+            task.job.poisoned.store(true, Ordering::Relaxed);
+        }
+        task.job.finish_one();
+    }
+
+    struct Task {
+        job: Arc<JobState>,
+        run: Box<dyn FnOnce() + Send>,
+    }
+
+    struct GemmPool {
+        queue: Mutex<VecDeque<Task>>,
+        available: Condvar,
+        threads: usize,
+    }
+
+    static POOL: OnceLock<Arc<GemmPool>> = OnceLock::new();
+    static JOBS: AtomicUsize = AtomicUsize::new(0);
+    static TASKS: AtomicUsize = AtomicUsize::new(0);
+
+    /// Parse a `PALLAS_GEMM_THREADS` value: total worker count including
+    /// the caller; absence, garbage, or zero fall back to hardware
+    /// parallelism capped at `MAX_THREADS`.
+    fn configured_threads() -> usize {
+        std::env::var(super::GEMM_THREADS_ENV)
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|v| v.get())
+                    .unwrap_or(1)
+                    .min(super::MAX_THREADS)
+            })
+    }
+
+    fn get() -> &'static Arc<GemmPool> {
+        POOL.get_or_init(|| {
+            let threads = configured_threads();
+            let pool = Arc::new(GemmPool {
+                queue: Mutex::new(VecDeque::new()),
+                available: Condvar::new(),
+                threads,
+            });
+            // threads − 1 parked helpers; the calling rank thread is
+            // always worker zero of its own jobs.
+            for _ in 1..threads {
+                let p = pool.clone();
+                std::thread::Builder::new()
+                    .name("pallas-gemm".into())
+                    .spawn(move || worker_loop(&p))
+                    .expect("spawn gemm pool worker");
+            }
+            pool
+        })
+    }
+
+    fn worker_loop(pool: &GemmPool) {
+        loop {
+            let task = {
+                let mut q = pool.queue.lock().expect("gemm pool queue");
+                loop {
+                    if let Some(t) = q.pop_front() {
+                        break t;
+                    }
+                    q = pool.available.wait(q).expect("gemm pool queue");
+                }
+            };
+            run_task(task);
+        }
+    }
+
+    /// Total pool worker count (caller included), initializing the pool.
+    pub fn threads() -> usize {
+        get().threads
+    }
+
+    /// Run a batch of slab tasks to completion. The helpers pick tasks up
+    /// as they park; the caller drains its own job's tasks concurrently,
+    /// then blocks until the last in-progress task finishes — only after
+    /// that do the borrows behind the tasks' raw pointers go out of use.
+    pub(super) fn run_tasks(tasks: Vec<Box<dyn FnOnce() + Send>>) {
+        let pool = get();
+        JOBS.fetch_add(1, Ordering::Relaxed);
+        TASKS.fetch_add(tasks.len(), Ordering::Relaxed);
+        let job = Arc::new(JobState::new(tasks.len()));
+        {
+            let mut q = pool.queue.lock().expect("gemm pool queue");
+            for run in tasks {
+                q.push_back(Task {
+                    job: job.clone(),
+                    run,
+                });
+            }
+        }
+        pool.available.notify_all();
+        loop {
+            let mine = {
+                let mut q = pool.queue.lock().expect("gemm pool queue");
+                let pos = q.iter().position(|t| Arc::ptr_eq(&t.job, &job));
+                pos.and_then(|i| q.remove(i))
+            };
+            match mine {
+                Some(t) => run_task(t),
+                None => break,
+            }
+        }
+        job.wait();
+        assert!(
+            !job.poisoned.load(Ordering::Relaxed),
+            "a gemm pool slab task panicked"
+        );
+    }
+
+    /// Lifetime counters of the pool (for the metric log).
+    pub fn stats() -> (usize, usize) {
+        (JOBS.load(Ordering::Relaxed), TASKS.load(Ordering::Relaxed))
+    }
+}
+
+/// Total GEMM pool worker count (calling thread included); initializes
+/// the pool on first use.
+pub fn pool_threads() -> usize {
+    pool::threads()
+}
+
+/// Lifetime counters of the persistent GEMM pool.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct GemmPoolStats {
+    /// Pool worker count (calling thread included).
+    pub workers: usize,
+    /// Task batches dispatched since process start (one per depth panel
+    /// of each pooled product).
+    pub jobs: usize,
+    /// Row-slab tasks executed across those batches.
+    pub tasks: usize,
+}
+
+/// Snapshot the pool's counters (initializes the pool on first use).
+pub fn gemm_pool_stats() -> GemmPoolStats {
+    let (jobs, tasks) = pool::stats();
+    GemmPoolStats {
+        workers: pool::threads(),
+        jobs,
+        tasks,
+    }
+}
+
+/// Wrappers making borrowed operand pointers shippable to pool helpers.
+/// Soundness: `pool::run_tasks` returns only after every task completed,
+/// so the pointed-to slices strictly outlive all dereferences.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*const T);
+unsafe impl<T> Send for SendPtr<T> {}
+#[derive(Clone, Copy)]
+struct SendPtrMut<T>(*mut T);
+unsafe impl<T> Send for SendPtrMut<T> {}
+
+/// One row slab's task geometry: its logical row origin and height, plus
+/// the raw C-slab and A-pack chunk it owns exclusively.
+#[derive(Clone, Copy)]
+struct SlabRef<T> {
+    row0: usize,
+    m_slab: usize,
+    c: SendPtrMut<T>,
+    c_len: usize,
+    ap: SendPtrMut<T>,
+    ap_len: usize,
+}
+
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+fn check_shapes<T: Scalar>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[T],
+    b: &[T],
+    c: &[T],
+) -> Result<()> {
+    if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+        return Err(Error::Shape(format!(
+            "gemm: buffers {}/{}/{} vs m={m} n={n} k={k}",
+            a.len(),
+            b.len(),
+            c.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Row/column strides of the *logical* (post-transposition) operands.
+fn strides(m: usize, n: usize, k: usize, trans_a: bool, trans_b: bool) -> (usize, usize, usize, usize) {
+    let (a_rs, a_cs) = if trans_a { (1, m) } else { (k, 1) };
+    let (b_rs, b_cs) = if trans_b { (1, k) } else { (n, 1) };
+    (a_rs, a_cs, b_rs, b_cs)
+}
+
+/// `C[m,n] += op(A) · op(B)` over row-major storage.
+///
+/// * `a` holds `m × k` row-major when `trans_a` is false, `k × m` when
+///   true (the logical operand is then `Aᵀ`);
+/// * `b` holds `k × n` row-major when `trans_b` is false, `n × k` when
+///   true;
+/// * `c` is `m × n` row-major and is **accumulated into** (zero it first
+///   for a plain product).
+///
+/// Worker count is chosen automatically: small products run inline, big
+/// ones fan out over the persistent pool. Results are bitwise identical
+/// across worker counts.
+pub fn gemm<T: Scalar>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[T],
+    trans_a: bool,
+    b: &[T],
+    trans_b: bool,
+    c: &mut [T],
+) -> Result<()> {
+    let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    let workers = if flops < PAR_FLOPS { 1 } else { pool::threads() };
+    gemm_with_workers(m, n, k, a, trans_a, b, trans_b, c, workers)
+}
+
+/// [`gemm`] with an explicit row-slab count (the thread-scaling benches
+/// and determinism tests). `workers` is clamped to the slab supply; `1`
+/// runs the single-threaded path without touching the pool.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_workers<T: Scalar>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[T],
+    trans_a: bool,
+    b: &[T],
+    trans_b: bool,
+    c: &mut [T],
+    workers: usize,
+) -> Result<()> {
+    check_shapes(m, n, k, a, b, c)?;
+    if m == 0 || n == 0 || k == 0 {
+        return Ok(());
+    }
+    let (a_rs, a_cs, b_rs, b_cs) = strides(m, n, k, trans_a, trans_b);
+    let tile = tile_for::<T>();
+    let workers = workers.max(1).min((m + MR - 1) / MR);
+    if workers <= 1 {
+        // Dirty takes: pack_a/pack_b overwrite every packed element the
+        // microkernel reads (ragged tiles included), so zeroing here would
+        // be a pure memset tax on every call.
+        let mut apack = scratch_take_dirty::<T>(APACK_ELEMS);
+        let mut bpack = scratch_take_dirty::<T>(BPACK_ELEMS);
+        gemm_block(
+            m, n, k, a, a_rs, a_cs, 0, b, b_rs, b_cs, c, &mut apack, &mut bpack, tile,
+        );
+        scratch_give(apack);
+        scratch_give(bpack);
+        return Ok(());
+    }
+    // Shared packed B, one depth panel at a time: every (kc, nc) panel is
+    // packed exactly once, on the calling thread, into one arena buffer
+    // all slab workers read; re-packing between depth panels keeps the
+    // shared buffer at `O(round_up(n, NC)·KC)` elements instead of a full
+    // packed copy of B. Depth panels are dispatched as successive task
+    // batches (the per-element accumulation order stays p0-ascending, so
+    // results remain bitwise scheduler-invariant).
+    let np = (n + NC - 1) / NC;
+    let mut bpack = scratch_take_dirty::<T>(np * BPACK_ELEMS);
+    // Split C row-wise in MR-aligned slabs; each slab task sweeps the
+    // current depth panel over its disjoint rows with a private A pack
+    // chunk (taken here, on the owning rank's thread, so pool helpers
+    // allocate nothing).
+    let rows = round_up((m + workers - 1) / workers, MR);
+    let slabs = (m + rows - 1) / rows;
+    let mut apack = scratch_take_dirty::<T>(slabs * APACK_ELEMS);
+    // Slab geometry (raw pointers; see the safety note on the task body).
+    let a_sp = SendPtr(a.as_ptr());
+    let a_len = a.len();
+    let mut slab_ptrs: Vec<SlabRef<T>> = Vec::with_capacity(slabs);
+    for (w, (c_slab, ap)) in c
+        .chunks_mut(rows * n)
+        .zip(apack.chunks_mut(APACK_ELEMS))
+        .enumerate()
+    {
+        slab_ptrs.push(SlabRef {
+            row0: w * rows,
+            m_slab: c_slab.len() / n,
+            c: SendPtrMut(c_slab.as_mut_ptr()),
+            c_len: c_slab.len(),
+            ap: SendPtrMut(ap.as_mut_ptr()),
+            ap_len: ap.len(),
+        });
+    }
+    for p0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - p0);
+        for (jn, j0) in (0..n).step_by(NC).enumerate() {
+            let nc = NC.min(n - j0);
+            let base = jn * BPACK_ELEMS;
+            pack_b(b, b_rs, b_cs, p0, kc, j0, nc, tile.nr, &mut bpack[base..base + BPACK_ELEMS]);
+        }
+        // The shared-pack pointer is re-derived after each repack, once
+        // the buffer goes quiescent for this batch.
+        let b_sp = SendPtr(bpack.as_ptr());
+        let b_len = bpack.len();
+        let mut tasks: Vec<Box<dyn FnOnce() + Send>> = Vec::with_capacity(slabs);
+        for &slab in &slab_ptrs {
+            tasks.push(Box::new(move || {
+                // Safety: run_tasks blocks until this batch completes
+                // before bpack is re-packed or any buffer is released,
+                // and the slab/pack chunks are disjoint per task
+                // (chunks_mut above).
+                let a = unsafe { std::slice::from_raw_parts(a_sp.0, a_len) };
+                let bpack = unsafe { std::slice::from_raw_parts(b_sp.0, b_len) };
+                let c_slab = unsafe { std::slice::from_raw_parts_mut(slab.c.0, slab.c_len) };
+                let ap = unsafe { std::slice::from_raw_parts_mut(slab.ap.0, slab.ap_len) };
+                gemm_kpanel_shared(
+                    slab.m_slab, n, a, a_rs, a_cs, slab.row0, p0, kc, bpack, c_slab, ap, tile,
+                );
+            }));
+        }
+        pool::run_tasks(tasks);
+    }
+    scratch_give(apack);
+    scratch_give(bpack);
+    Ok(())
+}
+
+/// The PR-2 scoped-spawn scheduler, retained as the parity/bench
+/// reference: fresh `std::thread::scope` threads per call, each worker
+/// re-packing its own B panels. Numerically bitwise-identical to the
+/// pooled path (same per-element accumulation order).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_scoped<T: Scalar>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[T],
+    trans_a: bool,
+    b: &[T],
+    trans_b: bool,
+    c: &mut [T],
+    workers: usize,
+) -> Result<()> {
+    check_shapes(m, n, k, a, b, c)?;
+    if m == 0 || n == 0 || k == 0 {
+        return Ok(());
+    }
+    let workers = workers.max(1).min((m + MR - 1) / MR);
+    if workers <= 1 {
+        // One worker has no spawns to measure — share the pooled entry's
+        // single-threaded path instead of duplicating it.
+        return gemm_with_workers(m, n, k, a, trans_a, b, trans_b, c, 1);
+    }
+    let (a_rs, a_cs, b_rs, b_cs) = strides(m, n, k, trans_a, trans_b);
+    let tile = tile_for::<T>();
+    let rows = round_up((m + workers - 1) / workers, MR);
+    let slabs = (m + rows - 1) / rows;
+    let mut apack = scratch_take_dirty::<T>(slabs * APACK_ELEMS);
+    let mut bpack = scratch_take_dirty::<T>(slabs * BPACK_ELEMS);
+    std::thread::scope(|scope| {
+        for (w, ((c_slab, ap), bp)) in c
+            .chunks_mut(rows * n)
+            .zip(apack.chunks_mut(APACK_ELEMS))
+            .zip(bpack.chunks_mut(BPACK_ELEMS))
+            .enumerate()
+        {
+            let row0 = w * rows;
+            let m_slab = c_slab.len() / n;
+            scope.spawn(move || {
+                gemm_block(
+                    m_slab, n, k, a, a_rs, a_cs, row0, b, b_rs, b_cs, c_slab, ap, bp, tile,
+                );
+            });
+        }
+    });
+    scratch_give(apack);
+    scratch_give(bpack);
+    Ok(())
+}
+
+/// Smallest multiple of `q` that is `>= v` (for `q > 0`).
+fn round_up(v: usize, q: usize) -> usize {
+    ((v + q - 1) / q) * q
 }
 
 #[cfg(test)]
@@ -334,8 +883,8 @@ mod tests {
     fn matches_naive_across_block_edges() {
         // sizes straddling MR/NR/MC/KC/NC boundaries
         for &(m, n, k) in &[
-            (MR, NR, 3),
-            (MR + 1, NR + 1, KC + 3),
+            (MR, NR_MAX, 3),
+            (MR + 1, NR_MAX + 1, KC + 3),
             (MC, NC, 5),
             (MC + 5, NC + 9, 7),
             (2 * MC + 1, 17, KC + 1),
@@ -367,6 +916,73 @@ mod tests {
     }
 
     #[test]
+    fn pooled_matches_scoped_and_single_bitwise() {
+        // The pooled scheduler, the scoped-spawn reference, and the
+        // single-threaded path share one per-element accumulation order,
+        // so their outputs must be bitwise identical at every worker
+        // count — the determinism contract the split layers rely on.
+        let mut rng = SplitMix64::new(0xF00);
+        let (m, n, k) = (200, 180, 160);
+        let a = rand_vec(m * k, &mut rng);
+        let b = rand_vec(k * n, &mut rng);
+        let mut base = vec![0.0; m * n];
+        gemm_with_workers(m, n, k, &a, false, &b, true, &mut base, 1).unwrap();
+        for workers in [2usize, 3, 4, 7] {
+            let mut c = vec![0.0; m * n];
+            gemm_with_workers(m, n, k, &a, false, &b, true, &mut c, workers).unwrap();
+            assert!(c == base, "pooled workers={workers} diverges bitwise");
+            let mut s = vec![0.0; m * n];
+            gemm_scoped(m, n, k, &a, false, &b, true, &mut s, workers).unwrap();
+            assert!(s == base, "scoped workers={workers} diverges bitwise");
+        }
+    }
+
+    #[test]
+    fn repeated_pooled_calls_are_bitwise_reproducible() {
+        let mut rng = SplitMix64::new(0xF01);
+        let (m, n, k) = (190, 170, 150);
+        let a = rand_vec(m * k, &mut rng);
+        let b = rand_vec(k * n, &mut rng);
+        let mut base = vec![0.0; m * n];
+        gemm(m, n, k, &a, false, &b, false, &mut base).unwrap();
+        for _ in 0..3 {
+            let mut c = vec![0.0; m * n];
+            gemm(m, n, k, &a, false, &b, false, &mut c).unwrap();
+            assert!(c == base, "repeated pooled gemm diverges bitwise");
+        }
+        let st = gemm_pool_stats();
+        assert!(st.workers >= 1);
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        // Several rank threads issuing pooled products at once must all
+        // complete (the caller-drains-own-job rule prevents starvation)
+        // and agree with the oracle.
+        let (m, n, k) = (180, 160, 170);
+        let mut rng = SplitMix64::new(0xF02);
+        let a = rand_vec(m * k, &mut rng);
+        let b = rand_vec(k * n, &mut rng);
+        let want = naive(m, n, k, &a, false, &b, false);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let (a, b, want) = (&a, &b, &want);
+                scope.spawn(move || {
+                    for _ in 0..3 {
+                        let mut c = vec![0.0; m * n];
+                        gemm(m, n, k, a, false, b, false, &mut c).unwrap();
+                        let ok = c
+                            .iter()
+                            .zip(want.iter())
+                            .all(|(&g, &e)| (g - e).abs() < 1e-10 * (1.0 + e.abs()));
+                        assert!(ok, "concurrent pooled gemm diverged from the oracle");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
     fn degenerate_dims_are_noops() {
         let mut c: Vec<f64> = vec![3.0; 6];
         gemm(2, 3, 0, &[], false, &[], false, &mut c).unwrap();
@@ -379,6 +995,9 @@ mod tests {
     fn shape_mismatch_rejected() {
         let mut c = vec![0.0f64; 4];
         assert!(gemm(2, 2, 2, &[0.0; 3], false, &[0.0; 4], false, &mut c).is_err());
+        assert!(
+            gemm_with_workers(2, 2, 2, &[0.0; 4], false, &[0.0; 3], false, &mut c, 2).is_err()
+        );
     }
 
     #[test]
@@ -395,5 +1014,22 @@ mod tests {
         for (&got, &exp) in c.iter().zip(want.iter()) {
             assert!((got as f64 - exp).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn f32_wide_tile_parity_across_workers() {
+        // The f32 dispatch entry (4×16) through both schedulers.
+        let mut rng = SplitMix64::new(0xF03);
+        let (m, n, k) = (130, 150, 140);
+        let a: Vec<f32> = (0..m * k).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+        let mut base = vec![0.0f32; m * n];
+        gemm_with_workers(m, n, k, &a, false, &b, false, &mut base, 1).unwrap();
+        let mut pooled = vec![0.0f32; m * n];
+        gemm_with_workers(m, n, k, &a, false, &b, false, &mut pooled, 4).unwrap();
+        assert!(pooled == base, "f32 pooled path diverges bitwise");
+        let mut scoped = vec![0.0f32; m * n];
+        gemm_scoped(m, n, k, &a, false, &b, false, &mut scoped, 4).unwrap();
+        assert!(scoped == base, "f32 scoped path diverges bitwise");
     }
 }

@@ -3,10 +3,15 @@
 //! These are the "sequential layer implementations" the paper composes
 //! parallel primitives with (§4). They support arbitrary shapes and both
 //! scalar types. The compute hot path is a single shared core: the
-//! cache-blocked, multi-threaded GEMM in [`gemm`], which the affine kernel
-//! calls directly and the convolution kernels reach through im2col/col2im;
-//! staging buffers (im2col columns, GEMM pack panels) are reused across
-//! micro-batches via the per-rank [`crate::memory`] scratch arena. Each
+//! cache-blocked GEMM in [`gemm`] — fanned out over a persistent worker
+//! pool with shared packed-B panels and a SIMD-width-aware microkernel
+//! dispatch — which the affine kernel calls directly and the convolution
+//! kernels reach through im2col/col2im; the conv VJP additionally splits
+//! into [`conv::conv2d_backward_dx`] / [`conv::conv2d_backward_dw_db`] so
+//! the distributed layer can overlap the δx halo-adjoint exchange with
+//! the δw/δb GEMMs. Staging buffers (im2col columns, GEMM pack panels)
+//! are reused across micro-batches via the per-rank [`crate::memory`]
+//! scratch arena. Each
 //! optimized kernel retains its original scalar-loop implementation
 //! (`*_naive`) as the reference for randomized parity tests and the
 //! kernel-speedup benches. The LeNet hot path can still swap in the
@@ -22,7 +27,8 @@ pub mod pool;
 pub use activation::Activation;
 pub use affine::{affine_backward, affine_backward_naive, affine_forward, affine_forward_naive};
 pub use conv::{
-    conv2d_backward, conv2d_backward_naive, conv2d_forward, conv2d_forward_naive, Conv2dSpec,
+    conv2d_backward, conv2d_backward_dw_db, conv2d_backward_dx, conv2d_backward_naive,
+    conv2d_forward, conv2d_forward_naive, Conv2dSpec,
 };
 pub use loss::{count_correct, cross_entropy_backward, cross_entropy_forward};
 pub use pool::{

@@ -10,7 +10,14 @@
 //! Within each broadcast group the implementation uses the canonical
 //! binomial tree; the adjoint executes the same tree edges in reverse with
 //! copies replaced by adds, which *is* the linear-algebraic adjoint of the
-//! tree-structured composition of copies.
+//! tree-structured composition of copies. The conv layer's backward runs
+//! these sum-reduces while its δx halo-adjoint messages are in flight
+//! (the [`crate::primitives::HaloExchange`] `adjoint_start`/`adjoint_finish`
+//! split), so the reduction tree's adds overlap the point-to-point
+//! traffic. Unlike the halo exchange, the reduction's message buffers are
+//! **not** arena-staged: the tree's buffer flow is one-way (leaves →
+//! root), so returning them to a per-rank pool would grow the root-side
+//! arenas without bound instead of closing a reuse cycle.
 
 use super::tree_schedule;
 use crate::adjoint::DistLinearOp;
@@ -244,11 +251,17 @@ impl<T: Scalar> DistLinearOp<T> for Broadcast {
         let rank = comm.rank();
         let root_gi = self.group_as_root(rank);
         let dest_gi = self.group_as_dest(rank);
+        let mut y = y;
         let mut out: Option<Tensor<T>> = None;
-        // As a destination of a *different* group: contribute y up that tree.
+        // As a destination of a *different* group: contribute y up that
+        // tree. Only a rank that is simultaneously a root still needs its
+        // cotangent afterwards — everyone else (the common case on the
+        // conv/affine gradient sum-reduces) *moves* it into the tree
+        // instead of cloning a full tensor per step.
         if let Some(gi) = dest_gi {
             if Some(gi) != root_gi {
-                let r = self.run_group_adjoint(gi, comm, y.clone())?;
+                let seed = if root_gi.is_some() { y.clone() } else { y.take() };
+                let r = self.run_group_adjoint(gi, comm, seed)?;
                 debug_assert!(r.is_none(), "non-root member produced a reduction");
             }
         }

@@ -14,7 +14,25 @@
 //! The adjoint (Eq. 12) runs the dimensions in reverse; the three copies
 //! at the centre of each per-dimension exchange become **adds into the
 //! neighbour's bulk** followed by clears of the local halo — the
-//! observation the paper traces to production PDE-adjoint codes.
+//! observation the paper traces to production PDE-adjoint codes. Like the
+//! forward pass, the adjoint now splits into [`HaloExchange::adjoint_start`]
+//! (post the split dimension's halo-return sends and bulk-edge receives)
+//! and [`HaloExchange::adjoint_finish`], so the conv layer's backward runs
+//! its weight-gradient GEMMs and the parameter sum-reduce while the δx
+//! halo-adjoint messages are in flight — the forward/adjoint symmetry of
+//! Eq. 12–13 extended to the schedule itself.
+//!
+//! Every cross-section shipped by either direction is staged in a buffer
+//! borrowed from the per-rank [`crate::memory`] scratch arena and given
+//! back by the *receiver* once unpacked. Over one forward+adjoint step
+//! each rank sends and receives the same multiset of cross-section sizes
+//! (A ships width `w` to B exactly when B ships width `w` back in the
+//! adjoint), so the staging buffers circulate between the rank arenas and
+//! steady-state training steps allocate none of them. Forward-*only*
+//! loops (inference) make the circulation one-way, so on asymmetric
+//! geometries a receive-heavy rank parks buffers it never re-sends; the
+//! arena's default byte cap bounds that growth (the parked excess is
+//! evicted once the cap is hit).
 //!
 //! [`TrimPad`] is the "padding and unpadding shim" of §4: a local linear
 //! restriction/extension that drops the *unused* owned entries (Figs.
@@ -58,6 +76,44 @@ impl<T: Scalar> HaloInFlight<T> {
     pub fn pending_recvs(&self) -> usize {
         self.pending.len()
     }
+}
+
+/// An **adjoint** halo exchange whose split-dimension sends (halo regions
+/// shipped back to their owners) and receives (the returning bulk-edge
+/// cotangents) have been posted but not completed — returned by
+/// [`HaloExchange::adjoint_start`], consumed by
+/// [`HaloExchange::adjoint_finish`].
+///
+/// Between the two calls the caller may run any compute that does not
+/// touch the buffer — the conv layer's backward runs its δw/δb GEMMs and
+/// the parameter sum-reduce collective here.
+pub struct HaloAdjointInFlight<T: Scalar> {
+    buf: Tensor<T>,
+    coords: Vec<usize>,
+    pending: Vec<(RecvRequest<T>, Region)>,
+}
+
+impl<T: Scalar> HaloAdjointInFlight<T> {
+    /// Grid coordinates of this worker.
+    pub fn coords(&self) -> &[usize] {
+        &self.coords
+    }
+
+    /// Receives still outstanding.
+    pub fn pending_recvs(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+/// Extract `region` of `buf` into an arena-staged tensor (a dirty take —
+/// the copy overwrites every element the consumer reads).
+fn extract_staged<T: Scalar>(buf: &Tensor<T>, region: &Region) -> Result<Tensor<T>> {
+    let mut piece = Tensor::from_vec(
+        &region.shape,
+        crate::memory::scratch_take_dirty::<T>(crate::tensor::numel(&region.shape)),
+    )?;
+    piece.copy_region_from(buf, region, &vec![0; region.rank()])?;
+    Ok(piece)
 }
 
 /// In-place halo exchange over a cartesian partition.
@@ -182,17 +238,18 @@ impl HaloExchange {
         let tag_fwd_l = self.tag + (d as u64) * 8; // bulk -> left neighbour
         let tag_fwd_r = self.tag + (d as u64) * 8 + 1; // bulk -> right neighbour
 
-        // Post both sends; each packed edge is moved into its message.
+        // Post both sends; each packed edge is staged in an arena-backed
+        // buffer that moves into the message (the receiver gives it back).
         if let Some((nbr, send_w, _)) = left {
             if send_w > 0 {
-                let piece = buf.extract_region(&xsect(bulk_lo, send_w))?;
+                let piece = extract_staged(buf, &xsect(bulk_lo, send_w))?;
                 let req = comm.isend_vec(nbr, tag_fwd_l, piece.into_vec())?;
                 comm.wait_send(req)?;
             }
         }
         if let Some((nbr, send_w, _)) = right {
             if send_w > 0 {
-                let piece = buf.extract_region(&xsect(bulk_hi - send_w, send_w))?;
+                let piece = extract_staged(buf, &xsect(bulk_hi - send_w, send_w))?;
                 let req = comm.isend_vec(nbr, tag_fwd_r, piece.into_vec())?;
                 comm.wait_send(req)?;
             }
@@ -213,7 +270,8 @@ impl HaloExchange {
     }
 
     /// Forward exchange, completion phase: wait each pending receive and
-    /// unpack it into its halo region (C_U).
+    /// unpack it into its halo region (C_U), returning the message's
+    /// staging buffer to this rank's arena.
     fn complete_dim_forward<T: Scalar>(
         &self,
         comm: &mut Comm,
@@ -224,20 +282,22 @@ impl HaloExchange {
             let data = comm.wait(req)?;
             let piece = Tensor::from_vec(&region.shape, data)?;
             buf.copy_region_from(&piece, &Region::full(&region.shape), &region.start)?;
+            crate::memory::scratch_give(piece.into_vec());
         }
         Ok(())
     }
 
-    /// Adjoint exchange along dim `d` (post-all-then-complete): ship both
-    /// halo regions back and clear them (C_U*), post both receives, then
-    /// **add** the returned cotangents into the bulk edges (C_P*).
-    fn exchange_dim_adjoint<T: Scalar>(
+    /// Adjoint exchange along dim `d`, posting phase: ship both halo
+    /// regions back to their owners and clear them (C_U*), then post both
+    /// receives, returning them with the bulk-edge regions the returning
+    /// cotangents are **added** into (C_P*).
+    fn post_dim_adjoint<T: Scalar>(
         &self,
         comm: &mut Comm,
         buf: &mut Tensor<T>,
         coords: &[usize],
         d: usize,
-    ) -> Result<()> {
+    ) -> Result<Vec<(RecvRequest<T>, Region)>> {
         let (left, right, bulk_lo, bulk_hi, extents) = self.dim_plan(coords, d);
         let xsect = |lo: usize, len: usize| -> Region {
             let mut start = vec![0usize; extents.len()];
@@ -255,7 +315,7 @@ impl HaloExchange {
         if let Some((nbr, _, w)) = left {
             if w > 0 {
                 let region = xsect(0, w);
-                let piece = buf.extract_region(&region)?;
+                let piece = extract_staged(buf, &region)?;
                 let req = comm.isend_vec(nbr, tag_adj_l, piece.into_vec())?;
                 comm.wait_send(req)?;
                 buf.fill_region(&region, T::ZERO)?;
@@ -264,15 +324,15 @@ impl HaloExchange {
         if let Some((nbr, _, w)) = right {
             if w > 0 {
                 let region = xsect(bulk_hi, w);
-                let piece = buf.extract_region(&region)?;
+                let piece = extract_staged(buf, &region)?;
                 let req = comm.isend_vec(nbr, tag_adj_r, piece.into_vec())?;
                 comm.wait_send(req)?;
                 buf.fill_region(&region, T::ZERO)?;
             }
         }
-        // Post both receives, then complete. I sent [bulk_lo, bulk_lo+w)
-        // to the left neighbour's right halo; its cotangent comes back
-        // tagged adj_r (and symmetrically for the right neighbour).
+        // Post both receives. I sent [bulk_lo, bulk_lo+w) to the left
+        // neighbour's right halo; its cotangent comes back tagged adj_r
+        // (and symmetrically for the right neighbour).
         let mut pending = Vec::new();
         if let Some((nbr, w, _)) = left {
             if w > 0 {
@@ -284,10 +344,23 @@ impl HaloExchange {
                 pending.push((comm.irecv::<T>(nbr, tag_adj_l)?, xsect(bulk_hi - w, w)));
             }
         }
+        Ok(pending)
+    }
+
+    /// Adjoint exchange, completion phase: wait each pending receive and
+    /// add the returned cotangent into its bulk edge, recycling the
+    /// message's staging buffer.
+    fn complete_dim_adjoint<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        buf: &mut Tensor<T>,
+        pending: Vec<(RecvRequest<T>, Region)>,
+    ) -> Result<()> {
         for (req, region) in pending {
             let data = comm.wait(req)?;
             let piece = Tensor::from_vec(&region.shape, data)?;
             buf.add_region_from(&piece, &Region::full(&region.shape), &region.start)?;
+            crate::memory::scratch_give(piece.into_vec());
         }
         Ok(())
     }
@@ -346,6 +419,64 @@ impl HaloExchange {
         self.complete_dim_forward(comm, &mut buf, pending)?;
         Ok(buf)
     }
+
+    /// Begin the **adjoint** exchange (Eq. 12 starts at the last
+    /// partitioned dimension — the same dimension whose receives the
+    /// forward `start` leaves pending): ship the split dimension's halo
+    /// regions back to their owners, clear them, and post the bulk-edge
+    /// receives, returning with them in flight.
+    ///
+    /// The caller may run any compute not touching the buffer while the
+    /// messages move (the conv layer runs its δw/δb GEMMs and the
+    /// parameter sum-reduce here), then call [`Self::adjoint_finish`].
+    pub fn adjoint_start<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        buf: Tensor<T>,
+    ) -> Result<HaloAdjointInFlight<T>> {
+        let coords = self
+            .partition
+            .coords_of(comm.rank())
+            .ok_or_else(|| Error::Primitive("halo adjoint start: rank not on the partition".into()))?;
+        let mut buf = buf;
+        crate::tensor::check_same(buf.shape(), &self.buffer_shape(&coords), "halo buffer")?;
+        let mut pending = Vec::new();
+        if let Some(d) = self.split_dim() {
+            pending = self.post_dim_adjoint(comm, &mut buf, &coords, d)?;
+        }
+        Ok(HaloAdjointInFlight {
+            buf,
+            coords,
+            pending,
+        })
+    }
+
+    /// Complete an adjoint exchange begun with [`Self::adjoint_start`]:
+    /// add the split dimension's returned cotangents into the bulk edges
+    /// (they must land before the earlier dimensions ship cross-sections
+    /// spanning that dimension — the reverse nesting of Eq. 12), then run
+    /// the remaining dimensions' adjoint exchanges to completion.
+    pub fn adjoint_finish<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        inflight: HaloAdjointInFlight<T>,
+    ) -> Result<Tensor<T>> {
+        let HaloAdjointInFlight {
+            mut buf,
+            coords,
+            pending,
+        } = inflight;
+        let split = self.split_dim();
+        self.complete_dim_adjoint(comm, &mut buf, pending)?;
+        for d in (0..self.partition.grid_rank()).rev() {
+            if Some(d) == split {
+                continue;
+            }
+            let pending = self.post_dim_adjoint(comm, &mut buf, &coords, d)?;
+            self.complete_dim_adjoint(comm, &mut buf, pending)?;
+        }
+        Ok(buf)
+    }
 }
 
 impl<T: Scalar> DistLinearOp<T> for HaloExchange {
@@ -369,17 +500,15 @@ impl<T: Scalar> DistLinearOp<T> for HaloExchange {
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
-        let Some(coords) = self.partition.coords_of(comm.rank()) else {
+        if self.partition.coords_of(comm.rank()).is_none() {
             return Ok(None);
-        };
-        let mut buf =
-            y.ok_or_else(|| Error::Primitive("halo exchange*: buffer missing".into()))?;
-        crate::tensor::check_same(buf.shape(), &self.buffer_shape(&coords), "halo buffer")?;
-        // Eq. (12): dimensions in reverse order.
-        for d in (0..self.partition.grid_rank()).rev() {
-            self.exchange_dim_adjoint(comm, &mut buf, &coords, d)?;
         }
-        Ok(Some(buf))
+        let buf = y.ok_or_else(|| Error::Primitive("halo exchange*: buffer missing".into()))?;
+        // Eq. (12): dimensions in reverse order — the split (= last
+        // partitioned) dimension posted by `adjoint_start`, the rest by
+        // `adjoint_finish`.
+        let inflight = self.adjoint_start(comm, buf)?;
+        Ok(Some(self.adjoint_finish(comm, inflight)?))
     }
 
     fn name(&self) -> String {
@@ -441,9 +570,17 @@ impl TrimPad {
     }
 
     /// Forward: restrict to the needed span and embed between zero pads.
+    /// The returned buffer is borrowed from the per-rank scratch arena —
+    /// the layers stash it as the backward activation and give it back
+    /// once the VJP has consumed it, so the stash stops allocating after
+    /// warm-up.
     pub fn apply<T: Scalar>(&self, coords: &[usize], buf: &Tensor<T>) -> Result<Tensor<T>> {
         let (span, dst) = self.spans(coords);
-        let mut out = Tensor::zeros(&self.compute_shape(coords));
+        let shape = self.compute_shape(coords);
+        let mut out = Tensor::from_vec(
+            &shape,
+            crate::memory::scratch_take::<T>(crate::tensor::numel(&shape)),
+        )?;
         out.copy_region_from(buf, &span, &dst)?;
         Ok(out)
     }
@@ -781,6 +918,103 @@ mod tests {
                 assert!(shim.apply_slab(&coords, &buf, 1, 0, 1).is_err());
             }
         }
+    }
+
+    /// The exchange with its adjoint routed through the split
+    /// `adjoint_start`/`adjoint_finish` API, with busy-work between the
+    /// two calls while the δ messages are in flight.
+    struct SplitAdjointExchange(HaloExchange);
+
+    impl DistLinearOp<f64> for SplitAdjointExchange {
+        fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+            <HaloExchange as DistLinearOp<f64>>::domain_shape(&self.0, rank)
+        }
+
+        fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+            <HaloExchange as DistLinearOp<f64>>::codomain_shape(&self.0, rank)
+        }
+
+        fn forward(&self, comm: &mut Comm, x: Option<Tensor<f64>>) -> crate::error::Result<Option<Tensor<f64>>> {
+            self.0.forward(comm, x)
+        }
+
+        fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<f64>>) -> crate::error::Result<Option<Tensor<f64>>> {
+            if self.0.partition().coords_of(comm.rank()).is_none() {
+                return Ok(None);
+            }
+            let buf = y.expect("grid rank cotangent");
+            let inflight = self.0.adjoint_start(comm, buf)?;
+            // Unrelated local compute while the split dimension's
+            // messages move — stands in for the conv layer's δw GEMMs.
+            let mut acc = 0.0f64;
+            for i in 0..512 {
+                acc += (i as f64).sin();
+            }
+            assert!(acc.is_finite());
+            Ok(Some(self.0.adjoint_finish(comm, inflight)?))
+        }
+
+        fn name(&self) -> String {
+            "HaloExchange[split adjoint]".into()
+        }
+    }
+
+    use crate::comm::Comm;
+
+    #[test]
+    fn split_adjoint_matches_monolithic() {
+        let geom = HaloGeometry::new(
+            &[9, 7],
+            &[2, 2],
+            &[KernelSpec::plain(3), KernelSpec::plain(3)],
+        )
+        .unwrap();
+        let op = HaloExchange::new(Partition::from_shape(&[2, 2]), geom, 1_400).unwrap();
+        let cot = |rank: usize, shape: &[usize]| {
+            Tensor::<f64>::from_fn(shape, |idx| {
+                (rank * 131 + idx.iter().sum::<usize>() * 7 + 1) as f64 * 0.25
+            })
+        };
+        let mono = Cluster::run(4, |comm| {
+            let coords = op.partition().coords_of(comm.rank()).unwrap();
+            let buf = cot(comm.rank(), &op.buffer_shape(&coords));
+            op.adjoint(comm, Some(buf))
+        })
+        .unwrap();
+        let split_op = SplitAdjointExchange(op.clone());
+        let split = Cluster::run(4, |comm| {
+            let coords = op.partition().coords_of(comm.rank()).unwrap();
+            let buf = cot(comm.rank(), &op.buffer_shape(&coords));
+            split_op.adjoint(comm, Some(buf))
+        })
+        .unwrap();
+        assert_eq!(mono, split);
+    }
+
+    #[test]
+    fn coherence_through_split_adjoint_path() {
+        for (n, p, k) in [
+            (11, 3, KernelSpec::padded(5, 2)),
+            (11, 3, KernelSpec::plain(5)),
+            (20, 6, KernelSpec::pool(2, 2)),
+        ] {
+            let op = SplitAdjointExchange(exchange_1d(n, p, k, 1_500));
+            assert_coherent::<f64>(p, &op, 43);
+        }
+        let geom = HaloGeometry::new(
+            &[8, 9, 10],
+            &[2, 1, 2],
+            &[
+                KernelSpec::plain(3),
+                KernelSpec::plain(1),
+                KernelSpec::padded(3, 1),
+            ],
+        )
+        .unwrap();
+        let op = SplitAdjointExchange(
+            HaloExchange::new(Partition::from_shape(&[2, 1, 2]), geom, 1_600).unwrap(),
+        );
+        assert_coherent::<f64>(4, &op, 47);
     }
 
     #[test]

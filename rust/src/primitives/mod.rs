@@ -35,7 +35,7 @@ mod sendrecv;
 
 pub use alltoall::Repartition;
 pub use broadcast::{AllReduce, Broadcast, SumReduce};
-pub use halo_exchange::{HaloExchange, HaloInFlight, TrimPad};
+pub use halo_exchange::{HaloAdjointInFlight, HaloExchange, HaloInFlight, TrimPad};
 pub use scatter::{Gather, Scatter};
 pub use sendrecv::SendRecv;
 

@@ -1,0 +1,166 @@
+//! Backward-pass overlap parity — the conv layer's overlapped adjoint
+//! schedule (dx-first split VJP, split adjoint halo exchange with the
+//! δw/δb GEMMs and parameter sum-reduce in flight) must be numerically
+//! indistinguishable from the serialized reference schedule, across
+//! grids, strides, and padding.
+//!
+//! These tests toggle the process-global overlap switch
+//! (`set_adjoint_overlap`), so they live in their own integration binary:
+//! cargo runs each test file as a separate process, which keeps the
+//! toggle from racing the steady-state arena assertions in
+//! `kernel_parity`.
+
+use distdl::autograd::Layer;
+use distdl::comm::Cluster;
+use distdl::memory::scratch_stats;
+use distdl::nn::layers::{adjoint_overlap, set_adjoint_overlap, Conv2dConfig, DistConv2d};
+use distdl::nn::NativeKernels;
+use distdl::tensor::{numel, Tensor};
+use distdl::util::rng::SplitMix64;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+/// The overlap switch is process-global; tests in this binary serialize
+/// their toggling through this lock (cargo runs the *file* in its own
+/// process but its tests on parallel threads).
+static OVERLAP_LOCK: Mutex<()> = Mutex::new(());
+
+fn rand_t(shape: &[usize], rng: &mut SplitMix64) -> Tensor<f64> {
+    Tensor::from_vec(
+        shape,
+        (0..numel(shape))
+            .map(|_| rng.next_f64() - 0.5)
+            .collect(),
+    )
+    .unwrap()
+}
+
+type StepOut = (Option<Tensor<f64>>, Vec<Tensor<f64>>);
+
+/// One deterministic train step (forward + backward) per rank under the
+/// given overlap setting, returning each rank's (δx, parameter grads).
+fn run_step(layer: &DistConv2d<f64>, world: usize, overlap: bool, seed: u64) -> Vec<StepOut> {
+    set_adjoint_overlap(overlap);
+    let out = Cluster::run(world, |comm| {
+        let rank = comm.rank();
+        let mut st = layer.init(rank, seed)?;
+        let mut dx = None;
+        if let Some(in_shape) = layer.local_in_shape(rank) {
+            let mut rng = SplitMix64::new(seed ^ (rank as u64 * 0x9E37));
+            let x = rand_t(&in_shape, &mut rng);
+            let y = layer
+                .forward(&mut st, comm, Some(x), true)?
+                .expect("grid output");
+            let dy = rand_t(y.shape(), &mut rng);
+            dx = layer.backward(&mut st, comm, Some(dy))?;
+        } else {
+            layer.forward(&mut st, comm, None, true)?;
+            layer.backward(&mut st, comm, None)?;
+        }
+        Ok((dx, st.grads.clone()))
+    })
+    .unwrap();
+    set_adjoint_overlap(true);
+    out
+}
+
+#[test]
+fn overlapped_backward_matches_serialized() {
+    let _guard = OVERLAP_LOCK.lock().unwrap();
+    for (global_in, co, kernel, stride, padding, grid, tag) in [
+        ([2usize, 2, 10, 9], 3usize, (3usize, 3usize), (1usize, 1usize), (1usize, 1usize), (2usize, 2usize), 31_000u64),
+        ([1, 2, 6, 11], 2, (3, 3), (1, 2), (0, 1), (1, 3), 32_000),
+        ([2, 1, 13, 7], 2, (5, 3), (2, 1), (2, 0), (3, 1), 33_000),
+    ] {
+        let world = grid.0 * grid.1;
+        let layer = DistConv2d::<f64>::new(
+            "c",
+            Conv2dConfig {
+                global_in,
+                out_channels: co,
+                kernel,
+                stride,
+                padding,
+                grid,
+                ranks: (0..world).collect(),
+                tag,
+            },
+            Arc::new(NativeKernels),
+        )
+        .unwrap();
+        let serial = run_step(&layer, world, false, 11);
+        let fast = run_step(&layer, world, true, 11);
+        for (rank, (s, f)) in serial.iter().zip(fast.iter()).enumerate() {
+            match (&s.0, &f.0) {
+                (Some(a), Some(b)) => assert!(
+                    a.allclose(b, 1e-12, 1e-12),
+                    "dx diverges on rank {rank} (grid {grid:?})"
+                ),
+                (None, None) => {}
+                _ => panic!("dx presence mismatch on rank {rank}"),
+            }
+            assert_eq!(s.1.len(), f.1.len(), "grad count mismatch on rank {rank}");
+            for (ga, gb) in s.1.iter().zip(f.1.iter()) {
+                assert!(
+                    ga.allclose(gb, 1e-12, 1e-12),
+                    "param grads diverge on rank {rank} (grid {grid:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_backward_reuses_arena_in_steady_state() {
+    // The overlap schedule's staged buffers (activation stash, δx
+    // halo-adjoint message pieces) must keep the zero-allocs-after-warm-up
+    // invariant on every rank.
+    let _guard = OVERLAP_LOCK.lock().unwrap();
+    set_adjoint_overlap(true);
+    assert!(adjoint_overlap());
+    let layer = DistConv2d::<f64>::new(
+        "c",
+        Conv2dConfig {
+            global_in: [2, 2, 12, 12],
+            out_channels: 3,
+            kernel: (3, 3),
+            stride: (1, 1),
+            padding: (1, 1),
+            grid: (2, 2),
+            ranks: vec![0, 1, 2, 3],
+            tag: 34_000,
+        },
+        Arc::new(NativeKernels),
+    )
+    .unwrap();
+    let deltas = Cluster::run(4, |comm| {
+        let rank = comm.rank();
+        let in_shape = layer.local_in_shape(rank).expect("on grid");
+        let mut step = |seed: u64| -> distdl::error::Result<()> {
+            let mut st = layer.init(rank, 3)?;
+            let mut rng = SplitMix64::new(seed ^ rank as u64);
+            let x = rand_t(&in_shape, &mut rng);
+            let y = layer
+                .forward(&mut st, comm, Some(x), true)?
+                .expect("grid output");
+            let dy = rand_t(y.shape(), &mut rng);
+            layer.backward(&mut st, comm, Some(dy))?;
+            Ok(())
+        };
+        // warm-up: the rank arena learns the working set, including the
+        // circulating halo message pieces
+        step(1)?;
+        step(2)?;
+        let base = scratch_stats::<f64>().allocations;
+        for s in 3..8 {
+            step(s)?;
+        }
+        Ok(scratch_stats::<f64>().allocations - base)
+    })
+    .unwrap();
+    assert_eq!(
+        deltas,
+        vec![0, 0, 0, 0],
+        "overlapped backward allocated scratch in steady state"
+    );
+}

@@ -2,15 +2,19 @@
 //! references, plus the Eq. (13) adjoint sweep through the arena-backed
 //! distributed layer path.
 //!
-//! The optimized kernels (blocked GEMM, im2col conv forward/VJP, GEMM
-//! affine, restructured pooling) must be bit-plausible stand-ins for the
-//! original scalar loops: randomized shape/stride/dilation sweeps in both
-//! f32 and f64 compare every output. The distributed conv and avg-pool
-//! layers — whose forward now runs arena-backed slab extraction straight
-//! from the exchange buffer — are additionally checked as *linear
-//! operators* via the paper's adjoint-coherence test, and the scratch
-//! arena's counters must show zero fresh allocations once the working set
-//! is warm.
+//! The optimized kernels (pooled GEMM with shared packed-B panels and
+//! dispatched microkernels, im2col conv forward/VJP, GEMM affine,
+//! restructured pooling) must be bit-plausible stand-ins for the original
+//! scalar loops: randomized shape/stride/dilation sweeps in both f32 and
+//! f64 compare every output. The distributed conv and avg-pool layers —
+//! whose forward runs arena-backed slab extraction straight from the
+//! exchange buffer and whose backward runs the overlapped split-adjoint
+//! schedule — are additionally checked as *linear operators* via the
+//! paper's adjoint-coherence test, and the scratch arena's counters must
+//! show zero fresh allocations once the working set is warm. CI runs this
+//! binary twice: under the default pool size and under
+//! `PALLAS_GEMM_THREADS=1`, which must produce bitwise-identical GEMM
+//! results (the scheduler-invariance contract).
 
 use distdl::adjoint::{adjoint_residual, DistLinearOp};
 use distdl::autograd::{Layer, LayerState};
@@ -65,6 +69,35 @@ fn matmul_parity_f64() {
 #[test]
 fn matmul_parity_f32() {
     check_matmul::<f32>(0xA2, 5e-4, 5e-4);
+}
+
+#[test]
+fn gemm_scheduler_invariance() {
+    // Bitwise reproducibility across repeated pooled calls, explicit
+    // worker counts, and the retained scoped-spawn reference — the
+    // accumulation order per C element is scheduler-independent. Under
+    // PALLAS_GEMM_THREADS=1 (the CI determinism run) the pooled calls
+    // degenerate to the single-threaded path and must still match.
+    use distdl::nn::native::gemm::{gemm, gemm_scoped, gemm_with_workers};
+    let mut rng = SplitMix64::new(0xA3);
+    let (m, n, k) = (210usize, 190usize, 160usize);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.next_f64() - 0.5).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.next_f64() - 0.5).collect();
+    let mut base = vec![0.0f64; m * n];
+    gemm_with_workers(m, n, k, &a, false, &b, false, &mut base, 1).unwrap();
+    for _ in 0..2 {
+        let mut c = vec![0.0f64; m * n];
+        gemm(m, n, k, &a, false, &b, false, &mut c).unwrap();
+        assert!(c == base, "auto-sized pooled gemm diverges bitwise");
+    }
+    for workers in [2usize, 3, 5] {
+        let mut c = vec![0.0f64; m * n];
+        gemm_with_workers(m, n, k, &a, false, &b, false, &mut c, workers).unwrap();
+        assert!(c == base, "pooled gemm (workers={workers}) diverges bitwise");
+        let mut s = vec![0.0f64; m * n];
+        gemm_scoped(m, n, k, &a, false, &b, false, &mut s, workers).unwrap();
+        assert!(s == base, "scoped gemm (workers={workers}) diverges bitwise");
+    }
 }
 
 // ---------------------------------------------------------------------
