@@ -13,8 +13,11 @@
 //!   parameter sum-reduce in flight) against the serialized parity
 //!   schedule — the measured backward-pass overlap speedup;
 //! * the step table's `allocs/step` column counts fresh scratch-arena
-//!   allocations per steady-state step on rank 0 (warm-up excluded) —
-//!   zero means every im2col/staging/stash/message buffer was reused.
+//!   allocations **plus registered comm-pool misses** per steady-state
+//!   step on rank 0 (warm-up excluded) — zero means every im2col/staging/
+//!   stash buffer was reused *and* every message payload, including the
+//!   weight-broadcast and gradient sum-reduce trees, came from a recycled
+//!   registered buffer.
 //!
 //! Setup (network build, parameter init, PJRT compilation) happens once
 //! per configuration inside a single cluster; the timed region is the
@@ -63,7 +66,9 @@ fn measure(
                 train_step(&net, &mut st, comm, &batch0, &mut opt)?;
             }
         }
+        comm.barrier(); // in-flight pooled payloads land home before sampling
         let alloc0 = scratch_stats::<f32>().allocations;
+        let pool0 = comm.pool_stats().misses;
         let mut times = Vec::with_capacity(iters);
         for _ in 0..iters {
             comm.barrier();
@@ -77,7 +82,8 @@ fn measure(
             comm.barrier();
             times.push(t.elapsed_s());
         }
-        let allocs = scratch_stats::<f32>().allocations - alloc0;
+        let allocs = (scratch_stats::<f32>().allocations - alloc0)
+            + (comm.pool_stats().misses - pool0);
         Ok((times, allocs))
     })
     .expect("bench cluster");

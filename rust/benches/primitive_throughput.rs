@@ -36,13 +36,17 @@ use distdl::tensor::{ops, Tensor};
 use distdl::testing::bench::{BenchGroup, BenchResult};
 
 const WIRE: &str = "blocking-wire";
+const NOPOOL: &str = "nb-unpooled";
 const NB: &str = "nonblocking";
 const NAIVE: &str = "naive";
 const GEMM: &str = "gemm";
 const SCOPED: &str = "scoped-spawn";
 const POOLED: &str = "pooled";
 
-/// Run one collective body under both engines.
+/// Run one collective body under all three engines: the serializing
+/// blocking-wire baseline, the nonblocking engine with the registered
+/// comm-buffer pool disabled (move-semantics payloads, allocating), and
+/// the default pooled engine — the pooled-vs-unpooled column.
 fn bench_both<F>(g: &mut BenchGroup, name: &str, bytes: usize, world: usize, body: F)
 where
     F: Fn(&mut Comm) -> Result<()> + Send + Sync + Copy,
@@ -54,6 +58,13 @@ where
         })
         .unwrap();
     });
+    g.bench_bytes(&format!("{name} [{NOPOOL}]"), bytes, || {
+        Cluster::run(world, move |comm| {
+            comm.set_comm_pool(false);
+            body(comm)
+        })
+        .unwrap();
+    });
     g.bench_bytes(&format!("{name} [{NB}]"), bytes, || {
         Cluster::run(world, body).unwrap();
     });
@@ -61,21 +72,18 @@ where
 
 fn report_speedup(results: &[BenchResult]) {
     println!(
-        "\n== speedups: nonblocking vs blocking-wire, GEMM vs naive, pooled vs scoped-spawn =="
+        "\n== speedups: nonblocking vs blocking-wire, pooled vs unpooled engine, GEMM vs naive, pooled vs scoped-spawn =="
     );
     println!("{:<52} {:>10}", "benchmark", "speedup");
-    for (fast, base) in [(NB, WIRE), (GEMM, NAIVE), (POOLED, SCOPED)] {
+    for (fast, base) in [(NB, WIRE), (NB, NOPOOL), (GEMM, NAIVE), (POOLED, SCOPED)] {
         let fast_suffix = format!(" [{fast}]");
         let base_suffix = format!(" [{base}]");
         for r in results {
             if let Some(base_name) = r.name.strip_suffix(fast_suffix.as_str()) {
                 let base_full = format!("{base_name}{base_suffix}");
                 if let Some(b) = results.iter().find(|x| x.name == base_full) {
-                    println!(
-                        "{:<52} {:>9.2}x",
-                        base_name,
-                        b.stats.median / r.stats.median
-                    );
+                    let label = format!("{base_name} vs [{base}]");
+                    println!("{label:<52} {:>9.2}x", b.stats.median / r.stats.median);
                 }
             }
         }

@@ -50,6 +50,41 @@
 //!   [`Comm::set_wire_format`] — the knob the benches use to compare the
 //!   blocking/serializing baseline against the zero-copy engine.
 //!
+//! ## Registered comm-buffer pool
+//!
+//! Production interconnects get their collective throughput from
+//! **pre-registered communication buffers**: message payloads live in
+//! long-lived, registered memory that the transport owns, and steady-state
+//! traffic touches the allocator not at all. Each [`Comm`] endpoint owns a
+//! [`BufferPool`] that simulates exactly that contract in-process:
+//!
+//! * a sender draws a size-classed staging buffer from **its own** pool
+//!   ([`Comm::pool_take`]), fills it, and posts it with
+//!   [`Comm::isend_pooled`] (or fans a shared [`PooledBody`] out with
+//!   [`Comm::isend_pooled_body`] — the broadcast tree clones only the
+//!   `Arc`);
+//! * the payload travels with a handle to the sender's return bin; the
+//!   *receiver* completes it with [`Comm::wait_payload`] /
+//!   [`Comm::wait_any_payload`], consumes the contents in place
+//!   (reference-counted — the last holder's drop does the return), and the
+//!   buffer flies home to the **sender's** pool slot.
+//!
+//! That receiver-returns-to-sender cycle is what the per-rank
+//! [`crate::memory`] scratch arenas can never close: the broadcast and
+//! sum-reduce trees, scatter/gather, the all-to-all assembly, and
+//! forward-only halo circulation all move buffers *one way*, so arena
+//! staging either leaks a buffer per step on send-heavy ranks or grows
+//! receive-heavy arenas without bound. With the pool, every one-way flow
+//! recycles: after warm-up a steady-state step performs **zero** pool
+//! misses (fresh allocations), and the [`CommPoolStats`] counters on
+//! [`CommStats::pool`] prove it. `PALLAS_COMM_POOL_CAP_BYTES` caps each
+//! endpoint's parked bytes exactly like the scratch arenas'
+//! `PALLAS_SCRATCH_CAP_BYTES` (default 64 MiB, `0` = uncapped; returns
+//! that would exceed the cap execute the deallocation for real and count
+//! as evictions). [`Comm::set_comm_pool`]`(false)` restores the
+//! move-semantics unpooled paths — the benches' baseline, bitwise
+//! identical in every result.
+//!
 //! Semantics match MPI where it matters:
 //! * messages between a (source, destination) pair are FIFO;
 //! * receives match on `(source, tag)`; non-matching messages are parked in
@@ -60,11 +95,12 @@
 
 use crate::error::{Error, Result};
 use crate::tensor::Scalar;
-use std::any::Any;
+use crate::util::env::{parse_u64, EnvNum};
+use std::any::{Any, TypeId};
 use std::collections::{HashMap, VecDeque};
 use std::marker::PhantomData;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 /// Default receive timeout in milliseconds — generous, but converts a
@@ -77,13 +113,14 @@ const DEFAULT_RECV_TIMEOUT_MS: u64 = if cfg!(test) { 5_000 } else { 60_000 };
 /// Environment variable overriding the receive timeout (milliseconds).
 pub const RECV_TIMEOUT_ENV: &str = "PALLAS_RECV_TIMEOUT_MS";
 
-/// Parse a `PALLAS_RECV_TIMEOUT_MS` value, falling back to the default on
-/// absence, garbage, or zero.
+/// Parse a `PALLAS_RECV_TIMEOUT_MS` value through the shared
+/// [`crate::util::env`] parser, falling back to the default on absence,
+/// garbage, or zero.
 fn parse_recv_timeout(raw: Option<&str>) -> Duration {
-    let ms = raw
-        .and_then(|s| s.trim().parse::<u64>().ok())
-        .filter(|&ms| ms > 0)
-        .unwrap_or(DEFAULT_RECV_TIMEOUT_MS);
+    let ms = match parse_u64(RECV_TIMEOUT_ENV, raw) {
+        EnvNum::Value(ms) if ms > 0 => ms,
+        _ => DEFAULT_RECV_TIMEOUT_MS,
+    };
     Duration::from_millis(ms)
 }
 
@@ -92,7 +129,279 @@ pub fn configured_recv_timeout() -> Duration {
     parse_recv_timeout(std::env::var(RECV_TIMEOUT_ENV).ok().as_deref())
 }
 
+/// Environment variable capping the bytes each endpoint's registered
+/// buffer pool may park (mirrors the scratch arenas'
+/// `PALLAS_SCRATCH_CAP_BYTES` policy: absent/garbage means the default,
+/// an explicit `0` means uncapped). Read once per [`Cluster::run`].
+pub const COMM_POOL_CAP_ENV: &str = "PALLAS_COMM_POOL_CAP_BYTES";
+
+/// Default per-endpoint pool cap — far above any steady-state message
+/// working set in this crate, but a hard bound on pathological growth.
+pub const DEFAULT_COMM_POOL_CAP_BYTES: usize = 64 << 20;
+
+/// Parse a `PALLAS_COMM_POOL_CAP_BYTES` value into the effective cap
+/// (`None` = uncapped).
+fn parse_comm_pool_cap(raw: Option<&str>) -> Option<usize> {
+    match parse_u64(COMM_POOL_CAP_ENV, raw) {
+        EnvNum::Value(0) => None,
+        EnvNum::Value(b) => Some(b as usize),
+        EnvNum::Unset | EnvNum::Malformed => Some(DEFAULT_COMM_POOL_CAP_BYTES),
+    }
+}
+
+/// The per-endpoint pool cap currently configured by the environment.
+fn configured_comm_pool_cap() -> Option<usize> {
+    parse_comm_pool_cap(std::env::var(COMM_POOL_CAP_ENV).ok().as_deref())
+}
+
 type AnyArc = Arc<dyn Any + Send + Sync>;
+
+// ---------------------------------------------------------------------
+// Registered comm-buffer pool
+// ---------------------------------------------------------------------
+
+/// A buffer on its way home: the type-erased `Vec<T>` plus the metadata
+/// the owning pool needs to park it without downcasting.
+struct PoolEntry {
+    elem: TypeId,
+    cap_elems: usize,
+    bytes: usize,
+    buf: Box<dyn Any + Send>,
+}
+
+/// The sender-owned return slot that travels (by `Arc`) inside every
+/// pooled payload. Receivers push the dead buffer here; the owner drains
+/// it on its next acquire.
+type ReturnBin = Arc<Mutex<Vec<PoolEntry>>>;
+
+/// A registered message payload: a buffer drawn from some endpoint's
+/// [`BufferPool`] together with the handle that returns it there.
+///
+/// The body is reference-counted through the engine (`Arc<PooledBody>`),
+/// so fan-out sends share one registration; whichever holder drops the
+/// **last** reference performs the return — receiver-side for
+/// point-to-point messages, the final tree member for a broadcast.
+pub struct PooledBody<T: Scalar> {
+    data: Vec<T>,
+    home: ReturnBin,
+}
+
+impl<T: Scalar> PooledBody<T> {
+    /// The payload contents.
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Payload length in elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Whether the payload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+impl<T: Scalar> Drop for PooledBody<T> {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.data);
+        if buf.capacity() == 0 {
+            return;
+        }
+        let entry = PoolEntry {
+            elem: TypeId::of::<T>(),
+            cap_elems: buf.capacity(),
+            bytes: buf.capacity() * std::mem::size_of::<T>(),
+            buf: Box::new(buf),
+        };
+        // A poisoned bin means its owner panicked; leaking the buffer to
+        // the allocator is the only sensible fallback.
+        if let Ok(mut bin) = self.home.lock() {
+            bin.push(entry);
+        }
+    }
+}
+
+/// Counters describing one endpoint's registered-buffer pool.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CommPoolStats {
+    /// `pool_take` calls served while the pool was enabled.
+    pub acquires: usize,
+    /// Acquires served from parked/returned buffers (no allocation).
+    pub hits: usize,
+    /// Acquires that had to mint a fresh buffer. After warm-up a
+    /// steady-state train step should add **zero** here.
+    pub misses: usize,
+    /// Buffers that came home from receivers.
+    pub returns: usize,
+    /// Returns dropped by the byte cap (`PALLAS_COMM_POOL_CAP_BYTES`) —
+    /// the deallocation executed for real.
+    pub evictions: usize,
+    /// Bytes currently parked in the pool.
+    pub pooled_bytes: usize,
+}
+
+/// A per-endpoint pool of registered message buffers (see the module
+/// docs). Owned by [`Comm`]; all access goes through the endpoint.
+struct BufferPool {
+    bin: ReturnBin,
+    free: Vec<PoolEntry>,
+    pooled_bytes: usize,
+    cap_bytes: Option<usize>,
+    enabled: bool,
+    acquires: usize,
+    hits: usize,
+    misses: usize,
+    returns: usize,
+    evictions: usize,
+}
+
+impl BufferPool {
+    fn new(cap_bytes: Option<usize>) -> Self {
+        BufferPool {
+            bin: Arc::new(Mutex::new(Vec::new())),
+            free: Vec::new(),
+            pooled_bytes: 0,
+            cap_bytes,
+            enabled: true,
+            acquires: 0,
+            hits: 0,
+            misses: 0,
+            returns: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Park every buffer currently sitting in the return bin (applying
+    /// the cap — an over-cap return is evicted, i.e. truly deallocated).
+    fn drain_returns(&mut self) {
+        let drained: Vec<PoolEntry> = match self.bin.lock() {
+            Ok(mut bin) => std::mem::take(&mut *bin),
+            Err(_) => Vec::new(),
+        };
+        for entry in drained {
+            self.returns += 1;
+            if let Some(cap) = self.cap_bytes {
+                if self.pooled_bytes + entry.bytes > cap {
+                    self.evictions += 1;
+                    continue;
+                }
+            }
+            self.pooled_bytes += entry.bytes;
+            self.free.push(entry);
+        }
+    }
+
+    /// Acquire a buffer of exactly `len` elements with unspecified
+    /// contents (senders overwrite every element they ship). Best-fit
+    /// over the parked buffers; a miss mints a fresh zeroed buffer.
+    fn take<T: Scalar>(&mut self, len: usize) -> Vec<T> {
+        self.drain_returns();
+        self.acquires += 1;
+        let elem = TypeId::of::<T>();
+        let mut best: Option<(usize, usize)> = None;
+        for (i, e) in self.free.iter().enumerate() {
+            let tighter = match best {
+                None => true,
+                Some((_, c)) => e.cap_elems < c,
+            };
+            if e.elem == elem && e.cap_elems >= len && tighter {
+                best = Some((i, e.cap_elems));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                self.hits += 1;
+                let entry = self.free.swap_remove(i);
+                self.pooled_bytes -= entry.bytes;
+                let mut buf = *entry
+                    .buf
+                    .downcast::<Vec<T>>()
+                    .expect("pool entry matches its TypeId");
+                buf.resize(len, T::ZERO);
+                buf
+            }
+            None => {
+                self.misses += 1;
+                vec![T::ZERO; len]
+            }
+        }
+    }
+
+    /// Wrap a buffer as a registered payload that returns here on drop.
+    fn wrap<T: Scalar>(&self, data: Vec<T>) -> PooledBody<T> {
+        PooledBody {
+            data,
+            home: self.bin.clone(),
+        }
+    }
+
+    fn stats(&self) -> CommPoolStats {
+        CommPoolStats {
+            acquires: self.acquires,
+            hits: self.hits,
+            misses: self.misses,
+            returns: self.returns,
+            evictions: self.evictions,
+            pooled_bytes: self.pooled_bytes,
+        }
+    }
+}
+
+/// A completed receive's payload: either an owned buffer (unpooled typed
+/// path, wire fallback) or a registered buffer borrowed from the sender's
+/// pool. Consume via [`Payload::as_slice`] and drop (the drop performs
+/// the return), or take ownership with [`Payload::into_owned`].
+pub enum Payload<T: Scalar> {
+    /// The receiver owns the buffer outright.
+    Owned(Vec<T>),
+    /// A registered buffer; dropping the last reference returns it to the
+    /// sender's pool.
+    Pooled(Arc<PooledBody<T>>),
+}
+
+impl<T: Scalar> Payload<T> {
+    /// The payload contents.
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            Payload::Owned(v) => v.as_slice(),
+            Payload::Pooled(p) => p.as_slice(),
+        }
+    }
+
+    /// Payload length in elements.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// Whether the payload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    /// Take ownership of the contents. Owned payloads move; pooled
+    /// payloads are copied out and the registered buffer returns home.
+    pub fn into_owned(self) -> Vec<T> {
+        match self {
+            Payload::Owned(v) => v,
+            Payload::Pooled(p) => p.as_slice().to_vec(),
+        }
+    }
+}
+
+/// Serializer stored in [`TypedBody`] for pooled payloads (the wire
+/// fallback for [`Comm::recv_bytes`] and element-type mismatches).
+fn pooled_wire_of<T: Scalar>(data: &AnyArc) -> Vec<u8> {
+    let p = data
+        .downcast_ref::<PooledBody<T>>()
+        .expect("pooled body serializer sees its own element type");
+    let v = p.as_slice();
+    let mut buf = Vec::with_capacity(8 + v.len() * T::WIRE_SIZE);
+    buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    T::write_bytes(v, &mut buf);
+    buf
+}
 
 /// Serialize a typed payload into the wire format (header + little-endian
 /// elements). Stored as a fn pointer in [`TypedBody`] so a type-erased
@@ -179,6 +488,8 @@ pub struct CommStats {
     pub wire_msgs: usize,
     /// Wall-clock seconds this rank spent blocked completing receives.
     pub wait_time_s: f64,
+    /// Registered buffer-pool counters (`comm_pool_*` on the MetricLog).
+    pub pool: CommPoolStats,
 }
 
 /// Handle for a posted nonblocking send.
@@ -251,6 +562,8 @@ pub struct Comm {
     in_flight: usize,
     /// Force every payload through the serialized wire format (bench knob).
     wire_format: bool,
+    /// Registered message-buffer pool (see the module docs).
+    pool: BufferPool,
     recv_timeout: Duration,
     barrier: Arc<Barrier>,
     stats: CommStats,
@@ -269,9 +582,13 @@ impl Comm {
         self.size
     }
 
-    /// Traffic counters so far.
-    pub fn stats(&self) -> CommStats {
-        self.stats
+    /// Traffic counters so far. Drains the buffer pool's return bin first
+    /// so in-transit returns are reflected in the `pool` counters.
+    pub fn stats(&mut self) -> CommStats {
+        self.pool.drain_returns();
+        let mut s = self.stats;
+        s.pool = self.pool.stats();
+        s
     }
 
     /// Receive requests currently outstanding.
@@ -289,6 +606,57 @@ impl Comm {
     /// Whether the serialized wire format is currently forced.
     pub fn wire_format(&self) -> bool {
         self.wire_format
+    }
+
+    // ------------------------------------------------------------------
+    // Registered buffer pool
+    // ------------------------------------------------------------------
+
+    /// Whether the registered buffer pool is enabled (the default).
+    pub fn pool_on(&self) -> bool {
+        self.pool.enabled
+    }
+
+    /// Enable (default) or disable the registered buffer pool. Disabled,
+    /// the pooled send helpers degrade to the move-semantics unpooled
+    /// paths — the benches' baseline. Results are bitwise identical
+    /// either way; only the allocator traffic differs.
+    pub fn set_comm_pool(&mut self, on: bool) {
+        self.pool.enabled = on;
+    }
+
+    /// Override this endpoint's pool byte cap (`None` = uncapped) — a
+    /// testing/tuning knob; the initial cap comes from
+    /// `PALLAS_COMM_POOL_CAP_BYTES` at cluster launch.
+    pub fn set_pool_cap_bytes(&mut self, cap: Option<usize>) {
+        self.pool.cap_bytes = cap;
+    }
+
+    /// This endpoint's pool counters (return bin drained first).
+    pub fn pool_stats(&mut self) -> CommPoolStats {
+        self.pool.drain_returns();
+        self.pool.stats()
+    }
+
+    /// Acquire a registered staging buffer of exactly `len` elements with
+    /// **unspecified contents** (fill it before sending). Served from the
+    /// pool's parked/returned buffers when possible; with the pool
+    /// disabled this is a plain allocation, uncounted.
+    pub fn pool_take<T: Scalar>(&mut self, len: usize) -> Vec<T> {
+        if self.pool.enabled {
+            self.pool.take(len)
+        } else {
+            vec![T::ZERO; len]
+        }
+    }
+
+    /// Copy `data` into a registered buffer and wrap it as a shareable
+    /// pooled payload (broadcast trees fan the `Arc` out). Pool must be
+    /// enabled — callers branch on [`Comm::pool_on`].
+    pub fn pool_stage<T: Scalar>(&mut self, data: &[T]) -> Arc<PooledBody<T>> {
+        let mut stage = self.pool.take(data.len());
+        stage.copy_from_slice(data);
+        Arc::new(self.pool.wrap(stage))
     }
 
     // ------------------------------------------------------------------
@@ -388,6 +756,88 @@ impl Comm {
             return self.isend_slice(dst, tag, data.as_slice());
         }
         self.post(dst, tag, Self::shared_body(data))?;
+        Ok(SendRequest { dst, tag })
+    }
+
+    /// Post a nonblocking send of a **registered** buffer previously
+    /// acquired with [`Comm::pool_take`]: the payload carries a handle to
+    /// this endpoint's pool, and the receiver's completion returns the
+    /// buffer here. With the pool disabled this degrades to the
+    /// move-semantics [`Comm::isend_vec`]; with the wire format forced the
+    /// buffer is serialized and returns home immediately.
+    pub fn isend_pooled<T: Scalar>(
+        &mut self,
+        dst: usize,
+        tag: u64,
+        data: Vec<T>,
+    ) -> Result<SendRequest> {
+        if !self.pool.enabled {
+            return self.isend_vec(dst, tag, data);
+        }
+        if self.wire_format {
+            let req = self.isend_slice(dst, tag, &data)?;
+            drop(self.pool.wrap(data)); // straight back to the pool
+            return Ok(req);
+        }
+        let body: Arc<PooledBody<T>> = Arc::new(self.pool.wrap(data));
+        self.post(
+            dst,
+            tag,
+            Body::Typed(TypedBody {
+                len: body.len(),
+                wire_size: T::WIRE_SIZE,
+                data: body as AnyArc,
+                to_wire: pooled_wire_of::<T>,
+            }),
+        )?;
+        Ok(SendRequest { dst, tag })
+    }
+
+    /// Stage `data` in a registered buffer from this endpoint's pool and
+    /// post its send — the one-call form of the
+    /// `pool_take`/`copy_from_slice`/[`Comm::isend_pooled`] sequence every
+    /// pooled primitive send uses, so the staging contract lives in one
+    /// place. With the pool disabled this degrades to the copying
+    /// [`Comm::isend_slice`]; move-semantics call sites that want their
+    /// unpooled fallback to *move* instead branch on [`Comm::pool_on`]
+    /// and call [`Comm::isend_vec`] themselves.
+    pub fn isend_staged<T: Scalar>(
+        &mut self,
+        dst: usize,
+        tag: u64,
+        data: &[T],
+    ) -> Result<SendRequest> {
+        if !self.pool.enabled {
+            return self.isend_slice(dst, tag, data);
+        }
+        let mut stage = self.pool.take(data.len());
+        stage.copy_from_slice(data);
+        self.isend_pooled(dst, tag, stage)
+    }
+
+    /// Post a nonblocking send of a shared pooled payload (from
+    /// [`Comm::pool_stage`] or a received [`Payload::Pooled`] being
+    /// forwarded) — fan-out clones only the `Arc`; the last holder's drop
+    /// returns the buffer to the pool that staged it.
+    pub fn isend_pooled_body<T: Scalar>(
+        &mut self,
+        dst: usize,
+        tag: u64,
+        body: &Arc<PooledBody<T>>,
+    ) -> Result<SendRequest> {
+        if self.wire_format {
+            return self.isend_slice(dst, tag, body.as_slice());
+        }
+        self.post(
+            dst,
+            tag,
+            Body::Typed(TypedBody {
+                len: body.len(),
+                wire_size: T::WIRE_SIZE,
+                data: body.clone() as AnyArc,
+                to_wire: pooled_wire_of::<T>,
+            }),
+        )?;
         Ok(SendRequest { dst, tag })
     }
 
@@ -499,8 +949,8 @@ impl Comm {
     }
 
     /// Decode a payload as `T` elements: zero-copy when the typed buffer
-    /// matches, length-checked wire fallback otherwise.
-    fn decode_vec<T: Scalar>(&mut self, body: Body) -> Result<Vec<T>> {
+    /// matches (owned or pooled), length-checked wire fallback otherwise.
+    fn decode_payload<T: Scalar>(&mut self, body: Body) -> Result<Payload<T>> {
         match body {
             Body::Typed(TypedBody {
                 wire_size,
@@ -512,22 +962,30 @@ impl Comm {
                     match data.downcast::<Vec<T>>() {
                         Ok(arc) => {
                             self.stats.zero_copy_msgs += 1;
-                            return Ok(Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone()));
+                            return Ok(Payload::Owned(
+                                Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone()),
+                            ));
                         }
-                        Err(data) => {
-                            self.stats.wire_msgs += 1;
-                            return parse_wire::<T>(&to_wire(&data));
-                        }
+                        Err(data) => match data.downcast::<PooledBody<T>>() {
+                            Ok(arc) => {
+                                self.stats.zero_copy_msgs += 1;
+                                return Ok(Payload::Pooled(arc));
+                            }
+                            Err(data) => {
+                                self.stats.wire_msgs += 1;
+                                return parse_wire::<T>(&to_wire(&data)).map(Payload::Owned);
+                            }
+                        },
                     }
                 }
                 // Element-size mismatch: the wire fallback's length check
                 // reports it (same failure mode as the byte path).
                 self.stats.wire_msgs += 1;
-                parse_wire::<T>(&to_wire(&data))
+                parse_wire::<T>(&to_wire(&data)).map(Payload::Owned)
             }
             Body::Bytes(buf) => {
                 self.stats.wire_msgs += 1;
-                parse_wire::<T>(&buf)
+                parse_wire::<T>(&buf).map(Payload::Owned)
             }
         }
     }
@@ -547,10 +1005,21 @@ impl Comm {
         Ok(body)
     }
 
-    /// Complete a posted receive, blocking until its message arrives.
+    /// Complete a posted receive, blocking until its message arrives, and
+    /// take ownership of the contents (a pooled payload is copied out and
+    /// returned to its sender). Prefer [`Comm::wait_payload`] on hot paths
+    /// that only read the payload.
     pub fn wait<T: Scalar>(&mut self, req: RecvRequest<T>) -> Result<Vec<T>> {
+        self.wait_payload(req).map(Payload::into_owned)
+    }
+
+    /// Complete a posted receive, blocking until its message arrives,
+    /// without taking ownership: the returned [`Payload`] is consumed in
+    /// place and its drop returns a registered buffer to the sender's
+    /// pool — the receiver half of the pool's recycle cycle.
+    pub fn wait_payload<T: Scalar>(&mut self, req: RecvRequest<T>) -> Result<Payload<T>> {
         let body = self.complete(req.src, req.tag, req.seq)?;
-        self.decode_vec(body)
+        self.decode_payload(body)
     }
 
     /// Complete a batch of posted receives, in order. On the first error
@@ -592,6 +1061,18 @@ impl Comm {
         &mut self,
         reqs: &mut Vec<RecvRequest<T>>,
     ) -> Result<(usize, Vec<T>)> {
+        let (idx, payload) = self.wait_any_payload(reqs)?;
+        Ok((idx, payload.into_owned()))
+    }
+
+    /// [`Comm::wait_any`] without taking ownership of the payload — the
+    /// arrival-order drain the gather and all-to-all assemblies run on,
+    /// returning a [`Payload`] whose drop recycles a registered buffer to
+    /// its sender.
+    pub fn wait_any_payload<T: Scalar>(
+        &mut self,
+        reqs: &mut Vec<RecvRequest<T>>,
+    ) -> Result<(usize, Payload<T>)> {
         if reqs.is_empty() {
             return Err(Error::Comm("wait_any: no posted receives".into()));
         }
@@ -616,7 +1097,7 @@ impl Comm {
                 self.in_flight -= 1;
                 self.stats.messages_received += 1;
                 self.stats.bytes_received += body.wire_len();
-                return Ok((idx, self.decode_vec(body)?));
+                return Ok((idx, self.decode_payload(body)?));
             }
             let remaining = deadline.saturating_duration_since(Instant::now());
             let timed_out = remaining.is_zero()
@@ -710,6 +1191,7 @@ impl Cluster {
             return Err(Error::Comm("world size must be >= 1".into()));
         }
         let recv_timeout = configured_recv_timeout();
+        let pool_cap = configured_comm_pool_cap();
         let mut senders = Vec::with_capacity(world);
         let mut inboxes = Vec::with_capacity(world);
         for _ in 0..world {
@@ -732,6 +1214,7 @@ impl Cluster {
                 next_arrived: HashMap::new(),
                 in_flight: 0,
                 wire_format: false,
+                pool: BufferPool::new(pool_cap),
                 recv_timeout,
                 barrier: barrier.clone(),
                 stats: CommStats::default(),
@@ -1134,6 +1617,153 @@ mod tests {
         .unwrap();
         assert_eq!(results[1], 8.0);
         assert_eq!(results[2], 8.0);
+    }
+
+    #[test]
+    fn pooled_send_returns_buffer_to_sender() {
+        Cluster::run(2, |comm| {
+            comm.set_pool_cap_bytes(None); // immune to env caps in CI legs
+            if comm.rank() == 0 {
+                let mut buf = comm.pool_take::<f64>(16);
+                buf.iter_mut().enumerate().for_each(|(i, v)| *v = i as f64);
+                let req = comm.isend_pooled(1, 5, buf)?;
+                comm.wait_send(req)?;
+                comm.barrier(); // receiver has consumed and dropped
+                let again = comm.pool_take::<f64>(16);
+                assert_eq!(again.len(), 16);
+                let s = comm.pool_stats();
+                assert_eq!(s.acquires, 2);
+                assert_eq!(s.misses, 1, "second take must be served by the return");
+                assert_eq!(s.hits, 1);
+                assert_eq!(s.returns, 1);
+                assert_eq!(s.evictions, 0);
+            } else {
+                let req = comm.irecv::<f64>(0, 5)?;
+                let payload = comm.wait_payload(req)?;
+                assert!(matches!(payload, Payload::Pooled(_)));
+                assert_eq!(payload.as_slice()[15], 15.0);
+                drop(payload); // the return
+                comm.barrier();
+                // the receiver's own pool saw no traffic
+                assert_eq!(comm.pool_stats().acquires, 0);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn pool_cap_evicts_returns() {
+        Cluster::run(2, |comm| {
+            comm.set_pool_cap_bytes(Some(1)); // nothing fits
+            if comm.rank() == 0 {
+                let buf = comm.pool_take::<f32>(8);
+                let req = comm.isend_pooled(1, 6, buf)?;
+                comm.wait_send(req)?;
+                comm.barrier();
+                let _again = comm.pool_take::<f32>(8);
+                let s = comm.pool_stats();
+                assert_eq!(s.returns, 1);
+                assert_eq!(s.evictions, 1, "over-cap return must be dropped");
+                assert_eq!(s.hits, 0);
+                assert_eq!(s.misses, 2);
+                assert_eq!(s.pooled_bytes, 0);
+            } else {
+                let req = comm.irecv::<f32>(0, 6)?;
+                let _ = comm.wait_payload(req)?;
+                comm.barrier();
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn disabled_pool_degrades_to_move_semantics() {
+        Cluster::run(2, |comm| {
+            comm.set_comm_pool(false);
+            if comm.rank() == 0 {
+                let buf = comm.pool_take::<f64>(4);
+                let req = comm.isend_pooled(1, 7, buf)?;
+                comm.wait_send(req)?;
+                assert_eq!(comm.pool_stats().acquires, 0, "disabled pool counted");
+            } else {
+                let req = comm.irecv::<f64>(0, 7)?;
+                let payload = comm.wait_payload(req)?;
+                assert!(matches!(payload, Payload::Owned(_)));
+                assert_eq!(payload.len(), 4);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn pooled_send_under_wire_format_returns_immediately() {
+        Cluster::run(2, |comm| {
+            comm.set_pool_cap_bytes(None);
+            comm.set_wire_format(true);
+            if comm.rank() == 0 {
+                let mut buf = comm.pool_take::<f64>(3);
+                buf.copy_from_slice(&[1.0, 2.0, 3.0]);
+                let req = comm.isend_pooled(1, 8, buf)?;
+                comm.wait_send(req)?;
+                // the staging buffer came home without a receiver round trip
+                let _again = comm.pool_take::<f64>(3);
+                let s = comm.pool_stats();
+                assert_eq!(s.returns, 1);
+                assert_eq!(s.hits, 1);
+            } else {
+                let got = comm.recv_vec::<f64>(0, 8)?;
+                assert_eq!(got, vec![1.0, 2.0, 3.0]);
+                assert!(comm.stats().wire_msgs >= 1);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn shared_pooled_body_fans_out_and_returns_once() {
+        // One staged buffer broadcast to two receivers: both read it, the
+        // last drop returns it to the root exactly once.
+        Cluster::run(3, |comm| {
+            comm.set_pool_cap_bytes(None);
+            if comm.rank() == 0 {
+                let body = comm.pool_stage(&[7.0f64, 8.0]);
+                for dst in 1..3 {
+                    let req = comm.isend_pooled_body(dst, 9, &body)?;
+                    comm.wait_send(req)?;
+                }
+                drop(body);
+                comm.barrier();
+                let s = comm.pool_stats();
+                assert_eq!(s.returns, 1, "fan-out must return exactly once");
+            } else {
+                let req = comm.irecv::<f64>(0, 9)?;
+                let payload = comm.wait_payload(req)?;
+                assert_eq!(payload.as_slice(), &[7.0, 8.0]);
+                drop(payload);
+                comm.barrier();
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn comm_pool_cap_parsing() {
+        assert_eq!(parse_comm_pool_cap(None), Some(DEFAULT_COMM_POOL_CAP_BYTES));
+        assert_eq!(
+            parse_comm_pool_cap(Some("junk")),
+            Some(DEFAULT_COMM_POOL_CAP_BYTES)
+        );
+        assert_eq!(
+            parse_comm_pool_cap(Some("")),
+            Some(DEFAULT_COMM_POOL_CAP_BYTES)
+        );
+        assert_eq!(parse_comm_pool_cap(Some("0")), None);
+        assert_eq!(parse_comm_pool_cap(Some(" 4096 ")), Some(4096));
     }
 
     #[test]

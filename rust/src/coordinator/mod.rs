@@ -16,10 +16,14 @@
 //! and the local optimizer step, and the engine's in-flight/wait-time
 //! counters are surfaced on the [`MetricLog`] (`comm_*` meta keys). Each
 //! rank thread owns a [`crate::memory`] scratch arena that the layer
-//! kernels stage im2col columns, GEMM pack panels, and halo buffers in;
-//! rank 0's reuse counters land on the log as `scratch_*` keys — after
-//! warm-up, steady-state steps should add nothing to
-//! `scratch_allocations`.
+//! kernels stage im2col columns, GEMM pack panels, and broadcast replicas
+//! in, and each rank's comm endpoint owns a registered buffer pool that
+//! every message payload (halo pieces, the broadcast/sum-reduce trees,
+//! scatter/gather, all-to-all) is staged in; rank 0's counters land on
+//! the log as `scratch_*` and `comm_pool_*` keys — after warm-up,
+//! steady-state steps should add nothing to `scratch_allocations` or
+//! `comm_pool_misses`: the entire train step stops touching the
+//! allocator.
 
 use crate::autograd::NetworkState;
 use crate::comm::{Cluster, Comm};

@@ -38,7 +38,12 @@
 //!   arrival order — the gather and all-to-all assemblies run on it),
 //!   payloads travel a typed zero-copy `Arc` path (the length-checked wire
 //!   format remains as fallback), and the blocking API survives as thin
-//!   wrappers. The paper's model is explicitly back-end independent.
+//!   wrappers. Each endpoint owns a **registered buffer pool**
+//!   (`PALLAS_COMM_POOL_CAP_BYTES` capped): message payloads are staged in
+//!   the sender's pool and the receiver's completion returns them there,
+//!   so one-way flows — the broadcast/sum-reduce trees, scatter/gather,
+//!   forward-only halo circulation — recycle instead of allocating. The
+//!   paper's model is explicitly back-end independent.
 //! * [`primitives`] — §3: send/recv, scatter/gather, broadcast, sum-reduce,
 //!   all-reduce, generalized all-to-all (repartition), and the generalized
 //!   unbalanced halo exchange — each a [`adjoint::LinearOp`] with a

@@ -46,7 +46,9 @@ impl MetricLog {
 
     /// Surface the comm engine's traffic and overlap counters as run
     /// metadata (`comm_*` keys) — the in-flight/wait-time evidence for the
-    /// nonblocking request engine.
+    /// nonblocking request engine — plus the registered buffer pool's
+    /// counters (`comm_pool_*` keys): after warm-up a steady-state train
+    /// step should add zero to `comm_pool_misses`.
     pub fn set_comm_stats(&mut self, s: &CommStats) {
         self.set_meta("comm_messages_sent", s.messages_sent);
         self.set_meta("comm_bytes_sent", s.bytes_sent);
@@ -57,6 +59,12 @@ impl MetricLog {
         self.set_meta("comm_zero_copy_msgs", s.zero_copy_msgs);
         self.set_meta("comm_wire_msgs", s.wire_msgs);
         self.set_meta("comm_wait_s", format!("{:.6}", s.wait_time_s));
+        self.set_meta("comm_pool_acquires", s.pool.acquires);
+        self.set_meta("comm_pool_hits", s.pool.hits);
+        self.set_meta("comm_pool_misses", s.pool.misses);
+        self.set_meta("comm_pool_returns", s.pool.returns);
+        self.set_meta("comm_pool_evictions", s.pool.evictions);
+        self.set_meta("comm_pool_pooled_bytes", s.pool.pooled_bytes);
     }
 
     /// Surface a rank's scratch-arena counters as run metadata
@@ -215,11 +223,25 @@ mod tests {
             irecvs_posted: 5,
             max_in_flight: 3,
             wait_time_s: 0.25,
+            pool: crate::comm::CommPoolStats {
+                acquires: 9,
+                hits: 6,
+                misses: 3,
+                returns: 5,
+                evictions: 1,
+                pooled_bytes: 2048,
+            },
             ..CommStats::default()
         };
         log.set_comm_stats(&stats);
         assert_eq!(log.meta["comm_messages_sent"], "7");
         assert_eq!(log.meta["comm_max_in_flight"], "3");
         assert_eq!(log.meta["comm_wait_s"], "0.250000");
+        assert_eq!(log.meta["comm_pool_acquires"], "9");
+        assert_eq!(log.meta["comm_pool_hits"], "6");
+        assert_eq!(log.meta["comm_pool_misses"], "3");
+        assert_eq!(log.meta["comm_pool_returns"], "5");
+        assert_eq!(log.meta["comm_pool_evictions"], "1");
+        assert_eq!(log.meta["comm_pool_pooled_bytes"], "2048");
     }
 }

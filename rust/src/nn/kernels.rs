@@ -69,6 +69,17 @@ pub trait LocalKernels<T: Scalar>: Send + Sync {
         false
     }
 
+    /// Whether these kernels accept arbitrary (slab-shaped) inputs at
+    /// full speed. Gates the conv layer's interior/boundary forward
+    /// overlap, which feeds the kernel input slabs whose shapes vary per
+    /// rank and per call: shape-agnostic backends (the native kernels,
+    /// and by default any third backend) return `true`; backends that
+    /// dispatch AOT artifacts by exact input shape (PJRT) override this
+    /// to `false` so a slab call can never silently demote to a fallback.
+    fn supports_slab_dispatch(&self) -> bool {
+        true
+    }
+
     /// Pooling forward (returns argmax stash for max pooling).
     fn pool2d_forward(&self, x: &Tensor<T>, spec: Pool2dSpec) -> Result<(Tensor<T>, Vec<usize>)>;
 

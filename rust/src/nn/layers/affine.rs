@@ -190,6 +190,12 @@ impl<T: Scalar> Layer<T> for DistAffine<T> {
             let y = self.kernels.affine_forward(&x_hat, w, bias)?;
             if train {
                 st.saved = vec![x_hat];
+            } else if !self.px.contains(rank) {
+                // Pure-destination members received an arena-backed x̂
+                // replica from the broadcast; evaluation forwards return
+                // it here (training returns it in `backward`). A source
+                // member's x̂ is its own input tensor, dropped as before.
+                crate::memory::scratch_give(x_hat.into_vec());
             }
             Some(y)
         } else {
@@ -213,12 +219,23 @@ impl<T: Scalar> Layer<T> for DistAffine<T> {
         let dx_partial = if self.pw.contains(rank) {
             let dy_hat = dy_hat
                 .ok_or_else(|| Error::Primitive(format!("{}: δŷ missing on grid", self.name)))?;
-            let x_hat = &st.saved[0];
+            let x_hat = st.saved.pop().expect("train forward stashed x̂");
             let w = &st.params[0];
-            let (dx_hat, dw, db) = self.kernels.affine_backward(x_hat, w, &dy_hat)?;
+            let (dx_hat, dw, db) = self.kernels.affine_backward(&x_hat, w, &dy_hat)?;
             st.grads[0].add_assign(&dw)?;
             if self.bias_cell(rank).is_some() {
                 st.grads[1].add_assign(&db)?;
+            }
+            // Arena-backed broadcast replicas go home once consumed: the
+            // stashed x̂ on pure-destination members of the x broadcast,
+            // and δŷ on pure-destination members of the δy broadcast (the
+            // sum-reduce adjoint). Members that seeded those broadcasts
+            // got their own tensors back and drop them as before.
+            if !self.px.contains(rank) {
+                crate::memory::scratch_give(x_hat.into_vec());
+            }
+            if !self.py.contains(rank) {
+                crate::memory::scratch_give(dy_hat.into_vec());
             }
             st.clear_saved();
             Some(dx_hat)

@@ -311,6 +311,18 @@ impl<T: Scalar> DistConv2d<T> {
         Ok(())
     }
 
+    /// Copy a parameter tensor into an arena-backed staging replica: the
+    /// broadcast seed. The root gets the same buffer back as its ŵ/b̂
+    /// replica (and non-root members receive arena-backed copies from the
+    /// broadcast), so *every* grid rank returns its replicas via
+    /// [`crate::memory::scratch_give`] once consumed — the parameter
+    /// clone that used to feed the root's broadcast each step is gone.
+    fn stage_param(t: &Tensor<T>) -> Result<Tensor<T>> {
+        let mut buf = crate::memory::scratch_take_dirty::<T>(t.numel());
+        buf.copy_from_slice(t.data());
+        Tensor::from_vec(t.shape(), buf)
+    }
+
     /// Generate the deterministic *global* parameters for `seed` (uniform
     /// Kaiming-style bound, as PyTorch's Conv2d default).
     fn global_params(&self, seed: u64) -> (Tensor<T>, Tensor<T>) {
@@ -364,8 +376,12 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
         train: bool,
     ) -> Result<Option<Tensor<T>>> {
         let rank = comm.rank();
-        let w_seed = (rank == self.root).then(|| st.params[0].clone());
-        let b_seed = (rank == self.root).then(|| st.params[1].clone());
+        let w_seed = (rank == self.root)
+            .then(|| Self::stage_param(&st.params[0]))
+            .transpose()?;
+        let b_seed = (rank == self.root)
+            .then(|| Self::stage_param(&st.params[1]))
+            .transpose()?;
         let Some(coords) = self.grid.coords_of(rank) else {
             // Off-grid ranks only participate in the parameter broadcasts.
             self.w_bcast.forward(comm, w_seed)?;
@@ -407,11 +423,12 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
             halos[3].out_len,
         ];
         let mut partial: Option<(usize, usize, usize, Tensor<T>)> = None;
-        // The PJRT backend dispatches AOT artifacts by exact input shape;
-        // slab shapes would never match one, silently demoting every call
-        // to the native fallback — so overlap compute only on backends
-        // whose kernels are shape-agnostic.
-        let slabs_ok = self.kernels.backend_name() != "pjrt";
+        // Overlap compute only on backends whose kernels accept slab
+        // shapes at full speed — a capability the backend declares, not a
+        // name test (a renamed or third shape-exact backend would have
+        // silently taken the slab path and demoted every call to its
+        // fallback).
+        let slabs_ok = self.kernels.supports_slab_dispatch();
         if let (true, Some(d)) = (slabs_ok, self.exchange.split_dim()) {
             let (stride, ext) = self.dim_spec(d);
             let (o_lo, o_hi) = Self::interior_out_range(&halos[d], stride, ext);
@@ -471,13 +488,19 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
             }
         };
         // The exchange staging buffer goes back to the arena for the next
-        // micro-batch.
+        // micro-batch, and so does the b̂ replica (consumed by the kernel
+        // calls above; it is never stashed). The ŵ replica survives only
+        // as the backward stash — evaluation forwards return it here too,
+        // so forward-only loops leak nothing through the overlap branch.
         crate::memory::scratch_give(buf.into_vec());
+        crate::memory::scratch_give(b_hat.into_vec());
         if train {
             st.saved = vec![
                 x_hat.expect("train forward materialises the compute buffer"),
                 w_hat,
             ];
+        } else {
+            crate::memory::scratch_give(w_hat.into_vec());
         }
         Ok(Some(y))
     }
@@ -532,9 +555,11 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
             self.reduce_params(st, comm, rank, Some(dw), Some(db))?;
             self.exchange.adjoint_finish(comm, inflight)?
         };
-        // The arena-staged activation stash has served its purpose (the
-        // broadcast replica ŵ is comm-owned and falls out of scope).
+        // Both stashes go home: the arena-staged activation, and the ŵ
+        // replica (arena-backed on every grid rank — the root staged its
+        // seed, the others received a broadcast copy).
         crate::memory::scratch_give(x_hat.into_vec());
+        crate::memory::scratch_give(w_hat.into_vec());
         let bulk = self.exchange.bulk_region(&coords);
         let dx = dbuf.extract_region(&bulk)?;
         crate::memory::scratch_give(dbuf.into_vec());

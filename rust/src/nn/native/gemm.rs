@@ -450,20 +450,19 @@ mod pool {
     static JOBS: AtomicUsize = AtomicUsize::new(0);
     static TASKS: AtomicUsize = AtomicUsize::new(0);
 
-    /// Parse a `PALLAS_GEMM_THREADS` value: total worker count including
-    /// the caller; absence, garbage, or zero fall back to hardware
+    /// Parse a `PALLAS_GEMM_THREADS` value through the shared
+    /// [`crate::util::env`] parser: total worker count including the
+    /// caller; absence, garbage (warned), or zero fall back to hardware
     /// parallelism capped at `MAX_THREADS`.
     fn configured_threads() -> usize {
-        std::env::var(super::GEMM_THREADS_ENV)
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .filter(|&t| t > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism()
-                    .map(|v| v.get())
-                    .unwrap_or(1)
-                    .min(super::MAX_THREADS)
-            })
+        use crate::util::env::{read_u64, EnvNum};
+        match read_u64(super::GEMM_THREADS_ENV) {
+            EnvNum::Value(t) if t > 0 => t as usize,
+            _ => std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(1)
+                .min(super::MAX_THREADS),
+        }
     }
 
     fn get() -> &'static Arc<GemmPool> {

@@ -67,8 +67,10 @@ impl Repartition {
         let mut local_piece: Option<(crate::tensor::Region, Tensor<T>)> = None;
 
         // Phase 1: post a send for every overlap of my source region with
-        // a remote destination region; each extracted piece is moved into
-        // its message (zero-copy, move semantics).
+        // a remote destination region. Pieces are extracted straight into
+        // registered staging buffers from this rank's pool (the receiving
+        // assembly returns them); the unpooled fallback moves a freshly
+        // extracted piece as before.
         if let Some(src_region) = &my_src {
             let shard = x
                 .as_ref()
@@ -79,10 +81,15 @@ impl Repartition {
                     continue;
                 }
                 let local = overlap.relative_to(&src_region.start);
-                let piece = shard.extract_region(&local)?;
                 if dst_rank == rank {
-                    local_piece = Some((overlap, piece));
+                    local_piece = Some((overlap, shard.extract_region(&local)?));
+                } else if comm.pool_on() {
+                    let mut stage = comm.pool_take::<T>(crate::tensor::numel(&local.shape));
+                    shard.extract_region_to_slice(&local, &mut stage)?;
+                    let req = comm.isend_pooled(dst_rank, tag, stage)?;
+                    comm.wait_send(req)?;
                 } else {
+                    let piece = shard.extract_region(&local)?;
                     let req = comm.isend_vec(dst_rank, tag, piece.into_vec())?;
                     comm.wait_send(req)?;
                 }
@@ -117,15 +124,12 @@ impl Repartition {
                 }
             }
             while !reqs.is_empty() {
-                let (idx, data) = comm.wait_any(&mut reqs)?;
+                let (idx, data) = comm.wait_any_payload(&mut reqs)?;
                 let overlap = regions.remove(idx);
-                let piece = Tensor::from_vec(&overlap.shape, data)?;
                 let local = overlap.relative_to(&dst_region.start);
-                out.copy_region_from(
-                    &piece,
-                    &crate::tensor::Region::full(&overlap.shape),
-                    &local.start,
-                )?;
+                // Unpack in arrival order straight out of the payload; the
+                // drop recycles a pooled staging buffer to its sender.
+                out.copy_region_from_slice(&local, data.as_slice())?;
             }
             return Ok(Some(out));
         }

@@ -14,18 +14,64 @@
 //! these sum-reduces while its δx halo-adjoint messages are in flight
 //! (the [`crate::primitives::HaloExchange`] `adjoint_start`/`adjoint_finish`
 //! split), so the reduction tree's adds overlap the point-to-point
-//! traffic. Unlike the halo exchange, the reduction's message buffers are
-//! **not** arena-staged: the tree's buffer flow is one-way (leaves →
-//! root), so returning them to a per-rank pool would grow the root-side
-//! arenas without bound instead of closing a reuse cycle.
+//! traffic.
+//!
+//! Both trees draw their message payloads from the sender's registered
+//! [`crate::comm`] buffer pool. The tree's buffer flow is one-way (root →
+//! leaves, or leaves → root), which is exactly why the per-rank scratch
+//! arenas could never recycle it — the receiver's arena would grow without
+//! bound while the sender's re-allocated every step. Under the pool the
+//! *receiver* consumes the payload in place and its drop returns the
+//! buffer to the *sender's* pool slot: the downward broadcast stages one
+//! registered copy at the root (fanned out by `Arc`, returned by the last
+//! tree member to drop it), each upward sum-reduce hop stages the shipped
+//! partial in the child's own slot, and steady-state steps perform zero
+//! pool misses. Pure-destination members hand the caller an arena-backed
+//! replica — **uniformly**, pool on or off, so the ownership contract
+//! never depends on a runtime toggle: return it via
+//! [`crate::memory::scratch_give`] once consumed (the conv/affine layers
+//! do). Generic callers ([`AllReduce`], the coherence harness) may simply
+//! drop it — that is correct, the replica is just deallocated and the
+//! next take counts as a fresh arena allocation. A member that seeded its
+//! group gets its own seed tensor back. With the pool disabled
+//! ([`Comm::set_comm_pool`]) the tree *messages* fall back to the
+//! move-semantics unpooled paths, bitwise identically (destination
+//! outputs still pay the replica copy — the price of the uniform
+//! contract, visible in the pooled-vs-unpooled bench baseline).
 
 use super::tree_schedule;
 use crate::adjoint::DistLinearOp;
-use crate::comm::Comm;
+use crate::comm::{Comm, Payload, PooledBody};
 use crate::error::{Error, Result};
 use crate::partition::{broadcast_groups, BroadcastGroup, Partition};
 use crate::tensor::{Scalar, Tensor};
 use std::sync::Arc;
+
+/// The buffer a tree member holds while walking the forward schedule:
+/// either a plain shared buffer (unpooled path) or a registered pooled
+/// payload whose last holder returns it to the staging rank's pool.
+enum TreeBuf<T: Scalar> {
+    Shared(Arc<Vec<T>>),
+    Pooled(Arc<PooledBody<T>>),
+}
+
+impl<T: Scalar> TreeBuf<T> {
+    fn as_slice(&self) -> &[T] {
+        match self {
+            TreeBuf::Shared(v) => v.as_slice(),
+            TreeBuf::Pooled(p) => p.as_slice(),
+        }
+    }
+
+    /// Forward this buffer down one tree edge (`Arc` clone, never data).
+    fn send(&self, comm: &mut Comm, dst: usize, tag: u64) -> Result<()> {
+        let req = match self {
+            TreeBuf::Shared(v) => comm.isend_shared(dst, tag, v)?,
+            TreeBuf::Pooled(p) => comm.isend_pooled_body(dst, tag, p)?,
+        };
+        comm.wait_send(req)
+    }
+}
 
 /// Generalized partition broadcast B_{src→dst}.
 #[derive(Debug, Clone)]
@@ -133,29 +179,63 @@ impl Broadcast {
                 posted = Some(comm.irecv::<T>(members[from], tag)?);
             }
         }
-        let mut held: Option<Arc<Vec<T>>> = if me == 0 {
-            seed.map(|t| Arc::new(t.into_vec()))
-        } else {
-            None
-        };
+        // The root stages one registered copy of its seed for the tree
+        // (the pool's recycle cycle) and keeps the seed itself as its own
+        // replica; without the pool — or with no tree edges to walk — the
+        // seed moves straight into the shared buffer as before.
+        let mut kept_seed: Option<Vec<T>> = None;
+        let mut held: Option<TreeBuf<T>> = None;
+        if me == 0 {
+            if let Some(t) = seed {
+                let v = t.into_vec();
+                if members.len() == 1 {
+                    kept_seed = Some(v);
+                } else if comm.pool_on() {
+                    held = Some(TreeBuf::Pooled(comm.pool_stage(&v)));
+                    kept_seed = Some(v);
+                } else {
+                    held = Some(TreeBuf::Shared(Arc::new(v)));
+                }
+            }
+        }
         for (from, to) in schedule {
             if from == me {
                 let buf = held.as_ref().ok_or_else(|| {
                     Error::Primitive("broadcast: forwarding before receive".into())
                 })?;
-                let req = comm.isend_shared(members[to], tag, buf)?;
-                comm.wait_send(req)?;
+                buf.send(comm, members[to], tag)?;
             } else if to == me {
                 let req = posted.take().expect("receive posted before edge walk");
-                held = Some(Arc::new(comm.wait(req)?));
+                held = Some(match comm.wait_payload(req)? {
+                    Payload::Owned(v) => TreeBuf::Shared(Arc::new(v)),
+                    Payload::Pooled(p) => TreeBuf::Pooled(p),
+                });
             }
         }
-        match held {
-            Some(arc) => {
-                let data = Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone());
-                Ok(Some(Tensor::from_vec(&self.shapes[gi], data)?))
+        if me == 0 {
+            let data = match (kept_seed, held) {
+                (Some(v), _) => v,
+                (None, Some(TreeBuf::Shared(arc))) => {
+                    Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone())
+                }
+                (None, Some(TreeBuf::Pooled(p))) => p.as_slice().to_vec(),
+                (None, None) => return Ok(None),
+            };
+            Ok(Some(Tensor::from_vec(&self.shapes[gi], data)?))
+        } else {
+            match held {
+                Some(h) => {
+                    // Pure-destination members get an arena-backed replica
+                    // (the layers give it back after use); dropping `h`
+                    // recycles the registered buffer to the staging rank.
+                    let slice = h.as_slice();
+                    let mut out = crate::memory::scratch_take_dirty::<T>(slice.len());
+                    out.copy_from_slice(slice);
+                    drop(h);
+                    Ok(Some(Tensor::from_vec(&self.shapes[gi], out)?))
+                }
+                None => Ok(None),
             }
-            None => Ok(None),
         }
     }
 
@@ -196,18 +276,36 @@ impl Broadcast {
         for (from, to) in reversed {
             if to == me {
                 // Final action for this member: the accumulated cotangent
-                // moves to the parent (zero-copy).
+                // goes to the parent — staged in a registered buffer from
+                // this member's own pool (the parent's drop returns it
+                // here), or moved outright on the unpooled path.
                 let t = acc
                     .take()
                     .ok_or_else(|| Error::Primitive("sum-reduce: accumulator consumed".into()))?;
-                let req = comm.isend_vec(members[from], tag, t.into_vec())?;
+                let req = if comm.pool_on() {
+                    comm.isend_staged(members[from], tag, t.data())?
+                } else {
+                    comm.isend_vec(members[from], tag, t.into_vec())?
+                };
                 comm.wait_send(req)?;
             } else if from == me {
                 let req = posted.pop_front().expect("child receive posted");
-                let data = comm.wait(req)?;
-                acc.as_mut()
-                    .ok_or_else(|| Error::Primitive("sum-reduce: accumulator consumed".into()))?
-                    .add_assign(&Tensor::from_vec(&self.shapes[gi], data)?)?;
+                let data = comm.wait_payload(req)?;
+                let acc_t = acc
+                    .as_mut()
+                    .ok_or_else(|| Error::Primitive("sum-reduce: accumulator consumed".into()))?;
+                if data.len() != acc_t.numel() {
+                    return Err(Error::Primitive(format!(
+                        "sum-reduce: contribution length {} vs accumulator {}",
+                        data.len(),
+                        acc_t.numel()
+                    )));
+                }
+                // Add straight out of the (possibly registered) payload;
+                // its drop recycles the buffer to the child that staged it.
+                for (d, &s) in acc_t.data_mut().iter_mut().zip(data.as_slice().iter()) {
+                    *d += s;
+                }
             }
         }
         if me == 0 {

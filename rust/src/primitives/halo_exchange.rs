@@ -22,17 +22,18 @@
 //! halo-adjoint messages are in flight — the forward/adjoint symmetry of
 //! Eq. 12–13 extended to the schedule itself.
 //!
-//! Every cross-section shipped by either direction is staged in a buffer
-//! borrowed from the per-rank [`crate::memory`] scratch arena and given
-//! back by the *receiver* once unpacked. Over one forward+adjoint step
-//! each rank sends and receives the same multiset of cross-section sizes
-//! (A ships width `w` to B exactly when B ships width `w` back in the
-//! adjoint), so the staging buffers circulate between the rank arenas and
-//! steady-state training steps allocate none of them. Forward-*only*
-//! loops (inference) make the circulation one-way, so on asymmetric
-//! geometries a receive-heavy rank parks buffers it never re-sends; the
-//! arena's default byte cap bounds that growth (the parked excess is
-//! evicted once the cap is hit).
+//! Every cross-section shipped by either direction is staged in a
+//! registered buffer drawn from the **sender's** [`crate::comm`] buffer
+//! pool; the receiver unpacks in place and its completion returns the
+//! buffer to the sender's pool slot. That closes the reuse cycle in every
+//! schedule — including forward-*only* loops (inference), whose one-way
+//! circulation used to strand scratch-staged buffers on receive-heavy
+//! ranks (bounded only by the arena cap): with the pool, the rank that
+//! staged a cross-section always gets it back, so steady-state steps of
+//! either kind allocate none of them. With the pool disabled the staging
+//! falls back to the per-rank scratch arenas (the sender takes, the
+//! receiver gives back into its own arena), which balances only when the
+//! adjoint runs the reverse traffic.
 //!
 //! [`TrimPad`] is the "padding and unpadding shim" of §4: a local linear
 //! restriction/extension that drops the *unused* owned entries (Figs.
@@ -40,7 +41,7 @@
 //! local sliding-kernel operator is applied.
 
 use crate::adjoint::DistLinearOp;
-use crate::comm::{Comm, RecvRequest};
+use crate::comm::{Comm, Payload, RecvRequest, SendRequest};
 use crate::error::{Error, Result};
 use crate::halo::{DimHalo, HaloGeometry};
 use crate::partition::Partition;
@@ -105,15 +106,26 @@ impl<T: Scalar> HaloAdjointInFlight<T> {
     }
 }
 
-/// Extract `region` of `buf` into an arena-staged tensor (a dirty take —
-/// the copy overwrites every element the consumer reads).
-fn extract_staged<T: Scalar>(buf: &Tensor<T>, region: &Region) -> Result<Tensor<T>> {
-    let mut piece = Tensor::from_vec(
-        &region.shape,
-        crate::memory::scratch_take_dirty::<T>(crate::tensor::numel(&region.shape)),
-    )?;
-    piece.copy_region_from(buf, region, &vec![0; region.rank()])?;
-    Ok(piece)
+/// Stage `region` of `buf` in a registered buffer from this rank's comm
+/// pool (per-rank scratch when the pool is disabled — the legacy
+/// circulation) and post its send to `dst`.
+fn send_staged<T: Scalar>(
+    comm: &mut Comm,
+    buf: &Tensor<T>,
+    region: &Region,
+    dst: usize,
+    tag: u64,
+) -> Result<SendRequest> {
+    let n = crate::tensor::numel(&region.shape);
+    if comm.pool_on() {
+        let mut stage = comm.pool_take::<T>(n);
+        buf.extract_region_to_slice(region, &mut stage)?;
+        comm.isend_pooled(dst, tag, stage)
+    } else {
+        let mut stage = crate::memory::scratch_take_dirty::<T>(n);
+        buf.extract_region_to_slice(region, &mut stage)?;
+        comm.isend_vec(dst, tag, stage)
+    }
 }
 
 /// In-place halo exchange over a cartesian partition.
@@ -238,19 +250,18 @@ impl HaloExchange {
         let tag_fwd_l = self.tag + (d as u64) * 8; // bulk -> left neighbour
         let tag_fwd_r = self.tag + (d as u64) * 8 + 1; // bulk -> right neighbour
 
-        // Post both sends; each packed edge is staged in an arena-backed
-        // buffer that moves into the message (the receiver gives it back).
+        // Post both sends; each packed edge is staged in a registered
+        // pool buffer that the receiver's completion returns here.
         if let Some((nbr, send_w, _)) = left {
             if send_w > 0 {
-                let piece = extract_staged(buf, &xsect(bulk_lo, send_w))?;
-                let req = comm.isend_vec(nbr, tag_fwd_l, piece.into_vec())?;
+                let req = send_staged(comm, buf, &xsect(bulk_lo, send_w), nbr, tag_fwd_l)?;
                 comm.wait_send(req)?;
             }
         }
         if let Some((nbr, send_w, _)) = right {
             if send_w > 0 {
-                let piece = extract_staged(buf, &xsect(bulk_hi - send_w, send_w))?;
-                let req = comm.isend_vec(nbr, tag_fwd_r, piece.into_vec())?;
+                let req =
+                    send_staged(comm, buf, &xsect(bulk_hi - send_w, send_w), nbr, tag_fwd_r)?;
                 comm.wait_send(req)?;
             }
         }
@@ -270,8 +281,10 @@ impl HaloExchange {
     }
 
     /// Forward exchange, completion phase: wait each pending receive and
-    /// unpack it into its halo region (C_U), returning the message's
-    /// staging buffer to this rank's arena.
+    /// unpack it into its halo region (C_U) straight out of the payload.
+    /// Dropping the payload recycles a registered staging buffer to the
+    /// sender's pool; an owned payload (pool off / wire format) is given
+    /// to this rank's arena as before.
     fn complete_dim_forward<T: Scalar>(
         &self,
         comm: &mut Comm,
@@ -279,10 +292,11 @@ impl HaloExchange {
         pending: Vec<(RecvRequest<T>, Region)>,
     ) -> Result<()> {
         for (req, region) in pending {
-            let data = comm.wait(req)?;
-            let piece = Tensor::from_vec(&region.shape, data)?;
-            buf.copy_region_from(&piece, &Region::full(&region.shape), &region.start)?;
-            crate::memory::scratch_give(piece.into_vec());
+            let data = comm.wait_payload(req)?;
+            buf.copy_region_from_slice(&region, data.as_slice())?;
+            if let Payload::Owned(v) = data {
+                crate::memory::scratch_give(v);
+            }
         }
         Ok(())
     }
@@ -315,8 +329,7 @@ impl HaloExchange {
         if let Some((nbr, _, w)) = left {
             if w > 0 {
                 let region = xsect(0, w);
-                let piece = extract_staged(buf, &region)?;
-                let req = comm.isend_vec(nbr, tag_adj_l, piece.into_vec())?;
+                let req = send_staged(comm, buf, &region, nbr, tag_adj_l)?;
                 comm.wait_send(req)?;
                 buf.fill_region(&region, T::ZERO)?;
             }
@@ -324,8 +337,7 @@ impl HaloExchange {
         if let Some((nbr, _, w)) = right {
             if w > 0 {
                 let region = xsect(bulk_hi, w);
-                let piece = extract_staged(buf, &region)?;
-                let req = comm.isend_vec(nbr, tag_adj_r, piece.into_vec())?;
+                let req = send_staged(comm, buf, &region, nbr, tag_adj_r)?;
                 comm.wait_send(req)?;
                 buf.fill_region(&region, T::ZERO)?;
             }
@@ -348,8 +360,9 @@ impl HaloExchange {
     }
 
     /// Adjoint exchange, completion phase: wait each pending receive and
-    /// add the returned cotangent into its bulk edge, recycling the
-    /// message's staging buffer.
+    /// add the returned cotangent into its bulk edge straight out of the
+    /// payload, whose drop recycles the registered staging buffer to its
+    /// sender (arena fallback as in the forward completion).
     fn complete_dim_adjoint<T: Scalar>(
         &self,
         comm: &mut Comm,
@@ -357,10 +370,11 @@ impl HaloExchange {
         pending: Vec<(RecvRequest<T>, Region)>,
     ) -> Result<()> {
         for (req, region) in pending {
-            let data = comm.wait(req)?;
-            let piece = Tensor::from_vec(&region.shape, data)?;
-            buf.add_region_from(&piece, &Region::full(&region.shape), &region.start)?;
-            crate::memory::scratch_give(piece.into_vec());
+            let data = comm.wait_payload(req)?;
+            buf.add_region_from_slice(&region, data.as_slice())?;
+            if let Payload::Owned(v) = data {
+                crate::memory::scratch_give(v);
+            }
         }
         Ok(())
     }

@@ -26,6 +26,12 @@
 //! the typed zero-copy path, and the halo exchange additionally offers a
 //! [`HaloExchange::start`]/[`HaloExchange::finish`] split so layers can
 //! compute on the halo-independent region while messages are in flight.
+//! Message payloads are staged in the sender's **registered buffer pool**
+//! ([`crate::comm`]'s `CommPool` machinery): receivers consume them in
+//! place and the completion returns each buffer to the pool slot it was
+//! drawn from, so even one-way flows (the broadcast/sum-reduce trees,
+//! scatter/gather, forward-only halo circulation) stop allocating after
+//! warm-up.
 
 mod alltoall;
 mod broadcast;

@@ -10,6 +10,15 @@
 //!
 //! Used by the coordinator to distribute input batches onto a
 //! [`TensorDecomposition`] and to collect outputs/losses.
+//!
+//! Message payloads are staged in the sender's registered
+//! [`crate::comm`] buffer pool: the root extracts each scatter shard
+//! straight into a pooled buffer (no per-shard allocation), gather's
+//! shard owners stage their upward copies likewise, and the consuming
+//! side unpacks in place and drops the payload — the drop returns the
+//! buffer to the rank that staged it, so the one-way flows recycle
+//! instead of allocating. The unpooled fallback keeps the original move
+//! semantics.
 
 use crate::adjoint::DistLinearOp;
 use crate::comm::Comm;
@@ -47,10 +56,17 @@ impl Scatter {
             let x = x.ok_or_else(|| Error::Primitive("scatter: root tensor missing".into()))?;
             crate::tensor::check_same(x.shape(), decomp.global_shape(), "scatter input")?;
             for (cell, dst, region) in decomp.cells() {
-                let shard = x.extract_region(&region)?;
                 if dst == rank {
-                    kept = Some(shard);
+                    kept = Some(x.extract_region(&region)?);
+                } else if comm.pool_on() {
+                    // Extract straight into a registered staging buffer;
+                    // the receiver's completion returns it here.
+                    let mut stage = comm.pool_take::<T>(crate::tensor::numel(&region.shape));
+                    x.extract_region_to_slice(&region, &mut stage)?;
+                    let req = comm.isend_pooled(dst, tag + cell as u64, stage)?;
+                    comm.wait_send(req)?;
                 } else {
+                    let shard = x.extract_region(&region)?;
                     let req = comm.isend_vec(dst, tag + cell as u64, shard.into_vec())?;
                     comm.wait_send(req)?;
                 }
@@ -95,7 +111,14 @@ impl Scatter {
                     .find(|(_, r, _)| *r == rank)
                     .map(|(c, _, _)| c)
                     .expect("rank in decomposition");
-                let req = comm.isend_vec(root, tag + 1000 + cell as u64, shard.into_vec())?;
+                let req = if comm.pool_on() {
+                    // Stage the upward copy in this rank's own pool slot;
+                    // the root's assembly drop sends it back for the next
+                    // step.
+                    comm.isend_staged(root, tag + 1000 + cell as u64, shard.data())?
+                } else {
+                    comm.isend_vec(root, tag + 1000 + cell as u64, shard.into_vec())?
+                };
                 comm.wait_send(req)?;
             }
         }
@@ -117,10 +140,11 @@ impl Scatter {
                 }
             }
             while !reqs.is_empty() {
-                let (idx, data) = comm.wait_any(&mut reqs)?;
+                let (idx, data) = comm.wait_any_payload(&mut reqs)?;
                 let region = regions.remove(idx);
-                let shard = Tensor::from_vec(&region.shape, data)?;
-                out.copy_region_from(&shard, &Region::full(&region.shape), &region.start)?;
+                // Unpack in place; dropping the payload recycles a pooled
+                // staging buffer to the shard's owner.
+                out.copy_region_from_slice(&region, data.as_slice())?;
             }
             return Ok(Some(out));
         }

@@ -59,9 +59,11 @@ impl<T: Scalar> DistLinearOp<T> for SendRecv {
         }
         if rank == self.src {
             // Copy semantics: the source keeps its realization, so the
-            // posted send copies the buffer once (no serialization).
+            // posted send copies the buffer once — into a registered
+            // staging buffer from this rank's pool when it is enabled
+            // (the receiver returns it), a fresh one otherwise.
             let x = x.ok_or_else(|| Error::Primitive("sendrecv: source shard missing".into()))?;
-            let req = comm.isend_slice(self.dst, self.tag, x.data())?;
+            let req = comm.isend_staged(self.dst, self.tag, x.data())?;
             comm.wait_send(req)?;
             Ok(Some(x))
         } else if rank == self.dst {
@@ -80,18 +82,33 @@ impl<T: Scalar> DistLinearOp<T> for SendRecv {
         }
         if rank == self.dst {
             let y = y.ok_or_else(|| Error::Primitive("sendrecv*: dst shard missing".into()))?;
-            // Destination buffer deallocated (D_b): the send *moves* the
-            // cotangent — the zero-copy path.
-            let req = comm.isend_vec(self.src, self.tag + 1, y.into_vec())?;
+            // Destination buffer deallocated (D_b): the cotangent ships in
+            // a registered staging buffer (returned by the source) when
+            // the pool is on, or moves outright when it is off.
+            let req = if comm.pool_on() {
+                comm.isend_staged(self.src, self.tag + 1, y.data())?
+            } else {
+                comm.isend_vec(self.src, self.tag + 1, y.into_vec())?
+            };
             comm.wait_send(req)?;
             Ok(None)
         } else if rank == self.src {
             let mut y =
                 y.ok_or_else(|| Error::Primitive("sendrecv*: src shard missing".into()))?;
             let req = comm.irecv::<T>(self.dst, self.tag + 1)?;
-            let incoming = comm.wait(req)?;
-            let inc = Tensor::from_vec(&self.shape, incoming)?;
-            y.add_assign(&inc)?;
+            let incoming = comm.wait_payload(req)?;
+            if incoming.len() != y.numel() {
+                return Err(Error::Primitive(format!(
+                    "sendrecv*: cotangent length {} vs {}",
+                    incoming.len(),
+                    y.numel()
+                )));
+            }
+            // Accumulate straight out of the payload; its drop recycles
+            // the staging buffer to the destination rank.
+            for (d, &s) in y.data_mut().iter_mut().zip(incoming.as_slice().iter()) {
+                *d += s;
+            }
             Ok(Some(y))
         } else {
             Ok(None)

@@ -494,6 +494,16 @@ impl LocalKernels<f32> for PjrtKernels {
     fn backend_name(&self) -> &'static str {
         "pjrt"
     }
+
+    /// AOT artifacts are dispatched by exact input shape; slab-shaped
+    /// inputs would never match one and every overlap-path call would
+    /// silently demote to the native fallback — so the conv layer must
+    /// not feed this backend slabs. A capability, not a name test: a
+    /// renamed or third shape-exact backend inherits the safe answer by
+    /// overriding this too.
+    fn supports_slab_dispatch(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

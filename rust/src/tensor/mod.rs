@@ -230,6 +230,100 @@ impl<T: Scalar> Tensor<T> {
         Ok(())
     }
 
+    /// Copy a contiguous row-major buffer shaped `region.shape` into
+    /// `region` of `self` — the slice-sourced form of
+    /// [`Tensor::copy_region_from`], used to unpack message payloads
+    /// (possibly borrowed from the comm buffer pool) without first
+    /// wrapping them in a tensor.
+    pub fn copy_region_from_slice(&mut self, region: &Region, src: &[T]) -> Result<()> {
+        self.region_op_slice(region, src, |d, s| *d = s)
+    }
+
+    /// Accumulate (`+=`) a contiguous row-major buffer shaped
+    /// `region.shape` into `region` of `self` — the slice-sourced form of
+    /// [`Tensor::add_region_from`] (the adjoint-side unpack).
+    pub fn add_region_from_slice(&mut self, region: &Region, src: &[T]) -> Result<()> {
+        self.region_op_slice(region, src, |d, s| *d += s)
+    }
+
+    fn region_op_slice(
+        &mut self,
+        dst_region: &Region,
+        src: &[T],
+        mut apply: impl FnMut(&mut T, T),
+    ) -> Result<()> {
+        dst_region.check_within(&self.shape, "region_op_slice dst")?;
+        if src.len() != numel(&dst_region.shape) {
+            return Err(Error::Shape(format!(
+                "region payload length {} vs region shape {:?}",
+                src.len(),
+                dst_region.shape
+            )));
+        }
+        if dst_region.is_empty() {
+            return Ok(());
+        }
+        let rank = dst_region.rank();
+        if rank == 0 {
+            apply(&mut self.data[0], src[0]);
+            return Ok(());
+        }
+        let inner = dst_region.shape[rank - 1];
+        let outer_shape = &dst_region.shape[..rank - 1];
+        let dst_strides = strides_for(&self.shape);
+        let mut s_off = 0usize;
+        for_each_index(outer_shape, |outer_idx| {
+            let mut d_off = 0usize;
+            for d in 0..rank - 1 {
+                d_off += (dst_region.start[d] + outer_idx[d]) * dst_strides[d];
+            }
+            d_off += dst_region.start[rank - 1] * dst_strides[rank - 1];
+            let d_run = &mut self.data[d_off..d_off + inner];
+            let s_run = &src[s_off..s_off + inner];
+            for (d, &s) in d_run.iter_mut().zip(s_run.iter()) {
+                apply(d, s);
+            }
+            s_off += inner;
+        });
+        Ok(())
+    }
+
+    /// Extract `region` of `self` into a caller-provided contiguous buffer
+    /// (row-major, `region.shape`-shaped) — the allocation-free form of
+    /// [`Tensor::extract_region`] the comm-pool staging paths use.
+    pub fn extract_region_to_slice(&self, region: &Region, dst: &mut [T]) -> Result<()> {
+        region.check_within(&self.shape, "extract_region_to_slice")?;
+        if dst.len() != numel(&region.shape) {
+            return Err(Error::Shape(format!(
+                "staging buffer length {} vs region shape {:?}",
+                dst.len(),
+                region.shape
+            )));
+        }
+        if region.is_empty() {
+            return Ok(());
+        }
+        let rank = region.rank();
+        if rank == 0 {
+            dst[0] = self.data[0];
+            return Ok(());
+        }
+        let inner = region.shape[rank - 1];
+        let outer_shape = &region.shape[..rank - 1];
+        let src_strides = strides_for(&self.shape);
+        let mut d_off = 0usize;
+        for_each_index(outer_shape, |outer_idx| {
+            let mut s_off = 0usize;
+            for d in 0..rank - 1 {
+                s_off += (region.start[d] + outer_idx[d]) * src_strides[d];
+            }
+            s_off += region.start[rank - 1] * src_strides[rank - 1];
+            dst[d_off..d_off + inner].copy_from_slice(&self.data[s_off..s_off + inner]);
+            d_off += inner;
+        });
+        Ok(())
+    }
+
     /// Extract a region as a new (freshly *allocated*, in the paper's §2
     /// sense) tensor.
     pub fn extract_region(&self, region: &Region) -> Result<Tensor<T>> {
@@ -315,6 +409,35 @@ mod tests {
         dst.add_region_from(&src, &Region::full(&[2, 2]), &[0, 0])
             .unwrap();
         assert_eq!(dst.data(), &[7.0; 4]);
+    }
+
+    #[test]
+    fn slice_region_ops_match_tensor_forms() {
+        // copy/add/extract against a slice must agree with the Tensor-based
+        // region operators on the same data.
+        let src = Tensor::<f64>::iota(&[4, 5]);
+        let region = Region::new(vec![1, 2], vec![2, 3]);
+        // extract_region_to_slice == extract_region
+        let mut buf = vec![0.0; 6];
+        src.extract_region_to_slice(&region, &mut buf).unwrap();
+        assert_eq!(buf, src.extract_region(&region).unwrap().into_vec());
+        // copy_region_from_slice == copy_region_from
+        let mut a = Tensor::<f64>::zeros(&[4, 5]);
+        let mut b = Tensor::<f64>::zeros(&[4, 5]);
+        a.copy_region_from_slice(&region, &buf).unwrap();
+        b.copy_region_from(
+            &Tensor::from_vec(&region.shape, buf.clone()).unwrap(),
+            &Region::full(&region.shape),
+            &region.start,
+        )
+        .unwrap();
+        assert_eq!(a, b);
+        // add_region_from_slice accumulates
+        a.add_region_from_slice(&region, &buf).unwrap();
+        assert_eq!(a.at(&[1, 2]), 2.0 * src.at(&[1, 2]));
+        // length mismatches are rejected
+        assert!(a.copy_region_from_slice(&region, &buf[..5]).is_err());
+        assert!(src.extract_region_to_slice(&region, &mut buf[..5]).is_err());
     }
 
     #[test]

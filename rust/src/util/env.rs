@@ -1,0 +1,94 @@
+//! Unified `PALLAS_*` environment-variable parsing.
+//!
+//! Every tunable in the crate (`PALLAS_GEMM_THREADS`,
+//! `PALLAS_SCRATCH_CAP_BYTES`, `PALLAS_RECV_TIMEOUT_MS`,
+//! `PALLAS_COMM_POOL_CAP_BYTES`) is an unsigned integer read once at
+//! subsystem initialization. Before this module each call site parsed its
+//! variable independently and they had quietly diverged on the edge cases
+//! (trimming, empty strings, overflow). Now everything funnels through
+//! [`parse_u64`]: the raw string is trimmed, an absent variable or an
+//! empty string is [`EnvNum::Unset`], a valid integer is
+//! [`EnvNum::Value`], and anything else — garbage, sign characters,
+//! overflow past `u64::MAX` — is [`EnvNum::Malformed`] and emits a
+//! one-line warning on stderr so a typo'd knob never silently changes
+//! behaviour.
+//!
+//! Zero is deliberately reported as `Value(0)`, not folded into a
+//! default: the call sites give zero its policy meaning (`0` worker
+//! threads and `0` timeout fall back to the default, `0` cap bytes means
+//! *uncapped*).
+
+/// Result of reading a `PALLAS_*` integer environment variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvNum {
+    /// Variable absent, or set to the empty string (after trimming).
+    Unset,
+    /// Parsed value. May be zero — the call site decides what zero means.
+    Value(u64),
+    /// Set but not a valid `u64` (garbage or overflow); a warning was
+    /// printed and the call site should apply its default.
+    Malformed,
+}
+
+/// Parse a raw environment-variable value. `raw = None` means the
+/// variable is absent. Malformed values warn on stderr, naming the
+/// variable, so the fallback is never silent.
+pub fn parse_u64(name: &str, raw: Option<&str>) -> EnvNum {
+    let Some(raw) = raw else {
+        return EnvNum::Unset;
+    };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return EnvNum::Unset;
+    }
+    match trimmed.parse::<u64>() {
+        Ok(v) => EnvNum::Value(v),
+        Err(_) => {
+            eprintln!(
+                "warning: {name}={raw:?} is not a valid unsigned integer; using the default"
+            );
+            EnvNum::Malformed
+        }
+    }
+}
+
+/// Read and parse the environment variable `name`.
+pub fn read_u64(name: &str) -> EnvNum {
+    parse_u64(name, std::env::var(name).ok().as_deref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absent_and_empty_are_unset() {
+        assert_eq!(parse_u64("PALLAS_TEST", None), EnvNum::Unset);
+        assert_eq!(parse_u64("PALLAS_TEST", Some("")), EnvNum::Unset);
+        assert_eq!(parse_u64("PALLAS_TEST", Some("   ")), EnvNum::Unset);
+    }
+
+    #[test]
+    fn valid_values_parse_with_trimming() {
+        assert_eq!(parse_u64("PALLAS_TEST", Some("0")), EnvNum::Value(0));
+        assert_eq!(parse_u64("PALLAS_TEST", Some("42")), EnvNum::Value(42));
+        assert_eq!(parse_u64("PALLAS_TEST", Some(" 1500 ")), EnvNum::Value(1500));
+        assert_eq!(
+            parse_u64("PALLAS_TEST", Some("18446744073709551615")),
+            EnvNum::Value(u64::MAX)
+        );
+    }
+
+    #[test]
+    fn garbage_and_overflow_are_malformed() {
+        assert_eq!(parse_u64("PALLAS_TEST", Some("nope")), EnvNum::Malformed);
+        assert_eq!(parse_u64("PALLAS_TEST", Some("-1")), EnvNum::Malformed);
+        assert_eq!(parse_u64("PALLAS_TEST", Some("1.5")), EnvNum::Malformed);
+        assert_eq!(parse_u64("PALLAS_TEST", Some("64M")), EnvNum::Malformed);
+        // one past u64::MAX
+        assert_eq!(
+            parse_u64("PALLAS_TEST", Some("18446744073709551616")),
+            EnvNum::Malformed
+        );
+    }
+}

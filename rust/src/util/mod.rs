@@ -5,8 +5,10 @@
 //! "build every substrate" reproduction, this module provides the small
 //! pieces the system needs: a deterministic PRNG ([`rng`]), a minimal JSON
 //! parser/writer ([`json`]) for artifact manifests / configs / metric
-//! dumps, and a timing helper ([`timer`]).
+//! dumps, a timing helper ([`timer`]), and the shared `PALLAS_*`
+//! environment-variable parser ([`env`]) every tunable reads through.
 
+pub mod env;
 pub mod json;
 pub mod rng;
 pub mod timer;

@@ -12,7 +12,7 @@
 
 use distdl::autograd::Layer;
 use distdl::comm::Cluster;
-use distdl::memory::scratch_stats;
+use distdl::memory::{scratch_set_cap_bytes, scratch_stats};
 use distdl::nn::layers::{adjoint_overlap, set_adjoint_overlap, Conv2dConfig, DistConv2d};
 use distdl::nn::NativeKernels;
 use distdl::tensor::{numel, Tensor};
@@ -134,9 +134,14 @@ fn overlapped_backward_reuses_arena_in_steady_state() {
     )
     .unwrap();
     let deltas = Cluster::run(4, |comm| {
+        // Pin the caps so the worst-case-eviction CI leg (both cap env
+        // vars set to 1) exercises correctness elsewhere without
+        // inverting this test's reuse assertions.
+        scratch_set_cap_bytes::<f64>(None);
+        comm.set_pool_cap_bytes(None);
         let rank = comm.rank();
         let in_shape = layer.local_in_shape(rank).expect("on grid");
-        let mut step = |seed: u64| -> distdl::error::Result<()> {
+        let mut step = |comm: &mut distdl::comm::Comm, seed: u64| -> distdl::error::Result<()> {
             let mut st = layer.init(rank, 3)?;
             let mut rng = SplitMix64::new(seed ^ rank as u64);
             let x = rand_t(&in_shape, &mut rng);
@@ -147,20 +152,89 @@ fn overlapped_backward_reuses_arena_in_steady_state() {
             layer.backward(&mut st, comm, Some(dy))?;
             Ok(())
         };
-        // warm-up: the rank arena learns the working set, including the
-        // circulating halo message pieces
-        step(1)?;
-        step(2)?;
-        let base = scratch_stats::<f64>().allocations;
-        for s in 3..8 {
-            step(s)?;
+        // warm-up: the rank arena and comm pool learn the working set,
+        // including the circulating registered message buffers (a barrier
+        // per step lets in-flight payloads land back home)
+        for s in 1..4 {
+            step(comm, s)?;
+            comm.barrier();
         }
-        Ok(scratch_stats::<f64>().allocations - base)
+        let base = scratch_stats::<f64>().allocations;
+        let pool_base = comm.pool_stats().misses;
+        for s in 4..9 {
+            step(comm, s)?;
+            comm.barrier();
+        }
+        let scratch_delta = scratch_stats::<f64>().allocations - base;
+        let pool_delta = comm.pool_stats().misses - pool_base;
+        Ok((scratch_delta, pool_delta))
     })
     .unwrap();
     assert_eq!(
         deltas,
-        vec![0, 0, 0, 0],
-        "overlapped backward allocated scratch in steady state"
+        vec![(0, 0); 4],
+        "overlapped backward allocated scratch or pool buffers in steady state"
+    );
+}
+
+#[test]
+fn eval_forward_overlap_path_reuses_arena_and_pool() {
+    // Forward-only loops (inference) make the halo circulation one-way:
+    // before the registered comm pool, send-heavy ranks minted a fresh
+    // staging buffer per step (the receiver's arena could never hand it
+    // back), and the overlap branch's ŵ/b̂ replicas were dropped instead
+    // of returned. Steady-state eval steps must now allocate nothing —
+    // zero scratch-arena misses AND zero comm-pool misses on every rank.
+    let _guard = OVERLAP_LOCK.lock().unwrap();
+    set_adjoint_overlap(true);
+    // Asymmetric geometry (unpadded 5x3 kernel over odd extents) so the
+    // halo widths differ per rank — the shape of the historical leak.
+    let layer = DistConv2d::<f64>::new(
+        "c",
+        Conv2dConfig {
+            global_in: [2, 2, 13, 11],
+            out_channels: 3,
+            kernel: (5, 3),
+            stride: (1, 1),
+            padding: (0, 1),
+            grid: (2, 2),
+            ranks: vec![0, 1, 2, 3],
+            tag: 35_000,
+        },
+        Arc::new(NativeKernels),
+    )
+    .unwrap();
+    let deltas = Cluster::run(4, |comm| {
+        scratch_set_cap_bytes::<f64>(None);
+        comm.set_pool_cap_bytes(None);
+        let rank = comm.rank();
+        let in_shape = layer.local_in_shape(rank).expect("on grid");
+        let mut st = layer.init(rank, 5)?;
+        let mut step = |comm: &mut distdl::comm::Comm, seed: u64| -> distdl::error::Result<()> {
+            let mut rng = SplitMix64::new(seed ^ ((rank as u64) << 3));
+            let x = rand_t(&in_shape, &mut rng);
+            let y = layer.forward(&mut st, comm, Some(x), false)?;
+            assert!(y.is_some(), "grid rank lost its eval output");
+            Ok(())
+        };
+        for s in 1..5 {
+            step(comm, s)?;
+            comm.barrier();
+        }
+        let base = scratch_stats::<f64>().allocations;
+        let pool_base = comm.pool_stats().misses;
+        for s in 5..11 {
+            step(comm, s)?;
+            comm.barrier();
+        }
+        let scratch_delta = scratch_stats::<f64>().allocations - base;
+        let pool_delta = comm.pool_stats().misses - pool_base;
+        Ok((scratch_delta, pool_delta))
+    })
+    .unwrap();
+    assert_eq!(
+        deltas,
+        vec![(0, 0); 4],
+        "eval-mode forwards through the overlap path leaked buffers"
     );
 }

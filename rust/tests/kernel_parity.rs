@@ -20,7 +20,7 @@ use distdl::adjoint::{adjoint_residual, DistLinearOp};
 use distdl::autograd::{Layer, LayerState};
 use distdl::comm::{Cluster, Comm};
 use distdl::error::Result;
-use distdl::memory::scratch_stats;
+use distdl::memory::{scratch_set_cap_bytes, scratch_stats};
 use distdl::nn::layers::{Conv2dConfig, DistConv2d, DistPool2d, Pool2dConfig};
 use distdl::nn::native::{
     affine_backward, affine_backward_naive, affine_forward, affine_forward_naive,
@@ -383,6 +383,10 @@ fn avg_pool_layer_coherent_through_arena_path() {
 
 #[test]
 fn sequential_conv_steady_state_allocates_nothing() {
+    // Pin the arena cap: the worst-case-eviction CI leg
+    // (PALLAS_SCRATCH_CAP_BYTES=1) checks correctness under constant
+    // eviction, not this test's reuse contract.
+    scratch_set_cap_bytes::<f32>(None);
     let mut rng = SplitMix64::new(0xE1);
     let x = rand_t::<f32>(&[2, 3, 12, 12], &mut rng);
     let w = rand_t::<f32>(&[4, 3, 3, 3], &mut rng);
@@ -427,6 +431,8 @@ fn distributed_conv_steady_state_reuses_arena_per_rank() {
     )
     .unwrap();
     let deltas = Cluster::run(4, |comm| {
+        scratch_set_cap_bytes::<f32>(None);
+        comm.set_pool_cap_bytes(None);
         let rank = comm.rank();
         let in_shape = layer.local_in_shape(rank).expect("on grid");
         let mut train_step = |seed: u64| -> Result<()> {
