@@ -52,6 +52,11 @@ fn measure(
     let cfg = LeNetConfig { batch, layout };
     let world = layout.world_size();
     let samples = Cluster::run(world, |comm| {
+        // Same pool pre-warming as the training loop: a pipelined message
+        // size class mints its full rotation depth on its second miss, so
+        // the two warm-up steps below leave the pool genuinely warm and
+        // the sampled steps see zero misses.
+        comm.pool_reserve(distdl::coordinator::PIPELINE_POOL_DEPTH);
         let kernels = kernels_for(backend, "artifacts")?;
         let net = lenet5::<f32>(&cfg, kernels)?;
         let mut st = net.init(comm.rank(), 1)?;

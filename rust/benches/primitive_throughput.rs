@@ -31,7 +31,9 @@ use distdl::comm::{Cluster, Comm};
 use distdl::error::Result;
 use distdl::nn::native::gemm::{gemm_scoped, gemm_with_workers, pool_threads};
 use distdl::partition::{Partition, TensorDecomposition};
-use distdl::primitives::{AllReduce, Broadcast, Gather, Repartition, Scatter, SumReduce};
+use distdl::primitives::{
+    AllReduce, Broadcast, Gather, Repartition, Scatter, SendRecv, SumReduce,
+};
 use distdl::tensor::{ops, Tensor};
 use distdl::testing::bench::{BenchGroup, BenchResult};
 
@@ -88,6 +90,89 @@ fn report_speedup(results: &[BenchResult]) {
             }
         }
     }
+}
+
+/// Pool-backed receives: the Scatter/SendRecv/Broadcast receive sides
+/// hand the caller tensors that wrap the senders' registered buffers
+/// directly. Per steady-state step (warm-up excluded, summed over all
+/// ranks) this reports how many receives were pool-backed and how many
+/// copies the receive paths paid — copy-on-write promotions plus fresh
+/// scratch-arena allocations plus comm-pool misses. Zero copies/step is
+/// the acceptance bar: "zero allocations after warm-up" now also means
+/// "zero copies after warm-up". (`set_comm_pool(false)` results stay
+/// bitwise identical — the on/off parity tests in `tests/comm_pool.rs`
+/// assert it; the `[nb-unpooled]` columns above are that baseline.)
+fn pool_backed_receive_report() {
+    const WARM: usize = 3;
+    const STEPS: usize = 20;
+    println!("\n== pool-backed receives (4 ranks, steady state; copies/step must be 0) ==");
+    println!(
+        "{:<28} {:>18} {:>12}",
+        "primitive", "pool-backed/step", "copies/step"
+    );
+
+    fn steady<F>(world: usize, body: F) -> (f64, f64)
+    where
+        F: Fn(&mut Comm) -> Result<()> + Send + Sync,
+    {
+        let per = Cluster::run(world, |comm| {
+            // immune to the worst-case-eviction env caps
+            comm.set_pool_cap_bytes(None);
+            distdl::memory::scratch_set_cap_bytes::<f64>(None);
+            for _ in 0..WARM {
+                body(comm)?;
+                comm.barrier(); // in-flight returns land home
+            }
+            distdl::tensor::reset_tensor_storage_stats();
+            let s0 = distdl::memory::scratch_stats::<f64>().allocations;
+            let p0 = comm.pool_stats().misses;
+            for _ in 0..STEPS {
+                body(comm)?;
+                comm.barrier();
+            }
+            let ts = distdl::tensor::tensor_storage_stats();
+            let copies = ts.cow_promotions
+                + (distdl::memory::scratch_stats::<f64>().allocations - s0)
+                + (comm.pool_stats().misses - p0);
+            Ok((ts.pool_backed, copies))
+        })
+        .unwrap();
+        let (pb, cp) = per
+            .iter()
+            .fold((0usize, 0usize), |a, b| (a.0 + b.0, a.1 + b.1));
+        (pb as f64 / STEPS as f64, cp as f64 / STEPS as f64)
+    }
+
+    fn row(name: &str, pb: f64, cp: f64) {
+        println!("{name:<28} {pb:>18.2} {cp:>12.2}");
+    }
+
+    let n = 1usize << 14;
+    let d = TensorDecomposition::new(Partition::from_shape(&[4]), &[n]).unwrap();
+    let sc = Scatter::new(d, 0, 7000);
+    let (pb, cp) = steady(4, |comm| {
+        let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
+        sc.forward(comm, x)?;
+        Ok(())
+    });
+    row(&format!("scatter     P=4 n={n}"), pb, cp);
+
+    let sr = SendRecv::new(0, 3, &[n], 7200);
+    let (pb, cp) = steady(4, |comm| {
+        let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
+        let y = sr.forward(comm, x)?;
+        sr.adjoint(comm, y)?;
+        Ok(())
+    });
+    row(&format!("send-recv   0→3 n={n}"), pb, cp);
+
+    let bc = Broadcast::replicate(0, 4, &[n], 7400).unwrap();
+    let (pb, cp) = steady(4, |comm| {
+        let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
+        bc.forward(comm, x)?;
+        Ok(())
+    });
+    row(&format!("broadcast   P=4 n={n}"), pb, cp);
 }
 
 fn main() {
@@ -300,4 +385,5 @@ fn main() {
 
     let results = g.finish();
     report_speedup(&results);
+    pool_backed_receive_report();
 }

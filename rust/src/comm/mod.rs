@@ -83,7 +83,25 @@
 //! that would exceed the cap execute the deallocation for real and count
 //! as evictions). [`Comm::set_comm_pool`]`(false)` restores the
 //! move-semantics unpooled paths — the benches' baseline, bitwise
-//! identical in every result.
+//! identical in every result (up to the IEEE sign of zero in the
+//! degenerate unseeded sum-reduce root, where the pooled path adopts a
+//! payload the unpooled baseline adds into zeros).
+//!
+//! ## Pool-backed receives
+//!
+//! The receive side of the cycle is zero-copy too: a completed
+//! [`Payload`] wraps straight into a [`crate::tensor::Tensor`] via
+//! [`Payload::into_tensor`] — the tensor's storage *is* the registered
+//! buffer (copy-on-write on mutation), and dropping the tensor performs
+//! the return. The scatter/send-recv destinations and the broadcast
+//! replicas the conv/affine layers stash all ride this path, which is
+//! what turns "zero allocations after warm-up" into "zero copies after
+//! warm-up". Because stashed replicas hold their buffers across a whole
+//! step, a size class's rotation depth can exceed one;
+//! [`Comm::pool_reserve`] pre-warms that depth on a class's second miss,
+//! so only the first couple of steps of a pipeline record misses. See
+//! [`crate::memory`] for how this registered-pool tier composes with
+//! owned buffers and the arena-scratch tier.
 //!
 //! Semantics match MPI where it matters:
 //! * messages between a (source, destination) pair are FIFO;
@@ -94,7 +112,7 @@
 //!   [`Comm::sendrecv`]) survives as thin wrappers over the request engine.
 
 use crate::error::{Error, Result};
-use crate::tensor::Scalar;
+use crate::tensor::{Scalar, Tensor};
 use crate::util::env::{parse_u64, EnvNum};
 use std::any::{Any, TypeId};
 use std::collections::{HashMap, VecDeque};
@@ -240,6 +258,10 @@ pub struct CommPoolStats {
     pub evictions: usize,
     /// Bytes currently parked in the pool.
     pub pooled_bytes: usize,
+    /// Extra buffers minted eagerly by [`Comm::pool_reserve`] pre-warming
+    /// (parked alongside the missing take's fresh buffer so a pipelined
+    /// size class misses at most once).
+    pub reserved: usize,
 }
 
 /// A per-endpoint pool of registered message buffers (see the module
@@ -250,11 +272,27 @@ struct BufferPool {
     pooled_bytes: usize,
     cap_bytes: Option<usize>,
     enabled: bool,
+    /// Pre-warm depth (see [`Comm::pool_reserve`]): on a size class's
+    /// *second* miss — the signal that the class is genuinely pipelined,
+    /// keeping more than one buffer in flight at once — mint the rest of
+    /// its rotation depth eagerly, so the class misses at most twice
+    /// instead of once per step for the first `reserve_depth` steps.
+    /// Depth-1 classes (staged and returned within a step) miss once and
+    /// never pre-warm, and a class pre-warms **at most once**: later
+    /// misses (e.g. re-misses of an evicted class under cap pressure)
+    /// mint on demand only — so cold extras are bounded by one pre-warm
+    /// per class and cannot keep displacing hot returns under a finite
+    /// byte cap.
+    reserve_depth: usize,
+    /// Per-class pre-warm state: `false` after the first miss (observed),
+    /// `true` once the second-miss pre-warm has run.
+    warmed: HashMap<(TypeId, usize), bool>,
     acquires: usize,
     hits: usize,
     misses: usize,
     returns: usize,
     evictions: usize,
+    reserved: usize,
 }
 
 impl BufferPool {
@@ -265,11 +303,14 @@ impl BufferPool {
             pooled_bytes: 0,
             cap_bytes,
             enabled: true,
+            reserve_depth: 1,
+            warmed: HashMap::new(),
             acquires: 0,
             hits: 0,
             misses: 0,
             returns: 0,
             evictions: 0,
+            reserved: 0,
         }
     }
 
@@ -324,6 +365,45 @@ impl BufferPool {
             }
             None => {
                 self.misses += 1;
+                // A second miss of the same size class means the class is
+                // pipelined (its first buffer is still in flight): mint
+                // the rest of its rotation depth in the same stroke — the
+                // two on-demand mints plus these extras — with the cap
+                // checked *before* each mint, so a full or tiny cap costs
+                // nothing. Depth-1 classes miss once and never pre-warm,
+                // and each class pre-warms at most once: an evicted
+                // class's later re-misses must not be misread as
+                // pipelining and keep parking dead extras under the cap.
+                if self.reserve_depth > 1 {
+                    match self.warmed.entry((elem, len)) {
+                        std::collections::hash_map::Entry::Vacant(slot) => {
+                            slot.insert(false); // first miss: observe only
+                        }
+                        std::collections::hash_map::Entry::Occupied(mut slot)
+                            if !*slot.get() =>
+                        {
+                            slot.insert(true); // second miss: pre-warm once
+                            for _ in 2..self.reserve_depth {
+                                let bytes = len * std::mem::size_of::<T>();
+                                if let Some(cap) = self.cap_bytes {
+                                    if self.pooled_bytes + bytes > cap {
+                                        break;
+                                    }
+                                }
+                                let extra = vec![T::ZERO; len];
+                                self.reserved += 1;
+                                self.pooled_bytes += bytes;
+                                self.free.push(PoolEntry {
+                                    elem,
+                                    cap_elems: extra.capacity(),
+                                    bytes,
+                                    buf: Box::new(extra),
+                                });
+                            }
+                        }
+                        std::collections::hash_map::Entry::Occupied(_) => {}
+                    }
+                }
                 vec![T::ZERO; len]
             }
         }
@@ -345,6 +425,7 @@ impl BufferPool {
             returns: self.returns,
             evictions: self.evictions,
             pooled_bytes: self.pooled_bytes,
+            reserved: self.reserved,
         }
     }
 }
@@ -386,6 +467,20 @@ impl<T: Scalar> Payload<T> {
         match self {
             Payload::Owned(v) => v,
             Payload::Pooled(p) => p.as_slice().to_vec(),
+        }
+    }
+
+    /// Wrap the payload as a tensor of `shape` **without copying**: an
+    /// owned payload moves its buffer in, and a registered payload backs
+    /// the tensor directly ([`Tensor::from_pooled`]) — reads stay
+    /// zero-copy, mutation promotes copy-on-write, and dropping the
+    /// tensor (or its last clone) returns the buffer to the sender's
+    /// pool. This is how the primitives' receive sides hand message
+    /// payloads to callers with zero post-completion copies.
+    pub fn into_tensor(self, shape: &[usize]) -> Result<Tensor<T>> {
+        match self {
+            Payload::Owned(v) => Tensor::from_vec(shape, v),
+            Payload::Pooled(p) => Tensor::from_pooled(shape, p),
         }
     }
 }
@@ -630,6 +725,27 @@ impl Comm {
     /// `PALLAS_COMM_POOL_CAP_BYTES` at cluster launch.
     pub fn set_pool_cap_bytes(&mut self, cap: Option<usize>) {
         self.pool.cap_bytes = cap;
+    }
+
+    /// Pipeline-depth-aware pool pre-warming: when a size class misses a
+    /// **second** time — proof that the class keeps more than one buffer
+    /// in flight at once — mint its full rotation of `depth` buffers in
+    /// that stroke (the two on-demand mints plus `depth - 2` parked
+    /// extras, byte cap checked before each mint).
+    ///
+    /// A pipelined step keeps several buffers of one class alive at once
+    /// — broadcast replicas stashed until backward, the micro-batch
+    /// prefetch overlap — so without pre-warming the first `depth` steps
+    /// each record one spurious miss per class while the rotation depth
+    /// is minted. With it, a pipelined class misses at most twice and a
+    /// depth-1 class (staged and returned within its step) exactly once —
+    /// and because depth-1 classes never mint extras and each class
+    /// pre-warms at most once, cold pre-warm cannot displace hot returns
+    /// under a finite cap. Extra mints are counted under
+    /// [`CommPoolStats::reserved`], not as further misses. `depth <= 1`
+    /// restores the mint-on-demand default.
+    pub fn pool_reserve(&mut self, depth: usize) {
+        self.pool.reserve_depth = depth.max(1);
     }
 
     /// This endpoint's pool counters (return bin drained first).
@@ -1646,6 +1762,66 @@ mod tests {
                 comm.barrier();
                 // the receiver's own pool saw no traffic
                 assert_eq!(comm.pool_stats().acquires, 0);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn pool_reserve_prewarms_rotation_depth_on_second_miss() {
+        Cluster::run(1, |comm| {
+            comm.set_pool_cap_bytes(None);
+            comm.pool_reserve(3);
+            // First miss of a class mints on demand only (a depth-1 class
+            // stops here and never parks dead extras)...
+            let a = comm.pool_take::<f64>(8);
+            let s = comm.pool_stats();
+            assert_eq!((s.misses, s.reserved), (1, 0));
+            // ...the second concurrent take proves the class is pipelined
+            // and pre-warms the rest of the rotation depth...
+            let b = comm.pool_take::<f64>(8);
+            let s = comm.pool_stats();
+            assert_eq!((s.misses, s.reserved), (2, 1));
+            // ...so the third concurrent take hits the parked extra.
+            let c = comm.pool_take::<f64>(8);
+            let s = comm.pool_stats();
+            assert_eq!(s.acquires, 3);
+            assert_eq!(s.misses, 2, "the pre-warmed take must hit");
+            assert_eq!(s.hits, 1);
+            assert_eq!((a.len(), b.len(), c.len()), (8, 8, 8));
+            // A hard cap suppresses the eager mints (nothing is evicted —
+            // the extras are simply not minted).
+            comm.set_pool_cap_bytes(Some(1));
+            let _d = comm.pool_take::<f64>(16); // first miss: marks only
+            let _e = comm.pool_take::<f64>(16); // second miss: extras blocked
+            let s = comm.pool_stats();
+            assert_eq!(s.misses, 4);
+            assert_eq!(s.reserved, 1, "capped pool must not park extras");
+            assert_eq!(s.evictions, 0);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn payload_into_tensor_wraps_without_copy() {
+        Cluster::run(2, |comm| {
+            comm.set_pool_cap_bytes(None);
+            if comm.rank() == 0 {
+                let mut stage = comm.pool_take::<f32>(4);
+                stage.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+                let req = comm.isend_pooled(1, 21, stage)?;
+                comm.wait_send(req)?;
+                comm.barrier();
+                assert_eq!(comm.pool_stats().returns, 1);
+            } else {
+                let req = comm.irecv::<f32>(0, 21)?;
+                let t = comm.wait_payload(req)?.into_tensor(&[2, 2])?;
+                assert!(t.is_pool_backed());
+                assert_eq!(t.at(&[1, 1]), 4.0);
+                drop(t); // the return
+                comm.barrier();
             }
             Ok(())
         })

@@ -23,7 +23,14 @@
 //! the log as `scratch_*` and `comm_pool_*` keys — after warm-up,
 //! steady-state steps should add nothing to `scratch_allocations` or
 //! `comm_pool_misses`: the entire train step stops touching the
-//! allocator.
+//! allocator. The loop pre-warms each endpoint's pool for the pipeline's
+//! rotation depth ([`PIPELINE_POOL_DEPTH`] via `Comm::pool_reserve`), so
+//! a pipelined size class misses at most twice — its second miss mints
+//! the rest of the rotation — rather than once per step while the
+//! rotation is minted buffer by buffer. Receive sides hand the layers
+//! **pool-backed tensors** (`tensor_pool_backed` on the log), consumed
+//! read-only, so `tensor_cow_promotions` staying flat is the evidence
+//! that zero allocations also means zero copies.
 
 use crate::autograd::NetworkState;
 use crate::comm::{Cluster, Comm};
@@ -64,6 +71,17 @@ pub fn kernels_for(backend: Backend, artifacts_dir: &str) -> Result<Arc<dyn Loca
     }
 }
 
+/// Registered-pool pre-warm depth the training loop hands
+/// [`Comm::pool_reserve`]. The pipeline keeps up to this many buffers of
+/// one message size class in flight at once — the broadcast replicas a
+/// layer stashes from forward to backward, plus the micro-batch prefetch
+/// riding the gradient sum-reduce tail — so without pre-warming the first
+/// few steps each mint one more buffer per class and show up as spurious
+/// pool misses. With it, a pipelined class misses at most twice (its
+/// second miss mints the rest of the rotation) and within-step classes
+/// exactly once, so a two-step warm-up is genuinely warm.
+pub const PIPELINE_POOL_DEPTH: usize = 3;
+
 /// Run the §5 training experiment per `cfg`, returning the report.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     cfg.validate()?;
@@ -86,6 +104,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     };
 
     let per_rank = Cluster::run(world, |comm| {
+        // Pre-warm the registered buffer pool for the pipeline's rotation
+        // depth: a pipelined message size class mints its full in-flight
+        // complement on its second miss instead of one per step.
+        comm.pool_reserve(PIPELINE_POOL_DEPTH);
         let kernels = kernels_for(cfg.backend, &cfg.artifacts_dir)?;
         let net = lenet5::<f32>(&model_cfg, kernels)?;
         let mut state = net.init(comm.rank(), cfg.seed)?;
@@ -155,6 +177,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             log.set_comm_stats(&comm.stats());
             log.set_scratch_stats(&crate::memory::scratch_stats::<f32>());
             log.set_gemm_pool_stats(&crate::nn::native::gemm::gemm_pool_stats());
+            log.set_tensor_storage_stats(&crate::tensor::tensor_storage_stats());
         }
         Ok((log, state.param_count(), eval_acc))
     })?;

@@ -16,8 +16,12 @@
 //! This crate implements the whole stack:
 //!
 //! * [`tensor`] — dense row-major tensors (`f32`/`f64`) with the region-copy
-//!   machinery every primitive is built on; `tensor::ops::matmul` routes
-//!   through the shared GEMM core below.
+//!   machinery every primitive is built on (one shared region-offset
+//!   iterator behind every copy/add/extract/fill form) and **pluggable
+//!   storage**: a tensor is backed by an owned buffer or wraps a
+//!   registered comm-pool message buffer directly (zero-copy receive
+//!   sides, copy-on-write on mutation, drop-returns-to-sender);
+//!   `tensor::ops::matmul` routes through the shared GEMM core below.
 //! * [`partition`] — cartesian worker grids and load-balanced tensor
 //!   decompositions (§3–4 of the paper).
 //! * [`memory`] — the linear-algebraic memory model of §2 / Appendix A:

@@ -37,19 +37,40 @@
 //! deferring it (counted as an eviction), so a long-lived rank that once
 //! staged a peak-shaped buffer does not hoard memory forever.
 //!
-//! The arenas deliberately stop at the rank boundary: a buffer taken on
-//! one rank thread can only be given back on that thread, so any flow
-//! that hands buffers to *another* rank — the broadcast/sum-reduce trees,
-//! scatter/gather, forward-only halo circulation — cannot recycle here.
-//! Those flows run on the comm engine's **registered buffer pool**
-//! ([`crate::comm`]), whose payloads carry a handle back to the sender's
-//! pool slot; the receiver's completion performs the return. The two
-//! tiers compose: arenas serve rank-local staging (im2col columns, GEMM
-//! packs, trim/pad stashes, the broadcast replicas the layers borrow and
-//! give back), the comm pool serves everything that crosses a rank
-//! boundary, and each is capped independently
-//! (`PALLAS_SCRATCH_CAP_BYTES` / `PALLAS_COMM_POOL_CAP_BYTES`, same
-//! policy).
+//! ## The three-tier ownership story
+//!
+//! Every buffer in the crate lives in one of three tiers, each with its
+//! own recycle discipline, and a [`crate::tensor::Tensor`] can wrap any
+//! of them:
+//!
+//! 1. **Owned** — a plain `Vec<T>` with ordinary move semantics: network
+//!    parameters, gradients, layer outputs. Chosen whenever a buffer's
+//!    lifetime is unbounded or it must be mutated freely.
+//! 2. **Arena-scratch** — rank-local staging borrowed from this module's
+//!    [`Scratch`] arena (`take`/`give`, the §2 `D_b…A_b → K_b`
+//!    substitution): im2col columns, GEMM pack panels, halo/trim-pad
+//!    staging, activation stashes, the conv root's broadcast seed.
+//!    Chosen for buffers that are taken and given back *on the same rank
+//!    thread* within a step. The arenas deliberately stop at the rank
+//!    boundary: a buffer taken on one rank thread can only be given back
+//!    on that thread, so any flow that hands buffers to *another* rank
+//!    cannot recycle here.
+//! 3. **Registered-pool** — message buffers from a comm endpoint's
+//!    registered pool ([`crate::comm`]), whose payloads carry a handle
+//!    back to the *sender's* pool slot. Chosen for everything that
+//!    crosses a rank boundary: the broadcast/sum-reduce trees,
+//!    scatter/gather, all-to-all pieces, halo circulation. Receivers
+//!    consume payloads in place — or hold them as **pool-backed tensors**
+//!    (`Payload::into_tensor`, copy-on-write on mutation) stashed across
+//!    a whole step — and the last holder's drop performs the return, so
+//!    even one-way flows recycle.
+//!
+//! The tiers compose: a train step stages locally from tier 2, ships
+//! through tier 3, and the receive side hands layers tier-3-backed
+//! tensors instead of copying into tier 1 or 2 — which is what makes
+//! "zero allocations after warm-up" mean "zero copies after warm-up" as
+//! well. Tiers 2 and 3 are capped independently under the same policy
+//! (`PALLAS_SCRATCH_CAP_BYTES` / `PALLAS_COMM_POOL_CAP_BYTES`).
 
 use crate::error::{Error, Result};
 use crate::tensor::Scalar;

@@ -3,6 +3,7 @@
 use crate::comm::CommStats;
 use crate::memory::ScratchStats;
 use crate::nn::native::gemm::GemmPoolStats;
+use crate::tensor::TensorStorageStats;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -65,6 +66,18 @@ impl MetricLog {
         self.set_meta("comm_pool_returns", s.pool.returns);
         self.set_meta("comm_pool_evictions", s.pool.evictions);
         self.set_meta("comm_pool_pooled_bytes", s.pool.pooled_bytes);
+        self.set_meta("comm_pool_reserved", s.pool.reserved);
+    }
+
+    /// Surface a rank's tensor-storage counters as run metadata
+    /// (`tensor_*` keys): how many tensors were constructed pool-backed
+    /// (the zero-copy receive sides) and how many paid a copy-on-write
+    /// promotion. After warm-up a steady-state train step should keep
+    /// adding to `tensor_pool_backed` while `tensor_cow_promotions` stays
+    /// flat — replicas are consumed read-only.
+    pub fn set_tensor_storage_stats(&mut self, s: &TensorStorageStats) {
+        self.set_meta("tensor_pool_backed", s.pool_backed);
+        self.set_meta("tensor_cow_promotions", s.cow_promotions);
     }
 
     /// Surface a rank's scratch-arena counters as run metadata
@@ -230,6 +243,7 @@ mod tests {
                 returns: 5,
                 evictions: 1,
                 pooled_bytes: 2048,
+                reserved: 4,
             },
             ..CommStats::default()
         };
@@ -243,5 +257,18 @@ mod tests {
         assert_eq!(log.meta["comm_pool_returns"], "5");
         assert_eq!(log.meta["comm_pool_evictions"], "1");
         assert_eq!(log.meta["comm_pool_pooled_bytes"], "2048");
+        assert_eq!(log.meta["comm_pool_reserved"], "4");
+    }
+
+    #[test]
+    fn tensor_storage_stats_surface_as_meta() {
+        let mut log = MetricLog::new();
+        let stats = TensorStorageStats {
+            pool_backed: 12,
+            cow_promotions: 0,
+        };
+        log.set_tensor_storage_stats(&stats);
+        assert_eq!(log.meta["tensor_pool_backed"], "12");
+        assert_eq!(log.meta["tensor_cow_promotions"], "0");
     }
 }

@@ -21,6 +21,14 @@
 //! in the per-rank scratch arena. Its gradient sum-reduce benefits from
 //! the broadcast adjoint's move-not-clone cotangent path on every
 //! non-root grid cell.
+//!
+//! The x̂ and δŷ replicas the two broadcasts deliver to pure-destination
+//! grid cells are **pool-backed tensors** wrapping the broadcaster's
+//! registered buffer (zero-copy; the x̂ stash holds its buffer from
+//! forward to backward). The kernels consume them read-only, and dropping
+//! them — which this layer now simply does once they are consumed —
+//! returns each buffer to the pool that staged it. Members that seeded a
+//! broadcast get their own tensor back and drop it as plain owned data.
 
 use crate::adjoint::DistLinearOp;
 use crate::autograd::{Layer, LayerState};
@@ -189,14 +197,14 @@ impl<T: Scalar> Layer<T> for DistAffine<T> {
             let bias = self.bias_cell(rank).map(|_| &st.params[1]);
             let y = self.kernels.affine_forward(&x_hat, w, bias)?;
             if train {
+                // The stash may be pool-backed (pure-destination members
+                // of the x̂ broadcast hold the broadcaster's registered
+                // buffer until `backward` drops it).
                 st.saved = vec![x_hat];
-            } else if !self.px.contains(rank) {
-                // Pure-destination members received an arena-backed x̂
-                // replica from the broadcast; evaluation forwards return
-                // it here (training returns it in `backward`). A source
-                // member's x̂ is its own input tensor, dropped as before.
-                crate::memory::scratch_give(x_hat.into_vec());
             }
+            // Evaluation forwards drop x̂ here: a pool-backed replica
+            // returns to its broadcaster's pool, a seeding member's own
+            // tensor is deallocated as before.
             Some(y)
         } else {
             None
@@ -226,17 +234,14 @@ impl<T: Scalar> Layer<T> for DistAffine<T> {
             if self.bias_cell(rank).is_some() {
                 st.grads[1].add_assign(&db)?;
             }
-            // Arena-backed broadcast replicas go home once consumed: the
-            // stashed x̂ on pure-destination members of the x broadcast,
-            // and δŷ on pure-destination members of the δy broadcast (the
-            // sum-reduce adjoint). Members that seeded those broadcasts
-            // got their own tensors back and drop them as before.
-            if !self.px.contains(rank) {
-                crate::memory::scratch_give(x_hat.into_vec());
-            }
-            if !self.py.contains(rank) {
-                crate::memory::scratch_give(dy_hat.into_vec());
-            }
+            // The broadcast replicas go home by dropping: the stashed x̂
+            // (held pool-backed since forward on pure-destination members
+            // of the x broadcast) and δŷ (ditto for the δy broadcast, the
+            // sum-reduce adjoint) each return to the pool that staged
+            // them; members that seeded those broadcasts got their own
+            // tensors back and deallocate them as before.
+            drop(x_hat);
+            drop(dy_hat);
             st.clear_saved();
             Some(dx_hat)
         } else {

@@ -43,8 +43,12 @@
 //! exchange buffer** — the full trim/pad compute buffer is materialised at
 //! most once per forward (as the backward stash, under training), where it
 //! used to be built twice. Halo staging and slab buffers are borrowed from
-//! the per-rank [`crate::memory`] scratch arena and returned after use, so
-//! steady-state steps re-allocate none of them.
+//! the per-rank [`crate::memory`] scratch arena and returned after use,
+//! and the ŵ/b̂ replicas the broadcast delivers to non-root grid ranks are
+//! **pool-backed tensors** wrapping the root's registered buffer directly
+//! — stashed across the step, consumed read-only by the kernels, and
+//! dropped in `backward` (the drop is the return). Steady-state steps
+//! re-allocate none of these buffers and copy none of these replicas.
 
 use crate::adjoint::DistLinearOp;
 use crate::autograd::{Layer, LayerState};
@@ -313,14 +317,26 @@ impl<T: Scalar> DistConv2d<T> {
 
     /// Copy a parameter tensor into an arena-backed staging replica: the
     /// broadcast seed. The root gets the same buffer back as its ŵ/b̂
-    /// replica (and non-root members receive arena-backed copies from the
-    /// broadcast), so *every* grid rank returns its replicas via
-    /// [`crate::memory::scratch_give`] once consumed — the parameter
-    /// clone that used to feed the root's broadcast each step is gone.
+    /// replica; non-root grid ranks receive **pool-backed** replicas that
+    /// wrap the root's registered broadcast buffer directly (no per-rank
+    /// memcpy). `release_replica` sends each kind home.
     fn stage_param(t: &Tensor<T>) -> Result<Tensor<T>> {
         let mut buf = crate::memory::scratch_take_dirty::<T>(t.numel());
         buf.copy_from_slice(t.data());
         Tensor::from_vec(t.shape(), buf)
+    }
+
+    /// Dispose of a consumed ŵ/b̂ replica. The root's replica is its own
+    /// arena-staged seed (`stage_param`) and goes back to the root's
+    /// scratch arena; every other grid rank just drops — a
+    /// pool-backed replica's drop returns the registered buffer to the
+    /// root's pool (the last fan-out holder performs the return), and the
+    /// unpooled baseline's owned buffer is simply deallocated (move
+    /// semantics, as before the pool existed).
+    fn release_replica(&self, rank: usize, t: Tensor<T>) {
+        if rank == self.root {
+            crate::memory::scratch_give(t.into_vec());
+        }
     }
 
     /// Generate the deterministic *global* parameters for `seed` (uniform
@@ -488,19 +504,20 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
             }
         };
         // The exchange staging buffer goes back to the arena for the next
-        // micro-batch, and so does the b̂ replica (consumed by the kernel
-        // calls above; it is never stashed). The ŵ replica survives only
-        // as the backward stash — evaluation forwards return it here too,
+        // micro-batch; the b̂ replica (consumed by the kernel calls above,
+        // never stashed) goes home — to the root's arena or, pool-backed,
+        // to the root's registered pool. The ŵ replica survives only as
+        // the backward stash — evaluation forwards release it here too,
         // so forward-only loops leak nothing through the overlap branch.
         crate::memory::scratch_give(buf.into_vec());
-        crate::memory::scratch_give(b_hat.into_vec());
+        self.release_replica(rank, b_hat);
         if train {
             st.saved = vec![
                 x_hat.expect("train forward materialises the compute buffer"),
                 w_hat,
             ];
         } else {
-            crate::memory::scratch_give(w_hat.into_vec());
+            self.release_replica(rank, w_hat);
         }
         Ok(Some(y))
     }
@@ -555,11 +572,13 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
             self.reduce_params(st, comm, rank, Some(dw), Some(db))?;
             self.exchange.adjoint_finish(comm, inflight)?
         };
-        // Both stashes go home: the arena-staged activation, and the ŵ
-        // replica (arena-backed on every grid rank — the root staged its
-        // seed, the others received a broadcast copy).
+        // Both stashes go home: the arena-staged activation to this
+        // rank's arena, and the ŵ replica to wherever it came from (the
+        // root's arena seed, or — pool-backed on the other grid ranks —
+        // the root's registered pool; holding it across the step is what
+        // the pool's rotation depth and `pool_reserve` account for).
         crate::memory::scratch_give(x_hat.into_vec());
-        crate::memory::scratch_give(w_hat.into_vec());
+        self.release_replica(rank, w_hat);
         let bulk = self.exchange.bulk_region(&coords);
         let dx = dbuf.extract_region(&bulk)?;
         crate::memory::scratch_give(dbuf.into_vec());

@@ -5,6 +5,16 @@
 //! load balance on the inputs and outputs ... and to distribute input data
 //! and collect outputs". These are the layer-shaped wrappers around
 //! [`Repartition`], [`Scatter`]/[`Gather`], and the native activations.
+//!
+//! The tensors flowing through these layers may be **pool-backed**: a
+//! [`ScatterInput`] shard or single-source repartition output wraps the
+//! sender's registered comm buffer directly (zero-copy receive). That is
+//! transparent here — the activation stash holds such tensors across the
+//! step and reads them back in `backward` without copying, reshape in
+//! [`DistFlatten`] preserves the backing (an `Arc` clone), and whenever a
+//! stash or pass-through tensor is dropped the registered buffer returns
+//! to the pool that staged it. Mutation, had any layer needed it, would
+//! promote copy-on-write rather than touch the shared buffer.
 
 use crate::adjoint::DistLinearOp;
 use crate::autograd::{Layer, LayerState};
@@ -165,6 +175,11 @@ impl<T: Scalar> Layer<T> for DistFlatten {
 
 /// Point-wise activation layer — embarrassingly parallel (§4), identical
 /// on every rank's shard, `None` passes through for non-participants.
+///
+/// The training stash keeps the input tensor as-is; when that input
+/// arrived pool-backed (e.g. straight from a [`ScatterInput`]), the
+/// registered buffer stays borrowed until `backward` consumes the stash
+/// and drops it — no copy either way.
 pub struct DistActivation {
     act: Activation,
     name: String,

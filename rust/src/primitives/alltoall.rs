@@ -13,6 +13,12 @@
 //!
 //! This is the workhorse "transpose layer" glue of the distributed
 //! LeNet-5 (Fig. C10).
+//!
+//! Pieces are staged in the sender's registered [`crate::comm`] buffer
+//! pool and the assembly unpacks each payload in place (arrival order,
+//! `wait_any_payload`); when a destination shard arrives whole from one
+//! remote source — the distribute/collect configurations — the shard *is*
+//! the payload: a pool-backed tensor, no assembly memcpy at all.
 
 use crate::adjoint::DistLinearOp;
 use crate::comm::Comm;
@@ -101,13 +107,27 @@ impl Repartition {
         // one source region, so every receive is a distinct source and the
         // unpack of an early piece never queues behind a slow one).
         if let Some(dst_region) = &my_dst {
+            let owners: Vec<(usize, crate::tensor::Region)> = from
+                .owners_of(dst_region)
+                .into_iter()
+                .filter(|(_, overlap)| !overlap.is_empty())
+                .collect();
+            // Zero-copy fast path: the whole destination shard arrives
+            // from a single remote source (the distribute/collect shapes
+            // of Fig. C10) — no assembly buffer, the shard *is* the
+            // payload, pool-backed when the sender staged it.
+            if let [(src_rank, overlap)] = owners.as_slice() {
+                if *src_rank != rank && overlap.shape == dst_region.shape {
+                    debug_assert!(local_piece.is_none(), "single remote owner covers all");
+                    let req = comm.irecv::<T>(*src_rank, tag)?;
+                    let payload = comm.wait_payload(req)?;
+                    return Ok(Some(payload.into_tensor(&dst_region.shape)?));
+                }
+            }
             let mut out = Tensor::zeros(&dst_region.shape);
             let mut reqs = Vec::new();
             let mut regions: Vec<crate::tensor::Region> = Vec::new();
-            for (src_rank, overlap) in from.owners_of(dst_region) {
-                if overlap.is_empty() {
-                    continue;
-                }
+            for (src_rank, overlap) in owners {
                 if src_rank == rank {
                     let (_, piece) = local_piece.take().ok_or_else(|| {
                         Error::Primitive("repartition: lost local piece".into())

@@ -26,18 +26,25 @@
 //! registered copy at the root (fanned out by `Arc`, returned by the last
 //! tree member to drop it), each upward sum-reduce hop stages the shipped
 //! partial in the child's own slot, and steady-state steps perform zero
-//! pool misses. Pure-destination members hand the caller an arena-backed
-//! replica — **uniformly**, pool on or off, so the ownership contract
-//! never depends on a runtime toggle: return it via
-//! [`crate::memory::scratch_give`] once consumed (the conv/affine layers
-//! do). Generic callers ([`AllReduce`], the coherence harness) may simply
-//! drop it — that is correct, the replica is just deallocated and the
-//! next take counts as a fresh arena allocation. A member that seeded its
-//! group gets its own seed tensor back. With the pool disabled
-//! ([`Comm::set_comm_pool`]) the tree *messages* fall back to the
-//! move-semantics unpooled paths, bitwise identically (destination
-//! outputs still pay the replica copy — the price of the uniform
-//! contract, visible in the pooled-vs-unpooled bench baseline).
+//! pool misses.
+//!
+//! The receive side stopped staging replica copies in **both** pool
+//! modes. Pure-destination members hand the caller a **pool-backed
+//! tensor** wrapping the staged registered buffer directly
+//! ([`crate::tensor::Tensor::from_pooled`]) — every replica of a fan-out
+//! shares one registration, reads cost nothing, mutation promotes
+//! copy-on-write, and simply *dropping* the replica performs the return
+//! (the conv/affine layers stash these across a whole train step and
+//! drop them in `backward`). With the pool disabled
+//! ([`Comm::set_comm_pool`]) the old move semantics are restored: a
+//! destination takes ownership of the arriving engine buffer whenever it
+//! holds the last reference (leaves, and any member once its forwards
+//! have drained); a fan-out `Arc` still in flight falls back to the
+//! engine-level clone, exactly as before the pool existed — but the PR-4
+//! arena replica copy that *every* destination paid on top is gone. A
+//! member that seeded its group gets its own seed tensor back, and a
+//! root that is not itself a destination no longer materialises a
+//! replica at all.
 
 use super::tree_schedule;
 use crate::adjoint::DistLinearOp;
@@ -153,17 +160,32 @@ impl Broadcast {
         &self.groups
     }
 
+    /// Normalize a kept tensor to the group's local shape (a no-op on the
+    /// canonical callers, which seed exactly `shapes[gi]`).
+    fn into_group_shape<T: Scalar>(t: Tensor<T>, shape: &[usize]) -> Result<Tensor<T>> {
+        if t.shape() == shape {
+            Ok(t)
+        } else {
+            Tensor::from_vec(shape, t.into_vec())
+        }
+    }
+
     /// Run the forward tree for one group, from the perspective of `rank`.
     ///
     /// The held payload is an `Arc`-shared buffer: forwarding to several
     /// children across tree rounds clones only the `Arc`, and the receive
     /// is posted before the edge walk starts so the parent's eager send
     /// can land while earlier rounds are still in progress.
+    ///
+    /// `keep` says whether this member's replica is wanted by the caller
+    /// (the root of a group whose root is not a destination walks the tree
+    /// but materialises nothing).
     fn run_group_forward<T: Scalar>(
         &self,
         gi: usize,
         comm: &mut Comm,
         seed: Option<Tensor<T>>,
+        keep: bool,
     ) -> Result<Option<Tensor<T>>> {
         let members = &self.members[gi];
         let rank = comm.rank();
@@ -183,18 +205,22 @@ impl Broadcast {
         // (the pool's recycle cycle) and keeps the seed itself as its own
         // replica; without the pool — or with no tree edges to walk — the
         // seed moves straight into the shared buffer as before.
-        let mut kept_seed: Option<Vec<T>> = None;
+        let mut kept_seed: Option<Tensor<T>> = None;
         let mut held: Option<TreeBuf<T>> = None;
         if me == 0 {
             if let Some(t) = seed {
-                let v = t.into_vec();
                 if members.len() == 1 {
-                    kept_seed = Some(v);
-                } else if comm.pool_on() {
-                    held = Some(TreeBuf::Pooled(comm.pool_stage(&v)));
-                    kept_seed = Some(v);
+                    return if keep {
+                        Self::into_group_shape(t, &self.shapes[gi]).map(Some)
+                    } else {
+                        Ok(None)
+                    };
+                }
+                if comm.pool_on() {
+                    held = Some(TreeBuf::Pooled(comm.pool_stage(t.data())));
+                    kept_seed = Some(t);
                 } else {
-                    held = Some(TreeBuf::Shared(Arc::new(v)));
+                    held = Some(TreeBuf::Shared(Arc::new(t.into_vec())));
                 }
             }
         }
@@ -212,30 +238,29 @@ impl Broadcast {
                 });
             }
         }
-        if me == 0 {
-            let data = match (kept_seed, held) {
-                (Some(v), _) => v,
-                (None, Some(TreeBuf::Shared(arc))) => {
-                    Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone())
-                }
-                (None, Some(TreeBuf::Pooled(p))) => p.as_slice().to_vec(),
-                (None, None) => return Ok(None),
-            };
-            Ok(Some(Tensor::from_vec(&self.shapes[gi], data)?))
-        } else {
-            match held {
-                Some(h) => {
-                    // Pure-destination members get an arena-backed replica
-                    // (the layers give it back after use); dropping `h`
-                    // recycles the registered buffer to the staging rank.
-                    let slice = h.as_slice();
-                    let mut out = crate::memory::scratch_take_dirty::<T>(slice.len());
-                    out.copy_from_slice(slice);
-                    drop(h);
-                    Ok(Some(Tensor::from_vec(&self.shapes[gi], out)?))
-                }
-                None => Ok(None),
+        if !keep {
+            // Dropping `held` releases this member's share of the staged
+            // buffer (the last tree holder's drop performs the pool
+            // return); no replica is materialised.
+            return Ok(None);
+        }
+        if let Some(t) = kept_seed {
+            // The root's replica is its own seed tensor, untouched.
+            return Self::into_group_shape(t, &self.shapes[gi]).map(Some);
+        }
+        match held {
+            // Zero-copy receive: the replica *is* the staged registered
+            // buffer — fan-out members share one registration, and the
+            // last replica's drop returns it to the staging rank's pool.
+            Some(TreeBuf::Pooled(p)) => Ok(Some(Tensor::from_pooled(&self.shapes[gi], p)?)),
+            // Unpooled path: the old zero-copy move — this member takes
+            // ownership of the engine buffer when it holds the only
+            // reference (the fan-out fallback clones).
+            Some(TreeBuf::Shared(arc)) => {
+                let v = Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone());
+                Ok(Some(Tensor::from_vec(&self.shapes[gi], v)?))
             }
+            None => Ok(None),
         }
     }
 
@@ -267,21 +292,30 @@ impl Broadcast {
             }
         }
         // Members that are destinations start from their cotangent; a root
-        // that is not a destination starts from zero (its forward buffer
-        // was transient).
-        let mut acc: Option<Tensor<T>> = Some(match seed {
-            Some(t) => t,
-            None => Tensor::zeros(&self.shapes[gi]),
-        });
+        // that is not a destination starts empty and — on the pooled path
+        // — *adopts* its first child's payload as the accumulator:
+        // zero-copy, and when there is exactly one contribution (consumed
+        // read-only by the caller) the reduction result is a pool-backed
+        // tensor wrapping the child's registered buffer outright. The
+        // unpooled baseline keeps the historic zeros-then-add bitwise.
+        let mut acc: Option<Tensor<T>> = seed;
         for (from, to) in reversed {
             if to == me {
                 // Final action for this member: the accumulated cotangent
                 // goes to the parent — staged in a registered buffer from
                 // this member's own pool (the parent's drop returns it
-                // here), or moved outright on the unpooled path.
+                // here), or moved outright on the unpooled path. A member
+                // handed no cotangent ships zeros, as before. The tree
+                // schedule guarantees every child contribution was folded
+                // in before this ship; a scheduler that broke that would
+                // silently drop gradients, so fail loudly in debug.
+                debug_assert!(
+                    posted.is_empty(),
+                    "sum-reduce: member ships before consuming its children"
+                );
                 let t = acc
                     .take()
-                    .ok_or_else(|| Error::Primitive("sum-reduce: accumulator consumed".into()))?;
+                    .unwrap_or_else(|| Tensor::zeros(&self.shapes[gi]));
                 let req = if comm.pool_on() {
                     comm.isend_staged(members[from], tag, t.data())?
                 } else {
@@ -291,25 +325,57 @@ impl Broadcast {
             } else if from == me {
                 let req = posted.pop_front().expect("child receive posted");
                 let data = comm.wait_payload(req)?;
-                let acc_t = acc
-                    .as_mut()
-                    .ok_or_else(|| Error::Primitive("sum-reduce: accumulator consumed".into()))?;
-                if data.len() != acc_t.numel() {
-                    return Err(Error::Primitive(format!(
-                        "sum-reduce: contribution length {} vs accumulator {}",
-                        data.len(),
-                        acc_t.numel()
-                    )));
-                }
-                // Add straight out of the (possibly registered) payload;
-                // its drop recycles the buffer to the child that staged it.
-                for (d, &s) in acc_t.data_mut().iter_mut().zip(data.as_slice().iter()) {
-                    *d += s;
+                match acc.as_mut() {
+                    Some(acc_t) => {
+                        if data.len() != acc_t.numel() {
+                            return Err(Error::Primitive(format!(
+                                "sum-reduce: contribution length {} vs accumulator {}",
+                                data.len(),
+                                acc_t.numel()
+                            )));
+                        }
+                        // Add straight out of the (possibly registered)
+                        // payload; its drop recycles the buffer to the
+                        // child that staged it. (A pool-backed accumulator
+                        // promotes copy-on-write here — only multi-child
+                        // unseeded roots ever hit that.)
+                        for (d, &s) in acc_t.data_mut().iter_mut().zip(data.as_slice().iter()) {
+                            *d += s;
+                        }
+                    }
+                    None => {
+                        if data.len() != crate::tensor::numel(&self.shapes[gi]) {
+                            return Err(Error::Primitive(format!(
+                                "sum-reduce: contribution length {} vs accumulator {}",
+                                data.len(),
+                                crate::tensor::numel(&self.shapes[gi])
+                            )));
+                        }
+                        if comm.pool_on() {
+                            // Pooled path: adopt the payload outright.
+                            acc = Some(data.into_tensor(&self.shapes[gi])?);
+                        } else {
+                            // Unpooled baseline: keep the historic
+                            // zeros-then-add exactly (adoption would skip
+                            // the `0.0 + x` and so could flip the sign of
+                            // a -0.0, breaking bitwise identity with the
+                            // pre-pool reference).
+                            let mut z = Tensor::zeros(&self.shapes[gi]);
+                            for (d, &s) in
+                                z.data_mut().iter_mut().zip(data.as_slice().iter())
+                            {
+                                *d += s;
+                            }
+                            acc = Some(z);
+                        }
+                    }
                 }
             }
         }
         if me == 0 {
-            Ok(acc)
+            Ok(Some(
+                acc.unwrap_or_else(|| Tensor::zeros(&self.shapes[gi])),
+            ))
         } else {
             Ok(None)
         }
@@ -331,14 +397,16 @@ impl<T: Scalar> DistLinearOp<T> for Broadcast {
         let dest_gi = self.group_as_dest(rank);
         let mut out: Option<Tensor<T>> = None;
         if let Some(gi) = root_gi {
-            let held = self.run_group_forward(gi, comm, x)?;
+            // A root that is not a destination walks its tree without
+            // materialising a replica (keep = false).
+            let held = self.run_group_forward(gi, comm, x, self.root_is_dest[gi])?;
             if self.root_is_dest[gi] {
                 out = held;
             }
         }
         match dest_gi {
             Some(gi) if Some(gi) != root_gi => {
-                out = self.run_group_forward(gi, comm, None)?;
+                out = self.run_group_forward(gi, comm, None, true)?;
             }
             _ => {}
         }

@@ -31,7 +31,12 @@
 //! place and the completion returns each buffer to the pool slot it was
 //! drawn from, so even one-way flows (the broadcast/sum-reduce trees,
 //! scatter/gather, forward-only halo circulation) stop allocating after
-//! warm-up.
+//! warm-up. Receive sides that hand a whole payload to the caller —
+//! scatter and send-recv destinations, broadcast replicas, single-source
+//! repartitions, single-child sum-reduce roots — return **pool-backed
+//! tensors** (`Payload::into_tensor`): the tensor wraps the registered
+//! buffer, reads are zero-copy, and its drop performs the return, so
+//! steady-state steps stop *copying* after warm-up too.
 
 mod alltoall;
 mod broadcast;

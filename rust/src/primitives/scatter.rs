@@ -17,8 +17,13 @@
 //! shard owners stage their upward copies likewise, and the consuming
 //! side unpacks in place and drops the payload — the drop returns the
 //! buffer to the rank that staged it, so the one-way flows recycle
-//! instead of allocating. The unpooled fallback keeps the original move
-//! semantics.
+//! instead of allocating. The scatter *receive* side is zero-copy too:
+//! each non-root rank's shard is a **pool-backed tensor** wrapping the
+//! root's registered buffer directly (`Payload::into_tensor`) — no
+//! memcpy into a fresh allocation; dropping the shard (after the layer
+//! consumes it read-only) flies the buffer home to the root's pool.
+//! The unpooled fallback keeps the original move semantics, where the
+//! receive moves the arriving buffer into the shard outright.
 
 use crate::adjoint::DistLinearOp;
 use crate::comm::Comm;
@@ -82,8 +87,11 @@ impl Scatter {
                 .map(|(c, _, _)| c)
                 .expect("rank in decomposition");
             let req = comm.irecv::<T>(root, tag + cell as u64)?;
-            let data = comm.wait(req)?;
-            return Ok(Some(Tensor::from_vec(&region.shape, data)?));
+            // Zero-copy receive: a registered payload backs the shard
+            // tensor directly (its drop performs the return to the root's
+            // pool); an owned payload moves in as before.
+            let payload = comm.wait_payload(req)?;
+            return Ok(Some(payload.into_tensor(&region.shape)?));
         }
         Ok(None)
     }

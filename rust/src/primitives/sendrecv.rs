@@ -6,6 +6,12 @@
 //! receive-send pair where "the add operation may not be equivalent to
 //! assignment": y_a + y_b accumulates at the source and the destination
 //! buffer is deallocated.
+//!
+//! Both receive sides are zero-copy: the forward destination wraps the
+//! arriving payload as a **pool-backed tensor** (dropping it returns the
+//! registered buffer to the source's pool), and the adjoint source adds
+//! straight out of the payload. One staged copy per direction — at the
+//! sender, the irreducible cost of C_{a→b} — is all that remains.
 
 use crate::adjoint::DistLinearOp;
 use crate::comm::Comm;
@@ -68,8 +74,12 @@ impl<T: Scalar> DistLinearOp<T> for SendRecv {
             Ok(Some(x))
         } else if rank == self.dst {
             let req = comm.irecv::<T>(self.src, self.tag)?;
-            let data = comm.wait(req)?;
-            Ok(Some(Tensor::from_vec(&self.shape, data)?))
+            // Zero-copy receive: a registered payload backs the output
+            // tensor directly — consumed read-only downstream, its drop
+            // returns the buffer to the source's pool; an owned payload
+            // moves in as before.
+            let payload = comm.wait_payload(req)?;
+            Ok(Some(payload.into_tensor(&self.shape)?))
         } else {
             Ok(None)
         }

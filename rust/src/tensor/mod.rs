@@ -1,11 +1,44 @@
-//! Dense row-major tensors.
+//! Dense row-major tensors with pluggable storage.
 //!
 //! [`Tensor<T>`] is the single data container used everywhere: local shards
 //! of distributed tensors, communication pack buffers, network parameters,
-//! and gradients. It is deliberately simple — owned, contiguous, row-major —
+//! and gradients. It is deliberately simple — contiguous, row-major —
 //! because the paper's machinery operates on *regions* of memory
 //! ([`Region`]), and a contiguous buffer plus region-copy loops (with a
 //! contiguous-innermost fast path) is all that the primitives need.
+//!
+//! ## Three-tier ownership
+//!
+//! What *backs* the buffer is pluggable, completing the crate's ownership
+//! story (see [`crate::memory`] for the full picture):
+//!
+//! 1. **Owned** — a plain `Vec<T>` the tensor owns outright. Every
+//!    constructor produces this tier; it is also where arena-scratch
+//!    buffers live while a tensor wraps them (the arena association is
+//!    the borrower's, not the tensor's — whoever took the buffer from
+//!    [`crate::memory::scratch_take`] gives it back).
+//! 2. **Registered-pool** — the tensor wraps a message buffer drawn from a
+//!    *sender's* registered comm pool ([`crate::comm`]), shared through an
+//!    `Arc`. This is how the primitives' receive sides hand payloads to
+//!    callers without a memcpy: [`Tensor::from_pooled`] /
+//!    `Payload::into_tensor` wrap the registered buffer directly, reads
+//!    are zero-copy, and dropping the tensor (or its last clone) returns
+//!    the buffer to the pool slot it was staged from.
+//!
+//! Pool-backed tensors are **copy-on-write**: the first mutable access
+//! ([`Tensor::data_mut`], [`Tensor::at_mut`], any region mutator) promotes
+//! the backing to an owned copy, so mutation never scribbles on a shared
+//! registered buffer. Promotions are counted ([`tensor_storage_stats`],
+//! surfaced as `tensor_cow_promotions` on the MetricLog next to
+//! `tensor_pool_backed`) — hot paths consume their replicas read-only, so
+//! a steady-state train step should add zero to both the scratch/pool miss
+//! counters *and* the promotion counter: "zero allocations after warm-up"
+//! now means "zero copies after warm-up" too.
+//!
+//! All region operators (`copy_region_from`, the slice-sourced unpack
+//! forms, the slice-extracting staging form, and `fill_region`) run on one
+//! shared region-offset iterator (`for_each_region_run`); the historic
+//! hand-rolled walks survive as oracles in the unit tests.
 
 mod scalar;
 mod shape;
@@ -15,13 +48,182 @@ pub use shape::{
     check_same, delinearize, for_each_index, linearize, numel, strides_for, Region,
 };
 
+use crate::comm::PooledBody;
 use crate::error::{Error, Result};
+use std::cell::Cell;
+use std::fmt;
+use std::sync::Arc;
 
-/// A dense, owned, row-major tensor.
-#[derive(Debug, Clone, PartialEq)]
+// ---------------------------------------------------------------------
+// Storage backings and their counters
+// ---------------------------------------------------------------------
+
+/// The buffer behind a [`Tensor`]: owned outright, or a registered comm
+/// message buffer consumed in place (returned to the *sender's* pool when
+/// the last holder drops).
+enum Storage<T: Scalar> {
+    /// A plain owned buffer (possibly borrowed from a scratch arena — that
+    /// association is the borrower's, not the tensor's).
+    Owned(Vec<T>),
+    /// A registered buffer from some endpoint's comm pool, shared by `Arc`
+    /// (broadcast fan-out replicas all wrap the same registration).
+    Pooled(Arc<PooledBody<T>>),
+}
+
+impl<T: Scalar> Clone for Storage<T> {
+    fn clone(&self) -> Self {
+        match self {
+            Storage::Owned(v) => Storage::Owned(v.clone()),
+            // Cloning a pool-backed tensor clones only the Arc; the
+            // registered buffer keeps a single identity and returns home
+            // once the last clone drops.
+            Storage::Pooled(p) => Storage::Pooled(p.clone()),
+        }
+    }
+}
+
+/// Counters describing how tensors used the pluggable storage on the
+/// calling thread (= rank, under [`crate::comm::Cluster`]).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TensorStorageStats {
+    /// Tensors constructed pool-backed (zero-copy receive sides). Rises
+    /// once per consumed message payload on the hot paths.
+    pub pool_backed: usize,
+    /// Copy-on-write promotions: a pool-backed tensor was mutated (or
+    /// [`Tensor::into_vec`]ed) and paid the owned copy. Steady-state train
+    /// steps should add **zero** here.
+    pub cow_promotions: usize,
+}
+
+thread_local! {
+    static STORAGE_STATS: Cell<TensorStorageStats> =
+        const { Cell::new(TensorStorageStats { pool_backed: 0, cow_promotions: 0 }) };
+}
+
+/// The calling thread's tensor-storage counters.
+pub fn tensor_storage_stats() -> TensorStorageStats {
+    STORAGE_STATS.with(|c| c.get())
+}
+
+/// Zero the calling thread's tensor-storage counters.
+pub fn reset_tensor_storage_stats() {
+    STORAGE_STATS.with(|c| c.set(TensorStorageStats::default()));
+}
+
+fn bump_pool_backed() {
+    STORAGE_STATS.with(|c| {
+        let mut s = c.get();
+        s.pool_backed += 1;
+        c.set(s);
+    });
+}
+
+fn bump_cow_promotions() {
+    STORAGE_STATS.with(|c| {
+        let mut s = c.get();
+        s.cow_promotions += 1;
+        c.set(s);
+    });
+}
+
+// ---------------------------------------------------------------------
+// The shared region-offset iterator
+// ---------------------------------------------------------------------
+
+/// Walk one rectangular region viewed in two row-major index spaces at
+/// once, visiting each contiguous innermost run: calls `f(a_off, b_off)`
+/// with the flat offsets of the run's first element in a tensor of
+/// `a_shape` (region anchored at `a_start`) and in the second side. Runs
+/// are `region_shape.last()` elements long (one for a rank-0 region).
+///
+/// This is the single substrate behind every region operator. The second
+/// side is either another strided tensor (`b = Some((b_shape, b_start))`
+/// — the tensor-to-tensor copies/adds) or, with `b = None`, the region's
+/// own **dense** row-major buffer: the slice-sourced unpack and
+/// slice-extracting staging forms, whose offsets advance by one run per
+/// visit with no stride table at all (the per-message hot paths stay at
+/// the pre-unification allocation count). Callers handle empty regions
+/// before calling.
+fn for_each_region_run(
+    a_shape: &[usize],
+    a_start: &[usize],
+    b: Option<(&[usize], &[usize])>,
+    region_shape: &[usize],
+    mut f: impl FnMut(usize, usize),
+) {
+    let rank = region_shape.len();
+    if rank == 0 {
+        f(0, 0);
+        return;
+    }
+    let run = region_shape[rank - 1];
+    let a_strides = strides_for(a_shape);
+    let a_base = a_start[rank - 1] * a_strides[rank - 1];
+    match b {
+        Some((b_shape, b_start)) => {
+            let b_strides = strides_for(b_shape);
+            let b_base = b_start[rank - 1] * b_strides[rank - 1];
+            for_each_index(&region_shape[..rank - 1], |outer_idx| {
+                let mut a_off = a_base;
+                let mut b_off = b_base;
+                for d in 0..rank - 1 {
+                    a_off += (a_start[d] + outer_idx[d]) * a_strides[d];
+                    b_off += (b_start[d] + outer_idx[d]) * b_strides[d];
+                }
+                f(a_off, b_off);
+            });
+        }
+        None => {
+            let mut b_off = 0usize;
+            for_each_index(&region_shape[..rank - 1], |outer_idx| {
+                let mut a_off = a_base;
+                for d in 0..rank - 1 {
+                    a_off += (a_start[d] + outer_idx[d]) * a_strides[d];
+                }
+                f(a_off, b_off);
+                b_off += run;
+            });
+        }
+    }
+}
+
+/// Innermost run length of a (non-empty) region shape.
+fn run_len(region_shape: &[usize]) -> usize {
+    region_shape.last().copied().unwrap_or(1)
+}
+
+/// A dense, contiguous, row-major tensor (see the module docs for the
+/// storage tiers behind it).
 pub struct Tensor<T: Scalar> {
     shape: Vec<usize>,
-    data: Vec<T>,
+    storage: Storage<T>,
+}
+
+impl<T: Scalar> Clone for Tensor<T> {
+    fn clone(&self) -> Self {
+        Tensor {
+            shape: self.shape.clone(),
+            storage: self.storage.clone(),
+        }
+    }
+}
+
+impl<T: Scalar> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Tensor")
+            .field("shape", &self.shape)
+            .field("pool_backed", &self.is_pool_backed())
+            .field("data", &self.data())
+            .finish()
+    }
+}
+
+impl<T: Scalar> PartialEq for Tensor<T> {
+    /// Value equality: shape and elements, independent of the storage
+    /// backing (a pool-backed replica equals its owned copy).
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
 }
 
 impl<T: Scalar> Tensor<T> {
@@ -29,7 +231,7 @@ impl<T: Scalar> Tensor<T> {
     pub fn zeros(shape: &[usize]) -> Self {
         Tensor {
             shape: shape.to_vec(),
-            data: vec![T::ZERO; numel(shape)],
+            storage: Storage::Owned(vec![T::ZERO; numel(shape)]),
         }
     }
 
@@ -37,7 +239,7 @@ impl<T: Scalar> Tensor<T> {
     pub fn filled(shape: &[usize], value: T) -> Self {
         Tensor {
             shape: shape.to_vec(),
-            data: vec![value; numel(shape)],
+            storage: Storage::Owned(vec![value; numel(shape)]),
         }
     }
 
@@ -54,24 +256,52 @@ impl<T: Scalar> Tensor<T> {
         }
         Ok(Tensor {
             shape: shape.to_vec(),
-            data,
+            storage: Storage::Owned(data),
         })
+    }
+
+    /// Wrap a registered comm-pool payload as a tensor **without copying**:
+    /// the buffer stays the sender's registration and flies home to its
+    /// pool slot when the tensor (or its last clone) is dropped. Reads are
+    /// zero-copy; the first mutable access promotes to an owned copy
+    /// (copy-on-write).
+    pub fn from_pooled(shape: &[usize], body: Arc<PooledBody<T>>) -> Result<Self> {
+        if body.len() != numel(shape) {
+            return Err(Error::Shape(format!(
+                "from_pooled: {} elements for shape {:?} ({} expected)",
+                body.len(),
+                shape,
+                numel(shape)
+            )));
+        }
+        bump_pool_backed();
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            storage: Storage::Pooled(body),
+        })
+    }
+
+    /// Whether this tensor is backed by a registered comm-pool buffer
+    /// (dropping it performs the return to the sender's pool).
+    pub fn is_pool_backed(&self) -> bool {
+        matches!(self.storage, Storage::Pooled(_))
     }
 
     /// Rank-0 scalar tensor.
     pub fn scalar(value: T) -> Self {
         Tensor {
             shape: vec![],
-            data: vec![value],
+            storage: Storage::Owned(vec![value]),
         }
     }
 
     /// Tensor of `shape` filled by `f(multi_index)`.
     pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> T) -> Self {
         let mut t = Tensor::zeros(shape);
+        let data = t.data_mut();
         let mut off = 0usize;
         for_each_index(shape, |idx| {
-            t.data[off] = f(idx);
+            data[off] = f(idx);
             off += 1;
         });
         t
@@ -82,7 +312,7 @@ impl<T: Scalar> Tensor<T> {
         let n = numel(shape);
         Tensor {
             shape: shape.to_vec(),
-            data: (0..n).map(|i| T::from_f64(i as f64)).collect(),
+            storage: Storage::Owned((0..n).map(|i| T::from_f64(i as f64)).collect()),
         }
     }
 
@@ -101,39 +331,80 @@ impl<T: Scalar> Tensor<T> {
     /// Element count.
     #[inline]
     pub fn numel(&self) -> usize {
-        self.data.len()
+        self.data().len()
     }
 
-    /// Flat data slice.
+    /// Flat data slice (zero-copy on every backing).
     #[inline]
     pub fn data(&self) -> &[T] {
-        &self.data
+        match &self.storage {
+            Storage::Owned(v) => v,
+            Storage::Pooled(p) => p.as_slice(),
+        }
     }
 
-    /// Mutable flat data slice.
+    /// Copy-on-write promotion: replace a pooled backing with an owned
+    /// copy before the first mutable access (the registered buffer is
+    /// shared with — and owed back to — its staging pool, so it is never
+    /// scribbled on). Counted; hot paths read their replicas only.
+    fn promote(&mut self) {
+        if let Storage::Pooled(p) = &self.storage {
+            bump_cow_promotions();
+            self.storage = Storage::Owned(p.as_slice().to_vec());
+        }
+    }
+
+    /// Promote to owned and split the borrow into the shape and the
+    /// mutable data — the shared prologue of every region mutator.
+    fn owned_parts(&mut self) -> (&[usize], &mut [T]) {
+        self.promote();
+        match &mut self.storage {
+            Storage::Owned(v) => (&self.shape, v),
+            Storage::Pooled(_) => unreachable!("promoted to owned above"),
+        }
+    }
+
+    /// Mutable flat data slice (promotes a pool-backed tensor to owned).
     #[inline]
     pub fn data_mut(&mut self) -> &mut [T] {
-        &mut self.data
+        self.promote();
+        match &mut self.storage {
+            Storage::Owned(v) => v,
+            Storage::Pooled(_) => unreachable!("promoted to owned above"),
+        }
     }
 
-    /// Consume into the flat buffer.
+    /// Consume into a flat owned buffer. An owned backing moves out for
+    /// free; a pool-backed tensor is copied out (counted as a promotion)
+    /// and the registered buffer returns to its sender's pool — buffers
+    /// are never stolen from the recycle cycle.
     pub fn into_vec(self) -> Vec<T> {
-        self.data
+        match self.storage {
+            Storage::Owned(v) => v,
+            Storage::Pooled(p) => {
+                bump_cow_promotions();
+                p.as_slice().to_vec()
+            }
+        }
     }
 
     /// Element access by multi-index.
     #[inline]
     pub fn at(&self, idx: &[usize]) -> T {
-        self.data[linearize(&self.shape, idx)]
+        self.data()[linearize(&self.shape, idx)]
     }
 
-    /// Mutable element access by multi-index.
+    /// Mutable element access by multi-index (promotes a pool-backed
+    /// tensor to owned).
     #[inline]
     pub fn at_mut(&mut self, idx: &[usize]) -> &mut T {
-        &mut self.data[linearize(&self.shape, idx)]
+        let off = linearize(&self.shape, idx);
+        &mut self.data_mut()[off]
     }
 
-    /// Reinterpret with a new shape of identical element count.
+    /// Reinterpret with a new shape of identical element count. The
+    /// backing is preserved: reshaping a pool-backed tensor clones only
+    /// the `Arc` (still zero-copy); an owned backing is copied as before.
     pub fn reshape(&self, shape: &[usize]) -> Result<Tensor<T>> {
         if numel(shape) != self.numel() {
             return Err(Error::Shape(format!(
@@ -143,7 +414,7 @@ impl<T: Scalar> Tensor<T> {
         }
         Ok(Tensor {
             shape: shape.to_vec(),
-            data: self.data.clone(),
+            storage: self.storage.clone(),
         })
     }
 
@@ -151,12 +422,17 @@ impl<T: Scalar> Tensor<T> {
     pub fn cast<U: Scalar>(&self) -> Tensor<U> {
         Tensor {
             shape: self.shape.clone(),
-            data: self.data.iter().map(|&v| U::from_f64(v.to_f64())).collect(),
+            storage: Storage::Owned(
+                self.data().iter().map(|&v| U::from_f64(v.to_f64())).collect(),
+            ),
         }
     }
 
     // ------------------------------------------------------------------
     // Region machinery — the substrate for every §2/§3 operator.
+    //
+    // All forms run on the shared offset iterator `for_each_region_run`;
+    // the pre-unification walks survive as oracles in the tests below.
     // ------------------------------------------------------------------
 
     /// Copy `src_region` of `src` into `self` starting at `dst_start`,
@@ -201,32 +477,22 @@ impl<T: Scalar> Tensor<T> {
         if src_region.is_empty() {
             return Ok(());
         }
-        let rank = src_region.rank();
-        if rank == 0 {
-            apply(&mut self.data[0], src.data[0]);
-            return Ok(());
-        }
-        // Iterate over the outer dims; the innermost dim is a contiguous run
-        // in both tensors (row-major), processed as a slice.
-        let inner = src_region.shape[rank - 1];
-        let outer_shape = &src_region.shape[..rank - 1];
-        let src_strides = strides_for(&src.shape);
-        let dst_strides = strides_for(&self.shape);
-        for_each_index(outer_shape, |outer_idx| {
-            let mut s_off = 0usize;
-            let mut d_off = 0usize;
-            for d in 0..rank - 1 {
-                s_off += (src_region.start[d] + outer_idx[d]) * src_strides[d];
-                d_off += (dst_start[d] + outer_idx[d]) * dst_strides[d];
-            }
-            s_off += src_region.start[rank - 1] * src_strides[rank - 1];
-            d_off += dst_start[rank - 1] * dst_strides[rank - 1];
-            let s_run = &src.data[s_off..s_off + inner];
-            let d_run = &mut self.data[d_off..d_off + inner];
-            for (d, &s) in d_run.iter_mut().zip(s_run.iter()) {
-                apply(d, s);
-            }
-        });
+        let run = run_len(&src_region.shape);
+        let (dst_shape, dst_data) = self.owned_parts();
+        let src_data = src.data();
+        for_each_region_run(
+            &src.shape,
+            &src_region.start,
+            Some((dst_shape, dst_start)),
+            &src_region.shape,
+            |s_off, d_off| {
+                let d_run = &mut dst_data[d_off..d_off + run];
+                let s_run = &src_data[s_off..s_off + run];
+                for (d, &s) in d_run.iter_mut().zip(s_run.iter()) {
+                    apply(d, s);
+                }
+            },
+        );
         Ok(())
     }
 
@@ -263,28 +529,21 @@ impl<T: Scalar> Tensor<T> {
         if dst_region.is_empty() {
             return Ok(());
         }
-        let rank = dst_region.rank();
-        if rank == 0 {
-            apply(&mut self.data[0], src[0]);
-            return Ok(());
-        }
-        let inner = dst_region.shape[rank - 1];
-        let outer_shape = &dst_region.shape[..rank - 1];
-        let dst_strides = strides_for(&self.shape);
-        let mut s_off = 0usize;
-        for_each_index(outer_shape, |outer_idx| {
-            let mut d_off = 0usize;
-            for d in 0..rank - 1 {
-                d_off += (dst_region.start[d] + outer_idx[d]) * dst_strides[d];
-            }
-            d_off += dst_region.start[rank - 1] * dst_strides[rank - 1];
-            let d_run = &mut self.data[d_off..d_off + inner];
-            let s_run = &src[s_off..s_off + inner];
-            for (d, &s) in d_run.iter_mut().zip(s_run.iter()) {
-                apply(d, s);
-            }
-            s_off += inner;
-        });
+        let run = run_len(&dst_region.shape);
+        let (dst_shape, dst_data) = self.owned_parts();
+        for_each_region_run(
+            dst_shape,
+            &dst_region.start,
+            None, // second side = the dense payload slice
+            &dst_region.shape,
+            |d_off, s_off| {
+                let d_run = &mut dst_data[d_off..d_off + run];
+                let s_run = &src[s_off..s_off + run];
+                for (d, &s) in d_run.iter_mut().zip(s_run.iter()) {
+                    apply(d, s);
+                }
+            },
+        );
         Ok(())
     }
 
@@ -303,24 +562,17 @@ impl<T: Scalar> Tensor<T> {
         if region.is_empty() {
             return Ok(());
         }
-        let rank = region.rank();
-        if rank == 0 {
-            dst[0] = self.data[0];
-            return Ok(());
-        }
-        let inner = region.shape[rank - 1];
-        let outer_shape = &region.shape[..rank - 1];
-        let src_strides = strides_for(&self.shape);
-        let mut d_off = 0usize;
-        for_each_index(outer_shape, |outer_idx| {
-            let mut s_off = 0usize;
-            for d in 0..rank - 1 {
-                s_off += (region.start[d] + outer_idx[d]) * src_strides[d];
-            }
-            s_off += region.start[rank - 1] * src_strides[rank - 1];
-            dst[d_off..d_off + inner].copy_from_slice(&self.data[s_off..s_off + inner]);
-            d_off += inner;
-        });
+        let run = run_len(&region.shape);
+        let src_data = self.data();
+        for_each_region_run(
+            &self.shape,
+            &region.start,
+            None, // second side = the dense staging buffer
+            &region.shape,
+            |s_off, d_off| {
+                dst[d_off..d_off + run].copy_from_slice(&src_data[s_off..s_off + run]);
+            },
+        );
         Ok(())
     }
 
@@ -340,27 +592,17 @@ impl<T: Scalar> Tensor<T> {
         if region.is_empty() {
             return Ok(());
         }
-        let rank = region.rank();
-        if rank == 0 {
-            self.data[0] = value;
-            return Ok(());
-        }
-        let inner = region.shape[rank - 1];
-        let strides = strides_for(&self.shape);
-        let outer_shape = region.shape[..rank - 1].to_vec();
-        // Collect offsets first to avoid borrowing issues in the closure.
-        let mut offsets = Vec::new();
-        for_each_index(&outer_shape, |outer_idx| {
-            let mut off = 0usize;
-            for d in 0..rank - 1 {
-                off += (region.start[d] + outer_idx[d]) * strides[d];
-            }
-            off += region.start[rank - 1] * strides[rank - 1];
-            offsets.push(off);
-        });
-        for off in offsets {
-            self.data[off..off + inner].fill(value);
-        }
+        let run = run_len(&region.shape);
+        let (dst_shape, data) = self.owned_parts();
+        for_each_region_run(
+            dst_shape,
+            &region.start,
+            None,
+            &region.shape,
+            |off, _| {
+                data[off..off + run].fill(value);
+            },
+        );
         Ok(())
     }
 }
@@ -440,6 +682,194 @@ mod tests {
         assert!(src.extract_region_to_slice(&region, &mut buf[..5]).is_err());
     }
 
+    // ------------------------------------------------------------------
+    // The pre-unification hand-rolled walks, kept verbatim (modulo the
+    // accessor-based field access) as oracles for the shared offset
+    // iterator.
+    // ------------------------------------------------------------------
+
+    fn region_op_oracle<T: Scalar>(
+        dst: &mut Tensor<T>,
+        src: &Tensor<T>,
+        src_region: &Region,
+        dst_start: &[usize],
+        mut apply: impl FnMut(&mut T, T),
+    ) {
+        if src_region.is_empty() {
+            return;
+        }
+        let rank = src_region.rank();
+        if rank == 0 {
+            let s = src.data()[0];
+            apply(&mut dst.data_mut()[0], s);
+            return;
+        }
+        let inner = src_region.shape[rank - 1];
+        let outer_shape = src_region.shape[..rank - 1].to_vec();
+        let src_strides = strides_for(src.shape());
+        let dst_strides = strides_for(dst.shape());
+        let src_data = src.data().to_vec();
+        let dst_data = dst.data_mut();
+        for_each_index(&outer_shape, |outer_idx| {
+            let mut s_off = 0usize;
+            let mut d_off = 0usize;
+            for d in 0..rank - 1 {
+                s_off += (src_region.start[d] + outer_idx[d]) * src_strides[d];
+                d_off += (dst_start[d] + outer_idx[d]) * dst_strides[d];
+            }
+            s_off += src_region.start[rank - 1] * src_strides[rank - 1];
+            d_off += dst_start[rank - 1] * dst_strides[rank - 1];
+            let d_run = &mut dst_data[d_off..d_off + inner];
+            let s_run = &src_data[s_off..s_off + inner];
+            for (d, &s) in d_run.iter_mut().zip(s_run.iter()) {
+                apply(d, s);
+            }
+        });
+    }
+
+    fn region_op_slice_oracle<T: Scalar>(
+        dst: &mut Tensor<T>,
+        dst_region: &Region,
+        src: &[T],
+        mut apply: impl FnMut(&mut T, T),
+    ) {
+        if dst_region.is_empty() {
+            return;
+        }
+        let rank = dst_region.rank();
+        if rank == 0 {
+            apply(&mut dst.data_mut()[0], src[0]);
+            return;
+        }
+        let inner = dst_region.shape[rank - 1];
+        let outer_shape = dst_region.shape[..rank - 1].to_vec();
+        let dst_strides = strides_for(dst.shape());
+        let dst_data = dst.data_mut();
+        let mut s_off = 0usize;
+        for_each_index(&outer_shape, |outer_idx| {
+            let mut d_off = 0usize;
+            for d in 0..rank - 1 {
+                d_off += (dst_region.start[d] + outer_idx[d]) * dst_strides[d];
+            }
+            d_off += dst_region.start[rank - 1] * dst_strides[rank - 1];
+            let d_run = &mut dst_data[d_off..d_off + inner];
+            let s_run = &src[s_off..s_off + inner];
+            for (d, &s) in d_run.iter_mut().zip(s_run.iter()) {
+                apply(d, s);
+            }
+            s_off += inner;
+        });
+    }
+
+    fn extract_region_to_slice_oracle<T: Scalar>(
+        src: &Tensor<T>,
+        region: &Region,
+        dst: &mut [T],
+    ) {
+        if region.is_empty() {
+            return;
+        }
+        let rank = region.rank();
+        if rank == 0 {
+            dst[0] = src.data()[0];
+            return;
+        }
+        let inner = region.shape[rank - 1];
+        let outer_shape = region.shape[..rank - 1].to_vec();
+        let src_strides = strides_for(src.shape());
+        let src_data = src.data();
+        let mut d_off = 0usize;
+        for_each_index(&outer_shape, |outer_idx| {
+            let mut s_off = 0usize;
+            for d in 0..rank - 1 {
+                s_off += (region.start[d] + outer_idx[d]) * src_strides[d];
+            }
+            s_off += region.start[rank - 1] * src_strides[rank - 1];
+            dst[d_off..d_off + inner].copy_from_slice(&src_data[s_off..s_off + inner]);
+            d_off += inner;
+        });
+    }
+
+    #[test]
+    fn unified_region_walk_matches_reference_oracles() {
+        let mut rng = crate::util::rng::SplitMix64::new(0x5EED);
+        for case in 0..60 {
+            // random tensor rank 1..=4 with small dims, and a random
+            // in-bounds region + destination anchor
+            let rank = 1 + case % 4;
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + (rng.next_u64() % 5) as usize).collect();
+            let dst_shape: Vec<usize> =
+                (0..rank).map(|_| 1 + (rng.next_u64() % 5) as usize).collect();
+            let region_shape: Vec<usize> = shape
+                .iter()
+                .zip(dst_shape.iter())
+                .map(|(&a, &b)| {
+                    let m = a.min(b);
+                    // zero extents exercise the empty-region early-outs
+                    (rng.next_u64() % (m as u64 + 1)) as usize
+                })
+                .collect();
+            let start: Vec<usize> = shape
+                .iter()
+                .zip(region_shape.iter())
+                .map(|(&n, &r)| (rng.next_u64() % (n - r + 1) as u64) as usize)
+                .collect();
+            let dst_start: Vec<usize> = dst_shape
+                .iter()
+                .zip(region_shape.iter())
+                .map(|(&n, &r)| (rng.next_u64() % (n - r + 1) as u64) as usize)
+                .collect();
+            let region = Region::new(start, region_shape.clone());
+            let src = Tensor::<f64>::from_fn(&shape, |_| rng.next_f64() - 0.5);
+            let base = Tensor::<f64>::from_fn(&dst_shape, |_| rng.next_f64() - 0.5);
+
+            // tensor-to-tensor copy and add
+            for add in [false, true] {
+                let mut got = base.clone();
+                let mut want = base.clone();
+                if add {
+                    got.add_region_from(&src, &region, &dst_start).unwrap();
+                    region_op_oracle(&mut want, &src, &region, &dst_start, |d, s| *d += s);
+                } else {
+                    got.copy_region_from(&src, &region, &dst_start).unwrap();
+                    region_op_oracle(&mut want, &src, &region, &dst_start, |d, s| *d = s);
+                }
+                assert_eq!(got, want, "tensor region op (add={add})");
+            }
+
+            // slice extraction
+            let n = numel(&region_shape);
+            let mut got_buf = vec![0.0; n];
+            let mut want_buf = vec![0.0; n];
+            src.extract_region_to_slice(&region, &mut got_buf).unwrap();
+            extract_region_to_slice_oracle(&src, &region, &mut want_buf);
+            assert_eq!(got_buf, want_buf, "extract_region_to_slice");
+
+            // slice-sourced copy and add (region anchored in the dst
+            // tensor's own index space)
+            let dst_region = Region::new(dst_start.clone(), region_shape.clone());
+            for add in [false, true] {
+                let mut got = base.clone();
+                let mut want = base.clone();
+                if add {
+                    got.add_region_from_slice(&dst_region, &got_buf).unwrap();
+                    region_op_slice_oracle(&mut want, &dst_region, &got_buf, |d, s| *d += s);
+                } else {
+                    got.copy_region_from_slice(&dst_region, &got_buf).unwrap();
+                    region_op_slice_oracle(&mut want, &dst_region, &got_buf, |d, s| *d = s);
+                }
+                assert_eq!(got, want, "slice region op (add={add})");
+            }
+
+            // fill_region against a fresh independent walk
+            let mut got = base.clone();
+            let mut want = base.clone();
+            got.fill_region(&dst_region, 7.5).unwrap();
+            region_op_slice_oracle(&mut want, &dst_region, &vec![7.5; n], |d, s| *d = s);
+            assert_eq!(got, want, "fill_region");
+        }
+    }
+
     #[test]
     fn region_copy_bounds_checked() {
         let src = Tensor::<f32>::zeros(&[2, 2]);
@@ -482,5 +912,86 @@ mod tests {
     fn from_fn_indexes() {
         let t = Tensor::<f64>::from_fn(&[2, 2], |i| (i[0] * 10 + i[1]) as f64);
         assert_eq!(t.data(), &[0.0, 1.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn pool_backed_tensor_copy_on_write_semantics() {
+        // Build a genuine registered payload through the comm engine and
+        // check the whole storage contract: zero-copy reads, Arc-sharing
+        // clones and reshapes, copy-on-write promotion on mutation, and
+        // the buffer's journey home once the last holder drops.
+        crate::comm::Cluster::run(2, |comm| {
+            comm.set_pool_cap_bytes(None);
+            if comm.rank() == 0 {
+                let mut stage = comm.pool_take::<f64>(6);
+                for (i, v) in stage.iter_mut().enumerate() {
+                    *v = i as f64;
+                }
+                let req = comm.isend_pooled(1, 3, stage)?;
+                comm.wait_send(req)?;
+                comm.barrier(); // receiver consumed, promoted, and dropped
+                let s = comm.pool_stats();
+                assert_eq!(s.returns, 1, "CoW must not steal the registered buffer");
+            } else {
+                let req = comm.irecv::<f64>(0, 3)?;
+                let payload = comm.wait_payload(req)?;
+                reset_tensor_storage_stats();
+                let mut t = payload.into_tensor(&[2, 3])?;
+                assert!(t.is_pool_backed());
+                assert_eq!(tensor_storage_stats().pool_backed, 1);
+                // reads are zero-copy
+                assert_eq!(t.at(&[1, 2]), 5.0);
+                assert_eq!(tensor_storage_stats().cow_promotions, 0);
+                // clones and reshapes share the registration
+                let snap = t.clone();
+                let flat = t.reshape(&[6])?;
+                assert!(snap.is_pool_backed() && flat.is_pool_backed());
+                // value equality is independent of the backing
+                let owned =
+                    Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f64).collect())?;
+                assert_eq!(snap, owned);
+                // first mutation promotes this tensor only
+                *t.at_mut(&[0, 0]) = 42.0;
+                assert!(!t.is_pool_backed());
+                assert_eq!(tensor_storage_stats().cow_promotions, 1);
+                assert_eq!(t.at(&[0, 0]), 42.0);
+                assert_eq!(snap.at(&[0, 0]), 0.0, "clone must keep the shared contents");
+                // into_vec on a pooled backing copies out (and counts)
+                let v = snap.into_vec();
+                assert_eq!(v[5], 5.0);
+                assert_eq!(tensor_storage_stats().cow_promotions, 2);
+                drop(flat);
+                comm.barrier();
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn pool_backed_region_mutators_promote_once() {
+        crate::comm::Cluster::run(2, |comm| {
+            comm.set_pool_cap_bytes(None);
+            if comm.rank() == 0 {
+                let mut stage = comm.pool_take::<f64>(4);
+                stage.fill(1.0);
+                let req = comm.isend_pooled(1, 9, stage)?;
+                comm.wait_send(req)?;
+                comm.barrier();
+            } else {
+                let req = comm.irecv::<f64>(0, 9)?;
+                let mut t = comm.wait_payload(req)?.into_tensor(&[2, 2])?;
+                reset_tensor_storage_stats();
+                t.fill_region(&Region::new(vec![0, 0], vec![1, 2]), 3.0)?;
+                t.add_region_from_slice(&Region::full(&[2, 2]), &[1.0; 4])?;
+                assert_eq!(t.data(), &[4.0, 4.0, 2.0, 2.0]);
+                // one promotion on the first mutator, none after
+                assert_eq!(tensor_storage_stats().cow_promotions, 1);
+                drop(t);
+                comm.barrier();
+            }
+            Ok(())
+        })
+        .unwrap();
     }
 }

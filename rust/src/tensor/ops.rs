@@ -4,6 +4,13 @@
 //! [`crate::primitives`] compose them with data movement. The inner product
 //! here is the standard Euclidean inner product of Eq. (2), which fixes the
 //! adjoints of every operator in the paper.
+//!
+//! Every reading op here is zero-copy on any storage backing; the in-place
+//! mutators (`add_assign`, `axpy`, `scale_assign`) go through
+//! [`Tensor::data_mut`], so applying them to a pool-backed tensor first
+//! promotes it to an owned copy (copy-on-write) — the shared registered
+//! buffer is never written through. Hot paths keep their pool-backed
+//! replicas read-only and the promotion counter at zero.
 
 use super::{Scalar, Tensor};
 use crate::error::{Error, Result};

@@ -17,11 +17,12 @@ use distdl::adjoint::{adjoint_residual, assert_coherent, DistLinearOp};
 use distdl::comm::{Cluster, Comm, RecvRequest};
 use distdl::error::Result;
 use distdl::halo::{HaloGeometry, KernelSpec};
+use distdl::memory::{scratch_set_cap_bytes, scratch_stats};
 use distdl::partition::{Partition, TensorDecomposition};
 use distdl::primitives::{
     Broadcast, Gather, HaloExchange, Repartition, Scatter, SendRecv, SumReduce,
 };
-use distdl::tensor::Tensor;
+use distdl::tensor::{reset_tensor_storage_stats, tensor_storage_stats, Tensor};
 
 /// Wrap an operator so every collective call first pins the calling
 /// rank's pool cap to one byte: every return is evicted, every acquire
@@ -228,6 +229,270 @@ fn tiny_cap_coherence_still_counts_evictions() {
         Ok(())
     })
     .unwrap();
+}
+
+#[test]
+fn scatter_receive_side_steady_state_zero_alloc_zero_copy() {
+    // The scatter receive side hands each non-root rank a pool-backed
+    // tensor wrapping the root's registered buffer: steady-state steps
+    // must show zero pool misses on every rank AND zero copies (no
+    // copy-on-write promotions — the shards are consumed read-only).
+    let n = 23usize;
+    let world = 4;
+    let d = TensorDecomposition::new(Partition::from_shape(&[world]), &[n]).unwrap();
+    let sc = Scatter::new(d, 0, 700);
+    let per = Cluster::run(world, |comm| {
+        comm.set_pool_cap_bytes(None);
+        let rank = comm.rank();
+        let step = |comm: &mut Comm| -> Result<()> {
+            let x = (rank == 0).then(|| Tensor::<f64>::iota(&[n]));
+            let out = sc.forward(comm, x)?;
+            let t = out.expect("every rank owns a shard");
+            if rank != 0 {
+                assert!(
+                    t.is_pool_backed(),
+                    "scatter receive must wrap the registered buffer"
+                );
+            }
+            Ok(())
+        };
+        for _ in 0..3 {
+            step(comm)?;
+            comm.barrier(); // shards dropped -> returns land at the root
+        }
+        reset_tensor_storage_stats();
+        let miss0 = comm.pool_stats().misses;
+        for _ in 0..5 {
+            step(comm)?;
+            comm.barrier();
+        }
+        let ts = tensor_storage_stats();
+        Ok((
+            rank,
+            comm.pool_stats().misses - miss0,
+            ts.cow_promotions,
+            ts.pool_backed,
+        ))
+    })
+    .unwrap();
+    for (rank, misses, cow, pool_backed) in per {
+        assert_eq!(misses, 0, "rank {rank} pool misses in steady state");
+        assert_eq!(cow, 0, "rank {rank} copied a pool-backed receive");
+        if rank != 0 {
+            assert_eq!(pool_backed, 5, "rank {rank} receives not pool-backed");
+        }
+    }
+}
+
+#[test]
+fn sendrecv_receive_sides_steady_state_zero_alloc_zero_copy() {
+    // Forward: the destination's tensor wraps the source's registered
+    // buffer. Adjoint: the source accumulates straight out of the
+    // destination's staged payload. A steady forward+adjoint loop must
+    // run at zero pool misses and zero copy-on-write promotions on both
+    // ranks.
+    let op = SendRecv::new(0, 1, &[4, 3], 720);
+    Cluster::run(2, |comm| {
+        comm.set_pool_cap_bytes(None);
+        let rank = comm.rank();
+        let step = |comm: &mut Comm| -> Result<()> {
+            let x = (rank == 0).then(|| Tensor::<f64>::iota(&[4, 3]));
+            let y = op.forward(comm, x)?;
+            if rank == 1 {
+                assert!(
+                    y.as_ref().expect("destination replica").is_pool_backed(),
+                    "send-recv receive must wrap the registered buffer"
+                );
+            }
+            let back = op.adjoint(comm, y)?;
+            assert_eq!(back.is_some(), rank == 0, "adjoint lands at the source");
+            Ok(())
+        };
+        for _ in 0..3 {
+            step(comm)?;
+            comm.barrier();
+        }
+        reset_tensor_storage_stats();
+        let miss0 = comm.pool_stats().misses;
+        for _ in 0..6 {
+            step(comm)?;
+            comm.barrier();
+        }
+        assert_eq!(
+            comm.pool_stats().misses - miss0,
+            0,
+            "rank {rank} pool misses in steady state"
+        );
+        assert_eq!(
+            tensor_storage_stats().cow_promotions,
+            0,
+            "rank {rank} copied a pool-backed payload"
+        );
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn broadcast_destinations_zero_copy_pool_on_and_off() {
+    // Regression for the PR-4 uniform give-back contract: pure-destination
+    // members used to stage an arena replica copy even with the pool
+    // disabled. Now the replica is the payload itself — pool-backed when
+    // the pool is on, the moved engine buffer when it is off — and the
+    // destination path touches the scratch arena in neither mode.
+    for pool_on in [true, false] {
+        let world = 3;
+        let op = Broadcast::replicate(0, world, &[8], 740).unwrap();
+        let per = Cluster::run(world, |comm| {
+            comm.set_comm_pool(pool_on);
+            comm.set_pool_cap_bytes(None);
+            scratch_set_cap_bytes::<f64>(None);
+            let rank = comm.rank();
+            let before = scratch_stats::<f64>();
+            reset_tensor_storage_stats();
+            let x = (rank == 0).then(|| Tensor::<f64>::iota(&[8]));
+            let out = op.forward(comm, x)?.expect("replica on every rank");
+            assert_eq!(out.data(), Tensor::<f64>::iota(&[8]).data());
+            let after = scratch_stats::<f64>();
+            let arena_takes =
+                (after.allocations + after.reuses) - (before.allocations + before.reuses);
+            let pooled = out.is_pool_backed();
+            drop(out);
+            comm.barrier();
+            Ok((rank, arena_takes, pooled))
+        })
+        .unwrap();
+        for (rank, arena_takes, pooled) in per {
+            assert_eq!(
+                arena_takes, 0,
+                "rank {rank} staged an arena replica copy (pool_on={pool_on})"
+            );
+            if rank != 0 {
+                assert_eq!(
+                    pooled, pool_on,
+                    "rank {rank} replica backing (pool_on={pool_on})"
+                );
+            }
+        }
+    }
+}
+
+/// Scatter → gather through pool-backed intermediate shards: each rank's
+/// mid tensor wraps a registered buffer that crosses into the next
+/// primitive — the stash shape of the conv/affine layer paths. The
+/// composite permutes the root's realization back to itself, and Eq. 13
+/// coherence through it under the 1-byte cap proves eviction-pressured
+/// copy-on-write cannot corrupt a payload held across primitives.
+struct PoolBackedRoundtrip {
+    sc: Scatter,
+    ga: Gather,
+}
+
+impl DistLinearOp<f64> for PoolBackedRoundtrip {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        <Scatter as DistLinearOp<f64>>::domain_shape(&self.sc, rank)
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        <Gather as DistLinearOp<f64>>::codomain_shape(&self.ga, rank)
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+        comm.set_pool_cap_bytes(Some(1));
+        let mid = self.sc.forward(comm, x)?;
+        self.ga.forward(comm, mid)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<f64>>) -> Result<Option<Tensor<f64>>> {
+        comm.set_pool_cap_bytes(Some(1));
+        let mid = self.ga.adjoint(comm, y)?;
+        self.sc.adjoint(comm, mid)
+    }
+
+    fn name(&self) -> String {
+        "PoolBackedRoundtrip(G∘S)".into()
+    }
+}
+
+#[test]
+fn eq13_coherence_through_pool_backed_stashes_under_tiny_cap() {
+    for seed in [5u64, 23, 77] {
+        for (n, world, root) in [(11usize, 4usize, 0usize), (7, 3, 1)] {
+            let d = TensorDecomposition::new(Partition::from_shape(&[world]), &[n]).unwrap();
+            let op = PoolBackedRoundtrip {
+                sc: Scatter::new(d.clone(), root, 760),
+                ga: Gather::new(d, root, 780),
+            };
+            assert_coherent::<f64>(world, &op, seed);
+        }
+    }
+}
+
+#[test]
+fn conv_train_step_parity_under_one_byte_pool_cap() {
+    // Copy-on-write promotion under constant eviction: the conv layer
+    // stashes its ŵ replica pool-backed across the whole step; with a
+    // 1-byte cap every return is evicted and every acquire misses, and
+    // the results must still match the pool-off move-semantics reference
+    // exactly.
+    use distdl::autograd::Layer;
+    use distdl::nn::layers::{Conv2dConfig, DistConv2d};
+    use distdl::nn::NativeKernels;
+    use distdl::util::rng::SplitMix64;
+    use std::sync::Arc;
+
+    let layer = DistConv2d::<f64>::new(
+        "c",
+        Conv2dConfig {
+            global_in: [2, 2, 10, 9],
+            out_channels: 3,
+            kernel: (3, 3),
+            stride: (1, 1),
+            padding: (1, 1),
+            grid: (2, 2),
+            ranks: vec![0, 1, 2, 3],
+            tag: 50_000,
+        },
+        Arc::new(NativeKernels),
+    )
+    .unwrap();
+    let run = |tiny_cap: bool| -> Vec<(Option<Vec<f64>>, Vec<Vec<f64>>)> {
+        Cluster::run(4, |comm| {
+            if tiny_cap {
+                comm.set_pool_cap_bytes(Some(1));
+            } else {
+                comm.set_comm_pool(false);
+            }
+            let rank = comm.rank();
+            let mut st = layer.init(rank, 7)?;
+            let in_shape = layer.local_in_shape(rank).expect("on grid");
+            let mut rng = SplitMix64::new(11 ^ ((rank as u64) << 2));
+            let x = Tensor::from_vec(
+                &in_shape,
+                (0..distdl::tensor::numel(&in_shape))
+                    .map(|_| rng.next_f64() - 0.5)
+                    .collect(),
+            )?;
+            let y = layer
+                .forward(&mut st, comm, Some(x), true)?
+                .expect("grid output");
+            let dy = Tensor::from_vec(
+                y.shape(),
+                (0..y.numel()).map(|_| rng.next_f64() - 0.5).collect(),
+            )?;
+            let dx = layer.backward(&mut st, comm, Some(dy))?;
+            let grads: Vec<Vec<f64>> =
+                st.grads.iter().map(|g| g.data().to_vec()).collect();
+            Ok((dx.map(Tensor::into_vec), grads))
+        })
+        .unwrap()
+    };
+    let reference = run(false);
+    let capped = run(true);
+    assert_eq!(
+        reference, capped,
+        "a 1-byte pool cap must be numerically invisible"
+    );
 }
 
 #[test]
