@@ -12,6 +12,10 @@
 //!   schedule (split adjoint halo exchange with the δw/δb GEMMs and
 //!   parameter sum-reduce in flight) against the serialized parity
 //!   schedule — the measured backward-pass overlap speedup;
+//! * **E14** times the hybrid data×model train step (R replicas × the
+//!   4-worker grid, total batch fixed) with gradient ring-averaging
+//!   serialized after backward vs riding the backward overlap window —
+//!   the DP-overlap speedup, with `allocs/step` staying at zero;
 //! * the step table's `allocs/step` column counts fresh scratch-arena
 //!   allocations **plus registered comm-pool misses** per steady-state
 //!   step on rank 0 (warm-up excluded) — zero means every im2col/staging/
@@ -22,20 +26,24 @@
 //! Setup (network build, parameter init, PJRT compilation) happens once
 //! per configuration inside a single cluster; the timed region is the
 //! steady-state per-step cost, which is what the training loop pays.
+//! Every table also lands in `BENCH_lenet_step.json` at the repository
+//! root (`testing::bench::BenchSnapshot`) for cross-commit diffing.
 
 use distdl::comm::Cluster;
 use distdl::config::Backend;
-use distdl::coordinator::{kernels_for, train_step};
+use distdl::coordinator::{kernels_for, train_step, train_step_hybrid, DP_TAG_BASE};
 use distdl::data::SyntheticMnist;
 use distdl::memory::scratch_stats;
-use distdl::models::{lenet5, LeNetConfig, LeNetLayout};
+use distdl::models::{lenet5, lenet5_at, LeNetConfig, LeNetLayout};
 use distdl::nn::layers::set_adjoint_overlap;
 use distdl::nn::native::{
     conv2d_backward, conv2d_backward_naive, conv2d_forward, conv2d_forward_naive, Conv2dSpec,
 };
+use distdl::optim::dp::{set_dp_overlap, DataParallel};
 use distdl::optim::Adam;
+use distdl::partition::HybridTopology;
 use distdl::tensor::{numel, Tensor};
-use distdl::testing::bench::fmt_time;
+use distdl::testing::bench::{fmt_time, BenchSnapshot};
 use distdl::util::rng::SplitMix64;
 use distdl::util::timer::{Stats, Timer};
 
@@ -94,6 +102,91 @@ fn measure(
     .expect("bench cluster");
     let (times, allocs) = &samples[0];
     (Stats::of(times), *allocs as f64 / iters as f64)
+}
+
+/// Hybrid data×model step: `replicas` copies of the 4-worker grid, total
+/// batch split into `batch / replicas` micro-batches, gradients
+/// ring-averaged (overlapped with backward or serialized after it).
+fn measure_hybrid(replicas: usize, batch: usize, iters: usize, overlap: bool) -> (Stats, f64) {
+    set_dp_overlap(overlap);
+    let layout = LeNetLayout::FourWorker;
+    let micro = batch / replicas;
+    let topo = HybridTopology::new(replicas, layout.world_size()).expect("topology");
+    let data = SyntheticMnist::new(1, micro * replicas);
+    let batches = data.batches(micro);
+    let cfg = LeNetConfig {
+        batch: micro,
+        layout,
+    };
+    let samples = Cluster::run(topo.world(), |comm| {
+        comm.pool_reserve(distdl::coordinator::PIPELINE_POOL_DEPTH);
+        let rank = comm.rank();
+        let replica = topo.replica_of(rank);
+        let root = topo.world_rank(replica, 0);
+        let kernels = kernels_for(Backend::Native, "artifacts")?;
+        let net = lenet5_at::<f32>(&cfg, kernels, root)?;
+        let mut st = net.init(rank, 1)?;
+        let mut opt = Adam::new(1e-3);
+        let mut dp = DataParallel::<f32>::for_rank(&topo, rank, DP_TAG_BASE);
+        let batch0 = batches[replica % batches.len()].clone();
+        for _ in 0..3 {
+            let x = (rank == root).then(|| batch0.images_as::<f32>());
+            train_step_hybrid(
+                &net, &mut st, comm, root, x, &batch0.labels, &mut opt, &mut dp, &mut || {},
+            )?;
+        }
+        comm.barrier();
+        let alloc0 = scratch_stats::<f32>().allocations;
+        let pool0 = comm.pool_stats().misses;
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            comm.barrier();
+            let t = Timer::start();
+            let x = (rank == root).then(|| batch0.images_as::<f32>());
+            train_step_hybrid(
+                &net, &mut st, comm, root, x, &batch0.labels, &mut opt, &mut dp, &mut || {},
+            )?;
+            comm.barrier();
+            times.push(t.elapsed_s());
+        }
+        let allocs = (scratch_stats::<f32>().allocations - alloc0)
+            + (comm.pool_stats().misses - pool0);
+        Ok((times, allocs))
+    })
+    .expect("hybrid bench cluster");
+    set_dp_overlap(true);
+    let (times, allocs) = &samples[0];
+    (Stats::of(times), *allocs as f64 / iters as f64)
+}
+
+/// E14: hybrid DP step — gradient averaging serialized after backward vs
+/// riding the backward overlap window, at fixed total batch.
+fn hybrid_dp_speedup(batch: usize, iters: usize, snap: &mut BenchSnapshot) {
+    println!(
+        "\n== E14: hybrid DP — serialized vs overlapped gradient averaging (R × 4-worker, batch {batch}, native) =="
+    );
+    println!(
+        "{:<34} {:>12} {:>12} {:>9} {:>12}",
+        "configuration", "serialized", "overlapped", "speedup", "allocs/step"
+    );
+    for replicas in [2usize, 4] {
+        let (serial, _) = measure_hybrid(replicas, batch, iters, false);
+        let (overlap, allocs) = measure_hybrid(replicas, batch, iters, true);
+        let name = format!("R={replicas} x 4-worker train-step");
+        println!(
+            "{:<34} {:>12} {:>12} {:>8.2}x {:>12.1}",
+            name,
+            fmt_time(serial.median),
+            fmt_time(overlap.median),
+            serial.median / overlap.median,
+            allocs
+        );
+        let row = format!("hybrid_dp R={replicas}");
+        snap.num(&row, "serialized_median_s", serial.median);
+        snap.num(&row, "overlapped_median_s", overlap.median);
+        snap.num(&row, "speedup", serial.median / overlap.median);
+        snap.num(&row, "allocs_per_step", allocs);
+    }
 }
 
 fn rand_t(shape: &[usize], rng: &mut SplitMix64) -> Tensor<f32> {
@@ -162,7 +255,7 @@ fn kernel_speedup() {
 /// E13: the distributed backward pass with the split-adjoint overlap
 /// schedule vs the serialized parity schedule (one-shot VJP, sum-reduce,
 /// monolithic adjoint exchange), on the native backend.
-fn backward_overlap_speedup(batch: usize, iters: usize) {
+fn backward_overlap_speedup(batch: usize, iters: usize, snap: &mut BenchSnapshot) {
     println!("\n== E13: backward overlap — serialized vs split-adjoint train step (4 workers, native) ==");
     println!(
         "{:<34} {:>12} {:>12} {:>9} {:>12}",
@@ -180,9 +273,14 @@ fn backward_overlap_speedup(batch: usize, iters: usize) {
         serial.median / overlap.median,
         allocs
     );
+    snap.num("backward_overlap", "serialized_median_s", serial.median);
+    snap.num("backward_overlap", "overlapped_median_s", overlap.median);
+    snap.num("backward_overlap", "speedup", serial.median / overlap.median);
+    snap.num("backward_overlap", "allocs_per_step", allocs);
 }
 
 fn main() {
+    let mut snap = BenchSnapshot::new("lenet_step");
     kernel_speedup();
     println!("\n== E9: LeNet-5 step latency (batch 64, steady state) ==");
     println!(
@@ -228,10 +326,21 @@ fn main() {
                     stats.n,
                     allocs_per_step
                 );
+                let row = name.split_whitespace().collect::<Vec<_>>().join(" ");
+                snap.num(&row, "mean_s", stats.mean);
+                snap.num(&row, "median_s", stats.median);
+                snap.num(&row, "min_s", stats.min);
+                snap.num(&row, "samples", stats.n as f64);
+                snap.num(&row, "allocs_per_step", allocs_per_step);
             }
         }
     }
     if filter.is_none() {
-        backward_overlap_speedup(batch, iters);
+        backward_overlap_speedup(batch, iters, &mut snap);
+        hybrid_dp_speedup(batch, iters, &mut snap);
+    }
+    match snap.write() {
+        Ok(path) => println!("\nsnapshot: {}", path.display()),
+        Err(e) => eprintln!("snapshot write failed: {e}"),
     }
 }

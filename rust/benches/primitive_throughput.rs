@@ -22,9 +22,18 @@
 //! spawn-overhead regime the pool targets — plus a worker-count scaling
 //! sweep (`gemm_with_workers`).
 //!
+//! A `[ring]` column times the bandwidth-optimal ring all-reduce (the
+//! derived hybrid-DP primitive) over the same traffic as the `[nonblocking]`
+//! tree all-reduce; its `bytes` column is the analytic ring volume
+//! `Σᵢ elems_sent_by(i)·8` — each member moves `2(R−1)/R·N` elements —
+//! and the unit tests in `primitives::ring` pin the measured wire payload
+//! to exactly that number.
+//!
 //! The trailing table reports the per-benchmark speedups — nonblocking
-//! engine vs blocking wire baseline, GEMM vs naive kernels, and pooled vs
-//! scoped-spawn scheduling.
+//! engine vs blocking wire baseline, ring vs tree all-reduce, GEMM vs
+//! naive kernels, and pooled vs scoped-spawn scheduling. The run also
+//! writes a machine-readable `BENCH_primitive_throughput.json` snapshot
+//! at the repository root for cross-commit diffing.
 
 use distdl::adjoint::DistLinearOp;
 use distdl::comm::{Cluster, Comm};
@@ -32,14 +41,15 @@ use distdl::error::Result;
 use distdl::nn::native::gemm::{gemm_scoped, gemm_with_workers, pool_threads};
 use distdl::partition::{Partition, TensorDecomposition};
 use distdl::primitives::{
-    AllReduce, Broadcast, Gather, Repartition, Scatter, SendRecv, SumReduce,
+    AllReduce, Broadcast, Gather, Repartition, RingAllReduce, Scatter, SendRecv, SumReduce,
 };
 use distdl::tensor::{ops, Tensor};
-use distdl::testing::bench::{BenchGroup, BenchResult};
+use distdl::testing::bench::{BenchGroup, BenchResult, BenchSnapshot};
 
 const WIRE: &str = "blocking-wire";
 const NOPOOL: &str = "nb-unpooled";
 const NB: &str = "nonblocking";
+const RING: &str = "ring";
 const NAIVE: &str = "naive";
 const GEMM: &str = "gemm";
 const SCOPED: &str = "scoped-spawn";
@@ -74,10 +84,16 @@ where
 
 fn report_speedup(results: &[BenchResult]) {
     println!(
-        "\n== speedups: nonblocking vs blocking-wire, pooled vs unpooled engine, GEMM vs naive, pooled vs scoped-spawn =="
+        "\n== speedups: nonblocking vs blocking-wire, pooled vs unpooled engine, ring vs tree, GEMM vs naive, pooled vs scoped-spawn =="
     );
     println!("{:<52} {:>10}", "benchmark", "speedup");
-    for (fast, base) in [(NB, WIRE), (NB, NOPOOL), (GEMM, NAIVE), (POOLED, SCOPED)] {
+    for (fast, base) in [
+        (NB, WIRE),
+        (NB, NOPOOL),
+        (RING, NB),
+        (GEMM, NAIVE),
+        (POOLED, SCOPED),
+    ] {
         let fast_suffix = format!(" [{fast}]");
         let base_suffix = format!(" [{base}]");
         for r in results {
@@ -272,6 +288,30 @@ fn main() {
         }
     }
 
+    // Ring all-reduce — the derived hybrid-DP primitive — on the same
+    // traffic as the tree all-reduce above. The `bytes` column is the
+    // analytic ring volume Σᵢ elems_sent_by(i)·8, i.e. each member moves
+    // 2(R−1)/R·N elements regardless of R (the tree moves 2N(P−1) total);
+    // `primitives::ring` tests pin the measured wire payload to exactly
+    // this sum. `reserve_pool` pre-warms the registered comm-buffer pool
+    // so steady-state iterations recycle their step buffers.
+    for p in [2usize, 4, 8] {
+        for n in [1usize << 12, 1 << 16] {
+            let ranks: Vec<usize> = (0..p).collect();
+            let ring = RingAllReduce::new(&ranks, &[n], 8).unwrap();
+            let bytes = (0..p).map(|i| ring.elems_sent_by(i)).sum::<usize>() * 8;
+            g.bench_bytes(&format!("all-reduce  P={p:<2} n={n} [{RING}]"), bytes, || {
+                Cluster::run(p, |comm| {
+                    ring.reserve_pool::<f64>(comm);
+                    let fl = ring.start(comm, vec![0.0f64; n])?;
+                    ring.finish(comm, fl)?;
+                    Ok(())
+                })
+                .unwrap();
+            });
+        }
+    }
+
     // scatter / gather / all-to-all at fixed world 4
     for n in [1usize << 12, 1 << 18] {
         let d = TensorDecomposition::new(Partition::from_shape(&[4]), &[n]).unwrap();
@@ -385,5 +425,11 @@ fn main() {
 
     let results = g.finish();
     report_speedup(&results);
+    let mut snap = BenchSnapshot::new("primitive_throughput");
+    snap.add_results(&results);
+    match snap.write() {
+        Ok(path) => println!("\nsnapshot written: {}", path.display()),
+        Err(e) => println!("\nsnapshot write failed: {e}"),
+    }
     pool_backed_receive_report();
 }

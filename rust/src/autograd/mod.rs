@@ -173,6 +173,40 @@ impl<T: Scalar> Network<T> {
         Ok(cur)
     }
 
+    /// Backward with a per-layer completion hook: `hook(i, st, comm)` runs
+    /// right after layer `i`'s backward returns, when that layer's
+    /// parameter gradients are final (the reverse walk never revisits
+    /// them). The hook sees the whole [`NetworkState`], so it can stage
+    /// gradients of every already-finished layer — this is how the
+    /// data-parallel engine posts ring all-reduce steps for later layers'
+    /// gradient buckets while earlier layers are still computing their
+    /// δw/δb GEMMs, hiding the averaging inside the backward window.
+    ///
+    /// `backward` is exactly this with a no-op hook; both walks issue the
+    /// same layer calls in the same order, so their results are bitwise
+    /// identical.
+    pub fn backward_with_hook(
+        &self,
+        st: &mut NetworkState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+        hook: &mut dyn FnMut(usize, &mut NetworkState<T>, &mut Comm) -> Result<()>,
+    ) -> Result<Option<Tensor<T>>> {
+        if st.states.len() != self.layers.len() {
+            return Err(Error::Autograd(format!(
+                "network state has {} layers, network {}",
+                st.states.len(),
+                self.layers.len()
+            )));
+        }
+        let mut cur = dy;
+        for i in (0..self.layers.len()).rev() {
+            cur = self.layers[i].backward(&mut st.states[i], comm, cur)?;
+            hook(i, st, comm)?;
+        }
+        Ok(cur)
+    }
+
     /// Table-1 style placement report for `rank`.
     pub fn placement_report(&self, rank: usize) -> Vec<(String, Vec<(String, Vec<usize>)>)> {
         self.layers

@@ -284,6 +284,12 @@ struct BufferPool {
     /// per class and cannot keep displacing hot returns under a finite
     /// byte cap.
     reserve_depth: usize,
+    /// Per-size-class rotation depth overrides ([`Comm::pool_reserve_for`]).
+    /// A class with an entry here pre-warms to *its* depth instead of the
+    /// endpoint-wide `reserve_depth`, so e.g. the DP ring's chunk rotation
+    /// and the pipeline's replica stash can coexist without one global
+    /// depth over- or under-minting for the other.
+    reserve_for: HashMap<(TypeId, usize), usize>,
     /// Per-class pre-warm state: `false` after the first miss (observed),
     /// `true` once the second-miss pre-warm has run.
     warmed: HashMap<(TypeId, usize), bool>,
@@ -304,6 +310,7 @@ impl BufferPool {
             cap_bytes,
             enabled: true,
             reserve_depth: 1,
+            reserve_for: HashMap::new(),
             warmed: HashMap::new(),
             acquires: 0,
             hits: 0,
@@ -374,7 +381,12 @@ impl BufferPool {
                 // and each class pre-warms at most once: an evicted
                 // class's later re-misses must not be misread as
                 // pipelining and keep parking dead extras under the cap.
-                if self.reserve_depth > 1 {
+                let depth = self
+                    .reserve_for
+                    .get(&(elem, len))
+                    .copied()
+                    .unwrap_or(self.reserve_depth);
+                if depth > 1 {
                     match self.warmed.entry((elem, len)) {
                         std::collections::hash_map::Entry::Vacant(slot) => {
                             slot.insert(false); // first miss: observe only
@@ -383,7 +395,7 @@ impl BufferPool {
                             if !*slot.get() =>
                         {
                             slot.insert(true); // second miss: pre-warm once
-                            for _ in 2..self.reserve_depth {
+                            for _ in 2..depth {
                                 let bytes = len * std::mem::size_of::<T>();
                                 if let Some(cap) = self.cap_bytes {
                                     if self.pooled_bytes + bytes > cap {
@@ -748,6 +760,22 @@ impl Comm {
         self.pool.reserve_depth = depth.max(1);
     }
 
+    /// Per-size-class override of [`Comm::pool_reserve`]: the class of
+    /// `len`-element `T` buffers pre-warms to `depth` instead of the
+    /// endpoint-wide depth. The ring collectives use this for their chunk
+    /// rotation (one chunk in flight to the neighbour while the next is
+    /// being staged needs depth 2) without inflating every other class,
+    /// and without the pipeline's global depth under-minting the ring.
+    /// `depth <= 1` removes the override.
+    pub fn pool_reserve_for<T: Scalar>(&mut self, len: usize, depth: usize) {
+        let key = (TypeId::of::<T>(), len);
+        if depth <= 1 {
+            self.pool.reserve_for.remove(&key);
+        } else {
+            self.pool.reserve_for.insert(key, depth);
+        }
+    }
+
     /// This endpoint's pool counters (return bin drained first).
     pub fn pool_stats(&mut self) -> CommPoolStats {
         self.pool.drain_returns();
@@ -773,6 +801,17 @@ impl Comm {
         let mut stage = self.pool.take(data.len());
         stage.copy_from_slice(data);
         Arc::new(self.pool.wrap(stage))
+    }
+
+    /// Adopt an already-filled buffer (typically one obtained from
+    /// [`Comm::pool_take`]) as a registered payload **without copying**:
+    /// the buffer returns to this endpoint's pool when the payload drops.
+    /// This is how an accumulator assembled in a pool buffer — the
+    /// sum-reduce root's fused add-out-of-payload result, a DP bucket —
+    /// becomes a pool-backed [`Tensor`](crate::tensor::Tensor) or an
+    /// onward zero-copy send.
+    pub fn pool_wrap<T: Scalar>(&mut self, data: Vec<T>) -> Arc<PooledBody<T>> {
+        Arc::new(self.pool.wrap(data))
     }
 
     // ------------------------------------------------------------------
@@ -1289,6 +1328,93 @@ impl Comm {
     }
 }
 
+/// An ordered subset of world ranks acting as one communicator axis.
+///
+/// The hybrid data×model topology factors the world into
+/// `replicas × model-grid`; each axis is a `CommGroup` produced by
+/// [`CommGroup::split`] — the MPI `Comm_split` idiom (colour selects the
+/// group, key orders it) applied to the existing endpoint map. A group
+/// owns no channels: members keep addressing each other by **world rank**
+/// through their [`Comm`] endpoints, so any primitive that takes a rank
+/// list (the broadcast/sum-reduce trees, the ring collectives) runs
+/// unchanged inside a group. Group-local indices (`index_of` /
+/// `world_rank`) are what schedules like the ring's neighbour arithmetic
+/// are written against.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommGroup {
+    ranks: Vec<usize>,
+}
+
+impl CommGroup {
+    /// A group over the given world ranks, in the given order. Ranks must
+    /// be distinct; the first rank is group index 0.
+    pub fn new(ranks: Vec<usize>) -> Result<Self> {
+        if ranks.is_empty() {
+            return Err(Error::Comm("communicator group must be non-empty".into()));
+        }
+        let mut seen = ranks.clone();
+        seen.sort_unstable();
+        if seen.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::Comm(format!(
+                "communicator group has duplicate ranks: {ranks:?}"
+            )));
+        }
+        Ok(CommGroup { ranks })
+    }
+
+    /// Partition `0..world` into groups, MPI `Comm_split` style: ranks
+    /// with equal `color` land in the same group (a `None` colour opts
+    /// the rank out of every group), ordered within the group by
+    /// `(key, world rank)`. Groups are returned ordered by colour.
+    pub fn split(
+        world: usize,
+        mut color: impl FnMut(usize) -> Option<usize>,
+        mut key: impl FnMut(usize) -> usize,
+    ) -> Vec<CommGroup> {
+        let mut by_color: std::collections::BTreeMap<usize, Vec<(usize, usize)>> =
+            std::collections::BTreeMap::new();
+        for rank in 0..world {
+            if let Some(c) = color(rank) {
+                by_color.entry(c).or_default().push((key(rank), rank));
+            }
+        }
+        by_color
+            .into_values()
+            .map(|mut members| {
+                members.sort_unstable();
+                CommGroup {
+                    ranks: members.into_iter().map(|(_, r)| r).collect(),
+                }
+            })
+            .collect()
+    }
+
+    /// Number of members.
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// The members' world ranks in group order.
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// World rank of group member `index`.
+    pub fn world_rank(&self, index: usize) -> usize {
+        self.ranks[index]
+    }
+
+    /// Group index of `world_rank`, if it is a member.
+    pub fn index_of(&self, world_rank: usize) -> Option<usize> {
+        self.ranks.iter().position(|&r| r == world_rank)
+    }
+
+    /// Whether `world_rank` is a member.
+    pub fn contains(&self, world_rank: usize) -> bool {
+        self.index_of(world_rank).is_some()
+    }
+}
+
 /// An SPMD cluster of in-process workers.
 pub struct Cluster;
 
@@ -1802,6 +1928,76 @@ mod tests {
             Ok(())
         })
         .unwrap();
+    }
+
+    #[test]
+    fn pool_reserve_for_overrides_one_class_only() {
+        Cluster::run(1, |comm| {
+            comm.set_pool_cap_bytes(None);
+            comm.pool_reserve(1); // global default: mint on demand
+            comm.pool_reserve_for::<f64>(8, 3);
+            // The overridden class pre-warms to depth 3 on its second miss...
+            let _a = comm.pool_take::<f64>(8);
+            let _b = comm.pool_take::<f64>(8);
+            let s = comm.pool_stats();
+            assert_eq!((s.misses, s.reserved), (2, 1));
+            let _c = comm.pool_take::<f64>(8);
+            assert_eq!(comm.pool_stats().hits, 1, "pre-warmed extra must serve");
+            // ...while any other class keeps the depth-1 default.
+            let _d = comm.pool_take::<f64>(16);
+            let _e = comm.pool_take::<f64>(16);
+            let s = comm.pool_stats();
+            assert_eq!(s.reserved, 1, "non-overridden class must not pre-warm");
+            // Depth <= 1 removes the override.
+            comm.pool_reserve_for::<f64>(8, 1);
+            let _f = comm.pool_take::<f64>(8);
+            let _g = comm.pool_take::<f64>(8);
+            assert_eq!(comm.pool_stats().reserved, 1);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn pool_wrap_adopts_buffer_and_returns_on_drop() {
+        Cluster::run(1, |comm| {
+            comm.set_pool_cap_bytes(None);
+            let mut buf = comm.pool_take::<f32>(4);
+            buf.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+            let body = comm.pool_wrap(buf);
+            assert_eq!(body.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+            drop(body);
+            let s = comm.pool_stats();
+            assert_eq!(s.returns, 1, "wrapped buffer must return to the pool");
+            // The returned buffer is reusable: the next take of the class hits.
+            let _again = comm.pool_take::<f32>(4);
+            assert_eq!(comm.pool_stats().hits, 1);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn comm_group_split_colors_and_orders() {
+        // 2 replicas × model grid of 3: colour by model rank = dp axis.
+        let dp = CommGroup::split(6, |r| Some(r % 3), |r| r / 3);
+        assert_eq!(dp.len(), 3);
+        assert_eq!(dp[0].ranks(), &[0, 3]);
+        assert_eq!(dp[1].ranks(), &[1, 4]);
+        assert_eq!(dp[2].ranks(), &[2, 5]);
+        assert_eq!(dp[1].index_of(4), Some(1));
+        assert_eq!(dp[1].world_rank(0), 1);
+        assert!(!dp[1].contains(3));
+        // Colour by replica = model axis; a None colour opts out.
+        let model = CommGroup::split(6, |r| (r != 5).then_some(r / 3), |r| r % 3);
+        assert_eq!(model[0].ranks(), &[0, 1, 2]);
+        assert_eq!(model[1].ranks(), &[3, 4]);
+        // The key reorders within a group.
+        let rev = CommGroup::split(4, |_| Some(0), |r| 4 - r);
+        assert_eq!(rev[0].ranks(), &[3, 2, 1, 0]);
+        // Duplicate ranks are rejected by the direct constructor.
+        assert!(CommGroup::new(vec![1, 2, 1]).is_err());
+        assert!(CommGroup::new(vec![]).is_err());
     }
 
     #[test]

@@ -40,6 +40,11 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Distributed (4-worker) or sequential layout.
     pub distributed: bool,
+    /// Data-parallel replicas of the model grid (1 = pure model
+    /// parallelism). The world is `replicas × model-grid`; each replica
+    /// trains on its own `batch / replicas` micro-batch and gradients are
+    /// ring-averaged across replicas.
+    pub replicas: usize,
     /// Local-kernel backend.
     pub backend: Backend,
     /// Log every N steps.
@@ -57,6 +62,7 @@ impl Default for TrainConfig {
             dataset: 16_384,
             seed: 42,
             distributed: true,
+            replicas: 1,
             backend: Backend::Native,
             log_every: 10,
             artifacts_dir: "artifacts".into(),
@@ -94,6 +100,9 @@ impl TrainConfig {
         if let Some(v) = j.get_opt("distributed") {
             self.distributed = v.as_bool()?;
         }
+        if let Some(v) = j.get_opt("replicas") {
+            self.replicas = v.as_usize()?;
+        }
         if let Some(v) = j.get_opt("backend") {
             self.backend = Backend::parse(v.as_str()?)?;
         }
@@ -110,6 +119,15 @@ impl TrainConfig {
     pub fn validate(&self) -> Result<()> {
         if self.batch == 0 || self.steps == 0 {
             return Err(Error::Config("batch and steps must be positive".into()));
+        }
+        if self.replicas == 0 {
+            return Err(Error::Config("replicas must be positive".into()));
+        }
+        if self.batch % self.replicas != 0 {
+            return Err(Error::Config(format!(
+                "batch ({}) must divide evenly into {} replicas",
+                self.batch, self.replicas
+            )));
         }
         if self.dataset < self.batch {
             return Err(Error::Config(format!(
@@ -153,5 +171,22 @@ mod tests {
         cfg.dataset = 1;
         assert!(cfg.validate().is_err());
         assert!(Backend::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn replicas_must_divide_the_batch() {
+        let mut cfg = TrainConfig::default();
+        cfg.replicas = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.replicas = 3; // 64 % 3 != 0
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.replicas = 4;
+        cfg.validate().unwrap();
+        let j = Json::parse(r#"{"replicas": 2}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.replicas, 2);
     }
 }

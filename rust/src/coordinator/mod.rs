@@ -31,17 +31,29 @@
 //! **pool-backed tensors** (`tensor_pool_backed` on the log), consumed
 //! read-only, so `tensor_cow_promotions` staying flat is the evidence
 //! that zero allocations also means zero copies.
+//!
+//! With `replicas > 1` ([`crate::config::TrainConfig::replicas`]) the run
+//! goes hybrid data×model parallel: the world factors as
+//! `replicas × model-grid` ([`crate::partition::HybridTopology`]), each
+//! replica runs the same model partition (rank-offset by `k·M`) on its
+//! own micro-batch stripe, and [`train_step_hybrid`] hooks the
+//! [`crate::optim::dp::DataParallel`] engine into the backward pass so
+//! gradient buckets ring-average across replicas *inside* the backward
+//! overlap window. `set_dp_overlap(false)` serialises the averaging after
+//! backward — bitwise-identical results, used as the parity reference.
 
 use crate::autograd::NetworkState;
-use crate::comm::{Cluster, Comm};
+use crate::comm::{Cluster, Comm, CommGroup};
 use crate::config::{Backend, TrainConfig};
 use crate::data::{Batch, SyntheticMnist};
 use crate::error::{Error, Result};
 use crate::metrics::{MetricLog, StepRecord};
-use crate::models::{lenet5, LeNetConfig, LeNetLayout};
+use crate::models::{lenet5_at, LeNetConfig, LeNetLayout};
 use crate::nn::native::{count_correct, cross_entropy_backward, cross_entropy_forward};
 use crate::nn::{LocalKernels, NativeKernels};
+use crate::optim::dp::{dp_overlap, DataParallel};
 use crate::optim::Adam;
+use crate::partition::HybridTopology;
 use crate::tensor::Tensor;
 use crate::util::timer::Timer;
 use std::sync::Arc;
@@ -82,7 +94,19 @@ pub fn kernels_for(backend: Backend, artifacts_dir: &str) -> Result<Arc<dyn Loca
 /// exactly once, so a two-step warm-up is genuinely warm.
 pub const PIPELINE_POOL_DEPTH: usize = 3;
 
+/// Tag base for the data-parallel ring buckets. The model-parallel layer
+/// tags grow in 10 000 strides from 0 and stay far below this, so the DP
+/// rings (bucket `i` on `DP_TAG_BASE + i`) never collide with them.
+pub const DP_TAG_BASE: u64 = 1_000_000;
+
 /// Run the §5 training experiment per `cfg`, returning the report.
+///
+/// With `cfg.replicas > 1` the run is hybrid data×model parallel: the
+/// world is `replicas × layout.world_size()` ranks, replica `k` holds the
+/// model partition offset by `k · M` ([`lenet5_at`]) and trains on its own
+/// `batch / replicas` micro-batch, and each rank ring-averages its
+/// gradient shards with its [`HybridTopology::dp_group`] peers inside the
+/// backward overlap window before the (local) optimizer step.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     cfg.validate()?;
     let layout = if cfg.distributed {
@@ -90,16 +114,19 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     } else {
         LeNetLayout::Sequential
     };
-    let world = layout.world_size();
+    let topo = HybridTopology::new(cfg.replicas, layout.world_size())?;
+    let world = topo.world();
+    let replicas = cfg.replicas;
+    let micro = cfg.batch / replicas;
     let data = SyntheticMnist::new(cfg.seed ^ 0xDA7A, cfg.dataset);
-    let train_batches = data.batches(cfg.batch);
+    let train_batches = data.batches(micro);
     if train_batches.is_empty() {
         return Err(Error::Config("dataset produced no full batches".into()));
     }
     let eval_data = SyntheticMnist::new(cfg.seed ^ 0xE7A1, (cfg.batch * 4).max(256));
-    let eval_batches = eval_data.batches(cfg.batch);
+    let eval_batches = eval_data.batches(micro);
     let model_cfg = LeNetConfig {
-        batch: cfg.batch,
+        batch: micro,
         layout,
     };
 
@@ -108,36 +135,50 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // depth: a pipelined message size class mints its full in-flight
         // complement on its second miss instead of one per step.
         comm.pool_reserve(PIPELINE_POOL_DEPTH);
+        let rank = comm.rank();
+        let replica = topo.replica_of(rank);
+        // Replica k's network is replica 0's with every rank offset by
+        // k·M; its loss root is the replica's first rank.
+        let root = topo.world_rank(replica, 0);
         let kernels = kernels_for(cfg.backend, &cfg.artifacts_dir)?;
-        let net = lenet5::<f32>(&model_cfg, kernels)?;
-        let mut state = net.init(comm.rank(), cfg.seed)?;
+        let net = lenet5_at::<f32>(&model_cfg, kernels, root)?;
+        // Layer init derives global parameters from the seed alone and
+        // slices per grid cell, so all replicas start bit-identical.
+        let mut state = net.init(rank, cfg.seed)?;
         let mut opt = Adam::new(cfg.lr);
+        let mut dp = DataParallel::<f32>::for_rank(&topo, rank, DP_TAG_BASE);
         let mut log = MetricLog::new();
         log.set_meta("layout", format!("{layout:?}"));
         log.set_meta("backend", format!("{:?}", cfg.backend));
         log.set_meta("batch", cfg.batch);
         log.set_meta("lr", cfg.lr);
-        let rank = comm.rank();
+        // Micro-batches are replica-striped: at step t replica k trains
+        // on micro-batch t·R + k, so together the replicas consume
+        // exactly the samples of step t's full batch — averaging the
+        // gradients with 1/R recovers the concatenated-batch mean.
+        let index_of = |step: usize| (step * replicas + replica) % train_batches.len();
         // Micro-batch pipelining: the input tensor for step t+1 is
         // prepared inside step t's overlap window (after the backward
         // pass's gradient sends are posted, before the local optimizer
         // step), so forward setup rides the tail of the gradient
         // sum-reduce instead of serializing after it.
         let mut next_x: Option<Tensor<f32>> =
-            (rank == 0).then(|| train_batches[0].images_as::<f32>());
+            (rank == root).then(|| train_batches[index_of(0)].images_as::<f32>());
         for step in 0..cfg.steps {
             let timer = Timer::start();
-            let batch = &train_batches[step % train_batches.len()];
+            let batch = &train_batches[index_of(step)];
             let x = next_x.take();
-            let prefetch_idx = (step + 1) % train_batches.len();
-            let want_prefetch = rank == 0 && step + 1 < cfg.steps;
-            let (loss, acc) = train_step_prepared(
+            let prefetch_idx = index_of(step + 1);
+            let want_prefetch = rank == root && step + 1 < cfg.steps;
+            let (loss, acc) = train_step_hybrid(
                 &net,
                 &mut state,
                 comm,
+                root,
                 x,
                 &batch.labels,
                 &mut opt,
+                &mut dp,
                 &mut || {
                     next_x = want_prefetch
                         .then(|| train_batches[prefetch_idx].images_as::<f32>());
@@ -152,13 +193,15 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 });
             }
         }
-        // held-out evaluation (forward only)
+        // Held-out evaluation (forward only). Every replica runs the same
+        // eval batches — replicas are synchronised copies, so this keeps
+        // all ranks collectively in step — and replica 0's root counts.
         let mut correct = 0usize;
         let mut total = 0usize;
         for batch in &eval_batches {
-            let x = (comm.rank() == 0).then(|| batch.images_as::<f32>());
+            let x = (rank == root).then(|| batch.images_as::<f32>());
             let logits = net.forward(&mut state, comm, x, false)?;
-            if comm.rank() == 0 {
+            if rank == 0 {
                 let logits = logits.expect("root holds logits");
                 correct += count_correct(&logits, &batch.labels);
                 total += batch.labels.len();
@@ -173,11 +216,12 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // thread's scratch-arena reuse counters on the metric log. The
         // arena is thread-local, so these are exactly the allocations the
         // rank-0 coordinator thread's kernels performed.
-        if comm.rank() == 0 {
+        if rank == 0 {
             log.set_comm_stats(&comm.stats());
             log.set_scratch_stats(&crate::memory::scratch_stats::<f32>());
             log.set_gemm_pool_stats(&crate::nn::native::gemm::gemm_pool_stats());
             log.set_tensor_storage_stats(&crate::tensor::tensor_storage_stats());
+            log.set_dp_meta(replicas, dp_overlap(), dp.bucket_count());
         }
         Ok((log, state.param_count(), eval_acc))
     })?;
@@ -225,11 +269,34 @@ pub fn train_step_prepared(
     opt: &mut Adam<f32>,
     overlap: &mut dyn FnMut(),
 ) -> Result<(f64, f64)> {
+    // A single-member DP group is inert: pure model parallelism.
+    let mut dp = DataParallel::new(CommGroup::new(vec![comm.rank()])?, DP_TAG_BASE);
+    train_step_hybrid(net, state, comm, 0, x, labels, opt, &mut dp, overlap)
+}
+
+/// One synchronous hybrid training step: distributed forward, loss at the
+/// replica's `root`, distributed backward with the DP engine's
+/// `on_layer_done` hook riding each layer's adjoint (ready gradient
+/// buckets start their ring all-reduce while deeper layers' δw/δb GEMMs
+/// still run), then [`DataParallel::finish`] and the local optimizer
+/// step. Returns (loss, accuracy) as seen by `root`; other ranks return
+/// (0, 0).
+pub fn train_step_hybrid(
+    net: &crate::autograd::Network<f32>,
+    state: &mut NetworkState<f32>,
+    comm: &mut Comm,
+    root: usize,
+    x: Option<Tensor<f32>>,
+    labels: &[usize],
+    opt: &mut Adam<f32>,
+    dp: &mut DataParallel<f32>,
+    overlap: &mut dyn FnMut(),
+) -> Result<(f64, f64)> {
     let logits = net.forward(state, comm, x, true)?;
     let mut dlogits: Option<Tensor<f32>> = None;
     let mut loss = 0f64;
     let mut acc = 0f64;
-    if comm.rank() == 0 {
+    if comm.rank() == root {
         let logits = logits.ok_or_else(|| Error::Autograd("root lost the logits".into()))?;
         let (l, probs) = cross_entropy_forward(&logits, labels)?;
         loss = l;
@@ -237,8 +304,11 @@ pub fn train_step_prepared(
         dlogits = Some(cross_entropy_backward(&probs, labels));
     }
     state.zero_grads();
-    net.backward(state, comm, dlogits)?;
+    net.backward_with_hook(state, comm, dlogits, &mut |layer, st, c| {
+        dp.on_layer_done(c, st, layer)
+    })?;
     overlap();
+    dp.finish(comm, state)?;
     opt.step(state)?;
     Ok((loss, acc))
 }
@@ -268,6 +338,26 @@ mod tests {
             "no learning: {first} -> {}",
             report.final_loss
         );
+    }
+
+    #[test]
+    fn short_data_parallel_training_runs() {
+        // Sequential model grid × 2 replicas: pure data parallelism.
+        let cfg = TrainConfig {
+            batch: 16,
+            steps: 8,
+            dataset: 256,
+            distributed: false,
+            replicas: 2,
+            ..TrainConfig::default()
+        };
+        let report = train(&cfg).unwrap();
+        assert_eq!(report.world, 2);
+        assert_eq!(report.params_per_rank.len(), 2);
+        // Replicas hold identical full copies of the model.
+        assert_eq!(report.params_per_rank[0], report.params_per_rank[1]);
+        assert!(report.log.steps.iter().all(|s| s.loss.is_finite()));
+        assert_eq!(report.log.meta["dp_replicas"], "2");
     }
 
     #[test]

@@ -86,6 +86,17 @@
 //! * [`models`], [`data`], [`optim`], [`coordinator`] — the distributed
 //!   LeNet-5 of §5 / Appendix C, a synthetic MNIST, optimizers, and the SPMD
 //!   training orchestrator.
+//!
+//! The same algebra extends to **hybrid data×model parallelism**: the
+//! world factors as `replicas × model-grid`
+//! (`partition::HybridTopology`, per-axis communicators split out of the
+//! endpoint map), the bandwidth-optimal **ring all-reduce** is derived
+//! from send/receive like every other primitive
+//! (`primitives::RingAllReduce`, self-adjoint up to its real `1/R`
+//! averaging scale, Eq. 13-coherent), and the `optim::dp` engine buckets
+//! gradient shards and rides their ring averaging *inside* the backward
+//! overlap window — replicas' optimizer states stay bit-identical without
+//! any optimizer-state synchronisation.
 //! * [`util`], [`testing`], [`cli`] — hand-rolled substrates (JSON, PRNG,
 //!   property-test and bench harnesses, argument parsing); the crates this
 //!   build cannot take as dependencies.

@@ -101,6 +101,16 @@ impl MetricLog {
         self.set_meta("gemm_pool_tasks", s.tasks);
     }
 
+    /// Surface the hybrid data×model configuration as run metadata
+    /// (`dp_*` keys): replica count, whether gradient averaging rode the
+    /// backward overlap window, and how many ring buckets the averaging
+    /// engine built.
+    pub fn set_dp_meta(&mut self, replicas: usize, overlap: bool, buckets: usize) {
+        self.set_meta("dp_replicas", replicas);
+        self.set_meta("dp_overlap", overlap);
+        self.set_meta("dp_buckets", buckets);
+    }
+
     /// Mean loss over the last `n` steps.
     pub fn recent_loss(&self, n: usize) -> f64 {
         let tail = &self.steps[self.steps.len().saturating_sub(n)..];
@@ -258,6 +268,15 @@ mod tests {
         assert_eq!(log.meta["comm_pool_evictions"], "1");
         assert_eq!(log.meta["comm_pool_pooled_bytes"], "2048");
         assert_eq!(log.meta["comm_pool_reserved"], "4");
+    }
+
+    #[test]
+    fn dp_meta_surfaces() {
+        let mut log = MetricLog::new();
+        log.set_dp_meta(4, true, 9);
+        assert_eq!(log.meta["dp_replicas"], "4");
+        assert_eq!(log.meta["dp_overlap"], "true");
+        assert_eq!(log.meta["dp_buckets"], "9");
     }
 
     #[test]

@@ -110,7 +110,34 @@ pub fn lenet5<T: Scalar>(
     cfg: &LeNetConfig,
     kernels: Arc<dyn LocalKernels<T>>,
 ) -> Result<Network<T>> {
-    let lay = cfg.layout.layout();
+    lenet5_at(cfg, kernels, 0)
+}
+
+/// Build LeNet-5 with every world rank shifted by `rank_offset` — replica
+/// `k` of a hybrid data×model run is exactly the replica-0 network offset
+/// by `k · M` (the [`crate::partition::HybridTopology`] factoring). Layer
+/// tags are identical across replicas: point-to-point matching is by
+/// `(source, tag)` and replicas occupy disjoint rank blocks, so the tag
+/// space is reused without collision.
+pub fn lenet5_at<T: Scalar>(
+    cfg: &LeNetConfig,
+    kernels: Arc<dyn LocalKernels<T>>,
+    rank_offset: usize,
+) -> Result<Network<T>> {
+    let mut lay = cfg.layout.layout();
+    if rank_offset > 0 {
+        for r in lay
+            .conv_ranks
+            .iter_mut()
+            .chain(lay.flat_ranks.iter_mut())
+            .chain(lay.aff_w_ranks.iter_mut())
+            .chain(lay.aff_x_ranks.iter_mut())
+            .chain(lay.aff_y_ranks.iter_mut())
+        {
+            *r += rank_offset;
+        }
+        lay.root += rank_offset;
+    }
     let b = cfg.batch;
     let mut layers: Vec<Arc<dyn crate::autograd::Layer<T>>> = Vec::new();
     let mut tag = 0u64;

@@ -8,4 +8,4 @@
 
 mod lenet5;
 
-pub use lenet5::{lenet5, LeNetConfig, LeNetLayout};
+pub use lenet5::{lenet5, lenet5_at, LeNetConfig, LeNetLayout};

@@ -5,6 +5,14 @@
 //! placed correctly by the adjoint data movement (each parameter's
 //! gradient is fully reduced onto its owner before the step) — which is
 //! exactly the property the paper's framework guarantees by construction.
+//!
+//! Data parallelism preserves that locality: the [`dp`] engine averages
+//! each shard's gradient across replicas *in place* before the step, so
+//! every replica's optimizer sees identical averaged gradients and —
+//! starting from identical seeds — their parameter and moment states
+//! never diverge. No optimizer-state synchronisation is ever required.
+
+pub mod dp;
 
 use crate::autograd::NetworkState;
 use crate::error::Result;

@@ -1,0 +1,169 @@
+//! The hybrid data×model factoring of the world (ROADMAP item 2).
+//!
+//! Gholami et al. (arXiv:1712.04432) integrate batch (data) parallelism
+//! with model/domain parallelism in the same linear-algebraic framing as
+//! the source paper: the world of `W = R · M` ranks factors into `R`
+//! *replicas* of an `M`-rank *model grid*. Rank `r` plays model role
+//! `r % M` inside replica `r / M`; every model-parallel partition of
+//! replica `k` is the replica-0 partition with all ranks offset by
+//! `k · M`.
+//!
+//! The two communicator axes come from colouring the endpoint map
+//! ([`CommGroup::split`]):
+//!
+//! * **model groups** — colour by replica: the `M` ranks that run one
+//!   copy of the network (the broadcast/sum-reduce/halo trees live here);
+//! * **dp groups** — colour by model role: the `R` ranks holding the
+//!   *same* parameter shard across replicas (the ring all-reduce that
+//!   averages gradients lives here).
+//!
+//! Because point-to-point matching is `(src, tag)`, disjoint replicas can
+//! reuse the same model-parallel tag space verbatim; only the dp rings
+//! need tags of their own.
+
+use crate::comm::CommGroup;
+use crate::error::{Error, Result};
+
+/// The `replicas × model-grid` factoring of a world.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HybridTopology {
+    replicas: usize,
+    model_world: usize,
+}
+
+impl HybridTopology {
+    /// A topology of `replicas` copies of an `model_world`-rank model
+    /// grid. The total world size is their product.
+    pub fn new(replicas: usize, model_world: usize) -> Result<Self> {
+        if replicas == 0 || model_world == 0 {
+            return Err(Error::Partition(format!(
+                "hybrid topology needs replicas >= 1 and model_world >= 1, \
+                 got {replicas} x {model_world}"
+            )));
+        }
+        Ok(HybridTopology {
+            replicas,
+            model_world,
+        })
+    }
+
+    /// Total world size `R · M`.
+    pub fn world(&self) -> usize {
+        self.replicas * self.model_world
+    }
+
+    /// Number of data-parallel replicas `R`.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Ranks per model grid `M`.
+    pub fn model_world(&self) -> usize {
+        self.model_world
+    }
+
+    /// Which replica a world rank belongs to.
+    pub fn replica_of(&self, world_rank: usize) -> usize {
+        world_rank / self.model_world
+    }
+
+    /// A world rank's role inside its model grid.
+    pub fn model_rank_of(&self, world_rank: usize) -> usize {
+        world_rank % self.model_world
+    }
+
+    /// First world rank of a replica — the offset added to every replica-0
+    /// partition to obtain that replica's partitions (and the rank that
+    /// holds the replica's input/logits, mirroring replica 0's root 0).
+    pub fn replica_base(&self, replica: usize) -> usize {
+        replica * self.model_world
+    }
+
+    /// World rank of `(replica, model_rank)`.
+    pub fn world_rank(&self, replica: usize, model_rank: usize) -> usize {
+        replica * self.model_world + model_rank
+    }
+
+    /// The model-parallel communicator of one replica: colour = replica,
+    /// ordered by model rank.
+    pub fn model_group(&self, replica: usize) -> CommGroup {
+        let mut groups = CommGroup::split(
+            self.world(),
+            |r| (r / self.model_world == replica).then_some(0),
+            |r| r % self.model_world,
+        );
+        groups.swap_remove(0)
+    }
+
+    /// The data-parallel communicator of one model role: colour = model
+    /// rank, ordered by replica. These are the rings that average
+    /// gradients — each holds the `R` ranks owning the same parameter
+    /// shard.
+    pub fn dp_group(&self, model_rank: usize) -> CommGroup {
+        let mut groups = CommGroup::split(
+            self.world(),
+            |r| (r % self.model_world == model_rank).then_some(0),
+            |r| r / self.model_world,
+        );
+        groups.swap_remove(0)
+    }
+
+    /// All `R` model groups, indexed by replica.
+    pub fn model_groups(&self) -> Vec<CommGroup> {
+        CommGroup::split(self.world(), |r| Some(r / self.model_world), |r| {
+            r % self.model_world
+        })
+    }
+
+    /// All `M` dp groups, indexed by model rank.
+    pub fn dp_groups(&self) -> Vec<CommGroup> {
+        CommGroup::split(self.world(), |r| Some(r % self.model_world), |r| {
+            r / self.model_world
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factoring_round_trips() {
+        let t = HybridTopology::new(3, 4).unwrap();
+        assert_eq!(t.world(), 12);
+        for w in 0..t.world() {
+            assert_eq!(t.world_rank(t.replica_of(w), t.model_rank_of(w)), w);
+        }
+        assert_eq!(t.replica_base(2), 8);
+        assert!(HybridTopology::new(0, 4).is_err());
+        assert!(HybridTopology::new(2, 0).is_err());
+    }
+
+    #[test]
+    fn axis_groups_tile_the_world() {
+        let t = HybridTopology::new(2, 4).unwrap();
+        assert_eq!(t.model_group(0).ranks(), &[0, 1, 2, 3]);
+        assert_eq!(t.model_group(1).ranks(), &[4, 5, 6, 7]);
+        assert_eq!(t.dp_group(0).ranks(), &[0, 4]);
+        assert_eq!(t.dp_group(3).ranks(), &[3, 7]);
+        // The two axis families each cover every rank exactly once.
+        for groups in [t.model_groups(), t.dp_groups()] {
+            let mut seen: Vec<usize> = groups.iter().flat_map(|g| g.ranks().to_vec()).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..8).collect::<Vec<_>>());
+        }
+        assert_eq!(t.model_groups()[1], t.model_group(1));
+        assert_eq!(t.dp_groups()[2], t.dp_group(2));
+    }
+
+    #[test]
+    fn degenerate_axes() {
+        // R = 1: the dp rings are singletons (no communication).
+        let t = HybridTopology::new(1, 4).unwrap();
+        assert_eq!(t.dp_group(2).ranks(), &[2]);
+        // M = 1: pure data parallelism — one dp ring over the whole world.
+        let t = HybridTopology::new(4, 1).unwrap();
+        assert_eq!(t.dp_group(0).ranks(), &[0, 1, 2, 3]);
+        assert_eq!(t.model_group(3).ranks(), &[3]);
+    }
+}

@@ -12,10 +12,17 @@
 //! P_y = 1×P_co×1×P_0×... simultaneously. [`broadcast_groups`] implements
 //! the paper's NumPy-like, source-to-destination-only partition
 //! broadcasting rules that connect them.
+//!
+//! [`HybridTopology`] adds the data-parallel axis on top: the world
+//! factors into `replicas × model-grid`, every model partition of replica
+//! `k` being the replica-0 partition offset by `k · M`, with per-axis
+//! communicators split out of the endpoint map.
 
 mod decomposition;
+mod hybrid;
 
 pub use decomposition::{balanced_split, TensorDecomposition};
+pub use hybrid::HybridTopology;
 
 use crate::error::{Error, Result};
 use crate::tensor::{delinearize, linearize, numel};

@@ -291,69 +291,118 @@ impl Broadcast {
                 posted.push_back(comm.irecv::<T>(members[to], tag)?);
             }
         }
-        // Members that are destinations start from their cotangent; a root
-        // that is not a destination starts empty and — on the pooled path
-        // — *adopts* its first child's payload as the accumulator:
-        // zero-copy, and when there is exactly one contribution (consumed
-        // read-only by the caller) the reduction result is a pool-backed
-        // tensor wrapping the child's registered buffer outright. The
+        // Members that are destinations start from their cotangent
+        // (`Tensor`); a root that is not a destination starts `Empty` and
+        // — on the pooled path — *adopts* its first child's payload as
+        // the accumulator (`Held`, zero-copy). A second contribution
+        // fuses the two payloads with one pass into a registered buffer
+        // from this member's own pool (`Buf`); later contributions add
+        // into that buffer in place. So an unseeded member never copies
+        // and never promotes copy-on-write, however many children it has:
+        // one child → the child's buffer is relayed or wrapped outright,
+        // many children → the accumulator is born in this pool and the
+        // payloads return to their stagers as they are consumed. The
         // unpooled baseline keeps the historic zeros-then-add bitwise.
-        let mut acc: Option<Tensor<T>> = seed;
+        enum Acc<T: Scalar> {
+            Empty,
+            Tensor(Tensor<T>),
+            Held(Payload<T>),
+            Buf(Vec<T>),
+        }
+        let mut acc = match seed {
+            Some(t) => Acc::Tensor(t),
+            None => Acc::Empty,
+        };
         for (from, to) in reversed {
             if to == me {
                 // Final action for this member: the accumulated cotangent
-                // goes to the parent — staged in a registered buffer from
-                // this member's own pool (the parent's drop returns it
-                // here), or moved outright on the unpooled path. A member
-                // handed no cotangent ships zeros, as before. The tree
-                // schedule guarantees every child contribution was folded
-                // in before this ship; a scheduler that broke that would
+                // goes to the parent. A `Tensor` accumulator is staged in
+                // a registered buffer from this member's own pool (the
+                // parent's drop returns it here) or moved outright on the
+                // unpooled path; a `Buf` accumulator already *is* a
+                // registered buffer and ships zero-copy; a `Held` payload
+                // is relayed onward untouched (its buffer still returns
+                // to the child that staged it). A member handed no
+                // cotangent ships zeros, as before. The tree schedule
+                // guarantees every child contribution was folded in
+                // before this ship; a scheduler that broke that would
                 // silently drop gradients, so fail loudly in debug.
                 debug_assert!(
                     posted.is_empty(),
                     "sum-reduce: member ships before consuming its children"
                 );
-                let t = acc
-                    .take()
-                    .unwrap_or_else(|| Tensor::zeros(&self.shapes[gi]));
-                let req = if comm.pool_on() {
-                    comm.isend_staged(members[from], tag, t.data())?
-                } else {
-                    comm.isend_vec(members[from], tag, t.into_vec())?
+                let req = match std::mem::replace(&mut acc, Acc::Empty) {
+                    Acc::Tensor(t) => {
+                        if comm.pool_on() {
+                            comm.isend_staged(members[from], tag, t.data())?
+                        } else {
+                            comm.isend_vec(members[from], tag, t.into_vec())?
+                        }
+                    }
+                    Acc::Buf(b) => {
+                        let body = comm.pool_wrap(b);
+                        comm.isend_pooled_body(members[from], tag, &body)?
+                    }
+                    Acc::Held(Payload::Pooled(p)) => {
+                        comm.isend_pooled_body(members[from], tag, &p)?
+                    }
+                    Acc::Held(Payload::Owned(v)) => comm.isend_vec(members[from], tag, v)?,
+                    Acc::Empty => {
+                        let t = Tensor::<T>::zeros(&self.shapes[gi]);
+                        if comm.pool_on() {
+                            comm.isend_staged(members[from], tag, t.data())?
+                        } else {
+                            comm.isend_vec(members[from], tag, t.into_vec())?
+                        }
+                    }
                 };
                 comm.wait_send(req)?;
             } else if from == me {
                 let req = posted.pop_front().expect("child receive posted");
                 let data = comm.wait_payload(req)?;
-                match acc.as_mut() {
-                    Some(acc_t) => {
-                        if data.len() != acc_t.numel() {
-                            return Err(Error::Primitive(format!(
-                                "sum-reduce: contribution length {} vs accumulator {}",
-                                data.len(),
-                                acc_t.numel()
-                            )));
-                        }
+                let want = crate::tensor::numel(&self.shapes[gi]);
+                if data.len() != want {
+                    return Err(Error::Primitive(format!(
+                        "sum-reduce: contribution length {} vs accumulator {}",
+                        data.len(),
+                        want
+                    )));
+                }
+                acc = match acc {
+                    Acc::Tensor(mut t) => {
                         // Add straight out of the (possibly registered)
                         // payload; its drop recycles the buffer to the
-                        // child that staged it. (A pool-backed accumulator
-                        // promotes copy-on-write here — only multi-child
-                        // unseeded roots ever hit that.)
-                        for (d, &s) in acc_t.data_mut().iter_mut().zip(data.as_slice().iter()) {
+                        // child that staged it.
+                        for (d, &s) in t.data_mut().iter_mut().zip(data.as_slice().iter()) {
                             *d += s;
                         }
+                        Acc::Tensor(t)
                     }
-                    None => {
-                        if data.len() != crate::tensor::numel(&self.shapes[gi]) {
-                            return Err(Error::Primitive(format!(
-                                "sum-reduce: contribution length {} vs accumulator {}",
-                                data.len(),
-                                crate::tensor::numel(&self.shapes[gi])
-                            )));
+                    Acc::Buf(mut b) => {
+                        for (d, &s) in b.iter_mut().zip(data.as_slice().iter()) {
+                            *d += s;
                         }
+                        Acc::Buf(b)
+                    }
+                    Acc::Held(first) => {
+                        // Second contribution to an unseeded member: fuse
+                        // both payloads in one pass into a buffer from
+                        // this pool; dropping them returns each to its
+                        // staging child.
+                        let mut b = comm.pool_take::<T>(want);
+                        for ((d, &p), &q) in b
+                            .iter_mut()
+                            .zip(first.as_slice().iter())
+                            .zip(data.as_slice().iter())
+                        {
+                            *d = p + q;
+                        }
+                        Acc::Buf(b)
+                    }
+                    Acc::Empty => {
                         if comm.pool_on() {
                             // Pooled path: adopt the payload outright.
-                            acc = Some(data.into_tensor(&self.shapes[gi])?);
+                            Acc::Held(data)
                         } else {
                             // Unpooled baseline: keep the historic
                             // zeros-then-add exactly (adoption would skip
@@ -366,16 +415,25 @@ impl Broadcast {
                             {
                                 *d += s;
                             }
-                            acc = Some(z);
+                            Acc::Tensor(z)
                         }
                     }
-                }
+                };
             }
         }
         if me == 0 {
-            Ok(Some(
-                acc.unwrap_or_else(|| Tensor::zeros(&self.shapes[gi])),
-            ))
+            Ok(Some(match acc {
+                Acc::Tensor(t) => t,
+                // A root assembled in its own pool hands back a
+                // pool-backed tensor: read-only consumption is zero-copy
+                // and the drop performs the return.
+                Acc::Buf(b) => {
+                    let body = comm.pool_wrap(b);
+                    Tensor::from_pooled(&self.shapes[gi], body)?
+                }
+                Acc::Held(p) => p.into_tensor(&self.shapes[gi])?,
+                Acc::Empty => Tensor::zeros(&self.shapes[gi]),
+            }))
         } else {
             Ok(None)
         }
@@ -659,6 +717,37 @@ mod tests {
         assert!(results[0].is_none() && results[2].is_none());
         assert_eq!(results[1].as_ref().unwrap().data(), &[2.0]);
         assert_eq!(results[3].as_ref().unwrap().data(), &[2.0]);
+    }
+
+    #[test]
+    fn unseeded_multi_child_root_stays_copy_free() {
+        // Root rank 3 reduces from destinations 0..2 without being a
+        // destination itself: its binomial tree has two direct children,
+        // so the accumulator is born in the root's own pool (payloads
+        // fused, no copy-on-write) and the result is pool-backed.
+        let src = Partition::new(vec![3], vec![0, 1, 2]).unwrap();
+        let dst = Partition::new(vec![1], vec![3]).unwrap();
+        let op = SumReduce::new(&src, &dst, vec![vec![4]], 700).unwrap();
+        let per = Cluster::run(4, |comm| {
+            comm.set_pool_cap_bytes(None);
+            crate::tensor::reset_tensor_storage_stats();
+            let rank = comm.rank();
+            let x = (rank != 3).then(|| Tensor::<f64>::filled(&[4], (rank + 1) as f64));
+            let out = op.forward(comm, x)?;
+            let cow = crate::tensor::tensor_storage_stats().cow_promotions;
+            comm.barrier();
+            Ok((out, cow))
+        })
+        .unwrap();
+        let root = per[3].0.as_ref().expect("root holds the reduction");
+        assert_eq!(root.data(), &[6.0, 6.0, 6.0, 6.0]); // 1+2+3
+        assert!(
+            root.is_pool_backed(),
+            "multi-child unseeded root must assemble in its own pool"
+        );
+        for (rank, (_, cow)) in per.iter().enumerate() {
+            assert_eq!(*cow, 0, "rank {rank} promoted copy-on-write");
+        }
     }
 
     #[test]

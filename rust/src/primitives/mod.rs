@@ -14,6 +14,8 @@
 //! | broadcast          | sum-reduce (Eq. 9)                    | §3    |
 //! | sum-reduce         | broadcast                             | §3    |
 //! | all-reduce = B∘R   | itself (self-adjoint)                 | §3    |
+//! | ring reduce-scatter| ring all-gather (and vice versa)      | §3, Eq. 9 |
+//! | ring all-reduce    | itself, up to the real 1/R scale      | §3    |
 //! | all-to-all         | all-to-all in the reverse direction   | §3    |
 //! | halo exchange      | reversed exchange with add-into-bulk  | §3, App. B |
 //!
@@ -33,20 +35,31 @@
 //! scatter/gather, forward-only halo circulation) stop allocating after
 //! warm-up. Receive sides that hand a whole payload to the caller —
 //! scatter and send-recv destinations, broadcast replicas, single-source
-//! repartitions, single-child sum-reduce roots — return **pool-backed
-//! tensors** (`Payload::into_tensor`): the tensor wraps the registered
-//! buffer, reads are zero-copy, and its drop performs the return, so
-//! steady-state steps stop *copying* after warm-up too.
+//! repartitions, and unseeded sum-reduce roots (single-child roots adopt
+//! the payload outright; multi-child roots fuse payloads into a buffer
+//! from their own pool) — return **pool-backed tensors**
+//! (`Payload::into_tensor` / `Comm::pool_wrap`): the tensor wraps the
+//! registered buffer, reads are zero-copy, and its drop performs the
+//! return, so steady-state steps stop *copying* after warm-up too.
+//!
+//! The ring collectives ([`RingAllReduce`], [`RingReduceScatter`],
+//! [`RingAllGather`]) extend the algebra to the data-parallel axis: the
+//! bandwidth-optimal ring schedule realises the same B∘R linear map with
+//! `2(R−1)/R · N` elements moved per member, is self-adjoint up to the
+//! real `1/R` averaging scale, and exposes a `start`/`advance`/`finish`
+//! split so gradient averaging rides inside the backward overlap window.
 
 mod alltoall;
 mod broadcast;
 mod halo_exchange;
+mod ring;
 mod scatter;
 mod sendrecv;
 
 pub use alltoall::Repartition;
 pub use broadcast::{AllReduce, Broadcast, SumReduce};
 pub use halo_exchange::{HaloAdjointInFlight, HaloExchange, HaloInFlight, TrimPad};
+pub use ring::{RingAllGather, RingAllReduce, RingInFlight, RingReduceScatter};
 pub use scatter::{Gather, Scatter};
 pub use sendrecv::SendRecv;
 

@@ -1,0 +1,742 @@
+//! Ring collectives — reduce-scatter, all-gather, and the bandwidth-optimal
+//! all-reduce derived from them (§3's "all others can be derived" applied to
+//! the data-parallel axis).
+//!
+//! The tree [`AllReduce`](super::AllReduce) realises B∘R literally; for the
+//! gradient-averaging traffic of data parallelism the classic ring schedule
+//! moves the same linear map with the optimal per-member volume: over `R`
+//! members and `N` elements split into `R` balanced contiguous chunks,
+//!
+//! * **reduce-scatter** runs `R−1` steps; at step `s`, member `i` sends
+//!   chunk `(i−s) mod R` to member `i+1` and adds the arriving chunk
+//!   `(i−s−1) mod R` into its buffer. Afterwards member `i` owns the fully
+//!   reduced chunk `(i+1) mod R`, having moved `(R−1)/R · N` elements;
+//! * **all-gather** runs `R−1` more steps; at step `s`, member `i` sends
+//!   chunk `(i+1−s) mod R` and copies the arriving chunk `(i−s) mod R`
+//!   into place — every member ends with the full reduction, at
+//!   `2(R−1)/R · N` elements moved in total.
+//!
+//! As linear maps the two are an adjoint pair (the inner-product
+//! construction of Eq. 9): reduce-scatter `S : ⊕ᵢ 𝔽ᴺ → ⊕ᵢ 𝔽^{Nᵢ}` sums
+//! every member's copy of each chunk, so ⟨Sx, y⟩ = Σᵢ⟨Σⱼ xⱼ[cᵢ], yᵢ⟩ =
+//! Σⱼ⟨xⱼ, (S*y)ⱼ⟩ with `(S*y)ⱼ[cᵢ] = yᵢ` — exactly the all-gather. The
+//! composed [`RingAllReduce`] is therefore **self-adjoint up to its real
+//! averaging scale**: `(αA)* = αA* = αA` for the scale `α = 1/R` that
+//! turns the gradient sum into the data-parallel mean. Eq. 13 coherence is
+//! asserted for all three operators in the test-suites.
+//!
+//! Mechanically the ring runs on the registered buffer pool: each step's
+//! chunk is staged with [`Comm::pool_take`] and shipped with
+//! [`Comm::isend_pooled`], the receiver adds or copies **out of the
+//! payload in place** ([`Comm::wait_payload`]), and dropping the payload
+//! returns the buffer to the sender's pool — so a steady-state rotation
+//! circulates chunks with zero allocations and zero intermediate copies.
+//! [`RingInFlight`] exposes the schedule incrementally (`start` /
+//! `advance` / `finish`), which is how the DP engine posts ring steps
+//! inside the backward overlap window while the δw/δb GEMMs run.
+
+use crate::adjoint::DistLinearOp;
+use crate::comm::{Comm, Payload, RecvRequest};
+use crate::error::{Error, Result};
+use crate::tensor::{numel, Scalar, Tensor};
+
+/// The shared ring schedule: member list, element count, chunking.
+#[derive(Debug, Clone)]
+struct Ring {
+    ranks: Vec<usize>,
+    n: usize,
+    tag: u64,
+}
+
+impl Ring {
+    fn new(ranks: &[usize], n: usize, tag: u64) -> Result<Self> {
+        if ranks.is_empty() {
+            return Err(Error::Primitive("ring over an empty member list".into()));
+        }
+        let mut seen = ranks.to_vec();
+        seen.sort_unstable();
+        if seen.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::Primitive(format!(
+                "ring member list has duplicates: {ranks:?}"
+            )));
+        }
+        Ok(Ring {
+            ranks: ranks.to_vec(),
+            n,
+            tag,
+        })
+    }
+
+    fn r(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Total schedule length: R−1 reduce-scatter + R−1 all-gather steps.
+    fn rs_steps(&self) -> usize {
+        self.r() - 1
+    }
+
+    fn total_steps(&self) -> usize {
+        2 * (self.r() - 1)
+    }
+
+    /// Balanced contiguous chunk `c`: `(start, len)`.
+    fn chunk(&self, c: usize) -> (usize, usize) {
+        let r = self.r();
+        let (base, extra) = (self.n / r, self.n % r);
+        let start = c * base + c.min(extra);
+        (start, base + usize::from(c < extra))
+    }
+
+    /// The chunk member `me` owns (fully reduced) after reduce-scatter.
+    fn owned_chunk(&self, me: usize) -> usize {
+        (me + 1) % self.r()
+    }
+
+    fn member(&self, comm: &Comm) -> Option<usize> {
+        self.ranks.iter().position(|&r| r == comm.rank())
+    }
+
+    fn next(&self, me: usize) -> usize {
+        self.ranks[(me + 1) % self.r()]
+    }
+
+    fn prev(&self, me: usize) -> usize {
+        self.ranks[(me + self.r() - 1) % self.r()]
+    }
+
+    /// Decode step `s` for member `me`: `(send_chunk, recv_chunk, reduce)`
+    /// where `reduce` selects add-into (reduce-scatter) vs copy-into
+    /// (all-gather) for the received chunk.
+    fn step_plan(&self, me: usize, s: usize) -> (usize, usize, bool) {
+        let r = self.r();
+        if s < self.rs_steps() {
+            ((me + r - s) % r, (me + 2 * r - s - 1) % r, true)
+        } else {
+            let t = s - self.rs_steps();
+            ((me + 1 + r - t) % r, (me + r - t) % r, false)
+        }
+    }
+
+    /// Post step `s`: stage + ship the send chunk (skipped when empty),
+    /// post the receive (None when the incoming chunk is empty).
+    fn post_step<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        me: usize,
+        buf: &[T],
+        s: usize,
+    ) -> Result<Option<RecvRequest<T>>> {
+        let (cs, cr, _) = self.step_plan(me, s);
+        let (s0, sl) = self.chunk(cs);
+        if sl > 0 {
+            let mut stage = comm.pool_take::<T>(sl);
+            stage.copy_from_slice(&buf[s0..s0 + sl]);
+            let req = comm.isend_pooled(self.next(me), self.tag, stage)?;
+            comm.wait_send(req)?;
+        }
+        let (_, rl) = self.chunk(cr);
+        if rl > 0 {
+            Ok(Some(comm.irecv::<T>(self.prev(me), self.tag)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Fold a completed step's payload into the buffer: add for
+    /// reduce-scatter steps, copy for all-gather steps — both straight
+    /// out of the (pool-backed) payload, which returns to the sender's
+    /// pool when dropped at the end of this call.
+    fn complete_step<T: Scalar>(
+        &self,
+        me: usize,
+        buf: &mut [T],
+        s: usize,
+        payload: Option<Payload<T>>,
+    ) -> Result<()> {
+        let (_, cr, reduce) = self.step_plan(me, s);
+        let (r0, rl) = self.chunk(cr);
+        if let Some(p) = payload {
+            let src = p.as_slice();
+            if src.len() != rl {
+                return Err(Error::Primitive(format!(
+                    "ring step {s}: expected a {rl}-element chunk, got {}",
+                    src.len()
+                )));
+            }
+            if reduce {
+                for (d, &v) in buf[r0..r0 + rl].iter_mut().zip(src) {
+                    *d += v;
+                }
+            } else {
+                buf[r0..r0 + rl].copy_from_slice(src);
+            }
+        }
+        Ok(())
+    }
+
+    /// Begin the half-open step range `[begin, end)` over `buf`.
+    fn start_range<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        buf: Vec<T>,
+        begin: usize,
+        end: usize,
+    ) -> Result<RingInFlight<T>> {
+        let me = self.member(comm).ok_or_else(|| {
+            Error::Primitive(format!("rank {} is not a ring member", comm.rank()))
+        })?;
+        if buf.len() != self.n {
+            return Err(Error::Primitive(format!(
+                "ring buffer has {} elements, schedule expects {}",
+                buf.len(),
+                self.n
+            )));
+        }
+        let mut fl = RingInFlight {
+            buf,
+            step: begin,
+            end,
+            pending: None,
+            me,
+        };
+        if fl.step < fl.end {
+            fl.pending = self.post_step(comm, me, &fl.buf, fl.step)?;
+        }
+        Ok(fl)
+    }
+
+    /// Drive the schedule as far as arrived messages allow, never
+    /// blocking. Returns `true` once the range is complete.
+    fn advance<T: Scalar>(&self, comm: &mut Comm, fl: &mut RingInFlight<T>) -> Result<bool> {
+        while fl.step < fl.end {
+            let payload = match &fl.pending {
+                Some(req) => {
+                    if !comm.test(req) {
+                        return Ok(false);
+                    }
+                    let req = fl.pending.take().expect("pending recv present");
+                    Some(comm.wait_payload(req)?)
+                }
+                None => None,
+            };
+            self.complete_step(fl.me, &mut fl.buf, fl.step, payload)?;
+            fl.step += 1;
+            if fl.step < fl.end {
+                fl.pending = self.post_step(comm, fl.me, &fl.buf, fl.step)?;
+            }
+        }
+        Ok(true)
+    }
+
+    /// Block until the range completes and hand the buffer back.
+    fn finish<T: Scalar>(&self, comm: &mut Comm, mut fl: RingInFlight<T>) -> Result<Vec<T>> {
+        while fl.step < fl.end {
+            let payload = match fl.pending.take() {
+                Some(req) => Some(comm.wait_payload(req)?),
+                None => None,
+            };
+            self.complete_step(fl.me, &mut fl.buf, fl.step, payload)?;
+            fl.step += 1;
+            if fl.step < fl.end {
+                fl.pending = self.post_step(comm, fl.me, &fl.buf, fl.step)?;
+            }
+        }
+        Ok(fl.buf)
+    }
+
+    /// Pre-warm this endpoint's pool for the (at most two) chunk size
+    /// classes the rotation circulates, without touching other classes'
+    /// depths. A class can keep at most one buffer per sending step of a
+    /// call concurrently live (every return may lag to the call's end),
+    /// so the full per-call rotation is reserved: however the member
+    /// threads interleave, a class stops missing after its pre-warm.
+    fn reserve_pool<T: Scalar>(&self, comm: &mut Comm) {
+        let r = self.r();
+        if r < 2 {
+            return;
+        }
+        let depth = self.total_steps() + 1;
+        let mut lens = [self.chunk(0).1, self.chunk(r - 1).1];
+        lens.sort_unstable();
+        for (i, &len) in lens.iter().enumerate() {
+            if len > 0 && (i == 0 || len != lens[i - 1]) {
+                comm.pool_reserve_for::<T>(len, depth);
+            }
+        }
+    }
+}
+
+/// An in-progress ring schedule over one buffer. Obtain from
+/// [`RingAllReduce::start`]; drive with `advance`; redeem with `finish`.
+pub struct RingInFlight<T: Scalar> {
+    buf: Vec<T>,
+    step: usize,
+    end: usize,
+    pending: Option<RecvRequest<T>>,
+    me: usize,
+}
+
+impl<T: Scalar> RingInFlight<T> {
+    /// Steps completed so far (diagnostics).
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+}
+
+/// Ring all-reduce: reduce-scatter ∘ all-gather, scaled by a real factor.
+///
+/// With `scale = 1` this is the same linear map as the tree
+/// [`AllReduce`](super::AllReduce) (B∘R, self-adjoint); with
+/// `scale = 1/R` ([`RingAllReduce::averaging`]) it is the data-parallel
+/// gradient mean, still self-adjoint because the scale is real.
+pub struct RingAllReduce {
+    ring: Ring,
+    shape: Vec<usize>,
+    scale: f64,
+}
+
+impl RingAllReduce {
+    /// Summing all-reduce over `ranks` (every member holds `shape`).
+    pub fn new(ranks: &[usize], shape: &[usize], tag: u64) -> Result<Self> {
+        Ok(RingAllReduce {
+            ring: Ring::new(ranks, numel(shape), tag)?,
+            shape: shape.to_vec(),
+            scale: 1.0,
+        })
+    }
+
+    /// Averaging all-reduce: the sum scaled by `1/R`.
+    pub fn averaging(ranks: &[usize], shape: &[usize], tag: u64) -> Result<Self> {
+        let mut op = RingAllReduce::new(ranks, shape, tag)?;
+        op.scale = 1.0 / ranks.len() as f64;
+        Ok(op)
+    }
+
+    /// Member world ranks in ring order.
+    pub fn ranks(&self) -> &[usize] {
+        self.ring.ranks.as_slice()
+    }
+
+    /// Elements reduced per member.
+    pub fn len(&self) -> usize {
+        self.ring.n
+    }
+
+    /// Whether the reduction is empty.
+    pub fn is_empty(&self) -> bool {
+        self.ring.n == 0
+    }
+
+    /// Elements member `index` ships over the full schedule — the
+    /// analytic `2(R−1)/R · N` ring cost, exact per member: each phase
+    /// sends every chunk except one (reduce-scatter skips the owned
+    /// chunk, all-gather the one after it), so with unbalanced chunks
+    /// the per-member totals differ by at most two elements.
+    pub fn elems_sent_by(&self, index: usize) -> usize {
+        (0..self.ring.total_steps())
+            .map(|s| self.ring.chunk(self.ring.step_plan(index, s).0).1)
+            .sum()
+    }
+
+    /// Pre-warm the pool for the chunk rotation (one buffer per sending
+    /// step of a call, the worst-case concurrent-live count).
+    pub fn reserve_pool<T: Scalar>(&self, comm: &mut Comm) {
+        self.ring.reserve_pool::<T>(comm);
+    }
+
+    /// Post the first ring step over `buf` (length must equal the
+    /// operator's element count) and return the in-flight schedule.
+    pub fn start<T: Scalar>(&self, comm: &mut Comm, buf: Vec<T>) -> Result<RingInFlight<T>> {
+        self.ring.start_range(comm, buf, 0, self.ring.total_steps())
+    }
+
+    /// Drive the schedule without blocking; `true` once complete.
+    pub fn advance<T: Scalar>(&self, comm: &mut Comm, fl: &mut RingInFlight<T>) -> Result<bool> {
+        self.ring.advance(comm, fl)
+    }
+
+    /// Complete the schedule (blocking) and return the reduced, scaled
+    /// buffer.
+    pub fn finish<T: Scalar>(&self, comm: &mut Comm, fl: RingInFlight<T>) -> Result<Vec<T>> {
+        let mut buf = self.ring.finish(comm, fl)?;
+        if self.scale != 1.0 {
+            let k = T::from_f64(self.scale);
+            for v in buf.iter_mut() {
+                *v *= k;
+            }
+        }
+        Ok(buf)
+    }
+
+    fn apply_t<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        if self.ring.member(comm).is_none() {
+            return Ok(None);
+        }
+        let x = x.ok_or_else(|| {
+            Error::Primitive(format!("ring member rank {} got no input", comm.rank()))
+        })?;
+        let fl = self.start(comm, x.into_vec())?;
+        let buf = self.finish(comm, fl)?;
+        Ok(Some(Tensor::from_vec(&self.shape, buf)?))
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for RingAllReduce {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.ring.ranks.contains(&rank).then(|| self.shape.clone())
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.ring.ranks.contains(&rank).then(|| self.shape.clone())
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.apply_t(comm, x)
+    }
+
+    /// Self-adjoint: `(αA)* = αA` for real `α` — the same schedule runs.
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.apply_t(comm, y)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "RingAllReduce[R={},N={},scale={}]",
+            self.ring.r(),
+            self.ring.n,
+            self.scale
+        )
+    }
+}
+
+/// Ring reduce-scatter: every member contributes a full `shape` tensor;
+/// member `i` receives the fully summed chunk `(i+1) mod R`. Its adjoint
+/// (Eq. 9 construction) is the ring all-gather.
+pub struct RingReduceScatter {
+    ring: Ring,
+    shape: Vec<usize>,
+}
+
+impl RingReduceScatter {
+    pub fn new(ranks: &[usize], shape: &[usize], tag: u64) -> Result<Self> {
+        Ok(RingReduceScatter {
+            ring: Ring::new(ranks, numel(shape), tag)?,
+            shape: shape.to_vec(),
+        })
+    }
+
+    /// The chunk index member `index` ends up owning.
+    pub fn owned_chunk_index(&self, index: usize) -> usize {
+        self.ring.owned_chunk(index)
+    }
+
+    /// `(start, len)` of the chunk member `index` ends up owning.
+    pub fn owned_range(&self, index: usize) -> (usize, usize) {
+        self.ring.chunk(self.ring.owned_chunk(index))
+    }
+
+    fn scatter<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let me = match self.ring.member(comm) {
+            Some(me) => me,
+            None => return Ok(None),
+        };
+        let x = x.ok_or_else(|| {
+            Error::Primitive(format!("ring member rank {} got no input", comm.rank()))
+        })?;
+        let fl = self
+            .ring
+            .start_range(comm, x.into_vec(), 0, self.ring.rs_steps())?;
+        let buf = self.ring.finish(comm, fl)?;
+        let (o0, ol) = self.ring.chunk(self.ring.owned_chunk(me));
+        Ok(Some(Tensor::from_vec(&[ol], buf[o0..o0 + ol].to_vec())?))
+    }
+
+    fn gather<T: Scalar>(
+        &self,
+        comm: &mut Comm,
+        y: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        let me = match self.ring.member(comm) {
+            Some(me) => me,
+            None => return Ok(None),
+        };
+        let y = y.ok_or_else(|| {
+            Error::Primitive(format!("ring member rank {} got no chunk", comm.rank()))
+        })?;
+        let (o0, ol) = self.ring.chunk(self.ring.owned_chunk(me));
+        let mut buf = vec![T::ZERO; self.ring.n];
+        buf[o0..o0 + ol].copy_from_slice(y.data());
+        let fl = self
+            .ring
+            .start_range(comm, buf, self.ring.rs_steps(), self.ring.total_steps())?;
+        let buf = self.ring.finish(comm, fl)?;
+        Ok(Some(Tensor::from_vec(&self.shape, buf)?))
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for RingReduceScatter {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        self.ring.ranks.contains(&rank).then(|| self.shape.clone())
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        let me = self.ring.ranks.iter().position(|&r| r == rank)?;
+        Some(vec![self.ring.chunk(self.ring.owned_chunk(me)).1])
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.scatter(comm, x)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.gather(comm, y)
+    }
+
+    fn name(&self) -> String {
+        format!("RingReduceScatter[R={},N={}]", self.ring.r(), self.ring.n)
+    }
+}
+
+/// Ring all-gather: member `i` contributes chunk `(i+1) mod R`; every
+/// member receives the full concatenation. Adjoint: ring reduce-scatter.
+pub struct RingAllGather {
+    inner: RingReduceScatter,
+}
+
+impl RingAllGather {
+    pub fn new(ranks: &[usize], shape: &[usize], tag: u64) -> Result<Self> {
+        Ok(RingAllGather {
+            inner: RingReduceScatter::new(ranks, shape, tag)?,
+        })
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for RingAllGather {
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        DistLinearOp::<T>::codomain_shape(&self.inner, rank)
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        DistLinearOp::<T>::domain_shape(&self.inner, rank)
+    }
+
+    fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.inner.gather(comm, x)
+    }
+
+    fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        self.inner.scatter(comm, y)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "RingAllGather[R={},N={}]",
+            self.inner.ring.r(),
+            self.inner.ring.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::assert_coherent;
+    use crate::comm::Cluster;
+
+    fn member_input(rank: usize, n: usize) -> Vec<f64> {
+        (0..n).map(|i| (rank * 100 + i) as f64 + 0.25).collect()
+    }
+
+    #[test]
+    fn all_reduce_sums_across_members() {
+        for world in [1usize, 2, 3, 4, 5, 8] {
+            for n in [0usize, 1, 5, 16, 19] {
+                let ranks: Vec<usize> = (0..world).collect();
+                let op = RingAllReduce::new(&ranks, &[n], 7).unwrap();
+                let results = Cluster::run(world, |comm| {
+                    let buf = member_input(comm.rank(), n);
+                    let fl = op.start(comm, buf)?;
+                    op.finish(comm, fl)
+                })
+                .unwrap();
+                let expect: Vec<f64> = (0..n)
+                    .map(|i| (0..world).map(|r| member_input(r, n)[i]).sum())
+                    .collect();
+                for (rank, got) in results.iter().enumerate() {
+                    assert_eq!(
+                        got, &expect,
+                        "world {world}, n {n}: rank {rank} sum mismatch"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn averaging_scales_by_replica_count() {
+        let ranks = [0usize, 1, 2, 3];
+        let op = RingAllReduce::averaging(&ranks, &[6], 3).unwrap();
+        let results = Cluster::run(4, |comm| {
+            let buf = vec![(comm.rank() + 1) as f64; 6];
+            let fl = op.start(comm, buf)?;
+            op.finish(comm, fl)
+        })
+        .unwrap();
+        for got in results {
+            // mean of 1..=4 = 2.5, exactly representable
+            assert_eq!(got, vec![2.5; 6]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_owns_the_rotated_chunk() {
+        let world = 4;
+        let n = 10; // unbalanced: chunks of 3,3,2,2
+        let ranks: Vec<usize> = (0..world).collect();
+        let op = RingReduceScatter::new(&ranks, &[n], 11).unwrap();
+        let results = Cluster::run(world, |comm| {
+            let x = Tensor::from_vec(&[n], member_input(comm.rank(), n))?;
+            op.scatter(comm, Some(x))
+        })
+        .unwrap();
+        let full: Vec<f64> = (0..n)
+            .map(|i| (0..world).map(|r| member_input(r, n)[i]).sum())
+            .collect();
+        for (rank, got) in results.into_iter().enumerate() {
+            let got = got.expect("member holds a chunk");
+            let (o0, ol) = op.owned_range(rank);
+            assert_eq!(op.owned_chunk_index(rank), (rank + 1) % world);
+            assert_eq!(got.data(), &full[o0..o0 + ol], "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn all_gather_assembles_every_chunk() {
+        let world = 3;
+        let n = 7;
+        let ranks: Vec<usize> = (0..world).collect();
+        let op = RingAllGather::new(&ranks, &[n], 13).unwrap();
+        let full: Vec<f64> = (0..n).map(|i| i as f64 * 1.5 - 2.0).collect();
+        let results = Cluster::run(world, |comm| {
+            let (o0, ol) = op.inner.owned_range(comm.rank());
+            let x = Tensor::from_vec(&[ol], full[o0..o0 + ol].to_vec())?;
+            op.inner.gather(comm, Some(x))
+        })
+        .unwrap();
+        for got in results {
+            assert_eq!(got.expect("full tensor").data(), full.as_slice());
+        }
+    }
+
+    #[test]
+    fn ring_ops_are_coherent() {
+        // Eq. 13 through the adjoint pair and the (scaled) self-adjoint
+        // composition, including chunk-starved (N < R) configurations.
+        for (world, n) in [(2usize, 8usize), (3, 7), (4, 4), (5, 3)] {
+            let ranks: Vec<usize> = (0..world).collect();
+            let shape = vec![n];
+            assert_coherent::<f64>(
+                world,
+                &RingReduceScatter::new(&ranks, &shape, 100).unwrap(),
+                41,
+            );
+            assert_coherent::<f64>(world, &RingAllGather::new(&ranks, &shape, 200).unwrap(), 42);
+            assert_coherent::<f64>(world, &RingAllReduce::new(&ranks, &shape, 300).unwrap(), 43);
+            assert_coherent::<f64>(
+                world,
+                &RingAllReduce::averaging(&ranks, &shape, 400).unwrap(),
+                44,
+            );
+        }
+    }
+
+    #[test]
+    fn ring_over_a_rank_subset() {
+        // Members need not be contiguous or start at rank 0.
+        let ranks = [3usize, 1, 4];
+        let op = RingAllReduce::new(&ranks, &[5], 21).unwrap();
+        let results = Cluster::run(6, |comm| {
+            if !ranks.contains(&comm.rank()) {
+                return Ok(None);
+            }
+            let buf = vec![comm.rank() as f64; 5];
+            let fl = op.start(comm, buf)?;
+            Ok(Some(op.finish(comm, fl)?))
+        })
+        .unwrap();
+        for (rank, got) in results.into_iter().enumerate() {
+            match got {
+                Some(v) => assert_eq!(v, vec![8.0; 5], "member rank {rank}"),
+                None => assert!(!ranks.contains(&rank)),
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_bytes_match_measured() {
+        // Per-member payload volume must equal the 2(R−1)/R · N ring cost.
+        for (world, n) in [(2usize, 4096usize), (4, 4096), (4, 4099)] {
+            let ranks: Vec<usize> = (0..world).collect();
+            let op = RingAllReduce::new(&ranks, &[n], 17).unwrap();
+            if n % world == 0 {
+                assert_eq!(op.elems_sent_by(0), 2 * (world - 1) * (n / world));
+            }
+            let stats = Cluster::run_with_stats(world, |comm| {
+                let fl = op.start(comm, vec![1.0f64; n])?;
+                op.finish(comm, fl)?;
+                Ok(())
+            })
+            .unwrap();
+            for (member, (_, s)) in stats.into_iter().enumerate() {
+                // Each message carries an 8-byte header in its wire length.
+                let payload = s.bytes_sent - 8 * s.messages_sent;
+                assert_eq!(
+                    payload,
+                    op.elems_sent_by(member) * std::mem::size_of::<f64>(),
+                    "world {world}, n {n}, member {member}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_rotation_stops_allocating() {
+        let world = 4;
+        let n = 1024;
+        let ranks: Vec<usize> = (0..world).collect();
+        let op = RingAllReduce::averaging(&ranks, &[n], 31).unwrap();
+        Cluster::run(world, |comm| {
+            comm.set_pool_cap_bytes(None);
+            op.reserve_pool::<f64>(comm);
+            for _ in 0..3 {
+                let fl = op.start(comm, vec![1.0f64; n])?;
+                op.finish(comm, fl)?;
+                comm.barrier(); // bound inter-rank skew so warm-up sees the peak rotation
+            }
+            let warm = comm.pool_stats().misses;
+            for _ in 0..10 {
+                let fl = op.start(comm, vec![1.0f64; n])?;
+                op.finish(comm, fl)?;
+                comm.barrier();
+            }
+            let steady = comm.pool_stats().misses;
+            assert_eq!(
+                steady - warm,
+                0,
+                "rank {}: ring rotation misses after warm-up",
+                comm.rank()
+            );
+            Ok(())
+        })
+        .unwrap();
+    }
+}

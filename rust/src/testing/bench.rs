@@ -6,7 +6,10 @@
 //! mean/median/min/std and derived throughput. Honors the standard
 //! `--bench` filter argument cargo passes through.
 
+use crate::util::json::Json;
 use crate::util::timer::{Stats, Timer};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 /// One benchmark's result.
 #[derive(Debug, Clone)]
@@ -130,6 +133,88 @@ impl BenchGroup {
     }
 }
 
+/// Machine-readable bench snapshot, written at the repository root as
+/// `BENCH_<name>.json` so runs can be diffed across commits.
+///
+/// Schema: `{"bench": <name>, "rows": {<bench id>: {<column>: <value>}}}`
+/// — one object per benchmark row, one numeric/string entry per column.
+#[derive(Debug, Clone, Default)]
+pub struct BenchSnapshot {
+    name: String,
+    rows: BTreeMap<String, BTreeMap<String, Json>>,
+}
+
+impl BenchSnapshot {
+    /// Snapshot named `name` (file: `BENCH_<name>.json`).
+    pub fn new(name: &str) -> Self {
+        BenchSnapshot {
+            name: name.to_string(),
+            rows: BTreeMap::new(),
+        }
+    }
+
+    /// Set a numeric column on a row (created on first touch).
+    pub fn num(&mut self, row: &str, col: &str, value: f64) {
+        self.rows
+            .entry(row.to_string())
+            .or_default()
+            .insert(col.to_string(), Json::Num(value));
+    }
+
+    /// Set a string column on a row.
+    pub fn text(&mut self, row: &str, col: &str, value: &str) {
+        self.rows
+            .entry(row.to_string())
+            .or_default()
+            .insert(col.to_string(), Json::Str(value.to_string()));
+    }
+
+    /// Fold a group's results in: `mean_s`/`median_s`/`min_s`/`samples`
+    /// per row, plus `gbps` for byte-annotated benchmarks.
+    pub fn add_results(&mut self, results: &[BenchResult]) {
+        for r in results {
+            self.num(&r.name, "mean_s", r.stats.mean);
+            self.num(&r.name, "median_s", r.stats.median);
+            self.num(&r.name, "min_s", r.stats.min);
+            self.num(&r.name, "samples", r.stats.n as f64);
+            if let Some(b) = r.bytes {
+                self.num(&r.name, "bytes", b as f64);
+                self.num(&r.name, "gbps", b as f64 / r.stats.median / 1e9);
+            }
+        }
+    }
+
+    /// The snapshot as JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            (
+                "rows",
+                Json::Obj(
+                    self.rows
+                        .iter()
+                        .map(|(id, cols)| (id.clone(), Json::Obj(cols.clone())))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+
+    /// Write the snapshot at the repository root (the parent of the cargo
+    /// manifest directory, falling back to the manifest directory itself).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        self.write_to(manifest.parent().unwrap_or(manifest))
+    }
+}
+
 /// Human-friendly seconds formatting.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
@@ -160,6 +245,35 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert!(results[0].stats.n >= 3);
         assert!(count >= 4); // warmup + samples
+    }
+
+    #[test]
+    fn snapshot_serialises_and_writes() {
+        let mut snap = BenchSnapshot::new("probe");
+        snap.num("row_a", "median_s", 0.25);
+        snap.text("row_a", "config", "R=2");
+        snap.add_results(&[BenchResult {
+            name: "row_b".into(),
+            stats: Stats::of(&[1.0, 1.0]),
+            bytes: Some(2_000_000_000),
+        }]);
+        let j = Json::parse(&snap.to_json().to_string()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "probe");
+        let rows = j.get("rows").unwrap();
+        assert_eq!(
+            rows.get("row_a").unwrap().get("median_s").unwrap().as_f64().unwrap(),
+            0.25
+        );
+        assert_eq!(
+            rows.get("row_b").unwrap().get("gbps").unwrap().as_f64().unwrap(),
+            2.0
+        );
+        let dir = std::env::temp_dir();
+        let path = snap.write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_probe.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"row_a\""));
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]
