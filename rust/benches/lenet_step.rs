@@ -16,6 +16,12 @@
 //!   4-worker grid, total batch fixed) with gradient ring-averaging
 //!   serialized after backward vs riding the backward overlap window —
 //!   the DP-overlap speedup, with `allocs/step` staying at zero;
+//! * **E15** times the micro-batch pipelined train step (S layer stages
+//!   × m micro-batches, total batch fixed) under the serialized lockstep
+//!   schedule vs 1F1B, on the staged LeNet and on a balanced affine
+//!   tower, with the measured per-stage bubble next to its analytic
+//!   `(S−1)/(S−1+m)` — the two schedules are bitwise-identical in
+//!   gradients, so the speedup is pure overlap;
 //! * the step table's `allocs/step` column counts fresh scratch-arena
 //!   allocations **plus registered comm-pool misses** per steady-state
 //!   step on rank 0 (warm-up excluded) — zero means every im2col/staging/
@@ -29,17 +35,23 @@
 //! Every table also lands in `BENCH_lenet_step.json` at the repository
 //! root (`testing::bench::BenchSnapshot`) for cross-commit diffing.
 
-use distdl::comm::Cluster;
+use distdl::autograd::NetworkState;
+use distdl::comm::{Cluster, Comm, CommGroup};
 use distdl::config::Backend;
 use distdl::coordinator::{kernels_for, train_step, train_step_hybrid, DP_TAG_BASE};
 use distdl::data::SyntheticMnist;
 use distdl::memory::scratch_stats;
-use distdl::models::{lenet5, lenet5_at, LeNetConfig, LeNetLayout};
+use distdl::models::{
+    affine_tower_pipeline, lenet5, lenet5_at, lenet5_pipeline, LeNetConfig, LeNetLayout,
+    TowerConfig,
+};
 use distdl::nn::layers::set_adjoint_overlap;
 use distdl::nn::native::{
-    conv2d_backward, conv2d_backward_naive, conv2d_forward, conv2d_forward_naive, Conv2dSpec,
+    conv2d_backward, conv2d_backward_naive, conv2d_forward, conv2d_forward_naive,
+    cross_entropy_backward, cross_entropy_forward, Conv2dSpec,
 };
 use distdl::optim::dp::{set_dp_overlap, DataParallel};
+use distdl::optim::pp::{analytic_bubble, set_pp_overlap, Pipeline};
 use distdl::optim::Adam;
 use distdl::partition::HybridTopology;
 use distdl::tensor::{numel, Tensor};
@@ -186,6 +198,147 @@ fn hybrid_dp_speedup(batch: usize, iters: usize, snap: &mut BenchSnapshot) {
         snap.num(&row, "overlapped_median_s", overlap.median);
         snap.num(&row, "speedup", serial.median / overlap.median);
         snap.num(&row, "allocs_per_step", allocs);
+    }
+}
+
+/// Pipelined train step: the layer sequence cut into `stages` stages
+/// (one rank each), the batch into `m` micro-batches of `batch / m`
+/// samples, boundary activations/cotangents as `PipeMove` messages on
+/// the registered pool. `overlap = false` removes the 1F1B warm-up —
+/// the fully serialized lockstep schedule, which is bitwise-identical
+/// in gradients (`tests/pipeline.rs`) and therefore the fair baseline.
+/// Returns the step stats, allocs/step on rank 0, and the stage-mean
+/// measured bubble fraction.
+fn measure_pipeline(
+    tower: bool,
+    stages: usize,
+    m: usize,
+    batch: usize,
+    iters: usize,
+    overlap: bool,
+) -> (Stats, f64, f64) {
+    set_pp_overlap(overlap);
+    let micro = batch / m;
+    let data = SyntheticMnist::new(1, micro * m);
+    let batches = data.batches(micro);
+    // The balanced tower gives every stage identical work — the regime
+    // the analytic bubble (S−1)/(S−1+m) models; LeNet's conv-heavy front
+    // stages sit above it.
+    let tower_cfg = TowerConfig {
+        batch: micro,
+        width: 256,
+        depth: 8,
+    };
+    let mut rng = SplitMix64::new(7);
+    let tower_inputs: Vec<Tensor<f32>> = (0..m)
+        .map(|_| rand_t(&[micro, tower_cfg.width], &mut rng))
+        .collect();
+    let samples = Cluster::run(stages, |comm| {
+        comm.pool_reserve(distdl::coordinator::PIPELINE_POOL_DEPTH);
+        let rank = comm.rank();
+        let kernels = kernels_for(Backend::Native, "artifacts")?;
+        let (net, plan) = if tower {
+            affine_tower_pipeline::<f32>(&tower_cfg, kernels, stages, 0)?
+        } else {
+            let cfg = LeNetConfig {
+                batch: micro,
+                layout: LeNetLayout::Sequential,
+            };
+            lenet5_pipeline::<f32>(&cfg, kernels, stages, 0)?
+        };
+        let mut st = net.init(rank, 1)?;
+        let mut opt = Adam::new(1e-3);
+        let mut dp = DataParallel::<f32>::new(CommGroup::new(vec![rank])?, DP_TAG_BASE);
+        let mut pipe = Pipeline::new(plan, rank, m)?;
+        let stage = pipe.stage();
+        let mut one_step = |st: &mut NetworkState<f32>,
+                            comm: &mut Comm,
+                            opt: &mut Adam<f32>,
+                            dp: &mut DataParallel<f32>,
+                            pipe: &mut Pipeline<f32>|
+         -> distdl::Result<()> {
+            let mut input = |k: usize| {
+                (stage == 0).then(|| {
+                    if tower {
+                        tower_inputs[k].clone()
+                    } else {
+                        batches[k].images_as::<f32>()
+                    }
+                })
+            };
+            let mut loss_fn = |k: usize, logits: Tensor<f32>| {
+                let labels = &batches[k].labels;
+                let (l, probs) = cross_entropy_forward(&logits, labels)?;
+                Ok((l, 0.0, cross_entropy_backward(&probs, labels)))
+            };
+            pipe.run_step(&net, st, comm, &mut input, &mut loss_fn, dp)?;
+            dp.finish(comm, st)?;
+            opt.step(st)?;
+            Ok(())
+        };
+        for _ in 0..3 {
+            one_step(&mut st, comm, &mut opt, &mut dp, &mut pipe)?;
+            comm.barrier(); // in-flight pooled payloads land home
+        }
+        let alloc0 = scratch_stats::<f32>().allocations;
+        let pool0 = comm.pool_stats().misses;
+        pipe.reset_stats();
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            comm.barrier();
+            let t = Timer::start();
+            one_step(&mut st, comm, &mut opt, &mut dp, &mut pipe)?;
+            comm.barrier();
+            times.push(t.elapsed_s());
+        }
+        let allocs = (scratch_stats::<f32>().allocations - alloc0)
+            + (comm.pool_stats().misses - pool0);
+        Ok((times, allocs, pipe.stats().bubble_fraction()))
+    })
+    .expect("pipeline bench cluster");
+    set_pp_overlap(true);
+    let bubble = samples.iter().map(|(_, _, b)| *b).sum::<f64>() / stages as f64;
+    let (times, allocs, _) = &samples[0];
+    (Stats::of(times), *allocs as f64 / iters as f64, bubble)
+}
+
+/// E15: pipeline — the serialized lockstep schedule vs 1F1B at fixed
+/// total batch, on the staged LeNet (unbalanced stages) and the balanced
+/// affine tower; measured bubble next to its analytic value.
+fn pipeline_speedup(batch: usize, iters: usize, snap: &mut BenchSnapshot) {
+    println!(
+        "\n== E15: pipeline — serialized vs 1F1B micro-batch schedule (S stages, batch {batch}, native) =="
+    );
+    println!(
+        "{:<34} {:>12} {:>12} {:>9} {:>8} {:>9} {:>12}",
+        "configuration", "serialized", "pipelined", "speedup", "bubble", "analytic", "allocs/step"
+    );
+    for (tower, label) in [(false, "lenet"), (true, "tower")] {
+        for stages in [2usize, 4] {
+            for m in [4usize, 8] {
+                let (serial, _, _) = measure_pipeline(tower, stages, m, batch, iters, false);
+                let (pipelined, allocs, bubble) =
+                    measure_pipeline(tower, stages, m, batch, iters, true);
+                let name = format!("{label} S={stages} m={m} micro={}", batch / m);
+                println!(
+                    "{:<34} {:>12} {:>12} {:>8.2}x {:>8.3} {:>9.3} {:>12.1}",
+                    name,
+                    fmt_time(serial.median),
+                    fmt_time(pipelined.median),
+                    serial.median / pipelined.median,
+                    bubble,
+                    analytic_bubble(stages, m),
+                    allocs
+                );
+                let row = format!("pipeline_{label} S={stages} m={m}");
+                snap.num(&row, "serialized_median_s", serial.median);
+                snap.num(&row, "pipelined_median_s", pipelined.median);
+                snap.num(&row, "speedup", serial.median / pipelined.median);
+                snap.num(&row, "bubble_measured", bubble);
+                snap.num(&row, "bubble_analytic", analytic_bubble(stages, m));
+                snap.num(&row, "allocs_per_step", allocs);
+            }
+        }
     }
 }
 
@@ -338,6 +491,7 @@ fn main() {
     if filter.is_none() {
         backward_overlap_speedup(batch, iters, &mut snap);
         hybrid_dp_speedup(batch, iters, &mut snap);
+        pipeline_speedup(batch, iters, &mut snap);
     }
     match snap.write() {
         Ok(path) => println!("\nsnapshot: {}", path.display()),

@@ -41,7 +41,8 @@ use distdl::error::Result;
 use distdl::nn::native::gemm::{gemm_scoped, gemm_with_workers, pool_threads};
 use distdl::partition::{Partition, TensorDecomposition};
 use distdl::primitives::{
-    AllReduce, Broadcast, Gather, Repartition, RingAllReduce, Scatter, SendRecv, SumReduce,
+    AllReduce, Broadcast, Gather, PipeMove, Repartition, RingAllReduce, Scatter, SendRecv,
+    SumReduce,
 };
 use distdl::tensor::{ops, Tensor};
 use distdl::testing::bench::{BenchGroup, BenchResult, BenchSnapshot};
@@ -310,6 +311,25 @@ fn main() {
                 .unwrap();
             });
         }
+    }
+
+    // Pipeline stage boundary: the PipeMove adjoint pair — forward
+    // activation out, cotangent home — the per-micro-batch traffic of
+    // one 1F1B boundary (`optim::pp`). Bytes count both directions.
+    for n in [1usize << 12, 1 << 16] {
+        let mv = PipeMove::new(0, 1, &[n], 9);
+        bench_both(
+            &mut g,
+            &format!("pipe-move   0->1 n={n}"),
+            2 * n * 8,
+            2,
+            |comm| {
+                let x = (comm.rank() == 0).then(|| Tensor::<f64>::zeros(&[n]));
+                let y = mv.forward(comm, x)?;
+                mv.adjoint(comm, y)?;
+                Ok(())
+            },
+        );
     }
 
     // scatter / gather / all-to-all at fixed world 4

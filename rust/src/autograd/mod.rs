@@ -112,12 +112,36 @@ pub trait Layer<T: Scalar>: Send + Sync {
 #[derive(Clone)]
 pub struct Network<T: Scalar> {
     layers: Vec<Arc<dyn Layer<T>>>,
+    seed_offsets: Option<Vec<u64>>,
 }
 
 impl<T: Scalar> Network<T> {
     /// Build from layers.
     pub fn new(layers: Vec<Arc<dyn Layer<T>>>) -> Self {
-        Network { layers }
+        Network {
+            layers,
+            seed_offsets: None,
+        }
+    }
+
+    /// Build with explicit per-layer seed offsets (layer `i` is seeded
+    /// `seed + offsets[i]` instead of `seed + i`). Pipeline builders use
+    /// this to keep each compute layer's offset equal to its index in the
+    /// *unstaged* network, so inserting parameter-free stage boundaries
+    /// does not perturb initialisation — staged and sequential instances
+    /// stay bit-identical.
+    pub fn with_seed_offsets(layers: Vec<Arc<dyn Layer<T>>>, offsets: Vec<u64>) -> Result<Self> {
+        if offsets.len() != layers.len() {
+            return Err(Error::Autograd(format!(
+                "{} seed offsets for {} layers",
+                offsets.len(),
+                layers.len()
+            )));
+        }
+        Ok(Network {
+            layers,
+            seed_offsets: Some(offsets),
+        })
     }
 
     /// The layers.
@@ -126,13 +150,21 @@ impl<T: Scalar> Network<T> {
     }
 
     /// Initialise this rank's state for every layer. Layer `i` is seeded
-    /// with `seed + i`, so partitioning does not perturb initialisation.
+    /// with `seed + i` (or `seed + offsets[i]` under
+    /// [`Network::with_seed_offsets`]), so partitioning does not perturb
+    /// initialisation.
     pub fn init(&self, rank: usize, seed: u64) -> Result<NetworkState<T>> {
         let states = self
             .layers
             .iter()
             .enumerate()
-            .map(|(i, l)| l.init(rank, seed.wrapping_add(i as u64)))
+            .map(|(i, l)| {
+                let off = match &self.seed_offsets {
+                    Some(offs) => offs[i],
+                    None => i as u64,
+                };
+                l.init(rank, seed.wrapping_add(off))
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(NetworkState { states })
     }
@@ -207,6 +239,58 @@ impl<T: Scalar> Network<T> {
         Ok(cur)
     }
 
+    /// Forward through the contiguous layer slice `range` only — one
+    /// pipeline stage's share of the tape. Identical layer calls to the
+    /// corresponding slice of [`Network::forward`], so a stage-by-stage
+    /// walk composes to the bitwise-identical full forward.
+    pub fn forward_range(
+        &self,
+        st: &mut NetworkState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        train: bool,
+        range: std::ops::Range<usize>,
+    ) -> Result<Option<Tensor<T>>> {
+        self.check_range(st, &range)?;
+        let mut cur = x;
+        for i in range {
+            cur = self.layers[i].forward(&mut st.states[i], comm, cur, train)?;
+        }
+        Ok(cur)
+    }
+
+    /// Backward through the layer slice `range` in reverse, with the same
+    /// per-layer completion hook contract as [`Network::backward_with_hook`]
+    /// — the data-parallel ring hook fires inside a pipeline stage exactly
+    /// as it does on the whole tape.
+    pub fn backward_range_with_hook(
+        &self,
+        st: &mut NetworkState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+        range: std::ops::Range<usize>,
+        hook: &mut dyn FnMut(usize, &mut NetworkState<T>, &mut Comm) -> Result<()>,
+    ) -> Result<Option<Tensor<T>>> {
+        self.check_range(st, &range)?;
+        let mut cur = dy;
+        for i in range.rev() {
+            cur = self.layers[i].backward(&mut st.states[i], comm, cur)?;
+            hook(i, st, comm)?;
+        }
+        Ok(cur)
+    }
+
+    fn check_range(&self, st: &NetworkState<T>, range: &std::ops::Range<usize>) -> Result<()> {
+        if st.states.len() != self.layers.len() || range.end > self.layers.len() {
+            return Err(Error::Autograd(format!(
+                "layer range {range:?} over network of {} layers (state has {})",
+                self.layers.len(),
+                st.states.len()
+            )));
+        }
+        Ok(())
+    }
+
     /// Table-1 style placement report for `rank`.
     pub fn placement_report(&self, rank: usize) -> Vec<(String, Vec<(String, Vec<usize>)>)> {
         self.layers
@@ -241,6 +325,26 @@ impl<T: Scalar> NetworkState<T> {
     /// Total parameter elements on this rank.
     pub fn param_count(&self) -> usize {
         self.states.iter().map(|s| s.param_count()).sum()
+    }
+
+    /// Swap the forward stashes (`saved` + `saved_indices`) of the layers
+    /// in `range` with `slot` — the micro-batch-keyed activation stash of
+    /// the pipeline engine. The call is its own inverse: once after a
+    /// micro-batch's forward to park its activations, once before its
+    /// backward to restore them, leaving whatever was in the states (the
+    /// next micro-batch's stash, or nothing) parked in `slot`. Pure
+    /// pointer swaps — no tensor copies, and pool-backed stash entries
+    /// keep their registered buffers borrowed while parked.
+    pub fn swap_stash(
+        &mut self,
+        range: std::ops::Range<usize>,
+        slot: &mut Vec<(Vec<Tensor<T>>, Vec<Vec<usize>>)>,
+    ) {
+        slot.resize_with(range.len(), Default::default);
+        for (ls, (saved, idx)) in self.states[range].iter_mut().zip(slot.iter_mut()) {
+            std::mem::swap(&mut ls.saved, saved);
+            std::mem::swap(&mut ls.saved_indices, idx);
+        }
     }
 }
 

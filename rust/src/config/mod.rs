@@ -45,6 +45,17 @@ pub struct TrainConfig {
     /// trains on its own `batch / replicas` micro-batch and gradients are
     /// ring-averaged across replicas.
     pub replicas: usize,
+    /// Pipeline stages per replica (1 = no pipeline). With `stages > 1`
+    /// the layer sequence is cut into contiguous stages, each on its own
+    /// rank, and micro-batches stream through them on the 1F1B schedule
+    /// (`optim::pp`). Currently requires the sequential (single-rank
+    /// model grid) layout, i.e. `distributed = false`.
+    pub stages: usize,
+    /// Micro-batches per step for the pipeline schedule. Each stage
+    /// processes `micro_batches` slices of `batch / (replicas ·
+    /// micro_batches)` samples per step; the analytic pipeline bubble is
+    /// `(stages−1)/(stages−1+micro_batches)`.
+    pub micro_batches: usize,
     /// Local-kernel backend.
     pub backend: Backend,
     /// Log every N steps.
@@ -63,6 +74,8 @@ impl Default for TrainConfig {
             seed: 42,
             distributed: true,
             replicas: 1,
+            stages: 1,
+            micro_batches: 1,
             backend: Backend::Native,
             log_every: 10,
             artifacts_dir: "artifacts".into(),
@@ -103,6 +116,12 @@ impl TrainConfig {
         if let Some(v) = j.get_opt("replicas") {
             self.replicas = v.as_usize()?;
         }
+        if let Some(v) = j.get_opt("stages") {
+            self.stages = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("micro_batches") {
+            self.micro_batches = v.as_usize()?;
+        }
         if let Some(v) = j.get_opt("backend") {
             self.backend = Backend::parse(v.as_str()?)?;
         }
@@ -134,6 +153,32 @@ impl TrainConfig {
                 "dataset ({}) smaller than one batch ({})",
                 self.dataset, self.batch
             )));
+        }
+        if self.stages == 0 || self.micro_batches == 0 {
+            return Err(Error::Config(
+                "stages and micro_batches must be positive".into(),
+            ));
+        }
+        if self.micro_batches > 1 && self.stages == 1 {
+            return Err(Error::Config(
+                "micro_batches > 1 needs stages > 1 (the 1F1B schedule)".into(),
+            ));
+        }
+        if self.stages > 1 {
+            if self.distributed {
+                return Err(Error::Config(
+                    "pipeline stages currently require the sequential layout \
+                     (distributed = false)"
+                        .into(),
+                ));
+            }
+            if self.batch % (self.replicas * self.micro_batches) != 0 {
+                return Err(Error::Config(format!(
+                    "batch ({}) must divide evenly into {} replicas x {} \
+                     micro-batches",
+                    self.batch, self.replicas, self.micro_batches
+                )));
+            }
         }
         Ok(())
     }
@@ -171,6 +216,32 @@ mod tests {
         cfg.dataset = 1;
         assert!(cfg.validate().is_err());
         assert!(Backend::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn pipeline_fields_validate() {
+        let j = Json::parse(r#"{"stages": 2, "micro_batches": 4, "distributed": false}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.stages, 2);
+        assert_eq!(cfg.micro_batches, 4);
+        cfg.validate().unwrap();
+        // pipeline needs the sequential layout
+        cfg.distributed = true;
+        assert!(cfg.validate().is_err());
+        // micro-batches must evenly split the batch
+        let mut cfg = TrainConfig::default();
+        cfg.distributed = false;
+        cfg.stages = 2;
+        cfg.micro_batches = 5; // 64 % 5 != 0
+        assert!(cfg.validate().is_err());
+        // micro-batching without stages is meaningless
+        let mut cfg = TrainConfig::default();
+        cfg.micro_batches = 4;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.stages = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

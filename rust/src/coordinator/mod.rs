@@ -41,6 +41,35 @@
 //! gradient buckets ring-average across replicas *inside* the backward
 //! overlap window. `set_dp_overlap(false)` serialises the averaging after
 //! backward — bitwise-identical results, used as the parity reference.
+//!
+//! With `stages > 1` ([`crate::config::TrainConfig::stages`]) the run is
+//! pipeline parallel on the third topology axis: the sequential layer
+//! tape is cut into contiguous stages (one rank each,
+//! [`crate::models::lenet5_pipeline`]) and each step's batch streams
+//! through them as `micro_batches` micro-batches on the
+//! [`crate::optim::pp`] engine's 1F1B schedule (S = 4 stages, m = 6
+//! micro-batches shown; `Fk`/`Bk` = micro-batch `k`'s forward/backward):
+//!
+//! ```text
+//!            ├─ warm-up ─┤├───── 1F1B steady state ─────┤├─ drain ─┤
+//! stage 0 :  F0 F1 F2     F3 B0 F4 B1 F5 B2              B3 B4 B5
+//! stage 1 :     F0 F1     F2 B0 F3 B1 F4 B2 F5 B3        B4 B5
+//! stage 2 :        F0     F1 B0 F2 B1 F3 B2 F4 B3 F5 B4  B5
+//! stage 3 :               F0 B0 F1 B1 F2 B2 F3 B3 F4 B4  F5 B5
+//! ```
+//!
+//! Stage-boundary activations ride forward and their cotangents ride
+//! back as pool-staged messages (`primitives::PipeMove` — an adjoint
+//! pair, Eq. 13-coherent like every other movement primitive), gradients
+//! accumulate across micro-batches, and with `replicas > 1` the DP ring
+//! hook fires during the *last* micro-batch's backward so all three
+//! parallel axes share one overlap window. Every stage's weight update
+//! is local; a barrier closes each step's epoch. The per-stage idle
+//! time, measured pipeline bubble (vs the analytic `(S−1)/(S−1+m)`), and
+//! in-flight queue depth surface on the log as `pp_*` meta keys.
+//! `optim::pp::set_pp_overlap(false)` removes the warm-up — a fully
+//! serialized lockstep schedule with bitwise-identical gradients, the
+//! parity reference and the bench baseline.
 
 use crate::autograd::NetworkState;
 use crate::comm::{Cluster, Comm, CommGroup};
@@ -48,10 +77,11 @@ use crate::config::{Backend, TrainConfig};
 use crate::data::{Batch, SyntheticMnist};
 use crate::error::{Error, Result};
 use crate::metrics::{MetricLog, StepRecord};
-use crate::models::{lenet5_at, LeNetConfig, LeNetLayout};
+use crate::models::{lenet5_at, lenet5_pipeline, LeNetConfig, LeNetLayout};
 use crate::nn::native::{count_correct, cross_entropy_backward, cross_entropy_forward};
 use crate::nn::{LocalKernels, NativeKernels};
 use crate::optim::dp::{dp_overlap, DataParallel};
+use crate::optim::pp::{analytic_bubble, pp_overlap, Pipeline, PipelineStats};
 use crate::optim::Adam;
 use crate::partition::HybridTopology;
 use crate::tensor::Tensor;
@@ -109,6 +139,9 @@ pub const DP_TAG_BASE: u64 = 1_000_000;
 /// backward overlap window before the (local) optimizer step.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     cfg.validate()?;
+    if cfg.stages > 1 {
+        return train_pipeline(cfg);
+    }
     let layout = if cfg.distributed {
         LeNetLayout::FourWorker
     } else {
@@ -239,6 +272,147 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     })
 }
 
+/// [`train`] with the layer tape cut into `cfg.stages` pipeline stages
+/// (the `cfg.stages > 1` branch).
+///
+/// The world is `replicas × stages` ranks
+/// ([`HybridTopology::with_stages`] with a single-rank model grid);
+/// replica `k`'s stage `s` lives on world rank `k·S + s`. Each step,
+/// every replica's pipeline streams its `micro_batches` micro-batches
+/// through the stages on the 1F1B schedule ([`Pipeline::run_step`]),
+/// the DP ring averages each stage's gradients across replicas inside
+/// the last micro-batch's backward, and each rank then steps its
+/// stage-local Adam state. Step records come from replica 0's last
+/// stage (where the loss lives); engine/arena counters from rank 0; the
+/// per-stage `pp_*` schedule stats from replica 0's stage ranks.
+fn train_pipeline(cfg: &TrainConfig) -> Result<TrainReport> {
+    let stages = cfg.stages;
+    let m = cfg.micro_batches;
+    let replicas = cfg.replicas;
+    let topo = HybridTopology::with_stages(replicas, stages, 1)?;
+    let world = topo.world();
+    let micro = cfg.batch / (replicas * m);
+    let data = SyntheticMnist::new(cfg.seed ^ 0xDA7A, cfg.dataset);
+    let train_batches = data.batches(micro);
+    if train_batches.is_empty() {
+        return Err(Error::Config("dataset produced no full batches".into()));
+    }
+    let eval_data = SyntheticMnist::new(cfg.seed ^ 0xE7A1, (cfg.batch * 4).max(256));
+    let eval_batches = eval_data.batches(micro);
+    let model_cfg = LeNetConfig {
+        batch: micro,
+        layout: LeNetLayout::Sequential,
+    };
+    // Replica 0's last stage holds the logits and the loss.
+    let loss_rank = stages - 1;
+
+    let per_rank = Cluster::run(world, |comm| {
+        comm.pool_reserve(PIPELINE_POOL_DEPTH);
+        let rank = comm.rank();
+        let replica = topo.replica_of(rank);
+        let base = topo.replica_base(replica);
+        let kernels = kernels_for(cfg.backend, &cfg.artifacts_dir)?;
+        let (net, plan) = lenet5_pipeline::<f32>(&model_cfg, kernels, stages, base)?;
+        // Compute layers keep their unstaged seed offsets, so every
+        // replica's staged tape initialises bit-identically to the plain
+        // sequential network.
+        let mut state = net.init(rank, cfg.seed)?;
+        let mut opt = Adam::new(cfg.lr);
+        let mut dp = DataParallel::<f32>::for_rank(&topo, rank, DP_TAG_BASE);
+        let mut pipe = Pipeline::new(plan, rank, m)?;
+        let stage = pipe.stage();
+        let mut log = MetricLog::new();
+        log.set_meta("layout", "PipelineSequential");
+        log.set_meta("backend", format!("{:?}", cfg.backend));
+        log.set_meta("batch", cfg.batch);
+        log.set_meta("lr", cfg.lr);
+        // Micro-batch j of step t on replica k is global micro-batch
+        // (t·R + k)·m + j: together the replicas' pipelines consume
+        // exactly step t's full batch, so the engine's 1/m scaling times
+        // the DP ring's 1/R recovers the concatenated-batch mean.
+        let len = train_batches.len();
+        let index_of = move |step: usize, j: usize| ((step * replicas + replica) * m + j) % len;
+        for step in 0..cfg.steps {
+            let timer = Timer::start();
+            let mut input = |k: usize| {
+                (stage == 0).then(|| train_batches[index_of(step, k)].images_as::<f32>())
+            };
+            let mut loss_fn = |k: usize, logits: Tensor<f32>| {
+                let labels = &train_batches[index_of(step, k)].labels;
+                let (l, probs) = cross_entropy_forward(&logits, labels)?;
+                let acc = count_correct(&logits, labels) as f64 / labels.len() as f64;
+                Ok((l, acc, cross_entropy_backward(&probs, labels)))
+            };
+            let (loss, acc) =
+                pipe.run_step(&net, &mut state, comm, &mut input, &mut loss_fn, &mut dp)?;
+            dp.finish(comm, &mut state)?;
+            opt.step(&mut state)?;
+            // Weight updates are stage-local; the barrier closes the step
+            // epoch so no stage runs ahead into the next step's sends
+            // while a peer still drains this one's.
+            comm.barrier();
+            if rank == loss_rank {
+                log.push(StepRecord {
+                    step,
+                    loss,
+                    accuracy: acc,
+                    step_time_s: timer.elapsed_s(),
+                });
+            }
+        }
+        // Held-out evaluation: micro-batch-sized forwards through the
+        // stage chain; replica 0's last stage counts.
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for batch in &eval_batches {
+            let x = (stage == 0).then(|| batch.images_as::<f32>());
+            let logits = pipe.run_forward(&net, &mut state, comm, x)?;
+            if rank == loss_rank {
+                let logits = logits.expect("last stage holds logits");
+                correct += count_correct(&logits, &batch.labels);
+                total += batch.labels.len();
+            }
+        }
+        let eval_acc = (total > 0).then(|| correct as f64 / total as f64);
+        if rank == 0 {
+            log.set_comm_stats(&comm.stats());
+            log.set_scratch_stats(&crate::memory::scratch_stats::<f32>());
+            log.set_gemm_pool_stats(&crate::nn::native::gemm::gemm_pool_stats());
+            log.set_tensor_storage_stats(&crate::tensor::tensor_storage_stats());
+            log.set_dp_meta(replicas, dp_overlap(), dp.bucket_count());
+        }
+        Ok((log, state.param_count(), eval_acc, *pipe.stats()))
+    })?;
+
+    let params_per_rank: Vec<usize> = per_rank.iter().map(|(_, p, _, _)| *p).collect();
+    // Roll the per-rank logs up: rank 0 carries the engine/arena
+    // counters, the loss rank the step records, and replica 0's stage
+    // ranks the per-stage schedule stats.
+    let stage_stats: Vec<PipelineStats> = (0..stages).map(|s| per_rank[s].3).collect();
+    let eval_accuracy = per_rank[loss_rank].2;
+    let steps = per_rank[loss_rank].0.steps.clone();
+    let mut log = per_rank.into_iter().next().expect("rank 0 result").0;
+    log.steps = steps;
+    log.set_pp_meta(stages, m, pp_overlap());
+    let mut bubble_sum = 0.0;
+    let mut queue = 0usize;
+    for (s, st) in stage_stats.iter().enumerate() {
+        log.set_pp_stage_stats(s, st.idle_s, st.bubble_fraction(), st.max_in_flight);
+        bubble_sum += st.bubble_fraction();
+        queue = queue.max(st.max_in_flight);
+    }
+    log.set_pp_rollup(bubble_sum / stages as f64, analytic_bubble(stages, m), queue);
+    let quarter = (cfg.steps / 4).max(1);
+    Ok(TrainReport {
+        final_accuracy: log.recent_accuracy(quarter),
+        final_loss: log.recent_loss(quarter),
+        params_per_rank,
+        world,
+        eval_accuracy,
+        log,
+    })
+}
+
 /// One synchronous training step (collective). Returns (loss, accuracy)
 /// as seen by the loss root; other ranks return (0, 0).
 pub fn train_step(
@@ -358,6 +532,59 @@ mod tests {
         assert_eq!(report.params_per_rank[0], report.params_per_rank[1]);
         assert!(report.log.steps.iter().all(|s| s.loss.is_finite()));
         assert_eq!(report.log.meta["dp_replicas"], "2");
+    }
+
+    #[test]
+    fn short_pipeline_training_learns() {
+        // Sequential tape cut into 2 stages, 4 micro-batches per step.
+        let cfg = TrainConfig {
+            batch: 16,
+            steps: 30,
+            dataset: 512,
+            distributed: false,
+            stages: 2,
+            micro_batches: 4,
+            ..TrainConfig::default()
+        };
+        let report = train(&cfg).unwrap();
+        assert_eq!(report.world, 2);
+        assert_eq!(report.log.steps.len(), 30);
+        let first = report.log.steps[0].loss;
+        assert!(first > 1.8, "initial loss {first}");
+        assert!(
+            report.final_loss < first * 0.8,
+            "no learning: {first} -> {}",
+            report.final_loss
+        );
+        assert_eq!(report.log.meta["pp_stages"], "2");
+        assert_eq!(report.log.meta["pp_micro_batches"], "4");
+        assert!(report.log.meta.contains_key("pp_bubble_measured"));
+        assert!(report.log.meta.contains_key("pp_stage1_idle_s"));
+    }
+
+    #[test]
+    fn short_pipeline_data_parallel_training_runs() {
+        // 2 replicas × 2 stages: all three parallel axes' machinery at
+        // once (the model grid degenerate).
+        let cfg = TrainConfig {
+            batch: 16,
+            steps: 6,
+            dataset: 256,
+            distributed: false,
+            replicas: 2,
+            stages: 2,
+            micro_batches: 2,
+            ..TrainConfig::default()
+        };
+        let report = train(&cfg).unwrap();
+        assert_eq!(report.world, 4);
+        assert_eq!(report.params_per_rank.len(), 4);
+        // Replica 1's stages mirror replica 0's.
+        assert_eq!(report.params_per_rank[0], report.params_per_rank[2]);
+        assert_eq!(report.params_per_rank[1], report.params_per_rank[3]);
+        assert!(report.log.steps.iter().all(|s| s.loss.is_finite()));
+        assert_eq!(report.log.meta["dp_replicas"], "2");
+        assert_eq!(report.log.meta["pp_stages"], "2");
     }
 
     #[test]

@@ -97,6 +97,17 @@
 //! gradient shards and rides their ring averaging *inside* the backward
 //! overlap window — replicas' optimizer states stay bit-identical without
 //! any optimizer-state synchronisation.
+//!
+//! The third axis is **micro-batch pipeline parallelism** (`replicas ×
+//! stages × model-grid`): the layer sequence is cut into contiguous
+//! stages, stage boundaries are `primitives::PipeMove` send-receives
+//! (forward activation out, Eq. 12 adjoint cotangent home, Eq.
+//! 13-coherent), and the `optim::pp` engine streams `m` micro-batches
+//! through the stages on the 1F1B schedule — boundary messages recycle
+//! through the registered pool, gradients accumulate across micro-batches
+//! in micro order (bitwise equal to the serialized lockstep reference and
+//! to the unstaged sequential tape), and the DP ring hook fires in the
+//! last micro-batch's backward so all three axes compose.
 //! * [`util`], [`testing`], [`cli`] — hand-rolled substrates (JSON, PRNG,
 //!   property-test and bench harnesses, argument parsing); the crates this
 //!   build cannot take as dependencies.

@@ -111,6 +111,34 @@ impl MetricLog {
         self.set_meta("dp_buckets", buckets);
     }
 
+    /// Surface the pipeline-parallel configuration as run metadata
+    /// (`pp_*` keys): stage count, micro-batches per step, and whether
+    /// boundary traffic rode the 1F1B overlap schedule.
+    pub fn set_pp_meta(&mut self, stages: usize, micro_batches: usize, overlap: bool) {
+        self.set_meta("pp_stages", stages);
+        self.set_meta("pp_micro_batches", micro_batches);
+        self.set_meta("pp_overlap", overlap);
+    }
+
+    /// Surface one pipeline stage's schedule counters
+    /// (`pp_stage{N}_*` keys): cumulative seconds the stage spent blocked
+    /// waiting for boundary messages, its measured bubble fraction
+    /// (idle / span), and the deepest in-flight micro-batch queue it held.
+    pub fn set_pp_stage_stats(&mut self, stage: usize, idle_s: f64, bubble: f64, queue: usize) {
+        self.set_meta(&format!("pp_stage{stage}_idle_s"), format!("{idle_s:.6}"));
+        self.set_meta(&format!("pp_stage{stage}_bubble"), format!("{bubble:.4}"));
+        self.set_meta(&format!("pp_stage{stage}_queue_depth"), queue);
+    }
+
+    /// Surface the cross-stage pipeline roll-up: mean measured bubble
+    /// fraction, the analytic `(S−1)/(S−1+m)` reference, and the deepest
+    /// in-flight micro-batch queue any stage held.
+    pub fn set_pp_rollup(&mut self, bubble_measured: f64, bubble_analytic: f64, queue: usize) {
+        self.set_meta("pp_bubble_measured", format!("{bubble_measured:.4}"));
+        self.set_meta("pp_bubble_analytic", format!("{bubble_analytic:.4}"));
+        self.set_meta("pp_queue_depth", queue);
+    }
+
     /// Mean loss over the last `n` steps.
     pub fn recent_loss(&self, n: usize) -> f64 {
         let tail = &self.steps[self.steps.len().saturating_sub(n)..];
@@ -277,6 +305,23 @@ mod tests {
         assert_eq!(log.meta["dp_replicas"], "4");
         assert_eq!(log.meta["dp_overlap"], "true");
         assert_eq!(log.meta["dp_buckets"], "9");
+    }
+
+    #[test]
+    fn pp_meta_surfaces() {
+        let mut log = MetricLog::new();
+        log.set_pp_meta(4, 8, true);
+        log.set_pp_stage_stats(2, 0.125, 0.2727, 3);
+        log.set_pp_rollup(0.29, 0.2727, 4);
+        assert_eq!(log.meta["pp_stages"], "4");
+        assert_eq!(log.meta["pp_micro_batches"], "8");
+        assert_eq!(log.meta["pp_overlap"], "true");
+        assert_eq!(log.meta["pp_stage2_idle_s"], "0.125000");
+        assert_eq!(log.meta["pp_stage2_bubble"], "0.2727");
+        assert_eq!(log.meta["pp_stage2_queue_depth"], "3");
+        assert_eq!(log.meta["pp_bubble_measured"], "0.2900");
+        assert_eq!(log.meta["pp_bubble_analytic"], "0.2727");
+        assert_eq!(log.meta["pp_queue_depth"], "4");
     }
 
     #[test]

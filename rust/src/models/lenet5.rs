@@ -30,14 +30,16 @@
 //! coordinator's `scratch_*` metrics verify.
 
 use crate::autograd::Network;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::nn::layers::{
     AffineConfig, Conv2dConfig, DistActivation, DistAffine, DistConv2d, DistFlatten,
-    DistPool2d, DistTranspose, GatherOutput, Pool2dConfig, ScatterInput,
+    DistPool2d, DistTranspose, GatherOutput, Pool2dConfig, ScatterInput, StageBoundary,
 };
 use crate::nn::native::{Activation, PoolMode};
 use crate::nn::LocalKernels;
+use crate::optim::pp::PipelinePlan;
 use crate::partition::{Partition, TensorDecomposition};
+use crate::primitives::PipeMove;
 use crate::tensor::Scalar;
 use std::sync::Arc;
 
@@ -320,4 +322,220 @@ pub fn lenet5_at<T: Scalar>(
     )));
 
     Ok(Network::new(layers))
+}
+
+/// Stage cut tables for the pipelined sequential LeNet: stage `s` spans
+/// base layers `cuts[s] .. cuts[s + 1]` of the 16-layer [`lenet5`] tape.
+/// Cuts sit after the pooling / flatten stack so the wire crossings are
+/// the three natural activation shapes of the network.
+fn lenet5_cuts(stages: usize) -> Result<&'static [usize]> {
+    match stages {
+        2 => Ok(&[0, 4, 16]),
+        4 => Ok(&[0, 4, 7, 10, 16]),
+        other => Err(Error::Config(format!(
+            "lenet5_pipeline supports 2 or 4 stages, got {other}"
+        ))),
+    }
+}
+
+/// Activation shape crossing the cut before base layer `cut`.
+fn lenet5_boundary_shape(b: usize, cut: usize) -> Result<Vec<usize>> {
+    match cut {
+        4 => Ok(vec![b, 6, 14, 14]), // after S2
+        7 => Ok(vec![b, 16, 5, 5]),  // after S4
+        10 => Ok(vec![b, 120]),      // after act5
+        other => Err(Error::Config(format!("no LeNet boundary at cut {other}"))),
+    }
+}
+
+/// Build the sequential LeNet-5 cut into `stages` pipeline stages, stage
+/// `s` wholly on world rank `replica_base + s`, with a
+/// [`StageBoundary`] glue layer at each cut.
+///
+/// The returned network is a valid collective [`Network`] in its own
+/// right — forward/backward over the whole tape serialize the stage
+/// moves, the blocking reference the pipeline engine is tested against —
+/// and the returned [`PipelinePlan`] tells `optim::pp::Pipeline` how to
+/// drive it stage-by-stage.
+///
+/// Compute layers keep their *base* tape index as seed offset (via
+/// [`Network::with_seed_offsets`]), so the staged network initialises
+/// bit-identically to the plain [`lenet5`] sequential tape — pipeline
+/// runs are bitwise-comparable against the single-rank reference, and
+/// replicas of a hybrid run (offset by `replica_base`) initialise
+/// identically to replica 0.
+pub fn lenet5_pipeline<T: Scalar>(
+    cfg: &LeNetConfig,
+    kernels: Arc<dyn LocalKernels<T>>,
+    stages: usize,
+    replica_base: usize,
+) -> Result<(Network<T>, PipelinePlan)> {
+    if cfg.layout != LeNetLayout::Sequential {
+        return Err(Error::Config(
+            "lenet5_pipeline cuts the sequential tape; use LeNetLayout::Sequential".into(),
+        ));
+    }
+    let cuts = lenet5_cuts(stages)?;
+    let b = cfg.batch;
+    let mut layers: Vec<Arc<dyn crate::autograd::Layer<T>>> = Vec::new();
+    let mut offsets: Vec<u64> = Vec::new();
+    let mut stage_ranges = Vec::new();
+    let mut boundary_layers = Vec::new();
+    let mut boundaries = Vec::new();
+    let stage_ranks: Vec<usize> = (0..stages).map(|s| replica_base + s).collect();
+    let mut tag = 0u64;
+
+    let feat = |f: usize, rank: usize| -> Result<TensorDecomposition> {
+        TensorDecomposition::new(Partition::new(vec![1, 1], vec![rank])?, &[b, f])
+    };
+    let img = |shape: [usize; 4], rank: usize| -> Result<TensorDecomposition> {
+        TensorDecomposition::new(Partition::new(vec![1, 1, 1, 1], vec![rank])?, &shape)
+    };
+
+    for s in 0..stages {
+        let rank = stage_ranks[s];
+        if s > 0 {
+            tag += 10_000;
+            let shape = lenet5_boundary_shape(b, cuts[s])?;
+            boundaries.push(PipeMove::new(stage_ranks[s - 1], rank, &shape, tag));
+            boundary_layers.push(layers.len());
+            layers.push(Arc::new(StageBoundary::new(
+                &format!("boundary{s}"),
+                stage_ranks[s - 1],
+                rank,
+                &shape,
+                tag,
+            )));
+            // boundaries are parameter-free; the offset is never consulted
+            offsets.push(u64::MAX);
+        }
+        let start = layers.len();
+        for base in cuts[s]..cuts[s + 1] {
+            let mut t = || {
+                tag += 10_000;
+                tag
+            };
+            let aff = |f_in: usize, f_out: usize, tag: u64| AffineConfig {
+                batch: b,
+                f_in,
+                f_out,
+                grid: (1, 1),
+                w_ranks: vec![rank],
+                x_ranks: vec![rank],
+                y_ranks: vec![rank],
+                tag,
+            };
+            let layer: Arc<dyn crate::autograd::Layer<T>> = match base {
+                0 => Arc::new(ScatterInput::new(
+                    "input",
+                    img([b, 1, 28, 28], rank)?,
+                    rank,
+                    t(),
+                )),
+                1 => Arc::new(DistConv2d::new(
+                    "C1",
+                    Conv2dConfig {
+                        global_in: [b, 1, 28, 28],
+                        out_channels: 6,
+                        kernel: (5, 5),
+                        stride: (1, 1),
+                        padding: (2, 2),
+                        grid: (1, 1),
+                        ranks: vec![rank],
+                        tag: t(),
+                    },
+                    kernels.clone(),
+                )?),
+                2 => Arc::new(DistActivation::new("act1", Activation::Relu)),
+                3 => Arc::new(DistPool2d::new(
+                    "S2",
+                    Pool2dConfig {
+                        global_in: [b, 6, 28, 28],
+                        kernel: (2, 2),
+                        stride: (2, 2),
+                        mode: PoolMode::Max,
+                        grid: (1, 1),
+                        ranks: vec![rank],
+                        tag: t(),
+                    },
+                    kernels.clone(),
+                )?),
+                4 => Arc::new(DistConv2d::new(
+                    "C3",
+                    Conv2dConfig {
+                        global_in: [b, 6, 14, 14],
+                        out_channels: 16,
+                        kernel: (5, 5),
+                        stride: (1, 1),
+                        padding: (0, 0),
+                        grid: (1, 1),
+                        ranks: vec![rank],
+                        tag: t(),
+                    },
+                    kernels.clone(),
+                )?),
+                5 => Arc::new(DistActivation::new("act3", Activation::Relu)),
+                6 => Arc::new(DistPool2d::new(
+                    "S4",
+                    Pool2dConfig {
+                        global_in: [b, 16, 10, 10],
+                        kernel: (2, 2),
+                        stride: (2, 2),
+                        mode: PoolMode::Max,
+                        grid: (1, 1),
+                        ranks: vec![rank],
+                        tag: t(),
+                    },
+                    kernels.clone(),
+                )?),
+                7 => Arc::new(DistFlatten::new(
+                    "flatten",
+                    img([b, 16, 5, 5], rank)?,
+                    &[rank],
+                    t(),
+                )?),
+                8 => Arc::new(DistAffine::new("C5", aff(400, 120, t()), kernels.clone())?),
+                9 => Arc::new(DistActivation::new("act5", Activation::Relu)),
+                10 => Arc::new(DistTranspose::new(
+                    "T5",
+                    feat(120, rank)?,
+                    feat(120, rank)?,
+                    t(),
+                )?),
+                11 => Arc::new(DistAffine::new("F6", aff(120, 84, t()), kernels.clone())?),
+                12 => Arc::new(DistActivation::new("act6", Activation::Relu)),
+                13 => Arc::new(DistTranspose::new(
+                    "T6",
+                    feat(84, rank)?,
+                    feat(84, rank)?,
+                    t(),
+                )?),
+                14 => Arc::new(DistAffine::new("Output", aff(84, 10, t()), kernels.clone())?),
+                15 => Arc::new(GatherOutput::new(
+                    "output_gather",
+                    feat(10, rank)?,
+                    rank,
+                    t(),
+                )),
+                other => {
+                    return Err(Error::Config(format!(
+                        "LeNet base tape has 16 layers; no layer {other}"
+                    )))
+                }
+            };
+            layers.push(layer);
+            offsets.push(base as u64);
+        }
+        stage_ranges.push(start..layers.len());
+    }
+    let net = Network::with_seed_offsets(layers, offsets)?;
+    Ok((
+        net,
+        PipelinePlan {
+            stage_ranges,
+            boundary_layers,
+            boundaries,
+            stage_ranks,
+        },
+    ))
 }

@@ -5,7 +5,15 @@
 //! [`LeNetLayout::Sequential`] produces the numerically-identical
 //! single-worker baseline (same global parameters from the same seed), so
 //! the §5 parity experiment compares like for like.
+//!
+//! [`lenet5_pipeline`] cuts the sequential tape into contiguous pipeline
+//! stages (one rank each) for the `optim::pp` 1F1B engine, initialising
+//! bit-identically to the unstaged tape; [`affine_tower_pipeline`] is a
+//! perfectly balanced synthetic tower for measuring the pipeline bubble
+//! against its analytic value.
 
 mod lenet5;
+mod tower;
 
-pub use lenet5::{lenet5, lenet5_at, LeNetConfig, LeNetLayout};
+pub use lenet5::{lenet5, lenet5_at, lenet5_pipeline, LeNetConfig, LeNetLayout};
+pub use tower::{affine_tower_pipeline, TowerConfig};

@@ -1,0 +1,152 @@
+//! A perfectly balanced affine tower for pipeline benchmarking.
+//!
+//! LeNet's stages are naturally unbalanced (the convolutional front
+//! carries most of the FLOPs), so its measured pipeline bubble sits well
+//! above the balanced-stage analytic `(S−1)/(S−1+m)`. This synthetic
+//! tower — `depth` identical `width → width` affine+ReLU blocks split
+//! evenly across stages, plus a `width → 10` head — gives every stage the
+//! same work, which is the regime the analytic bubble models and the one
+//! the `lenet_step` E15 table checks the measured bubble against.
+
+use crate::autograd::Network;
+use crate::error::{Error, Result};
+use crate::nn::layers::{
+    AffineConfig, DistActivation, DistAffine, GatherOutput, ScatterInput, StageBoundary,
+};
+use crate::nn::native::Activation;
+use crate::nn::LocalKernels;
+use crate::optim::pp::PipelinePlan;
+use crate::partition::{Partition, TensorDecomposition};
+use crate::primitives::PipeMove;
+use crate::tensor::Scalar;
+use std::sync::Arc;
+
+/// Tower configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TowerConfig {
+    /// Batch size.
+    pub batch: usize,
+    /// Feature width of every block (input and hidden).
+    pub width: usize,
+    /// Number of `width → width` affine+ReLU blocks; must divide evenly
+    /// into the stage count.
+    pub depth: usize,
+}
+
+/// Build the balanced tower cut into `stages` pipeline stages, stage `s`
+/// wholly on world rank `replica_base + s`. Every boundary crosses the
+/// same `[batch, width]` activation; every stage carries `depth / stages`
+/// identical blocks (the last additionally the 10-way head and output
+/// gather). Returns the staged network and its [`PipelinePlan`].
+pub fn affine_tower_pipeline<T: Scalar>(
+    cfg: &TowerConfig,
+    kernels: Arc<dyn LocalKernels<T>>,
+    stages: usize,
+    replica_base: usize,
+) -> Result<(Network<T>, PipelinePlan)> {
+    if stages == 0 || cfg.depth == 0 || cfg.width == 0 || cfg.batch == 0 {
+        return Err(Error::Config("tower needs positive batch/width/depth/stages".into()));
+    }
+    if cfg.depth % stages != 0 {
+        return Err(Error::Config(format!(
+            "tower depth ({}) must divide evenly into {} stages",
+            cfg.depth, stages
+        )));
+    }
+    let b = cfg.batch;
+    let w = cfg.width;
+    let per = cfg.depth / stages;
+    let stage_ranks: Vec<usize> = (0..stages).map(|s| replica_base + s).collect();
+    let mut layers: Vec<Arc<dyn crate::autograd::Layer<T>>> = Vec::new();
+    let mut stage_ranges = Vec::new();
+    let mut boundary_layers = Vec::new();
+    let mut boundaries = Vec::new();
+    let mut tag = 0u64;
+
+    let feat = |f: usize, rank: usize| -> Result<TensorDecomposition> {
+        TensorDecomposition::new(Partition::new(vec![1, 1], vec![rank])?, &[b, f])
+    };
+
+    for s in 0..stages {
+        let rank = stage_ranks[s];
+        if s > 0 {
+            tag += 10_000;
+            let shape = vec![b, w];
+            boundaries.push(PipeMove::new(stage_ranks[s - 1], rank, &shape, tag));
+            boundary_layers.push(layers.len());
+            layers.push(Arc::new(StageBoundary::new(
+                &format!("boundary{s}"),
+                stage_ranks[s - 1],
+                rank,
+                &shape,
+                tag,
+            )));
+        }
+        let start = layers.len();
+        if s == 0 {
+            tag += 10_000;
+            layers.push(Arc::new(ScatterInput::new(
+                "input",
+                feat(w, rank)?,
+                rank,
+                tag,
+            )));
+        }
+        for j in 0..per {
+            let idx = s * per + j;
+            tag += 10_000;
+            layers.push(Arc::new(DistAffine::new(
+                &format!("A{idx}"),
+                AffineConfig {
+                    batch: b,
+                    f_in: w,
+                    f_out: w,
+                    grid: (1, 1),
+                    w_ranks: vec![rank],
+                    x_ranks: vec![rank],
+                    y_ranks: vec![rank],
+                    tag,
+                },
+                kernels.clone(),
+            )?));
+            layers.push(Arc::new(DistActivation::new(
+                &format!("relu{idx}"),
+                Activation::Relu,
+            )));
+        }
+        if s == stages - 1 {
+            tag += 10_000;
+            layers.push(Arc::new(DistAffine::new(
+                "head",
+                AffineConfig {
+                    batch: b,
+                    f_in: w,
+                    f_out: 10,
+                    grid: (1, 1),
+                    w_ranks: vec![rank],
+                    x_ranks: vec![rank],
+                    y_ranks: vec![rank],
+                    tag,
+                },
+                kernels.clone(),
+            )?));
+            tag += 10_000;
+            layers.push(Arc::new(GatherOutput::new(
+                "output_gather",
+                feat(10, rank)?,
+                rank,
+                tag,
+            )));
+        }
+        stage_ranges.push(start..layers.len());
+    }
+    Ok((
+        Network::new(layers),
+        PipelinePlan {
+            stage_ranges,
+            boundary_layers,
+            boundaries,
+            stage_ranks,
+        },
+    ))
+}

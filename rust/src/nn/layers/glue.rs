@@ -22,7 +22,7 @@ use crate::comm::Comm;
 use crate::error::{Error, Result};
 use crate::nn::native::Activation;
 use crate::partition::{Partition, TensorDecomposition};
-use crate::primitives::{Gather, Repartition, Scatter};
+use crate::primitives::{Gather, PipeMove, Repartition, Scatter};
 use crate::tensor::{Scalar, Tensor};
 
 /// Repartition layer: changes a tensor's decomposition between two
@@ -238,6 +238,68 @@ impl<T: Scalar> Layer<T> for DistActivation {
             }
             None => None,
         })
+    }
+}
+
+/// Pipeline stage boundary: relocate the activation from the last rank of
+/// one stage to the first rank of the next ([`PipeMove`], the *move*
+/// variant of §3 send-receive). Backward runs the Eq. 12 adjoint — the
+/// cotangent relocates home by assignment on `tag + 1`.
+///
+/// As a [`Layer`] this is fully blocking (send, or post-and-wait), which
+/// makes a staged network a valid collective [`crate::autograd::Network`]
+/// end to end — the serialized reference the bitwise-parity tests pin.
+/// The 1F1B engine in [`crate::optim::pp`] does **not** call through this
+/// layer: it drives the same [`PipeMove`]s via the split
+/// `post_recv`/`send`/`complete_recv` API so boundary traffic overlaps
+/// compute.
+pub struct StageBoundary {
+    mv: PipeMove,
+    name: String,
+}
+
+impl StageBoundary {
+    /// Boundary moving `shape` from rank `src` (last stage-s rank) to
+    /// `dst` (first stage-s+1 rank).
+    pub fn new(name: &str, src: usize, dst: usize, shape: &[usize], tag: u64) -> Self {
+        StageBoundary {
+            mv: PipeMove::new(src, dst, shape, tag),
+            name: name.to_string(),
+        }
+    }
+
+    /// The underlying move operator (the 1F1B engine drives it directly).
+    pub fn pipe_move(&self) -> &PipeMove {
+        &self.mv
+    }
+}
+
+impl<T: Scalar> Layer<T> for StageBoundary {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
+        Ok(LayerState::empty())
+    }
+
+    fn forward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+        _train: bool,
+    ) -> Result<Option<Tensor<T>>> {
+        self.mv.forward(comm, x)
+    }
+
+    fn backward(
+        &self,
+        _st: &mut LayerState<T>,
+        comm: &mut Comm,
+        dy: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        self.mv.adjoint(comm, dy)
     }
 }
 

@@ -7,5 +7,7 @@ mod pool;
 
 pub use affine::{AffineConfig, DistAffine};
 pub use conv::{adjoint_overlap, set_adjoint_overlap, Conv2dConfig, DistConv2d};
-pub use glue::{DistActivation, DistFlatten, DistTranspose, GatherOutput, ScatterInput};
+pub use glue::{
+    DistActivation, DistFlatten, DistTranspose, GatherOutput, ScatterInput, StageBoundary,
+};
 pub use pool::{DistPool2d, Pool2dConfig};

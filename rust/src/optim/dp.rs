@@ -108,9 +108,10 @@ impl<T: Scalar> DataParallel<T> {
     }
 
     /// The engine for `world_rank` under a hybrid factoring: its DP group
-    /// holds the same model-grid position in every replica.
+    /// holds the same within-replica position (stage × model role) in
+    /// every replica.
     pub fn for_rank(topo: &HybridTopology, world_rank: usize, tag_base: u64) -> Self {
-        DataParallel::new(topo.dp_group(topo.model_rank_of(world_rank)), tag_base)
+        DataParallel::new(topo.dp_group(topo.position_of(world_rank)), tag_base)
     }
 
     /// Override the bucket capacity (elements); mainly for tests.

@@ -11,8 +11,15 @@
 //! every replica's optimizer sees identical averaged gradients and —
 //! starting from identical seeds — their parameter and moment states
 //! never diverge. No optimizer-state synchronisation is ever required.
+//!
+//! Pipeline parallelism does too: under the [`pp`] 1F1B engine each rank
+//! owns one contiguous layer *stage*, gradients accumulate across
+//! micro-batches into that stage's shards, and the optimizer (moments
+//! lazily sized from the rank's own non-empty parameters) steps only its
+//! stage — stage-local optimizer state with zero extra machinery.
 
 pub mod dp;
+pub mod pp;
 
 use crate::autograd::NetworkState;
 use crate::error::Result;

@@ -1,0 +1,542 @@
+//! Micro-batch pipeline parallelism over layer stages — the 1F1B engine.
+//!
+//! The third axis of the hybrid factoring
+//! ([`HybridTopology`](crate::partition::HybridTopology)): the layer
+//! sequence is cut into `S` contiguous *stages*, each on its own rank
+//! block, and the step's batch is split into `m` micro-batches that
+//! stream through the stages GPipe-style. Stage boundaries are
+//! [`PipeMove`] operators — the *move* variant of the paper's §3
+//! send-receive, whose Eq. 12 adjoint carries the cotangent home — so
+//! the pipeline is one more composition of linear data movement with
+//! hand-derived adjoints, coherence-testable per boundary (Eq. 13).
+//!
+//! The schedule per stage (S = 4, m = 6; `Fk`/`Bk` = micro-batch `k`'s
+//! forward/backward on that stage):
+//!
+//! ```text
+//!            ├─ warm-up ─┤├───── 1F1B steady state ─────┤├─ drain ─┤
+//! stage 0 :  F0 F1 F2     F3 B0 F4 B1 F5 B2              B3 B4 B5
+//! stage 1 :     F0 F1     F2 B0 F3 B1 F4 B2 F5 B3        B4 B5
+//! stage 2 :        F0     F1 B0 F2 B1 F3 B2 F4 B3 F5 B4  B5
+//! stage 3 :               F0 B0 F1 B1 F2 B2 F3 B3 F4 B4  F5 B5
+//! ```
+//!
+//! Warm-up admits `min(S−1−s, m)` forwards on stage `s`; the steady state
+//! alternates one forward with one backward (at most `S − s` micro-batches
+//! in flight per stage — bounded activation memory, unlike pure GPipe);
+//! the drain retires the tail. Each stage's idle time is the pipeline
+//! *bubble*, analytically `(S−1)/(S−1+m)` of the step for balanced
+//! stages ([`analytic_bubble`]) and measured per rank in
+//! [`PipelineStats`].
+//!
+//! Sends are eager and nonblocking on the registered buffer pool
+//! ([`PipeMove::send`] stages into the sender's pool; the receive adopts
+//! the payload as a pool-backed tensor), so while stage `s` computes
+//! micro-batch `k`, micro-batch `k+1`'s activation is already in flight
+//! toward it and `k−1`'s cotangent is draining back — the same overlap
+//! window the halo exchange and DP ring ride. [`set_pp_overlap`]`(false)`
+//! removes the warm-up everywhere: every stage runs `F0 B0 F1 B1 …` in
+//! lockstep with exactly one micro-batch in flight anywhere — fully
+//! serialized, and **bitwise identical** to the 1F1B schedule, because
+//! each rank issues the same layer calls on the same micro-batches in the
+//! same order either way (per-layer gradients accumulate in micro order
+//! `B0 … B(m−1)` under both schedules). That serialized path is the
+//! parity reference *and* the baseline the `lenet_step` E15 table
+//! measures the pipelining speed-up against.
+//!
+//! Composition with data parallelism: gradients accumulate across
+//! micro-batches (each micro-batch's loss cotangent is pre-scaled by
+//! `1/m`), and the [`DataParallel`] ring hook fires only inside the
+//! *last* micro-batch's backward walk — the moment each layer's gradient
+//! is final — so ring averaging still rides the backward overlap window
+//! exactly as in the unpipelined hybrid step.
+//!
+//! State is stage-local by construction: a rank holds parameters,
+//! gradients, optimizer moments, and activation stashes only for its own
+//! stage's layers (other layers' [`LayerState`](crate::autograd::LayerState)s
+//! are empty). The per-micro-batch activation stash is a pointer swap
+//! ([`NetworkState::swap_stash`]), not a copy.
+
+use crate::autograd::{Network, NetworkState};
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::optim::dp::DataParallel;
+use crate::primitives::PipeMove;
+use crate::tensor::{Scalar, Tensor};
+use crate::util::timer::Timer;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static PP_OVERLAP: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable the 1F1B warm-up. Disabled, every stage runs the
+/// serialized lockstep schedule (`F0 B0 F1 B1 …`, one micro-batch in
+/// flight anywhere) — bitwise-identical gradients, no overlap; the
+/// parity reference and the E15 serialized baseline.
+pub fn set_pp_overlap(enabled: bool) {
+    PP_OVERLAP.store(enabled, Ordering::Relaxed);
+}
+
+/// Whether stage boundary traffic rides the 1F1B overlap schedule.
+pub fn pp_overlap() -> bool {
+    PP_OVERLAP.load(Ordering::Relaxed)
+}
+
+/// The analytic pipeline bubble fraction for balanced stages:
+/// `(S−1)/(S−1+m)` of each rank's step is idle.
+pub fn analytic_bubble(stages: usize, micro_batches: usize) -> f64 {
+    if stages <= 1 {
+        return 0.0;
+    }
+    (stages - 1) as f64 / (stages - 1 + micro_batches) as f64
+}
+
+/// How the layer sequence is cut into stages — produced by a model
+/// builder (e.g. `models::lenet5_pipeline`), consumed by [`Pipeline`].
+///
+/// Layer indices refer to the *staged* network, whose layer list contains
+/// the [`StageBoundary`](crate::nn::layers::StageBoundary) glue layers at
+/// the cut points; `stage_ranges` are the per-stage compute slices and
+/// exclude the boundaries (the engine drives those via the split
+/// [`PipeMove`] API instead).
+#[derive(Debug, Clone)]
+pub struct PipelinePlan {
+    /// Per-stage contiguous layer ranges (staged indices, boundaries
+    /// excluded).
+    pub stage_ranges: Vec<Range<usize>>,
+    /// Staged index of each boundary glue layer, in stage order.
+    pub boundary_layers: Vec<usize>,
+    /// The `S − 1` boundary move operators, `boundaries[s]` between stage
+    /// `s` and `s + 1`.
+    pub boundaries: Vec<PipeMove>,
+    /// World rank hosting each stage.
+    pub stage_ranks: Vec<usize>,
+}
+
+impl PipelinePlan {
+    /// Number of stages.
+    pub fn stages(&self) -> usize {
+        self.stage_ranges.len()
+    }
+
+    /// Which stage a world rank hosts, if any.
+    pub fn stage_of_rank(&self, world_rank: usize) -> Option<usize> {
+        self.stage_ranks.iter().position(|&r| r == world_rank)
+    }
+}
+
+/// One action in a stage's schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Forward of micro-batch `k`.
+    Forward(usize),
+    /// Backward of micro-batch `k`.
+    Backward(usize),
+}
+
+/// The 1F1B schedule for one stage: `min(S−1−s, m)` warm-up forwards,
+/// then forward/backward alternation, then the backward drain. With
+/// `overlap = false` the warm-up is zero everywhere — the serialized
+/// lockstep reference.
+pub fn schedule(stages: usize, stage: usize, micro_batches: usize, overlap: bool) -> Vec<Action> {
+    let warmup = if overlap {
+        (stages - 1 - stage).min(micro_batches)
+    } else {
+        0
+    };
+    let mut acts = Vec::with_capacity(2 * micro_batches);
+    let (mut fwd, mut bwd) = (0, 0);
+    for _ in 0..warmup {
+        acts.push(Action::Forward(fwd));
+        fwd += 1;
+    }
+    while bwd < micro_batches {
+        if fwd < micro_batches {
+            acts.push(Action::Forward(fwd));
+            fwd += 1;
+        }
+        acts.push(Action::Backward(bwd));
+        bwd += 1;
+    }
+    acts
+}
+
+/// Per-rank schedule counters, accumulated across steps.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineStats {
+    /// Training steps run.
+    pub steps: usize,
+    /// Micro-batch forwards executed.
+    pub forwards: usize,
+    /// Micro-batch backwards executed.
+    pub backwards: usize,
+    /// Seconds spent blocked waiting for boundary messages — the
+    /// measured bubble.
+    pub idle_s: f64,
+    /// Total wall-clock seconds inside `run_step`.
+    pub span_s: f64,
+    /// Deepest in-flight micro-batch queue this stage held (forwards
+    /// done minus backwards done).
+    pub max_in_flight: usize,
+}
+
+impl PipelineStats {
+    /// Measured bubble fraction: idle / span.
+    pub fn bubble_fraction(&self) -> f64 {
+        if self.span_s > 0.0 {
+            self.idle_s / self.span_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The per-rank 1F1B pipeline engine.
+///
+/// One instance per rank per step loop, like [`DataParallel`]; the
+/// micro-batch-keyed activation stash and the boundary pool classes are
+/// built once and reused every step.
+pub struct Pipeline<T: Scalar> {
+    plan: PipelinePlan,
+    stage: usize,
+    micro: usize,
+    /// Parked forward stashes, keyed by micro-batch: `stash[k][i]` holds
+    /// layer `range.start + i`'s (`saved`, `saved_indices`) for
+    /// micro-batch `k` between its forward and its backward.
+    stash: Vec<Vec<(Vec<Tensor<T>>, Vec<Vec<usize>>)>>,
+    reserved: bool,
+    stats: PipelineStats,
+}
+
+impl<T: Scalar> Pipeline<T> {
+    /// Engine for `world_rank` under `plan`, running `micro_batches`
+    /// micro-batches per step.
+    pub fn new(plan: PipelinePlan, world_rank: usize, micro_batches: usize) -> Result<Self> {
+        let stage = plan.stage_of_rank(world_rank).ok_or_else(|| {
+            Error::Config(format!("rank {world_rank} hosts no pipeline stage"))
+        })?;
+        if micro_batches == 0 {
+            return Err(Error::Config("pipeline needs at least one micro-batch".into()));
+        }
+        Ok(Pipeline {
+            plan,
+            stage,
+            micro: micro_batches,
+            stash: Vec::new(),
+            reserved: false,
+            stats: PipelineStats::default(),
+        })
+    }
+
+    /// This rank's stage index.
+    pub fn stage(&self) -> usize {
+        self.stage
+    }
+
+    /// Micro-batches per step.
+    pub fn micro_batches(&self) -> usize {
+        self.micro
+    }
+
+    /// The plan.
+    pub fn plan(&self) -> &PipelinePlan {
+        &self.plan
+    }
+
+    /// Schedule counters accumulated so far.
+    pub fn stats(&self) -> &PipelineStats {
+        &self.stats
+    }
+
+    /// Reset the schedule counters (e.g. after bench warm-up).
+    pub fn reset_stats(&mut self) {
+        self.stats = PipelineStats::default();
+    }
+
+    /// Pre-reserve the registered pool classes this stage's sends will
+    /// rotate through: up to the full micro-batch complement of one
+    /// boundary class can be in flight (receivers stash the pool-backed
+    /// activation until its backward), plus one being staged.
+    fn reserve(&mut self, comm: &mut Comm) {
+        if self.reserved {
+            return;
+        }
+        self.reserved = true;
+        let depth = self.micro + 1;
+        if self.stage > 0 {
+            comm.pool_reserve_for::<T>(self.plan.boundaries[self.stage - 1].numel(), depth);
+        }
+        if self.stage < self.plan.stages() - 1 {
+            comm.pool_reserve_for::<T>(self.plan.boundaries[self.stage].numel(), depth);
+        }
+    }
+
+    /// One pipelined training step (collective across the stage chain).
+    ///
+    /// `input(k)` supplies micro-batch `k`'s input tensor — consulted on
+    /// stage 0 only. `loss_fn(k, logits)` runs on the last stage once
+    /// micro-batch `k`'s logits emerge and returns that micro-batch's
+    /// `(loss, accuracy, dlogits)`; the engine scales the returned
+    /// cotangent by `1/m` so accumulated gradients recover the full-batch
+    /// mean. Gradients are zeroed on entry and complete (micro-batch-
+    /// accumulated, DP hook fired) on exit; the caller then runs
+    /// [`DataParallel::finish`] and the optimizer step. Returns the mean
+    /// `(loss, accuracy)` over micro-batches on the last stage, zeros
+    /// elsewhere.
+    pub fn run_step(
+        &mut self,
+        net: &Network<T>,
+        state: &mut NetworkState<T>,
+        comm: &mut Comm,
+        input: &mut dyn FnMut(usize) -> Option<Tensor<T>>,
+        loss_fn: &mut dyn FnMut(usize, Tensor<T>) -> Result<(f64, f64, Tensor<T>)>,
+        dp: &mut DataParallel<T>,
+    ) -> Result<(f64, f64)> {
+        self.reserve(comm);
+        let span = Timer::start();
+        let s = self.stage;
+        let last = self.plan.stages() - 1;
+        let m = self.micro;
+        let range = self.plan.stage_ranges[s].clone();
+        state.zero_grads();
+        self.stash.resize_with(m, Default::default);
+        let mut dlogits: Vec<Option<Tensor<T>>> = Vec::new();
+        dlogits.resize_with(m, Default::default);
+        let (mut loss_sum, mut acc_sum) = (0.0f64, 0.0f64);
+        let inv_m = T::from_f64(1.0 / m as f64);
+        let mut in_flight = 0usize;
+        for action in schedule(self.plan.stages(), s, m, pp_overlap()) {
+            match action {
+                Action::Forward(k) => {
+                    let x = if s == 0 {
+                        input(k)
+                    } else {
+                        let b = &self.plan.boundaries[s - 1];
+                        let wait = Timer::start();
+                        let req = b.post_recv::<T>(comm)?;
+                        let t = b.complete_recv(comm, req)?;
+                        self.stats.idle_s += wait.elapsed_s();
+                        Some(t)
+                    };
+                    let y = net.forward_range(state, comm, x, true, range.clone())?;
+                    state.swap_stash(range.clone(), &mut self.stash[k]);
+                    if s == last {
+                        let logits = y.ok_or_else(|| {
+                            Error::Autograd("pipeline last stage lost the logits".into())
+                        })?;
+                        let (l, a, mut dl) = loss_fn(k, logits)?;
+                        loss_sum += l;
+                        acc_sum += a;
+                        dl.scale_assign(inv_m);
+                        dlogits[k] = Some(dl);
+                    } else {
+                        let y = y.ok_or_else(|| {
+                            Error::Autograd("pipeline stage lost its boundary output".into())
+                        })?;
+                        self.plan.boundaries[s].send(comm, y)?;
+                    }
+                    in_flight += 1;
+                    self.stats.max_in_flight = self.stats.max_in_flight.max(in_flight);
+                    self.stats.forwards += 1;
+                }
+                Action::Backward(k) => {
+                    state.swap_stash(range.clone(), &mut self.stash[k]);
+                    let dy = if s == last {
+                        dlogits[k].take()
+                    } else {
+                        let b = &self.plan.boundaries[s];
+                        let wait = Timer::start();
+                        let req = b.post_recv_adjoint::<T>(comm)?;
+                        let t = b.complete_recv(comm, req)?;
+                        self.stats.idle_s += wait.elapsed_s();
+                        Some(t)
+                    };
+                    // The DP ring hook fires only inside the last
+                    // micro-batch's backward — each layer's gradient is
+                    // final there, accumulated over B0..B(m−1).
+                    let final_micro = k + 1 == m;
+                    let dx = net.backward_range_with_hook(
+                        state,
+                        comm,
+                        dy,
+                        range.clone(),
+                        &mut |layer, st, c| {
+                            if final_micro {
+                                dp.on_layer_done(c, st, layer)
+                            } else {
+                                Ok(())
+                            }
+                        },
+                    )?;
+                    if s > 0 {
+                        let dx = dx.ok_or_else(|| {
+                            Error::Autograd("pipeline stage lost its input cotangent".into())
+                        })?;
+                        self.plan.boundaries[s - 1].send_adjoint(comm, dx)?;
+                    }
+                    in_flight -= 1;
+                    self.stats.backwards += 1;
+                }
+            }
+        }
+        self.stats.steps += 1;
+        self.stats.span_s += span.elapsed_s();
+        Ok((loss_sum / m as f64, acc_sum / m as f64))
+    }
+
+    /// Evaluation forward of one micro-batch-sized input through the
+    /// stage chain (no stash, blocking boundary moves). Returns the
+    /// logits on the last stage, `None` elsewhere.
+    pub fn run_forward(
+        &mut self,
+        net: &Network<T>,
+        state: &mut NetworkState<T>,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        self.reserve(comm);
+        let s = self.stage;
+        let last = self.plan.stages() - 1;
+        let range = self.plan.stage_ranges[s].clone();
+        let x = if s == 0 {
+            x
+        } else {
+            let b = &self.plan.boundaries[s - 1];
+            let req = b.post_recv::<T>(comm)?;
+            Some(b.complete_recv(comm, req)?)
+        };
+        let y = net.forward_range(state, comm, x, false, range)?;
+        if s < last {
+            let y = y.ok_or_else(|| {
+                Error::Autograd("pipeline stage lost its boundary output".into())
+            })?;
+            self.plan.boundaries[s].send(comm, y)?;
+            Ok(None)
+        } else {
+            Ok(y)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(acts: &[Action]) -> (usize, usize) {
+        acts.iter().fold((0, 0), |(f, b), a| match a {
+            Action::Forward(_) => (f + 1, b),
+            Action::Backward(_) => (f, b + 1),
+        })
+    }
+
+    #[test]
+    fn serialized_schedule_is_lockstep() {
+        for stages in [2, 4] {
+            for stage in 0..stages {
+                let acts = schedule(stages, stage, 3, false);
+                assert_eq!(
+                    acts,
+                    vec![
+                        Action::Forward(0),
+                        Action::Backward(0),
+                        Action::Forward(1),
+                        Action::Backward(1),
+                        Action::Forward(2),
+                        Action::Backward(2),
+                    ]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn onef_oneb_warmup_and_drain() {
+        // S = 4, m = 6, stage 1: warm-up 2, then 1F1B, then drain.
+        let acts = schedule(4, 1, 6, true);
+        assert_eq!(&acts[..2], &[Action::Forward(0), Action::Forward(1)]);
+        assert_eq!(
+            &acts[2..6],
+            &[
+                Action::Forward(2),
+                Action::Backward(0),
+                Action::Forward(3),
+                Action::Backward(1),
+            ]
+        );
+        // drain: the last S−1−s backwards come with no forwards between
+        assert_eq!(&acts[10..], &[Action::Backward(4), Action::Backward(5)]);
+        let (f, b) = counts(&acts);
+        assert_eq!((f, b), (6, 6));
+    }
+
+    #[test]
+    fn schedule_is_causal_and_complete() {
+        for stages in [1usize, 2, 3, 4] {
+            for stage in 0..stages {
+                for micro in [1usize, 2, 4, 8] {
+                    for overlap in [false, true] {
+                        let acts = schedule(stages, stage, micro, overlap);
+                        assert_eq!(acts.len(), 2 * micro);
+                        let (mut fwd_seen, mut bwd_seen) = (vec![false; micro], vec![false; micro]);
+                        let mut in_flight = 0usize;
+                        let warmup_cap = if overlap { stages - stage } else { 1 };
+                        for a in &acts {
+                            match *a {
+                                Action::Forward(k) => {
+                                    // forwards in micro order, each once
+                                    assert!(!fwd_seen[k]);
+                                    assert!(k == 0 || fwd_seen[k - 1]);
+                                    fwd_seen[k] = true;
+                                    in_flight += 1;
+                                }
+                                Action::Backward(k) => {
+                                    // backward only after that micro's forward
+                                    assert!(fwd_seen[k] && !bwd_seen[k]);
+                                    assert!(k == 0 || bwd_seen[k - 1]);
+                                    bwd_seen[k] = true;
+                                    in_flight -= 1;
+                                }
+                            }
+                            assert!(
+                                in_flight <= warmup_cap,
+                                "S={stages} s={stage} m={micro}: {in_flight} in flight"
+                            );
+                        }
+                        assert!(fwd_seen.into_iter().all(|v| v));
+                        assert!(bwd_seen.into_iter().all(|v| v));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn last_stage_never_warms_up() {
+        // Stage S−1 alternates from the first action even with overlap:
+        // it cannot run F1 before producing B0's cotangent.
+        let acts = schedule(4, 3, 4, true);
+        assert_eq!(acts[0], Action::Forward(0));
+        assert_eq!(acts[1], Action::Backward(0));
+    }
+
+    #[test]
+    fn analytic_bubble_values() {
+        assert_eq!(analytic_bubble(1, 8), 0.0);
+        assert!((analytic_bubble(2, 4) - 0.2).abs() < 1e-12);
+        assert!((analytic_bubble(4, 8) - 3.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_locates_ranks() {
+        let plan = PipelinePlan {
+            stage_ranges: vec![0..4, 5..17],
+            boundary_layers: vec![4],
+            boundaries: vec![PipeMove::new(3, 7, &[2, 6, 14, 14], 99)],
+            stage_ranks: vec![3, 7],
+        };
+        assert_eq!(plan.stages(), 2);
+        assert_eq!(plan.stage_of_rank(3), Some(0));
+        assert_eq!(plan.stage_of_rank(7), Some(1));
+        assert_eq!(plan.stage_of_rank(0), None);
+    }
+}

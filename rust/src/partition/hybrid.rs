@@ -1,55 +1,74 @@
-//! The hybrid data×model factoring of the world (ROADMAP item 2).
+//! The hybrid data×pipeline×model factoring of the world (ROADMAP item 2).
 //!
 //! Gholami et al. (arXiv:1712.04432) integrate batch (data) parallelism
 //! with model/domain parallelism in the same linear-algebraic framing as
-//! the source paper: the world of `W = R · M` ranks factors into `R`
-//! *replicas* of an `M`-rank *model grid*. Rank `r` plays model role
-//! `r % M` inside replica `r / M`; every model-parallel partition of
-//! replica `k` is the replica-0 partition with all ranks offset by
-//! `k · M`.
+//! the source paper, and place a *pipeline* dimension between them to
+//! amortize network depth. The world of `W = R · S · M` ranks factors into
+//! `R` *replicas*, each a chain of `S` *stages*, each stage an `M`-rank
+//! *model grid*. Rank `w` plays model role `w % M` inside stage
+//! `(w / M) % S` of replica `w / (S · M)`; every model-parallel partition
+//! of replica `k` is the replica-0 partition with all ranks offset by
+//! `k · S · M`.
 //!
-//! The two communicator axes come from colouring the endpoint map
+//! The communicator axes come from colouring the endpoint map
 //! ([`CommGroup::split`]):
 //!
-//! * **model groups** — colour by replica: the `M` ranks that run one
-//!   copy of the network (the broadcast/sum-reduce/halo trees live here);
-//! * **dp groups** — colour by model role: the `R` ranks holding the
-//!   *same* parameter shard across replicas (the ring all-reduce that
-//!   averages gradients lives here).
+//! * **model groups** — colour by replica: the `S · M` ranks that run one
+//!   copy of the network (the broadcast/sum-reduce/halo trees and the
+//!   stage-boundary sendrecv chain live here);
+//! * **stage groups** — colour by (replica, stage): the `M` ranks of one
+//!   pipeline stage's model grid;
+//! * **pipe groups** — colour by (replica, model role): the `S` ranks a
+//!   micro-batch's activation visits in order — the pipeline's
+//!   stage-boundary sendrecv chain;
+//! * **dp groups** — colour by within-replica position `s · M + m`: the
+//!   `R` ranks holding the *same* parameter shard across replicas (the
+//!   ring all-reduce that averages gradients lives here).
 //!
 //! Because point-to-point matching is `(src, tag)`, disjoint replicas can
 //! reuse the same model-parallel tag space verbatim; only the dp rings
-//! need tags of their own.
+//! need tags of their own. The legacy two-axis constructor
+//! ([`HybridTopology::new`]) is the `S = 1` special case and keeps its
+//! exact PR-6 semantics.
 
 use crate::comm::CommGroup;
 use crate::error::{Error, Result};
 
-/// The `replicas × model-grid` factoring of a world.
+/// The `replicas × stages × model-grid` factoring of a world.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HybridTopology {
     replicas: usize,
+    stages: usize,
     model_world: usize,
 }
 
 impl HybridTopology {
     /// A topology of `replicas` copies of an `model_world`-rank model
-    /// grid. The total world size is their product.
+    /// grid — the two-axis (`S = 1`) factoring of PR 6. The total world
+    /// size is their product.
     pub fn new(replicas: usize, model_world: usize) -> Result<Self> {
-        if replicas == 0 || model_world == 0 {
+        HybridTopology::with_stages(replicas, 1, model_world)
+    }
+
+    /// The full three-axis factoring: `replicas` copies of a pipeline of
+    /// `stages` stages, each an `model_world`-rank model grid.
+    pub fn with_stages(replicas: usize, stages: usize, model_world: usize) -> Result<Self> {
+        if replicas == 0 || stages == 0 || model_world == 0 {
             return Err(Error::Partition(format!(
-                "hybrid topology needs replicas >= 1 and model_world >= 1, \
-                 got {replicas} x {model_world}"
+                "hybrid topology needs replicas, stages and model_world >= 1, \
+                 got {replicas} x {stages} x {model_world}"
             )));
         }
         Ok(HybridTopology {
             replicas,
+            stages,
             model_world,
         })
     }
 
-    /// Total world size `R · M`.
+    /// Total world size `R · S · M`.
     pub fn world(&self) -> usize {
-        self.replicas * self.model_world
+        self.replicas * self.stages * self.model_world
     }
 
     /// Number of data-parallel replicas `R`.
@@ -57,69 +76,125 @@ impl HybridTopology {
         self.replicas
     }
 
-    /// Ranks per model grid `M`.
+    /// Number of pipeline stages `S` per replica.
+    pub fn stages(&self) -> usize {
+        self.stages
+    }
+
+    /// Ranks per stage model grid `M`.
     pub fn model_world(&self) -> usize {
         self.model_world
     }
 
-    /// Which replica a world rank belongs to.
-    pub fn replica_of(&self, world_rank: usize) -> usize {
-        world_rank / self.model_world
+    /// Ranks per replica, `S · M`.
+    pub fn replica_world(&self) -> usize {
+        self.stages * self.model_world
     }
 
-    /// A world rank's role inside its model grid.
+    /// Which replica a world rank belongs to.
+    pub fn replica_of(&self, world_rank: usize) -> usize {
+        world_rank / self.replica_world()
+    }
+
+    /// Which pipeline stage a world rank belongs to.
+    pub fn stage_of(&self, world_rank: usize) -> usize {
+        (world_rank / self.model_world) % self.stages
+    }
+
+    /// A world rank's role inside its stage's model grid.
     pub fn model_rank_of(&self, world_rank: usize) -> usize {
         world_rank % self.model_world
     }
 
-    /// First world rank of a replica — the offset added to every replica-0
-    /// partition to obtain that replica's partitions (and the rank that
-    /// holds the replica's input/logits, mirroring replica 0's root 0).
-    pub fn replica_base(&self, replica: usize) -> usize {
-        replica * self.model_world
+    /// A world rank's position inside its replica block, `s · M + m` —
+    /// the index that identifies its parameter shard across replicas.
+    pub fn position_of(&self, world_rank: usize) -> usize {
+        world_rank % self.replica_world()
     }
 
-    /// World rank of `(replica, model_rank)`.
+    /// First world rank of a replica — the offset added to every replica-0
+    /// partition to obtain that replica's partitions (and the rank that
+    /// holds the replica's input, mirroring replica 0's root 0).
+    pub fn replica_base(&self, replica: usize) -> usize {
+        replica * self.replica_world()
+    }
+
+    /// World rank of `(replica, model_rank)` in the two-axis view
+    /// (stage 0). Kept for the `S = 1` topologies of PR 6.
     pub fn world_rank(&self, replica: usize, model_rank: usize) -> usize {
-        replica * self.model_world + model_rank
+        self.world_rank_of(replica, 0, model_rank)
+    }
+
+    /// World rank of `(replica, stage, model_rank)`.
+    pub fn world_rank_of(&self, replica: usize, stage: usize, model_rank: usize) -> usize {
+        (replica * self.stages + stage) * self.model_world + model_rank
     }
 
     /// The model-parallel communicator of one replica: colour = replica,
-    /// ordered by model rank.
+    /// ordered by within-replica position. With `S > 1` this spans all of
+    /// the replica's stages — the communicator a staged network is built
+    /// over.
     pub fn model_group(&self, replica: usize) -> CommGroup {
+        let rw = self.replica_world();
+        let mut groups =
+            CommGroup::split(self.world(), |r| (r / rw == replica).then_some(0), |r| r % rw);
+        groups.swap_remove(0)
+    }
+
+    /// The communicator of one pipeline stage's model grid: colour =
+    /// (replica, stage), ordered by model rank.
+    pub fn stage_group(&self, replica: usize, stage: usize) -> CommGroup {
         let mut groups = CommGroup::split(
             self.world(),
-            |r| (r / self.model_world == replica).then_some(0),
-            |r| r % self.model_world,
+            |r| {
+                (self.replica_of(r) == replica && self.stage_of(r) == stage).then_some(0)
+            },
+            |r| self.model_rank_of(r),
         );
         groups.swap_remove(0)
     }
 
-    /// The data-parallel communicator of one model role: colour = model
-    /// rank, ordered by replica. These are the rings that average
-    /// gradients — each holds the `R` ranks owning the same parameter
-    /// shard.
-    pub fn dp_group(&self, model_rank: usize) -> CommGroup {
+    /// The pipeline-chain communicator: the `S` ranks (one per stage)
+    /// holding model role `model_rank` inside `replica`, ordered by stage.
+    /// Stage-boundary activations and cotangents travel between
+    /// consecutive members.
+    pub fn pipe_group(&self, replica: usize, model_rank: usize) -> CommGroup {
         let mut groups = CommGroup::split(
             self.world(),
-            |r| (r % self.model_world == model_rank).then_some(0),
-            |r| r / self.model_world,
+            |r| {
+                (self.replica_of(r) == replica && self.model_rank_of(r) == model_rank)
+                    .then_some(0)
+            },
+            |r| self.stage_of(r),
+        );
+        groups.swap_remove(0)
+    }
+
+    /// The data-parallel communicator of one within-replica position:
+    /// colour = position (`s · M + m`), ordered by replica. These are the
+    /// rings that average gradients — each holds the `R` ranks owning the
+    /// same parameter shard. With `S = 1` the position *is* the model
+    /// rank, the PR-6 meaning.
+    pub fn dp_group(&self, position: usize) -> CommGroup {
+        let rw = self.replica_world();
+        let mut groups = CommGroup::split(
+            self.world(),
+            |r| (r % rw == position).then_some(0),
+            |r| r / rw,
         );
         groups.swap_remove(0)
     }
 
     /// All `R` model groups, indexed by replica.
     pub fn model_groups(&self) -> Vec<CommGroup> {
-        CommGroup::split(self.world(), |r| Some(r / self.model_world), |r| {
-            r % self.model_world
-        })
+        let rw = self.replica_world();
+        CommGroup::split(self.world(), |r| Some(r / rw), |r| r % rw)
     }
 
-    /// All `M` dp groups, indexed by model rank.
+    /// All `S · M` dp groups, indexed by within-replica position.
     pub fn dp_groups(&self) -> Vec<CommGroup> {
-        CommGroup::split(self.world(), |r| Some(r % self.model_world), |r| {
-            r / self.model_world
-        })
+        let rw = self.replica_world();
+        CommGroup::split(self.world(), |r| Some(r % rw), |r| r / rw)
     }
 }
 
@@ -137,6 +212,27 @@ mod tests {
         assert_eq!(t.replica_base(2), 8);
         assert!(HybridTopology::new(0, 4).is_err());
         assert!(HybridTopology::new(2, 0).is_err());
+        assert!(HybridTopology::with_stages(2, 0, 2).is_err());
+    }
+
+    #[test]
+    fn three_axis_factoring_round_trips() {
+        let t = HybridTopology::with_stages(2, 3, 2).unwrap();
+        assert_eq!(t.world(), 12);
+        assert_eq!(t.replica_world(), 6);
+        for w in 0..t.world() {
+            assert_eq!(
+                t.world_rank_of(t.replica_of(w), t.stage_of(w), t.model_rank_of(w)),
+                w
+            );
+            assert_eq!(
+                t.position_of(w),
+                t.stage_of(w) * t.model_world() + t.model_rank_of(w)
+            );
+        }
+        // replica 1, stage 2, model rank 1 = (1*3 + 2)*2 + 1 = 11
+        assert_eq!(t.world_rank_of(1, 2, 1), 11);
+        assert_eq!(t.replica_base(1), 6);
     }
 
     #[test]
@@ -157,6 +253,25 @@ mod tests {
     }
 
     #[test]
+    fn stage_and_pipe_groups() {
+        // 2 replicas × 2 stages × 2-rank model grids.
+        let t = HybridTopology::with_stages(2, 2, 2).unwrap();
+        assert_eq!(t.world(), 8);
+        assert_eq!(t.stage_group(0, 0).ranks(), &[0, 1]);
+        assert_eq!(t.stage_group(0, 1).ranks(), &[2, 3]);
+        assert_eq!(t.stage_group(1, 1).ranks(), &[6, 7]);
+        // The pipeline chain: stage peers of one model role.
+        assert_eq!(t.pipe_group(0, 0).ranks(), &[0, 2]);
+        assert_eq!(t.pipe_group(0, 1).ranks(), &[1, 3]);
+        assert_eq!(t.pipe_group(1, 0).ranks(), &[4, 6]);
+        // DP groups pair equal positions across replicas.
+        assert_eq!(t.dp_group(0).ranks(), &[0, 4]);
+        assert_eq!(t.dp_group(3).ranks(), &[3, 7]);
+        // Model groups span the whole replica (both stages).
+        assert_eq!(t.model_group(1).ranks(), &[4, 5, 6, 7]);
+    }
+
+    #[test]
     fn degenerate_axes() {
         // R = 1: the dp rings are singletons (no communication).
         let t = HybridTopology::new(1, 4).unwrap();
@@ -165,5 +280,10 @@ mod tests {
         let t = HybridTopology::new(4, 1).unwrap();
         assert_eq!(t.dp_group(0).ranks(), &[0, 1, 2, 3]);
         assert_eq!(t.model_group(3).ranks(), &[3]);
+        // R = 1, M = 1: pure pipeline — the pipe group is the world.
+        let t = HybridTopology::with_stages(1, 4, 1).unwrap();
+        assert_eq!(t.pipe_group(0, 0).ranks(), &[0, 1, 2, 3]);
+        assert_eq!(t.stage_group(0, 2).ranks(), &[2]);
+        assert_eq!(t.dp_group(2).ranks(), &[2]);
     }
 }

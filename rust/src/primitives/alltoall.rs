@@ -124,7 +124,21 @@ impl Repartition {
                     return Ok(Some(payload.into_tensor(&dst_region.shape)?));
                 }
             }
-            let mut out = Tensor::zeros(&dst_region.shape);
+            // The assembly target is pool-staged: the source owners tile
+            // the destination region, so every element is overwritten and
+            // a pool buffer's unspecified contents are fine. The shard is
+            // handed out pool-backed — the consumer's drop recycles the
+            // buffer to this rank's pool, so steady-state repartitions
+            // stop allocating.
+            let pooled = comm.pool_on();
+            let mut out = if pooled {
+                Tensor::from_vec(
+                    &dst_region.shape,
+                    comm.pool_take::<T>(crate::tensor::numel(&dst_region.shape)),
+                )?
+            } else {
+                Tensor::zeros(&dst_region.shape)
+            };
             let mut reqs = Vec::new();
             let mut regions: Vec<crate::tensor::Region> = Vec::new();
             for (src_rank, overlap) in owners {
@@ -150,6 +164,11 @@ impl Repartition {
                 // Unpack in arrival order straight out of the payload; the
                 // drop recycles a pooled staging buffer to its sender.
                 out.copy_region_from_slice(&local, data.as_slice())?;
+            }
+            if pooled {
+                let shape = out.shape().to_vec();
+                let body = comm.pool_wrap(out.into_vec());
+                return Ok(Some(Tensor::from_pooled(&shape, body)?));
             }
             return Ok(Some(out));
         }
@@ -282,6 +301,45 @@ mod tests {
         )
         .unwrap();
         assert_coherent::<f64>(4, &op, 3);
+    }
+
+    #[test]
+    fn assembled_shards_are_pool_backed_steady_state() {
+        // The multi-piece assembly path (each destination shard built
+        // from a local piece plus a remote one) now assembles into a pool
+        // buffer and hands the shard out pool-backed; a steady loop must
+        // run at zero pool misses on both ranks once warm.
+        let op = Repartition::new(d(&[4, 4], &[2, 1], None), d(&[4, 4], &[1, 2], None), 95)
+            .unwrap();
+        Cluster::run(2, |comm| {
+            comm.set_pool_cap_bytes(None);
+            let rank = comm.rank();
+            let step = |comm: &mut Comm| -> Result<()> {
+                let x = op
+                    .src()
+                    .region_of(rank)
+                    .map(|r| Tensor::<f64>::filled(&r.shape, rank as f64));
+                let y = op.forward(comm, x)?.expect("every rank owns a shard");
+                assert!(y.is_pool_backed(), "assembled shard must be pool-backed");
+                Ok(())
+            };
+            for _ in 0..3 {
+                step(comm)?;
+                comm.barrier();
+            }
+            let miss0 = comm.pool_stats().misses;
+            for _ in 0..5 {
+                step(comm)?;
+                comm.barrier();
+            }
+            assert_eq!(
+                comm.pool_stats().misses - miss0,
+                0,
+                "rank {rank} pool misses in steady state"
+            );
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

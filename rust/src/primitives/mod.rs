@@ -10,6 +10,7 @@
 //! | primitive          | adjoint                               | paper |
 //! |--------------------|---------------------------------------|-------|
 //! | send-recv (copy)   | receive-send with **add**             | §3    |
+//! | pipe move          | the reversed move (assignment)        | §3, Eq. 12 |
 //! | scatter (move)     | gather                                | §3    |
 //! | broadcast          | sum-reduce (Eq. 9)                    | §3    |
 //! | sum-reduce         | broadcast                             | §3    |
@@ -52,6 +53,7 @@
 mod alltoall;
 mod broadcast;
 mod halo_exchange;
+mod pipe;
 mod ring;
 mod scatter;
 mod sendrecv;
@@ -59,6 +61,7 @@ mod sendrecv;
 pub use alltoall::Repartition;
 pub use broadcast::{AllReduce, Broadcast, SumReduce};
 pub use halo_exchange::{HaloAdjointInFlight, HaloExchange, HaloInFlight, TrimPad};
+pub use pipe::PipeMove;
 pub use ring::{RingAllGather, RingAllReduce, RingInFlight, RingReduceScatter};
 pub use scatter::{Gather, Scatter};
 pub use sendrecv::SendRecv;

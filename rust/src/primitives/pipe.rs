@@ -1,0 +1,257 @@
+//! Stage-boundary relocation for pipeline parallelism.
+//!
+//! [`PipeMove`] is the *move* variant of the §3 send-receive operator:
+//! where [`super::SendRecv`] copies (the source keeps its tensor, so the
+//! adjoint must *add* into the source's cotangent), a stage boundary
+//! relocates the activation — after the move the source holds nothing.
+//! Algebraically the forward is `M = D_dst · C_{src→dst}` (clear at the
+//! source, copy to the destination) and the Eq. 12 adjoint is the same
+//! relocation run backwards, `M* = D_src · C_{dst→src}`, with plain
+//! assignment at the source — exactly how the backward cotangent comes
+//! home. The pair is what [`crate::optim::pp`]'s 1F1B engine drives: the
+//! forward send of micro-batch `k`'s activation and the backward receive
+//! of its cotangent are the same operator's two directions, so Eq. 13
+//! coherence is testable per boundary.
+//!
+//! The split API (`post_recv*` / `send*` / `complete_recv`) lets the
+//! pipeline engine pre-post the receive for micro-batch `k+1` before
+//! computing micro-batch `k`, keeping boundary traffic inside the same
+//! overlap window the halo exchange and DP ring use. Payloads are staged
+//! in the sender's registered buffer pool when it is on
+//! (`isend_staged`), and the receive side adopts the payload as a
+//! pool-backed tensor (`Payload::into_tensor`) — zero-alloc and
+//! zero-copy after warm-up, with the consumer's drop returning the
+//! buffer to the sender's pool.
+
+use crate::adjoint::DistLinearOp;
+use crate::comm::{Comm, RecvRequest};
+use crate::error::{Error, Result};
+use crate::tensor::{Scalar, Tensor};
+
+/// Move a tensor of `shape` from rank `src` to rank `dst` (forward on
+/// `tag`); the adjoint moves the cotangent back on `tag + 1`.
+#[derive(Debug, Clone)]
+pub struct PipeMove {
+    /// Source rank (owns the activation before the move).
+    pub src: usize,
+    /// Destination rank (owns it after).
+    pub dst: usize,
+    /// Tensor shape at both endpoints.
+    pub shape: Vec<usize>,
+    /// Base tag; forward uses `tag`, adjoint `tag + 1`.
+    pub tag: u64,
+}
+
+impl PipeMove {
+    /// A stage boundary moving `shape` from `src` to `dst`.
+    pub fn new(src: usize, dst: usize, shape: &[usize], tag: u64) -> Self {
+        PipeMove {
+            src,
+            dst,
+            shape: shape.to_vec(),
+            tag,
+        }
+    }
+
+    /// Elements per message.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn check_rank(&self, comm: &Comm) -> Result<()> {
+        let world = comm.world();
+        if self.src >= world || self.dst >= world {
+            return Err(Error::Comm(format!(
+                "pipe move {} -> {} outside world of {}",
+                self.src, self.dst, world
+            )));
+        }
+        Ok(())
+    }
+
+    /// Post the forward receive (destination only). Pre-posting before
+    /// the previous micro-batch's compute is what buys the overlap.
+    pub fn post_recv<T: Scalar>(&self, comm: &Comm) -> Result<RecvRequest<T>> {
+        self.check_rank(comm)?;
+        comm.irecv::<T>(self.src, self.tag)
+    }
+
+    /// Post the adjoint (cotangent) receive (source only).
+    pub fn post_recv_adjoint<T: Scalar>(&self, comm: &Comm) -> Result<RecvRequest<T>> {
+        self.check_rank(comm)?;
+        comm.irecv::<T>(self.dst, self.tag + 1)
+    }
+
+    /// Forward send (source only): relocate `x` to the destination. The
+    /// tensor is consumed — move semantics.
+    pub fn send<T: Scalar>(&self, comm: &Comm, x: Tensor<T>) -> Result<()> {
+        self.check_rank(comm)?;
+        if x.shape() != &self.shape[..] {
+            return Err(Error::Comm(format!(
+                "pipe move expects shape {:?}, got {:?}",
+                self.shape,
+                x.shape()
+            )));
+        }
+        let req = if comm.pool_on() {
+            comm.isend_staged(self.dst, self.tag, x.data())?
+        } else {
+            comm.isend_vec(self.dst, self.tag, x.into_vec())?
+        };
+        comm.wait_send(req)
+    }
+
+    /// Adjoint send (destination only): relocate the cotangent `dy` back
+    /// to the source on `tag + 1`.
+    pub fn send_adjoint<T: Scalar>(&self, comm: &Comm, dy: Tensor<T>) -> Result<()> {
+        if dy.shape() != &self.shape[..] {
+            return Err(Error::Comm(format!(
+                "pipe move adjoint expects shape {:?}, got {:?}",
+                self.shape,
+                dy.shape()
+            )));
+        }
+        self.check_rank(comm)?;
+        let req = if comm.pool_on() {
+            comm.isend_staged(self.src, self.tag + 1, dy.data())?
+        } else {
+            comm.isend_vec(self.src, self.tag + 1, dy.into_vec())?
+        };
+        comm.wait_send(req)
+    }
+
+    /// Complete a posted receive into a (pool-backed when possible)
+    /// tensor of the boundary shape.
+    pub fn complete_recv<T: Scalar>(&self, comm: &mut Comm, req: RecvRequest<T>) -> Result<Tensor<T>> {
+        comm.wait_payload(req)?.into_tensor(&self.shape)
+    }
+}
+
+impl<T: Scalar> DistLinearOp<T> for PipeMove {
+    fn name(&self) -> String {
+        format!("pipe_move {} -> {} {:?}", self.src, self.dst, self.shape)
+    }
+
+    fn domain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        (rank == self.src).then(|| self.shape.clone())
+    }
+
+    fn codomain_shape(&self, rank: usize) -> Option<Vec<usize>> {
+        (rank == self.dst).then(|| self.shape.clone())
+    }
+
+    fn forward(
+        &self,
+        comm: &mut Comm,
+        x: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        self.check_rank(comm)?;
+        let rank = comm.rank();
+        if self.src == self.dst {
+            // Degenerate boundary: the move is the identity.
+            return Ok(if rank == self.src { x } else { None });
+        }
+        if rank == self.dst {
+            let req = self.post_recv::<T>(comm)?;
+            return Ok(Some(self.complete_recv(comm, req)?));
+        }
+        if rank == self.src {
+            let x = x.ok_or_else(|| {
+                Error::Comm("pipe move source has no input tensor".into())
+            })?;
+            self.send(comm, x)?;
+        }
+        Ok(None)
+    }
+
+    fn adjoint(
+        &self,
+        comm: &mut Comm,
+        y: Option<Tensor<T>>,
+    ) -> Result<Option<Tensor<T>>> {
+        self.check_rank(comm)?;
+        let rank = comm.rank();
+        if self.src == self.dst {
+            return Ok(if rank == self.src { y } else { None });
+        }
+        if rank == self.src {
+            let req = self.post_recv_adjoint::<T>(comm)?;
+            return Ok(Some(self.complete_recv(comm, req)?));
+        }
+        if rank == self.dst {
+            let dy = y.ok_or_else(|| {
+                Error::Comm("pipe move adjoint has no cotangent at dst".into())
+            })?;
+            self.send_adjoint(comm, dy)?;
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::assert_coherent;
+    use crate::comm::Cluster;
+
+    #[test]
+    fn moves_forward_and_back() {
+        let results = Cluster::run(2, |comm| {
+            let mv = PipeMove::new(0, 1, &[2, 3], 7);
+            let x = (comm.rank() == 0)
+                .then(|| Tensor::from_vec(&[2, 3], (0..6).map(|v| v as f32).collect()).unwrap());
+            let y = mv.forward(comm, x)?;
+            match comm.rank() {
+                0 => assert!(y.is_none(), "source keeps nothing after the move"),
+                _ => {
+                    let y = y.expect("destination receives");
+                    assert_eq!(y.data()[4], 4.0);
+                }
+            }
+            // Cotangent comes home by assignment.
+            let dy = (comm.rank() == 1)
+                .then(|| Tensor::from_vec(&[2, 3], vec![2.0f32; 6]).unwrap());
+            let dx = mv.adjoint(comm, dy)?;
+            match comm.rank() {
+                0 => assert_eq!(dx.unwrap().data()[5], 2.0),
+                _ => assert!(dx.is_none()),
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(results.len(), 2);
+    }
+
+    #[test]
+    fn coherent_including_subset_memberships() {
+        // Adjacent, skipping, and reversed boundaries inside larger worlds
+        // — ranks outside {src, dst} participate with no data, mirroring
+        // stage groups that do not own the boundary.
+        for (src, dst, world) in [(0usize, 1usize, 2usize), (0, 3, 4), (2, 1, 4), (1, 1, 3)] {
+            let mv = PipeMove::new(src, dst, &[3, 4], 40);
+            assert_coherent::<f64>(world, &mv, 0xB0A7 + world as u64);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        Cluster::run(2, |comm| {
+            let mv = PipeMove::new(0, 5, &[2], 3);
+            assert!(mv.forward(comm, None::<Tensor<f32>>).is_err());
+            if comm.rank() == 0 {
+                let mv = PipeMove::new(0, 1, &[2], 5);
+                let bad = Tensor::from_vec(&[3], vec![0.0f32; 3]).unwrap();
+                assert!(mv.send(comm, bad).is_err());
+                let good = Tensor::from_vec(&[2], vec![1.0f32; 2]).unwrap();
+                mv.send(comm, good)?;
+            } else {
+                let mv = PipeMove::new(0, 1, &[2], 5);
+                let req = mv.post_recv::<f32>(comm)?;
+                let y = mv.complete_recv(comm, req)?;
+                assert_eq!(y.data(), &[1.0, 1.0]);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

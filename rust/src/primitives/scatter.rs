@@ -135,7 +135,22 @@ impl Scatter {
             // goes out before any is completed, and the assembly consumes
             // shards in *arrival* order — the copy of an early shard is no
             // longer serialized behind a slow earlier-posted sender.
-            let mut out = Tensor::zeros(decomp.global_shape());
+            //
+            // The assembly target itself is pool-staged: the decomposition
+            // cells tile the global index space, so every element is
+            // overwritten and a pool buffer's unspecified contents are
+            // fine. The assembled tensor is handed out pool-backed — the
+            // consumer's drop recycles the buffer to this root's pool, so
+            // steady-state gathers stop allocating.
+            let pooled = comm.pool_on();
+            let mut out = if pooled {
+                Tensor::from_vec(
+                    decomp.global_shape(),
+                    comm.pool_take::<T>(crate::tensor::numel(decomp.global_shape())),
+                )?
+            } else {
+                Tensor::zeros(decomp.global_shape())
+            };
             if let Some((region, shard)) = own_shard.take() {
                 out.copy_region_from(&shard, &Region::full(&region.shape), &region.start)?;
             }
@@ -153,6 +168,11 @@ impl Scatter {
                 // Unpack in place; dropping the payload recycles a pooled
                 // staging buffer to the shard's owner.
                 out.copy_region_from_slice(&region, data.as_slice())?;
+            }
+            if pooled {
+                let shape = out.shape().to_vec();
+                let body = comm.pool_wrap(out.into_vec());
+                return Ok(Some(Tensor::from_pooled(&shape, body)?));
             }
             return Ok(Some(out));
         }
@@ -310,6 +330,48 @@ mod tests {
             TensorDecomposition::new(Partition::from_shape(&[2, 3]), &[5, 7]).unwrap();
         let sc = Scatter::new(d, 1, 80);
         assert_coherent::<f64>(6, &sc, 44);
+    }
+
+    #[test]
+    fn gather_root_assembly_is_pool_backed_steady_state() {
+        // The root's assembled global tensor is built in a pool buffer
+        // and handed out pool-backed; a steady gather loop must run at
+        // zero pool misses on every rank once warm.
+        let ga = Gather::new(decomp_1d(9, 3), 1, 95);
+        Cluster::run(3, |comm| {
+            comm.set_pool_cap_bytes(None);
+            let rank = comm.rank();
+            let step = |comm: &mut Comm| -> Result<()> {
+                let shard = ga
+                    .inner
+                    .decomp
+                    .region_of(rank)
+                    .map(|r| Tensor::<f64>::filled(&r.shape, rank as f64));
+                let out = ga.forward(comm, shard)?;
+                if rank == 1 {
+                    let t = out.expect("root assembles the global tensor");
+                    assert!(t.is_pool_backed(), "gather assembly must be pool-backed");
+                    assert_eq!(t.data(), &[0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+                }
+                Ok(())
+            };
+            for _ in 0..3 {
+                step(comm)?;
+                comm.barrier();
+            }
+            let miss0 = comm.pool_stats().misses;
+            for _ in 0..5 {
+                step(comm)?;
+                comm.barrier();
+            }
+            assert_eq!(
+                comm.pool_stats().misses - miss0,
+                0,
+                "rank {rank} pool misses in steady state"
+            );
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Micro-batch pipeline parallelism — the integration suite.
+//!
+//! Four claims under test:
+//!
+//! 1. **The stage boundary is a linear operator with a correct adjoint**
+//!    (Eq. 13): the `PipeMove` sendrecv stays coherent across world
+//!    sizes, offset src/dst pairs (subset memberships — most ranks are
+//!    bystanders), both directions, and multi-dimensional shapes.
+//!
+//! 2. **The 1F1B engine is the tape, reordered**: driving the staged
+//!    network with `optim::pp::Pipeline` produces **bitwise** the
+//!    gradients and (through Adam steps) parameters of (a) the same
+//!    staged tape walked whole — every rank over every layer, boundary
+//!    glue serializing the moves — and (b) the plain single-rank
+//!    sequential LeNet-5 consuming the same micro-batches, enabled by
+//!    the staged builder's seed offsets. The serialized lockstep
+//!    schedule (`set_pp_overlap(false)`) matches the 1F1B schedule
+//!    bitwise for S ∈ {2, 4}: per-layer gradients accumulate in micro
+//!    order under both.
+//!
+//! 3. **Pipeline composes with data parallelism**: R = 2 replicas ×
+//!    S = 2 stages, ring-averaging in the last micro-batch's backward —
+//!    replica 1's stage ranks stay bitwise identical to replica 0's
+//!    through multiple Adam steps, without ever exchanging parameters.
+//!
+//! 4. **Steady-state pipelined steps stop allocating**: after warm-up,
+//!    `run_step` — boundary sends/receives on the registered pool,
+//!    stash swaps, micro-accumulated backward, Adam — adds nothing to
+//!    the scratch-arena or comm-pool miss counters on any stage, and
+//!    the in-flight micro-batch queue respects the 1F1B bound `S − s`.
+
+use distdl::adjoint::assert_coherent;
+use distdl::autograd::NetworkState;
+use distdl::comm::{Cluster, Comm, CommGroup};
+use distdl::coordinator::DP_TAG_BASE;
+use distdl::data::{Batch, SyntheticMnist};
+use distdl::models::{
+    affine_tower_pipeline, lenet5, lenet5_pipeline, LeNetConfig, LeNetLayout, TowerConfig,
+};
+use distdl::nn::native::{cross_entropy_backward, cross_entropy_forward};
+use distdl::nn::NativeKernels;
+use distdl::optim::dp::DataParallel;
+use distdl::optim::pp::{set_pp_overlap, Pipeline};
+use distdl::optim::Adam;
+use distdl::partition::HybridTopology;
+use distdl::primitives::PipeMove;
+use distdl::tensor::{Scalar, Tensor};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// Eq. 13 for the stage boundary
+// ---------------------------------------------------------------------
+
+#[test]
+fn pipe_move_is_coherent_across_geometries() {
+    // (world, src, dst, shape): adjacent and non-adjacent pairs, both
+    // directions, bystander ranks, image- and feature-shaped payloads.
+    let cases: Vec<(usize, usize, usize, Vec<usize>)> = vec![
+        (2, 0, 1, vec![3, 4]),
+        (2, 1, 0, vec![7]),
+        (3, 2, 0, vec![2, 6, 14, 14]),
+        (5, 1, 4, vec![4, 120]),
+        (6, 4, 2, vec![5, 16, 5, 5]),
+    ];
+    for (world, src, dst, shape) in &cases {
+        let mv = PipeMove::new(*src, *dst, shape, 70);
+        assert_coherent::<f64>(*world, &mv, 0x717E + *world as u64);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bitwise parity harness
+// ---------------------------------------------------------------------
+
+/// Per-rank dump: (layer, param, bits) for every gradient and parameter
+/// shard — f32 bit patterns, so equality is bitwise by construction.
+type BitDump = Vec<(usize, usize, Vec<u32>)>;
+
+fn dump(state: &NetworkState<f32>) -> (BitDump, BitDump) {
+    let collect = |pick: &dyn Fn(&distdl::autograd::LayerState<f32>) -> Vec<Tensor<f32>>| {
+        let mut out = BitDump::new();
+        for (li, ls) in state.states.iter().enumerate() {
+            for (pi, t) in pick(ls).into_iter().enumerate() {
+                out.push((li, pi, t.data().iter().map(|v| v.to_bits()).collect()));
+            }
+        }
+        out
+    };
+    (
+        collect(&|ls| ls.grads.to_vec()),
+        collect(&|ls| ls.params.to_vec()),
+    )
+}
+
+fn assert_bits(a: &BitDump, b: &BitDump, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: shard counts differ");
+    for ((la, pa, da), (lb, pb, db)) in a.iter().zip(b.iter()) {
+        assert_eq!((la, pa), (lb, pb), "{what}: shard keys differ");
+        assert_eq!(da, db, "{what}: layer {la} param {pa} bits differ");
+    }
+}
+
+fn micro_data(seed: u64, micro: usize, count: usize) -> Vec<Batch> {
+    let data = SyntheticMnist::new(seed ^ 0xDA7A, micro * count);
+    let batches = data.batches(micro);
+    assert_eq!(batches.len(), count);
+    batches
+}
+
+/// Train `steps` steps of the staged LeNet through the 1F1B engine on a
+/// `stages`-rank world (data parallelism inert) and return every rank's
+/// final (grads, params) bit dumps. Micro-batch `k` of step `t` is
+/// `batches[t * m + k]`.
+fn run_engine(
+    stages: usize,
+    m: usize,
+    batches: &[Batch],
+    seed: u64,
+    steps: usize,
+) -> Vec<(BitDump, BitDump)> {
+    let micro = batches[0].labels.len();
+    let cfg = LeNetConfig {
+        batch: micro,
+        layout: LeNetLayout::Sequential,
+    };
+    Cluster::run(stages, |comm| {
+        let rank = comm.rank();
+        let (net, plan) = lenet5_pipeline::<f32>(&cfg, Arc::new(NativeKernels), stages, 0)?;
+        let mut state = net.init(rank, seed)?;
+        let mut opt = Adam::<f32>::new(0.01);
+        let mut dp = DataParallel::<f32>::new(CommGroup::new(vec![rank])?, DP_TAG_BASE);
+        let mut pipe = Pipeline::new(plan, rank, m)?;
+        let stage = pipe.stage();
+        for step in 0..steps {
+            let mut input =
+                |k: usize| (stage == 0).then(|| batches[step * m + k].images_as::<f32>());
+            let mut loss_fn = |k: usize, logits: Tensor<f32>| {
+                let labels = &batches[step * m + k].labels;
+                let (l, probs) = cross_entropy_forward(&logits, labels)?;
+                Ok((l, 0.0, cross_entropy_backward(&probs, labels)))
+            };
+            pipe.run_step(&net, &mut state, comm, &mut input, &mut loss_fn, &mut dp)?;
+            dp.finish(comm, &mut state)?;
+            opt.step(&mut state)?;
+            comm.barrier();
+        }
+        Ok(dump(&state))
+    })
+    .unwrap()
+}
+
+// ---------------------------------------------------------------------
+// The engine is the tape, reordered
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_matches_whole_tape_reference_bitwise() {
+    // The staged network is a valid collective tape in its own right:
+    // every rank walks every layer, the boundary glue serializing the
+    // stage moves. Driving it with the engine (stage slices, stash
+    // swaps, split boundary API) must reproduce that walk bit for bit —
+    // grads and Adam-stepped params, both ranks, multiple steps.
+    let (stages, m, steps) = (2usize, 2usize, 2usize);
+    let batches = micro_data(29, 4, m * steps);
+    let engine = run_engine(stages, m, &batches, 29, steps);
+
+    let cfg = LeNetConfig {
+        batch: 4,
+        layout: LeNetLayout::Sequential,
+    };
+    let inv_m = <f32 as Scalar>::from_f64(1.0 / m as f64);
+    let tape = Cluster::run(stages, |comm| {
+        let rank = comm.rank();
+        let (net, plan) = lenet5_pipeline::<f32>(&cfg, Arc::new(NativeKernels), stages, 0)?;
+        let last_rank = plan.stage_ranks[plan.stages() - 1];
+        let mut state = net.init(rank, 29)?;
+        let mut opt = Adam::<f32>::new(0.01);
+        for step in 0..steps {
+            state.zero_grads();
+            for k in 0..m {
+                let b = &batches[step * m + k];
+                let x = (rank == 0).then(|| b.images_as::<f32>());
+                let logits = net.forward(&mut state, comm, x, true)?;
+                let mut dl = None;
+                if rank == last_rank {
+                    let lg = logits.expect("last stage holds logits");
+                    let (_, probs) = cross_entropy_forward(&lg, &b.labels)?;
+                    let mut d = cross_entropy_backward(&probs, &b.labels);
+                    d.scale_assign(inv_m);
+                    dl = Some(d);
+                }
+                net.backward(&mut state, comm, dl)?;
+            }
+            opt.step(&mut state)?;
+            comm.barrier();
+        }
+        Ok(dump(&state))
+    })
+    .unwrap();
+
+    for (rank, (e, t)) in engine.iter().zip(tape.iter()).enumerate() {
+        assert_bits(&e.0, &t.0, &format!("rank {rank} grads"));
+        assert_bits(&e.1, &t.1, &format!("rank {rank} params"));
+    }
+}
+
+#[test]
+fn staged_matches_plain_sequential_bitwise_including_adam() {
+    // Seed offsets make the staged tape initialise bit-identically to
+    // the plain sequential network; micro-accumulation in micro order
+    // with the engine's 1/m loss scaling then keeps gradients — and the
+    // Adam moments and parameters they drive — bitwise equal to a
+    // single-rank run consuming the same micro-batches.
+    let (m, steps, micro) = (2usize, 2usize, 4usize);
+    let batches = micro_data(41, micro, m * steps);
+    let cfg = LeNetConfig {
+        batch: micro,
+        layout: LeNetLayout::Sequential,
+    };
+
+    // Plain single-rank reference with the identical micro loop.
+    let inv_m = <f32 as Scalar>::from_f64(1.0 / m as f64);
+    let plain = Cluster::run(1, |comm| {
+        let net = lenet5::<f32>(&cfg, Arc::new(NativeKernels))?;
+        let mut state = net.init(0, 41)?;
+        let mut opt = Adam::<f32>::new(0.01);
+        for step in 0..steps {
+            state.zero_grads();
+            for k in 0..m {
+                let b = &batches[step * m + k];
+                let logits = net
+                    .forward(&mut state, comm, Some(b.images_as::<f32>()), true)?
+                    .expect("sequential rank holds logits");
+                let (_, probs) = cross_entropy_forward(&logits, &b.labels)?;
+                let mut dl = cross_entropy_backward(&probs, &b.labels);
+                dl.scale_assign(inv_m);
+                net.backward(&mut state, comm, Some(dl))?;
+            }
+            opt.step(&mut state)?;
+        }
+        Ok(dump(&state))
+    })
+    .unwrap()
+    .remove(0);
+
+    for stages in [2usize, 4] {
+        let staged = run_engine(stages, m, &batches, 41, steps);
+        // Merge the per-rank dumps (stages partition the parameters) and
+        // remap staged layer indices to base tape indices: a staged index
+        // drops one slot per boundary glue layer before it.
+        let (_, plan) = lenet5_pipeline::<f32>(&cfg, Arc::new(NativeKernels), stages, 0).unwrap();
+        let to_base = |staged_li: usize| {
+            staged_li - plan.boundary_layers.iter().filter(|&&b| b < staged_li).count()
+        };
+        let merge = |pick: &dyn Fn(&(BitDump, BitDump)) -> &BitDump| {
+            let mut out = BitDump::new();
+            for rank_dump in &staged {
+                for (li, pi, bits) in pick(rank_dump) {
+                    out.push((to_base(*li), *pi, bits.clone()));
+                }
+            }
+            out.sort();
+            out
+        };
+        let mut plain_g = plain.0.clone();
+        let mut plain_p = plain.1.clone();
+        plain_g.sort();
+        plain_p.sort();
+        assert_bits(&merge(&|d| &d.0), &plain_g, &format!("S={stages} grads vs plain"));
+        assert_bits(&merge(&|d| &d.1), &plain_p, &format!("S={stages} params vs plain"));
+    }
+}
+
+#[test]
+fn pipelined_matches_serialized_bitwise_including_adam() {
+    // `set_pp_overlap(false)` runs every stage in lockstep — one
+    // micro-batch in flight anywhere. The 1F1B schedule issues the same
+    // layer calls on the same micro-batches in the same per-rank order,
+    // so grads and Adam-stepped params must match bit for bit on every
+    // stage, for both supported cut counts.
+    let (m, steps) = (4usize, 3usize);
+    for stages in [2usize, 4] {
+        let batches = micro_data(31 + stages as u64, 4, m * steps);
+        set_pp_overlap(false);
+        let serialized = run_engine(stages, m, &batches, 31, steps);
+        set_pp_overlap(true);
+        let pipelined = run_engine(stages, m, &batches, 31, steps);
+        for (rank, (s, p)) in serialized.iter().zip(pipelined.iter()).enumerate() {
+            assert_bits(&s.0, &p.0, &format!("S={stages} rank {rank} grads"));
+            assert_bits(&s.1, &p.1, &format!("S={stages} rank {rank} params"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Composition with data parallelism
+// ---------------------------------------------------------------------
+
+#[test]
+fn dp_pipeline_replicas_stay_bitwise_identical() {
+    // R = 2 replicas × S = 2 stages (world 4). The ring hook fires in
+    // the last micro-batch's backward; replicas never exchange
+    // parameters, yet stage s of replica 1 (rank S + s) must remain a
+    // bit-identical copy of rank s through multiple Adam steps.
+    let (replicas, stages, m, micro, steps) = (2usize, 2usize, 2usize, 4usize, 2usize);
+    let topo = HybridTopology::with_stages(replicas, stages, 1).unwrap();
+    let batches = micro_data(0x9A7, micro, replicas * m * steps);
+    let cfg = LeNetConfig {
+        batch: micro,
+        layout: LeNetLayout::Sequential,
+    };
+    let dumps = Cluster::run(topo.world(), |comm| {
+        let rank = comm.rank();
+        let replica = topo.replica_of(rank);
+        let base = topo.replica_base(replica);
+        let (net, plan) = lenet5_pipeline::<f32>(&cfg, Arc::new(NativeKernels), stages, base)?;
+        let mut state = net.init(rank, 77)?;
+        let mut opt = Adam::<f32>::new(0.01);
+        let mut dp = DataParallel::<f32>::for_rank(&topo, rank, DP_TAG_BASE);
+        let mut pipe = Pipeline::new(plan, rank, m)?;
+        let stage = pipe.stage();
+        let index_of = |step: usize, j: usize| (step * replicas + replica) * m + j;
+        for step in 0..steps {
+            let mut input =
+                |k: usize| (stage == 0).then(|| batches[index_of(step, k)].images_as::<f32>());
+            let mut loss_fn = |k: usize, logits: Tensor<f32>| {
+                let labels = &batches[index_of(step, k)].labels;
+                let (l, probs) = cross_entropy_forward(&logits, labels)?;
+                Ok((l, 0.0, cross_entropy_backward(&probs, labels)))
+            };
+            pipe.run_step(&net, &mut state, comm, &mut input, &mut loss_fn, &mut dp)?;
+            dp.finish(comm, &mut state)?;
+            opt.step(&mut state)?;
+            comm.barrier();
+        }
+        Ok(dump(&state))
+    })
+    .unwrap();
+    for s in 0..stages {
+        let mirror = stages + s;
+        assert_bits(
+            &dumps[s].0,
+            &dumps[mirror].0,
+            &format!("stage {s} grads across replicas"),
+        );
+        assert_bits(
+            &dumps[s].1,
+            &dumps[mirror].1,
+            &format!("stage {s} params across replicas"),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Steady-state allocation behaviour
+// ---------------------------------------------------------------------
+
+#[test]
+fn pipeline_steady_state_stops_allocating() {
+    // After warm-up the full 1F1B step — boundary sends/receives on the
+    // registered pool, stash swaps, micro-accumulated backward, Adam —
+    // must stop touching the scratch arena and the comm pool on every
+    // stage, and the in-flight queue must respect the 1F1B bound S − s.
+    const WARM: usize = 3;
+    const STEPS: usize = 5;
+    let (stages, m, micro) = (2usize, 4usize, 4usize);
+    let batches = micro_data(0x51EA, micro, m);
+    let cfg = LeNetConfig {
+        batch: micro,
+        layout: LeNetLayout::Sequential,
+    };
+    let results = Cluster::run(stages, |comm| {
+        // Pin the caps: the worst-case-eviction CI legs test correctness
+        // under constant eviction, not this reuse contract.
+        comm.set_pool_cap_bytes(None);
+        distdl::memory::scratch_set_cap_bytes::<f32>(None);
+        let rank = comm.rank();
+        let (net, plan) = lenet5_pipeline::<f32>(&cfg, Arc::new(NativeKernels), stages, 0)?;
+        let mut state = net.init(rank, 55)?;
+        let mut opt = Adam::<f32>::new(0.01);
+        let mut dp = DataParallel::<f32>::new(CommGroup::new(vec![rank])?, DP_TAG_BASE);
+        let mut pipe = Pipeline::new(plan, rank, m)?;
+        let stage = pipe.stage();
+        let mut one_step = |state: &mut NetworkState<f32>,
+                            comm: &mut Comm,
+                            opt: &mut Adam<f32>,
+                            dp: &mut DataParallel<f32>,
+                            pipe: &mut Pipeline<f32>|
+         -> distdl::Result<()> {
+            let mut input = |k: usize| (stage == 0).then(|| batches[k].images_as::<f32>());
+            let mut loss_fn = |k: usize, logits: Tensor<f32>| {
+                let labels = &batches[k].labels;
+                let (l, probs) = cross_entropy_forward(&logits, labels)?;
+                Ok((l, 0.0, cross_entropy_backward(&probs, labels)))
+            };
+            pipe.run_step(&net, state, comm, &mut input, &mut loss_fn, dp)?;
+            dp.finish(comm, state)?;
+            opt.step(state)?;
+            Ok(())
+        };
+        for _ in 0..WARM {
+            one_step(&mut state, comm, &mut opt, &mut dp, &mut pipe)?;
+            comm.barrier(); // in-flight pool returns land home
+        }
+        let s0 = distdl::memory::scratch_stats::<f32>().allocations;
+        let p0 = comm.pool_stats().misses;
+        pipe.reset_stats();
+        for _ in 0..STEPS {
+            one_step(&mut state, comm, &mut opt, &mut dp, &mut pipe)?;
+            comm.barrier();
+        }
+        let ds = distdl::memory::scratch_stats::<f32>().allocations - s0;
+        let dm = comm.pool_stats().misses - p0;
+        Ok((ds, dm, stage, *pipe.stats()))
+    })
+    .unwrap();
+    for (rank, (scratch, pool, stage, stats)) in results.iter().enumerate() {
+        assert_eq!(*scratch, 0, "rank {rank}: scratch allocations in steady state");
+        assert_eq!(*pool, 0, "rank {rank}: comm-pool misses in steady state");
+        assert_eq!(stats.steps, STEPS);
+        assert_eq!(stats.forwards, STEPS * m, "rank {rank}: forward count");
+        assert_eq!(stats.backwards, STEPS * m, "rank {rank}: backward count");
+        assert!(
+            (1..=stages - stage).contains(&stats.max_in_flight),
+            "rank {rank}: in-flight queue {} outside 1..=S−s = {}",
+            stats.max_in_flight,
+            stages - stage
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// The balanced tower builder
+// ---------------------------------------------------------------------
+
+#[test]
+fn tower_whole_tape_round_trip() {
+    // The bench's balanced tower is a valid collective tape: forward
+    // produces [batch, 10] logits on the last stage, backward carries a
+    // cotangent home, and every affine block holds gradients afterwards.
+    let cfg = TowerConfig {
+        batch: 2,
+        width: 8,
+        depth: 2,
+    };
+    let grads_nonzero = Cluster::run(2, |comm| {
+        let rank = comm.rank();
+        let (net, plan) = affine_tower_pipeline::<f32>(&cfg, Arc::new(NativeKernels), 2, 0)?;
+        assert_eq!(plan.stages(), 2);
+        assert_eq!(plan.boundaries.len(), 1);
+        let mut state = net.init(rank, 3)?;
+        let x = (rank == 0).then(|| {
+            Tensor::from_vec(&[2, 8], (0..16).map(|v| v as f32 * 0.1 - 0.8).collect()).unwrap()
+        });
+        let logits = net.forward(&mut state, comm, x, true)?;
+        if rank == 1 {
+            assert_eq!(
+                logits.as_ref().expect("last stage holds logits").shape(),
+                &[2, 10]
+            );
+        }
+        state.zero_grads();
+        let dl = (rank == 1).then(|| Tensor::from_vec(&[2, 10], vec![0.1f32; 20]).unwrap());
+        net.backward(&mut state, comm, dl)?;
+        let nonzero = state
+            .states
+            .iter()
+            .flat_map(|ls| ls.grads.iter())
+            .filter(|g| g.data().iter().any(|v| *v != 0.0))
+            .count();
+        Ok(nonzero)
+    })
+    .unwrap();
+    // Each rank holds one w/b affine pair (stage 1 additionally the head).
+    assert!(grads_nonzero[0] >= 1, "stage 0 never accumulated gradients");
+    assert!(grads_nonzero[1] >= 2, "stage 1 never accumulated gradients");
+}
+
+#[test]
+fn tower_rejects_uneven_cuts() {
+    let cfg = TowerConfig {
+        batch: 2,
+        width: 8,
+        depth: 3,
+    };
+    assert!(affine_tower_pipeline::<f32>(&cfg, Arc::new(NativeKernels), 2, 0).is_err());
+}
