@@ -22,6 +22,11 @@
 //!   tower, with the measured per-stage bubble next to its analytic
 //!   `(S−1)/(S−1+m)` — the two schedules are bitwise-identical in
 //!   gradients, so the speedup is pure overlap;
+//! * **E16** times the 4-worker train step with no fault plan, with an
+//!   armed-but-never-firing plan (the fault engine consulted on every
+//!   delivery, zero injections), and under a light delay+duplicate chaos
+//!   plan — the armed row must sit within noise of the baseline with
+//!   `allocs/step` still zero;
 //! * the step table's `allocs/step` column counts fresh scratch-arena
 //!   allocations **plus registered comm-pool misses** per steady-state
 //!   step on rank 0 (warm-up excluded) — zero means every im2col/staging/
@@ -65,6 +70,7 @@ fn measure(
     batch: usize,
     forward_only: bool,
     iters: usize,
+    fault_plan: Option<&str>,
 ) -> (Stats, f64) {
     let data = SyntheticMnist::new(1, batch * 2);
     let batches = data.batches(batch);
@@ -77,6 +83,9 @@ fn measure(
         // the two warm-up steps below leave the pool genuinely warm and
         // the sampled steps see zero misses.
         comm.pool_reserve(distdl::coordinator::PIPELINE_POOL_DEPTH);
+        if let Some(spec) = fault_plan {
+            comm.set_fault_plan(Some(distdl::comm::faults::FaultPlan::parse(spec)?));
+        }
         let kernels = kernels_for(backend, "artifacts")?;
         let net = lenet5::<f32>(&cfg, kernels)?;
         let mut st = net.init(comm.rank(), 1)?;
@@ -415,9 +424,10 @@ fn backward_overlap_speedup(batch: usize, iters: usize, snap: &mut BenchSnapshot
         "schedule pair", "serialized", "overlapped", "speedup", "allocs/step"
     );
     set_adjoint_overlap(false);
-    let (serial, _) = measure(LeNetLayout::FourWorker, Backend::Native, batch, false, iters);
+    let (serial, _) = measure(LeNetLayout::FourWorker, Backend::Native, batch, false, iters, None);
     set_adjoint_overlap(true);
-    let (overlap, allocs) = measure(LeNetLayout::FourWorker, Backend::Native, batch, false, iters);
+    let (overlap, allocs) =
+        measure(LeNetLayout::FourWorker, Backend::Native, batch, false, iters, None);
     println!(
         "{:<34} {:>12} {:>12} {:>8.2}x {:>12.1}",
         "train-step median",
@@ -430,6 +440,47 @@ fn backward_overlap_speedup(batch: usize, iters: usize, snap: &mut BenchSnapshot
     snap.num("backward_overlap", "overlapped_median_s", overlap.median);
     snap.num("backward_overlap", "speedup", serial.median / overlap.median);
     snap.num("backward_overlap", "allocs_per_step", allocs);
+}
+
+/// E16: the fault layer's fault-free cost — the distributed train step
+/// with no plan, with an **armed-but-idle** plan (rules present so every
+/// delivery consults the engine, `p=0` so none ever fires), and under a
+/// light delay+duplicate chaos plan. The armed row must sit within noise
+/// of the baseline with `allocs/step` still zero — arming fault
+/// injection costs a hash per message, not a buffer.
+fn fault_overhead(batch: usize, iters: usize, snap: &mut BenchSnapshot) {
+    println!(
+        "\n== E16: fault machinery — armed-but-idle overhead on the train step (4 workers, native) =="
+    );
+    println!(
+        "{:<34} {:>12} {:>12} {:>12} {:>12}",
+        "fault plan", "mean", "median", "min", "allocs/step"
+    );
+    let rows: [(&str, Option<&str>); 3] = [
+        ("none", None),
+        ("armed, never fires (p=0)", Some("seed=1;delay:p=0.0,ms=2;dup:p=0.0")),
+        (
+            "delay+dup p=0.05",
+            Some("seed=2026;retry_ms=40;delay:p=0.05,ms=2;dup:p=0.05"),
+        ),
+    ];
+    for (label, plan) in rows {
+        let (stats, allocs) =
+            measure(LeNetLayout::FourWorker, Backend::Native, batch, false, iters, plan);
+        println!(
+            "{:<34} {:>12} {:>12} {:>12} {:>12.1}",
+            label,
+            fmt_time(stats.mean),
+            fmt_time(stats.median),
+            fmt_time(stats.min),
+            allocs
+        );
+        let row = format!("fault_overhead {label}");
+        snap.num(&row, "mean_s", stats.mean);
+        snap.num(&row, "median_s", stats.median);
+        snap.num(&row, "min_s", stats.min);
+        snap.num(&row, "allocs_per_step", allocs);
+    }
 }
 
 fn main() {
@@ -469,7 +520,8 @@ fn main() {
                         continue;
                     }
                 }
-                let (stats, allocs_per_step) = measure(layout, backend, batch, forward_only, iters);
+                let (stats, allocs_per_step) =
+                    measure(layout, backend, batch, forward_only, iters, None);
                 println!(
                     "{:<44} {:>12} {:>12} {:>12} {:>6} {:>12.1}",
                     name,
@@ -492,6 +544,7 @@ fn main() {
         backward_overlap_speedup(batch, iters, &mut snap);
         hybrid_dp_speedup(batch, iters, &mut snap);
         pipeline_speedup(batch, iters, &mut snap);
+        fault_overhead(batch, iters, &mut snap);
     }
     match snap.write() {
         Ok(path) => println!("\nsnapshot: {}", path.display()),

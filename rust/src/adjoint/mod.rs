@@ -98,7 +98,26 @@ pub fn adjoint_residual<T: Scalar>(
     op: &dyn DistLinearOp<T>,
     seed: u64,
 ) -> Result<f64> {
+    adjoint_residual_under(world, op, seed, None)
+}
+
+/// [`adjoint_residual`] with a deterministic [`FaultPlan`] installed on
+/// every endpoint before the collective runs (`None` = fault-free).
+///
+/// Because the engine resequences, deduplicates, and retransmits below
+/// the primitive layer, a plan of delays/duplicates/reorders/drops must
+/// leave the residual **bitwise identical** to the fault-free run — the
+/// chaos sweeps assert exactly that.
+pub fn adjoint_residual_under<T: Scalar>(
+    world: usize,
+    op: &dyn DistLinearOp<T>,
+    seed: u64,
+    plan: Option<&crate::comm::faults::FaultPlan>,
+) -> Result<f64> {
     let partials = Cluster::run(world, |comm| {
+        if let Some(p) = plan {
+            comm.set_fault_plan(Some(p.clone()));
+        }
         let rank = comm.rank();
         let mut rng = SplitMix64::new(seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15));
         let x = random_shard::<T>(&op.domain_shape(rank), &mut rng);

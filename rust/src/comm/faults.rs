@@ -1,0 +1,470 @@
+//! Seeded, deterministic fault injection for the comm engine.
+//!
+//! A [`FaultPlan`] describes misbehaviour to inject at the
+//! message-delivery seam of [`super::Comm`]: every message is judged
+//! *once*, on the receiving endpoint, the moment it is pulled off the
+//! channel — before sequencing, parking, or matching. The verdict is a
+//! pure hash of `(plan seed, rule index, receiver rank, source rank, tag,
+//! wire sequence number)`, so a plan is **fully deterministic**: the same
+//! plan over the same traffic injects exactly the same faults on every
+//! run, on any machine, regardless of thread timing. (Wall-clock effects
+//! — how long a delayed message is held — vary; *which* messages are
+//! delayed, dropped, duplicated, reordered, or truncated does not.)
+//!
+//! Plans come from two places:
+//!
+//! * the `PALLAS_FAULT_PLAN` environment variable, read once per
+//!   [`super::Cluster::run`] and installed on every endpoint — how the CI
+//!   chaos legs run the whole test suite under faults; or
+//! * programmatically via [`super::Comm::set_fault_plan`], which is what
+//!   the fault-tolerance tests and [`crate::config::TrainConfig::fault_plan`]
+//!   use (per-endpoint, immune to cross-test env races).
+//!
+//! ## Plan grammar
+//!
+//! A plan is a `;`-separated list of clauses:
+//!
+//! ```text
+//! seed=7; retry_ms=10; delay:p=0.1,ms=2; dup:p=0.05; drop:p=0.02,tag=40
+//! ```
+//!
+//! * `seed=N` — the plan's hash seed (default 0).
+//! * `retry_ms=N` — override the endpoints' retry/straggler threshold
+//!   (`0` disables retries); `timeout_ms=N` likewise overrides the fatal
+//!   receive deadline (`0` = no deadline). Both mirror the
+//!   `PALLAS_RETRY_TIMEOUT_MS` / `PALLAS_RECV_TIMEOUT_MS` variables so a
+//!   plan is self-contained: a chaos plan that drops messages can bound
+//!   its own recovery latency.
+//! * `kill:rank=R,step=K` — [`super::Comm::fault_step`] returns an error
+//!   on rank `R` at step `K` (the coordinator checks at the top of every
+//!   training step — the kill-at-step-k harness for checkpoint/resume).
+//! * fault rules `kind:arg=value,...` with kinds `delay`, `drop`, `dup`
+//!   (or `duplicate`), `reorder`, `truncate` and arguments:
+//!   `p` (probability in `[0,1]`, default 1), `src`/`dst`/`tag` (match
+//!   filters; absent = match any), `ms` (hold time for delay/reorder).
+//!
+//! Rules are evaluated in plan order; the **first matching rule whose
+//! probability draw fires wins** — later rules never see that message.
+//! Whitespace around clauses, keys, and values is ignored.
+
+use crate::error::{Error, Result};
+use crate::util::rng::SplitMix64;
+
+/// Environment variable carrying a fault plan for every endpoint of every
+/// [`super::Cluster::run`] in the process (the CI chaos-leg hook).
+pub const FAULT_PLAN_ENV: &str = "PALLAS_FAULT_PLAN";
+
+/// The kinds of misbehaviour a [`FaultRule`] can inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Hold the message back for `ms` milliseconds before delivering it.
+    Delay,
+    /// Withhold the message entirely; it is recovered only by the
+    /// receiver's bounded retransmit path (a simulated retransmission).
+    Drop,
+    /// Deliver the message twice; the sequence layer must suppress the
+    /// second copy.
+    Duplicate,
+    /// Hold the message briefly (default 1 ms) so later traffic on the
+    /// same stream overtakes it — exercises the out-of-order resequencer.
+    Reorder,
+    /// Deliver a corrupted copy (wire bytes with the tail cut off); the
+    /// pristine payload is recoverable through the retransmit path when
+    /// the receiver's length check rejects the corrupted copy.
+    Truncate,
+}
+
+/// One fault rule: a kind, a firing probability, and optional match
+/// filters over source rank, destination (receiver) rank, and tag.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    /// What to inject.
+    pub kind: FaultKind,
+    /// Probability the rule fires for a matching message, in `[0, 1]`.
+    pub p: f64,
+    /// Only messages from this source rank (any if `None`).
+    pub src: Option<usize>,
+    /// Only messages delivered to this receiver rank (any if `None`).
+    pub dst: Option<usize>,
+    /// Only messages with this tag (any if `None`).
+    pub tag: Option<u64>,
+    /// Hold duration in milliseconds (delay/reorder).
+    pub ms: u64,
+}
+
+impl FaultRule {
+    fn matches(&self, dst: usize, src: usize, tag: u64) -> bool {
+        self.src.is_none_or(|s| s == src)
+            && self.dst.is_none_or(|d| d == dst)
+            && self.tag.is_none_or(|t| t == tag)
+    }
+}
+
+/// A scheduled rank death: [`super::Comm::fault_step`] errors on `rank`
+/// when the coordinator reaches `step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillRule {
+    /// World rank to kill.
+    pub rank: usize,
+    /// Training step at which it dies.
+    pub step: u64,
+}
+
+/// The verdict for one message (see [`FaultPlan::decide`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Deliver normally.
+    Deliver,
+    /// Hold for the given number of milliseconds.
+    Delay(u64),
+    /// Withhold until retransmitted.
+    Drop,
+    /// Deliver twice.
+    Duplicate,
+    /// Hold briefly so the stream reorders.
+    Reorder(u64),
+    /// Deliver a corrupted copy, keep the pristine one for retransmit.
+    Truncate,
+}
+
+/// A complete, seeded fault plan (see the module docs for the grammar).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Hash seed for the per-message probability draws.
+    pub seed: u64,
+    /// Fault rules, evaluated in order; first firing match wins.
+    pub rules: Vec<FaultRule>,
+    /// Scheduled rank deaths.
+    pub kills: Vec<KillRule>,
+    /// Optional retry/straggler threshold override in milliseconds
+    /// (`Some(0)` disables retries).
+    pub retry_ms: Option<u64>,
+    /// Optional fatal receive-deadline override in milliseconds
+    /// (`Some(0)` = no deadline).
+    pub timeout_ms: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Whether the plan injects or kills anything at all.
+    pub fn is_active(&self) -> bool {
+        !self.rules.is_empty() || !self.kills.is_empty()
+    }
+
+    /// Judge one message delivered to receiver `dst` from `src` with
+    /// `tag` and wire sequence number `seq`. Pure: the same arguments
+    /// always produce the same verdict.
+    pub fn decide(&self, dst: usize, src: usize, tag: u64, seq: u64) -> Verdict {
+        for (i, rule) in self.rules.iter().enumerate() {
+            if !rule.matches(dst, src, tag) {
+                continue;
+            }
+            let draw = if rule.p >= 1.0 {
+                0.0
+            } else {
+                // One independent, reproducible stream per
+                // (rule, message) pair: hash the identifying tuple into
+                // a SplitMix64 seed and take a single uniform draw.
+                let mut h = self
+                    .seed
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add(i as u64);
+                h ^= (dst as u64).wrapping_mul(0xA24BAED4963EE407);
+                h ^= (src as u64).wrapping_mul(0x9FB21C651E98DF25);
+                h ^= tag.wrapping_mul(0xD1B54A32D192ED03);
+                h ^= seq.wrapping_mul(0x2545F4914F6CDD1D);
+                SplitMix64::new(h).next_f64()
+            };
+            if draw < rule.p {
+                return match rule.kind {
+                    FaultKind::Delay => Verdict::Delay(rule.ms),
+                    FaultKind::Drop => Verdict::Drop,
+                    FaultKind::Duplicate => Verdict::Duplicate,
+                    FaultKind::Reorder => Verdict::Reorder(rule.ms),
+                    FaultKind::Truncate => Verdict::Truncate,
+                };
+            }
+        }
+        Verdict::Deliver
+    }
+
+    /// Whether the plan kills `rank` at `step`.
+    pub fn kills_at(&self, rank: usize, step: u64) -> bool {
+        self.kills.iter().any(|k| k.rank == rank && k.step == step)
+    }
+
+    /// Parse the plan grammar (see the module docs). Errors name the
+    /// offending clause so a typo'd plan fails loudly instead of silently
+    /// injecting nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (head, args) = match clause.split_once(':') {
+                Some((h, a)) => (h.trim(), a),
+                None => {
+                    // No `:` — a top-level `key=value` clause.
+                    let (k, v) = clause.split_once('=').ok_or_else(|| {
+                        Error::Config(format!(
+                            "fault plan clause `{clause}`: expected `kind:args` or `key=value`"
+                        ))
+                    })?;
+                    match k.trim() {
+                        "seed" => plan.seed = parse_num(clause, v)?,
+                        "retry_ms" => plan.retry_ms = Some(parse_num(clause, v)?),
+                        "timeout_ms" => plan.timeout_ms = Some(parse_num(clause, v)?),
+                        other => {
+                            return Err(Error::Config(format!(
+                                "fault plan clause `{clause}`: unknown setting `{other}`"
+                            )))
+                        }
+                    }
+                    continue;
+                }
+            };
+            if head == "kill" {
+                let mut rank = None;
+                let mut step = None;
+                for (k, v) in parse_args(clause, args)? {
+                    match k.as_str() {
+                        "rank" => rank = Some(parse_num(clause, &v)? as usize),
+                        "step" => step = Some(parse_num(clause, &v)?),
+                        _ => {
+                            return Err(Error::Config(format!(
+                                "fault plan clause `{clause}`: unknown kill argument `{k}`"
+                            )))
+                        }
+                    }
+                }
+                match (rank, step) {
+                    (Some(rank), Some(step)) => plan.kills.push(KillRule { rank, step }),
+                    _ => {
+                        return Err(Error::Config(format!(
+                            "fault plan clause `{clause}`: kill needs rank= and step="
+                        )))
+                    }
+                }
+                continue;
+            }
+            let kind = match head {
+                "delay" => FaultKind::Delay,
+                "drop" => FaultKind::Drop,
+                "dup" | "duplicate" => FaultKind::Duplicate,
+                "reorder" => FaultKind::Reorder,
+                "truncate" => FaultKind::Truncate,
+                other => {
+                    return Err(Error::Config(format!(
+                        "fault plan clause `{clause}`: unknown fault kind `{other}`"
+                    )))
+                }
+            };
+            let mut rule = FaultRule {
+                kind,
+                p: 1.0,
+                src: None,
+                dst: None,
+                tag: None,
+                ms: match kind {
+                    FaultKind::Delay => 2,
+                    FaultKind::Reorder => 1,
+                    _ => 0,
+                },
+            };
+            for (k, v) in parse_args(clause, args)? {
+                match k.as_str() {
+                    "p" => {
+                        let p: f64 = v.parse().map_err(|_| {
+                            Error::Config(format!(
+                                "fault plan clause `{clause}`: bad probability `{v}`"
+                            ))
+                        })?;
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(Error::Config(format!(
+                                "fault plan clause `{clause}`: probability {p} outside [0, 1]"
+                            )));
+                        }
+                        rule.p = p;
+                    }
+                    "src" => rule.src = Some(parse_num(clause, &v)? as usize),
+                    "dst" => rule.dst = Some(parse_num(clause, &v)? as usize),
+                    "tag" => rule.tag = Some(parse_num(clause, &v)?),
+                    "ms" => rule.ms = parse_num(clause, &v)?,
+                    _ => {
+                        return Err(Error::Config(format!(
+                            "fault plan clause `{clause}`: unknown argument `{k}`"
+                        )))
+                    }
+                }
+            }
+            plan.rules.push(rule);
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_num(clause: &str, v: &str) -> Result<u64> {
+    v.trim()
+        .parse::<u64>()
+        .map_err(|_| Error::Config(format!("fault plan clause `{clause}`: bad number `{v}`")))
+}
+
+fn parse_args(clause: &str, args: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for pair in args.split(',') {
+        let pair = pair.trim();
+        if pair.is_empty() {
+            continue;
+        }
+        match pair.split_once('=') {
+            Some((k, v)) => out.push((k.trim().to_string(), v.trim().to_string())),
+            None => {
+                return Err(Error::Config(format!(
+                    "fault plan clause `{clause}`: expected `key=value`, got `{pair}`"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The fault plan configured by `PALLAS_FAULT_PLAN`, if any. A malformed
+/// plan warns on stderr and injects nothing (env knobs must never turn a
+/// typo into changed behaviour); programmatic plans go through
+/// [`FaultPlan::parse`] and error instead.
+pub fn configured_fault_plan() -> Option<FaultPlan> {
+    let raw = std::env::var(FAULT_PLAN_ENV).ok()?;
+    if raw.trim().is_empty() {
+        return None;
+    }
+    match FaultPlan::parse(&raw) {
+        Ok(plan) => plan.is_active().then_some(plan),
+        Err(e) => {
+            eprintln!("warning: ignoring malformed {FAULT_PLAN_ENV}: {e}");
+            None
+        }
+    }
+}
+
+/// Per-endpoint injection/recovery counters, surfaced as `fault_*`
+/// MetricLog keys and on [`super::CommStats::faults`]. All of the
+/// `injected_*` counters are receiver-side (faults are judged at
+/// delivery); the retry/straggler counters are the endpoint's own
+/// watchdog observations.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct FaultStats {
+    /// Messages held back by a delay rule.
+    pub injected_delays: usize,
+    /// Messages withheld by a drop rule (recovered via retransmit).
+    pub injected_drops: usize,
+    /// Messages delivered twice by a duplicate rule.
+    pub injected_dups: usize,
+    /// Messages held back by a reorder rule.
+    pub injected_reorders: usize,
+    /// Messages corrupted by a truncate rule.
+    pub injected_truncations: usize,
+    /// Duplicate deliveries suppressed by the wire-sequence layer.
+    pub dups_suppressed: usize,
+    /// Retry-threshold firings while blocked on a receive (each one
+    /// re-examines the stream and, when something is withheld, triggers a
+    /// retransmission).
+    pub retries: usize,
+    /// Withheld payloads recovered through the retransmit path (dropped
+    /// messages re-delivered, truncated payloads replaced by their
+    /// pristine copy).
+    pub retransmits: usize,
+    /// Blocked receives that outlived at least one retry threshold — the
+    /// straggler count of the progress watchdog.
+    pub stragglers: usize,
+    /// Abandoned-request messages swept on arrival (their payloads
+    /// dropped so registered buffers return to their sender's pool).
+    pub abandoned_swept: usize,
+    /// Longest single blocked receive observed, in seconds.
+    pub max_stall_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse(
+            "seed=7; retry_ms=10; timeout_ms=0; delay:p=0.1,ms=20; dup:p=0.5,src=1,dst=0; \
+             drop:tag=40; reorder:; truncate:p=0.25; kill:rank=2,step=5",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.retry_ms, Some(10));
+        assert_eq!(plan.timeout_ms, Some(0));
+        assert_eq!(plan.rules.len(), 5);
+        assert_eq!(plan.rules[0].kind, FaultKind::Delay);
+        assert_eq!(plan.rules[0].ms, 20);
+        assert_eq!(plan.rules[1].kind, FaultKind::Duplicate);
+        assert_eq!((plan.rules[1].src, plan.rules[1].dst), (Some(1), Some(0)));
+        assert_eq!(plan.rules[2].tag, Some(40));
+        assert_eq!(plan.rules[2].p, 1.0);
+        assert_eq!(plan.rules[3].kind, FaultKind::Reorder);
+        assert_eq!(plan.rules[3].ms, 1);
+        assert_eq!(plan.rules[4].kind, FaultKind::Truncate);
+        assert_eq!(plan.kills, vec![KillRule { rank: 2, step: 5 }]);
+        assert!(plan.is_active());
+        assert!(plan.kills_at(2, 5));
+        assert!(!plan.kills_at(2, 4));
+        assert!(!plan.kills_at(1, 5));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("explode:p=1").is_err());
+        assert!(FaultPlan::parse("delay").is_err());
+        assert!(FaultPlan::parse("delay:p=2.0").is_err());
+        assert!(FaultPlan::parse("delay:p=oops").is_err());
+        assert!(FaultPlan::parse("delay:wat=1").is_err());
+        assert!(FaultPlan::parse("kill:rank=1").is_err());
+        assert!(FaultPlan::parse("seed=abc").is_err());
+        assert!(FaultPlan::parse("delay:p").is_err());
+        // The empty plan parses and is inert.
+        let empty = FaultPlan::parse("").unwrap();
+        assert!(!empty.is_active());
+        assert_eq!(empty, FaultPlan::default());
+    }
+
+    #[test]
+    fn decide_is_deterministic_and_seed_sensitive() {
+        let plan = FaultPlan::parse("seed=3;drop:p=0.5").unwrap();
+        let verdicts: Vec<Verdict> = (0..64).map(|s| plan.decide(0, 1, 9, s)).collect();
+        let again: Vec<Verdict> = (0..64).map(|s| plan.decide(0, 1, 9, s)).collect();
+        assert_eq!(verdicts, again, "verdicts must be pure");
+        let drops = verdicts.iter().filter(|v| **v == Verdict::Drop).count();
+        assert!(drops > 5 && drops < 60, "p=0.5 over 64 draws, got {drops}");
+        // A different seed reshuffles the outcome pattern.
+        let other = FaultPlan::parse("seed=4;drop:p=0.5").unwrap();
+        let reseeded: Vec<Verdict> = (0..64).map(|s| other.decide(0, 1, 9, s)).collect();
+        assert_ne!(verdicts, reseeded);
+    }
+
+    #[test]
+    fn first_matching_rule_wins_and_filters_apply() {
+        let plan = FaultPlan::parse("drop:tag=1;delay:tag=1,ms=9;dup:src=2").unwrap();
+        assert_eq!(plan.decide(0, 1, 1, 0), Verdict::Drop);
+        assert_eq!(plan.decide(0, 2, 3, 0), Verdict::Duplicate);
+        assert_eq!(plan.decide(0, 1, 3, 0), Verdict::Deliver);
+        // p=1 rules fire on every matching message.
+        for seq in 0..8 {
+            assert_eq!(plan.decide(5, 1, 1, seq), Verdict::Drop);
+        }
+    }
+
+    #[test]
+    fn inert_env_values_are_ignored() {
+        // configured_fault_plan reads the process env; with the variable
+        // unset in the test harness it must report no plan. (Value-bearing
+        // cases are covered via FaultPlan::parse above — mutating the
+        // process env would race other tests.)
+        if std::env::var(FAULT_PLAN_ENV).is_err() {
+            assert!(configured_fault_plan().is_none());
+        }
+    }
+}

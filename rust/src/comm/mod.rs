@@ -110,41 +110,132 @@
 //! * [`Comm::barrier`] is a full-world barrier;
 //! * the blocking API ([`Comm::send_slice`], [`Comm::recv_vec`],
 //!   [`Comm::sendrecv`]) survives as thin wrappers over the request engine.
+//!
+//! ## Failure model
+//!
+//! The engine is built to survive the failure modes a real transport has,
+//! and to make them reproducible ([`faults`] injects them from a seeded
+//! plan at the delivery seam — `PALLAS_FAULT_PLAN` or
+//! [`Comm::set_fault_plan`]):
+//!
+//! * **Sequence numbers.** Every message carries a per-`(sender, tag)`
+//!   wire sequence number; the receiver resequences arrivals before
+//!   matching, so duplicated deliveries are suppressed (retransmission is
+//!   idempotent) and reordered deliveries are buffered until the gap
+//!   fills — FIFO survives a misbehaving transport.
+//! * **What is retried.** A blocked receive has two clocks: a *retry
+//!   threshold* (`PALLAS_RETRY_TIMEOUT_MS`, exponential backoff, at most
+//!   `PALLAS_MAX_RETRANSMITS` recovery attempts) that counts stragglers
+//!   and triggers retransmission of withheld payloads, and a *fatal
+//!   deadline* (`PALLAS_RECV_TIMEOUT_MS`; `0` = no deadline — matching
+//!   the `0` = uncapped cap convention) after which the receive fails.
+//!   A payload whose corruption is caught by the wire length check is
+//!   recovered from its pristine retransmit copy transparently.
+//! * **What is fatal.** A receive that outlives its fatal deadline, a
+//!   send to a vanished world, and a rank scheduled to die by a
+//!   `kill:rank=R,step=K` plan clause ([`Comm::fault_step`]). On the
+//!   fatal path the request is *abandoned, not leaked*: its message —
+//!   arrived, in flight, or withheld — is swept on arrival and dropped,
+//!   so a registered [`Payload::Pooled`] buffer still returns to its
+//!   sender's pool, and a retried request on the same stream matches the
+//!   retransmitted payload, not the stale one.
+//! * **Health surfacing.** [`CommStats::faults`]
+//!   ([`faults::FaultStats`]) counts injected faults, retries,
+//!   retransmissions, suppressed duplicates, stragglers, swept
+//!   abandons, and the longest stall — the coordinator publishes them as
+//!   `fault_*` MetricLog keys. What checkpointing covers on top of this
+//!   is described in [`crate::coordinator`] and [`crate::checkpoint`].
+
+pub mod faults;
 
 use crate::error::{Error, Result};
 use crate::tensor::{Scalar, Tensor};
 use crate::util::env::{parse_u64, EnvNum};
+use faults::{FaultPlan, FaultStats, Verdict};
 use std::any::{Any, TypeId};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::marker::PhantomData;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
-/// Default receive timeout in milliseconds — generous, but converts a
-/// deadlock (the classic distributed-programming failure mode) into an
+/// Default fatal receive deadline in milliseconds — generous, but converts
+/// a deadlock (the classic distributed-programming failure mode) into an
 /// error instead of a hang. Short under `cfg(test)` so a deadlocked unit
 /// test fails in seconds. Overridable via the `PALLAS_RECV_TIMEOUT_MS`
-/// environment variable (read once per [`Cluster::run`]).
+/// environment variable (read once per [`Cluster::run`]); an explicit `0`
+/// means **no deadline**, consistent with the crate-wide `0` = uncapped
+/// convention for caps.
 const DEFAULT_RECV_TIMEOUT_MS: u64 = if cfg!(test) { 5_000 } else { 60_000 };
 
-/// Environment variable overriding the receive timeout (milliseconds).
+/// Environment variable overriding the fatal receive deadline
+/// (milliseconds; `0` = no deadline).
 pub const RECV_TIMEOUT_ENV: &str = "PALLAS_RECV_TIMEOUT_MS";
 
 /// Parse a `PALLAS_RECV_TIMEOUT_MS` value through the shared
-/// [`crate::util::env`] parser, falling back to the default on absence,
-/// garbage, or zero.
-fn parse_recv_timeout(raw: Option<&str>) -> Duration {
-    let ms = match parse_u64(RECV_TIMEOUT_ENV, raw) {
-        EnvNum::Value(ms) if ms > 0 => ms,
-        _ => DEFAULT_RECV_TIMEOUT_MS,
-    };
-    Duration::from_millis(ms)
+/// [`crate::util::env`] parser: absence or garbage falls back to the
+/// default, an explicit `0` disables the deadline (`None`).
+fn parse_recv_timeout(raw: Option<&str>) -> Option<Duration> {
+    match parse_u64(RECV_TIMEOUT_ENV, raw) {
+        EnvNum::Value(0) => None,
+        EnvNum::Value(ms) => Some(Duration::from_millis(ms)),
+        EnvNum::Unset | EnvNum::Malformed => Some(Duration::from_millis(DEFAULT_RECV_TIMEOUT_MS)),
+    }
 }
 
-/// The receive timeout currently configured by the environment.
-pub fn configured_recv_timeout() -> Duration {
+/// The fatal receive deadline currently configured by the environment
+/// (`None` = no deadline).
+pub fn configured_recv_timeout() -> Option<Duration> {
     parse_recv_timeout(std::env::var(RECV_TIMEOUT_ENV).ok().as_deref())
+}
+
+/// Default retry/straggler threshold in milliseconds: how long a blocked
+/// receive waits before it counts itself stalled, bumps the retry
+/// counters, and asks the fault layer to retransmit anything withheld on
+/// its stream. Backoff doubles per firing (capped at 2^6 x the base), so
+/// an idle wait does not busy-poll.
+const DEFAULT_RETRY_TIMEOUT_MS: u64 = if cfg!(test) { 250 } else { 2_000 };
+
+/// Environment variable overriding the retry/straggler threshold
+/// (milliseconds; `0` disables retries and the straggler watchdog).
+pub const RETRY_TIMEOUT_ENV: &str = "PALLAS_RETRY_TIMEOUT_MS";
+
+/// Parse a `PALLAS_RETRY_TIMEOUT_MS` value: absence or garbage falls back
+/// to the default, an explicit `0` disables retries (`None`).
+fn parse_retry_timeout(raw: Option<&str>) -> Option<Duration> {
+    match parse_u64(RETRY_TIMEOUT_ENV, raw) {
+        EnvNum::Value(0) => None,
+        EnvNum::Value(ms) => Some(Duration::from_millis(ms)),
+        EnvNum::Unset | EnvNum::Malformed => {
+            Some(Duration::from_millis(DEFAULT_RETRY_TIMEOUT_MS))
+        }
+    }
+}
+
+/// The retry threshold currently configured by the environment.
+fn configured_retry_timeout() -> Option<Duration> {
+    parse_retry_timeout(std::env::var(RETRY_TIMEOUT_ENV).ok().as_deref())
+}
+
+/// Default bound on recovery (retransmission) attempts per blocked
+/// receive. Retry firings past the bound still count stragglers; they
+/// just stop asking for retransmissions.
+const DEFAULT_MAX_RETRANSMITS: u32 = 8;
+
+/// Environment variable overriding the retransmission bound.
+pub const MAX_RETRANSMITS_ENV: &str = "PALLAS_MAX_RETRANSMITS";
+
+/// Parse a `PALLAS_MAX_RETRANSMITS` value (absence/garbage = default).
+fn parse_max_retransmits(raw: Option<&str>) -> u32 {
+    match parse_u64(MAX_RETRANSMITS_ENV, raw) {
+        EnvNum::Value(n) => n.min(u32::MAX as u64) as u32,
+        EnvNum::Unset | EnvNum::Malformed => DEFAULT_MAX_RETRANSMITS,
+    }
+}
+
+/// The retransmission bound currently configured by the environment.
+fn configured_max_retransmits() -> u32 {
+    parse_max_retransmits(std::env::var(MAX_RETRANSMITS_ENV).ok().as_deref())
 }
 
 /// Environment variable capping the bytes each endpoint's registered
@@ -566,11 +657,62 @@ impl Body {
     }
 }
 
-/// A tagged message in flight.
+/// A tagged message in flight. `seq` is the per-`(sender, tag)` wire
+/// sequence number the receiver resequences on: duplicates are
+/// suppressed, reordered arrivals buffered until the gap fills.
 struct Message {
     src: usize,
     tag: u64,
+    seq: u64,
     body: Body,
+}
+
+/// Clone a message body — the fault layer's duplicate injection. Typed
+/// bodies clone only the `Arc` (a pooled payload's registration stays
+/// shared, so suppression of the copy cannot double-return the buffer).
+fn clone_body(b: &Body) -> Body {
+    match b {
+        Body::Bytes(v) => Body::Bytes(v.clone()),
+        Body::Typed(t) => Body::Typed(TypedBody {
+            len: t.len,
+            wire_size: t.wire_size,
+            data: t.data.clone(),
+            to_wire: t.to_wire,
+        }),
+    }
+}
+
+/// Render a body as wire bytes (the fault layer's truncation corrupts a
+/// copy of this rendering; the length check catches it on decode).
+fn wire_bytes_of(b: &Body) -> Vec<u8> {
+    match b {
+        Body::Bytes(v) => v.clone(),
+        Body::Typed(t) => (t.to_wire)(&t.data),
+    }
+}
+
+/// Receiver-side fault state: the seeded plan plus whatever it is
+/// currently withholding (see [`faults`] for the model).
+struct FaultEngine {
+    plan: FaultPlan,
+    /// Messages held back by delay/reorder verdicts, with their release
+    /// deadlines.
+    delayed: Vec<(Instant, Message)>,
+    /// Withheld payloads by stream and wire sequence: dropped messages
+    /// (sequence at or past the stream's resequencer cursor) awaiting
+    /// retransmission, and pristine copies of truncated messages
+    /// (sequence behind the cursor) awaiting decode-failure recovery.
+    limbo: HashMap<(usize, u64), BTreeMap<u64, Body>>,
+}
+
+impl FaultEngine {
+    fn new(plan: FaultPlan) -> Self {
+        FaultEngine {
+            plan,
+            delayed: Vec::new(),
+            limbo: HashMap::new(),
+        }
+    }
 }
 
 /// Per-rank traffic counters (used by benches and the coordinator's metric
@@ -597,6 +739,10 @@ pub struct CommStats {
     pub wait_time_s: f64,
     /// Registered buffer-pool counters (`comm_pool_*` on the MetricLog).
     pub pool: CommPoolStats,
+    /// Fault-injection and recovery counters (`fault_*` on the
+    /// MetricLog): injected faults, retries, retransmissions, suppressed
+    /// duplicates, stragglers, swept abandons, longest stall.
+    pub faults: FaultStats,
 }
 
 /// Handle for a posted nonblocking send.
@@ -665,13 +811,32 @@ pub struct Comm {
     next_posted: HashMap<(usize, u64), u64>,
     /// Next arrival sequence number per `(source, tag)`.
     next_arrived: HashMap<(usize, u64), u64>,
+    /// Next outbound wire sequence number per `(destination, tag)`.
+    next_send: HashMap<(usize, u64), u64>,
+    /// Receiver resequencer cursor: next expected wire sequence per
+    /// `(source, tag)` stream. Arrivals behind the cursor are duplicates
+    /// (suppressed); arrivals past it wait in `ooo` until the gap fills.
+    next_wire: HashMap<(usize, u64), u64>,
+    /// Out-of-order arrivals held until their wire-sequence gap fills.
+    ooo: HashMap<(usize, u64), BTreeMap<u64, Body>>,
+    /// Arrival sequence numbers owed to abandoned requests: the matching
+    /// message is discarded at promotion (dropping the payload returns a
+    /// registered buffer to its sender's pool).
+    discard: HashSet<(usize, u64, u64)>,
     /// Outstanding receive requests right now.
     in_flight: usize,
     /// Force every payload through the serialized wire format (bench knob).
     wire_format: bool,
     /// Registered message-buffer pool (see the module docs).
     pool: BufferPool,
-    recv_timeout: Duration,
+    /// Fatal per-receive deadline (`None` = wait forever).
+    recv_timeout: Option<Duration>,
+    /// Retry/straggler threshold (`None` = no retries, no watchdog).
+    retry_timeout: Option<Duration>,
+    /// Bound on retransmission-recovery attempts per blocked receive.
+    max_retransmits: u32,
+    /// Installed fault plan and its withheld messages, if any.
+    faults: Option<FaultEngine>,
     barrier: Arc<Barrier>,
     stats: CommStats,
 }
@@ -713,6 +878,93 @@ impl Comm {
     /// Whether the serialized wire format is currently forced.
     pub fn wire_format(&self) -> bool {
         self.wire_format
+    }
+
+    // ------------------------------------------------------------------
+    // Failure-model knobs (see the module docs)
+    // ------------------------------------------------------------------
+
+    /// Override the fatal per-receive deadline (`None` = wait forever).
+    /// The initial value comes from `PALLAS_RECV_TIMEOUT_MS` at cluster
+    /// launch; tests use this setter because endpoints are per-thread
+    /// while the environment is process-global.
+    pub fn set_recv_timeout(&mut self, deadline: Option<Duration>) {
+        self.recv_timeout = deadline;
+    }
+
+    /// The fatal per-receive deadline currently in force.
+    pub fn recv_timeout(&self) -> Option<Duration> {
+        self.recv_timeout
+    }
+
+    /// Override the retry/straggler threshold (`None` disables retries
+    /// and the progress watchdog). Initial value:
+    /// `PALLAS_RETRY_TIMEOUT_MS`.
+    pub fn set_retry_timeout(&mut self, threshold: Option<Duration>) {
+        self.retry_timeout = threshold;
+    }
+
+    /// Override the bound on retransmission-recovery attempts per
+    /// blocked receive. Initial value: `PALLAS_MAX_RETRANSMITS`.
+    pub fn set_max_retransmits(&mut self, bound: u32) {
+        self.max_retransmits = bound;
+    }
+
+    /// Install (or clear) a fault plan on this endpoint. Anything a
+    /// previous plan still withholds is released first so no payload is
+    /// stranded by reconfiguration. A plan carrying `retry_ms=` /
+    /// `timeout_ms=` overrides applies them to this endpoint's retry
+    /// threshold and fatal deadline.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        if let Some(eng) = self.faults.take() {
+            let FaultEngine { delayed, limbo, .. } = eng;
+            let mut held: Vec<Message> = delayed.into_iter().map(|(_, m)| m).collect();
+            for ((src, tag), q) in limbo {
+                let cursor = *self.next_wire.get(&(src, tag)).unwrap_or(&0);
+                for (seq, body) in q {
+                    // Stale pristine copies of already-delivered
+                    // truncated messages just drop (the buffer returns
+                    // home); undelivered payloads are released.
+                    if seq >= cursor {
+                        held.push(Message {
+                            src,
+                            tag,
+                            seq,
+                            body,
+                        });
+                    }
+                }
+            }
+            held.sort_by_key(|m| (m.src, m.tag, m.seq));
+            for m in held {
+                self.resequence(m);
+            }
+        }
+        self.faults = plan.map(FaultEngine::new);
+        if let Some(eng) = self.faults.as_ref() {
+            if let Some(ms) = eng.plan.retry_ms {
+                self.retry_timeout = (ms > 0).then(|| Duration::from_millis(ms));
+            }
+            if let Some(ms) = eng.plan.timeout_ms {
+                self.recv_timeout = (ms > 0).then(|| Duration::from_millis(ms));
+            }
+        }
+    }
+
+    /// The kill-switch half of the fault plan: the coordinator calls this
+    /// at the top of every training step, and a `kill:rank=R,step=K`
+    /// clause matching this rank and `step` turns into an error — the
+    /// deterministic stand-in for a rank dying mid-run.
+    pub fn fault_step(&mut self, step: u64) -> Result<()> {
+        if let Some(eng) = self.faults.as_ref() {
+            if eng.plan.kills_at(self.rank, step) {
+                return Err(Error::Comm(format!(
+                    "rank {} killed by fault plan at step {step}",
+                    self.rank
+                )));
+            }
+        }
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -830,10 +1082,14 @@ impl Comm {
         if matches!(body, Body::Bytes(_)) {
             self.stats.wire_msgs += 1;
         }
+        let slot = self.next_send.entry((dst, tag)).or_insert(0);
+        let seq = *slot;
+        *slot += 1;
         self.senders[dst]
             .send(Message {
                 src: self.rank,
                 tag,
+                seq,
                 body,
             })
             .map_err(|_| Error::Comm(format!("rank {dst} disconnected")))
@@ -1052,54 +1308,384 @@ impl Comm {
     }
 
     /// Assign the next unmatched arrival for `(src, tag)` its sequence
-    /// number, moving it from the parked mailbox into the ready store.
+    /// number, moving it from the parked mailbox into the ready store —
+    /// unless that sequence number is owed to an abandoned request, in
+    /// which case the message is discarded (the payload drop returns any
+    /// registered buffer to its sender) and the next one is tried.
+    /// Returns whether an arrival was promoted into `ready`.
     fn promote_parked(&mut self, src: usize, tag: u64) -> bool {
-        if let Some(q) = self.parked.get_mut(&(src, tag)) {
-            if let Some(body) = q.pop_front() {
-                let slot = self.next_arrived.entry((src, tag)).or_insert(0);
-                let seq = *slot;
-                *slot += 1;
-                self.ready.insert((src, tag, seq), body);
-                return true;
+        loop {
+            let body = match self.parked.get_mut(&(src, tag)).and_then(|q| q.pop_front()) {
+                Some(body) => body,
+                None => return false,
+            };
+            let slot = self.next_arrived.entry((src, tag)).or_insert(0);
+            let seq = *slot;
+            *slot += 1;
+            if self.discard.remove(&(src, tag, seq)) {
+                self.stats.faults.abandoned_swept += 1;
+                continue;
             }
+            self.ready.insert((src, tag, seq), body);
+            return true;
         }
-        false
     }
 
-    /// Park everything currently sitting in the inbox without blocking.
-    fn drain_inbox(&mut self) {
+    /// Park a resequenced body at the tail of its stream's mailbox.
+    fn park_in_order(&mut self, src: usize, tag: u64, body: Body) {
+        self.parked.entry((src, tag)).or_default().push_back(body);
+    }
+
+    /// Feed one transport arrival through the wire-sequence layer:
+    /// duplicates (sequence behind the stream cursor) are suppressed,
+    /// early arrivals wait in the out-of-order buffer, and the in-order
+    /// prefix — the arrival plus whatever it unblocks — parks in FIFO
+    /// order. After this, parked order per stream equals wire-sequence
+    /// order, so arrival sequence numbers equal wire sequence numbers.
+    fn resequence(&mut self, msg: Message) {
+        let key = (msg.src, msg.tag);
+        let expected = *self.next_wire.get(&key).unwrap_or(&0);
+        if msg.seq < expected {
+            self.stats.faults.dups_suppressed += 1;
+            return;
+        }
+        if msg.seq > expected {
+            let held = self.ooo.entry(key).or_default().insert(msg.seq, msg.body);
+            if held.is_some() {
+                self.stats.faults.dups_suppressed += 1;
+            }
+            return;
+        }
+        let mut next = expected;
+        let mut body = Some(msg.body);
+        loop {
+            let b = match body.take() {
+                Some(b) => b,
+                None => match self.ooo.get_mut(&key).and_then(|q| q.remove(&next)) {
+                    Some(b) => b,
+                    None => break,
+                },
+            };
+            self.park_in_order(key.0, key.1, b);
+            next += 1;
+        }
+        self.next_wire.insert(key, next);
+    }
+
+    /// Judge one transport arrival against the installed fault plan and
+    /// act on the verdict; without a plan this is a straight resequence.
+    fn deliver(&mut self, msg: Message) {
+        let verdict = match self.faults.as_ref() {
+            Some(eng) => eng.plan.decide(self.rank, msg.src, msg.tag, msg.seq),
+            None => Verdict::Deliver,
+        };
+        match verdict {
+            Verdict::Deliver => self.resequence(msg),
+            Verdict::Delay(ms) | Verdict::Reorder(ms) => {
+                if matches!(verdict, Verdict::Delay(_)) {
+                    self.stats.faults.injected_delays += 1;
+                } else {
+                    self.stats.faults.injected_reorders += 1;
+                }
+                let until = Instant::now() + Duration::from_millis(ms);
+                self.faults
+                    .as_mut()
+                    .expect("verdict implies an installed plan")
+                    .delayed
+                    .push((until, msg));
+            }
+            Verdict::Drop => {
+                self.stats.faults.injected_drops += 1;
+                self.faults
+                    .as_mut()
+                    .expect("verdict implies an installed plan")
+                    .limbo
+                    .entry((msg.src, msg.tag))
+                    .or_default()
+                    .insert(msg.seq, msg.body);
+            }
+            Verdict::Duplicate => {
+                self.stats.faults.injected_dups += 1;
+                let dup = Message {
+                    src: msg.src,
+                    tag: msg.tag,
+                    seq: msg.seq,
+                    body: clone_body(&msg.body),
+                };
+                self.resequence(msg);
+                self.resequence(dup);
+            }
+            Verdict::Truncate => {
+                self.stats.faults.injected_truncations += 1;
+                let wire = wire_bytes_of(&msg.body);
+                let corrupted = Body::Bytes(wire[..wire.len().saturating_sub(1)].to_vec());
+                let Message { src, tag, seq, body } = msg;
+                self.faults
+                    .as_mut()
+                    .expect("verdict implies an installed plan")
+                    .limbo
+                    .entry((src, tag))
+                    .or_default()
+                    .insert(seq, body);
+                self.resequence(Message {
+                    src,
+                    tag,
+                    seq,
+                    body: corrupted,
+                });
+            }
+        }
+    }
+
+    /// Drain the transport without blocking and release any held-back
+    /// messages whose deadlines have passed.
+    fn pump(&mut self) {
         loop {
             match self.inbox.try_recv() {
-                Ok(msg) => {
-                    self.parked
-                        .entry((msg.src, msg.tag))
-                        .or_default()
-                        .push_back(msg.body);
-                }
+                Ok(msg) => self.deliver(msg),
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        self.release_due_faults();
+    }
+
+    /// Earliest release deadline among held-back messages, if any — a
+    /// blocked receive must wake for it.
+    fn next_fault_release(&self) -> Option<Instant> {
+        self.faults
+            .as_ref()
+            .and_then(|eng| eng.delayed.iter().map(|(t, _)| *t).min())
+    }
+
+    /// Release every held-back message whose deadline has passed.
+    fn release_due_faults(&mut self) {
+        let mut due: Vec<Message> = match self.faults.as_mut() {
+            Some(eng) if !eng.delayed.is_empty() => {
+                let now = Instant::now();
+                let mut out = Vec::new();
+                let mut i = 0;
+                while i < eng.delayed.len() {
+                    if eng.delayed[i].0 <= now {
+                        out.push(eng.delayed.swap_remove(i).1);
+                    } else {
+                        i += 1;
+                    }
+                }
+                out
+            }
+            _ => return,
+        };
+        if due.is_empty() {
+            return;
+        }
+        due.sort_by_key(|m| (m.src, m.tag, m.seq));
+        for m in due {
+            self.resequence(m);
+        }
+    }
+
+    /// Simulated retransmission: release the stream's oldest withheld
+    /// *undelivered* payload (sequence at or past the resequencer cursor
+    /// — pristine copies of already-delivered truncated messages stay
+    /// reserved for decode recovery). Returns whether anything was
+    /// recovered.
+    fn recover_from_limbo(&mut self, src: usize, tag: u64) -> bool {
+        let cursor = *self.next_wire.get(&(src, tag)).unwrap_or(&0);
+        let (seq, body) = {
+            let Some(eng) = self.faults.as_mut() else {
+                return false;
+            };
+            let Some(q) = eng.limbo.get_mut(&(src, tag)) else {
+                return false;
+            };
+            let Some((&seq, _)) = q.range(cursor..).next() else {
+                return false;
+            };
+            let body = q.remove(&seq).expect("key just observed");
+            if q.is_empty() {
+                eng.limbo.remove(&(src, tag));
+            }
+            (seq, body)
+        };
+        self.resequence(Message {
+            src,
+            tag,
+            seq,
+            body,
+        });
+        true
+    }
+
+    /// Take the pristine copy of a truncated message by exact wire
+    /// sequence — the decode-failure recovery path.
+    fn limbo_take(&mut self, src: usize, tag: u64, seq: u64) -> Option<Body> {
+        let eng = self.faults.as_mut()?;
+        let q = eng.limbo.get_mut(&(src, tag))?;
+        let body = q.remove(&seq)?;
+        if q.is_empty() {
+            eng.limbo.remove(&(src, tag));
+        }
+        Some(body)
+    }
+
+    /// Release everything the fault layer withholds on one stream:
+    /// held-back messages immediately (deadlines void), undelivered limbo
+    /// payloads resequenced, stale truncation pristines dropped (their
+    /// buffers return home). Called when a request on the stream is
+    /// abandoned, so a withheld message cannot pin a registered buffer
+    /// behind a dead request.
+    fn flush_stream_faults(&mut self, src: usize, tag: u64) {
+        let cursor = *self.next_wire.get(&(src, tag)).unwrap_or(&0);
+        let Some(eng) = self.faults.as_mut() else {
+            return;
+        };
+        let mut released: Vec<Message> = Vec::new();
+        let mut i = 0;
+        while i < eng.delayed.len() {
+            if eng.delayed[i].1.src == src && eng.delayed[i].1.tag == tag {
+                released.push(eng.delayed.swap_remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        if let Some(q) = eng.limbo.remove(&(src, tag)) {
+            for (seq, body) in q {
+                if seq >= cursor {
+                    released.push(Message {
+                        src,
+                        tag,
+                        seq,
+                        body,
+                    });
+                }
+            }
+        }
+        released.sort_by_key(|m| m.seq);
+        for m in released {
+            self.resequence(m);
+        }
+    }
+
+    /// Retire an abandoned request's claim on its stream. If its message
+    /// already arrived it is dropped now; otherwise its arrival sequence
+    /// number is recorded as a debt and the message is discarded the
+    /// moment it arrives — either way a registered payload returns to its
+    /// sender's pool, and a *retried* request on the same stream (a fresh
+    /// `irecv`) matches the retransmitted payload, never the stale one.
+    fn abandon(&mut self, src: usize, tag: u64, seq: u64) {
+        self.pump();
+        if self.ready.remove(&(src, tag, seq)).is_some() {
+            self.stats.faults.abandoned_swept += 1;
+            return;
+        }
+        self.discard.insert((src, tag, seq));
+        self.flush_stream_faults(src, tag);
+        while self.promote_parked(src, tag) {}
+    }
+
+    /// Remove `(src, tag, seq)` from the ready store, promoting parked
+    /// arrivals as needed. Does not touch the transport.
+    fn take_ready(&mut self, src: usize, tag: u64, seq: u64) -> Option<Body> {
+        loop {
+            if let Some(body) = self.ready.remove(&(src, tag, seq)) {
+                return Some(body);
+            }
+            if !self.promote_parked(src, tag) {
+                return None;
             }
         }
     }
 
     /// Block until the arrival matched to `(src, tag, seq)` is available.
+    ///
+    /// The wait runs two clocks (see the module docs' failure model): the
+    /// retry threshold fires repeatedly with exponential backoff —
+    /// counting stragglers and asking the fault layer to retransmit
+    /// anything withheld on this stream — and the fatal deadline abandons
+    /// the request and errors. `None` deadlines wait forever.
     fn claim(&mut self, src: usize, tag: u64, seq: u64) -> Result<Body> {
+        if let Some(body) = self.take_ready(src, tag, seq) {
+            return Ok(body);
+        }
+        let start = Instant::now();
+        let fatal = self.recv_timeout.map(|d| start + d);
+        let mut attempt: u32 = 0;
+        let mut next_retry = self.retry_timeout.map(|d| start + d);
         loop {
-            if let Some(body) = self.ready.remove(&(src, tag, seq)) {
+            self.pump();
+            if let Some(body) = self.take_ready(src, tag, seq) {
+                let stall = start.elapsed().as_secs_f64();
+                if stall > self.stats.faults.max_stall_s {
+                    self.stats.faults.max_stall_s = stall;
+                }
                 return Ok(body);
             }
-            if self.promote_parked(src, tag) {
-                continue;
+            let now = Instant::now();
+            if let Some(f) = fatal {
+                if now >= f {
+                    self.abandon(src, tag, seq);
+                    return Err(Error::Comm(format!(
+                        "rank {} timed out after {:?} waiting for (src={src}, tag={tag})",
+                        self.rank,
+                        self.recv_timeout.unwrap_or_default()
+                    )));
+                }
             }
-            let msg = self.inbox.recv_timeout(self.recv_timeout).map_err(|_| {
-                Error::Comm(format!(
-                    "rank {} timed out after {:?} waiting for (src={src}, tag={tag})",
-                    self.rank, self.recv_timeout
-                ))
-            })?;
-            self.parked
-                .entry((msg.src, msg.tag))
-                .or_default()
-                .push_back(msg.body);
+            // Sleep until the earliest actionable deadline: the fatal
+            // deadline, the retry threshold, or a held message's release.
+            let mut wake = fatal;
+            if let Some(r) = next_retry {
+                wake = Some(wake.map_or(r, |w| w.min(r)));
+            }
+            if let Some(h) = self.next_fault_release() {
+                wake = Some(wake.map_or(h, |w| w.min(h)));
+            }
+            let arrival = match wake {
+                Some(w) => {
+                    let dur = w
+                        .saturating_duration_since(now)
+                        .max(Duration::from_micros(100));
+                    match self.inbox.recv_timeout(dur) {
+                        Ok(msg) => Some(msg),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            self.abandon(src, tag, seq);
+                            return Err(Error::Comm(format!(
+                                "rank {} waiting for (src={src}, tag={tag}) with every peer disconnected",
+                                self.rank
+                            )));
+                        }
+                    }
+                }
+                None => match self.inbox.recv() {
+                    Ok(msg) => Some(msg),
+                    Err(_) => {
+                        self.abandon(src, tag, seq);
+                        return Err(Error::Comm(format!(
+                            "rank {} waiting for (src={src}, tag={tag}) with every peer disconnected",
+                            self.rank
+                        )));
+                    }
+                },
+            };
+            if let Some(msg) = arrival {
+                self.deliver(msg);
+            }
+            if let Some(r) = next_retry {
+                if Instant::now() >= r {
+                    attempt += 1;
+                    self.stats.faults.retries += 1;
+                    if attempt == 1 {
+                        self.stats.faults.stragglers += 1;
+                    }
+                    if attempt <= self.max_retransmits && self.recover_from_limbo(src, tag) {
+                        self.stats.faults.retransmits += 1;
+                    }
+                    let base = self.retry_timeout.unwrap_or(Duration::from_millis(1));
+                    next_retry =
+                        Some(Instant::now() + base * 2u32.saturating_pow(attempt.min(6)));
+                }
+            }
         }
     }
 
@@ -1174,7 +1760,30 @@ impl Comm {
     /// pool — the receiver half of the pool's recycle cycle.
     pub fn wait_payload<T: Scalar>(&mut self, req: RecvRequest<T>) -> Result<Payload<T>> {
         let body = self.complete(req.src, req.tag, req.seq)?;
-        self.decode_payload(body)
+        self.decode_with_recovery(req.src, req.tag, req.seq, body)
+    }
+
+    /// Decode a matched body; when decoding fails *and* the fault layer
+    /// holds the pristine copy of that exact wire sequence (payload
+    /// truncation), recover from it — the receiver-side analogue of a
+    /// checksum-failure retransmit.
+    fn decode_with_recovery<T: Scalar>(
+        &mut self,
+        src: usize,
+        tag: u64,
+        seq: u64,
+        body: Body,
+    ) -> Result<Payload<T>> {
+        match self.decode_payload(body) {
+            Ok(p) => Ok(p),
+            Err(e) => match self.limbo_take(src, tag, seq) {
+                Some(pristine) => {
+                    self.stats.faults.retransmits += 1;
+                    self.decode_payload(pristine)
+                }
+                None => Err(e),
+            },
+        }
     }
 
     /// Complete a batch of posted receives, in order. On the first error
@@ -1187,7 +1796,10 @@ impl Comm {
             match self.wait(req) {
                 Ok(v) => out.push(v),
                 Err(e) => {
-                    self.in_flight -= iter.len();
+                    for r in iter {
+                        self.in_flight -= 1;
+                        self.abandon(r.src, r.tag, r.seq);
+                    }
                     return Err(e);
                 }
             }
@@ -1232,9 +1844,11 @@ impl Comm {
             return Err(Error::Comm("wait_any: no posted receives".into()));
         }
         let t0 = Instant::now();
-        let deadline = t0 + self.recv_timeout;
+        let fatal = self.recv_timeout.map(|d| t0 + d);
+        let mut attempt: u32 = 0;
+        let mut next_retry = self.retry_timeout.map(|d| t0 + d);
         loop {
-            self.drain_inbox();
+            self.pump();
             let keys: Vec<(usize, u64)> = reqs.iter().map(|r| (r.src, r.tag)).collect();
             for (src, tag) in keys {
                 while self.promote_parked(src, tag) {}
@@ -1248,33 +1862,99 @@ impl Comm {
                     .ready
                     .remove(&(req.src, req.tag, req.seq))
                     .expect("readiness probed above");
-                self.stats.wait_time_s += t0.elapsed().as_secs_f64();
+                let stall = t0.elapsed().as_secs_f64();
+                if stall > self.stats.faults.max_stall_s {
+                    self.stats.faults.max_stall_s = stall;
+                }
+                self.stats.wait_time_s += stall;
                 self.in_flight -= 1;
                 self.stats.messages_received += 1;
                 self.stats.bytes_received += body.wire_len();
-                return Ok((idx, self.decode_payload(body)?));
+                let payload = self.decode_with_recovery(req.src, req.tag, req.seq, body)?;
+                return Ok((idx, payload));
             }
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            let timed_out = remaining.is_zero()
-                || match self.inbox.recv_timeout(remaining) {
-                    Ok(msg) => {
-                        self.parked
-                            .entry((msg.src, msg.tag))
-                            .or_default()
-                            .push_back(msg.body);
-                        false
+            let now = Instant::now();
+            let fatal_hit = fatal.is_some_and(|f| now >= f);
+            let disconnected = if fatal_hit {
+                false
+            } else {
+                // Sleep until the earliest actionable deadline: the fatal
+                // deadline, the retry threshold, or a held message's
+                // release; with no deadlines at all, block indefinitely.
+                let mut wake = fatal;
+                if let Some(r) = next_retry {
+                    wake = Some(wake.map_or(r, |w| w.min(r)));
+                }
+                if let Some(h) = self.next_fault_release() {
+                    wake = Some(wake.map_or(h, |w| w.min(h)));
+                }
+                match wake {
+                    Some(w) => {
+                        let dur = w
+                            .saturating_duration_since(now)
+                            .max(Duration::from_micros(100));
+                        match self.inbox.recv_timeout(dur) {
+                            Ok(msg) => {
+                                self.deliver(msg);
+                                false
+                            }
+                            Err(RecvTimeoutError::Timeout) => false,
+                            Err(RecvTimeoutError::Disconnected) => true,
+                        }
                     }
-                    Err(_) => true,
-                };
-            if timed_out {
+                    None => match self.inbox.recv() {
+                        Ok(msg) => {
+                            self.deliver(msg);
+                            false
+                        }
+                        Err(_) => true,
+                    },
+                }
+            };
+            if fatal_hit || disconnected {
                 self.stats.wait_time_s += t0.elapsed().as_secs_f64();
-                self.in_flight -= reqs.len();
                 let outstanding = reqs.len();
-                reqs.clear();
-                return Err(Error::Comm(format!(
-                    "rank {} timed out after {:?} in wait_any with {outstanding} receives outstanding",
-                    self.rank, self.recv_timeout
-                )));
+                for r in reqs.drain(..) {
+                    self.in_flight -= 1;
+                    self.abandon(r.src, r.tag, r.seq);
+                }
+                return Err(Error::Comm(if disconnected {
+                    format!(
+                        "rank {} in wait_any with {outstanding} receives outstanding and every peer disconnected",
+                        self.rank
+                    )
+                } else {
+                    format!(
+                        "rank {} timed out after {:?} in wait_any with {outstanding} receives outstanding",
+                        self.rank,
+                        self.recv_timeout.unwrap_or_default()
+                    )
+                }));
+            }
+            if let Some(r) = next_retry {
+                if Instant::now() >= r {
+                    attempt += 1;
+                    self.stats.faults.retries += 1;
+                    if attempt == 1 {
+                        self.stats.faults.stragglers += 1;
+                    }
+                    if attempt <= self.max_retransmits {
+                        // Ask every distinct stream with an outstanding
+                        // request for one retransmit.
+                        let mut streams: Vec<(usize, u64)> =
+                            reqs.iter().map(|r| (r.src, r.tag)).collect();
+                        streams.sort_unstable();
+                        streams.dedup();
+                        for (src, tag) in streams {
+                            if self.recover_from_limbo(src, tag) {
+                                self.stats.faults.retransmits += 1;
+                            }
+                        }
+                    }
+                    let base = self.retry_timeout.unwrap_or(Duration::from_millis(1));
+                    next_retry =
+                        Some(Instant::now() + base * 2u32.saturating_pow(attempt.min(6)));
+                }
             }
         }
     }
@@ -1282,7 +1962,7 @@ impl Comm {
     /// Nonblocking probe: has the message for `req` already arrived?
     /// Never blocks; a `true` result means `wait` will return immediately.
     pub fn test<T: Scalar>(&mut self, req: &RecvRequest<T>) -> bool {
-        self.drain_inbox();
+        self.pump();
         while self.promote_parked(req.src, req.tag) {}
         self.ready.contains_key(&(req.src, req.tag, req.seq))
     }
@@ -1433,6 +2113,9 @@ impl Cluster {
             return Err(Error::Comm("world size must be >= 1".into()));
         }
         let recv_timeout = configured_recv_timeout();
+        let retry_timeout = configured_retry_timeout();
+        let max_retransmits = configured_max_retransmits();
+        let fault_plan = faults::configured_fault_plan();
         let pool_cap = configured_comm_pool_cap();
         let mut senders = Vec::with_capacity(world);
         let mut inboxes = Vec::with_capacity(world);
@@ -1445,21 +2128,34 @@ impl Cluster {
         let mut comms: Vec<Comm> = inboxes
             .into_iter()
             .enumerate()
-            .map(|(rank, inbox)| Comm {
-                rank,
-                size: world,
-                senders: senders.clone(),
-                inbox,
-                parked: HashMap::new(),
-                ready: HashMap::new(),
-                next_posted: HashMap::new(),
-                next_arrived: HashMap::new(),
-                in_flight: 0,
-                wire_format: false,
-                pool: BufferPool::new(pool_cap),
-                recv_timeout,
-                barrier: barrier.clone(),
-                stats: CommStats::default(),
+            .map(|(rank, inbox)| {
+                let mut comm = Comm {
+                    rank,
+                    size: world,
+                    senders: senders.clone(),
+                    inbox,
+                    parked: HashMap::new(),
+                    ready: HashMap::new(),
+                    next_posted: HashMap::new(),
+                    next_arrived: HashMap::new(),
+                    next_send: HashMap::new(),
+                    next_wire: HashMap::new(),
+                    ooo: HashMap::new(),
+                    discard: HashSet::new(),
+                    in_flight: 0,
+                    wire_format: false,
+                    pool: BufferPool::new(pool_cap),
+                    recv_timeout,
+                    retry_timeout,
+                    max_retransmits,
+                    faults: None,
+                    barrier: barrier.clone(),
+                    stats: CommStats::default(),
+                };
+                if let Some(plan) = fault_plan.clone() {
+                    comm.set_fault_plan(Some(plan));
+                }
+                comm
             })
             .collect();
         // Drop the original senders so disconnects propagate when workers
@@ -2142,23 +2838,176 @@ mod tests {
     fn timeout_parsing() {
         assert_eq!(
             parse_recv_timeout(None),
-            Duration::from_millis(DEFAULT_RECV_TIMEOUT_MS)
+            Some(Duration::from_millis(DEFAULT_RECV_TIMEOUT_MS))
         );
-        assert_eq!(parse_recv_timeout(Some("250")), Duration::from_millis(250));
+        assert_eq!(
+            parse_recv_timeout(Some("250")),
+            Some(Duration::from_millis(250))
+        );
         assert_eq!(
             parse_recv_timeout(Some(" 1500 ")),
-            Duration::from_millis(1500)
+            Some(Duration::from_millis(1500))
         );
-        // garbage and zero fall back to the default
+        // garbage falls back to the default
         assert_eq!(
             parse_recv_timeout(Some("nope")),
-            Duration::from_millis(DEFAULT_RECV_TIMEOUT_MS)
+            Some(Duration::from_millis(DEFAULT_RECV_TIMEOUT_MS))
         );
-        assert_eq!(
-            parse_recv_timeout(Some("0")),
-            Duration::from_millis(DEFAULT_RECV_TIMEOUT_MS)
-        );
+        // 0 means "no timeout" — the uncapped convention shared with the
+        // scratch and comm-pool byte caps.
+        assert_eq!(parse_recv_timeout(Some("0")), None);
         // the test build uses the short default so deadlocks fail fast
         assert_eq!(DEFAULT_RECV_TIMEOUT_MS, 5_000);
+
+        assert_eq!(
+            parse_retry_timeout(None),
+            Some(Duration::from_millis(DEFAULT_RETRY_TIMEOUT_MS))
+        );
+        assert_eq!(
+            parse_retry_timeout(Some("40")),
+            Some(Duration::from_millis(40))
+        );
+        assert_eq!(parse_retry_timeout(Some("0")), None);
+        assert_eq!(parse_max_retransmits(None), DEFAULT_MAX_RETRANSMITS);
+        assert_eq!(parse_max_retransmits(Some("3")), 3);
+        assert_eq!(parse_max_retransmits(Some("bad")), DEFAULT_MAX_RETRANSMITS);
+    }
+
+    #[test]
+    fn resequencer_suppresses_duplicates_and_restores_order() {
+        let results = Cluster::run(2, |comm| {
+            if comm.rank() == 0 {
+                comm.set_fault_plan(Some(
+                    faults::FaultPlan::parse("seed=3;retry_ms=5;dup:p=1,src=1").unwrap(),
+                ));
+                let mut got = Vec::new();
+                for _ in 0..6 {
+                    got.push(comm.recv_vec::<f64>(1, 9)?[0]);
+                }
+                let s = comm.stats();
+                assert!(s.faults.injected_dups >= 6);
+                assert!(s.faults.dups_suppressed >= 6);
+                Ok(got)
+            } else {
+                for i in 0..6 {
+                    comm.send_slice::<f64>(0, 9, &[i as f64])?;
+                }
+                Ok(vec![])
+            }
+        })
+        .unwrap();
+        assert_eq!(results[0], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn reorder_plan_preserves_fifo() {
+        let results = Cluster::run(2, |comm| {
+            if comm.rank() == 1 {
+                comm.set_fault_plan(Some(
+                    faults::FaultPlan::parse("seed=11;retry_ms=5;reorder:p=0.6,ms=2").unwrap(),
+                ));
+                let mut got = Vec::new();
+                for _ in 0..8 {
+                    got.push(comm.recv_vec::<f64>(0, 4)?[0]);
+                }
+                Ok(got)
+            } else {
+                for i in 0..8 {
+                    comm.send_slice::<f64>(1, 4, &[i as f64])?;
+                }
+                Ok(vec![])
+            }
+        })
+        .unwrap();
+        assert_eq!(
+            results[1],
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]
+        );
+    }
+
+    #[test]
+    fn dropped_message_recovers_via_retransmit() {
+        let results = Cluster::run(2, |comm| {
+            if comm.rank() == 1 {
+                comm.set_fault_plan(Some(
+                    faults::FaultPlan::parse("seed=5;retry_ms=5;drop:p=1,tag=40").unwrap(),
+                ));
+                let got = comm.recv_vec::<f64>(0, 40)?;
+                let s = comm.stats();
+                assert!(s.faults.injected_drops >= 1);
+                assert!(s.faults.retransmits >= 1);
+                assert!(s.faults.retries >= 1);
+                assert_eq!(s.faults.stragglers, 1);
+                Ok(got[0])
+            } else {
+                comm.send_slice::<f64>(1, 40, &[42.5])?;
+                Ok(0.0)
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], 42.5);
+    }
+
+    #[test]
+    fn truncated_payload_recovers_from_pristine_copy() {
+        let results = Cluster::run(2, |comm| {
+            if comm.rank() == 1 {
+                comm.set_fault_plan(Some(
+                    faults::FaultPlan::parse("seed=9;truncate:p=1,tag=41").unwrap(),
+                ));
+                let got = comm.recv_vec::<f64>(0, 41)?;
+                let s = comm.stats();
+                assert!(s.faults.injected_truncations >= 1);
+                assert!(s.faults.retransmits >= 1);
+                Ok(got)
+            } else {
+                comm.send_slice::<f64>(1, 41, &[1.5, -2.5, 3.25])?;
+                Ok(vec![])
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], vec![1.5, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn abandoned_request_discards_late_arrival() {
+        // Rank 1 times out on a receive from rank 0 (which is stalled at
+        // the barrier), abandons it, then rank 0 sends twice: the first
+        // message settles the abandoned request's debt and is discarded,
+        // the second matches the retried request.
+        let results = Cluster::run(2, |comm| {
+            if comm.rank() == 1 {
+                comm.set_recv_timeout(Some(Duration::from_millis(50)));
+                comm.set_retry_timeout(Some(Duration::from_millis(10)));
+                let req = comm.irecv::<f64>(0, 77)?;
+                assert!(comm.wait(req).is_err());
+                comm.barrier();
+                let req = comm.irecv::<f64>(0, 77)?;
+                let got = comm.wait(req)?;
+                assert!(comm.stats().faults.abandoned_swept >= 1);
+                Ok(got[0])
+            } else {
+                comm.barrier();
+                comm.send_slice::<f64>(1, 77, &[-1.0])?;
+                comm.send_slice::<f64>(1, 77, &[8.0])?;
+                Ok(0.0)
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], 8.0);
+    }
+
+    #[test]
+    fn kill_rule_fires_only_at_its_step() {
+        let plan = faults::FaultPlan::parse("kill:rank=1,step=4").unwrap();
+        let results = Cluster::run(2, |comm| {
+            comm.set_fault_plan(Some(plan.clone()));
+            for step in 0..4 {
+                comm.fault_step(step)?;
+            }
+            Ok(comm.fault_step(4).is_err())
+        })
+        .unwrap();
+        assert_eq!(results, vec![false, true]);
     }
 }

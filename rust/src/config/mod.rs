@@ -62,6 +62,21 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// Path to AOT artifacts (manifest.json directory).
     pub artifacts_dir: String,
+    /// Save a checkpoint every N steps (0 = never). Checkpoints land in
+    /// `checkpoint_dir/step_NNNNNN/rank_R.ckpt` ([`crate::checkpoint`]):
+    /// per-rank parameters, Adam state, and the step index — everything a
+    /// bitwise-identical resume needs.
+    pub checkpoint_every: usize,
+    /// Directory checkpoints are written to (and resumed from).
+    pub checkpoint_dir: String,
+    /// Resume from this checkpoint step directory (a `step_NNNNNN` under
+    /// `checkpoint_dir`; `None` = fresh start). The run continues at the
+    /// saved step index and reproduces the uninterrupted run bitwise.
+    pub resume_from: Option<String>,
+    /// Fault plan installed on every comm endpoint
+    /// ([`crate::comm::faults`] grammar; `None` = no injection). The CLI
+    /// and JSON parse it eagerly so a typo'd plan fails at config time.
+    pub fault_plan: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -79,6 +94,10 @@ impl Default for TrainConfig {
             backend: Backend::Native,
             log_every: 10,
             artifacts_dir: "artifacts".into(),
+            checkpoint_every: 0,
+            checkpoint_dir: "checkpoints".into(),
+            resume_from: None,
+            fault_plan: None,
         }
     }
 }
@@ -131,6 +150,18 @@ impl TrainConfig {
         if let Some(v) = j.get_opt("artifacts_dir") {
             self.artifacts_dir = v.as_str()?.to_string();
         }
+        if let Some(v) = j.get_opt("checkpoint_every") {
+            self.checkpoint_every = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("checkpoint_dir") {
+            self.checkpoint_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get_opt("resume_from") {
+            self.resume_from = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = j.get_opt("fault_plan") {
+            self.fault_plan = Some(v.as_str()?.to_string());
+        }
         Ok(())
     }
 
@@ -179,6 +210,16 @@ impl TrainConfig {
                     self.batch, self.replicas, self.micro_batches
                 )));
             }
+        }
+        if let Some(plan) = &self.fault_plan {
+            // Parse eagerly so a typo'd plan fails at config time, not
+            // silently mid-run.
+            crate::comm::faults::FaultPlan::parse(plan)?;
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() {
+            return Err(Error::Config(
+                "checkpoint_every > 0 needs a checkpoint_dir".into(),
+            ));
         }
         Ok(())
     }
@@ -241,6 +282,30 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = TrainConfig::default();
         cfg.stages = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn robustness_fields_parse_and_validate() {
+        let j = Json::parse(
+            r#"{"checkpoint_every": 5, "checkpoint_dir": "ckpts",
+                "resume_from": "ckpts/step_000004",
+                "fault_plan": "seed=7;delay:p=0.1,ms=2"}"#,
+        )
+        .unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.checkpoint_every, 5);
+        assert_eq!(cfg.checkpoint_dir, "ckpts");
+        assert_eq!(cfg.resume_from.as_deref(), Some("ckpts/step_000004"));
+        cfg.validate().unwrap();
+        // A malformed fault plan fails at config time.
+        cfg.fault_plan = Some("explode:p=1".into());
+        assert!(cfg.validate().is_err());
+        // Checkpointing needs somewhere to write.
+        let mut cfg = TrainConfig::default();
+        cfg.checkpoint_every = 2;
+        cfg.checkpoint_dir = String::new();
         assert!(cfg.validate().is_err());
     }
 

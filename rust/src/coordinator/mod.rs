@@ -70,8 +70,35 @@
 //! `optim::pp::set_pp_overlap(false)` removes the warm-up — a fully
 //! serialized lockstep schedule with bitwise-identical gradients, the
 //! parity reference and the bench baseline.
+//!
+//! ## Failure model
+//!
+//! The training loop composes the comm engine's failure story (see
+//! [`crate::comm`]) with checkpoint/restore ([`crate::checkpoint`]):
+//!
+//! * **What is retried** is entirely below this layer: late, duplicated,
+//!   reordered, or corrupted-and-recovered messages are absorbed by the
+//!   engine's sequence numbers and retry/retransmit clocks, so every
+//!   fault plan that injects only recoverable faults yields **bitwise
+//!   identical** gradients, parameters, and metrics — asserted by
+//!   `tests/fault_tolerance.rs` over full DP×PP steps.
+//! * **What is fatal** — a receive outliving its fatal deadline, or a
+//!   rank scheduled to die by a `kill:rank=R,step=K` plan clause
+//!   ([`crate::comm::Comm::fault_step`], checked at the top of every
+//!   step) — errors out of [`train`].
+//! * **What checkpointing covers**: with
+//!   [`TrainConfig::checkpoint_every`] set, every rank snapshots its
+//!   parameters, Adam state, and step index at the cadence boundary
+//!   ([`crate::checkpoint`]); `TrainConfig::resume_from` restarts from a
+//!   step directory and replays the uninterrupted run bit for bit. What
+//!   is *not* covered: in-flight messages (a resume restarts the step
+//!   from its boundary) and the metric log of pre-kill steps.
+//! * **Health surfacing**: rank 0's fault/retry/straggler counters land
+//!   on the log as `fault_*` keys ([`MetricLog::set_fault_stats`]).
 
 use crate::autograd::NetworkState;
+use crate::checkpoint::Checkpoint;
+use crate::comm::faults::FaultPlan;
 use crate::comm::{Cluster, Comm, CommGroup};
 use crate::config::{Backend, TrainConfig};
 use crate::data::{Batch, SyntheticMnist};
@@ -129,6 +156,62 @@ pub const PIPELINE_POOL_DEPTH: usize = 3;
 /// rings (bucket `i` on `DP_TAG_BASE + i`) never collide with them.
 pub const DP_TAG_BASE: u64 = 1_000_000;
 
+/// Parse the config's fault plan for installation on every endpoint.
+/// `TrainConfig::validate` already vetted the grammar; this is the
+/// authoritative parse the training loop installs.
+fn planned_faults(cfg: &TrainConfig) -> Result<Option<FaultPlan>> {
+    cfg.fault_plan.as_deref().map(FaultPlan::parse).transpose()
+}
+
+/// Restore a rank's training state from `cfg.resume_from` (if set),
+/// validating that the checkpoint matches this run's world size and seed
+/// — restored parameters only reproduce the uninterrupted run if the
+/// data/batch stream matches. Returns the step index to continue from
+/// (0 on a fresh start).
+fn maybe_resume(
+    cfg: &TrainConfig,
+    world: usize,
+    rank: usize,
+    state: &mut NetworkState<f32>,
+    opt: &mut Adam<f32>,
+) -> Result<usize> {
+    let Some(dir) = &cfg.resume_from else {
+        return Ok(0);
+    };
+    let ck = Checkpoint::<f32>::load(std::path::Path::new(dir), rank)?;
+    if ck.world != world {
+        return Err(Error::Config(format!(
+            "checkpoint world size {} != this run's {world}",
+            ck.world
+        )));
+    }
+    if ck.seed != cfg.seed {
+        return Err(Error::Config(format!(
+            "checkpoint seed {} != this run's {}",
+            ck.seed, cfg.seed
+        )));
+    }
+    ck.apply(state, opt)?;
+    Ok(ck.step as usize)
+}
+
+/// Snapshot a rank's training state at the `checkpoint_every` cadence
+/// (`done_steps` completed steps so far).
+fn maybe_checkpoint(
+    cfg: &TrainConfig,
+    world: usize,
+    rank: usize,
+    done_steps: usize,
+    state: &NetworkState<f32>,
+    opt: &Adam<f32>,
+) -> Result<()> {
+    if cfg.checkpoint_every > 0 && done_steps % cfg.checkpoint_every == 0 {
+        Checkpoint::capture(world, rank, cfg.seed, done_steps as u64, state, opt)
+            .save(&cfg.checkpoint_dir)?;
+    }
+    Ok(())
+}
+
 /// Run the §5 training experiment per `cfg`, returning the report.
 ///
 /// With `cfg.replicas > 1` the run is hybrid data×model parallel: the
@@ -162,6 +245,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         batch: micro,
         layout,
     };
+    let fault_plan = planned_faults(cfg)?;
 
     let per_rank = Cluster::run(world, |comm| {
         // Pre-warm the registered buffer pool for the pipeline's rotation
@@ -179,6 +263,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // slices per grid cell, so all replicas start bit-identical.
         let mut state = net.init(rank, cfg.seed)?;
         let mut opt = Adam::new(cfg.lr);
+        if let Some(plan) = fault_plan.clone() {
+            comm.set_fault_plan(Some(plan));
+        }
+        let start = maybe_resume(cfg, world, rank, &mut state, &mut opt)?;
         let mut dp = DataParallel::<f32>::for_rank(&topo, rank, DP_TAG_BASE);
         let mut log = MetricLog::new();
         log.set_meta("layout", format!("{layout:?}"));
@@ -195,9 +283,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // pass's gradient sends are posted, before the local optimizer
         // step), so forward setup rides the tail of the gradient
         // sum-reduce instead of serializing after it.
-        let mut next_x: Option<Tensor<f32>> =
-            (rank == root).then(|| train_batches[index_of(0)].images_as::<f32>());
-        for step in 0..cfg.steps {
+        let mut next_x: Option<Tensor<f32>> = (rank == root && start < cfg.steps)
+            .then(|| train_batches[index_of(start)].images_as::<f32>());
+        for step in start..cfg.steps {
+            comm.fault_step(step as u64)?;
             let timer = Timer::start();
             let batch = &train_batches[index_of(step)];
             let x = next_x.take();
@@ -225,6 +314,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                     step_time_s: timer.elapsed_s(),
                 });
             }
+            maybe_checkpoint(cfg, world, rank, step + 1, &state, &opt)?;
         }
         // Held-out evaluation (forward only). Every replica runs the same
         // eval batches — replicas are synchronised copies, so this keeps
@@ -250,7 +340,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // arena is thread-local, so these are exactly the allocations the
         // rank-0 coordinator thread's kernels performed.
         if rank == 0 {
-            log.set_comm_stats(&comm.stats());
+            let cs = comm.stats();
+            log.set_comm_stats(&cs);
+            log.set_fault_stats(&cs.faults);
             log.set_scratch_stats(&crate::memory::scratch_stats::<f32>());
             log.set_gemm_pool_stats(&crate::nn::native::gemm::gemm_pool_stats());
             log.set_tensor_storage_stats(&crate::tensor::tensor_storage_stats());
@@ -305,6 +397,7 @@ fn train_pipeline(cfg: &TrainConfig) -> Result<TrainReport> {
     };
     // Replica 0's last stage holds the logits and the loss.
     let loss_rank = stages - 1;
+    let fault_plan = planned_faults(cfg)?;
 
     let per_rank = Cluster::run(world, |comm| {
         comm.pool_reserve(PIPELINE_POOL_DEPTH);
@@ -318,6 +411,10 @@ fn train_pipeline(cfg: &TrainConfig) -> Result<TrainReport> {
         // sequential network.
         let mut state = net.init(rank, cfg.seed)?;
         let mut opt = Adam::new(cfg.lr);
+        if let Some(p) = fault_plan.clone() {
+            comm.set_fault_plan(Some(p));
+        }
+        let start = maybe_resume(cfg, world, rank, &mut state, &mut opt)?;
         let mut dp = DataParallel::<f32>::for_rank(&topo, rank, DP_TAG_BASE);
         let mut pipe = Pipeline::new(plan, rank, m)?;
         let stage = pipe.stage();
@@ -332,7 +429,8 @@ fn train_pipeline(cfg: &TrainConfig) -> Result<TrainReport> {
         // the DP ring's 1/R recovers the concatenated-batch mean.
         let len = train_batches.len();
         let index_of = move |step: usize, j: usize| ((step * replicas + replica) * m + j) % len;
-        for step in 0..cfg.steps {
+        for step in start..cfg.steps {
+            comm.fault_step(step as u64)?;
             let timer = Timer::start();
             let mut input = |k: usize| {
                 (stage == 0).then(|| train_batches[index_of(step, k)].images_as::<f32>())
@@ -359,6 +457,7 @@ fn train_pipeline(cfg: &TrainConfig) -> Result<TrainReport> {
                     step_time_s: timer.elapsed_s(),
                 });
             }
+            maybe_checkpoint(cfg, world, rank, step + 1, &state, &opt)?;
         }
         // Held-out evaluation: micro-batch-sized forwards through the
         // stage chain; replica 0's last stage counts.
@@ -375,7 +474,9 @@ fn train_pipeline(cfg: &TrainConfig) -> Result<TrainReport> {
         }
         let eval_acc = (total > 0).then(|| correct as f64 / total as f64);
         if rank == 0 {
-            log.set_comm_stats(&comm.stats());
+            let cs = comm.stats();
+            log.set_comm_stats(&cs);
+            log.set_fault_stats(&cs.faults);
             log.set_scratch_stats(&crate::memory::scratch_stats::<f32>());
             log.set_gemm_pool_stats(&crate::nn::native::gemm::gemm_pool_stats());
             log.set_tensor_storage_stats(&crate::tensor::tensor_storage_stats());

@@ -1,14 +1,17 @@
-//! Shared experiment suites: the Eq. (13) adjoint-coherence sweep (E1)
-//! and the Appendix-B halo-geometry tables (E2–E5), used by the CLI, the
+//! Shared experiment suites: the Eq. (13) adjoint-coherence sweep (E1),
+//! its chaos variant (the same sweep under a deterministic fault plan,
+//! asserting bitwise parity with the fault-free run), and the Appendix-B
+//! halo-geometry tables (E2–E5), used by the CLI, the
 //! `adjoint_suite`/`halo_explorer` examples, and the benches.
 
-use crate::adjoint::{adjoint_residual, DistLinearOp};
+use crate::adjoint::{adjoint_residual, adjoint_residual_under, DistLinearOp};
+use crate::comm::faults::FaultPlan;
 use crate::error::{Error, Result};
 use crate::halo::{dim_halos, format_dim_table, HaloGeometry, KernelSpec};
 use crate::partition::{Partition, TensorDecomposition};
 use crate::primitives::{
-    AllReduce, Broadcast, Gather, HaloExchange, Repartition, Scatter, SendRecv, SumReduce,
-    TrimPad,
+    AllReduce, Broadcast, Gather, HaloExchange, PipeMove, Repartition, RingAllReduce, Scatter,
+    SendRecv, SumReduce, TrimPad,
 };
 
 /// One adjoint-suite case: a named operator with the world size it runs
@@ -101,6 +104,54 @@ pub fn suite_cases(n: usize) -> Result<Vec<SuiteCase>> {
     Ok(cases)
 }
 
+/// The primitive sweep plus the two derived streaming operators — the
+/// ring all-reduce and the pipeline stage boundary — whose multi-step
+/// schedules give fault injection the most sequence numbers to attack.
+pub fn chaos_cases(n: usize) -> Result<Vec<SuiteCase>> {
+    let mut cases = suite_cases(n)?;
+    cases.push(SuiteCase {
+        label: format!("ring all-reduce [{}] x4", 4 * n),
+        world: 4,
+        op: Box::new(RingAllReduce::averaging(&[0, 1, 2, 3], &[4 * n], 100)?),
+    });
+    cases.push(SuiteCase {
+        label: format!("pipe-move [{n}x{n}] 0→1"),
+        world: 2,
+        op: Box::new(PipeMove::new(0, 1, &[n, n], 110)),
+    });
+    Ok(cases)
+}
+
+/// Run the Eq. (13) sweep under a deterministic fault plan.
+///
+/// Every case runs twice — fault-free and with `plan_spec` installed on
+/// each endpoint — and the faulted residual must be **bitwise identical**
+/// to the clean one (which itself must be coherent): the engine's
+/// resequencing/dedup/retransmit layer repairs the injected
+/// delays/duplicates/reorders/drops below the primitive, so the
+/// primitive's arithmetic never sees them.
+pub fn run_adjoint_chaos_suite(n: usize, plan_spec: &str) -> Result<()> {
+    let plan = FaultPlan::parse(plan_spec)?;
+    for case in chaos_cases(n)? {
+        let clean = adjoint_residual(case.world, case.op.as_ref(), 0xE13)?;
+        if clean >= 1e-12 {
+            return Err(Error::Primitive(format!(
+                "{}: fault-free residual {clean:.3e} is incoherent",
+                case.label
+            )));
+        }
+        let faulted = adjoint_residual_under(case.world, case.op.as_ref(), 0xE13, Some(&plan))?;
+        if faulted.to_bits() != clean.to_bits() {
+            return Err(Error::Primitive(format!(
+                "{}: residual under faults {faulted:.17e} != fault-free {clean:.17e} \
+                 (plan '{plan_spec}')",
+                case.label
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Run the Eq. (13) sweep, printing a row per primitive; errors if any
 /// residual exceeds the f64 coherence threshold.
 pub fn run_adjoint_suite(n: usize) -> Result<()> {
@@ -145,6 +196,17 @@ mod tests {
     #[test]
     fn suite_runs_clean_small() {
         run_adjoint_suite(8).unwrap();
+    }
+
+    /// Satellite sweep: every primitive plus ring and pipe-move stays
+    /// Eq. 13-coherent — bitwise equal to fault-free — under injected
+    /// delay/duplicate and reorder/duplicate/drop plans. Both plans in
+    /// one test so the cluster-heavy sweeps don't multiply wall time.
+    #[test]
+    fn chaos_suite_is_bitwise_clean() {
+        run_adjoint_chaos_suite(6, "seed=7;delay:p=0.35,ms=2;dup:p=0.35").unwrap();
+        run_adjoint_chaos_suite(6, "seed=11;retry_ms=5;reorder:p=0.4,ms=1;dup:p=0.2;drop:p=0.15")
+            .unwrap();
     }
 
     #[test]

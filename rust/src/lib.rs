@@ -47,7 +47,17 @@
 //!   the sender's pool and the receiver's completion returns them there,
 //!   so one-way flows — the broadcast/sum-reduce trees, scatter/gather,
 //!   forward-only halo circulation — recycle instead of allocating. The
-//!   paper's model is explicitly back-end independent.
+//!   paper's model is explicitly back-end independent. The engine carries
+//!   a **failure model**: per-`(sender, tag)` wire sequence numbers with
+//!   duplicate suppression and out-of-order resequencing, recoverable
+//!   timeouts (retry threshold with exponential backoff and bounded
+//!   retransmits below a fatal deadline), abandoned requests swept rather
+//!   than leaked, and a seeded deterministic fault-injection layer
+//!   ([`comm::faults`], `PALLAS_FAULT_PLAN`) that delays, drops,
+//!   duplicates, reorders, truncates, or kills on schedule.
+//! * [`checkpoint`] — per-rank binary snapshots of parameters, Adam
+//!   state, and the step index; kill-at-step-k + resume reproduces the
+//!   uninterrupted run bitwise.
 //! * [`primitives`] — §3: send/recv, scatter/gather, broadcast, sum-reduce,
 //!   all-reduce, generalized all-to-all (repartition), and the generalized
 //!   unbalanced halo exchange — each a [`adjoint::LinearOp`] with a
@@ -127,6 +137,7 @@
 
 pub mod adjoint;
 pub mod autograd;
+pub mod checkpoint;
 pub mod cli;
 pub mod comm;
 pub mod config;

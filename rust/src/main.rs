@@ -4,6 +4,8 @@
 //! distdl train         [--batch N] [--steps N] [--lr F] [--seed N]
 //!                      [--sequential] [--backend native|pjrt]
 //!                      [--dataset N] [--config file.json] [--metrics out.json]
+//!                      [--checkpoint-every N] [--checkpoint-dir DIR]
+//!                      [--resume-from DIR/step_NNNNNN] [--fault-plan SPEC]
 //! distdl parity        [--batch N] [--steps N]       sequential vs distributed (§5)
 //! distdl describe      [--batch N]                   Table 1 / Fig. C10 placement
 //! distdl adjoint-test  [--size N]                    Eq. (13) across all primitives
@@ -79,6 +81,18 @@ fn config_from(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.to_string();
+    }
+    if let Some(n) = args.get_usize("checkpoint-every")? {
+        cfg.checkpoint_every = n;
+    }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = dir.to_string();
+    }
+    if let Some(dir) = args.get("resume-from") {
+        cfg.resume_from = Some(dir.to_string());
+    }
+    if let Some(plan) = args.get("fault-plan") {
+        cfg.fault_plan = Some(plan.to_string());
     }
     cfg.validate()?;
     Ok(cfg)

@@ -69,6 +69,25 @@ impl MetricLog {
         self.set_meta("comm_pool_reserved", s.pool.reserved);
     }
 
+    /// Surface the comm engine's fault-injection and recovery counters as
+    /// run metadata (`fault_*` keys) — the health surface of the failure
+    /// model: injected faults, retries/retransmits, suppressed
+    /// duplicates, the straggler watchdog's count, swept abandons, and
+    /// the longest single stall. A fault-free run reports all zeros.
+    pub fn set_fault_stats(&mut self, s: &crate::comm::faults::FaultStats) {
+        self.set_meta("fault_injected_delays", s.injected_delays);
+        self.set_meta("fault_injected_drops", s.injected_drops);
+        self.set_meta("fault_injected_dups", s.injected_dups);
+        self.set_meta("fault_injected_reorders", s.injected_reorders);
+        self.set_meta("fault_injected_truncations", s.injected_truncations);
+        self.set_meta("fault_dups_suppressed", s.dups_suppressed);
+        self.set_meta("fault_retries", s.retries);
+        self.set_meta("fault_retransmits", s.retransmits);
+        self.set_meta("fault_stragglers", s.stragglers);
+        self.set_meta("fault_abandoned_swept", s.abandoned_swept);
+        self.set_meta("fault_max_stall_s", format!("{:.6}", s.max_stall_s));
+    }
+
     /// Surface a rank's tensor-storage counters as run metadata
     /// (`tensor_*` keys): how many tensors were constructed pool-backed
     /// (the zero-copy receive sides) and how many paid a copy-on-write
@@ -322,6 +341,34 @@ mod tests {
         assert_eq!(log.meta["pp_bubble_measured"], "0.2900");
         assert_eq!(log.meta["pp_bubble_analytic"], "0.2727");
         assert_eq!(log.meta["pp_queue_depth"], "4");
+    }
+
+    #[test]
+    fn fault_stats_surface_as_meta() {
+        let mut log = MetricLog::new();
+        let stats = crate::comm::faults::FaultStats {
+            injected_delays: 3,
+            injected_drops: 1,
+            injected_dups: 2,
+            dups_suppressed: 2,
+            retries: 4,
+            retransmits: 1,
+            stragglers: 1,
+            abandoned_swept: 0,
+            max_stall_s: 0.5,
+            ..Default::default()
+        };
+        log.set_fault_stats(&stats);
+        assert_eq!(log.meta["fault_injected_delays"], "3");
+        assert_eq!(log.meta["fault_injected_drops"], "1");
+        assert_eq!(log.meta["fault_injected_dups"], "2");
+        assert_eq!(log.meta["fault_injected_reorders"], "0");
+        assert_eq!(log.meta["fault_dups_suppressed"], "2");
+        assert_eq!(log.meta["fault_retries"], "4");
+        assert_eq!(log.meta["fault_retransmits"], "1");
+        assert_eq!(log.meta["fault_stragglers"], "1");
+        assert_eq!(log.meta["fault_abandoned_swept"], "0");
+        assert_eq!(log.meta["fault_max_stall_s"], "0.500000");
     }
 
     #[test]

@@ -30,6 +30,15 @@
 //! ring chunk are drawn with [`Comm::pool_take`], and [`DataParallel`]
 //! pre-reserves per-size-class pool depths at first use, so steady-state
 //! steps average gradients with zero allocations.
+//!
+//! The ring is **retry-safe** by construction: every chunk send rides the
+//! comm engine's per-`(sender, tag)` wire-sequence layer
+//! ([`crate::comm`]'s failure model), so a delayed, duplicated, or
+//! reordered ring message is resequenced — and a dropped one
+//! retransmitted — before the receiving rank's `add` runs. The per-step
+//! add order is therefore fixed even under an active fault plan, which is
+//! why chaos runs converge to gradients bitwise identical to fault-free
+//! ones.
 
 use crate::autograd::NetworkState;
 use crate::comm::{Comm, CommGroup};

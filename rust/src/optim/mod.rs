@@ -95,6 +95,37 @@ impl<T: Scalar> Adam<T> {
         }
     }
 
+    /// Step count so far (the bias-correction clock `t`) — serialized by
+    /// [`crate::checkpoint`].
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// The first- and second-moment estimates, in
+    /// [`NetworkState::params_and_grads`] order (empty before the first
+    /// step — moments are sized lazily).
+    pub fn moments(&self) -> (&[Tensor<T>], &[Tensor<T>]) {
+        (&self.m, &self.v)
+    }
+
+    /// Restore the optimizer clock and moment estimates from a
+    /// checkpoint. The moment vectors must be same-length (in
+    /// [`NetworkState::params_and_grads`] order), or both empty for an
+    /// optimizer checkpointed before its first step.
+    pub fn restore(&mut self, t: u64, m: Vec<Tensor<T>>, v: Vec<Tensor<T>>) -> Result<()> {
+        if m.len() != v.len() {
+            return Err(crate::error::Error::Config(format!(
+                "Adam restore: {} first moments vs {} second moments",
+                m.len(),
+                v.len()
+            )));
+        }
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+
     /// Apply one Adam step to this rank's parameters.
     pub fn step(&mut self, net: &mut NetworkState<T>) -> Result<()> {
         let pairs: Vec<_> = net.params_and_grads().collect();

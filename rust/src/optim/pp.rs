@@ -56,6 +56,16 @@
 //! stage's layers (other layers' [`LayerState`](crate::autograd::LayerState)s
 //! are empty). The per-micro-batch activation stash is a pointer swap
 //! ([`NetworkState::swap_stash`]), not a copy.
+//!
+//! Stage boundaries inherit the comm engine's failure model
+//! ([`crate::comm`]): each boundary is a distinct `(sender, tag)` stream,
+//! so the wire-sequence layer keeps micro-batch activations and
+//! cotangents in micro order under injected delay/duplicate/reorder
+//! faults, and a rank stalled on a dropped boundary message recovers it
+//! by retransmit instead of deadlocking the schedule. Because state is
+//! stage-local, [`crate::checkpoint`] snapshots compose per rank: every
+//! stage saves its own parameters and moments, and a resumed pipeline
+//! replays the identical micro-batch stream from the saved step index.
 
 use crate::autograd::{Network, NetworkState};
 use crate::comm::Comm;

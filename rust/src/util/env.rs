@@ -14,9 +14,13 @@
 //! behaviour.
 //!
 //! Zero is deliberately reported as `Value(0)`, not folded into a
-//! default: the call sites give zero its policy meaning (`0` worker
-//! threads and `0` timeout fall back to the default, `0` cap bytes means
-//! *uncapped*).
+//! default: the call sites give zero its policy meaning, and that meaning
+//! is uniform — **`0` lifts the limit**. `0` cap bytes means *uncapped*
+//! (scratch arenas, comm pools), `0` timeout milliseconds means *no
+//! deadline* (`PALLAS_RECV_TIMEOUT_MS`) or *no retries*
+//! (`PALLAS_RETRY_TIMEOUT_MS`). The one exception is
+//! `PALLAS_GEMM_THREADS`, where `0` workers is meaningless and falls back
+//! to the default.
 
 /// Result of reading a `PALLAS_*` integer environment variable.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
