@@ -17,6 +17,13 @@
 //! local shard). [`adjoint_residual`] runs the test across a live
 //! [`crate::comm::Cluster`], computing the global inner products from
 //! per-rank partials exactly as a production MPI implementation would.
+//!
+//! Eq. (13) has a *static* shadow: if F and F* are coherent, F*'s
+//! message schedule must be F's transposed (every forward edge
+//! `src → dst` answered by an adjoint edge `dst → src` of equal
+//! volume). [`crate::analysis`] checks that structural half of the
+//! relationship without executing any kernel math, complementing the
+//! numerical residual this module computes on a live cluster.
 
 use crate::comm::{Cluster, Comm};
 use crate::error::Result;

@@ -1,0 +1,279 @@
+//! Plan capture: drive a model's operators in capture mode and join the
+//! per-rank logs into a [`PlanGraph`].
+//!
+//! The harness never touches kernel math. Each layer exposes its
+//! data-movement operators through
+//! [`Layer::comm_ops`](crate::autograd::Layer::comm_ops); the driver runs
+//! every operator's `forward` on zero-filled tensors of its declared
+//! domain shard (in layer order), then every `adjoint` on zeros of the
+//! codomain shard (in reverse order), then one data-parallel averaging
+//! step — exactly the communication skeleton of a training step, phases
+//! stamped [`Phase::Forward`] / [`Phase::Backward`] /
+//! [`Phase::DataParallel`] for the duality analysis.
+//!
+//! [`Geometry`] enumerates the shipped model × topology grid
+//! ([`shipped_geometries`]): the sequential and four-worker LeNet-5
+//! layouts, their DP-replicated hybrids, the S ∈ {2, 4} pipeline cuts,
+//! the DP×PP hybrid, and the balanced affine tower.
+
+use super::{PlanGraph, RankLog};
+use crate::adjoint::DistLinearOp;
+use crate::autograd::Network;
+use crate::comm::plan::{Phase, PlanScope};
+use crate::comm::{Cluster, Comm};
+use crate::config::TrainConfig;
+use crate::coordinator::DP_TAG_BASE;
+use crate::error::Result;
+use crate::models::{
+    affine_tower_pipeline, lenet5_at, lenet5_pipeline, LeNetConfig, LeNetLayout, TowerConfig,
+};
+use crate::nn::{LocalKernels, NativeKernels};
+use crate::optim::dp::DataParallel;
+use crate::partition::HybridTopology;
+use crate::tensor::{Scalar, Tensor};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-receive deadline during capture. A structurally blocked plan must
+/// surface as a `RecvTimeout` marker for the deadlock analysis, not hang
+/// the verifier; a healthy capture never waits anywhere near this long
+/// (there is no compute between messages).
+const CAPTURE_TIMEOUT: Duration = Duration::from_millis(1_500);
+
+/// Run `drive` on every rank of a `world`-sized cluster in plan-capture
+/// mode and join the recorded logs. A rank whose drive errors (a broken
+/// plan times out rather than completing) contributes its partial log
+/// plus the error message — the verifier treats both as findings.
+pub fn capture_plan<F>(world: usize, drive: F) -> Result<PlanGraph>
+where
+    F: Fn(&mut Comm) -> Result<()> + Send + Sync,
+{
+    let ranks = Cluster::run(world, |comm| {
+        comm.set_recv_timeout(Some(CAPTURE_TIMEOUT));
+        comm.plan_begin();
+        let error = drive(comm).err().map(|e| e.to_string());
+        let events = comm.plan_take().unwrap_or_default();
+        Ok(RankLog {
+            rank: comm.rank(),
+            events,
+            error,
+        })
+    })?;
+    Ok(PlanGraph { world, ranks })
+}
+
+/// Drive every communication operator of `net` once forward (layer
+/// order) and once adjoint (reverse order) on zero-filled shard-shaped
+/// tensors, under a scope naming the layer and the operator's role.
+pub fn drive_network<T: Scalar>(net: &Network<T>, comm: &mut Comm) -> Result<()> {
+    comm.plan_phase(Phase::Forward);
+    for (li, layer) in net.layers().iter().enumerate() {
+        for (role, op) in layer.comm_ops() {
+            let _scope = PlanScope::enter(comm, || format!("L{li:02}:{}/{role}", layer.name()));
+            let x = op
+                .domain_shape(comm.rank())
+                .map(|s| Tensor::<T>::zeros(&s));
+            op.forward(comm, x)?;
+        }
+    }
+    comm.plan_phase(Phase::Backward);
+    for (li, layer) in net.layers().iter().enumerate().rev() {
+        let ops = layer.comm_ops();
+        for (role, op) in ops.iter().rev() {
+            let _scope = PlanScope::enter(comm, || format!("L{li:02}:{}/{role}", layer.name()));
+            let y = op
+                .codomain_shape(comm.rank())
+                .map(|s| Tensor::<T>::zeros(&s));
+            op.adjoint(comm, y)?;
+        }
+    }
+    Ok(())
+}
+
+/// Drive one data-parallel averaging step over `net`'s (zero) gradients
+/// under [`Phase::DataParallel`]. Inert when the topology has a single
+/// replica, exactly like training.
+pub fn drive_dp<T: Scalar>(
+    net: &Network<T>,
+    topo: &HybridTopology,
+    comm: &mut Comm,
+) -> Result<()> {
+    comm.plan_phase(Phase::DataParallel);
+    let mut state = net.init(comm.rank(), 0)?;
+    let mut dp = DataParallel::<T>::for_rank(topo, comm.rank(), DP_TAG_BASE);
+    dp.finish(comm, &mut state)
+}
+
+/// A model × topology whose communication plan can be captured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Geometry {
+    /// LeNet-5 on a worker layout, replicated `replicas` times.
+    LeNet {
+        /// Worker layout of each replica's model grid.
+        layout: LeNetLayout,
+        /// Data-parallel replicas.
+        replicas: usize,
+    },
+    /// LeNet-5 cut into pipeline stages, replicated `replicas` times.
+    LeNetPipeline {
+        /// Pipeline stages per replica.
+        stages: usize,
+        /// Data-parallel replicas.
+        replicas: usize,
+    },
+    /// The balanced affine tower, one block per stage.
+    Tower {
+        /// Pipeline stages.
+        stages: usize,
+    },
+}
+
+impl Geometry {
+    /// World size the geometry occupies.
+    pub fn world(&self) -> usize {
+        match *self {
+            Geometry::LeNet { layout, replicas } => layout.world_size() * replicas,
+            Geometry::LeNetPipeline { stages, replicas } => stages * replicas,
+            Geometry::Tower { stages } => stages,
+        }
+    }
+
+    /// The geometry a training configuration runs on (mirrors the
+    /// dispatch in [`crate::coordinator::train`]).
+    pub fn of_config(cfg: &TrainConfig) -> Geometry {
+        if cfg.stages > 1 {
+            Geometry::LeNetPipeline {
+                stages: cfg.stages,
+                replicas: cfg.replicas,
+            }
+        } else if cfg.distributed {
+            Geometry::LeNet {
+                layout: LeNetLayout::FourWorker,
+                replicas: cfg.replicas,
+            }
+        } else {
+            Geometry::LeNet {
+                layout: LeNetLayout::Sequential,
+                replicas: cfg.replicas,
+            }
+        }
+    }
+
+    /// Look a geometry up by its [`shipped_geometries`] name.
+    pub fn from_name(name: &str) -> Option<Geometry> {
+        shipped_geometries()
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, g)| *g)
+    }
+
+    /// Capture this geometry's full plan at the given per-replica batch
+    /// size: per-layer forward and adjoint schedules plus one DP
+    /// averaging round.
+    pub fn capture(&self, batch: usize) -> Result<PlanGraph> {
+        let kernels: Arc<dyn LocalKernels<f32>> = Arc::new(NativeKernels);
+        match *self {
+            Geometry::LeNet { layout, replicas } => {
+                let topo = HybridTopology::new(replicas, layout.world_size())?;
+                let cfg = LeNetConfig { batch, layout };
+                let mut nets = Vec::with_capacity(replicas);
+                for k in 0..replicas {
+                    nets.push(lenet5_at(&cfg, kernels.clone(), topo.replica_base(k))?);
+                }
+                capture_plan(topo.world(), |comm| {
+                    let net = &nets[topo.replica_of(comm.rank())];
+                    drive_network(net, comm)?;
+                    drive_dp(net, &topo, comm)
+                })
+            }
+            Geometry::LeNetPipeline { stages, replicas } => {
+                let topo = HybridTopology::with_stages(replicas, stages, 1)?;
+                let cfg = LeNetConfig {
+                    batch,
+                    layout: LeNetLayout::Sequential,
+                };
+                let mut nets = Vec::with_capacity(replicas);
+                for k in 0..replicas {
+                    let (net, _) =
+                        lenet5_pipeline(&cfg, kernels.clone(), stages, topo.replica_base(k))?;
+                    nets.push(net);
+                }
+                capture_plan(topo.world(), |comm| {
+                    let net = &nets[topo.replica_of(comm.rank())];
+                    drive_network(net, comm)?;
+                    drive_dp(net, &topo, comm)
+                })
+            }
+            Geometry::Tower { stages } => {
+                let cfg = TowerConfig {
+                    batch,
+                    width: 16,
+                    depth: stages,
+                };
+                let (net, _) = affine_tower_pipeline(&cfg, kernels, stages, 0)?;
+                let topo = HybridTopology::with_stages(1, stages, 1)?;
+                capture_plan(stages, |comm| {
+                    drive_network(&net, comm)?;
+                    drive_dp(&net, &topo, comm)
+                })
+            }
+        }
+    }
+}
+
+/// Every shipped model × topology, by name: the grid the `check` CLI
+/// subcommand and the CI plan-check matrix sweep.
+pub fn shipped_geometries() -> Vec<(&'static str, Geometry)> {
+    vec![
+        (
+            "lenet-seq",
+            Geometry::LeNet {
+                layout: LeNetLayout::Sequential,
+                replicas: 1,
+            },
+        ),
+        (
+            "lenet-4worker",
+            Geometry::LeNet {
+                layout: LeNetLayout::FourWorker,
+                replicas: 1,
+            },
+        ),
+        (
+            "dp2",
+            Geometry::LeNet {
+                layout: LeNetLayout::Sequential,
+                replicas: 2,
+            },
+        ),
+        (
+            "dp2x4",
+            Geometry::LeNet {
+                layout: LeNetLayout::FourWorker,
+                replicas: 2,
+            },
+        ),
+        (
+            "pp2",
+            Geometry::LeNetPipeline {
+                stages: 2,
+                replicas: 1,
+            },
+        ),
+        (
+            "pp4",
+            Geometry::LeNetPipeline {
+                stages: 4,
+                replicas: 1,
+            },
+        ),
+        (
+            "dp2xpp2",
+            Geometry::LeNetPipeline {
+                stages: 2,
+                replicas: 2,
+            },
+        ),
+        ("tower4", Geometry::Tower { stages: 4 }),
+    ]
+}

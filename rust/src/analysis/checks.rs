@@ -1,0 +1,419 @@
+//! The five static analyses over a captured [`PlanGraph`].
+//!
+//! All of them are pure functions of the joined per-rank event logs; the
+//! shared vocabulary is the *stream* `(src, dst, tag)` and the *message
+//! key* `(src, dst, tag, seq)` — the engine's nonovertaking rule assigns
+//! send `seq k` on a stream to receive-post `seq k` on the same stream,
+//! so matching is exact, not heuristic.
+
+use super::{DualityEdge, PlanGraph, PlanReport, Violation};
+use crate::comm::plan::{Phase, PlanEvent, ScopedEvent};
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+
+/// `(src, dst, tag)` — one ordered message stream.
+type StreamKey = (usize, usize, u64);
+/// `(src, dst, tag, seq)` — one message on a stream.
+type MsgKey = (usize, usize, u64, u64);
+
+/// Run every analysis over `graph` and assemble the report: rank errors
+/// first, then endpoint matching, tag collisions, deadlock freedom,
+/// adjoint duality, and pool balance.
+pub fn verify(graph: &PlanGraph) -> PlanReport {
+    let mut violations = Vec::new();
+    for log in &graph.ranks {
+        if let Some(message) = &log.error {
+            violations.push(Violation::RankError {
+                rank: log.rank,
+                message: message.clone(),
+            });
+        }
+    }
+    violations.extend(check_endpoints(graph));
+    violations.extend(check_tag_collisions(graph));
+    violations.extend(check_deadlock(graph));
+    violations.extend(check_duality(graph));
+    violations.extend(check_pool_balance(graph));
+    PlanReport {
+        world: graph.world,
+        sends: graph.send_count(),
+        bytes: graph.send_bytes(),
+        streams: graph.stream_count(),
+        violations,
+    }
+}
+
+/// Endpoint matching: every send pairs with exactly one posted receive
+/// (same message key) agreeing on dtype; completed receives must agree
+/// on byte length. The `"bytes"` dtype (raw wire payloads) matches any
+/// element type — the receiver decodes the header itself.
+fn check_endpoints(graph: &PlanGraph) -> Vec<Violation> {
+    let mut sends: BTreeMap<MsgKey, (&ScopedEvent, usize, &'static str)> = BTreeMap::new();
+    let mut posts: BTreeMap<MsgKey, (&ScopedEvent, &'static str)> = BTreeMap::new();
+    let mut completes: BTreeMap<MsgKey, usize> = BTreeMap::new();
+    for log in &graph.ranks {
+        for ev in &log.events {
+            match &ev.event {
+                PlanEvent::Send {
+                    dst,
+                    tag,
+                    seq,
+                    bytes,
+                    dtype,
+                    ..
+                } => {
+                    sends.insert((log.rank, *dst, *tag, *seq), (ev, *bytes, dtype));
+                }
+                PlanEvent::RecvPost {
+                    src,
+                    tag,
+                    seq,
+                    dtype,
+                } => {
+                    posts.insert((*src, log.rank, *tag, *seq), (ev, dtype));
+                }
+                PlanEvent::RecvComplete {
+                    src,
+                    tag,
+                    seq,
+                    bytes,
+                } => {
+                    completes.insert((*src, log.rank, *tag, *seq), *bytes);
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut v = Vec::new();
+    for (&(src, dst, tag, seq), &(ev, bytes, dtype)) in &sends {
+        match posts.get(&(src, dst, tag, seq)) {
+            None => v.push(Violation::UnmatchedSend {
+                src,
+                dst,
+                tag,
+                seq,
+                bytes,
+                scope: ev.scope.clone(),
+            }),
+            Some(&(pev, rdtype)) => {
+                if dtype != rdtype && dtype != "bytes" && rdtype != "bytes" {
+                    v.push(Violation::DtypeMismatch {
+                        src,
+                        dst,
+                        tag,
+                        seq,
+                        sent: dtype.to_string(),
+                        expected: rdtype.to_string(),
+                        scope: pev.scope.clone(),
+                    });
+                }
+            }
+        }
+        if let Some(&received) = completes.get(&(src, dst, tag, seq)) {
+            if received != bytes {
+                v.push(Violation::ByteMismatch {
+                    src,
+                    dst,
+                    tag,
+                    seq,
+                    sent: bytes,
+                    received,
+                    scope: ev.scope.clone(),
+                });
+            }
+        }
+    }
+    for (&(src, dst, tag, seq), &(ev, _)) in &posts {
+        if !sends.contains_key(&(src, dst, tag, seq)) {
+            v.push(Violation::UnmatchedRecv {
+                src,
+                dst,
+                tag,
+                seq,
+                scope: ev.scope.clone(),
+            });
+        }
+    }
+    v
+}
+
+/// Tag-space collisions: a stream used by two different operator scopes.
+/// Matching on a stream is by arrival order, so interleaved traffic from
+/// two operators can cross-deliver even when every message individually
+/// pairs up — the layer tag-base discipline exists to prevent exactly
+/// this.
+fn check_tag_collisions(graph: &PlanGraph) -> Vec<Violation> {
+    let mut streams: BTreeMap<StreamKey, BTreeSet<&str>> = BTreeMap::new();
+    for log in &graph.ranks {
+        for ev in &log.events {
+            if let PlanEvent::Send { dst, tag, .. } = &ev.event {
+                streams
+                    .entry((log.rank, *dst, *tag))
+                    .or_default()
+                    .insert(ev.scope.as_str());
+            }
+        }
+    }
+    streams
+        .into_iter()
+        .filter(|(_, scopes)| scopes.len() > 1)
+        .map(|((src, dst, tag), scopes)| Violation::TagCollision {
+            src,
+            dst,
+            tag,
+            scopes: scopes.into_iter().map(String::from).collect(),
+        })
+        .collect()
+}
+
+/// Deadlock freedom, by replay: advance every rank through its recorded
+/// schedule under the engine's rules — sends are eager (never block),
+/// receive posts never block, a completion blocks until the matching
+/// send has been emitted, a recorded timeout blocks forever (it is the
+/// capture's own evidence the message never came), and a barrier blocks
+/// until the whole world parks at one. When no rank can advance, the
+/// blocked completions induce the cross-rank wait-for graph: its cycles
+/// are deadlocks, its dead ends starved receives, and ranks parked at an
+/// unreachable barrier a barrier mismatch.
+fn check_deadlock(graph: &PlanGraph) -> Vec<Violation> {
+    let n = graph.ranks.len();
+    let mut pc = vec![0usize; n];
+    let mut emitted: HashSet<MsgKey> = HashSet::new();
+    let mut v = Vec::new();
+    let mut barrier_mismatch_reported = false;
+    loop {
+        let mut progress = false;
+        for r in 0..n {
+            let events = &graph.ranks[r].events;
+            while pc[r] < events.len() {
+                match &events[pc[r]].event {
+                    PlanEvent::Send { dst, tag, seq, .. } => {
+                        emitted.insert((r, *dst, *tag, *seq));
+                        pc[r] += 1;
+                        progress = true;
+                    }
+                    PlanEvent::RecvPost { .. } => {
+                        pc[r] += 1;
+                        progress = true;
+                    }
+                    PlanEvent::RecvComplete { src, tag, seq, .. } => {
+                        if emitted.contains(&(*src, r, *tag, *seq)) {
+                            pc[r] += 1;
+                            progress = true;
+                        } else {
+                            break;
+                        }
+                    }
+                    PlanEvent::RecvTimeout { .. } => break,
+                    PlanEvent::Barrier { .. } => break,
+                }
+            }
+        }
+        let all_at_barrier = n > 0
+            && (0..n).all(|r| {
+                pc[r] < graph.ranks[r].events.len()
+                    && matches!(
+                        graph.ranks[r].events[pc[r]].event,
+                        PlanEvent::Barrier { .. }
+                    )
+            });
+        if all_at_barrier {
+            let indices: BTreeSet<usize> = (0..n)
+                .filter_map(|r| match graph.ranks[r].events[pc[r]].event {
+                    PlanEvent::Barrier { index } => Some(index),
+                    _ => None,
+                })
+                .collect();
+            if indices.len() > 1 && !barrier_mismatch_reported {
+                v.push(Violation::BarrierMismatch {
+                    waiting: (0..n).collect(),
+                });
+                barrier_mismatch_reported = true;
+            }
+            for p in pc.iter_mut() {
+                *p += 1;
+            }
+            progress = true;
+        }
+        if !progress {
+            break;
+        }
+    }
+
+    let stuck: Vec<usize> = (0..n)
+        .filter(|&r| pc[r] < graph.ranks[r].events.len())
+        .collect();
+    if stuck.is_empty() {
+        return v;
+    }
+    // The wait-for graph: each blocked rank waits on exactly one sender.
+    let mut await_of: BTreeMap<usize, (usize, u64, u64, String)> = BTreeMap::new();
+    let mut barrier_waiting = Vec::new();
+    for &r in &stuck {
+        let ev = &graph.ranks[r].events[pc[r]];
+        match &ev.event {
+            PlanEvent::RecvComplete { src, tag, seq, .. }
+            | PlanEvent::RecvTimeout { src, tag, seq } => {
+                await_of.insert(r, (*src, *tag, *seq, ev.scope.clone()));
+            }
+            PlanEvent::Barrier { .. } => barrier_waiting.push(r),
+            _ => {}
+        }
+    }
+    if !barrier_waiting.is_empty() && !barrier_mismatch_reported {
+        v.push(Violation::BarrierMismatch {
+            waiting: barrier_waiting,
+        });
+    }
+    // Follow the single-successor wait chains; a revisit on the current
+    // path closes a cycle.
+    let mut in_cycle: HashSet<usize> = HashSet::new();
+    let mut reported_cycles: BTreeSet<Vec<usize>> = BTreeSet::new();
+    for &start in &stuck {
+        if !await_of.contains_key(&start) {
+            continue;
+        }
+        let mut path: Vec<usize> = Vec::new();
+        let mut seen_at: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut cur = start;
+        loop {
+            if let Some(&i) = seen_at.get(&cur) {
+                let mut cycle: Vec<usize> = path[i..].to_vec();
+                if let Some(minpos) = cycle
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, r)| *r)
+                    .map(|(i, _)| i)
+                {
+                    cycle.rotate_left(minpos);
+                }
+                for &r in &cycle {
+                    in_cycle.insert(r);
+                }
+                if reported_cycles.insert(cycle.clone()) {
+                    v.push(Violation::Deadlock { cycle });
+                }
+                break;
+            }
+            seen_at.insert(cur, path.len());
+            path.push(cur);
+            match await_of.get(&cur) {
+                Some((src, _, _, _)) => cur = *src,
+                None => break, // chain ends at a finished or barrier-parked rank
+            }
+        }
+    }
+    for (r, (src, tag, seq, scope)) in &await_of {
+        if !in_cycle.contains(r) {
+            v.push(Violation::StarvedRecv {
+                rank: *r,
+                src: *src,
+                tag: *tag,
+                seq: *seq,
+                scope: scope.clone(),
+            });
+        }
+    }
+    v
+}
+
+/// Adjoint duality, the static shadow of Eq. 13: per operator scope, the
+/// backward volume matrix must be the forward one transposed — or equal
+/// to it, for the self-adjoint ring schedules whose adjoint re-runs the
+/// forward rotation. Forward traffic with an empty backward plan is the
+/// broken-adjoint defect. Setup and data-parallel traffic carries no
+/// duality claim and is excluded.
+fn check_duality(graph: &PlanGraph) -> Vec<Violation> {
+    type Volumes = BTreeMap<(usize, usize), usize>;
+    let mut per: BTreeMap<&str, (Volumes, Volumes)> = BTreeMap::new();
+    for log in &graph.ranks {
+        for ev in &log.events {
+            if let PlanEvent::Send { dst, bytes, .. } = &ev.event {
+                let entry = per.entry(ev.scope.as_str()).or_default();
+                let vols = match ev.phase {
+                    Phase::Forward => &mut entry.0,
+                    Phase::Backward => &mut entry.1,
+                    _ => continue,
+                };
+                *vols.entry((log.rank, *dst)).or_insert(0) += *bytes;
+            }
+        }
+    }
+    let mut v = Vec::new();
+    for (scope, (fwd, bwd)) in &per {
+        if fwd.is_empty() {
+            continue;
+        }
+        if bwd.is_empty() {
+            v.push(Violation::MissingAdjoint {
+                scope: scope.to_string(),
+                forward_bytes: fwd.values().sum(),
+            });
+            continue;
+        }
+        let transpose: Volumes = fwd.iter().map(|(&(s, d), &b)| ((d, s), b)).collect();
+        if *bwd == transpose || bwd == fwd {
+            continue;
+        }
+        let keys: BTreeSet<(usize, usize)> =
+            transpose.keys().chain(bwd.keys()).copied().collect();
+        let edges: Vec<DualityEdge> = keys
+            .into_iter()
+            .filter_map(|k| {
+                let expected = transpose.get(&k).copied().unwrap_or(0);
+                let actual = bwd.get(&k).copied().unwrap_or(0);
+                (expected != actual).then_some(DualityEdge {
+                    src: k.0,
+                    dst: k.1,
+                    expected,
+                    actual,
+                })
+            })
+            .collect();
+        v.push(Violation::DualityMismatch {
+            scope: scope.to_string(),
+            edges,
+        });
+    }
+    v
+}
+
+/// Pool balance: every pooled staging send must be received by someone —
+/// the receiver's payload drop is what returns the registered buffer to
+/// the sender's pool, so an unreceived pooled send strands its buffer
+/// forever.
+fn check_pool_balance(graph: &PlanGraph) -> Vec<Violation> {
+    let mut completes: HashSet<MsgKey> = HashSet::new();
+    for log in &graph.ranks {
+        for ev in &log.events {
+            if let PlanEvent::RecvComplete { src, tag, seq, .. } = &ev.event {
+                completes.insert((*src, log.rank, *tag, *seq));
+            }
+        }
+    }
+    let mut v = Vec::new();
+    for log in &graph.ranks {
+        for ev in &log.events {
+            if let PlanEvent::Send {
+                dst,
+                tag,
+                seq,
+                bytes,
+                pooled,
+                ..
+            } = &ev.event
+            {
+                if *pooled && !completes.contains(&(log.rank, *dst, *tag, *seq)) {
+                    v.push(Violation::PoolLeak {
+                        src: log.rank,
+                        dst: *dst,
+                        tag: *tag,
+                        seq: *seq,
+                        bytes: *bytes,
+                        scope: ev.scope.clone(),
+                    });
+                }
+            }
+        }
+    }
+    v
+}

@@ -1,0 +1,414 @@
+//! Static communication-plan verification: pre-flight analysis of the
+//! full cross-rank message schedule, without executing any kernel math.
+//!
+//! The paper's central move — every data-movement operation is a *linear
+//! operator* with a hand-derived adjoint (Eq. 12) — has a structural
+//! consequence this module exploits: the complete communication plan of a
+//! model × topology is a finite object that can be extracted and checked
+//! *before* a run starts. A [`Comm`](crate::comm::Comm) endpoint switched
+//! into capture mode records every send post, receive post, completion,
+//! and barrier ([`crate::comm::plan`]); the capture harness
+//! ([`capture`]) drives each layer's operators through the very same
+//! [`DistLinearOp`](crate::adjoint::DistLinearOp) interface training
+//! uses, on zero-filled tensors of the declared shard shapes, so the
+//! recorded schedule is the schedule the real run would issue.
+//!
+//! Five analyses run over the joined per-rank logs ([`checks::verify`]):
+//!
+//! 1. **Endpoint matching** — every posted send has exactly one matching
+//!    posted receive (same `(src, dst, tag)` stream, same sequence
+//!    number), with agreeing byte length and element type.
+//! 2. **Tag-space collision** — no `(src, dst, tag)` stream carries
+//!    traffic from two different operators, across composed layers, DP
+//!    rings, and pipeline-stage boundaries.
+//! 3. **Deadlock freedom** — a replay simulation advances each rank
+//!    through its recorded schedule under the engine's ordering rules
+//!    (eager sends, blocking completions, full-world barriers); a stuck
+//!    state yields the cross-rank wait-for graph, whose cycles are
+//!    reported as deadlocks and whose dead ends as starved receives.
+//! 4. **Adjoint duality** — per operator scope, the backward plan must be
+//!    the forward plan transposed (sources and destinations swapped,
+//!    volumes equal) or, for self-adjoint ring schedules, identical to
+//!    it: the static shadow of the Eq. 13 coherence `⟨Fx, y⟩ = ⟨x, F*y⟩`.
+//! 5. **Pool balance** — every pooled staging send is received by someone
+//!    who will return the buffer to its owner's pool.
+//!
+//! Entry points: the `check` CLI subcommand sweeps every shipped
+//! model × topology ([`capture::shipped_geometries`]); training runs can
+//! opt in to a pre-flight of their own geometry via
+//! [`TrainConfig::preflight_check`](crate::config::TrainConfig::preflight_check)
+//! (see [`preflight`]).
+
+pub mod capture;
+pub mod checks;
+
+use crate::comm::plan::{PlanEvent, ScopedEvent};
+use crate::config::TrainConfig;
+use crate::error::{Error, Result};
+use std::collections::BTreeSet;
+use std::fmt;
+
+pub use capture::{capture_plan, drive_network, shipped_geometries, Geometry};
+pub use checks::verify;
+
+/// One rank's captured event log.
+#[derive(Debug)]
+pub struct RankLog {
+    /// World rank the log belongs to.
+    pub rank: usize,
+    /// Events in program order.
+    pub events: Vec<ScopedEvent>,
+    /// Error the capture drive ended with, if any (a deliberately broken
+    /// plan times out rather than completing; the partial log up to the
+    /// timeout is still analyzable).
+    pub error: Option<String>,
+}
+
+/// The joined cross-rank message schedule of one model × topology.
+#[derive(Debug)]
+pub struct PlanGraph {
+    /// World size the plan was captured on.
+    pub world: usize,
+    /// Per-rank logs, in rank order.
+    pub ranks: Vec<RankLog>,
+}
+
+impl PlanGraph {
+    /// Total posted sends across all ranks.
+    pub fn send_count(&self) -> usize {
+        self.ranks
+            .iter()
+            .flat_map(|l| &l.events)
+            .filter(|e| matches!(e.event, PlanEvent::Send { .. }))
+            .count()
+    }
+
+    /// Total wire-equivalent bytes posted.
+    pub fn send_bytes(&self) -> usize {
+        self.ranks
+            .iter()
+            .flat_map(|l| &l.events)
+            .filter_map(|e| match e.event {
+                PlanEvent::Send { bytes, .. } => Some(bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Distinct `(src, dst, tag)` streams carrying at least one send.
+    pub fn stream_count(&self) -> usize {
+        let mut streams = BTreeSet::new();
+        for log in &self.ranks {
+            for e in &log.events {
+                if let PlanEvent::Send { dst, tag, .. } = e.event {
+                    streams.insert((log.rank, dst, tag));
+                }
+            }
+        }
+        streams.len()
+    }
+}
+
+/// One mismatched edge in an adjoint-duality finding: the backward volume
+/// observed on `src -> dst` against what the forward transpose predicts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DualityEdge {
+    /// Sending rank of the backward edge.
+    pub src: usize,
+    /// Receiving rank of the backward edge.
+    pub dst: usize,
+    /// Bytes the forward transpose predicts on this edge.
+    pub expected: usize,
+    /// Bytes the backward plan actually moves on this edge.
+    pub actual: usize,
+}
+
+/// A finding from the static analyses. Every variant names the ranks,
+/// tags, and operator scopes involved, so a report pinpoints the defect
+/// without re-running anything.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// A posted send no receiver ever posts a matching receive for.
+    UnmatchedSend {
+        /// Sending rank.
+        src: usize,
+        /// Destination rank.
+        dst: usize,
+        /// Message tag.
+        tag: u64,
+        /// Stream sequence number.
+        seq: u64,
+        /// Payload bytes.
+        bytes: usize,
+        /// Scope of the sending operator.
+        scope: String,
+    },
+    /// A posted receive no sender ever posts a matching send for.
+    UnmatchedRecv {
+        /// Expected source rank.
+        src: usize,
+        /// Posting (destination) rank.
+        dst: usize,
+        /// Message tag.
+        tag: u64,
+        /// Stream sequence number.
+        seq: u64,
+        /// Scope of the posting operator.
+        scope: String,
+    },
+    /// Sender and receiver disagree on the element type of a message.
+    DtypeMismatch {
+        /// Sending rank.
+        src: usize,
+        /// Destination rank.
+        dst: usize,
+        /// Message tag.
+        tag: u64,
+        /// Stream sequence number.
+        seq: u64,
+        /// Element type the sender posts.
+        sent: String,
+        /// Element type the receiver expects.
+        expected: String,
+        /// Scope of the receiving operator.
+        scope: String,
+    },
+    /// Sender and receiver disagree on the byte length of a message.
+    ByteMismatch {
+        /// Sending rank.
+        src: usize,
+        /// Destination rank.
+        dst: usize,
+        /// Message tag.
+        tag: u64,
+        /// Stream sequence number.
+        seq: u64,
+        /// Bytes posted by the sender.
+        sent: usize,
+        /// Bytes the receiver completed with.
+        received: usize,
+        /// Scope of the sending operator.
+        scope: String,
+    },
+    /// One `(src, dst, tag)` stream carries sends from more than one
+    /// operator — matching is by stream order, so interleavings from
+    /// different operators can cross-deliver.
+    TagCollision {
+        /// Sending rank.
+        src: usize,
+        /// Destination rank.
+        dst: usize,
+        /// Colliding tag.
+        tag: u64,
+        /// The distinct operator scopes sharing the stream.
+        scopes: Vec<String>,
+    },
+    /// A cycle in the cross-rank wait-for graph: every rank in the cycle
+    /// blocks on a completion only the next one could unblock.
+    Deadlock {
+        /// The ranks of the cycle, smallest first; each waits on the
+        /// next, the last on the first.
+        cycle: Vec<usize>,
+    },
+    /// A rank blocks forever on a receive whose sender (not itself part
+    /// of a cycle) never posts the matching send.
+    StarvedRecv {
+        /// The blocked rank.
+        rank: usize,
+        /// The rank it waits on.
+        src: usize,
+        /// Message tag.
+        tag: u64,
+        /// Stream sequence number.
+        seq: u64,
+        /// Scope of the blocked operator.
+        scope: String,
+    },
+    /// Ranks disagree on barrier participation: some park at a barrier
+    /// the rest of the world never reaches (or reaches a different
+    /// number of times).
+    BarrierMismatch {
+        /// Ranks waiting at a barrier when the schedule wedged.
+        waiting: Vec<usize>,
+    },
+    /// An operator moves data forward but its backward plan is empty —
+    /// the broken-adjoint-pairing defect (a gradient that silently never
+    /// comes home).
+    MissingAdjoint {
+        /// The operator scope.
+        scope: String,
+        /// Total forward bytes the scope moves.
+        forward_bytes: usize,
+    },
+    /// An operator's backward plan is neither the forward transpose nor
+    /// (for self-adjoint rings) the forward plan itself.
+    DualityMismatch {
+        /// The operator scope.
+        scope: String,
+        /// Every edge where backward volume differs from the transpose's
+        /// prediction.
+        edges: Vec<DualityEdge>,
+    },
+    /// A pooled staging send that is never received: the registered
+    /// buffer can never return to its owner's pool.
+    PoolLeak {
+        /// Sending (pool-owning) rank.
+        src: usize,
+        /// Destination rank.
+        dst: usize,
+        /// Message tag.
+        tag: u64,
+        /// Stream sequence number.
+        seq: u64,
+        /// Staged bytes.
+        bytes: usize,
+        /// Scope of the sending operator.
+        scope: String,
+    },
+    /// A rank's capture drive ended in an error (usually the downstream
+    /// symptom of one of the structural findings above).
+    RankError {
+        /// The failing rank.
+        rank: usize,
+        /// Its error message.
+        message: String,
+    },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::UnmatchedSend { src, dst, tag, seq, bytes, scope } => write!(
+                f,
+                "unmatched send: {src} -> {dst} tag {tag} seq {seq} ({bytes} B) in `{scope}` has no posted receive"
+            ),
+            Violation::UnmatchedRecv { src, dst, tag, seq, scope } => write!(
+                f,
+                "unmatched receive: rank {dst} posts a receive from {src} tag {tag} seq {seq} in `{scope}` but no such send exists"
+            ),
+            Violation::DtypeMismatch { src, dst, tag, seq, sent, expected, scope } => write!(
+                f,
+                "dtype mismatch: {src} -> {dst} tag {tag} seq {seq}: sender posts {sent}, receiver in `{scope}` expects {expected}"
+            ),
+            Violation::ByteMismatch { src, dst, tag, seq, sent, received, scope } => write!(
+                f,
+                "byte-length mismatch: {src} -> {dst} tag {tag} seq {seq} in `{scope}`: {sent} B posted, {received} B received"
+            ),
+            Violation::TagCollision { src, dst, tag, scopes } => write!(
+                f,
+                "tag collision: stream {src} -> {dst} tag {tag} carries traffic from {} operators: {}",
+                scopes.len(),
+                scopes.join(" | ")
+            ),
+            Violation::Deadlock { cycle } => {
+                let chain: Vec<String> = cycle.iter().map(|r| r.to_string()).collect();
+                write!(f, "deadlock: cross-rank wait cycle {}", chain.join(" -> "))?;
+                if let Some(first) = cycle.first() {
+                    write!(f, " -> {first}")?;
+                }
+                Ok(())
+            }
+            Violation::StarvedRecv { rank, src, tag, seq, scope } => write!(
+                f,
+                "starved receive: rank {rank} blocks forever on {src} tag {tag} seq {seq} in `{scope}`: the sender never posts it"
+            ),
+            Violation::BarrierMismatch { waiting } => write!(
+                f,
+                "barrier mismatch: ranks {waiting:?} wait at a barrier the rest of the world does not reach"
+            ),
+            Violation::MissingAdjoint { scope, forward_bytes } => write!(
+                f,
+                "missing adjoint: `{scope}` moves {forward_bytes} B forward but its backward plan is empty"
+            ),
+            Violation::DualityMismatch { scope, edges } => {
+                write!(
+                    f,
+                    "adjoint-duality violation in `{scope}`: backward plan is not the forward transpose ("
+                )?;
+                for (i, e) in edges.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, "; ")?;
+                    }
+                    write!(
+                        f,
+                        "{} -> {}: expected {} B, got {} B",
+                        e.src, e.dst, e.expected, e.actual
+                    )?;
+                }
+                write!(f, ")")
+            }
+            Violation::PoolLeak { src, dst, tag, seq, bytes, scope } => write!(
+                f,
+                "pool leak: pooled staging {src} -> {dst} tag {tag} seq {seq} ({bytes} B) in `{scope}` is never received; the buffer cannot return to its pool"
+            ),
+            Violation::RankError { rank, message } => {
+                write!(f, "rank {rank} failed during capture: {message}")
+            }
+        }
+    }
+}
+
+/// Verification result: plan summary plus every finding, in analysis
+/// order (rank errors, endpoints, tags, deadlock, duality, pool).
+#[derive(Debug)]
+pub struct PlanReport {
+    /// World size of the verified plan.
+    pub world: usize,
+    /// Total posted sends.
+    pub sends: usize,
+    /// Total wire-equivalent bytes.
+    pub bytes: usize,
+    /// Distinct `(src, dst, tag)` streams.
+    pub streams: usize,
+    /// The findings; empty means the plan verified clean.
+    pub violations: Vec<Violation>,
+}
+
+impl PlanReport {
+    /// Whether the plan verified with no findings.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+impl fmt::Display for PlanReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "world {} | {} sends | {} B | {} streams | {}",
+            self.world,
+            self.sends,
+            self.bytes,
+            self.streams,
+            if self.violations.is_empty() {
+                "clean".to_string()
+            } else {
+                format!("{} violation(s)", self.violations.len())
+            }
+        )?;
+        for v in &self.violations {
+            write!(f, "\n  - {v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Pre-flight check for a training run: capture the plan of the
+/// geometry `cfg` describes (same layout, replica count, and stage count
+/// the run will use) and verify it, refusing to start on any finding.
+///
+/// Wired into [`crate::coordinator::train`] behind
+/// [`TrainConfig::preflight_check`]; costs one kernel-free capture pass.
+pub fn preflight(cfg: &TrainConfig) -> Result<()> {
+    let geometry = Geometry::of_config(cfg);
+    let batch = (cfg.batch / cfg.replicas.max(1)).max(1);
+    let graph = geometry.capture(batch)?;
+    let report = verify(&graph);
+    if report.is_clean() {
+        Ok(())
+    } else {
+        Err(Error::Config(format!(
+            "pre-flight plan check failed: {report}"
+        )))
+    }
+}

@@ -13,6 +13,7 @@
 //! (parameter shards, gradients, stashed activations). Ranks that do not
 //! participate in a layer's spaces pass `None` through.
 
+use crate::adjoint::DistLinearOp;
 use crate::comm::Comm;
 use crate::error::{Error, Result};
 use crate::tensor::{Scalar, Tensor};
@@ -104,6 +105,18 @@ pub trait Layer<T: Scalar>: Send + Sync {
     /// Human-readable description of the parameter shards a rank holds
     /// (used to regenerate Table 1). Default: none.
     fn param_placement(&self, _rank: usize) -> Vec<(String, Vec<usize>)> {
+        Vec::new()
+    }
+
+    /// The data-movement operators this layer's forward/backward drive,
+    /// labelled by role (e.g. `("x_bcast", ..)`), in the order the
+    /// forward pass runs them. The static plan verifier
+    /// ([`crate::analysis`]) captures each operator's forward and adjoint
+    /// schedule through this hook — *without* running any kernel math —
+    /// so a layer that communicates must list every operator here to be
+    /// covered by the pre-flight checks. Default: none (local-only
+    /// layers).
+    fn comm_ops(&self) -> Vec<(String, &dyn DistLinearOp<T>)> {
         Vec::new()
     }
 }

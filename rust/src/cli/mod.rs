@@ -1,7 +1,9 @@
 //! Minimal CLI argument parser (clap is not in the vendored crate set).
 //!
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
-//! positional subcommands: `distdl <command> [--options]`.
+//! positional subcommands: `distdl <command> [--options]` — including
+//! the `check` subcommand that runs the static communication-plan
+//! verifier ([`crate::analysis`]) over the shipped geometries.
 
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;

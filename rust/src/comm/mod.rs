@@ -147,6 +147,7 @@
 //!   is described in [`crate::coordinator`] and [`crate::checkpoint`].
 
 pub mod faults;
+pub mod plan;
 
 use crate::error::{Error, Result};
 use crate::tensor::{Scalar, Tensor};
@@ -837,6 +838,9 @@ pub struct Comm {
     max_retransmits: u32,
     /// Installed fault plan and its withheld messages, if any.
     faults: Option<FaultEngine>,
+    /// Plan-capture recorder, when this endpoint is in capture mode
+    /// (see [`plan`] and [`crate::analysis`]). `None` in production.
+    plan: Option<Arc<Mutex<plan::PlanRecorder>>>,
     barrier: Arc<Barrier>,
     stats: CommStats,
 }
@@ -1067,10 +1071,69 @@ impl Comm {
     }
 
     // ------------------------------------------------------------------
+    // Plan capture (see the `plan` module and `crate::analysis`)
+    // ------------------------------------------------------------------
+
+    /// Switch this endpoint into plan-capture mode: every subsequent send
+    /// post, receive post, completion, timeout, and barrier is recorded
+    /// as a [`plan::PlanEvent`] until [`Comm::plan_take`] drains the log.
+    pub fn plan_begin(&mut self) {
+        self.plan = Some(Arc::new(Mutex::new(plan::PlanRecorder::new())));
+    }
+
+    /// Leave capture mode and return the recorded events (`None` if no
+    /// capture was active).
+    pub fn plan_take(&mut self) -> Option<Vec<plan::ScopedEvent>> {
+        self.plan.take().map(|h| match h.lock() {
+            Ok(mut g) => g.take_events(),
+            Err(_) => Vec::new(),
+        })
+    }
+
+    /// Whether a plan capture is active.
+    pub fn plan_active(&self) -> bool {
+        self.plan.is_some()
+    }
+
+    /// Shared handle to the active recorder, if any — what
+    /// [`plan::PlanScope`] guards clone so they outlive the `&mut Comm`
+    /// borrow that created them.
+    pub fn plan_handle(&self) -> Option<Arc<Mutex<plan::PlanRecorder>>> {
+        self.plan.clone()
+    }
+
+    /// Declare the capture phase subsequent events belong to (no-op when
+    /// not capturing).
+    pub fn plan_phase(&self, phase: plan::Phase) {
+        if let Some(h) = &self.plan {
+            if let Ok(mut g) = h.lock() {
+                g.set_phase(phase);
+            }
+        }
+    }
+
+    /// Record one event on the active recorder. Callers guard with
+    /// `self.plan.is_some()` so the production path is one branch.
+    fn plan_record(&self, event: plan::PlanEvent) {
+        if let Some(h) = &self.plan {
+            if let Ok(mut g) = h.lock() {
+                g.record(event);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
     // Posting sends
     // ------------------------------------------------------------------
 
-    fn post(&mut self, dst: usize, tag: u64, body: Body) -> Result<()> {
+    fn post(
+        &mut self,
+        dst: usize,
+        tag: u64,
+        body: Body,
+        dtype: &'static str,
+        pooled: bool,
+    ) -> Result<()> {
         if dst >= self.size {
             return Err(Error::Comm(format!(
                 "send to rank {dst} out of range (world {})",
@@ -1085,6 +1148,16 @@ impl Comm {
         let slot = self.next_send.entry((dst, tag)).or_insert(0);
         let seq = *slot;
         *slot += 1;
+        if self.plan.is_some() {
+            self.plan_record(plan::PlanEvent::Send {
+                dst,
+                tag,
+                seq,
+                bytes: body.wire_len(),
+                dtype,
+                pooled,
+            });
+        }
         self.senders[dst]
             .send(Message {
                 src: self.rank,
@@ -1117,7 +1190,7 @@ impl Comm {
     /// (channels are unbounded; backpressure is not modelled — the paper's
     /// experiments are synchronous SPMD).
     pub fn send_bytes(&mut self, dst: usize, tag: u64, payload: Vec<u8>) -> Result<()> {
-        self.post(dst, tag, Body::Bytes(payload))
+        self.post(dst, tag, Body::Bytes(payload), "bytes", false)
     }
 
     /// Post a nonblocking send of a typed slice (one buffer copy, no
@@ -1132,9 +1205,15 @@ impl Comm {
             let mut buf = Vec::with_capacity(8 + data.len() * T::WIRE_SIZE);
             buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
             T::write_bytes(data, &mut buf);
-            self.post(dst, tag, Body::Bytes(buf))?;
+            self.post(dst, tag, Body::Bytes(buf), std::any::type_name::<T>(), false)?;
         } else {
-            self.post(dst, tag, Self::typed_body(data.to_vec()))?;
+            self.post(
+                dst,
+                tag,
+                Self::typed_body(data.to_vec()),
+                std::any::type_name::<T>(),
+                false,
+            )?;
         }
         Ok(SendRequest { dst, tag })
     }
@@ -1151,7 +1230,13 @@ impl Comm {
         if self.wire_format {
             return self.isend_slice(dst, tag, &data);
         }
-        self.post(dst, tag, Self::typed_body(data))?;
+        self.post(
+            dst,
+            tag,
+            Self::typed_body(data),
+            std::any::type_name::<T>(),
+            false,
+        )?;
         Ok(SendRequest { dst, tag })
     }
 
@@ -1166,7 +1251,13 @@ impl Comm {
         if self.wire_format {
             return self.isend_slice(dst, tag, data.as_slice());
         }
-        self.post(dst, tag, Self::shared_body(data))?;
+        self.post(
+            dst,
+            tag,
+            Self::shared_body(data),
+            std::any::type_name::<T>(),
+            false,
+        )?;
         Ok(SendRequest { dst, tag })
     }
 
@@ -1200,6 +1291,8 @@ impl Comm {
                 data: body as AnyArc,
                 to_wire: pooled_wire_of::<T>,
             }),
+            std::any::type_name::<T>(),
+            true,
         )?;
         Ok(SendRequest { dst, tag })
     }
@@ -1248,6 +1341,8 @@ impl Comm {
                 data: body.clone() as AnyArc,
                 to_wire: pooled_wire_of::<T>,
             }),
+            std::any::type_name::<T>(),
+            true,
         )?;
         Ok(SendRequest { dst, tag })
     }
@@ -1287,6 +1382,18 @@ impl Comm {
 
     /// Post a nonblocking receive matching `(src, tag)`.
     pub fn irecv<T: Scalar>(&mut self, src: usize, tag: u64) -> Result<RecvRequest<T>> {
+        self.irecv_as(src, tag, std::any::type_name::<T>())
+    }
+
+    /// [`Comm::irecv`] with an explicit dtype label for plan capture —
+    /// `recv_bytes` posts through here so its wire-format receive is not
+    /// misattributed to the placeholder element type.
+    fn irecv_as<T: Scalar>(
+        &mut self,
+        src: usize,
+        tag: u64,
+        dtype: &'static str,
+    ) -> Result<RecvRequest<T>> {
         if src >= self.size {
             return Err(Error::Comm(format!(
                 "receive from rank {src} out of range (world {})",
@@ -1299,6 +1406,14 @@ impl Comm {
         self.in_flight += 1;
         self.stats.irecvs_posted += 1;
         self.stats.max_in_flight = self.stats.max_in_flight.max(self.in_flight);
+        if self.plan.is_some() {
+            self.plan_record(plan::PlanEvent::RecvPost {
+                src,
+                tag,
+                seq,
+                dtype,
+            });
+        }
         Ok(RecvRequest {
             src,
             tag,
@@ -1740,9 +1855,25 @@ impl Comm {
         let res = self.claim(src, tag, seq);
         self.stats.wait_time_s += t0.elapsed().as_secs_f64();
         self.in_flight -= 1;
-        let body = res?;
+        let body = match res {
+            Ok(body) => body,
+            Err(e) => {
+                if self.plan.is_some() {
+                    self.plan_record(plan::PlanEvent::RecvTimeout { src, tag, seq });
+                }
+                return Err(e);
+            }
+        };
         self.stats.messages_received += 1;
         self.stats.bytes_received += body.wire_len();
+        if self.plan.is_some() {
+            self.plan_record(plan::PlanEvent::RecvComplete {
+                src,
+                tag,
+                seq,
+                bytes: body.wire_len(),
+            });
+        }
         Ok(body)
     }
 
@@ -1870,6 +2001,14 @@ impl Comm {
                 self.in_flight -= 1;
                 self.stats.messages_received += 1;
                 self.stats.bytes_received += body.wire_len();
+                if self.plan.is_some() {
+                    self.plan_record(plan::PlanEvent::RecvComplete {
+                        src: req.src,
+                        tag: req.tag,
+                        seq: req.seq,
+                        bytes: body.wire_len(),
+                    });
+                }
                 let payload = self.decode_with_recovery(req.src, req.tag, req.seq, body)?;
                 return Ok((idx, payload));
             }
@@ -1916,6 +2055,13 @@ impl Comm {
                 let outstanding = reqs.len();
                 for r in reqs.drain(..) {
                     self.in_flight -= 1;
+                    if self.plan.is_some() {
+                        self.plan_record(plan::PlanEvent::RecvTimeout {
+                            src: r.src,
+                            tag: r.tag,
+                            seq: r.seq,
+                        });
+                    }
                     self.abandon(r.src, r.tag, r.seq);
                 }
                 return Err(Error::Comm(if disconnected {
@@ -1971,7 +2117,7 @@ impl Comm {
     /// returned as wire-format bytes (typed messages are serialized on
     /// demand — the interop fallback).
     pub fn recv_bytes(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
-        let req = self.irecv::<f64>(src, tag)?; // element type irrelevant here
+        let req = self.irecv_as::<f64>(src, tag, "bytes")?; // element type irrelevant here
         let body = self.complete(req.src, req.tag, req.seq)?;
         self.stats.wire_msgs += 1;
         match body {
@@ -2004,6 +2150,12 @@ impl Comm {
 
     /// Full-world barrier.
     pub fn barrier(&self) {
+        if let Some(h) = &self.plan {
+            if let Ok(mut g) = h.lock() {
+                let index = g.next_barrier();
+                g.record(plan::PlanEvent::Barrier { index });
+            }
+        }
         self.barrier.wait();
     }
 }
@@ -2149,6 +2301,7 @@ impl Cluster {
                     retry_timeout,
                     max_retransmits,
                     faults: None,
+                    plan: None,
                     barrier: barrier.clone(),
                     stats: CommStats::default(),
                 };

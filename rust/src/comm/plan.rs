@@ -1,0 +1,289 @@
+//! Plan-capture mode: record the communication schedule, not the math.
+//!
+//! The paper's framing — every data-movement operation is a *linear
+//! operator* with a hand-derived adjoint — means the entire cross-rank
+//! message schedule of a model/topology is a finite, analyzable object.
+//! This module is the recording half of the static verifier in
+//! [`crate::analysis`]: a [`Comm`](super::Comm) endpoint switched into
+//! capture mode ([`Comm::plan_begin`](super::Comm::plan_begin)) logs every
+//! send post, receive post, completion, timeout, and barrier as a
+//! [`PlanEvent`], each stamped with the *scope path* of the primitive that
+//! issued it and the [`Phase`] (forward / backward / data-parallel) the
+//! harness declared. The resulting per-rank event logs are joined into a
+//! plan graph and checked for endpoint mismatches, tag collisions,
+//! deadlocks, adjoint-duality violations, and pool leaks — before any
+//! kernel math runs.
+//!
+//! Scope attribution is RAII: every `DistLinearOp::forward`/`adjoint`
+//! opens a [`PlanScope`] naming itself, so nested compositions (an
+//! all-reduce built from a sum-reduce and a broadcast, a gather built
+//! from a scatter's adjoint) produce hierarchical paths like
+//! `AllReduce(B∘R)/B[root 0, {0,1,2,3}]`. Consecutive duplicate labels
+//! are collapsed when the path is built, so an operator that implements
+//! its adjoint by re-entering its own forward keys its traffic to the
+//! same path in both directions. When no capture is active the guard is
+//! an `Option` check — the production hot path never allocates a label.
+
+use std::sync::{Arc, Mutex};
+
+/// Which logical phase of a plan capture an event belongs to.
+///
+/// The phase is declared by the capture harness
+/// ([`Comm::plan_phase`](super::Comm::plan_phase)), not derived from the
+/// scope: an operator's forward and adjoint share one scope path (tag
+/// attribution must not split them) while the duality analysis separates
+/// their volumes by phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Before the harness declared a phase (setup traffic, if any).
+    Setup,
+    /// The forward plan F.
+    Forward,
+    /// The backward plan, expected to be Fᵀ (Eq. 13's static shadow).
+    Backward,
+    /// Data-parallel gradient averaging (self-adjoint ring schedules;
+    /// excluded from the duality pairing).
+    DataParallel,
+}
+
+/// One recorded communication event on an endpoint.
+///
+/// `seq` is the per-stream sequence number the engine itself assigns:
+/// send seq `k` on stream `(src, dst, tag)` matches receive-post seq `k`
+/// on the same stream (both counters start at 0 and advance together),
+/// which is exactly the nonovertaking rule the endpoint-matching analysis
+/// pairs events by.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanEvent {
+    /// A posted send (recording rank is the source).
+    Send {
+        /// Destination world rank.
+        dst: usize,
+        /// Message tag.
+        tag: u64,
+        /// Wire sequence number on the `(dst, tag)` stream.
+        seq: u64,
+        /// Wire-equivalent payload volume.
+        bytes: usize,
+        /// Element type name (`"bytes"` for raw wire payloads).
+        dtype: &'static str,
+        /// Whether the payload travels in a registered pool buffer that
+        /// must return to this sender (the pool-balance analysis).
+        pooled: bool,
+    },
+    /// A posted receive (recording rank is the destination).
+    RecvPost {
+        /// Source world rank.
+        src: usize,
+        /// Message tag.
+        tag: u64,
+        /// Request sequence number on the `(src, tag)` stream.
+        seq: u64,
+        /// Element type the receiver expects.
+        dtype: &'static str,
+    },
+    /// A completed receive (recording rank is the destination).
+    RecvComplete {
+        /// Source world rank.
+        src: usize,
+        /// Message tag.
+        tag: u64,
+        /// Request sequence number.
+        seq: u64,
+        /// Wire-equivalent volume actually received.
+        bytes: usize,
+    },
+    /// A receive that hit the fatal deadline or a disconnect — the
+    /// blocked-forever marker the deadlock analysis builds its wait-for
+    /// graph from.
+    RecvTimeout {
+        /// Source world rank the endpoint was blocked on.
+        src: usize,
+        /// Message tag.
+        tag: u64,
+        /// Request sequence number.
+        seq: u64,
+    },
+    /// A full-world barrier. `index` counts this endpoint's barriers;
+    /// ranks must agree on the count and interleave sends/receives
+    /// consistently around each index.
+    Barrier {
+        /// This endpoint's barrier ordinal (0-based).
+        index: usize,
+    },
+}
+
+/// A [`PlanEvent`] plus its scope-path and phase attribution.
+#[derive(Debug, Clone)]
+pub struct ScopedEvent {
+    /// `/`-joined path of [`PlanScope`] labels active at record time,
+    /// consecutive duplicates collapsed. Empty when no scope was open.
+    pub scope: String,
+    /// Phase declared by the capture harness at record time.
+    pub phase: Phase,
+    /// The event itself.
+    pub event: PlanEvent,
+}
+
+/// Recorder attached to a [`Comm`](super::Comm) in plan-capture mode.
+///
+/// Shared behind `Arc<Mutex<..>>` so RAII scope guards can outlive the
+/// borrow of the endpoint that created them (a guard is held *across*
+/// `&mut Comm` calls) and so `barrier(&self)` can record through a shared
+/// reference.
+#[derive(Debug, Default)]
+pub struct PlanRecorder {
+    scopes: Vec<String>,
+    phase: Option<Phase>,
+    barriers: usize,
+    events: Vec<ScopedEvent>,
+}
+
+impl PlanRecorder {
+    /// Fresh recorder in [`Phase::Setup`] with no open scopes.
+    pub fn new() -> Self {
+        PlanRecorder::default()
+    }
+
+    /// Declare the phase subsequent events belong to.
+    pub fn set_phase(&mut self, phase: Phase) {
+        self.phase = Some(phase);
+    }
+
+    /// Open a scope (innermost last).
+    pub fn push_scope(&mut self, label: String) {
+        self.scopes.push(label);
+    }
+
+    /// Close the innermost scope.
+    pub fn pop_scope(&mut self) {
+        self.scopes.pop();
+    }
+
+    /// The current scope path: open scopes joined with `/`, consecutive
+    /// duplicate labels collapsed (an operator whose adjoint re-enters
+    /// its own forward must key both directions to one path).
+    pub fn scope_path(&self) -> String {
+        let mut parts: Vec<&str> = Vec::with_capacity(self.scopes.len());
+        for s in &self.scopes {
+            if parts.last() != Some(&s.as_str()) {
+                parts.push(s.as_str());
+            }
+        }
+        parts.join("/")
+    }
+
+    /// Record `event` under the current scope path and phase.
+    pub fn record(&mut self, event: PlanEvent) {
+        self.events.push(ScopedEvent {
+            scope: self.scope_path(),
+            phase: self.phase.unwrap_or(Phase::Setup),
+            event,
+        });
+    }
+
+    /// Allocate the next barrier ordinal.
+    pub fn next_barrier(&mut self) -> usize {
+        let i = self.barriers;
+        self.barriers += 1;
+        i
+    }
+
+    /// Drain the recorded events.
+    pub fn take_events(&mut self) -> Vec<ScopedEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// RAII scope guard: pushes a label on the active recorder (if any) at
+/// construction, pops it on drop — so `?` early returns unwind scopes
+/// correctly. The label closure runs only when a capture is active;
+/// production runs pay one `Option` check and never build the string.
+///
+/// The guard holds a clone of the recorder handle, **not** a borrow of
+/// the endpoint, so the creating `&mut Comm` stays free for the
+/// operator body:
+///
+/// ```ignore
+/// fn forward(&self, comm: &mut Comm, x: ...) -> Result<...> {
+///     let _scope = PlanScope::enter(comm, || self.name());
+///     // ... comm.isend_*/irecv/wait as usual ...
+/// }
+/// ```
+pub struct PlanScope(Option<Arc<Mutex<PlanRecorder>>>);
+
+impl PlanScope {
+    /// Open a scope named by `label` on `comm`'s recorder, if capturing.
+    pub fn enter(comm: &super::Comm, label: impl FnOnce() -> String) -> Self {
+        match comm.plan_handle() {
+            Some(h) => {
+                if let Ok(mut g) = h.lock() {
+                    g.push_scope(label());
+                }
+                PlanScope(Some(h))
+            }
+            None => PlanScope(None),
+        }
+    }
+}
+
+impl Drop for PlanScope {
+    fn drop(&mut self) {
+        if let Some(h) = &self.0 {
+            if let Ok(mut g) = h.lock() {
+                g.pop_scope();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_path_collapses_consecutive_duplicates() {
+        let mut r = PlanRecorder::new();
+        r.push_scope("outer".into());
+        r.push_scope("AllReduce".into());
+        r.push_scope("AllReduce".into()); // adjoint re-entering forward
+        r.push_scope("B".into());
+        assert_eq!(r.scope_path(), "outer/AllReduce/B");
+        r.pop_scope();
+        r.pop_scope();
+        assert_eq!(r.scope_path(), "outer/AllReduce");
+    }
+
+    #[test]
+    fn scope_path_keeps_nonconsecutive_duplicates() {
+        let mut r = PlanRecorder::new();
+        r.push_scope("a".into());
+        r.push_scope("b".into());
+        r.push_scope("a".into());
+        assert_eq!(r.scope_path(), "a/b/a");
+    }
+
+    #[test]
+    fn events_carry_phase_and_scope() {
+        let mut r = PlanRecorder::new();
+        let index = r.next_barrier();
+        r.record(PlanEvent::Barrier { index });
+        r.set_phase(Phase::Forward);
+        r.push_scope("op".into());
+        r.record(PlanEvent::Send {
+            dst: 1,
+            tag: 7,
+            seq: 0,
+            bytes: 64,
+            dtype: "f32",
+            pooled: false,
+        });
+        let evs = r.take_events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].phase, Phase::Setup);
+        assert_eq!(evs[0].scope, "");
+        assert_eq!(evs[1].phase, Phase::Forward);
+        assert_eq!(evs[1].scope, "op");
+        assert!(r.take_events().is_empty());
+    }
+}

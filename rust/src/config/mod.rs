@@ -77,6 +77,12 @@ pub struct TrainConfig {
     /// ([`crate::comm::faults`] grammar; `None` = no injection). The CLI
     /// and JSON parse it eagerly so a typo'd plan fails at config time.
     pub fault_plan: Option<String>,
+    /// Run the static communication-plan verifier ([`crate::analysis`])
+    /// before training: the run's full message schedule is captured
+    /// without kernel math and checked for endpoint mismatches, tag
+    /// collisions, deadlocks, adjoint-duality violations, and pool
+    /// leaks. Any finding aborts the run before the first step.
+    pub preflight_check: bool,
 }
 
 impl Default for TrainConfig {
@@ -98,6 +104,7 @@ impl Default for TrainConfig {
             checkpoint_dir: "checkpoints".into(),
             resume_from: None,
             fault_plan: None,
+            preflight_check: false,
         }
     }
 }
@@ -161,6 +168,9 @@ impl TrainConfig {
         }
         if let Some(v) = j.get_opt("fault_plan") {
             self.fault_plan = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = j.get_opt("preflight_check") {
+            self.preflight_check = v.as_bool()?;
         }
         Ok(())
     }

@@ -94,11 +94,27 @@
 //!   is *not* covered: in-flight messages (a resume restarts the step
 //!   from its boundary) and the metric log of pre-kill steps.
 //! * **Health surfacing**: rank 0's fault/retry/straggler counters land
-//!   on the log as `fault_*` keys ([`MetricLog::set_fault_stats`]).
+//!   on the log as `fault_*` keys ([`MetricLog::set_fault_stats`]), and
+//!   every rank's counters land as `fault_rank{r}_*` keys
+//!   ([`MetricLog::set_fault_stats_for`]) — a straggling or
+//!   retransmit-heavy rank is visible by rank, not averaged into a
+//!   world-wide blur.
+//!
+//! ## Analysis / pre-flight
+//!
+//! With [`TrainConfig::preflight_check`] set, [`train`] and the pipeline
+//! path run the static communication-plan verifier ([`crate::analysis`])
+//! before launching the cluster: the run's geometry (layout × replicas ×
+//! stages) is captured in plan-capture mode — every send, receive,
+//! completion, and barrier the schedule would issue, with zero kernel
+//! math — and checked for endpoint mismatches, tag collisions,
+//! deadlocks, adjoint-duality violations, and staging-pool leaks. Any
+//! finding aborts with [`Error::Config`] before the first step; the same
+//! sweep is available standalone as the `check` CLI subcommand.
 
 use crate::autograd::NetworkState;
 use crate::checkpoint::Checkpoint;
-use crate::comm::faults::FaultPlan;
+use crate::comm::faults::{FaultPlan, FaultStats};
 use crate::comm::{Cluster, Comm, CommGroup};
 use crate::config::{Backend, TrainConfig};
 use crate::data::{Batch, SyntheticMnist};
@@ -246,6 +262,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         layout,
     };
     let fault_plan = planned_faults(cfg)?;
+    if cfg.preflight_check {
+        crate::analysis::preflight(cfg)?;
+    }
 
     let per_rank = Cluster::run(world, |comm| {
         // Pre-warm the registered buffer pool for the pipeline's rotation
@@ -338,9 +357,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // Surface the comm engine's overlap counters and this rank
         // thread's scratch-arena reuse counters on the metric log. The
         // arena is thread-local, so these are exactly the allocations the
-        // rank-0 coordinator thread's kernels performed.
+        // rank-0 coordinator thread's kernels performed. Every rank hands
+        // its fault/health counters back for the per-rank rollup.
+        let cs = comm.stats();
         if rank == 0 {
-            let cs = comm.stats();
             log.set_comm_stats(&cs);
             log.set_fault_stats(&cs.faults);
             log.set_scratch_stats(&crate::memory::scratch_stats::<f32>());
@@ -348,11 +368,15 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             log.set_tensor_storage_stats(&crate::tensor::tensor_storage_stats());
             log.set_dp_meta(replicas, dp_overlap(), dp.bucket_count());
         }
-        Ok((log, state.param_count(), eval_acc))
+        Ok((log, state.param_count(), eval_acc, cs.faults))
     })?;
 
-    let params_per_rank: Vec<usize> = per_rank.iter().map(|(_, p, _)| *p).collect();
-    let (log, _, eval_accuracy) = per_rank.into_iter().next().expect("rank 0 result");
+    let params_per_rank: Vec<usize> = per_rank.iter().map(|(_, p, _, _)| *p).collect();
+    let fault_stats: Vec<FaultStats> = per_rank.iter().map(|(_, _, _, fs)| *fs).collect();
+    let (mut log, _, eval_accuracy, _) = per_rank.into_iter().next().expect("rank 0 result");
+    for (r, fs) in fault_stats.iter().enumerate() {
+        log.set_fault_stats_for(r, fs);
+    }
     let quarter = (cfg.steps / 4).max(1);
     Ok(TrainReport {
         final_accuracy: log.recent_accuracy(quarter),
@@ -398,6 +422,9 @@ fn train_pipeline(cfg: &TrainConfig) -> Result<TrainReport> {
     // Replica 0's last stage holds the logits and the loss.
     let loss_rank = stages - 1;
     let fault_plan = planned_faults(cfg)?;
+    if cfg.preflight_check {
+        crate::analysis::preflight(cfg)?;
+    }
 
     let per_rank = Cluster::run(world, |comm| {
         comm.pool_reserve(PIPELINE_POOL_DEPTH);
@@ -473,8 +500,8 @@ fn train_pipeline(cfg: &TrainConfig) -> Result<TrainReport> {
             }
         }
         let eval_acc = (total > 0).then(|| correct as f64 / total as f64);
+        let cs = comm.stats();
         if rank == 0 {
-            let cs = comm.stats();
             log.set_comm_stats(&cs);
             log.set_fault_stats(&cs.faults);
             log.set_scratch_stats(&crate::memory::scratch_stats::<f32>());
@@ -482,18 +509,22 @@ fn train_pipeline(cfg: &TrainConfig) -> Result<TrainReport> {
             log.set_tensor_storage_stats(&crate::tensor::tensor_storage_stats());
             log.set_dp_meta(replicas, dp_overlap(), dp.bucket_count());
         }
-        Ok((log, state.param_count(), eval_acc, *pipe.stats()))
+        Ok((log, state.param_count(), eval_acc, *pipe.stats(), cs.faults))
     })?;
 
-    let params_per_rank: Vec<usize> = per_rank.iter().map(|(_, p, _, _)| *p).collect();
+    let params_per_rank: Vec<usize> = per_rank.iter().map(|(_, p, _, _, _)| *p).collect();
     // Roll the per-rank logs up: rank 0 carries the engine/arena
-    // counters, the loss rank the step records, and replica 0's stage
-    // ranks the per-stage schedule stats.
+    // counters, the loss rank the step records, replica 0's stage ranks
+    // the per-stage schedule stats, and every rank its fault counters.
     let stage_stats: Vec<PipelineStats> = (0..stages).map(|s| per_rank[s].3).collect();
+    let fault_stats: Vec<FaultStats> = per_rank.iter().map(|(_, _, _, _, fs)| *fs).collect();
     let eval_accuracy = per_rank[loss_rank].2;
     let steps = per_rank[loss_rank].0.steps.clone();
     let mut log = per_rank.into_iter().next().expect("rank 0 result").0;
     log.steps = steps;
+    for (r, fs) in fault_stats.iter().enumerate() {
+        log.set_fault_stats_for(r, fs);
+    }
     log.set_pp_meta(stages, m, pp_overlap());
     let mut bubble_sum = 0.0;
     let mut queue = 0usize;

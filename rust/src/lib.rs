@@ -73,6 +73,16 @@
 //!   and "unused input" regions for arbitrary kernel size/stride/dilation/
 //!   padding.
 //! * [`adjoint`] — the coherence test of Eq. (13).
+//! * [`analysis`] — the **static communication-plan verifier**: because
+//!   every data-movement op is a linear operator with a known adjoint, a
+//!   run's full cross-rank message schedule is a finite object that can
+//!   be captured *without executing any kernel math* (`comm::plan`
+//!   capture mode, driven through each primitive's `DistLinearOp`
+//!   interface on zero-filled shards) and checked pre-flight: endpoint
+//!   matching, tag-space collisions, deadlock freedom (wait-for-graph
+//!   replay), adjoint duality (backward plan = forward plan transposed —
+//!   the static shadow of Eq. 13), and staging-pool balance. Surfaced as
+//!   the `check` CLI subcommand and the `preflight_check` train option.
 //! * [`autograd`] — a tape-based reverse-mode engine standing in for
 //!   torch.autograd; primitives register their adjoints as backward ops.
 //! * [`nn`] — §4 distributed layers (conv, pool, affine, transpose,
@@ -134,8 +144,13 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::manual_div_ceil)]
+// The only unsafe code in the crate is the GEMM core's scoped
+// raw-pointer tiling (`nn::native::gemm`, audited with SAFETY comments
+// and module-scoped `#[allow(unsafe_code)]`); everything else is denied.
+#![deny(unsafe_code)]
 
 pub mod adjoint;
+pub mod analysis;
 pub mod autograd;
 pub mod checkpoint;
 pub mod cli;

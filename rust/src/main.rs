@@ -6,10 +6,19 @@
 //!                      [--dataset N] [--config file.json] [--metrics out.json]
 //!                      [--checkpoint-every N] [--checkpoint-dir DIR]
 //!                      [--resume-from DIR/step_NNNNNN] [--fault-plan SPEC]
+//!                      [--preflight]
 //! distdl parity        [--batch N] [--steps N]       sequential vs distributed (§5)
 //! distdl describe      [--batch N]                   Table 1 / Fig. C10 placement
 //! distdl adjoint-test  [--size N]                    Eq. (13) across all primitives
 //! distdl halo-table                                  Appendix B halo geometries
+//! distdl check         [--geometry NAME] [--batch N] static communication-plan
+//!                                                    verifier: captures every
+//!                                                    geometry's message schedule
+//!                                                    (no kernel math) and checks
+//!                                                    endpoints, tags, deadlock
+//!                                                    freedom, adjoint duality,
+//!                                                    and pool balance; exits
+//!                                                    non-zero on any finding
 //! ```
 
 use distdl::cli::Args;
@@ -35,17 +44,18 @@ fn run() -> Result<()> {
         Some("describe") => cmd_describe(&args),
         Some("adjoint-test") => cmd_adjoint(&args),
         Some("halo-table") => cmd_halo_table(),
+        Some("check") => cmd_check(&args),
         Some("version") => {
             println!("distdl {}", env!("CARGO_PKG_VERSION"));
             Ok(())
         }
         Some(other) => Err(Error::Usage(format!(
-            "unknown command '{other}' (try: train, parity, describe, adjoint-test, halo-table)"
+            "unknown command '{other}' (try: train, parity, describe, adjoint-test, halo-table, check)"
         ))),
         None => {
             println!(
                 "distdl — linear-algebraic model parallelism (Hewett & Grady 2020)\n\
-                 commands: train, parity, describe, adjoint-test, halo-table, version\n\
+                 commands: train, parity, describe, adjoint-test, halo-table, check, version\n\
                  see README.md for details"
             );
             Ok(())
@@ -93,6 +103,9 @@ fn config_from(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(plan) = args.get("fault-plan") {
         cfg.fault_plan = Some(plan.to_string());
+    }
+    if args.has_flag("preflight") {
+        cfg.preflight_check = true;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -221,5 +234,42 @@ fn cmd_adjoint(args: &Args) -> Result<()> {
 
 fn cmd_halo_table() -> Result<()> {
     distdl::coordinator::suites::print_halo_tables();
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    use distdl::analysis::{shipped_geometries, verify, Geometry};
+    let batch = args.get_usize("batch")?.unwrap_or(8);
+    let selected: Vec<(String, Geometry)> = match args.get("geometry") {
+        Some(name) => {
+            let g = Geometry::from_name(name).ok_or_else(|| {
+                let known: Vec<&str> = shipped_geometries().iter().map(|(n, _)| *n).collect();
+                Error::Usage(format!(
+                    "unknown geometry '{name}' (known: {})",
+                    known.join(", ")
+                ))
+            })?;
+            vec![(name.to_string(), g)]
+        }
+        None => shipped_geometries()
+            .into_iter()
+            .map(|(n, g)| (n.to_string(), g))
+            .collect(),
+    };
+    let mut dirty = 0usize;
+    for (name, geometry) in &selected {
+        let graph = geometry.capture(batch)?;
+        let report = verify(&graph);
+        println!("{name:<14} {report}");
+        if !report.is_clean() {
+            dirty += 1;
+        }
+    }
+    if dirty > 0 {
+        return Err(Error::Config(format!(
+            "plan check failed for {dirty} of {} geometries",
+            selected.len()
+        )));
+    }
     Ok(())
 }

@@ -88,6 +88,31 @@ impl MetricLog {
         self.set_meta("fault_max_stall_s", format!("{:.6}", s.max_stall_s));
     }
 
+    /// Surface one rank's fault/health counters as `fault_rank{r}_*`
+    /// keys. Where [`MetricLog::set_fault_stats`] reports rank 0 only,
+    /// the coordinator calls this for *every* world rank after the
+    /// cluster joins, so a straggling or retransmit-heavy rank is
+    /// attributable by rank instead of hiding behind rank 0's view.
+    pub fn set_fault_stats_for(&mut self, rank: usize, s: &crate::comm::faults::FaultStats) {
+        self.set_meta(&format!("fault_rank{rank}_injected_delays"), s.injected_delays);
+        self.set_meta(&format!("fault_rank{rank}_injected_drops"), s.injected_drops);
+        self.set_meta(&format!("fault_rank{rank}_injected_dups"), s.injected_dups);
+        self.set_meta(&format!("fault_rank{rank}_injected_reorders"), s.injected_reorders);
+        self.set_meta(
+            &format!("fault_rank{rank}_injected_truncations"),
+            s.injected_truncations,
+        );
+        self.set_meta(&format!("fault_rank{rank}_dups_suppressed"), s.dups_suppressed);
+        self.set_meta(&format!("fault_rank{rank}_retries"), s.retries);
+        self.set_meta(&format!("fault_rank{rank}_retransmits"), s.retransmits);
+        self.set_meta(&format!("fault_rank{rank}_stragglers"), s.stragglers);
+        self.set_meta(&format!("fault_rank{rank}_abandoned_swept"), s.abandoned_swept);
+        self.set_meta(
+            &format!("fault_rank{rank}_max_stall_s"),
+            format!("{:.6}", s.max_stall_s),
+        );
+    }
+
     /// Surface a rank's tensor-storage counters as run metadata
     /// (`tensor_*` keys): how many tensors were constructed pool-backed
     /// (the zero-copy receive sides) and how many paid a copy-on-write
@@ -369,6 +394,26 @@ mod tests {
         assert_eq!(log.meta["fault_stragglers"], "1");
         assert_eq!(log.meta["fault_abandoned_swept"], "0");
         assert_eq!(log.meta["fault_max_stall_s"], "0.500000");
+    }
+
+    #[test]
+    fn fault_stats_surface_per_rank() {
+        let mut log = MetricLog::new();
+        let stats = crate::comm::faults::FaultStats {
+            injected_delays: 5,
+            retransmits: 2,
+            stragglers: 1,
+            max_stall_s: 0.25,
+            ..Default::default()
+        };
+        log.set_fault_stats_for(3, &stats);
+        assert_eq!(log.meta["fault_rank3_injected_delays"], "5");
+        assert_eq!(log.meta["fault_rank3_injected_drops"], "0");
+        assert_eq!(log.meta["fault_rank3_retransmits"], "2");
+        assert_eq!(log.meta["fault_rank3_stragglers"], "1");
+        assert_eq!(log.meta["fault_rank3_max_stall_s"], "0.250000");
+        // Keys are rank-scoped: rank 0's namespace is untouched.
+        assert!(!log.meta.contains_key("fault_rank0_injected_delays"));
     }
 
     #[test]

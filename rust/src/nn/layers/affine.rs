@@ -158,6 +158,13 @@ impl<T: Scalar> Layer<T> for DistAffine<T> {
         self.name.clone()
     }
 
+    fn comm_ops(&self) -> Vec<(String, &dyn DistLinearOp<T>)> {
+        vec![
+            ("x_bcast".into(), &self.x_bcast as &dyn DistLinearOp<T>),
+            ("y_reduce".into(), &self.y_reduce),
+        ]
+    }
+
     fn init(&self, rank: usize, seed: u64) -> Result<LayerState<T>> {
         let Some(coords) = self.pw.coords_of(rank) else {
             return Ok(LayerState::empty());

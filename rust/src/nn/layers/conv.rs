@@ -375,6 +375,14 @@ impl<T: Scalar> Layer<T> for DistConv2d<T> {
         self.name.clone()
     }
 
+    fn comm_ops(&self) -> Vec<(String, &dyn DistLinearOp<T>)> {
+        vec![
+            ("exchange".into(), &self.exchange as &dyn DistLinearOp<T>),
+            ("w_bcast".into(), &self.w_bcast),
+            ("b_bcast".into(), &self.b_bcast),
+        ]
+    }
+
     fn init(&self, rank: usize, seed: u64) -> Result<LayerState<T>> {
         if rank == self.root {
             let (w, b) = self.global_params(seed);

@@ -54,6 +54,10 @@ impl<T: Scalar> Layer<T> for DistTranspose {
         self.name.clone()
     }
 
+    fn comm_ops(&self) -> Vec<(String, &dyn DistLinearOp<T>)> {
+        vec![("rep".into(), &self.rep as &dyn DistLinearOp<T>)]
+    }
+
     fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
         Ok(LayerState::empty())
     }
@@ -125,6 +129,10 @@ impl DistFlatten {
 impl<T: Scalar> Layer<T> for DistFlatten {
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn comm_ops(&self) -> Vec<(String, &dyn DistLinearOp<T>)> {
+        vec![("rep".into(), &self.rep as &dyn DistLinearOp<T>)]
     }
 
     fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
@@ -279,6 +287,10 @@ impl<T: Scalar> Layer<T> for StageBoundary {
         self.name.clone()
     }
 
+    fn comm_ops(&self) -> Vec<(String, &dyn DistLinearOp<T>)> {
+        vec![("mv".into(), &self.mv as &dyn DistLinearOp<T>)]
+    }
+
     fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
         Ok(LayerState::empty())
     }
@@ -326,6 +338,10 @@ impl<T: Scalar> Layer<T> for ScatterInput {
         self.name.clone()
     }
 
+    fn comm_ops(&self) -> Vec<(String, &dyn DistLinearOp<T>)> {
+        vec![("op".into(), &self.op as &dyn DistLinearOp<T>)]
+    }
+
     fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
         Ok(LayerState::empty())
     }
@@ -370,6 +386,10 @@ impl GatherOutput {
 impl<T: Scalar> Layer<T> for GatherOutput {
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn comm_ops(&self) -> Vec<(String, &dyn DistLinearOp<T>)> {
+        vec![("op".into(), &self.op as &dyn DistLinearOp<T>)]
     }
 
     fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {

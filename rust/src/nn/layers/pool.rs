@@ -122,6 +122,10 @@ impl<T: Scalar> Layer<T> for DistPool2d<T> {
         self.name.clone()
     }
 
+    fn comm_ops(&self) -> Vec<(String, &dyn DistLinearOp<T>)> {
+        vec![("exchange".into(), &self.exchange as &dyn DistLinearOp<T>)]
+    }
+
     fn init(&self, _rank: usize, _seed: u64) -> Result<LayerState<T>> {
         Ok(LayerState::empty())
     }

@@ -578,13 +578,18 @@ pub fn gemm_pool_stats() -> GemmPoolStats {
 }
 
 /// Wrappers making borrowed operand pointers shippable to pool helpers.
-/// Soundness: `pool::run_tasks` returns only after every task completed,
-/// so the pointed-to slices strictly outlive all dereferences.
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*const T);
+// SAFETY: the pointer is only dereferenced inside tasks submitted to
+// `pool::run_tasks`, which blocks until every task has completed, so the
+// pointed-to slice strictly outlives all dereferences; the shared `*const`
+// data is never written during the batch.
 unsafe impl<T> Send for SendPtr<T> {}
 #[derive(Clone, Copy)]
 struct SendPtrMut<T>(*mut T);
+// SAFETY: same lifetime argument as `SendPtr`, plus exclusivity — each
+// `*mut` chunk comes from `chunks_mut`, so no two tasks of a batch alias
+// the same bytes, and the batch barrier orders them against the caller.
 unsafe impl<T> Send for SendPtrMut<T> {}
 
 /// One row slab's task geometry: its logical row origin and height, plus
@@ -739,13 +744,23 @@ pub fn gemm_with_workers<T: Scalar>(
         let mut tasks: Vec<Box<dyn FnOnce() + Send>> = Vec::with_capacity(slabs);
         for &slab in &slab_ptrs {
             tasks.push(Box::new(move || {
-                // Safety: run_tasks blocks until this batch completes
-                // before bpack is re-packed or any buffer is released,
-                // and the slab/pack chunks are disjoint per task
-                // (chunks_mut above).
+                // SAFETY: `a_sp`/`a_len` come from a live borrow of the A
+                // operand held across `run_tasks`, which blocks until this
+                // batch completes — the slice cannot dangle, and A is
+                // read-only for the whole batch.
                 let a = unsafe { std::slice::from_raw_parts(a_sp.0, a_len) };
+                // SAFETY: `b_sp` is re-derived from `bpack` after each
+                // repack, while the buffer is quiescent; the batch barrier
+                // guarantees no repack happens before every reader here
+                // has finished.
                 let bpack = unsafe { std::slice::from_raw_parts(b_sp.0, b_len) };
+                // SAFETY: each task's C slab and A-pack chunk come from
+                // `chunks_mut`, so they are disjoint — exactly one task
+                // writes each byte, and the barrier orders those writes
+                // against the caller's next use of the buffers.
                 let c_slab = unsafe { std::slice::from_raw_parts_mut(slab.c.0, slab.c_len) };
+                // SAFETY: as above — `slab.ap` is this task's exclusive
+                // `chunks_mut` chunk of the A-pack scratch.
                 let ap = unsafe { std::slice::from_raw_parts_mut(slab.ap.0, slab.ap_len) };
                 gemm_kpanel_shared(
                     slab.m_slab, n, a, a_rs, a_cs, slab.row0, p0, kc, bpack, c_slab, ap, tile,

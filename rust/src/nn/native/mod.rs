@@ -20,6 +20,10 @@
 pub mod activation;
 pub mod affine;
 pub mod conv;
+// The crate denies unsafe_code (`lib.rs`); the GEMM core is the single
+// audited exception — raw-pointer slab/pack tiling across the persistent
+// worker pool, every unsafe block carrying a SAFETY comment.
+#[allow(unsafe_code)]
 pub mod gemm;
 pub mod loss;
 pub mod pool;

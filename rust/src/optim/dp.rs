@@ -41,6 +41,7 @@
 //! ones.
 
 use crate::autograd::NetworkState;
+use crate::comm::plan::PlanScope;
 use crate::comm::{Comm, CommGroup};
 use crate::error::{Error, Result};
 use crate::partition::HybridTopology;
@@ -229,6 +230,9 @@ impl<T: Scalar> DataParallel<T> {
         }
         self.prepare(comm, state)?;
         for bi in 0..self.buckets.len() {
+            // The in-flight ring API bypasses `DistLinearOp::forward`, so
+            // the plan capture scope is opened here per bucket.
+            let _scope = PlanScope::enter(comm, || format!("dp/bucket{bi}"));
             if !self.buckets[bi].started && layer <= self.buckets[bi].ready_at {
                 let buf = pack_bucket(comm, state, &self.buckets[bi].entries, self.buckets[bi].len);
                 let fl = self.buckets[bi].ring.start(comm, buf)?;
@@ -254,6 +258,7 @@ impl<T: Scalar> DataParallel<T> {
         }
         self.prepare(comm, state)?;
         for bi in 0..self.buckets.len() {
+            let _scope = PlanScope::enter(comm, || format!("dp/bucket{bi}"));
             if !self.buckets[bi].started {
                 let buf = pack_bucket(comm, state, &self.buckets[bi].entries, self.buckets[bi].len);
                 let fl = self.buckets[bi].ring.start(comm, buf)?;

@@ -66,6 +66,13 @@
 //! stage-local, [`crate::checkpoint`] snapshots compose per rank: every
 //! stage saves its own parameters and moments, and a resumed pipeline
 //! replays the identical micro-batch stream from the saved step index.
+//!
+//! The boundary schedule is also *statically checkable*: every
+//! [`PipeMove`] records its posts and completes under the
+//! [`crate::comm::plan`] capture mode, so the pre-flight verifier
+//! ([`crate::analysis`]) proves tag-space separation between stage
+//! boundaries and deadlock freedom of the staged post order before any
+//! pipeline step runs.
 
 use crate::autograd::{Network, NetworkState};
 use crate::comm::Comm;

@@ -27,9 +27,11 @@
 //!
 //! Because point-to-point matching is `(src, tag)`, disjoint replicas can
 //! reuse the same model-parallel tag space verbatim; only the dp rings
-//! need tags of their own. The legacy two-axis constructor
-//! ([`HybridTopology::new`]) is the `S = 1` special case and keeps its
-//! exact PR-6 semantics.
+//! need tags of their own — a discipline the static plan verifier
+//! ([`crate::analysis`]) enforces per geometry by checking every
+//! `(src, dst, tag)` stream for cross-operator collisions. The legacy
+//! two-axis constructor ([`HybridTopology::new`]) is the `S = 1` special
+//! case and keeps its exact PR-6 semantics.
 
 use crate::comm::CommGroup;
 use crate::error::{Error, Result};

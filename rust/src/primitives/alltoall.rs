@@ -21,6 +21,7 @@
 //! the payload: a pool-backed tensor, no assembly memcpy at all.
 
 use crate::adjoint::DistLinearOp;
+use crate::comm::plan::PlanScope;
 use crate::comm::Comm;
 use crate::error::{Error, Result};
 use crate::partition::TensorDecomposition;
@@ -186,12 +187,14 @@ impl<T: Scalar> DistLinearOp<T> for Repartition {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         Repartition::run(&self.src, &self.dst, self.tag, comm, x)
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
         // Move semantics make the repartition a permutation; the adjoint is
         // the inverse repartition.
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         Repartition::run(&self.dst, &self.src, self.tag + 1, comm, y)
     }
 

@@ -48,6 +48,7 @@
 
 use super::tree_schedule;
 use crate::adjoint::DistLinearOp;
+use crate::comm::plan::PlanScope;
 use crate::comm::{Comm, Payload, PooledBody};
 use crate::error::{Error, Result};
 use crate::partition::{broadcast_groups, BroadcastGroup, Partition};
@@ -450,6 +451,7 @@ impl<T: Scalar> DistLinearOp<T> for Broadcast {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || self.label.clone());
         let rank = comm.rank();
         let root_gi = self.group_as_root(rank);
         let dest_gi = self.group_as_dest(rank);
@@ -472,6 +474,7 @@ impl<T: Scalar> DistLinearOp<T> for Broadcast {
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || self.label.clone());
         let rank = comm.rank();
         let root_gi = self.group_as_root(rank);
         let dest_gi = self.group_as_dest(rank);
@@ -545,10 +548,12 @@ impl<T: Scalar> DistLinearOp<T> for SumReduce {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.inner.adjoint(comm, x)
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.inner.forward(comm, y)
     }
 
@@ -585,13 +590,16 @@ impl<T: Scalar> DistLinearOp<T> for AllReduce {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
-        // R then B through the shared root.
+        // R then B through the shared root. The capture scope collapses
+        // the adjoint's re-entry (A* = A calls forward) to one path.
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         let reduced = self.reduce.adjoint(comm, x)?;
         self.reduce.forward(comm, reduced)
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
         // A* = A.
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.forward(comm, y)
     }
 

@@ -41,6 +41,7 @@
 //! local sliding-kernel operator is applied.
 
 use crate::adjoint::DistLinearOp;
+use crate::comm::plan::PlanScope;
 use crate::comm::{Comm, Payload, RecvRequest, SendRequest};
 use crate::error::{Error, Result};
 use crate::halo::{DimHalo, HaloGeometry};
@@ -505,6 +506,7 @@ impl<T: Scalar> DistLinearOp<T> for HaloExchange {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         if self.partition.coords_of(comm.rank()).is_none() {
             return Ok(None);
         }
@@ -514,6 +516,7 @@ impl<T: Scalar> DistLinearOp<T> for HaloExchange {
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         if self.partition.coords_of(comm.rank()).is_none() {
             return Ok(None);
         }

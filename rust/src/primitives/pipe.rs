@@ -24,6 +24,7 @@
 //! buffer to the sender's pool.
 
 use crate::adjoint::DistLinearOp;
+use crate::comm::plan::PlanScope;
 use crate::comm::{Comm, RecvRequest};
 use crate::error::{Error, Result};
 use crate::tensor::{Scalar, Tensor};
@@ -59,7 +60,7 @@ impl PipeMove {
     }
 
     fn check_rank(&self, comm: &Comm) -> Result<()> {
-        let world = comm.world();
+        let world = comm.size();
         if self.src >= world || self.dst >= world {
             return Err(Error::Comm(format!(
                 "pipe move {} -> {} outside world of {}",
@@ -71,20 +72,20 @@ impl PipeMove {
 
     /// Post the forward receive (destination only). Pre-posting before
     /// the previous micro-batch's compute is what buys the overlap.
-    pub fn post_recv<T: Scalar>(&self, comm: &Comm) -> Result<RecvRequest<T>> {
+    pub fn post_recv<T: Scalar>(&self, comm: &mut Comm) -> Result<RecvRequest<T>> {
         self.check_rank(comm)?;
         comm.irecv::<T>(self.src, self.tag)
     }
 
     /// Post the adjoint (cotangent) receive (source only).
-    pub fn post_recv_adjoint<T: Scalar>(&self, comm: &Comm) -> Result<RecvRequest<T>> {
+    pub fn post_recv_adjoint<T: Scalar>(&self, comm: &mut Comm) -> Result<RecvRequest<T>> {
         self.check_rank(comm)?;
         comm.irecv::<T>(self.dst, self.tag + 1)
     }
 
     /// Forward send (source only): relocate `x` to the destination. The
     /// tensor is consumed — move semantics.
-    pub fn send<T: Scalar>(&self, comm: &Comm, x: Tensor<T>) -> Result<()> {
+    pub fn send<T: Scalar>(&self, comm: &mut Comm, x: Tensor<T>) -> Result<()> {
         self.check_rank(comm)?;
         if x.shape() != &self.shape[..] {
             return Err(Error::Comm(format!(
@@ -103,7 +104,7 @@ impl PipeMove {
 
     /// Adjoint send (destination only): relocate the cotangent `dy` back
     /// to the source on `tag + 1`.
-    pub fn send_adjoint<T: Scalar>(&self, comm: &Comm, dy: Tensor<T>) -> Result<()> {
+    pub fn send_adjoint<T: Scalar>(&self, comm: &mut Comm, dy: Tensor<T>) -> Result<()> {
         if dy.shape() != &self.shape[..] {
             return Err(Error::Comm(format!(
                 "pipe move adjoint expects shape {:?}, got {:?}",
@@ -145,6 +146,7 @@ impl<T: Scalar> DistLinearOp<T> for PipeMove {
         comm: &mut Comm,
         x: Option<Tensor<T>>,
     ) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.check_rank(comm)?;
         let rank = comm.rank();
         if self.src == self.dst {
@@ -169,6 +171,7 @@ impl<T: Scalar> DistLinearOp<T> for PipeMove {
         comm: &mut Comm,
         y: Option<Tensor<T>>,
     ) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.check_rank(comm)?;
         let rank = comm.rank();
         if self.src == self.dst {

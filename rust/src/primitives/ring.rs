@@ -36,6 +36,7 @@
 //! inside the backward overlap window while the δw/δb GEMMs run.
 
 use crate::adjoint::DistLinearOp;
+use crate::comm::plan::PlanScope;
 use crate::comm::{Comm, Payload, RecvRequest};
 use crate::error::{Error, Result};
 use crate::tensor::{numel, Scalar, Tensor};
@@ -396,11 +397,13 @@ impl<T: Scalar> DistLinearOp<T> for RingAllReduce {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.apply_t(comm, x)
     }
 
     /// Self-adjoint: `(αA)* = αA` for real `α` — the same schedule runs.
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.apply_t(comm, y)
     }
 
@@ -494,10 +497,12 @@ impl<T: Scalar> DistLinearOp<T> for RingReduceScatter {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.scatter(comm, x)
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.gather(comm, y)
     }
 
@@ -530,10 +535,12 @@ impl<T: Scalar> DistLinearOp<T> for RingAllGather {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.inner.gather(comm, x)
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.inner.scatter(comm, y)
     }
 

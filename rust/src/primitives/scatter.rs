@@ -26,6 +26,7 @@
 //! receive moves the arriving buffer into the shard outright.
 
 use crate::adjoint::DistLinearOp;
+use crate::comm::plan::PlanScope;
 use crate::comm::Comm;
 use crate::error::{Error, Result};
 use crate::partition::TensorDecomposition;
@@ -190,10 +191,12 @@ impl<T: Scalar> DistLinearOp<T> for Scatter {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         Scatter::scatter_forward(&self.decomp, self.root, self.tag, comm, x)
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         Scatter::gather_forward(&self.decomp, self.root, self.tag, comm, y)
     }
 
@@ -232,10 +235,12 @@ impl<T: Scalar> DistLinearOp<T> for Gather {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.inner.adjoint(comm, x)
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         self.inner.forward(comm, y)
     }
 

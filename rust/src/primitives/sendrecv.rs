@@ -14,6 +14,7 @@
 //! sender, the irreducible cost of C_{a→b} — is all that remains.
 
 use crate::adjoint::DistLinearOp;
+use crate::comm::plan::PlanScope;
 use crate::comm::Comm;
 use crate::error::{Error, Result};
 use crate::tensor::{Scalar, Tensor};
@@ -58,6 +59,7 @@ impl<T: Scalar> DistLinearOp<T> for SendRecv {
     }
 
     fn forward(&self, comm: &mut Comm, x: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         let rank = comm.rank();
         if self.src == self.dst {
             // degenerate local copy
@@ -86,6 +88,7 @@ impl<T: Scalar> DistLinearOp<T> for SendRecv {
     }
 
     fn adjoint(&self, comm: &mut Comm, y: Option<Tensor<T>>) -> Result<Option<Tensor<T>>> {
+        let _scope = PlanScope::enter(comm, || DistLinearOp::<T>::name(self));
         let rank = comm.rank();
         if self.src == self.dst {
             return Ok(y);
