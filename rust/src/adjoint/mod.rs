@@ -125,23 +125,40 @@ pub fn adjoint_residual_under<T: Scalar>(
         if let Some(p) = plan {
             comm.set_fault_plan(Some(p.clone()));
         }
-        let rank = comm.rank();
-        let mut rng = SplitMix64::new(seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15));
-        let x = random_shard::<T>(&op.domain_shape(rank), &mut rng);
-        let y = random_shard::<T>(&op.codomain_shape(rank), &mut rng);
-        let fx = op.forward(comm, x.clone())?;
-        let fsy = op.adjoint(comm, y.clone())?;
-        Ok(Partials {
-            fx_dot_y: dot(&fx, &y)?,
-            x_dot_fsy: dot(&x, &fsy)?,
-            fx_sq: sq_norm(&fx),
-            y_sq: sq_norm(&y),
-            x_sq: sq_norm(&x),
-            fsy_sq: sq_norm(&fsy),
-        })
+        rank_partials(comm, op, seed)
     })?;
+    Ok(residual_from(&partials))
+}
+
+/// One rank's contribution to the Eq. (13) inner products, with the
+/// rank-deterministic data every harness variant draws identically.
+fn rank_partials<T: Scalar>(
+    comm: &mut Comm,
+    op: &dyn DistLinearOp<T>,
+    seed: u64,
+) -> Result<Partials> {
+    let rank = comm.rank();
+    let mut rng = SplitMix64::new(seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let x = random_shard::<T>(&op.domain_shape(rank), &mut rng);
+    let y = random_shard::<T>(&op.codomain_shape(rank), &mut rng);
+    let fx = op.forward(comm, x.clone())?;
+    let fsy = op.adjoint(comm, y.clone())?;
+    Ok(Partials {
+        fx_dot_y: dot(&fx, &y)?,
+        x_dot_fsy: dot(&x, &fsy)?,
+        fx_sq: sq_norm(&fx),
+        y_sq: sq_norm(&y),
+        x_sq: sq_norm(&x),
+        fsy_sq: sq_norm(&fsy),
+    })
+}
+
+/// Reduce per-rank partials — in rank order, so every harness variant
+/// (in-process cluster, multi-process gather) accumulates in the same
+/// floating-point order and the residual is bitwise reproducible.
+fn residual_from(partials: &[Partials]) -> f64 {
     let mut tot = Partials::default();
-    for p in &partials {
+    for p in partials {
         tot.fx_dot_y += p.fx_dot_y;
         tot.x_dot_fsy += p.x_dot_fsy;
         tot.fx_sq += p.fx_sq;
@@ -151,9 +168,60 @@ pub fn adjoint_residual_under<T: Scalar>(
     }
     let denom = (tot.fx_sq.sqrt() * tot.y_sq.sqrt()).max(tot.x_sq.sqrt() * tot.fsy_sq.sqrt());
     if denom == 0.0 {
-        return Ok(0.0);
+        return 0.0;
     }
-    Ok((tot.fx_dot_y - tot.x_dot_fsy).abs() / denom)
+    (tot.fx_dot_y - tot.x_dot_fsy).abs() / denom
+}
+
+/// Tag pair (gather, result) reserved for [`adjoint_residual_on`]'s
+/// reduction traffic — far above the tags any primitive under test uses.
+const ADJOINT_GATHER_TAG: u64 = 0xAD70_0000_0000_0000;
+const ADJOINT_RESULT_TAG: u64 = 0xAD70_0000_0000_0001;
+
+/// Run the Eq. (13) adjoint test for `op` on an **already-connected**
+/// cluster — every member calls this collectively and every member gets
+/// the residual back. This is how a multi-*process* cluster (whose ranks
+/// cannot return values to a shared parent the way
+/// [`adjoint_residual`]'s in-process launcher can) runs the same sweep:
+/// per-rank partials are gathered to rank 0 in rank order, reduced in
+/// exactly the floating-point order [`adjoint_residual`] uses, and the
+/// residual broadcast back — so the two harnesses agree bitwise.
+pub fn adjoint_residual_on<T: Scalar>(
+    comm: &mut Comm,
+    op: &dyn DistLinearOp<T>,
+    seed: u64,
+) -> Result<f64> {
+    let p = rank_partials(comm, op, seed)?;
+    if comm.rank() == 0 {
+        let mut all = Vec::with_capacity(comm.size());
+        all.push(p);
+        for src in 1..comm.size() {
+            let v = comm.recv_vec::<f64>(src, ADJOINT_GATHER_TAG)?;
+            if v.len() != 6 {
+                return Err(crate::error::Error::Comm(format!(
+                    "adjoint partials from rank {src}: got {} values, expected 6",
+                    v.len()
+                )));
+            }
+            all.push(Partials {
+                fx_dot_y: v[0],
+                x_dot_fsy: v[1],
+                fx_sq: v[2],
+                y_sq: v[3],
+                x_sq: v[4],
+                fsy_sq: v[5],
+            });
+        }
+        let r = residual_from(&all);
+        for dst in 1..comm.size() {
+            comm.send_slice::<f64>(dst, ADJOINT_RESULT_TAG, &[r])?;
+        }
+        Ok(r)
+    } else {
+        let mine = [p.fx_dot_y, p.x_dot_fsy, p.fx_sq, p.y_sq, p.x_sq, p.fsy_sq];
+        comm.send_slice::<f64>(0, ADJOINT_GATHER_TAG, &mine)?;
+        Ok(comm.recv_vec::<f64>(0, ADJOINT_RESULT_TAG)?[0])
+    }
 }
 
 /// Assert coherence with the default f64 threshold used throughout the
@@ -277,6 +345,16 @@ mod tests {
         // residual is O(⟨x,y⟩/3‖x‖‖y‖) for random x,y — far above the
         // 1e-12 coherence threshold even when x, y are nearly orthogonal
         assert!(r > 1e-6, "broken adjoint slipped through: residual {r}");
+    }
+
+    #[test]
+    fn residual_on_matches_parent_side_reduce_bitwise() {
+        let op = Identity { shape: vec![4, 3] };
+        let parent = adjoint_residual(3, &op, 42).unwrap();
+        let gathered = Cluster::run(3, |comm| adjoint_residual_on(comm, &op, 42)).unwrap();
+        for r in gathered {
+            assert_eq!(r.to_bits(), parent.to_bits());
+        }
     }
 
     #[test]

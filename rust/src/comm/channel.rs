@@ -1,0 +1,103 @@
+//! The in-process channel backend: the default [`Transport`] and the
+//! test substrate.
+//!
+//! One unbounded `mpsc` channel per rank plus a shared [`Barrier`]. A
+//! [`Message`] passes through **untouched** — a typed body's `Arc` moves
+//! across threads without any serialize/deserialize round-trip, which is
+//! what makes the zero-copy payload path and the receiver-returns-to-
+//! sender pool cycle possible (staging-ownership guarantee #2 of the
+//! [`Transport`] contract, in its in-process reading). FIFO per pair is
+//! inherited from `mpsc`; disconnection is channel disconnection.
+
+use super::transport::{Arrival, Message, Transport};
+use crate::error::{Error, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// In-process transport over `mpsc` channels: the default backend and
+/// the test substrate. Messages pass through untouched, preserving the
+/// zero-copy typed payload path (see [`crate::comm`]'s module docs).
+pub struct ChannelTransport {
+    rank: usize,
+    world: usize,
+    senders: Vec<Sender<Message>>,
+    inbox: Receiver<Message>,
+    barrier: Arc<Barrier>,
+}
+
+impl ChannelTransport {
+    /// Build the full mesh for a `world`-rank in-process cluster: every
+    /// endpoint can reach every other (and itself). The constructor's
+    /// sender handles are dropped before the endpoints are handed out,
+    /// so channel disconnection propagates exactly when the *ranks*
+    /// drop their endpoints.
+    pub fn mesh(world: usize) -> Vec<ChannelTransport> {
+        let mut senders = Vec::with_capacity(world);
+        let mut inboxes = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            inboxes.push(rx);
+        }
+        let barrier = Arc::new(Barrier::new(world));
+        inboxes
+            .into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| ChannelTransport {
+                rank,
+                world,
+                senders: senders.clone(),
+                inbox,
+                barrier: barrier.clone(),
+            })
+            .collect()
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn kind(&self) -> &'static str {
+        "channel"
+    }
+
+    fn send(&mut self, dst: usize, msg: Message) -> Result<()> {
+        self.senders[dst]
+            .send(msg)
+            .map_err(|_| Error::Comm(format!("rank {dst} disconnected")))
+    }
+
+    fn try_recv(&mut self) -> Option<Message> {
+        match self.inbox.try_recv() {
+            Ok(msg) => Some(msg),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Arrival {
+        match self.inbox.recv_timeout(timeout) {
+            Ok(msg) => Arrival::Message(msg),
+            Err(RecvTimeoutError::Timeout) => Arrival::Timeout,
+            Err(RecvTimeoutError::Disconnected) => Arrival::Disconnected,
+        }
+    }
+
+    fn recv_blocking(&mut self) -> Arrival {
+        match self.inbox.recv() {
+            Ok(msg) => Arrival::Message(msg),
+            Err(_) => Arrival::Disconnected,
+        }
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.barrier.wait();
+        Ok(())
+    }
+}

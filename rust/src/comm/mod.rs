@@ -1,3166 +1,86 @@
-//! Message-passing substrate (the "MPI" of this reproduction) — now a
-//! **nonblocking request engine**.
+//! Message passing for distributed tensor algebra, layered around a
+//! pluggable [`Transport`] seam.
 //!
-//! The paper's framework "is independent of communication back-end" (§3);
-//! DistDL used MPI via mpi4py. Here the back-end is an in-process SPMD
-//! cluster: [`Cluster::run`] spawns one OS thread per world rank and hands
-//! each a [`Comm`] endpoint supporting tagged point-to-point send/receive —
-//! the paper's primitive "from which all others can be derived". All
-//! collectives in [`crate::primitives`] are built strictly on top of
-//! send/recv, exactly as the linear-algebraic derivations compose
-//! everything from the send-receive copy operator.
+//! The paper's claim that the framework "is independent of communication
+//! back-end" (§3) is embodied here as an architecture in two halves:
 //!
-//! ## Request engine
+//! * **The engine** (`engine.rs`, exporting [`Comm`]/[`Cluster`]): MPI-style
+//!   nonblocking point-to-point requests (`isend_*`/`irecv`/`wait*`/`test`)
+//!   with nonovertaking tag matching, the ARQ layer (per-stream wire
+//!   sequence numbers, resequencing, duplicate suppression, retransmit
+//!   recovery), the registered [buffer pool](PooledBody) with its
+//!   receiver-returns-to-sender cycle, fault injection ([`faults`]), and
+//!   plan capture ([`plan`]). All of it is written against the
+//!   [`Transport`] trait and nothing else.
 //!
-//! Mirroring MPI's `Isend`/`Irecv`, communication is posted and completed
-//! in two phases:
+//! * **The backends**: [`ChannelTransport`] (in-process `mpsc` mesh, the
+//!   default and the test substrate) and [`SocketTransport`] (TCP or
+//!   Unix-domain sockets, so a [`Cluster`] spans OS processes via
+//!   [`Cluster::connect_from_env`]).
 //!
-//! * [`Comm::isend_slice`] / [`Comm::isend_vec`] / [`Comm::isend_shared`]
-//!   post a send and return a [`SendRequest`]. Channel sends are eager and
-//!   buffered, so a posted send is already in flight; [`Comm::wait_send`]
-//!   completes the handle.
-//! * [`Comm::irecv`] posts a receive and returns a typed
-//!   [`RecvRequest<T>`]. Completion is [`Comm::wait`] (blocking),
-//!   [`Comm::wait_all`], [`Comm::wait_any`] (first *arrival* wins — the
-//!   `Waitany` the gather and all-to-all assemblies drain on), or the
-//!   nonblocking probe [`Comm::test`]. Requests posted on the same
-//!   `(source, tag)` match arrivals **in post order** (MPI's
-//!   nonovertaking rule), independent of the order they are waited on.
+//! # The `Transport` contract
 //!
-//! The primitives post *all* their sends and receives for a phase before
-//! completing any of them ("post-all-then-complete"), and the hot layers
-//! ([`crate::nn::layers`] conv, [`crate::coordinator`]) compute while
-//! messages are in flight — in both directions: the conv forward runs
-//! its interior kernel against the in-flight halo exchange, and the conv
-//! backward runs its δw/δb GEMMs and parameter sum-reduce against the
-//! in-flight δx halo-adjoint messages (the split adjoint exchange).
-//! Message payloads that travel the halo paths are staged in per-rank
-//! [`crate::memory`] scratch buffers that the receiver recycles.
+//! A backend moves [`Message`]s — `(src, tag, seq, body)` — between ranks
+//! and must guarantee exactly three things; everything else (matching,
+//! ordering across tags, reliability, flow recovery) belongs to the
+//! engine above:
 //!
-//! ## Payload paths
+//! 1. **FIFO per pair.** Messages from rank *a* to rank *b* arrive in the
+//!    order they were [`send`](Transport::send)ed. No ordering is implied
+//!    across different source ranks. The engine's ARQ resequencer assumes
+//!    per-pair FIFO as its baseline and repairs everything injected
+//!    *above* the transport (delays, duplicates, drops from a fault
+//!    plan) — a backend that also reorders internally would need its own
+//!    sequencing below the seam, like TCP already provides.
 //!
-//! * **Typed zero-copy** (default): `send_slice`/`isend_*` move the scalar
-//!   buffer into an `Arc` and pass it through the channel untouched; the
-//!   receiver downcasts and reclaims the buffer without any per-element
-//!   serialize/deserialize round-trip. Element-type mismatches fall back to
-//!   the wire format, whose length check reports them.
-//! * **Length-checked wire format** (fallback/interop): little-endian
-//!   elements behind an 8-byte element-count header, produced on demand for
-//!   [`Comm::recv_bytes`] and forced globally by
-//!   [`Comm::set_wire_format`] — the knob the benches use to compare the
-//!   blocking/serializing baseline against the zero-copy engine.
+//! 2. **Staging ownership.** A serializing backend (sockets) encodes the
+//!    body into wire bytes *inside* [`send`](Transport::send) and then
+//!    drops the body — so a pooled send buffer returns to its sender's
+//!    pool the moment the bytes are staged, matching the engine's
+//!    wire-format staging semantics. A pass-through backend (channels)
+//!    must leave the body untouched end to end, which is what preserves
+//!    the zero-copy `Arc` payload path and the pool's
+//!    receiver-returns-to-sender cycle.
 //!
-//! ## Registered comm-buffer pool
+//! 3. **Delivery-seam transparency.** Arrivals are handed to the engine
+//!    raw, exactly once each, in arrival order. The fault injector sits
+//!    at the engine's delivery seam — *after* the transport — so a
+//!    seeded fault plan perturbs a socket backend exactly as it perturbs
+//!    the channel backend, which is what makes the chaos suites a
+//!    conformance harness for new backends.
 //!
-//! Production interconnects get their collective throughput from
-//! **pre-registered communication buffers**: message payloads live in
-//! long-lived, registered memory that the transport owns, and steady-state
-//! traffic touches the allocator not at all. Each [`Comm`] endpoint owns a
-//! [`BufferPool`] that simulates exactly that contract in-process:
+//! Backend selection is ambient: [`default_transport`] consults a
+//! thread-local [`TransportGuard`] override, then the `PALLAS_TRANSPORT`
+//! environment variable, then falls back to channels. [`Cluster::run`]
+//! dispatches on it, so any existing test or training loop can be
+//! re-pointed at sockets without a signature change.
 //!
-//! * a sender draws a size-classed staging buffer from **its own** pool
-//!   ([`Comm::pool_take`]), fills it, and posts it with
-//!   [`Comm::isend_pooled`] (or fans a shared [`PooledBody`] out with
-//!   [`Comm::isend_pooled_body`] — the broadcast tree clones only the
-//!   `Arc`);
-//! * the payload travels with a handle to the sender's return bin; the
-//!   *receiver* completes it with [`Comm::wait_payload`] /
-//!   [`Comm::wait_any_payload`], consumes the contents in place
-//!   (reference-counted — the last holder's drop does the return), and the
-//!   buffer flies home to the **sender's** pool slot.
+//! # On-the-wire format
 //!
-//! That receiver-returns-to-sender cycle is what the per-rank
-//! [`crate::memory`] scratch arenas can never close: the broadcast and
-//! sum-reduce trees, scatter/gather, the all-to-all assembly, and
-//! forward-only halo circulation all move buffers *one way*, so arena
-//! staging either leaks a buffer per step on send-heavy ranks or grows
-//! receive-heavy arenas without bound. With the pool, every one-way flow
-//! recycles: after warm-up a steady-state step performs **zero** pool
-//! misses (fresh allocations), and the [`CommPoolStats`] counters on
-//! [`CommStats::pool`] prove it. `PALLAS_COMM_POOL_CAP_BYTES` caps each
-//! endpoint's parked bytes exactly like the scratch arenas'
-//! `PALLAS_SCRATCH_CAP_BYTES` (default 64 MiB, `0` = uncapped; returns
-//! that would exceed the cap execute the deallocation for real and count
-//! as evictions). [`Comm::set_comm_pool`]`(false)` restores the
-//! move-semantics unpooled paths — the benches' baseline, bitwise
-//! identical in every result (up to the IEEE sign of zero in the
-//! degenerate unseeded sum-reduce root, where the pooled path adopts a
-//! payload the unpooled baseline adds into zeros).
+//! Socket backends frame every message as a 36-byte header (magic,
+//! version, kind, dtype tag, src, tag, seq, payload length) followed by
+//! the payload in the same length-checked little-endian encoding the
+//! engine's `set_wire_format` bench knob exercises in-process. Version
+//! or framing violations surface as [`Error::Protocol`] — see
+//! [`transport`] for the codec and its tests.
 //!
-//! ## Pool-backed receives
-//!
-//! The receive side of the cycle is zero-copy too: a completed
-//! [`Payload`] wraps straight into a [`crate::tensor::Tensor`] via
-//! [`Payload::into_tensor`] — the tensor's storage *is* the registered
-//! buffer (copy-on-write on mutation), and dropping the tensor performs
-//! the return. The scatter/send-recv destinations and the broadcast
-//! replicas the conv/affine layers stash all ride this path, which is
-//! what turns "zero allocations after warm-up" into "zero copies after
-//! warm-up". Because stashed replicas hold their buffers across a whole
-//! step, a size class's rotation depth can exceed one;
-//! [`Comm::pool_reserve`] pre-warms that depth on a class's second miss,
-//! so only the first couple of steps of a pipeline record misses. See
-//! [`crate::memory`] for how this registered-pool tier composes with
-//! owned buffers and the arena-scratch tier.
-//!
-//! Semantics match MPI where it matters:
-//! * messages between a (source, destination) pair are FIFO;
-//! * receives match on `(source, tag)`; non-matching messages are parked in
-//!   a local mailbox until a matching receive is posted;
-//! * [`Comm::barrier`] is a full-world barrier;
-//! * the blocking API ([`Comm::send_slice`], [`Comm::recv_vec`],
-//!   [`Comm::sendrecv`]) survives as thin wrappers over the request engine.
-//!
-//! ## Failure model
-//!
-//! The engine is built to survive the failure modes a real transport has,
-//! and to make them reproducible ([`faults`] injects them from a seeded
-//! plan at the delivery seam — `PALLAS_FAULT_PLAN` or
-//! [`Comm::set_fault_plan`]):
-//!
-//! * **Sequence numbers.** Every message carries a per-`(sender, tag)`
-//!   wire sequence number; the receiver resequences arrivals before
-//!   matching, so duplicated deliveries are suppressed (retransmission is
-//!   idempotent) and reordered deliveries are buffered until the gap
-//!   fills — FIFO survives a misbehaving transport.
-//! * **What is retried.** A blocked receive has two clocks: a *retry
-//!   threshold* (`PALLAS_RETRY_TIMEOUT_MS`, exponential backoff, at most
-//!   `PALLAS_MAX_RETRANSMITS` recovery attempts) that counts stragglers
-//!   and triggers retransmission of withheld payloads, and a *fatal
-//!   deadline* (`PALLAS_RECV_TIMEOUT_MS`; `0` = no deadline — matching
-//!   the `0` = uncapped cap convention) after which the receive fails.
-//!   A payload whose corruption is caught by the wire length check is
-//!   recovered from its pristine retransmit copy transparently.
-//! * **What is fatal.** A receive that outlives its fatal deadline, a
-//!   send to a vanished world, and a rank scheduled to die by a
-//!   `kill:rank=R,step=K` plan clause ([`Comm::fault_step`]). On the
-//!   fatal path the request is *abandoned, not leaked*: its message —
-//!   arrived, in flight, or withheld — is swept on arrival and dropped,
-//!   so a registered [`Payload::Pooled`] buffer still returns to its
-//!   sender's pool, and a retried request on the same stream matches the
-//!   retransmitted payload, not the stale one.
-//! * **Health surfacing.** [`CommStats::faults`]
-//!   ([`faults::FaultStats`]) counts injected faults, retries,
-//!   retransmissions, suppressed duplicates, stragglers, swept
-//!   abandons, and the longest stall — the coordinator publishes them as
-//!   `fault_*` MetricLog keys. What checkpointing covers on top of this
-//!   is described in [`crate::coordinator`] and [`crate::checkpoint`].
+//! [`Error::Protocol`]: crate::error::Error::Protocol
 
 pub mod faults;
 pub mod plan;
-
-use crate::error::{Error, Result};
-use crate::tensor::{Scalar, Tensor};
-use crate::util::env::{parse_u64, EnvNum};
-use faults::{FaultPlan, FaultStats, Verdict};
-use std::any::{Any, TypeId};
-use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
-use std::marker::PhantomData;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Barrier, Mutex};
-use std::time::{Duration, Instant};
-
-/// Default fatal receive deadline in milliseconds — generous, but converts
-/// a deadlock (the classic distributed-programming failure mode) into an
-/// error instead of a hang. Short under `cfg(test)` so a deadlocked unit
-/// test fails in seconds. Overridable via the `PALLAS_RECV_TIMEOUT_MS`
-/// environment variable (read once per [`Cluster::run`]); an explicit `0`
-/// means **no deadline**, consistent with the crate-wide `0` = uncapped
-/// convention for caps.
-const DEFAULT_RECV_TIMEOUT_MS: u64 = if cfg!(test) { 5_000 } else { 60_000 };
-
-/// Environment variable overriding the fatal receive deadline
-/// (milliseconds; `0` = no deadline).
-pub const RECV_TIMEOUT_ENV: &str = "PALLAS_RECV_TIMEOUT_MS";
-
-/// Parse a `PALLAS_RECV_TIMEOUT_MS` value through the shared
-/// [`crate::util::env`] parser: absence or garbage falls back to the
-/// default, an explicit `0` disables the deadline (`None`).
-fn parse_recv_timeout(raw: Option<&str>) -> Option<Duration> {
-    match parse_u64(RECV_TIMEOUT_ENV, raw) {
-        EnvNum::Value(0) => None,
-        EnvNum::Value(ms) => Some(Duration::from_millis(ms)),
-        EnvNum::Unset | EnvNum::Malformed => Some(Duration::from_millis(DEFAULT_RECV_TIMEOUT_MS)),
-    }
-}
-
-/// The fatal receive deadline currently configured by the environment
-/// (`None` = no deadline).
-pub fn configured_recv_timeout() -> Option<Duration> {
-    parse_recv_timeout(std::env::var(RECV_TIMEOUT_ENV).ok().as_deref())
-}
-
-/// Default retry/straggler threshold in milliseconds: how long a blocked
-/// receive waits before it counts itself stalled, bumps the retry
-/// counters, and asks the fault layer to retransmit anything withheld on
-/// its stream. Backoff doubles per firing (capped at 2^6 x the base), so
-/// an idle wait does not busy-poll.
-const DEFAULT_RETRY_TIMEOUT_MS: u64 = if cfg!(test) { 250 } else { 2_000 };
-
-/// Environment variable overriding the retry/straggler threshold
-/// (milliseconds; `0` disables retries and the straggler watchdog).
-pub const RETRY_TIMEOUT_ENV: &str = "PALLAS_RETRY_TIMEOUT_MS";
-
-/// Parse a `PALLAS_RETRY_TIMEOUT_MS` value: absence or garbage falls back
-/// to the default, an explicit `0` disables retries (`None`).
-fn parse_retry_timeout(raw: Option<&str>) -> Option<Duration> {
-    match parse_u64(RETRY_TIMEOUT_ENV, raw) {
-        EnvNum::Value(0) => None,
-        EnvNum::Value(ms) => Some(Duration::from_millis(ms)),
-        EnvNum::Unset | EnvNum::Malformed => {
-            Some(Duration::from_millis(DEFAULT_RETRY_TIMEOUT_MS))
-        }
-    }
-}
-
-/// The retry threshold currently configured by the environment.
-fn configured_retry_timeout() -> Option<Duration> {
-    parse_retry_timeout(std::env::var(RETRY_TIMEOUT_ENV).ok().as_deref())
-}
-
-/// Default bound on recovery (retransmission) attempts per blocked
-/// receive. Retry firings past the bound still count stragglers; they
-/// just stop asking for retransmissions.
-const DEFAULT_MAX_RETRANSMITS: u32 = 8;
-
-/// Environment variable overriding the retransmission bound.
-pub const MAX_RETRANSMITS_ENV: &str = "PALLAS_MAX_RETRANSMITS";
-
-/// Parse a `PALLAS_MAX_RETRANSMITS` value (absence/garbage = default).
-fn parse_max_retransmits(raw: Option<&str>) -> u32 {
-    match parse_u64(MAX_RETRANSMITS_ENV, raw) {
-        EnvNum::Value(n) => n.min(u32::MAX as u64) as u32,
-        EnvNum::Unset | EnvNum::Malformed => DEFAULT_MAX_RETRANSMITS,
-    }
-}
-
-/// The retransmission bound currently configured by the environment.
-fn configured_max_retransmits() -> u32 {
-    parse_max_retransmits(std::env::var(MAX_RETRANSMITS_ENV).ok().as_deref())
-}
-
-/// Environment variable capping the bytes each endpoint's registered
-/// buffer pool may park (mirrors the scratch arenas'
-/// `PALLAS_SCRATCH_CAP_BYTES` policy: absent/garbage means the default,
-/// an explicit `0` means uncapped). Read once per [`Cluster::run`].
-pub const COMM_POOL_CAP_ENV: &str = "PALLAS_COMM_POOL_CAP_BYTES";
-
-/// Default per-endpoint pool cap — far above any steady-state message
-/// working set in this crate, but a hard bound on pathological growth.
-pub const DEFAULT_COMM_POOL_CAP_BYTES: usize = 64 << 20;
-
-/// Parse a `PALLAS_COMM_POOL_CAP_BYTES` value into the effective cap
-/// (`None` = uncapped).
-fn parse_comm_pool_cap(raw: Option<&str>) -> Option<usize> {
-    match parse_u64(COMM_POOL_CAP_ENV, raw) {
-        EnvNum::Value(0) => None,
-        EnvNum::Value(b) => Some(b as usize),
-        EnvNum::Unset | EnvNum::Malformed => Some(DEFAULT_COMM_POOL_CAP_BYTES),
-    }
-}
-
-/// The per-endpoint pool cap currently configured by the environment.
-fn configured_comm_pool_cap() -> Option<usize> {
-    parse_comm_pool_cap(std::env::var(COMM_POOL_CAP_ENV).ok().as_deref())
-}
-
-type AnyArc = Arc<dyn Any + Send + Sync>;
-
-// ---------------------------------------------------------------------
-// Registered comm-buffer pool
-// ---------------------------------------------------------------------
-
-/// A buffer on its way home: the type-erased `Vec<T>` plus the metadata
-/// the owning pool needs to park it without downcasting.
-struct PoolEntry {
-    elem: TypeId,
-    cap_elems: usize,
-    bytes: usize,
-    buf: Box<dyn Any + Send>,
-}
-
-/// The sender-owned return slot that travels (by `Arc`) inside every
-/// pooled payload. Receivers push the dead buffer here; the owner drains
-/// it on its next acquire.
-type ReturnBin = Arc<Mutex<Vec<PoolEntry>>>;
-
-/// A registered message payload: a buffer drawn from some endpoint's
-/// [`BufferPool`] together with the handle that returns it there.
-///
-/// The body is reference-counted through the engine (`Arc<PooledBody>`),
-/// so fan-out sends share one registration; whichever holder drops the
-/// **last** reference performs the return — receiver-side for
-/// point-to-point messages, the final tree member for a broadcast.
-pub struct PooledBody<T: Scalar> {
-    data: Vec<T>,
-    home: ReturnBin,
-}
-
-impl<T: Scalar> PooledBody<T> {
-    /// The payload contents.
-    pub fn as_slice(&self) -> &[T] {
-        &self.data
-    }
-
-    /// Payload length in elements.
-    pub fn len(&self) -> usize {
-        self.data.len()
-    }
-
-    /// Whether the payload is empty.
-    pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
-    }
-}
-
-impl<T: Scalar> Drop for PooledBody<T> {
-    fn drop(&mut self) {
-        let buf = std::mem::take(&mut self.data);
-        if buf.capacity() == 0 {
-            return;
-        }
-        let entry = PoolEntry {
-            elem: TypeId::of::<T>(),
-            cap_elems: buf.capacity(),
-            bytes: buf.capacity() * std::mem::size_of::<T>(),
-            buf: Box::new(buf),
-        };
-        // A poisoned bin means its owner panicked; leaking the buffer to
-        // the allocator is the only sensible fallback.
-        if let Ok(mut bin) = self.home.lock() {
-            bin.push(entry);
-        }
-    }
-}
-
-/// Counters describing one endpoint's registered-buffer pool.
-#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
-pub struct CommPoolStats {
-    /// `pool_take` calls served while the pool was enabled.
-    pub acquires: usize,
-    /// Acquires served from parked/returned buffers (no allocation).
-    pub hits: usize,
-    /// Acquires that had to mint a fresh buffer. After warm-up a
-    /// steady-state train step should add **zero** here.
-    pub misses: usize,
-    /// Buffers that came home from receivers.
-    pub returns: usize,
-    /// Returns dropped by the byte cap (`PALLAS_COMM_POOL_CAP_BYTES`) —
-    /// the deallocation executed for real.
-    pub evictions: usize,
-    /// Bytes currently parked in the pool.
-    pub pooled_bytes: usize,
-    /// Extra buffers minted eagerly by [`Comm::pool_reserve`] pre-warming
-    /// (parked alongside the missing take's fresh buffer so a pipelined
-    /// size class misses at most once).
-    pub reserved: usize,
-}
-
-/// A per-endpoint pool of registered message buffers (see the module
-/// docs). Owned by [`Comm`]; all access goes through the endpoint.
-struct BufferPool {
-    bin: ReturnBin,
-    free: Vec<PoolEntry>,
-    pooled_bytes: usize,
-    cap_bytes: Option<usize>,
-    enabled: bool,
-    /// Pre-warm depth (see [`Comm::pool_reserve`]): on a size class's
-    /// *second* miss — the signal that the class is genuinely pipelined,
-    /// keeping more than one buffer in flight at once — mint the rest of
-    /// its rotation depth eagerly, so the class misses at most twice
-    /// instead of once per step for the first `reserve_depth` steps.
-    /// Depth-1 classes (staged and returned within a step) miss once and
-    /// never pre-warm, and a class pre-warms **at most once**: later
-    /// misses (e.g. re-misses of an evicted class under cap pressure)
-    /// mint on demand only — so cold extras are bounded by one pre-warm
-    /// per class and cannot keep displacing hot returns under a finite
-    /// byte cap.
-    reserve_depth: usize,
-    /// Per-size-class rotation depth overrides ([`Comm::pool_reserve_for`]).
-    /// A class with an entry here pre-warms to *its* depth instead of the
-    /// endpoint-wide `reserve_depth`, so e.g. the DP ring's chunk rotation
-    /// and the pipeline's replica stash can coexist without one global
-    /// depth over- or under-minting for the other.
-    reserve_for: HashMap<(TypeId, usize), usize>,
-    /// Per-class pre-warm state: `false` after the first miss (observed),
-    /// `true` once the second-miss pre-warm has run.
-    warmed: HashMap<(TypeId, usize), bool>,
-    acquires: usize,
-    hits: usize,
-    misses: usize,
-    returns: usize,
-    evictions: usize,
-    reserved: usize,
-}
-
-impl BufferPool {
-    fn new(cap_bytes: Option<usize>) -> Self {
-        BufferPool {
-            bin: Arc::new(Mutex::new(Vec::new())),
-            free: Vec::new(),
-            pooled_bytes: 0,
-            cap_bytes,
-            enabled: true,
-            reserve_depth: 1,
-            reserve_for: HashMap::new(),
-            warmed: HashMap::new(),
-            acquires: 0,
-            hits: 0,
-            misses: 0,
-            returns: 0,
-            evictions: 0,
-            reserved: 0,
-        }
-    }
-
-    /// Park every buffer currently sitting in the return bin (applying
-    /// the cap — an over-cap return is evicted, i.e. truly deallocated).
-    fn drain_returns(&mut self) {
-        let drained: Vec<PoolEntry> = match self.bin.lock() {
-            Ok(mut bin) => std::mem::take(&mut *bin),
-            Err(_) => Vec::new(),
-        };
-        for entry in drained {
-            self.returns += 1;
-            if let Some(cap) = self.cap_bytes {
-                if self.pooled_bytes + entry.bytes > cap {
-                    self.evictions += 1;
-                    continue;
-                }
-            }
-            self.pooled_bytes += entry.bytes;
-            self.free.push(entry);
-        }
-    }
-
-    /// Acquire a buffer of exactly `len` elements with unspecified
-    /// contents (senders overwrite every element they ship). Best-fit
-    /// over the parked buffers; a miss mints a fresh zeroed buffer.
-    fn take<T: Scalar>(&mut self, len: usize) -> Vec<T> {
-        self.drain_returns();
-        self.acquires += 1;
-        let elem = TypeId::of::<T>();
-        let mut best: Option<(usize, usize)> = None;
-        for (i, e) in self.free.iter().enumerate() {
-            let tighter = match best {
-                None => true,
-                Some((_, c)) => e.cap_elems < c,
-            };
-            if e.elem == elem && e.cap_elems >= len && tighter {
-                best = Some((i, e.cap_elems));
-            }
-        }
-        match best {
-            Some((i, _)) => {
-                self.hits += 1;
-                let entry = self.free.swap_remove(i);
-                self.pooled_bytes -= entry.bytes;
-                let mut buf = *entry
-                    .buf
-                    .downcast::<Vec<T>>()
-                    .expect("pool entry matches its TypeId");
-                buf.resize(len, T::ZERO);
-                buf
-            }
-            None => {
-                self.misses += 1;
-                // A second miss of the same size class means the class is
-                // pipelined (its first buffer is still in flight): mint
-                // the rest of its rotation depth in the same stroke — the
-                // two on-demand mints plus these extras — with the cap
-                // checked *before* each mint, so a full or tiny cap costs
-                // nothing. Depth-1 classes miss once and never pre-warm,
-                // and each class pre-warms at most once: an evicted
-                // class's later re-misses must not be misread as
-                // pipelining and keep parking dead extras under the cap.
-                let depth = self
-                    .reserve_for
-                    .get(&(elem, len))
-                    .copied()
-                    .unwrap_or(self.reserve_depth);
-                if depth > 1 {
-                    match self.warmed.entry((elem, len)) {
-                        std::collections::hash_map::Entry::Vacant(slot) => {
-                            slot.insert(false); // first miss: observe only
-                        }
-                        std::collections::hash_map::Entry::Occupied(mut slot)
-                            if !*slot.get() =>
-                        {
-                            slot.insert(true); // second miss: pre-warm once
-                            for _ in 2..depth {
-                                let bytes = len * std::mem::size_of::<T>();
-                                if let Some(cap) = self.cap_bytes {
-                                    if self.pooled_bytes + bytes > cap {
-                                        break;
-                                    }
-                                }
-                                let extra = vec![T::ZERO; len];
-                                self.reserved += 1;
-                                self.pooled_bytes += bytes;
-                                self.free.push(PoolEntry {
-                                    elem,
-                                    cap_elems: extra.capacity(),
-                                    bytes,
-                                    buf: Box::new(extra),
-                                });
-                            }
-                        }
-                        std::collections::hash_map::Entry::Occupied(_) => {}
-                    }
-                }
-                vec![T::ZERO; len]
-            }
-        }
-    }
-
-    /// Wrap a buffer as a registered payload that returns here on drop.
-    fn wrap<T: Scalar>(&self, data: Vec<T>) -> PooledBody<T> {
-        PooledBody {
-            data,
-            home: self.bin.clone(),
-        }
-    }
-
-    fn stats(&self) -> CommPoolStats {
-        CommPoolStats {
-            acquires: self.acquires,
-            hits: self.hits,
-            misses: self.misses,
-            returns: self.returns,
-            evictions: self.evictions,
-            pooled_bytes: self.pooled_bytes,
-            reserved: self.reserved,
-        }
-    }
-}
-
-/// A completed receive's payload: either an owned buffer (unpooled typed
-/// path, wire fallback) or a registered buffer borrowed from the sender's
-/// pool. Consume via [`Payload::as_slice`] and drop (the drop performs
-/// the return), or take ownership with [`Payload::into_owned`].
-pub enum Payload<T: Scalar> {
-    /// The receiver owns the buffer outright.
-    Owned(Vec<T>),
-    /// A registered buffer; dropping the last reference returns it to the
-    /// sender's pool.
-    Pooled(Arc<PooledBody<T>>),
-}
-
-impl<T: Scalar> Payload<T> {
-    /// The payload contents.
-    pub fn as_slice(&self) -> &[T] {
-        match self {
-            Payload::Owned(v) => v.as_slice(),
-            Payload::Pooled(p) => p.as_slice(),
-        }
-    }
-
-    /// Payload length in elements.
-    pub fn len(&self) -> usize {
-        self.as_slice().len()
-    }
-
-    /// Whether the payload is empty.
-    pub fn is_empty(&self) -> bool {
-        self.as_slice().is_empty()
-    }
-
-    /// Take ownership of the contents. Owned payloads move; pooled
-    /// payloads are copied out and the registered buffer returns home.
-    pub fn into_owned(self) -> Vec<T> {
-        match self {
-            Payload::Owned(v) => v,
-            Payload::Pooled(p) => p.as_slice().to_vec(),
-        }
-    }
-
-    /// Wrap the payload as a tensor of `shape` **without copying**: an
-    /// owned payload moves its buffer in, and a registered payload backs
-    /// the tensor directly ([`Tensor::from_pooled`]) — reads stay
-    /// zero-copy, mutation promotes copy-on-write, and dropping the
-    /// tensor (or its last clone) returns the buffer to the sender's
-    /// pool. This is how the primitives' receive sides hand message
-    /// payloads to callers with zero post-completion copies.
-    pub fn into_tensor(self, shape: &[usize]) -> Result<Tensor<T>> {
-        match self {
-            Payload::Owned(v) => Tensor::from_vec(shape, v),
-            Payload::Pooled(p) => Tensor::from_pooled(shape, p),
-        }
-    }
-}
-
-/// Serializer stored in [`TypedBody`] for pooled payloads (the wire
-/// fallback for [`Comm::recv_bytes`] and element-type mismatches).
-fn pooled_wire_of<T: Scalar>(data: &AnyArc) -> Vec<u8> {
-    let p = data
-        .downcast_ref::<PooledBody<T>>()
-        .expect("pooled body serializer sees its own element type");
-    let v = p.as_slice();
-    let mut buf = Vec::with_capacity(8 + v.len() * T::WIRE_SIZE);
-    buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
-    T::write_bytes(v, &mut buf);
-    buf
-}
-
-/// Serialize a typed payload into the wire format (header + little-endian
-/// elements). Stored as a fn pointer in [`TypedBody`] so a type-erased
-/// message can still be rendered as bytes.
-fn wire_of<T: Scalar>(data: &AnyArc) -> Vec<u8> {
-    let v = data
-        .downcast_ref::<Vec<T>>()
-        .expect("typed body serializer sees its own element type");
-    let mut buf = Vec::with_capacity(8 + v.len() * T::WIRE_SIZE);
-    buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
-    T::write_bytes(v, &mut buf);
-    buf
-}
-
-/// Parse a wire-format buffer, enforcing the length check.
-fn parse_wire<T: Scalar>(buf: &[u8]) -> Result<Vec<T>> {
-    if buf.len() < 8 {
-        return Err(Error::Comm("truncated message header".into()));
-    }
-    let n = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
-    let body = &buf[8..];
-    if body.len() != n * T::WIRE_SIZE {
-        return Err(Error::Comm(format!(
-            "message length {} != {} x {} elements",
-            body.len(),
-            n,
-            T::WIRE_SIZE
-        )));
-    }
-    Ok(T::read_bytes(body))
-}
-
-/// A typed, `Arc`-backed payload: the zero-copy path.
-struct TypedBody {
-    len: usize,
-    wire_size: usize,
-    data: AnyArc,
-    to_wire: fn(&AnyArc) -> Vec<u8>,
-}
-
-/// Message payload: zero-copy typed buffer, or raw wire bytes.
-enum Body {
-    Bytes(Vec<u8>),
-    Typed(TypedBody),
-}
-
-impl Body {
-    /// Size this payload occupies (or would occupy) on the wire — used for
-    /// the traffic counters so both paths report comparable volumes.
-    fn wire_len(&self) -> usize {
-        match self {
-            Body::Bytes(b) => b.len(),
-            Body::Typed(t) => 8 + t.len * t.wire_size,
-        }
-    }
-}
-
-/// A tagged message in flight. `seq` is the per-`(sender, tag)` wire
-/// sequence number the receiver resequences on: duplicates are
-/// suppressed, reordered arrivals buffered until the gap fills.
-struct Message {
-    src: usize,
-    tag: u64,
-    seq: u64,
-    body: Body,
-}
-
-/// Clone a message body — the fault layer's duplicate injection. Typed
-/// bodies clone only the `Arc` (a pooled payload's registration stays
-/// shared, so suppression of the copy cannot double-return the buffer).
-fn clone_body(b: &Body) -> Body {
-    match b {
-        Body::Bytes(v) => Body::Bytes(v.clone()),
-        Body::Typed(t) => Body::Typed(TypedBody {
-            len: t.len,
-            wire_size: t.wire_size,
-            data: t.data.clone(),
-            to_wire: t.to_wire,
-        }),
-    }
-}
-
-/// Render a body as wire bytes (the fault layer's truncation corrupts a
-/// copy of this rendering; the length check catches it on decode).
-fn wire_bytes_of(b: &Body) -> Vec<u8> {
-    match b {
-        Body::Bytes(v) => v.clone(),
-        Body::Typed(t) => (t.to_wire)(&t.data),
-    }
-}
-
-/// Receiver-side fault state: the seeded plan plus whatever it is
-/// currently withholding (see [`faults`] for the model).
-struct FaultEngine {
-    plan: FaultPlan,
-    /// Messages held back by delay/reorder verdicts, with their release
-    /// deadlines.
-    delayed: Vec<(Instant, Message)>,
-    /// Withheld payloads by stream and wire sequence: dropped messages
-    /// (sequence at or past the stream's resequencer cursor) awaiting
-    /// retransmission, and pristine copies of truncated messages
-    /// (sequence behind the cursor) awaiting decode-failure recovery.
-    limbo: HashMap<(usize, u64), BTreeMap<u64, Body>>,
-}
-
-impl FaultEngine {
-    fn new(plan: FaultPlan) -> Self {
-        FaultEngine {
-            plan,
-            delayed: Vec::new(),
-            limbo: HashMap::new(),
-        }
-    }
-}
-
-/// Per-rank traffic counters (used by benches and the coordinator's metric
-/// dump).
-#[derive(Debug, Default, Clone, Copy)]
-pub struct CommStats {
-    /// Messages sent by this rank.
-    pub messages_sent: usize,
-    /// Payload bytes sent by this rank (wire-equivalent volume).
-    pub bytes_sent: usize,
-    /// Messages received.
-    pub messages_received: usize,
-    /// Payload bytes received (wire-equivalent volume).
-    pub bytes_received: usize,
-    /// Nonblocking receives posted (`irecv`).
-    pub irecvs_posted: usize,
-    /// Peak number of simultaneously outstanding receive requests.
-    pub max_in_flight: usize,
-    /// Messages delivered through the typed zero-copy path.
-    pub zero_copy_msgs: usize,
-    /// Messages that crossed the serialized wire format (sent or decoded).
-    pub wire_msgs: usize,
-    /// Wall-clock seconds this rank spent blocked completing receives.
-    pub wait_time_s: f64,
-    /// Registered buffer-pool counters (`comm_pool_*` on the MetricLog).
-    pub pool: CommPoolStats,
-    /// Fault-injection and recovery counters (`fault_*` on the
-    /// MetricLog): injected faults, retries, retransmissions, suppressed
-    /// duplicates, stragglers, swept abandons, longest stall.
-    pub faults: FaultStats,
-}
-
-/// Handle for a posted nonblocking send.
-///
-/// Channel sends in this substrate are eager and buffered, so the send is
-/// already in flight when the handle is returned; [`Comm::wait_send`]
-/// completes it. The handle still exists so call sites read like MPI and
-/// so a future bounded-channel backend can block in `wait_send`.
-#[must_use = "complete the posted send with Comm::wait_send"]
-#[derive(Debug)]
-pub struct SendRequest {
-    dst: usize,
-    tag: u64,
-}
-
-impl SendRequest {
-    /// Destination rank of the posted send.
-    pub fn destination(&self) -> usize {
-        self.dst
-    }
-
-    /// Message tag of the posted send.
-    pub fn tag(&self) -> u64 {
-        self.tag
-    }
-}
-
-/// Handle for a posted nonblocking receive of `T` elements.
-///
-/// Complete with [`Comm::wait`] / [`Comm::wait_all`]; probe with
-/// [`Comm::test`]. Requests on the same `(source, tag)` match arrivals in
-/// post order regardless of completion order. A dropped request leaks its
-/// matched message (it is never mis-delivered to a later request).
-#[must_use = "complete the posted receive with Comm::wait"]
-#[derive(Debug)]
-pub struct RecvRequest<T: Scalar> {
-    src: usize,
-    tag: u64,
-    seq: u64,
-    _elem: PhantomData<fn() -> T>,
-}
-
-impl<T: Scalar> RecvRequest<T> {
-    /// Source rank this receive matches.
-    pub fn source(&self) -> usize {
-        self.src
-    }
-
-    /// Message tag this receive matches.
-    pub fn tag(&self) -> u64 {
-        self.tag
-    }
-}
-
-/// One rank's endpoint into the cluster.
-pub struct Comm {
-    rank: usize,
-    size: usize,
-    senders: Vec<Sender<Message>>,
-    inbox: Receiver<Message>,
-    /// Messages that arrived before being matched to a posted receive.
-    parked: HashMap<(usize, u64), VecDeque<Body>>,
-    /// Arrivals already matched to a posted sequence number.
-    ready: HashMap<(usize, u64, u64), Body>,
-    /// Next request sequence number per `(source, tag)`.
-    next_posted: HashMap<(usize, u64), u64>,
-    /// Next arrival sequence number per `(source, tag)`.
-    next_arrived: HashMap<(usize, u64), u64>,
-    /// Next outbound wire sequence number per `(destination, tag)`.
-    next_send: HashMap<(usize, u64), u64>,
-    /// Receiver resequencer cursor: next expected wire sequence per
-    /// `(source, tag)` stream. Arrivals behind the cursor are duplicates
-    /// (suppressed); arrivals past it wait in `ooo` until the gap fills.
-    next_wire: HashMap<(usize, u64), u64>,
-    /// Out-of-order arrivals held until their wire-sequence gap fills.
-    ooo: HashMap<(usize, u64), BTreeMap<u64, Body>>,
-    /// Arrival sequence numbers owed to abandoned requests: the matching
-    /// message is discarded at promotion (dropping the payload returns a
-    /// registered buffer to its sender's pool).
-    discard: HashSet<(usize, u64, u64)>,
-    /// Outstanding receive requests right now.
-    in_flight: usize,
-    /// Force every payload through the serialized wire format (bench knob).
-    wire_format: bool,
-    /// Registered message-buffer pool (see the module docs).
-    pool: BufferPool,
-    /// Fatal per-receive deadline (`None` = wait forever).
-    recv_timeout: Option<Duration>,
-    /// Retry/straggler threshold (`None` = no retries, no watchdog).
-    retry_timeout: Option<Duration>,
-    /// Bound on retransmission-recovery attempts per blocked receive.
-    max_retransmits: u32,
-    /// Installed fault plan and its withheld messages, if any.
-    faults: Option<FaultEngine>,
-    /// Plan-capture recorder, when this endpoint is in capture mode
-    /// (see [`plan`] and [`crate::analysis`]). `None` in production.
-    plan: Option<Arc<Mutex<plan::PlanRecorder>>>,
-    barrier: Arc<Barrier>,
-    stats: CommStats,
-}
-
-impl Comm {
-    /// This endpoint's world rank.
-    #[inline]
-    pub fn rank(&self) -> usize {
-        self.rank
-    }
-
-    /// World size.
-    #[inline]
-    pub fn size(&self) -> usize {
-        self.size
-    }
-
-    /// Traffic counters so far. Drains the buffer pool's return bin first
-    /// so in-transit returns are reflected in the `pool` counters.
-    pub fn stats(&mut self) -> CommStats {
-        self.pool.drain_returns();
-        let mut s = self.stats;
-        s.pool = self.pool.stats();
-        s
-    }
-
-    /// Receive requests currently outstanding.
-    pub fn in_flight(&self) -> usize {
-        self.in_flight
-    }
-
-    /// Force (`true`) or lift (`false`) the serialized wire format for
-    /// every subsequent send. The default is the typed zero-copy path;
-    /// benches flip this to measure the blocking/serializing baseline.
-    pub fn set_wire_format(&mut self, on: bool) {
-        self.wire_format = on;
-    }
-
-    /// Whether the serialized wire format is currently forced.
-    pub fn wire_format(&self) -> bool {
-        self.wire_format
-    }
-
-    // ------------------------------------------------------------------
-    // Failure-model knobs (see the module docs)
-    // ------------------------------------------------------------------
-
-    /// Override the fatal per-receive deadline (`None` = wait forever).
-    /// The initial value comes from `PALLAS_RECV_TIMEOUT_MS` at cluster
-    /// launch; tests use this setter because endpoints are per-thread
-    /// while the environment is process-global.
-    pub fn set_recv_timeout(&mut self, deadline: Option<Duration>) {
-        self.recv_timeout = deadline;
-    }
-
-    /// The fatal per-receive deadline currently in force.
-    pub fn recv_timeout(&self) -> Option<Duration> {
-        self.recv_timeout
-    }
-
-    /// Override the retry/straggler threshold (`None` disables retries
-    /// and the progress watchdog). Initial value:
-    /// `PALLAS_RETRY_TIMEOUT_MS`.
-    pub fn set_retry_timeout(&mut self, threshold: Option<Duration>) {
-        self.retry_timeout = threshold;
-    }
-
-    /// Override the bound on retransmission-recovery attempts per
-    /// blocked receive. Initial value: `PALLAS_MAX_RETRANSMITS`.
-    pub fn set_max_retransmits(&mut self, bound: u32) {
-        self.max_retransmits = bound;
-    }
-
-    /// Install (or clear) a fault plan on this endpoint. Anything a
-    /// previous plan still withholds is released first so no payload is
-    /// stranded by reconfiguration. A plan carrying `retry_ms=` /
-    /// `timeout_ms=` overrides applies them to this endpoint's retry
-    /// threshold and fatal deadline.
-    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
-        if let Some(eng) = self.faults.take() {
-            let FaultEngine { delayed, limbo, .. } = eng;
-            let mut held: Vec<Message> = delayed.into_iter().map(|(_, m)| m).collect();
-            for ((src, tag), q) in limbo {
-                let cursor = *self.next_wire.get(&(src, tag)).unwrap_or(&0);
-                for (seq, body) in q {
-                    // Stale pristine copies of already-delivered
-                    // truncated messages just drop (the buffer returns
-                    // home); undelivered payloads are released.
-                    if seq >= cursor {
-                        held.push(Message {
-                            src,
-                            tag,
-                            seq,
-                            body,
-                        });
-                    }
-                }
-            }
-            held.sort_by_key(|m| (m.src, m.tag, m.seq));
-            for m in held {
-                self.resequence(m);
-            }
-        }
-        self.faults = plan.map(FaultEngine::new);
-        if let Some(eng) = self.faults.as_ref() {
-            if let Some(ms) = eng.plan.retry_ms {
-                self.retry_timeout = (ms > 0).then(|| Duration::from_millis(ms));
-            }
-            if let Some(ms) = eng.plan.timeout_ms {
-                self.recv_timeout = (ms > 0).then(|| Duration::from_millis(ms));
-            }
-        }
-    }
-
-    /// The kill-switch half of the fault plan: the coordinator calls this
-    /// at the top of every training step, and a `kill:rank=R,step=K`
-    /// clause matching this rank and `step` turns into an error — the
-    /// deterministic stand-in for a rank dying mid-run.
-    pub fn fault_step(&mut self, step: u64) -> Result<()> {
-        if let Some(eng) = self.faults.as_ref() {
-            if eng.plan.kills_at(self.rank, step) {
-                return Err(Error::Comm(format!(
-                    "rank {} killed by fault plan at step {step}",
-                    self.rank
-                )));
-            }
-        }
-        Ok(())
-    }
-
-    // ------------------------------------------------------------------
-    // Registered buffer pool
-    // ------------------------------------------------------------------
-
-    /// Whether the registered buffer pool is enabled (the default).
-    pub fn pool_on(&self) -> bool {
-        self.pool.enabled
-    }
-
-    /// Enable (default) or disable the registered buffer pool. Disabled,
-    /// the pooled send helpers degrade to the move-semantics unpooled
-    /// paths — the benches' baseline. Results are bitwise identical
-    /// either way; only the allocator traffic differs.
-    pub fn set_comm_pool(&mut self, on: bool) {
-        self.pool.enabled = on;
-    }
-
-    /// Override this endpoint's pool byte cap (`None` = uncapped) — a
-    /// testing/tuning knob; the initial cap comes from
-    /// `PALLAS_COMM_POOL_CAP_BYTES` at cluster launch.
-    pub fn set_pool_cap_bytes(&mut self, cap: Option<usize>) {
-        self.pool.cap_bytes = cap;
-    }
-
-    /// Pipeline-depth-aware pool pre-warming: when a size class misses a
-    /// **second** time — proof that the class keeps more than one buffer
-    /// in flight at once — mint its full rotation of `depth` buffers in
-    /// that stroke (the two on-demand mints plus `depth - 2` parked
-    /// extras, byte cap checked before each mint).
-    ///
-    /// A pipelined step keeps several buffers of one class alive at once
-    /// — broadcast replicas stashed until backward, the micro-batch
-    /// prefetch overlap — so without pre-warming the first `depth` steps
-    /// each record one spurious miss per class while the rotation depth
-    /// is minted. With it, a pipelined class misses at most twice and a
-    /// depth-1 class (staged and returned within its step) exactly once —
-    /// and because depth-1 classes never mint extras and each class
-    /// pre-warms at most once, cold pre-warm cannot displace hot returns
-    /// under a finite cap. Extra mints are counted under
-    /// [`CommPoolStats::reserved`], not as further misses. `depth <= 1`
-    /// restores the mint-on-demand default.
-    pub fn pool_reserve(&mut self, depth: usize) {
-        self.pool.reserve_depth = depth.max(1);
-    }
-
-    /// Per-size-class override of [`Comm::pool_reserve`]: the class of
-    /// `len`-element `T` buffers pre-warms to `depth` instead of the
-    /// endpoint-wide depth. The ring collectives use this for their chunk
-    /// rotation (one chunk in flight to the neighbour while the next is
-    /// being staged needs depth 2) without inflating every other class,
-    /// and without the pipeline's global depth under-minting the ring.
-    /// `depth <= 1` removes the override.
-    pub fn pool_reserve_for<T: Scalar>(&mut self, len: usize, depth: usize) {
-        let key = (TypeId::of::<T>(), len);
-        if depth <= 1 {
-            self.pool.reserve_for.remove(&key);
-        } else {
-            self.pool.reserve_for.insert(key, depth);
-        }
-    }
-
-    /// This endpoint's pool counters (return bin drained first).
-    pub fn pool_stats(&mut self) -> CommPoolStats {
-        self.pool.drain_returns();
-        self.pool.stats()
-    }
-
-    /// Acquire a registered staging buffer of exactly `len` elements with
-    /// **unspecified contents** (fill it before sending). Served from the
-    /// pool's parked/returned buffers when possible; with the pool
-    /// disabled this is a plain allocation, uncounted.
-    pub fn pool_take<T: Scalar>(&mut self, len: usize) -> Vec<T> {
-        if self.pool.enabled {
-            self.pool.take(len)
-        } else {
-            vec![T::ZERO; len]
-        }
-    }
-
-    /// Copy `data` into a registered buffer and wrap it as a shareable
-    /// pooled payload (broadcast trees fan the `Arc` out). Pool must be
-    /// enabled — callers branch on [`Comm::pool_on`].
-    pub fn pool_stage<T: Scalar>(&mut self, data: &[T]) -> Arc<PooledBody<T>> {
-        let mut stage = self.pool.take(data.len());
-        stage.copy_from_slice(data);
-        Arc::new(self.pool.wrap(stage))
-    }
-
-    /// Adopt an already-filled buffer (typically one obtained from
-    /// [`Comm::pool_take`]) as a registered payload **without copying**:
-    /// the buffer returns to this endpoint's pool when the payload drops.
-    /// This is how an accumulator assembled in a pool buffer — the
-    /// sum-reduce root's fused add-out-of-payload result, a DP bucket —
-    /// becomes a pool-backed [`Tensor`](crate::tensor::Tensor) or an
-    /// onward zero-copy send.
-    pub fn pool_wrap<T: Scalar>(&mut self, data: Vec<T>) -> Arc<PooledBody<T>> {
-        Arc::new(self.pool.wrap(data))
-    }
-
-    // ------------------------------------------------------------------
-    // Plan capture (see the `plan` module and `crate::analysis`)
-    // ------------------------------------------------------------------
-
-    /// Switch this endpoint into plan-capture mode: every subsequent send
-    /// post, receive post, completion, timeout, and barrier is recorded
-    /// as a [`plan::PlanEvent`] until [`Comm::plan_take`] drains the log.
-    pub fn plan_begin(&mut self) {
-        self.plan = Some(Arc::new(Mutex::new(plan::PlanRecorder::new())));
-    }
-
-    /// Leave capture mode and return the recorded events (`None` if no
-    /// capture was active).
-    pub fn plan_take(&mut self) -> Option<Vec<plan::ScopedEvent>> {
-        self.plan.take().map(|h| match h.lock() {
-            Ok(mut g) => g.take_events(),
-            Err(_) => Vec::new(),
-        })
-    }
-
-    /// Whether a plan capture is active.
-    pub fn plan_active(&self) -> bool {
-        self.plan.is_some()
-    }
-
-    /// Shared handle to the active recorder, if any — what
-    /// [`plan::PlanScope`] guards clone so they outlive the `&mut Comm`
-    /// borrow that created them.
-    pub fn plan_handle(&self) -> Option<Arc<Mutex<plan::PlanRecorder>>> {
-        self.plan.clone()
-    }
-
-    /// Declare the capture phase subsequent events belong to (no-op when
-    /// not capturing).
-    pub fn plan_phase(&self, phase: plan::Phase) {
-        if let Some(h) = &self.plan {
-            if let Ok(mut g) = h.lock() {
-                g.set_phase(phase);
-            }
-        }
-    }
-
-    /// Record one event on the active recorder. Callers guard with
-    /// `self.plan.is_some()` so the production path is one branch.
-    fn plan_record(&self, event: plan::PlanEvent) {
-        if let Some(h) = &self.plan {
-            if let Ok(mut g) = h.lock() {
-                g.record(event);
-            }
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Posting sends
-    // ------------------------------------------------------------------
-
-    fn post(
-        &mut self,
-        dst: usize,
-        tag: u64,
-        body: Body,
-        dtype: &'static str,
-        pooled: bool,
-    ) -> Result<()> {
-        if dst >= self.size {
-            return Err(Error::Comm(format!(
-                "send to rank {dst} out of range (world {})",
-                self.size
-            )));
-        }
-        self.stats.messages_sent += 1;
-        self.stats.bytes_sent += body.wire_len();
-        if matches!(body, Body::Bytes(_)) {
-            self.stats.wire_msgs += 1;
-        }
-        let slot = self.next_send.entry((dst, tag)).or_insert(0);
-        let seq = *slot;
-        *slot += 1;
-        if self.plan.is_some() {
-            self.plan_record(plan::PlanEvent::Send {
-                dst,
-                tag,
-                seq,
-                bytes: body.wire_len(),
-                dtype,
-                pooled,
-            });
-        }
-        self.senders[dst]
-            .send(Message {
-                src: self.rank,
-                tag,
-                seq,
-                body,
-            })
-            .map_err(|_| Error::Comm(format!("rank {dst} disconnected")))
-    }
-
-    fn typed_body<T: Scalar>(data: Vec<T>) -> Body {
-        Body::Typed(TypedBody {
-            len: data.len(),
-            wire_size: T::WIRE_SIZE,
-            data: Arc::new(data),
-            to_wire: wire_of::<T>,
-        })
-    }
-
-    fn shared_body<T: Scalar>(data: &Arc<Vec<T>>) -> Body {
-        Body::Typed(TypedBody {
-            len: data.len(),
-            wire_size: T::WIRE_SIZE,
-            data: data.clone() as AnyArc,
-            to_wire: wire_of::<T>,
-        })
-    }
-
-    /// Send raw wire-format bytes to `dst` with `tag`. Never blocks
-    /// (channels are unbounded; backpressure is not modelled — the paper's
-    /// experiments are synchronous SPMD).
-    pub fn send_bytes(&mut self, dst: usize, tag: u64, payload: Vec<u8>) -> Result<()> {
-        self.post(dst, tag, Body::Bytes(payload), "bytes", false)
-    }
-
-    /// Post a nonblocking send of a typed slice (one buffer copy, no
-    /// per-element serialization; wire format if forced).
-    pub fn isend_slice<T: Scalar>(
-        &mut self,
-        dst: usize,
-        tag: u64,
-        data: &[T],
-    ) -> Result<SendRequest> {
-        if self.wire_format {
-            let mut buf = Vec::with_capacity(8 + data.len() * T::WIRE_SIZE);
-            buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
-            T::write_bytes(data, &mut buf);
-            self.post(dst, tag, Body::Bytes(buf), std::any::type_name::<T>(), false)?;
-        } else {
-            self.post(
-                dst,
-                tag,
-                Self::typed_body(data.to_vec()),
-                std::any::type_name::<T>(),
-                false,
-            )?;
-        }
-        Ok(SendRequest { dst, tag })
-    }
-
-    /// Post a nonblocking send that *moves* the buffer — the zero-copy
-    /// path for move-semantics primitives (scatter, all-to-all, adjoint
-    /// sends whose local realization is deallocated).
-    pub fn isend_vec<T: Scalar>(
-        &mut self,
-        dst: usize,
-        tag: u64,
-        data: Vec<T>,
-    ) -> Result<SendRequest> {
-        if self.wire_format {
-            return self.isend_slice(dst, tag, &data);
-        }
-        self.post(
-            dst,
-            tag,
-            Self::typed_body(data),
-            std::any::type_name::<T>(),
-            false,
-        )?;
-        Ok(SendRequest { dst, tag })
-    }
-
-    /// Post a nonblocking send of a shared buffer — fan-out sends (e.g.
-    /// the broadcast tree) clone only the `Arc`, never the data.
-    pub fn isend_shared<T: Scalar>(
-        &mut self,
-        dst: usize,
-        tag: u64,
-        data: &Arc<Vec<T>>,
-    ) -> Result<SendRequest> {
-        if self.wire_format {
-            return self.isend_slice(dst, tag, data.as_slice());
-        }
-        self.post(
-            dst,
-            tag,
-            Self::shared_body(data),
-            std::any::type_name::<T>(),
-            false,
-        )?;
-        Ok(SendRequest { dst, tag })
-    }
-
-    /// Post a nonblocking send of a **registered** buffer previously
-    /// acquired with [`Comm::pool_take`]: the payload carries a handle to
-    /// this endpoint's pool, and the receiver's completion returns the
-    /// buffer here. With the pool disabled this degrades to the
-    /// move-semantics [`Comm::isend_vec`]; with the wire format forced the
-    /// buffer is serialized and returns home immediately.
-    pub fn isend_pooled<T: Scalar>(
-        &mut self,
-        dst: usize,
-        tag: u64,
-        data: Vec<T>,
-    ) -> Result<SendRequest> {
-        if !self.pool.enabled {
-            return self.isend_vec(dst, tag, data);
-        }
-        if self.wire_format {
-            let req = self.isend_slice(dst, tag, &data)?;
-            drop(self.pool.wrap(data)); // straight back to the pool
-            return Ok(req);
-        }
-        let body: Arc<PooledBody<T>> = Arc::new(self.pool.wrap(data));
-        self.post(
-            dst,
-            tag,
-            Body::Typed(TypedBody {
-                len: body.len(),
-                wire_size: T::WIRE_SIZE,
-                data: body as AnyArc,
-                to_wire: pooled_wire_of::<T>,
-            }),
-            std::any::type_name::<T>(),
-            true,
-        )?;
-        Ok(SendRequest { dst, tag })
-    }
-
-    /// Stage `data` in a registered buffer from this endpoint's pool and
-    /// post its send — the one-call form of the
-    /// `pool_take`/`copy_from_slice`/[`Comm::isend_pooled`] sequence every
-    /// pooled primitive send uses, so the staging contract lives in one
-    /// place. With the pool disabled this degrades to the copying
-    /// [`Comm::isend_slice`]; move-semantics call sites that want their
-    /// unpooled fallback to *move* instead branch on [`Comm::pool_on`]
-    /// and call [`Comm::isend_vec`] themselves.
-    pub fn isend_staged<T: Scalar>(
-        &mut self,
-        dst: usize,
-        tag: u64,
-        data: &[T],
-    ) -> Result<SendRequest> {
-        if !self.pool.enabled {
-            return self.isend_slice(dst, tag, data);
-        }
-        let mut stage = self.pool.take(data.len());
-        stage.copy_from_slice(data);
-        self.isend_pooled(dst, tag, stage)
-    }
-
-    /// Post a nonblocking send of a shared pooled payload (from
-    /// [`Comm::pool_stage`] or a received [`Payload::Pooled`] being
-    /// forwarded) — fan-out clones only the `Arc`; the last holder's drop
-    /// returns the buffer to the pool that staged it.
-    pub fn isend_pooled_body<T: Scalar>(
-        &mut self,
-        dst: usize,
-        tag: u64,
-        body: &Arc<PooledBody<T>>,
-    ) -> Result<SendRequest> {
-        if self.wire_format {
-            return self.isend_slice(dst, tag, body.as_slice());
-        }
-        self.post(
-            dst,
-            tag,
-            Body::Typed(TypedBody {
-                len: body.len(),
-                wire_size: T::WIRE_SIZE,
-                data: body.clone() as AnyArc,
-                to_wire: pooled_wire_of::<T>,
-            }),
-            std::any::type_name::<T>(),
-            true,
-        )?;
-        Ok(SendRequest { dst, tag })
-    }
-
-    /// Complete a posted send. Eager channel sends are already in flight,
-    /// so this returns immediately.
-    pub fn wait_send(&mut self, _req: SendRequest) -> Result<()> {
-        Ok(())
-    }
-
-    /// Blocking typed send: post + complete.
-    pub fn send_slice<T: Scalar>(&mut self, dst: usize, tag: u64, data: &[T]) -> Result<()> {
-        let req = self.isend_slice(dst, tag, data)?;
-        self.wait_send(req)
-    }
-
-    /// Blocking typed send that moves its buffer (zero-copy).
-    pub fn send_vec<T: Scalar>(&mut self, dst: usize, tag: u64, data: Vec<T>) -> Result<()> {
-        let req = self.isend_vec(dst, tag, data)?;
-        self.wait_send(req)
-    }
-
-    /// Blocking typed send of a shared buffer (fan-out without copies).
-    pub fn send_shared<T: Scalar>(
-        &mut self,
-        dst: usize,
-        tag: u64,
-        data: &Arc<Vec<T>>,
-    ) -> Result<()> {
-        let req = self.isend_shared(dst, tag, data)?;
-        self.wait_send(req)
-    }
-
-    // ------------------------------------------------------------------
-    // Posting and completing receives
-    // ------------------------------------------------------------------
-
-    /// Post a nonblocking receive matching `(src, tag)`.
-    pub fn irecv<T: Scalar>(&mut self, src: usize, tag: u64) -> Result<RecvRequest<T>> {
-        self.irecv_as(src, tag, std::any::type_name::<T>())
-    }
-
-    /// [`Comm::irecv`] with an explicit dtype label for plan capture —
-    /// `recv_bytes` posts through here so its wire-format receive is not
-    /// misattributed to the placeholder element type.
-    fn irecv_as<T: Scalar>(
-        &mut self,
-        src: usize,
-        tag: u64,
-        dtype: &'static str,
-    ) -> Result<RecvRequest<T>> {
-        if src >= self.size {
-            return Err(Error::Comm(format!(
-                "receive from rank {src} out of range (world {})",
-                self.size
-            )));
-        }
-        let slot = self.next_posted.entry((src, tag)).or_insert(0);
-        let seq = *slot;
-        *slot += 1;
-        self.in_flight += 1;
-        self.stats.irecvs_posted += 1;
-        self.stats.max_in_flight = self.stats.max_in_flight.max(self.in_flight);
-        if self.plan.is_some() {
-            self.plan_record(plan::PlanEvent::RecvPost {
-                src,
-                tag,
-                seq,
-                dtype,
-            });
-        }
-        Ok(RecvRequest {
-            src,
-            tag,
-            seq,
-            _elem: PhantomData,
-        })
-    }
-
-    /// Assign the next unmatched arrival for `(src, tag)` its sequence
-    /// number, moving it from the parked mailbox into the ready store —
-    /// unless that sequence number is owed to an abandoned request, in
-    /// which case the message is discarded (the payload drop returns any
-    /// registered buffer to its sender) and the next one is tried.
-    /// Returns whether an arrival was promoted into `ready`.
-    fn promote_parked(&mut self, src: usize, tag: u64) -> bool {
-        loop {
-            let body = match self.parked.get_mut(&(src, tag)).and_then(|q| q.pop_front()) {
-                Some(body) => body,
-                None => return false,
-            };
-            let slot = self.next_arrived.entry((src, tag)).or_insert(0);
-            let seq = *slot;
-            *slot += 1;
-            if self.discard.remove(&(src, tag, seq)) {
-                self.stats.faults.abandoned_swept += 1;
-                continue;
-            }
-            self.ready.insert((src, tag, seq), body);
-            return true;
-        }
-    }
-
-    /// Park a resequenced body at the tail of its stream's mailbox.
-    fn park_in_order(&mut self, src: usize, tag: u64, body: Body) {
-        self.parked.entry((src, tag)).or_default().push_back(body);
-    }
-
-    /// Feed one transport arrival through the wire-sequence layer:
-    /// duplicates (sequence behind the stream cursor) are suppressed,
-    /// early arrivals wait in the out-of-order buffer, and the in-order
-    /// prefix — the arrival plus whatever it unblocks — parks in FIFO
-    /// order. After this, parked order per stream equals wire-sequence
-    /// order, so arrival sequence numbers equal wire sequence numbers.
-    fn resequence(&mut self, msg: Message) {
-        let key = (msg.src, msg.tag);
-        let expected = *self.next_wire.get(&key).unwrap_or(&0);
-        if msg.seq < expected {
-            self.stats.faults.dups_suppressed += 1;
-            return;
-        }
-        if msg.seq > expected {
-            let held = self.ooo.entry(key).or_default().insert(msg.seq, msg.body);
-            if held.is_some() {
-                self.stats.faults.dups_suppressed += 1;
-            }
-            return;
-        }
-        let mut next = expected;
-        let mut body = Some(msg.body);
-        loop {
-            let b = match body.take() {
-                Some(b) => b,
-                None => match self.ooo.get_mut(&key).and_then(|q| q.remove(&next)) {
-                    Some(b) => b,
-                    None => break,
-                },
-            };
-            self.park_in_order(key.0, key.1, b);
-            next += 1;
-        }
-        self.next_wire.insert(key, next);
-    }
-
-    /// Judge one transport arrival against the installed fault plan and
-    /// act on the verdict; without a plan this is a straight resequence.
-    fn deliver(&mut self, msg: Message) {
-        let verdict = match self.faults.as_ref() {
-            Some(eng) => eng.plan.decide(self.rank, msg.src, msg.tag, msg.seq),
-            None => Verdict::Deliver,
-        };
-        match verdict {
-            Verdict::Deliver => self.resequence(msg),
-            Verdict::Delay(ms) | Verdict::Reorder(ms) => {
-                if matches!(verdict, Verdict::Delay(_)) {
-                    self.stats.faults.injected_delays += 1;
-                } else {
-                    self.stats.faults.injected_reorders += 1;
-                }
-                let until = Instant::now() + Duration::from_millis(ms);
-                self.faults
-                    .as_mut()
-                    .expect("verdict implies an installed plan")
-                    .delayed
-                    .push((until, msg));
-            }
-            Verdict::Drop => {
-                self.stats.faults.injected_drops += 1;
-                self.faults
-                    .as_mut()
-                    .expect("verdict implies an installed plan")
-                    .limbo
-                    .entry((msg.src, msg.tag))
-                    .or_default()
-                    .insert(msg.seq, msg.body);
-            }
-            Verdict::Duplicate => {
-                self.stats.faults.injected_dups += 1;
-                let dup = Message {
-                    src: msg.src,
-                    tag: msg.tag,
-                    seq: msg.seq,
-                    body: clone_body(&msg.body),
-                };
-                self.resequence(msg);
-                self.resequence(dup);
-            }
-            Verdict::Truncate => {
-                self.stats.faults.injected_truncations += 1;
-                let wire = wire_bytes_of(&msg.body);
-                let corrupted = Body::Bytes(wire[..wire.len().saturating_sub(1)].to_vec());
-                let Message { src, tag, seq, body } = msg;
-                self.faults
-                    .as_mut()
-                    .expect("verdict implies an installed plan")
-                    .limbo
-                    .entry((src, tag))
-                    .or_default()
-                    .insert(seq, body);
-                self.resequence(Message {
-                    src,
-                    tag,
-                    seq,
-                    body: corrupted,
-                });
-            }
-        }
-    }
-
-    /// Drain the transport without blocking and release any held-back
-    /// messages whose deadlines have passed.
-    fn pump(&mut self) {
-        loop {
-            match self.inbox.try_recv() {
-                Ok(msg) => self.deliver(msg),
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-            }
-        }
-        self.release_due_faults();
-    }
-
-    /// Earliest release deadline among held-back messages, if any — a
-    /// blocked receive must wake for it.
-    fn next_fault_release(&self) -> Option<Instant> {
-        self.faults
-            .as_ref()
-            .and_then(|eng| eng.delayed.iter().map(|(t, _)| *t).min())
-    }
-
-    /// Release every held-back message whose deadline has passed.
-    fn release_due_faults(&mut self) {
-        let mut due: Vec<Message> = match self.faults.as_mut() {
-            Some(eng) if !eng.delayed.is_empty() => {
-                let now = Instant::now();
-                let mut out = Vec::new();
-                let mut i = 0;
-                while i < eng.delayed.len() {
-                    if eng.delayed[i].0 <= now {
-                        out.push(eng.delayed.swap_remove(i).1);
-                    } else {
-                        i += 1;
-                    }
-                }
-                out
-            }
-            _ => return,
-        };
-        if due.is_empty() {
-            return;
-        }
-        due.sort_by_key(|m| (m.src, m.tag, m.seq));
-        for m in due {
-            self.resequence(m);
-        }
-    }
-
-    /// Simulated retransmission: release the stream's oldest withheld
-    /// *undelivered* payload (sequence at or past the resequencer cursor
-    /// — pristine copies of already-delivered truncated messages stay
-    /// reserved for decode recovery). Returns whether anything was
-    /// recovered.
-    fn recover_from_limbo(&mut self, src: usize, tag: u64) -> bool {
-        let cursor = *self.next_wire.get(&(src, tag)).unwrap_or(&0);
-        let (seq, body) = {
-            let Some(eng) = self.faults.as_mut() else {
-                return false;
-            };
-            let Some(q) = eng.limbo.get_mut(&(src, tag)) else {
-                return false;
-            };
-            let Some((&seq, _)) = q.range(cursor..).next() else {
-                return false;
-            };
-            let body = q.remove(&seq).expect("key just observed");
-            if q.is_empty() {
-                eng.limbo.remove(&(src, tag));
-            }
-            (seq, body)
-        };
-        self.resequence(Message {
-            src,
-            tag,
-            seq,
-            body,
-        });
-        true
-    }
-
-    /// Take the pristine copy of a truncated message by exact wire
-    /// sequence — the decode-failure recovery path.
-    fn limbo_take(&mut self, src: usize, tag: u64, seq: u64) -> Option<Body> {
-        let eng = self.faults.as_mut()?;
-        let q = eng.limbo.get_mut(&(src, tag))?;
-        let body = q.remove(&seq)?;
-        if q.is_empty() {
-            eng.limbo.remove(&(src, tag));
-        }
-        Some(body)
-    }
-
-    /// Release everything the fault layer withholds on one stream:
-    /// held-back messages immediately (deadlines void), undelivered limbo
-    /// payloads resequenced, stale truncation pristines dropped (their
-    /// buffers return home). Called when a request on the stream is
-    /// abandoned, so a withheld message cannot pin a registered buffer
-    /// behind a dead request.
-    fn flush_stream_faults(&mut self, src: usize, tag: u64) {
-        let cursor = *self.next_wire.get(&(src, tag)).unwrap_or(&0);
-        let Some(eng) = self.faults.as_mut() else {
-            return;
-        };
-        let mut released: Vec<Message> = Vec::new();
-        let mut i = 0;
-        while i < eng.delayed.len() {
-            if eng.delayed[i].1.src == src && eng.delayed[i].1.tag == tag {
-                released.push(eng.delayed.swap_remove(i).1);
-            } else {
-                i += 1;
-            }
-        }
-        if let Some(q) = eng.limbo.remove(&(src, tag)) {
-            for (seq, body) in q {
-                if seq >= cursor {
-                    released.push(Message {
-                        src,
-                        tag,
-                        seq,
-                        body,
-                    });
-                }
-            }
-        }
-        released.sort_by_key(|m| m.seq);
-        for m in released {
-            self.resequence(m);
-        }
-    }
-
-    /// Retire an abandoned request's claim on its stream. If its message
-    /// already arrived it is dropped now; otherwise its arrival sequence
-    /// number is recorded as a debt and the message is discarded the
-    /// moment it arrives — either way a registered payload returns to its
-    /// sender's pool, and a *retried* request on the same stream (a fresh
-    /// `irecv`) matches the retransmitted payload, never the stale one.
-    fn abandon(&mut self, src: usize, tag: u64, seq: u64) {
-        self.pump();
-        if self.ready.remove(&(src, tag, seq)).is_some() {
-            self.stats.faults.abandoned_swept += 1;
-            return;
-        }
-        self.discard.insert((src, tag, seq));
-        self.flush_stream_faults(src, tag);
-        while self.promote_parked(src, tag) {}
-    }
-
-    /// Remove `(src, tag, seq)` from the ready store, promoting parked
-    /// arrivals as needed. Does not touch the transport.
-    fn take_ready(&mut self, src: usize, tag: u64, seq: u64) -> Option<Body> {
-        loop {
-            if let Some(body) = self.ready.remove(&(src, tag, seq)) {
-                return Some(body);
-            }
-            if !self.promote_parked(src, tag) {
-                return None;
-            }
-        }
-    }
-
-    /// Block until the arrival matched to `(src, tag, seq)` is available.
-    ///
-    /// The wait runs two clocks (see the module docs' failure model): the
-    /// retry threshold fires repeatedly with exponential backoff —
-    /// counting stragglers and asking the fault layer to retransmit
-    /// anything withheld on this stream — and the fatal deadline abandons
-    /// the request and errors. `None` deadlines wait forever.
-    fn claim(&mut self, src: usize, tag: u64, seq: u64) -> Result<Body> {
-        if let Some(body) = self.take_ready(src, tag, seq) {
-            return Ok(body);
-        }
-        let start = Instant::now();
-        let fatal = self.recv_timeout.map(|d| start + d);
-        let mut attempt: u32 = 0;
-        let mut next_retry = self.retry_timeout.map(|d| start + d);
-        loop {
-            self.pump();
-            if let Some(body) = self.take_ready(src, tag, seq) {
-                let stall = start.elapsed().as_secs_f64();
-                if stall > self.stats.faults.max_stall_s {
-                    self.stats.faults.max_stall_s = stall;
-                }
-                return Ok(body);
-            }
-            let now = Instant::now();
-            if let Some(f) = fatal {
-                if now >= f {
-                    self.abandon(src, tag, seq);
-                    return Err(Error::Comm(format!(
-                        "rank {} timed out after {:?} waiting for (src={src}, tag={tag})",
-                        self.rank,
-                        self.recv_timeout.unwrap_or_default()
-                    )));
-                }
-            }
-            // Sleep until the earliest actionable deadline: the fatal
-            // deadline, the retry threshold, or a held message's release.
-            let mut wake = fatal;
-            if let Some(r) = next_retry {
-                wake = Some(wake.map_or(r, |w| w.min(r)));
-            }
-            if let Some(h) = self.next_fault_release() {
-                wake = Some(wake.map_or(h, |w| w.min(h)));
-            }
-            let arrival = match wake {
-                Some(w) => {
-                    let dur = w
-                        .saturating_duration_since(now)
-                        .max(Duration::from_micros(100));
-                    match self.inbox.recv_timeout(dur) {
-                        Ok(msg) => Some(msg),
-                        Err(RecvTimeoutError::Timeout) => None,
-                        Err(RecvTimeoutError::Disconnected) => {
-                            self.abandon(src, tag, seq);
-                            return Err(Error::Comm(format!(
-                                "rank {} waiting for (src={src}, tag={tag}) with every peer disconnected",
-                                self.rank
-                            )));
-                        }
-                    }
-                }
-                None => match self.inbox.recv() {
-                    Ok(msg) => Some(msg),
-                    Err(_) => {
-                        self.abandon(src, tag, seq);
-                        return Err(Error::Comm(format!(
-                            "rank {} waiting for (src={src}, tag={tag}) with every peer disconnected",
-                            self.rank
-                        )));
-                    }
-                },
-            };
-            if let Some(msg) = arrival {
-                self.deliver(msg);
-            }
-            if let Some(r) = next_retry {
-                if Instant::now() >= r {
-                    attempt += 1;
-                    self.stats.faults.retries += 1;
-                    if attempt == 1 {
-                        self.stats.faults.stragglers += 1;
-                    }
-                    if attempt <= self.max_retransmits && self.recover_from_limbo(src, tag) {
-                        self.stats.faults.retransmits += 1;
-                    }
-                    let base = self.retry_timeout.unwrap_or(Duration::from_millis(1));
-                    next_retry =
-                        Some(Instant::now() + base * 2u32.saturating_pow(attempt.min(6)));
-                }
-            }
-        }
-    }
-
-    /// Decode a payload as `T` elements: zero-copy when the typed buffer
-    /// matches (owned or pooled), length-checked wire fallback otherwise.
-    fn decode_payload<T: Scalar>(&mut self, body: Body) -> Result<Payload<T>> {
-        match body {
-            Body::Typed(TypedBody {
-                wire_size,
-                data,
-                to_wire,
-                ..
-            }) => {
-                if wire_size == T::WIRE_SIZE {
-                    match data.downcast::<Vec<T>>() {
-                        Ok(arc) => {
-                            self.stats.zero_copy_msgs += 1;
-                            return Ok(Payload::Owned(
-                                Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone()),
-                            ));
-                        }
-                        Err(data) => match data.downcast::<PooledBody<T>>() {
-                            Ok(arc) => {
-                                self.stats.zero_copy_msgs += 1;
-                                return Ok(Payload::Pooled(arc));
-                            }
-                            Err(data) => {
-                                self.stats.wire_msgs += 1;
-                                return parse_wire::<T>(&to_wire(&data)).map(Payload::Owned);
-                            }
-                        },
-                    }
-                }
-                // Element-size mismatch: the wire fallback's length check
-                // reports it (same failure mode as the byte path).
-                self.stats.wire_msgs += 1;
-                parse_wire::<T>(&to_wire(&data)).map(Payload::Owned)
-            }
-            Body::Bytes(buf) => {
-                self.stats.wire_msgs += 1;
-                parse_wire::<T>(&buf).map(Payload::Owned)
-            }
-        }
-    }
-
-    /// Shared completion bookkeeping: block for the matched arrival,
-    /// account wait time and traffic, and retire the request slot — also
-    /// on the timeout path, where the request is dead either way (leaving
-    /// `in_flight` inflated would corrupt the overlap counters).
-    fn complete(&mut self, src: usize, tag: u64, seq: u64) -> Result<Body> {
-        let t0 = Instant::now();
-        let res = self.claim(src, tag, seq);
-        self.stats.wait_time_s += t0.elapsed().as_secs_f64();
-        self.in_flight -= 1;
-        let body = match res {
-            Ok(body) => body,
-            Err(e) => {
-                if self.plan.is_some() {
-                    self.plan_record(plan::PlanEvent::RecvTimeout { src, tag, seq });
-                }
-                return Err(e);
-            }
-        };
-        self.stats.messages_received += 1;
-        self.stats.bytes_received += body.wire_len();
-        if self.plan.is_some() {
-            self.plan_record(plan::PlanEvent::RecvComplete {
-                src,
-                tag,
-                seq,
-                bytes: body.wire_len(),
-            });
-        }
-        Ok(body)
-    }
-
-    /// Complete a posted receive, blocking until its message arrives, and
-    /// take ownership of the contents (a pooled payload is copied out and
-    /// returned to its sender). Prefer [`Comm::wait_payload`] on hot paths
-    /// that only read the payload.
-    pub fn wait<T: Scalar>(&mut self, req: RecvRequest<T>) -> Result<Vec<T>> {
-        self.wait_payload(req).map(Payload::into_owned)
-    }
-
-    /// Complete a posted receive, blocking until its message arrives,
-    /// without taking ownership: the returned [`Payload`] is consumed in
-    /// place and its drop returns a registered buffer to the sender's
-    /// pool — the receiver half of the pool's recycle cycle.
-    pub fn wait_payload<T: Scalar>(&mut self, req: RecvRequest<T>) -> Result<Payload<T>> {
-        let body = self.complete(req.src, req.tag, req.seq)?;
-        self.decode_with_recovery(req.src, req.tag, req.seq, body)
-    }
-
-    /// Decode a matched body; when decoding fails *and* the fault layer
-    /// holds the pristine copy of that exact wire sequence (payload
-    /// truncation), recover from it — the receiver-side analogue of a
-    /// checksum-failure retransmit.
-    fn decode_with_recovery<T: Scalar>(
-        &mut self,
-        src: usize,
-        tag: u64,
-        seq: u64,
-        body: Body,
-    ) -> Result<Payload<T>> {
-        match self.decode_payload(body) {
-            Ok(p) => Ok(p),
-            Err(e) => match self.limbo_take(src, tag, seq) {
-                Some(pristine) => {
-                    self.stats.faults.retransmits += 1;
-                    self.decode_payload(pristine)
-                }
-                None => Err(e),
-            },
-        }
-    }
-
-    /// Complete a batch of posted receives, in order. On the first error
-    /// the remaining requests are abandoned (their slots retired) and the
-    /// error is returned.
-    pub fn wait_all<T: Scalar>(&mut self, reqs: Vec<RecvRequest<T>>) -> Result<Vec<Vec<T>>> {
-        let mut out = Vec::with_capacity(reqs.len());
-        let mut iter = reqs.into_iter();
-        while let Some(req) = iter.next() {
-            match self.wait(req) {
-                Ok(v) => out.push(v),
-                Err(e) => {
-                    for r in iter {
-                        self.in_flight -= 1;
-                        self.abandon(r.src, r.tag, r.seq);
-                    }
-                    return Err(e);
-                }
-            }
-        }
-        Ok(out)
-    }
-
-    /// Complete **whichever** posted receive's message is available first
-    /// — MPI's `Waitany`. Returns the completed request's index in `reqs`
-    /// (at call time) and its payload, removing the request from `reqs`;
-    /// callers holding per-request metadata in a parallel `Vec` should
-    /// `remove(idx)` from it symmetrically.
-    ///
-    /// Where [`Comm::wait_all`] drains receives in *post* order — so a
-    /// slow first sender stalls the assembly of messages that already
-    /// arrived — this drains them in *arrival* order. The nonovertaking
-    /// rule still applies per `(source, tag)` stream: a request only
-    /// completes once the arrivals it is sequenced behind have been
-    /// matched. Gather and all-to-all assembly post distinct
-    /// `(source, tag)` pairs, so for them arrival order is unconstrained.
-    ///
-    /// On timeout every outstanding request in `reqs` is abandoned (their
-    /// slots retired, mirroring [`Comm::wait_all`]'s error path) and the
-    /// error is returned.
-    pub fn wait_any<T: Scalar>(
-        &mut self,
-        reqs: &mut Vec<RecvRequest<T>>,
-    ) -> Result<(usize, Vec<T>)> {
-        let (idx, payload) = self.wait_any_payload(reqs)?;
-        Ok((idx, payload.into_owned()))
-    }
-
-    /// [`Comm::wait_any`] without taking ownership of the payload — the
-    /// arrival-order drain the gather and all-to-all assemblies run on,
-    /// returning a [`Payload`] whose drop recycles a registered buffer to
-    /// its sender.
-    pub fn wait_any_payload<T: Scalar>(
-        &mut self,
-        reqs: &mut Vec<RecvRequest<T>>,
-    ) -> Result<(usize, Payload<T>)> {
-        if reqs.is_empty() {
-            return Err(Error::Comm("wait_any: no posted receives".into()));
-        }
-        let t0 = Instant::now();
-        let fatal = self.recv_timeout.map(|d| t0 + d);
-        let mut attempt: u32 = 0;
-        let mut next_retry = self.retry_timeout.map(|d| t0 + d);
-        loop {
-            self.pump();
-            let keys: Vec<(usize, u64)> = reqs.iter().map(|r| (r.src, r.tag)).collect();
-            for (src, tag) in keys {
-                while self.promote_parked(src, tag) {}
-            }
-            if let Some(idx) = reqs
-                .iter()
-                .position(|r| self.ready.contains_key(&(r.src, r.tag, r.seq)))
-            {
-                let req = reqs.remove(idx);
-                let body = self
-                    .ready
-                    .remove(&(req.src, req.tag, req.seq))
-                    .expect("readiness probed above");
-                let stall = t0.elapsed().as_secs_f64();
-                if stall > self.stats.faults.max_stall_s {
-                    self.stats.faults.max_stall_s = stall;
-                }
-                self.stats.wait_time_s += stall;
-                self.in_flight -= 1;
-                self.stats.messages_received += 1;
-                self.stats.bytes_received += body.wire_len();
-                if self.plan.is_some() {
-                    self.plan_record(plan::PlanEvent::RecvComplete {
-                        src: req.src,
-                        tag: req.tag,
-                        seq: req.seq,
-                        bytes: body.wire_len(),
-                    });
-                }
-                let payload = self.decode_with_recovery(req.src, req.tag, req.seq, body)?;
-                return Ok((idx, payload));
-            }
-            let now = Instant::now();
-            let fatal_hit = fatal.is_some_and(|f| now >= f);
-            let disconnected = if fatal_hit {
-                false
-            } else {
-                // Sleep until the earliest actionable deadline: the fatal
-                // deadline, the retry threshold, or a held message's
-                // release; with no deadlines at all, block indefinitely.
-                let mut wake = fatal;
-                if let Some(r) = next_retry {
-                    wake = Some(wake.map_or(r, |w| w.min(r)));
-                }
-                if let Some(h) = self.next_fault_release() {
-                    wake = Some(wake.map_or(h, |w| w.min(h)));
-                }
-                match wake {
-                    Some(w) => {
-                        let dur = w
-                            .saturating_duration_since(now)
-                            .max(Duration::from_micros(100));
-                        match self.inbox.recv_timeout(dur) {
-                            Ok(msg) => {
-                                self.deliver(msg);
-                                false
-                            }
-                            Err(RecvTimeoutError::Timeout) => false,
-                            Err(RecvTimeoutError::Disconnected) => true,
-                        }
-                    }
-                    None => match self.inbox.recv() {
-                        Ok(msg) => {
-                            self.deliver(msg);
-                            false
-                        }
-                        Err(_) => true,
-                    },
-                }
-            };
-            if fatal_hit || disconnected {
-                self.stats.wait_time_s += t0.elapsed().as_secs_f64();
-                let outstanding = reqs.len();
-                for r in reqs.drain(..) {
-                    self.in_flight -= 1;
-                    if self.plan.is_some() {
-                        self.plan_record(plan::PlanEvent::RecvTimeout {
-                            src: r.src,
-                            tag: r.tag,
-                            seq: r.seq,
-                        });
-                    }
-                    self.abandon(r.src, r.tag, r.seq);
-                }
-                return Err(Error::Comm(if disconnected {
-                    format!(
-                        "rank {} in wait_any with {outstanding} receives outstanding and every peer disconnected",
-                        self.rank
-                    )
-                } else {
-                    format!(
-                        "rank {} timed out after {:?} in wait_any with {outstanding} receives outstanding",
-                        self.rank,
-                        self.recv_timeout.unwrap_or_default()
-                    )
-                }));
-            }
-            if let Some(r) = next_retry {
-                if Instant::now() >= r {
-                    attempt += 1;
-                    self.stats.faults.retries += 1;
-                    if attempt == 1 {
-                        self.stats.faults.stragglers += 1;
-                    }
-                    if attempt <= self.max_retransmits {
-                        // Ask every distinct stream with an outstanding
-                        // request for one retransmit.
-                        let mut streams: Vec<(usize, u64)> =
-                            reqs.iter().map(|r| (r.src, r.tag)).collect();
-                        streams.sort_unstable();
-                        streams.dedup();
-                        for (src, tag) in streams {
-                            if self.recover_from_limbo(src, tag) {
-                                self.stats.faults.retransmits += 1;
-                            }
-                        }
-                    }
-                    let base = self.retry_timeout.unwrap_or(Duration::from_millis(1));
-                    next_retry =
-                        Some(Instant::now() + base * 2u32.saturating_pow(attempt.min(6)));
-                }
-            }
-        }
-    }
-
-    /// Nonblocking probe: has the message for `req` already arrived?
-    /// Never blocks; a `true` result means `wait` will return immediately.
-    pub fn test<T: Scalar>(&mut self, req: &RecvRequest<T>) -> bool {
-        self.pump();
-        while self.promote_parked(req.src, req.tag) {}
-        self.ready.contains_key(&(req.src, req.tag, req.seq))
-    }
-
-    /// Blocking receive of the next message from `src` with `tag`,
-    /// returned as wire-format bytes (typed messages are serialized on
-    /// demand — the interop fallback).
-    pub fn recv_bytes(&mut self, src: usize, tag: u64) -> Result<Vec<u8>> {
-        let req = self.irecv_as::<f64>(src, tag, "bytes")?; // element type irrelevant here
-        let body = self.complete(req.src, req.tag, req.seq)?;
-        self.stats.wire_msgs += 1;
-        match body {
-            Body::Bytes(buf) => Ok(buf),
-            Body::Typed(t) => Ok((t.to_wire)(&t.data)),
-        }
-    }
-
-    /// Blocking receive of a typed vector; errors if the payload's element
-    /// type or length disagrees.
-    pub fn recv_vec<T: Scalar>(&mut self, src: usize, tag: u64) -> Result<Vec<T>> {
-        let req = self.irecv::<T>(src, tag)?;
-        self.wait(req)
-    }
-
-    /// Exchange slices with a peer: post both directions, then complete
-    /// the receive. The building block of the halo exchange operator C_E.
-    pub fn sendrecv<T: Scalar>(
-        &mut self,
-        peer: usize,
-        send_tag: u64,
-        recv_tag: u64,
-        data: &[T],
-    ) -> Result<Vec<T>> {
-        let s = self.isend_slice(peer, send_tag, data)?;
-        let r = self.irecv::<T>(peer, recv_tag)?;
-        self.wait_send(s)?;
-        self.wait(r)
-    }
-
-    /// Full-world barrier.
-    pub fn barrier(&self) {
-        if let Some(h) = &self.plan {
-            if let Ok(mut g) = h.lock() {
-                let index = g.next_barrier();
-                g.record(plan::PlanEvent::Barrier { index });
-            }
-        }
-        self.barrier.wait();
-    }
-}
-
-/// An ordered subset of world ranks acting as one communicator axis.
-///
-/// The hybrid data×model topology factors the world into
-/// `replicas × model-grid`; each axis is a `CommGroup` produced by
-/// [`CommGroup::split`] — the MPI `Comm_split` idiom (colour selects the
-/// group, key orders it) applied to the existing endpoint map. A group
-/// owns no channels: members keep addressing each other by **world rank**
-/// through their [`Comm`] endpoints, so any primitive that takes a rank
-/// list (the broadcast/sum-reduce trees, the ring collectives) runs
-/// unchanged inside a group. Group-local indices (`index_of` /
-/// `world_rank`) are what schedules like the ring's neighbour arithmetic
-/// are written against.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct CommGroup {
-    ranks: Vec<usize>,
-}
-
-impl CommGroup {
-    /// A group over the given world ranks, in the given order. Ranks must
-    /// be distinct; the first rank is group index 0.
-    pub fn new(ranks: Vec<usize>) -> Result<Self> {
-        if ranks.is_empty() {
-            return Err(Error::Comm("communicator group must be non-empty".into()));
-        }
-        let mut seen = ranks.clone();
-        seen.sort_unstable();
-        if seen.windows(2).any(|w| w[0] == w[1]) {
-            return Err(Error::Comm(format!(
-                "communicator group has duplicate ranks: {ranks:?}"
-            )));
-        }
-        Ok(CommGroup { ranks })
-    }
-
-    /// Partition `0..world` into groups, MPI `Comm_split` style: ranks
-    /// with equal `color` land in the same group (a `None` colour opts
-    /// the rank out of every group), ordered within the group by
-    /// `(key, world rank)`. Groups are returned ordered by colour.
-    pub fn split(
-        world: usize,
-        mut color: impl FnMut(usize) -> Option<usize>,
-        mut key: impl FnMut(usize) -> usize,
-    ) -> Vec<CommGroup> {
-        let mut by_color: std::collections::BTreeMap<usize, Vec<(usize, usize)>> =
-            std::collections::BTreeMap::new();
-        for rank in 0..world {
-            if let Some(c) = color(rank) {
-                by_color.entry(c).or_default().push((key(rank), rank));
-            }
-        }
-        by_color
-            .into_values()
-            .map(|mut members| {
-                members.sort_unstable();
-                CommGroup {
-                    ranks: members.into_iter().map(|(_, r)| r).collect(),
-                }
-            })
-            .collect()
-    }
-
-    /// Number of members.
-    pub fn size(&self) -> usize {
-        self.ranks.len()
-    }
-
-    /// The members' world ranks in group order.
-    pub fn ranks(&self) -> &[usize] {
-        &self.ranks
-    }
-
-    /// World rank of group member `index`.
-    pub fn world_rank(&self, index: usize) -> usize {
-        self.ranks[index]
-    }
-
-    /// Group index of `world_rank`, if it is a member.
-    pub fn index_of(&self, world_rank: usize) -> Option<usize> {
-        self.ranks.iter().position(|&r| r == world_rank)
-    }
-
-    /// Whether `world_rank` is a member.
-    pub fn contains(&self, world_rank: usize) -> bool {
-        self.index_of(world_rank).is_some()
-    }
-}
-
-/// An SPMD cluster of in-process workers.
-pub struct Cluster;
-
-impl Cluster {
-    /// Run `f` on `world` ranks concurrently and collect per-rank results
-    /// in rank order.
-    ///
-    /// `f` may borrow from the caller (scoped threads). Worker panics are
-    /// converted into `Error::Comm` naming the rank.
-    pub fn run<R, F>(world: usize, f: F) -> Result<Vec<R>>
-    where
-        R: Send,
-        F: Fn(&mut Comm) -> Result<R> + Send + Sync,
-    {
-        if world == 0 {
-            return Err(Error::Comm("world size must be >= 1".into()));
-        }
-        let recv_timeout = configured_recv_timeout();
-        let retry_timeout = configured_retry_timeout();
-        let max_retransmits = configured_max_retransmits();
-        let fault_plan = faults::configured_fault_plan();
-        let pool_cap = configured_comm_pool_cap();
-        let mut senders = Vec::with_capacity(world);
-        let mut inboxes = Vec::with_capacity(world);
-        for _ in 0..world {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            inboxes.push(rx);
-        }
-        let barrier = Arc::new(Barrier::new(world));
-        let mut comms: Vec<Comm> = inboxes
-            .into_iter()
-            .enumerate()
-            .map(|(rank, inbox)| {
-                let mut comm = Comm {
-                    rank,
-                    size: world,
-                    senders: senders.clone(),
-                    inbox,
-                    parked: HashMap::new(),
-                    ready: HashMap::new(),
-                    next_posted: HashMap::new(),
-                    next_arrived: HashMap::new(),
-                    next_send: HashMap::new(),
-                    next_wire: HashMap::new(),
-                    ooo: HashMap::new(),
-                    discard: HashSet::new(),
-                    in_flight: 0,
-                    wire_format: false,
-                    pool: BufferPool::new(pool_cap),
-                    recv_timeout,
-                    retry_timeout,
-                    max_retransmits,
-                    faults: None,
-                    plan: None,
-                    barrier: barrier.clone(),
-                    stats: CommStats::default(),
-                };
-                if let Some(plan) = fault_plan.clone() {
-                    comm.set_fault_plan(Some(plan));
-                }
-                comm
-            })
-            .collect();
-        // Drop the original senders so disconnects propagate when workers
-        // finish.
-        drop(senders);
-
-        let f = &f;
-        let results: Vec<Result<R>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = comms
-                .iter_mut()
-                .map(|comm| scope.spawn(move || f(comm)))
-                .collect();
-            handles
-                .into_iter()
-                .enumerate()
-                .map(|(rank, h)| match h.join() {
-                    Ok(r) => r,
-                    Err(p) => {
-                        let msg = p
-                            .downcast_ref::<String>()
-                            .cloned()
-                            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
-                            .unwrap_or_else(|| "worker panicked".into());
-                        Err(Error::Comm(format!("rank {rank} panicked: {msg}")))
-                    }
-                })
-                .collect()
-        });
-        results.into_iter().collect()
-    }
-
-    /// Like [`Cluster::run`], returning per-rank [`CommStats`] alongside
-    /// the results.
-    pub fn run_with_stats<R, F>(world: usize, f: F) -> Result<Vec<(R, CommStats)>>
-    where
-        R: Send,
-        F: Fn(&mut Comm) -> Result<R> + Send + Sync,
-    {
-        Cluster::run(world, |comm| {
-            let r = f(comm)?;
-            Ok((r, comm.stats()))
-        })
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn ring_pass() {
-        let results = Cluster::run(4, |comm| {
-            let next = (comm.rank() + 1) % comm.size();
-            let prev = (comm.rank() + comm.size() - 1) % comm.size();
-            comm.send_slice::<f64>(next, 1, &[comm.rank() as f64])?;
-            let got = comm.recv_vec::<f64>(prev, 1)?;
-            Ok(got[0])
-        })
-        .unwrap();
-        assert_eq!(results, vec![3.0, 0.0, 1.0, 2.0]);
-    }
-
-    #[test]
-    fn single_rank_world() {
-        let r = Cluster::run(1, |comm| {
-            assert_eq!(comm.size(), 1);
-            Ok(comm.rank())
-        })
-        .unwrap();
-        assert_eq!(r, vec![0]);
-    }
-
-    #[test]
-    fn tag_matching_out_of_order() {
-        // Rank 0 sends tag 2 then tag 1; rank 1 receives tag 1 first.
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 0 {
-                comm.send_slice::<f64>(1, 2, &[20.0])?;
-                comm.send_slice::<f64>(1, 1, &[10.0])?;
-                Ok(0.0)
-            } else {
-                let a = comm.recv_vec::<f64>(0, 1)?[0];
-                let b = comm.recv_vec::<f64>(0, 2)?[0];
-                Ok(a * 1000.0 + b)
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], 10020.0);
-    }
-
-    #[test]
-    fn fifo_within_same_tag() {
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 0 {
-                for i in 0..5 {
-                    comm.send_slice::<f64>(1, 7, &[i as f64])?;
-                }
-                Ok(vec![])
-            } else {
-                let mut got = Vec::new();
-                for _ in 0..5 {
-                    got.push(comm.recv_vec::<f64>(0, 7)?[0]);
-                }
-                Ok(got)
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], vec![0.0, 1.0, 2.0, 3.0, 4.0]);
-    }
-
-    #[test]
-    fn sendrecv_exchange() {
-        let results = Cluster::run(2, |comm| {
-            let peer = 1 - comm.rank();
-            let mine = [comm.rank() as f32 + 1.0];
-            let theirs = comm.sendrecv(peer, 9, 9, &mine)?;
-            Ok(theirs[0])
-        })
-        .unwrap();
-        assert_eq!(results, vec![2.0, 1.0]);
-    }
-
-    #[test]
-    fn barrier_synchronizes() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        let counter = AtomicUsize::new(0);
-        Cluster::run(4, |comm| {
-            counter.fetch_add(1, Ordering::SeqCst);
-            comm.barrier();
-            // after the barrier every rank must see all increments
-            assert_eq!(counter.load(Ordering::SeqCst), 4);
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn worker_panic_is_reported() {
-        let err = Cluster::run(2, |comm| {
-            if comm.rank() == 1 {
-                panic!("boom");
-            }
-            Ok(())
-        })
-        .unwrap_err();
-        let msg = format!("{err}");
-        assert!(msg.contains("rank 1") && msg.contains("boom"), "{msg}");
-    }
-
-    #[test]
-    fn send_out_of_range_errors() {
-        let res = Cluster::run(1, |comm| comm.send_slice::<f32>(5, 0, &[1.0]));
-        assert!(res.is_err());
-    }
-
-    #[test]
-    fn stats_count_traffic() {
-        let out = Cluster::run_with_stats(2, |comm| {
-            let peer = 1 - comm.rank();
-            comm.send_slice::<f64>(peer, 3, &[1.0, 2.0, 3.0])?;
-            let _ = comm.recv_vec::<f64>(peer, 3)?;
-            Ok(())
-        })
-        .unwrap();
-        for (_, s) in out {
-            assert_eq!(s.messages_sent, 1);
-            assert_eq!(s.messages_received, 1);
-            assert_eq!(s.bytes_sent, 8 + 24);
-            // the typed path never touched the wire format
-            assert_eq!(s.zero_copy_msgs, 1);
-            assert_eq!(s.wire_msgs, 0);
-        }
-    }
-
-    #[test]
-    fn typed_wire_integrity() {
-        // Sending f64 but receiving f32 must fail the length check.
-        let res = Cluster::run(2, |comm| {
-            if comm.rank() == 0 {
-                comm.send_slice::<f64>(1, 4, &[1.0, 2.0, 3.0])?;
-                Ok(())
-            } else {
-                match comm.recv_vec::<f32>(0, 4) {
-                    Err(Error::Comm(_)) => Ok(()),
-                    other => panic!("expected comm error, got {other:?}"),
-                }
-            }
-        });
-        assert!(res.is_ok());
-    }
-
-    #[test]
-    fn irecv_matches_post_order_not_wait_order() {
-        // FIFO-per-(src, tag): request k gets message k even when the
-        // requests are completed in reverse order.
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 0 {
-                for i in 0..6 {
-                    comm.send_slice::<f64>(1, 11, &[i as f64])?;
-                }
-                Ok(vec![])
-            } else {
-                let mut reqs = Vec::new();
-                for _ in 0..6 {
-                    reqs.push(comm.irecv::<f64>(0, 11)?);
-                }
-                let mut got = vec![0.0; 6];
-                for (k, req) in reqs.into_iter().enumerate().rev() {
-                    got[k] = comm.wait(req)?[0];
-                }
-                Ok(got)
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
-    }
-
-    #[test]
-    fn test_probe_is_nonblocking() {
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 0 {
-                comm.barrier(); // rank 1 probes before anything is sent
-                comm.send_slice::<f64>(1, 5, &[42.0])?;
-                Ok(0.0)
-            } else {
-                let req = comm.irecv::<f64>(0, 5)?;
-                assert!(!comm.test(&req), "probe true before send");
-                comm.barrier();
-                // spin until the message lands, then complete
-                while !comm.test(&req) {
-                    std::thread::yield_now();
-                }
-                Ok(comm.wait(req)?[0])
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], 42.0);
-    }
-
-    #[test]
-    fn wait_any_drains_in_arrival_order() {
-        // Rank 0 posts receives from ranks 1..4 on distinct tags, then
-        // releases the senders one at a time in reverse rank order (3, 2,
-        // 1) with a "go" token, completing one wait_any between releases.
-        // Each wait_any must surface the one sender that was released —
-        // i.e. completion follows arrival order, not the post order the
-        // requests were issued in.
-        let results = Cluster::run(4, |comm| {
-            if comm.rank() == 0 {
-                let mut reqs: Vec<RecvRequest<f64>> = Vec::new();
-                let mut srcs = Vec::new();
-                for src in 1..4usize {
-                    reqs.push(comm.irecv::<f64>(src, 40 + src as u64)?);
-                    srcs.push(src);
-                }
-                let mut order = Vec::new();
-                for release in [3usize, 2, 1] {
-                    comm.send_slice::<f64>(release, 90, &[0.0])?;
-                    let (idx, data) = comm.wait_any(&mut reqs)?;
-                    let src = srcs.remove(idx);
-                    assert_eq!(src, release, "wait_any surfaced the wrong sender");
-                    assert_eq!(data[0] as usize, src);
-                    order.push(src);
-                }
-                assert!(reqs.is_empty());
-                assert_eq!(comm.in_flight(), 0);
-                Ok(order)
-            } else {
-                let _ = comm.recv_vec::<f64>(0, 90)?;
-                comm.send_slice::<f64>(0, 40 + comm.rank() as u64, &[comm.rank() as f64])?;
-                Ok(vec![])
-            }
-        })
-        .unwrap();
-        assert_eq!(results[0], vec![3, 2, 1]);
-    }
-
-    #[test]
-    fn wait_any_respects_nonovertaking_per_stream() {
-        // Two receives on the same (source, tag): the first-posted request
-        // must get the first-sent payload even when completed via wait_any.
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 0 {
-                comm.send_slice::<f64>(1, 7, &[10.0])?;
-                comm.send_slice::<f64>(1, 7, &[20.0])?;
-                Ok(vec![])
-            } else {
-                let mut reqs = vec![comm.irecv::<f64>(0, 7)?, comm.irecv::<f64>(0, 7)?];
-                let (i1, d1) = comm.wait_any(&mut reqs)?;
-                let (i2, d2) = comm.wait_any(&mut reqs)?;
-                assert_eq!((i1, i2), (0, 0));
-                Ok(vec![d1[0], d2[0]])
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], vec![10.0, 20.0]);
-    }
-
-    #[test]
-    fn wait_any_on_empty_set_errors() {
-        Cluster::run(1, |comm| {
-            let mut reqs: Vec<RecvRequest<f64>> = Vec::new();
-            assert!(comm.wait_any(&mut reqs).is_err());
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn wait_all_completes_batch() {
-        let results = Cluster::run(3, |comm| {
-            if comm.rank() == 0 {
-                let mut reqs = Vec::new();
-                for src in 1..3 {
-                    comm.send_slice::<f64>(src, 2, &[src as f64])?;
-                    reqs.push(comm.irecv::<f64>(src, 3)?);
-                }
-                let got = comm.wait_all(reqs)?;
-                Ok(got.into_iter().map(|v| v[0]).sum::<f64>())
-            } else {
-                let v = comm.recv_vec::<f64>(0, 2)?;
-                comm.send_slice::<f64>(0, 3, &[v[0] * 10.0])?;
-                Ok(0.0)
-            }
-        })
-        .unwrap();
-        assert_eq!(results[0], 30.0); // 10 + 20
-    }
-
-    #[test]
-    fn wire_format_roundtrips() {
-        let results = Cluster::run(2, |comm| {
-            comm.set_wire_format(true);
-            let peer = 1 - comm.rank();
-            let mine = [comm.rank() as f64 + 0.5, -1.0];
-            let theirs = comm.sendrecv(peer, 9, 9, &mine)?;
-            assert!(comm.stats().wire_msgs >= 1);
-            assert_eq!(comm.stats().zero_copy_msgs, 0);
-            Ok(theirs[0])
-        })
-        .unwrap();
-        assert_eq!(results, vec![1.5, 0.5]);
-    }
-
-    #[test]
-    fn recv_bytes_serializes_typed_payloads() {
-        // The raw-bytes API keeps working when the sender used the typed
-        // path: the message is serialized on demand.
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 0 {
-                comm.send_slice::<f32>(1, 8, &[1.0, 2.0])?;
-                Ok(vec![])
-            } else {
-                let buf = comm.recv_bytes(0, 8)?;
-                Ok(parse_wire::<f32>(&buf)?)
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], vec![1.0, 2.0]);
-    }
-
-    #[test]
-    fn in_flight_counters_track_requests() {
-        let out = Cluster::run_with_stats(2, |comm| {
-            let peer = 1 - comm.rank();
-            for i in 0..4 {
-                comm.send_slice::<f64>(peer, 20 + i, &[i as f64])?;
-            }
-            let reqs: Vec<_> = (0..4)
-                .map(|i| comm.irecv::<f64>(peer, 20 + i))
-                .collect::<Result<_>>()?;
-            assert_eq!(comm.in_flight(), 4);
-            comm.wait_all(reqs)?;
-            assert_eq!(comm.in_flight(), 0);
-            Ok(())
-        })
-        .unwrap();
-        for (_, s) in out {
-            assert_eq!(s.irecvs_posted, 4);
-            assert_eq!(s.max_in_flight, 4);
-        }
-    }
-
-    #[test]
-    fn shared_send_fans_out_without_copies() {
-        let results = Cluster::run(3, |comm| {
-            if comm.rank() == 0 {
-                let buf = Arc::new(vec![7.0f64, 8.0]);
-                for dst in 1..3 {
-                    comm.send_shared(dst, 6, &buf)?;
-                }
-                Ok(0.0)
-            } else {
-                Ok(comm.recv_vec::<f64>(0, 6)?[1])
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], 8.0);
-        assert_eq!(results[2], 8.0);
-    }
-
-    #[test]
-    fn pooled_send_returns_buffer_to_sender() {
-        Cluster::run(2, |comm| {
-            comm.set_pool_cap_bytes(None); // immune to env caps in CI legs
-            if comm.rank() == 0 {
-                let mut buf = comm.pool_take::<f64>(16);
-                buf.iter_mut().enumerate().for_each(|(i, v)| *v = i as f64);
-                let req = comm.isend_pooled(1, 5, buf)?;
-                comm.wait_send(req)?;
-                comm.barrier(); // receiver has consumed and dropped
-                let again = comm.pool_take::<f64>(16);
-                assert_eq!(again.len(), 16);
-                let s = comm.pool_stats();
-                assert_eq!(s.acquires, 2);
-                assert_eq!(s.misses, 1, "second take must be served by the return");
-                assert_eq!(s.hits, 1);
-                assert_eq!(s.returns, 1);
-                assert_eq!(s.evictions, 0);
-            } else {
-                let req = comm.irecv::<f64>(0, 5)?;
-                let payload = comm.wait_payload(req)?;
-                assert!(matches!(payload, Payload::Pooled(_)));
-                assert_eq!(payload.as_slice()[15], 15.0);
-                drop(payload); // the return
-                comm.barrier();
-                // the receiver's own pool saw no traffic
-                assert_eq!(comm.pool_stats().acquires, 0);
-            }
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn pool_reserve_prewarms_rotation_depth_on_second_miss() {
-        Cluster::run(1, |comm| {
-            comm.set_pool_cap_bytes(None);
-            comm.pool_reserve(3);
-            // First miss of a class mints on demand only (a depth-1 class
-            // stops here and never parks dead extras)...
-            let a = comm.pool_take::<f64>(8);
-            let s = comm.pool_stats();
-            assert_eq!((s.misses, s.reserved), (1, 0));
-            // ...the second concurrent take proves the class is pipelined
-            // and pre-warms the rest of the rotation depth...
-            let b = comm.pool_take::<f64>(8);
-            let s = comm.pool_stats();
-            assert_eq!((s.misses, s.reserved), (2, 1));
-            // ...so the third concurrent take hits the parked extra.
-            let c = comm.pool_take::<f64>(8);
-            let s = comm.pool_stats();
-            assert_eq!(s.acquires, 3);
-            assert_eq!(s.misses, 2, "the pre-warmed take must hit");
-            assert_eq!(s.hits, 1);
-            assert_eq!((a.len(), b.len(), c.len()), (8, 8, 8));
-            // A hard cap suppresses the eager mints (nothing is evicted —
-            // the extras are simply not minted).
-            comm.set_pool_cap_bytes(Some(1));
-            let _d = comm.pool_take::<f64>(16); // first miss: marks only
-            let _e = comm.pool_take::<f64>(16); // second miss: extras blocked
-            let s = comm.pool_stats();
-            assert_eq!(s.misses, 4);
-            assert_eq!(s.reserved, 1, "capped pool must not park extras");
-            assert_eq!(s.evictions, 0);
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn pool_reserve_for_overrides_one_class_only() {
-        Cluster::run(1, |comm| {
-            comm.set_pool_cap_bytes(None);
-            comm.pool_reserve(1); // global default: mint on demand
-            comm.pool_reserve_for::<f64>(8, 3);
-            // The overridden class pre-warms to depth 3 on its second miss...
-            let _a = comm.pool_take::<f64>(8);
-            let _b = comm.pool_take::<f64>(8);
-            let s = comm.pool_stats();
-            assert_eq!((s.misses, s.reserved), (2, 1));
-            let _c = comm.pool_take::<f64>(8);
-            assert_eq!(comm.pool_stats().hits, 1, "pre-warmed extra must serve");
-            // ...while any other class keeps the depth-1 default.
-            let _d = comm.pool_take::<f64>(16);
-            let _e = comm.pool_take::<f64>(16);
-            let s = comm.pool_stats();
-            assert_eq!(s.reserved, 1, "non-overridden class must not pre-warm");
-            // Depth <= 1 removes the override.
-            comm.pool_reserve_for::<f64>(8, 1);
-            let _f = comm.pool_take::<f64>(8);
-            let _g = comm.pool_take::<f64>(8);
-            assert_eq!(comm.pool_stats().reserved, 1);
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn pool_wrap_adopts_buffer_and_returns_on_drop() {
-        Cluster::run(1, |comm| {
-            comm.set_pool_cap_bytes(None);
-            let mut buf = comm.pool_take::<f32>(4);
-            buf.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
-            let body = comm.pool_wrap(buf);
-            assert_eq!(body.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
-            drop(body);
-            let s = comm.pool_stats();
-            assert_eq!(s.returns, 1, "wrapped buffer must return to the pool");
-            // The returned buffer is reusable: the next take of the class hits.
-            let _again = comm.pool_take::<f32>(4);
-            assert_eq!(comm.pool_stats().hits, 1);
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn comm_group_split_colors_and_orders() {
-        // 2 replicas × model grid of 3: colour by model rank = dp axis.
-        let dp = CommGroup::split(6, |r| Some(r % 3), |r| r / 3);
-        assert_eq!(dp.len(), 3);
-        assert_eq!(dp[0].ranks(), &[0, 3]);
-        assert_eq!(dp[1].ranks(), &[1, 4]);
-        assert_eq!(dp[2].ranks(), &[2, 5]);
-        assert_eq!(dp[1].index_of(4), Some(1));
-        assert_eq!(dp[1].world_rank(0), 1);
-        assert!(!dp[1].contains(3));
-        // Colour by replica = model axis; a None colour opts out.
-        let model = CommGroup::split(6, |r| (r != 5).then_some(r / 3), |r| r % 3);
-        assert_eq!(model[0].ranks(), &[0, 1, 2]);
-        assert_eq!(model[1].ranks(), &[3, 4]);
-        // The key reorders within a group.
-        let rev = CommGroup::split(4, |_| Some(0), |r| 4 - r);
-        assert_eq!(rev[0].ranks(), &[3, 2, 1, 0]);
-        // Duplicate ranks are rejected by the direct constructor.
-        assert!(CommGroup::new(vec![1, 2, 1]).is_err());
-        assert!(CommGroup::new(vec![]).is_err());
-    }
-
-    #[test]
-    fn payload_into_tensor_wraps_without_copy() {
-        Cluster::run(2, |comm| {
-            comm.set_pool_cap_bytes(None);
-            if comm.rank() == 0 {
-                let mut stage = comm.pool_take::<f32>(4);
-                stage.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
-                let req = comm.isend_pooled(1, 21, stage)?;
-                comm.wait_send(req)?;
-                comm.barrier();
-                assert_eq!(comm.pool_stats().returns, 1);
-            } else {
-                let req = comm.irecv::<f32>(0, 21)?;
-                let t = comm.wait_payload(req)?.into_tensor(&[2, 2])?;
-                assert!(t.is_pool_backed());
-                assert_eq!(t.at(&[1, 1]), 4.0);
-                drop(t); // the return
-                comm.barrier();
-            }
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn pool_cap_evicts_returns() {
-        Cluster::run(2, |comm| {
-            comm.set_pool_cap_bytes(Some(1)); // nothing fits
-            if comm.rank() == 0 {
-                let buf = comm.pool_take::<f32>(8);
-                let req = comm.isend_pooled(1, 6, buf)?;
-                comm.wait_send(req)?;
-                comm.barrier();
-                let _again = comm.pool_take::<f32>(8);
-                let s = comm.pool_stats();
-                assert_eq!(s.returns, 1);
-                assert_eq!(s.evictions, 1, "over-cap return must be dropped");
-                assert_eq!(s.hits, 0);
-                assert_eq!(s.misses, 2);
-                assert_eq!(s.pooled_bytes, 0);
-            } else {
-                let req = comm.irecv::<f32>(0, 6)?;
-                let _ = comm.wait_payload(req)?;
-                comm.barrier();
-            }
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn disabled_pool_degrades_to_move_semantics() {
-        Cluster::run(2, |comm| {
-            comm.set_comm_pool(false);
-            if comm.rank() == 0 {
-                let buf = comm.pool_take::<f64>(4);
-                let req = comm.isend_pooled(1, 7, buf)?;
-                comm.wait_send(req)?;
-                assert_eq!(comm.pool_stats().acquires, 0, "disabled pool counted");
-            } else {
-                let req = comm.irecv::<f64>(0, 7)?;
-                let payload = comm.wait_payload(req)?;
-                assert!(matches!(payload, Payload::Owned(_)));
-                assert_eq!(payload.len(), 4);
-            }
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn pooled_send_under_wire_format_returns_immediately() {
-        Cluster::run(2, |comm| {
-            comm.set_pool_cap_bytes(None);
-            comm.set_wire_format(true);
-            if comm.rank() == 0 {
-                let mut buf = comm.pool_take::<f64>(3);
-                buf.copy_from_slice(&[1.0, 2.0, 3.0]);
-                let req = comm.isend_pooled(1, 8, buf)?;
-                comm.wait_send(req)?;
-                // the staging buffer came home without a receiver round trip
-                let _again = comm.pool_take::<f64>(3);
-                let s = comm.pool_stats();
-                assert_eq!(s.returns, 1);
-                assert_eq!(s.hits, 1);
-            } else {
-                let got = comm.recv_vec::<f64>(0, 8)?;
-                assert_eq!(got, vec![1.0, 2.0, 3.0]);
-                assert!(comm.stats().wire_msgs >= 1);
-            }
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn shared_pooled_body_fans_out_and_returns_once() {
-        // One staged buffer broadcast to two receivers: both read it, the
-        // last drop returns it to the root exactly once.
-        Cluster::run(3, |comm| {
-            comm.set_pool_cap_bytes(None);
-            if comm.rank() == 0 {
-                let body = comm.pool_stage(&[7.0f64, 8.0]);
-                for dst in 1..3 {
-                    let req = comm.isend_pooled_body(dst, 9, &body)?;
-                    comm.wait_send(req)?;
-                }
-                drop(body);
-                comm.barrier();
-                let s = comm.pool_stats();
-                assert_eq!(s.returns, 1, "fan-out must return exactly once");
-            } else {
-                let req = comm.irecv::<f64>(0, 9)?;
-                let payload = comm.wait_payload(req)?;
-                assert_eq!(payload.as_slice(), &[7.0, 8.0]);
-                drop(payload);
-                comm.barrier();
-            }
-            Ok(())
-        })
-        .unwrap();
-    }
-
-    #[test]
-    fn comm_pool_cap_parsing() {
-        assert_eq!(parse_comm_pool_cap(None), Some(DEFAULT_COMM_POOL_CAP_BYTES));
-        assert_eq!(
-            parse_comm_pool_cap(Some("junk")),
-            Some(DEFAULT_COMM_POOL_CAP_BYTES)
-        );
-        assert_eq!(
-            parse_comm_pool_cap(Some("")),
-            Some(DEFAULT_COMM_POOL_CAP_BYTES)
-        );
-        assert_eq!(parse_comm_pool_cap(Some("0")), None);
-        assert_eq!(parse_comm_pool_cap(Some(" 4096 ")), Some(4096));
-    }
-
-    #[test]
-    fn timeout_parsing() {
-        assert_eq!(
-            parse_recv_timeout(None),
-            Some(Duration::from_millis(DEFAULT_RECV_TIMEOUT_MS))
-        );
-        assert_eq!(
-            parse_recv_timeout(Some("250")),
-            Some(Duration::from_millis(250))
-        );
-        assert_eq!(
-            parse_recv_timeout(Some(" 1500 ")),
-            Some(Duration::from_millis(1500))
-        );
-        // garbage falls back to the default
-        assert_eq!(
-            parse_recv_timeout(Some("nope")),
-            Some(Duration::from_millis(DEFAULT_RECV_TIMEOUT_MS))
-        );
-        // 0 means "no timeout" — the uncapped convention shared with the
-        // scratch and comm-pool byte caps.
-        assert_eq!(parse_recv_timeout(Some("0")), None);
-        // the test build uses the short default so deadlocks fail fast
-        assert_eq!(DEFAULT_RECV_TIMEOUT_MS, 5_000);
-
-        assert_eq!(
-            parse_retry_timeout(None),
-            Some(Duration::from_millis(DEFAULT_RETRY_TIMEOUT_MS))
-        );
-        assert_eq!(
-            parse_retry_timeout(Some("40")),
-            Some(Duration::from_millis(40))
-        );
-        assert_eq!(parse_retry_timeout(Some("0")), None);
-        assert_eq!(parse_max_retransmits(None), DEFAULT_MAX_RETRANSMITS);
-        assert_eq!(parse_max_retransmits(Some("3")), 3);
-        assert_eq!(parse_max_retransmits(Some("bad")), DEFAULT_MAX_RETRANSMITS);
-    }
-
-    #[test]
-    fn resequencer_suppresses_duplicates_and_restores_order() {
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 0 {
-                comm.set_fault_plan(Some(
-                    faults::FaultPlan::parse("seed=3;retry_ms=5;dup:p=1,src=1").unwrap(),
-                ));
-                let mut got = Vec::new();
-                for _ in 0..6 {
-                    got.push(comm.recv_vec::<f64>(1, 9)?[0]);
-                }
-                let s = comm.stats();
-                assert!(s.faults.injected_dups >= 6);
-                assert!(s.faults.dups_suppressed >= 6);
-                Ok(got)
-            } else {
-                for i in 0..6 {
-                    comm.send_slice::<f64>(0, 9, &[i as f64])?;
-                }
-                Ok(vec![])
-            }
-        })
-        .unwrap();
-        assert_eq!(results[0], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
-    }
-
-    #[test]
-    fn reorder_plan_preserves_fifo() {
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 1 {
-                comm.set_fault_plan(Some(
-                    faults::FaultPlan::parse("seed=11;retry_ms=5;reorder:p=0.6,ms=2").unwrap(),
-                ));
-                let mut got = Vec::new();
-                for _ in 0..8 {
-                    got.push(comm.recv_vec::<f64>(0, 4)?[0]);
-                }
-                Ok(got)
-            } else {
-                for i in 0..8 {
-                    comm.send_slice::<f64>(1, 4, &[i as f64])?;
-                }
-                Ok(vec![])
-            }
-        })
-        .unwrap();
-        assert_eq!(
-            results[1],
-            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]
-        );
-    }
-
-    #[test]
-    fn dropped_message_recovers_via_retransmit() {
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 1 {
-                comm.set_fault_plan(Some(
-                    faults::FaultPlan::parse("seed=5;retry_ms=5;drop:p=1,tag=40").unwrap(),
-                ));
-                let got = comm.recv_vec::<f64>(0, 40)?;
-                let s = comm.stats();
-                assert!(s.faults.injected_drops >= 1);
-                assert!(s.faults.retransmits >= 1);
-                assert!(s.faults.retries >= 1);
-                assert_eq!(s.faults.stragglers, 1);
-                Ok(got[0])
-            } else {
-                comm.send_slice::<f64>(1, 40, &[42.5])?;
-                Ok(0.0)
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], 42.5);
-    }
-
-    #[test]
-    fn truncated_payload_recovers_from_pristine_copy() {
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 1 {
-                comm.set_fault_plan(Some(
-                    faults::FaultPlan::parse("seed=9;truncate:p=1,tag=41").unwrap(),
-                ));
-                let got = comm.recv_vec::<f64>(0, 41)?;
-                let s = comm.stats();
-                assert!(s.faults.injected_truncations >= 1);
-                assert!(s.faults.retransmits >= 1);
-                Ok(got)
-            } else {
-                comm.send_slice::<f64>(1, 41, &[1.5, -2.5, 3.25])?;
-                Ok(vec![])
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], vec![1.5, -2.5, 3.25]);
-    }
-
-    #[test]
-    fn abandoned_request_discards_late_arrival() {
-        // Rank 1 times out on a receive from rank 0 (which is stalled at
-        // the barrier), abandons it, then rank 0 sends twice: the first
-        // message settles the abandoned request's debt and is discarded,
-        // the second matches the retried request.
-        let results = Cluster::run(2, |comm| {
-            if comm.rank() == 1 {
-                comm.set_recv_timeout(Some(Duration::from_millis(50)));
-                comm.set_retry_timeout(Some(Duration::from_millis(10)));
-                let req = comm.irecv::<f64>(0, 77)?;
-                assert!(comm.wait(req).is_err());
-                comm.barrier();
-                let req = comm.irecv::<f64>(0, 77)?;
-                let got = comm.wait(req)?;
-                assert!(comm.stats().faults.abandoned_swept >= 1);
-                Ok(got[0])
-            } else {
-                comm.barrier();
-                comm.send_slice::<f64>(1, 77, &[-1.0])?;
-                comm.send_slice::<f64>(1, 77, &[8.0])?;
-                Ok(0.0)
-            }
-        })
-        .unwrap();
-        assert_eq!(results[1], 8.0);
-    }
-
-    #[test]
-    fn kill_rule_fires_only_at_its_step() {
-        let plan = faults::FaultPlan::parse("kill:rank=1,step=4").unwrap();
-        let results = Cluster::run(2, |comm| {
-            comm.set_fault_plan(Some(plan.clone()));
-            for step in 0..4 {
-                comm.fault_step(step)?;
-            }
-            Ok(comm.fault_step(4).is_err())
-        })
-        .unwrap();
-        assert_eq!(results, vec![false, true]);
-    }
-}
+pub mod transport;
+
+mod channel;
+mod engine;
+mod socket;
+
+pub use channel::ChannelTransport;
+pub use engine::{
+    configured_recv_timeout, Cluster, Comm, CommGroup, CommPoolStats, CommStats, Payload,
+    PooledBody, RecvRequest, SendRequest, COMM_POOL_CAP_ENV, DEFAULT_COMM_POOL_CAP_BYTES,
+    MAX_RETRANSMITS_ENV, RECV_TIMEOUT_ENV, RETRY_TIMEOUT_ENV,
+};
+pub use socket::SocketTransport;
+pub use transport::{
+    default_transport, Arrival, Message, Transport, TransportGuard, TransportKind,
+};

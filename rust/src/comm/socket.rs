@@ -1,0 +1,808 @@
+//! The socket backend: TCP or Unix-domain streams, one full-duplex
+//! connection per rank pair, so a [`Cluster`](super::Cluster) spans OS
+//! processes.
+//!
+//! # Bootstrap
+//!
+//! Rank 0 is the coordinator. It listens at the coordinator address
+//! (`PALLAS_COORD_ADDR`, or an ephemeral address when the whole world
+//! lives in one process); every other rank
+//!
+//! 1. binds its own data listener (Unix: `<coord>.r<rank>`; TCP: an
+//!    ephemeral port),
+//! 2. retry-connects to the coordinator and sends a `Hello` frame
+//!    announcing its rank and data-listener address,
+//! 3. receives the complete address book back from rank 0 once all
+//!    `world - 1` hellos are in,
+//! 4. connects to every *lower* rank `0 < j < rank` (announcing itself
+//!    with a `Hello`) and accepts one connection from every higher rank.
+//!
+//! The streams to/from rank 0 **are** the coordinator connections — no
+//! separate data listener for rank 0 — and sequential connect-then-accept
+//! cannot deadlock because every listener is bound before any connect and
+//! the OS accept backlog holds early arrivals. All listeners are dropped
+//! (and Unix socket files unlinked) once the mesh is complete.
+//!
+//! # Data path
+//!
+//! `send` serializes the body into the frame format of
+//! [`transport`](super::transport) and drops it — a pooled payload's
+//! registered buffer returns to its sender's pool the moment the bytes
+//! are staged (staging-ownership guarantee #2). Self-sends bypass the
+//! wire and keep their typed body, preserving the zero-copy path rank-
+//! locally. One detached reader thread per peer turns inbound frames
+//! into engine messages (data) or barrier announcements (control); a
+//! reader exits on EOF, and once every reader is gone a blocked receive
+//! reports [`Arrival::Disconnected`].
+//!
+//! # Barrier
+//!
+//! Epoch-counted: entering barrier `e`, a rank sends a `Barrier` frame
+//! with `tag = e` to every peer and waits for `world - 1` epoch-`e`
+//! announcements. A fast peer may already announce `e + 1` before this
+//! rank has collected all of `e` (announcements travel on the same FIFO
+//! streams as data, so nothing later than `e + 1` can exist yet); those
+//! early arrivals are banked for the next epoch.
+
+use super::transport::{
+    encode_frame_header, read_frame, wire_bytes_of, Arrival, Body, FrameKind, Message, Transport,
+    TransportKind, DTYPE_OPAQUE,
+};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long a rank keeps retrying its connection to the coordinator (or
+/// a peer's data listener) before giving up.
+const CONNECT_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Pause between connection retries during bootstrap.
+const CONNECT_RETRY: Duration = Duration::from_millis(10);
+
+/// Ceiling on a single barrier round-trip. Barrier frames bypass the
+/// engine's fault injection, so this only fires when a peer is truly
+/// wedged or dead.
+const BARRIER_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Slice width for chunked blocking receives — how often a blocked
+/// receive re-checks whether every reader thread has exited.
+const LIVENESS_SLICE: Duration = Duration::from_millis(50);
+
+// ---------------------------------------------------------------------
+// Stream / listener abstraction over the two address families
+// ---------------------------------------------------------------------
+
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+
+    /// The local IP of a TCP stream — what a peer's advertised data
+    /// address must be reachable at.
+    fn local_ip(&self) -> Option<String> {
+        match self {
+            Stream::Tcp(s) => s.local_addr().ok().map(|a| a.ip().to_string()),
+            Stream::Unix(_) => None,
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    /// Keeps the bound path so drop can unlink the socket file.
+    Unix(UnixListener, String),
+}
+
+impl Listener {
+    fn bind(kind: TransportKind, addr: &str) -> Result<Listener> {
+        match kind {
+            TransportKind::Tcp => Ok(Listener::Tcp(TcpListener::bind(addr)?)),
+            TransportKind::Unix => {
+                // A stale socket file from a crashed run blocks the bind.
+                let _ = std::fs::remove_file(addr);
+                Ok(Listener::Unix(UnixListener::bind(addr)?, addr.to_string()))
+            }
+            TransportKind::Channel => Err(Error::Config(
+                "channel transport has no socket listener".into(),
+            )),
+        }
+    }
+
+    fn accept(&self) -> Result<Stream> {
+        Ok(match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                Stream::Tcp(s)
+            }
+            Listener::Unix(l, _) => {
+                let (s, _) = l.accept()?;
+                Stream::Unix(s)
+            }
+        })
+    }
+
+    /// The ephemeral port a TCP listener landed on.
+    fn tcp_port(&self) -> Option<u16> {
+        match self {
+            Listener::Tcp(l) => l.local_addr().ok().map(|a| a.port()),
+            Listener::Unix(..) => None,
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+fn connect_with_retry(kind: TransportKind, addr: &str) -> Result<Stream> {
+    let deadline = Instant::now() + CONNECT_DEADLINE;
+    loop {
+        let attempt = match kind {
+            TransportKind::Tcp => TcpStream::connect(addr).map(|s| {
+                let _ = s.set_nodelay(true);
+                Stream::Tcp(s)
+            }),
+            TransportKind::Unix => UnixStream::connect(addr).map(Stream::Unix),
+            TransportKind::Channel => {
+                return Err(Error::Config("channel transport has no socket peer".into()))
+            }
+        };
+        match attempt {
+            Ok(s) => return Ok(s),
+            Err(e) if Instant::now() >= deadline => {
+                return Err(Error::Comm(format!(
+                    "could not reach {addr} within {CONNECT_DEADLINE:?}: {e}"
+                )))
+            }
+            Err(_) => std::thread::sleep(CONNECT_RETRY),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bootstrap handshake frames
+// ---------------------------------------------------------------------
+
+fn send_hello(s: &mut Stream, src: usize, payload: &[u8]) -> Result<()> {
+    let h = encode_frame_header(FrameKind::Hello, DTYPE_OPAQUE, src, 0, 0, payload.len());
+    s.write_all(&h)?;
+    s.write_all(payload)?;
+    s.flush()?;
+    Ok(())
+}
+
+fn recv_hello(s: &mut Stream) -> Result<(usize, Vec<u8>)> {
+    match read_frame(s)? {
+        Some((h, p)) if h.kind == FrameKind::Hello => Ok((h.src, p)),
+        Some((h, _)) => Err(Error::Protocol(format!(
+            "expected a hello frame during bootstrap, got {:?}",
+            h.kind
+        ))),
+        None => Err(Error::Protocol(
+            "stream closed during the bootstrap handshake".into(),
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The transport
+// ---------------------------------------------------------------------
+
+/// A socket-backed [`Transport`] over TCP or Unix-domain stream
+/// connections (one per rank pair, built by a rank-0 coordinator
+/// bootstrap; see [`crate::comm`]'s module docs for the contract).
+pub struct SocketTransport {
+    rank: usize,
+    world: usize,
+    kind: TransportKind,
+    /// Write halves, indexed by peer rank (`None` at `self.rank`).
+    peers: Vec<Option<Stream>>,
+    /// Kept for self-sends, which stay typed (zero-copy) and skip the
+    /// wire entirely.
+    inbox_tx: Sender<Message>,
+    inbox_rx: Receiver<Message>,
+    /// Barrier epochs announced by peers, routed here by the readers.
+    ctrl_rx: Receiver<u64>,
+    /// The epoch the *next* barrier call will synchronize on.
+    barrier_epoch: u64,
+    /// Banked early barrier announcements (per epoch) — a fast peer may
+    /// announce epoch `e + 1` while this rank is still collecting `e`.
+    early: HashMap<u64, usize>,
+    /// Reader threads still attached to a live peer stream. Zero (with
+    /// `world > 1`) means nothing can ever arrive again.
+    live_readers: Arc<AtomicUsize>,
+}
+
+/// A coordinator listener bound *before* any rank starts connecting —
+/// how an in-process socket cluster avoids both address races and
+/// pick-a-free-port guesswork (TCP binds port 0 and the kernel chooses).
+pub(crate) struct ReservedCoord {
+    addr: String,
+    listener: Mutex<Option<Listener>>,
+}
+
+/// Distinguishes concurrent in-process socket clusters (unit tests run
+/// many) so their Unix socket paths never collide.
+static COORD_SERIAL: AtomicU64 = AtomicU64::new(0);
+
+impl SocketTransport {
+    /// Bind a fresh ephemeral coordinator listener for an in-process
+    /// cluster launch.
+    pub(crate) fn reserve_coord(kind: TransportKind) -> Result<ReservedCoord> {
+        match kind {
+            TransportKind::Tcp => {
+                let listener = Listener::bind(kind, "127.0.0.1:0")?;
+                let port = listener.tcp_port().ok_or_else(|| {
+                    Error::Comm("coordinator listener has no local port".into())
+                })?;
+                Ok(ReservedCoord {
+                    addr: format!("127.0.0.1:{port}"),
+                    listener: Mutex::new(Some(listener)),
+                })
+            }
+            TransportKind::Unix => {
+                let serial = COORD_SERIAL.fetch_add(1, Ordering::Relaxed);
+                let path = std::env::temp_dir().join(format!(
+                    "pallas-coord-{}-{serial}.sock",
+                    std::process::id()
+                ));
+                let addr = path.to_string_lossy().into_owned();
+                let listener = Listener::bind(kind, &addr)?;
+                Ok(ReservedCoord {
+                    addr,
+                    listener: Mutex::new(Some(listener)),
+                })
+            }
+            TransportKind::Channel => Err(Error::Config(
+                "channel transport has no coordinator address".into(),
+            )),
+        }
+    }
+
+    /// Join a cluster whose coordinator listener was prebound by
+    /// [`reserve_coord`](SocketTransport::reserve_coord) (the in-process
+    /// [`Cluster::run_on`](super::Cluster::run_on) path).
+    pub(crate) fn connect_reserved(
+        kind: TransportKind,
+        world: usize,
+        rank: usize,
+        coord: &ReservedCoord,
+    ) -> Result<SocketTransport> {
+        if rank == 0 {
+            let listener = coord
+                .listener
+                .lock()
+                .map_err(|_| Error::Comm("coordinator listener lock poisoned".into()))?
+                .take()
+                .ok_or_else(|| Error::Comm("coordinator listener already taken".into()))?;
+            Self::bootstrap_rank0(kind, world, listener)
+        } else {
+            Self::bootstrap_peer(kind, world, rank, &coord.addr)
+        }
+    }
+
+    /// Join a cluster at an explicit coordinator address (the
+    /// multi-process path: every process calls this once with its rank).
+    /// Rank 0 binds the coordinator listener at `coord_addr`; everyone
+    /// else retry-connects to it.
+    pub fn connect(
+        kind: TransportKind,
+        world: usize,
+        rank: usize,
+        coord_addr: &str,
+    ) -> Result<SocketTransport> {
+        if world == 0 {
+            return Err(Error::Comm("world size must be >= 1".into()));
+        }
+        if rank >= world {
+            return Err(Error::Comm(format!(
+                "rank {rank} out of range (world {world})"
+            )));
+        }
+        if rank == 0 {
+            let listener = Listener::bind(kind, coord_addr)?;
+            Self::bootstrap_rank0(kind, world, listener)
+        } else {
+            Self::bootstrap_peer(kind, world, rank, coord_addr)
+        }
+    }
+
+    /// Rank 0: accept every other rank's hello on the coordinator
+    /// listener, then broadcast the address book. The accepted streams
+    /// *are* rank 0's data links.
+    fn bootstrap_rank0(
+        kind: TransportKind,
+        world: usize,
+        listener: Listener,
+    ) -> Result<SocketTransport> {
+        let mut peers: Vec<Option<Stream>> = (0..world).map(|_| None).collect();
+        let mut book: Vec<Option<String>> = vec![None; world];
+        for _ in 1..world {
+            let mut s = listener.accept()?;
+            let (src, addr_bytes) = recv_hello(&mut s)?;
+            if src == 0 || src >= world || peers[src].is_some() {
+                return Err(Error::Protocol(format!(
+                    "bootstrap hello from invalid or duplicate rank {src} (world {world})"
+                )));
+            }
+            let addr = String::from_utf8(addr_bytes).map_err(|_| {
+                Error::Protocol(format!("rank {src} announced a non-UTF-8 listener address"))
+            })?;
+            book[src] = Some(addr);
+            peers[src] = Some(s);
+        }
+        // Address book: "rank addr" per line, ranks 1..world.
+        let book_text = book
+            .iter()
+            .enumerate()
+            .skip(1)
+            .map(|(r, a)| format!("{r} {}", a.as_deref().expect("all hellos collected")))
+            .collect::<Vec<_>>()
+            .join("\n");
+        for peer in peers.iter_mut().flatten() {
+            send_hello(peer, 0, book_text.as_bytes())?;
+        }
+        drop(listener); // unlinks the Unix coordinator socket file
+        Ok(Self::assemble(kind, world, 0, peers))
+    }
+
+    /// Ranks > 0: announce to the coordinator, receive the address book,
+    /// then mesh — connect to every lower rank, accept from every higher.
+    fn bootstrap_peer(
+        kind: TransportKind,
+        world: usize,
+        rank: usize,
+        coord_addr: &str,
+    ) -> Result<SocketTransport> {
+        // Bind the data listener before anything else so peers that learn
+        // our address can connect immediately (the accept backlog holds
+        // them until we get there).
+        let (listener, mut advertised) = match kind {
+            TransportKind::Unix => {
+                let addr = format!("{coord_addr}.r{rank}");
+                (Listener::bind(kind, &addr)?, addr)
+            }
+            TransportKind::Tcp => {
+                let l = Listener::bind(kind, "0.0.0.0:0")?;
+                let port = l
+                    .tcp_port()
+                    .ok_or_else(|| Error::Comm("data listener has no local port".into()))?;
+                // The reachable IP is filled in after the coordinator
+                // connection tells us which interface faces it.
+                (l, format!(":{port}"))
+            }
+            TransportKind::Channel => {
+                return Err(Error::Config("channel transport has no socket mesh".into()))
+            }
+        };
+
+        let mut coord = connect_with_retry(kind, coord_addr)?;
+        if let Some(ip) = coord.local_ip() {
+            advertised = format!("{ip}{advertised}");
+        }
+        send_hello(&mut coord, rank, advertised.as_bytes())?;
+        let (src, book_bytes) = recv_hello(&mut coord)?;
+        if src != 0 {
+            return Err(Error::Protocol(format!(
+                "address book came from rank {src}, expected the coordinator"
+            )));
+        }
+        let book_text = String::from_utf8(book_bytes)
+            .map_err(|_| Error::Protocol("address book is not UTF-8".into()))?;
+        let mut book: Vec<Option<String>> = vec![None; world];
+        for line in book_text.lines() {
+            let (r, addr) = line.split_once(' ').ok_or_else(|| {
+                Error::Protocol(format!("malformed address-book line {line:?}"))
+            })?;
+            let r: usize = r
+                .parse()
+                .map_err(|_| Error::Protocol(format!("malformed address-book rank {r:?}")))?;
+            if r == 0 || r >= world {
+                return Err(Error::Protocol(format!(
+                    "address book names rank {r}, outside 1..{world}"
+                )));
+            }
+            book[r] = Some(addr.to_string());
+        }
+
+        let mut peers: Vec<Option<Stream>> = (0..world).map(|_| None).collect();
+        peers[0] = Some(coord);
+        // Connect to every lower rank (they accept), announcing who we are.
+        for (j, addr) in book.iter().enumerate().take(rank).skip(1) {
+            let addr = addr.as_deref().ok_or_else(|| {
+                Error::Protocol(format!("address book is missing rank {j}"))
+            })?;
+            let mut s = connect_with_retry(kind, addr)?;
+            send_hello(&mut s, rank, &[])?;
+            peers[j] = Some(s);
+        }
+        // Accept one connection from every higher rank.
+        for _ in rank + 1..world {
+            let mut s = listener.accept()?;
+            let (src, _) = recv_hello(&mut s)?;
+            if src <= rank || src >= world || peers[src].is_some() {
+                return Err(Error::Protocol(format!(
+                    "mesh hello from invalid or duplicate rank {src} (accepting at rank {rank})"
+                )));
+            }
+            peers[src] = Some(s);
+        }
+        drop(listener); // unlinks the Unix data socket file
+        Ok(Self::assemble(kind, world, rank, peers))
+    }
+
+    /// Wire up the inbox and spawn one detached reader thread per peer.
+    fn assemble(
+        kind: TransportKind,
+        world: usize,
+        rank: usize,
+        mut peers: Vec<Option<Stream>>,
+    ) -> SocketTransport {
+        let (inbox_tx, inbox_rx) = channel::<Message>();
+        let (ctrl_tx, ctrl_rx) = channel::<u64>();
+        let live_readers = Arc::new(AtomicUsize::new(0));
+        for (peer, slot) in peers.iter_mut().enumerate() {
+            let Some(stream) = slot else { continue };
+            let read_half = stream
+                .try_clone()
+                .unwrap_or_else(|e| panic!("rank {rank}: cannot clone stream to {peer}: {e}"));
+            live_readers.fetch_add(1, Ordering::SeqCst);
+            let tx = inbox_tx.clone();
+            let ctrl = ctrl_tx.clone();
+            let live = live_readers.clone();
+            std::thread::spawn(move || {
+                reader_loop(rank, peer, read_half, tx, ctrl);
+                live.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        SocketTransport {
+            rank,
+            world,
+            kind,
+            peers,
+            inbox_tx,
+            inbox_rx,
+            ctrl_rx,
+            barrier_epoch: 0,
+            early: HashMap::new(),
+            live_readers,
+        }
+    }
+
+    /// Whether nothing can ever arrive again: every peer's reader has
+    /// exited (EOF or error) and the inbox is drained. Never true for a
+    /// single-rank world, where self-sends are the only traffic — the
+    /// same semantics the channel backend gets from holding its own
+    /// sender.
+    fn all_peers_gone(&self) -> bool {
+        self.world > 1 && self.live_readers.load(Ordering::SeqCst) == 0
+    }
+}
+
+/// Turn inbound frames into engine messages (data) and barrier epochs
+/// (control) until the peer hangs up. Protocol violations are loud but
+/// non-fatal to the process: the reader warns, drops the connection, and
+/// the engine sees the peer as disconnected.
+fn reader_loop(
+    rank: usize,
+    peer: usize,
+    mut stream: Stream,
+    tx: Sender<Message>,
+    ctrl: Sender<u64>,
+) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Some((h, payload))) => match h.kind {
+                FrameKind::Data => {
+                    let delivered = tx.send(Message {
+                        src: h.src,
+                        tag: h.tag,
+                        seq: h.seq,
+                        body: Body::Bytes(payload),
+                    });
+                    if delivered.is_err() {
+                        return; // endpoint dropped; stop reading
+                    }
+                }
+                FrameKind::Barrier => {
+                    if ctrl.send(h.tag).is_err() {
+                        return;
+                    }
+                }
+                FrameKind::Hello => {
+                    eprintln!(
+                        "warning: rank {rank} got a bootstrap hello from rank {peer} \
+                         after the mesh was up; dropping the connection"
+                    );
+                    return;
+                }
+            },
+            Ok(None) => return, // clean EOF: peer closed
+            Err(e) => {
+                eprintln!(
+                    "warning: rank {rank} dropping connection to rank {peer}: {e}"
+                );
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn kind(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn send(&mut self, dst: usize, msg: Message) -> Result<()> {
+        if dst == self.rank {
+            // Self-sends skip the wire and stay typed: the zero-copy Arc
+            // path and pooled-buffer cycle survive rank-locally.
+            return self
+                .inbox_tx
+                .send(msg)
+                .map_err(|_| Error::Comm(format!("rank {dst} disconnected")));
+        }
+        let stream = match self.peers[dst].as_mut() {
+            Some(s) => s,
+            None => return Err(Error::Comm(format!("rank {dst} disconnected"))),
+        };
+        // Serialize, ship, drop: once the bytes are staged the body (and
+        // any pooled registration it holds) goes home to the sender's
+        // pool — staging-ownership guarantee #2.
+        let payload = wire_bytes_of(&msg.body);
+        let header = encode_frame_header(
+            FrameKind::Data,
+            msg.body.dtype_tag(),
+            msg.src,
+            msg.tag,
+            msg.seq,
+            payload.len(),
+        );
+        let shipped = stream
+            .write_all(&header)
+            .and_then(|()| stream.write_all(&payload))
+            .and_then(|()| stream.flush());
+        if let Err(e) = shipped {
+            self.peers[dst] = None;
+            return Err(Error::Comm(format!("rank {dst} disconnected ({e})")));
+        }
+        Ok(())
+    }
+
+    fn try_recv(&mut self) -> Option<Message> {
+        self.inbox_rx.try_recv().ok()
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Arrival {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Arrival::Timeout;
+            }
+            let slice = LIVENESS_SLICE.min(deadline - now);
+            match self.inbox_rx.recv_timeout(slice) {
+                Ok(msg) => return Arrival::Message(msg),
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.all_peers_gone() {
+                        // Late pushes race the reader's exit: drain first.
+                        return match self.inbox_rx.try_recv() {
+                            Ok(msg) => Arrival::Message(msg),
+                            Err(_) => Arrival::Disconnected,
+                        };
+                    }
+                }
+                // Unreachable while we hold inbox_tx, but harmless.
+                Err(RecvTimeoutError::Disconnected) => return Arrival::Disconnected,
+            }
+        }
+    }
+
+    fn recv_blocking(&mut self) -> Arrival {
+        loop {
+            match self.inbox_rx.recv_timeout(LIVENESS_SLICE) {
+                Ok(msg) => return Arrival::Message(msg),
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.all_peers_gone() {
+                        return match self.inbox_rx.try_recv() {
+                            Ok(msg) => Arrival::Message(msg),
+                            Err(_) => Arrival::Disconnected,
+                        };
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return Arrival::Disconnected,
+            }
+        }
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        let epoch = self.barrier_epoch;
+        self.barrier_epoch += 1;
+        if self.world == 1 {
+            return Ok(());
+        }
+        let announce = encode_frame_header(FrameKind::Barrier, DTYPE_OPAQUE, self.rank, epoch, 0, 0);
+        for dst in 0..self.world {
+            if dst == self.rank {
+                continue;
+            }
+            let stream = self.peers[dst].as_mut().ok_or_else(|| {
+                Error::Comm(format!("barrier with rank {dst} already disconnected"))
+            })?;
+            stream
+                .write_all(&announce)
+                .and_then(|()| stream.flush())
+                .map_err(|e| Error::Comm(format!("barrier send to rank {dst} failed: {e}")))?;
+        }
+        let mut seen = self.early.remove(&epoch).unwrap_or(0);
+        let deadline = Instant::now() + BARRIER_DEADLINE;
+        while seen < self.world - 1 {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Comm(format!(
+                    "rank {} barrier epoch {epoch} timed out with {seen} of {} peers",
+                    self.rank,
+                    self.world - 1
+                )));
+            }
+            match self.ctrl_rx.recv_timeout(deadline - now) {
+                Ok(e) if e == epoch => seen += 1,
+                Ok(e) => {
+                    // A fast peer already announced a later epoch (FIFO
+                    // streams bound this to exactly epoch + 1); bank it.
+                    *self.early.entry(e).or_insert(0) += 1;
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Comm(format!(
+                        "rank {} barrier epoch {epoch}: control channel closed",
+                        self.rank
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Cluster, TransportKind};
+
+    fn ring_over(kind: TransportKind) {
+        let results = Cluster::run_on(kind, 4, |comm| {
+            let next = (comm.rank() + 1) % comm.size();
+            let prev = (comm.rank() + comm.size() - 1) % comm.size();
+            comm.send_slice::<f64>(next, 1, &[comm.rank() as f64])?;
+            let got = comm.recv_vec::<f64>(prev, 1)?;
+            assert_eq!(comm.transport_kind(), kind.name());
+            Ok(got[0])
+        })
+        .unwrap();
+        assert_eq!(results, vec![3.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn unix_ring_pass() {
+        ring_over(TransportKind::Unix);
+    }
+
+    #[test]
+    fn tcp_ring_pass() {
+        ring_over(TransportKind::Tcp);
+    }
+
+    #[test]
+    fn unix_single_rank_world() {
+        let r = Cluster::run_on(TransportKind::Unix, 1, |comm| {
+            comm.send_slice::<f64>(0, 9, &[2.5])?;
+            let got = comm.recv_vec::<f64>(0, 9)?;
+            comm.barrier();
+            Ok(got[0])
+        })
+        .unwrap();
+        assert_eq!(r, vec![2.5]);
+    }
+
+    #[test]
+    fn unix_barrier_epochs_stay_aligned() {
+        // Repeated barriers with unbalanced work between them exercise
+        // the early-announcement banking.
+        Cluster::run_on(TransportKind::Unix, 3, |comm| {
+            for round in 0..20u64 {
+                if comm.rank() == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(round % 3));
+                }
+                comm.barrier();
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn unix_mixed_dtypes_and_tags() {
+        let results = Cluster::run_on(TransportKind::Unix, 2, |comm| {
+            if comm.rank() == 0 {
+                comm.send_slice::<f32>(1, 5, &[1.5, -2.5])?;
+                comm.send_slice::<f64>(1, 6, &[3.25])?;
+                Ok(0.0)
+            } else {
+                let f = comm.recv_vec::<f32>(0, 5)?;
+                let d = comm.recv_vec::<f64>(0, 6)?;
+                Ok(f64::from(f[0]) + f64::from(f[1]) + d[0])
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], 1.5 - 2.5 + 3.25);
+    }
+
+    #[test]
+    fn unix_out_of_order_tags() {
+        let results = Cluster::run_on(TransportKind::Unix, 2, |comm| {
+            if comm.rank() == 0 {
+                comm.send_slice::<f64>(1, 2, &[20.0])?;
+                comm.send_slice::<f64>(1, 1, &[10.0])?;
+                Ok(0.0)
+            } else {
+                let a = comm.recv_vec::<f64>(0, 1)?[0];
+                let b = comm.recv_vec::<f64>(0, 2)?[0];
+                Ok(a * 1000.0 + b)
+            }
+        })
+        .unwrap();
+        assert_eq!(results[1], 10020.0);
+    }
+}

@@ -1,0 +1,651 @@
+//! The [`Transport`] trait — the seam between the request engine and the
+//! bytes (or buffers) that actually move — plus the wire format a real
+//! backend speaks.
+//!
+//! ## The contract
+//!
+//! [`Comm`](super::Comm) owns exactly one boxed `Transport` and drives it
+//! from four call sites: posting a send, the nonblocking inbox pump, the
+//! blocking waits (with and without a deadline), and the full-world
+//! barrier. Everything else — sequence numbers, resequencing, duplicate
+//! suppression, retry/retransmit clocks, fault injection, plan capture,
+//! the registered buffer pool — lives *above* this trait in the engine,
+//! so every backend inherits the ARQ layer unchanged. A backend must
+//! guarantee exactly three things:
+//!
+//! 1. **Per-pair FIFO.** Messages from one sender to one receiver are
+//!    delivered in the order they were sent. (TCP and Unix streams give
+//!    this per connection; the in-process backend gets it from `mpsc`.)
+//!    The engine's sequence numbers *verify* this and repair violations,
+//!    but a backend that reorders wholesale will spend its life in the
+//!    out-of-order buffer.
+//! 2. **Staging ownership.** `send` consumes the [`Message`]. A backend
+//!    that serializes (the socket backend) must drop the body after
+//!    encoding so a pooled payload's registered buffer returns to its
+//!    sender's pool immediately — exactly the wire-format staging
+//!    discipline. A backend that forwards in-process (the channel
+//!    backend) must pass the body through untouched so the zero-copy
+//!    `Arc` path and the receiver-returns-to-sender pool cycle survive.
+//! 3. **Delivery-seam transparency.** Arrivals are handed to the engine
+//!    raw, exactly once per wire delivery, in arrival order. The fault
+//!    injector ([`super::faults`]) judges each arrival *after* the
+//!    transport produces it, which is what lets the same seeded plan
+//!    drive both the in-process backend and a socket conformance run.
+//!
+//! ## Wire format
+//!
+//! On a byte-stream backend every message travels as one **frame**:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  "PLLS"
+//!      4     1  version (currently 1)
+//!      5     1  kind    (0 data, 1 barrier, 2 hello)
+//!      6     1  dtype   (0 opaque bytes, 4 f32, 8 f64 — element wire size)
+//!      7     1  reserved (must be 0)
+//!      8     4  src rank, little-endian u32
+//!     12     8  tag, little-endian u64
+//!     20     8  sequence number, little-endian u64
+//!     28     8  payload length, little-endian u64
+//!     36     …  payload
+//! ```
+//!
+//! The payload of a data frame is the crate's length-checked typed
+//! encoding (8-byte element count + little-endian elements, see
+//! `parse_wire`) — the format [`Comm::set_wire_format`] has always
+//! produced in-process now graduates to the actual on-the-wire encoding.
+//! A frame with a bad magic, an unknown kind or dtype, a non-zero
+//! reserved byte, or a **newer version** than this build speaks is
+//! rejected with [`Error::Protocol`] naming the mismatch; a stream that
+//! ends mid-frame is a protocol error too (clean EOF is only legal at a
+//! frame boundary).
+//!
+//! [`Comm::set_wire_format`]: super::Comm::set_wire_format
+
+use crate::error::{Error, Result};
+use crate::tensor::Scalar;
+use std::any::Any;
+use std::cell::Cell;
+use std::io::Read;
+use std::sync::Arc;
+use std::time::Duration;
+
+pub(crate) type AnyArc = Arc<dyn Any + Send + Sync>;
+
+// ---------------------------------------------------------------------
+// Message payloads
+// ---------------------------------------------------------------------
+
+/// A typed, `Arc`-backed payload: the zero-copy path.
+pub(crate) struct TypedBody {
+    pub(crate) len: usize,
+    pub(crate) wire_size: usize,
+    pub(crate) data: AnyArc,
+    pub(crate) to_wire: fn(&AnyArc) -> Vec<u8>,
+}
+
+/// Message payload: zero-copy typed buffer, or raw wire bytes.
+pub(crate) enum Body {
+    Bytes(Vec<u8>),
+    Typed(TypedBody),
+}
+
+impl Body {
+    /// Size this payload occupies (or would occupy) on the wire — used for
+    /// the traffic counters so both paths report comparable volumes.
+    pub(crate) fn wire_len(&self) -> usize {
+        match self {
+            Body::Bytes(b) => b.len(),
+            Body::Typed(t) => 8 + t.len * t.wire_size,
+        }
+    }
+
+    /// The frame dtype tag for this payload: the element wire size for
+    /// typed bodies, [`DTYPE_OPAQUE`] for raw bytes.
+    pub(crate) fn dtype_tag(&self) -> u8 {
+        match self {
+            Body::Bytes(_) => DTYPE_OPAQUE,
+            Body::Typed(t) => t.wire_size as u8,
+        }
+    }
+}
+
+/// A tagged message in flight between two ranks.
+///
+/// `seq` is the per-`(sender, tag)` wire sequence number the receiving
+/// engine resequences on: duplicates are suppressed, reordered arrivals
+/// buffered until the gap fills. The engine stamps it before handing the
+/// message to the transport; a backend carries it opaquely.
+pub struct Message {
+    pub(crate) src: usize,
+    pub(crate) tag: u64,
+    pub(crate) seq: u64,
+    pub(crate) body: Body,
+}
+
+impl Message {
+    /// Sending world rank.
+    pub fn src(&self) -> usize {
+        self.src
+    }
+
+    /// Message tag.
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
+
+    /// Per-`(sender, tag)` wire sequence number.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Wire-equivalent payload size in bytes.
+    pub fn wire_len(&self) -> usize {
+        self.body.wire_len()
+    }
+}
+
+/// Clone a message body — the fault layer's duplicate injection. Typed
+/// bodies clone only the `Arc` (a pooled payload's registration stays
+/// shared, so suppression of the copy cannot double-return the buffer).
+pub(crate) fn clone_body(b: &Body) -> Body {
+    match b {
+        Body::Bytes(v) => Body::Bytes(v.clone()),
+        Body::Typed(t) => Body::Typed(TypedBody {
+            len: t.len,
+            wire_size: t.wire_size,
+            data: t.data.clone(),
+            to_wire: t.to_wire,
+        }),
+    }
+}
+
+/// Render a body as wire bytes (what a serializing backend sends; the
+/// fault layer's truncation corrupts a copy of this rendering and the
+/// length check catches it on decode).
+pub(crate) fn wire_bytes_of(b: &Body) -> Vec<u8> {
+    match b {
+        Body::Bytes(v) => v.clone(),
+        Body::Typed(t) => (t.to_wire)(&t.data),
+    }
+}
+
+/// Serialize a typed payload into the wire format (header + little-endian
+/// elements). Stored as a fn pointer in [`TypedBody`] so a type-erased
+/// message can still be rendered as bytes.
+pub(crate) fn wire_of<T: Scalar>(data: &AnyArc) -> Vec<u8> {
+    let v = data
+        .downcast_ref::<Vec<T>>()
+        .expect("typed body serializer sees its own element type");
+    let mut buf = Vec::with_capacity(8 + v.len() * T::WIRE_SIZE);
+    buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    T::write_bytes(v, &mut buf);
+    buf
+}
+
+/// Parse a wire-format buffer, enforcing the length check.
+pub(crate) fn parse_wire<T: Scalar>(buf: &[u8]) -> Result<Vec<T>> {
+    if buf.len() < 8 {
+        return Err(Error::Comm("truncated message header".into()));
+    }
+    let n = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
+    let body = &buf[8..];
+    if body.len() != n * T::WIRE_SIZE {
+        return Err(Error::Comm(format!(
+            "message length {} != {} x {} elements",
+            body.len(),
+            n,
+            T::WIRE_SIZE
+        )));
+    }
+    Ok(T::read_bytes(body))
+}
+
+// ---------------------------------------------------------------------
+// The transport trait
+// ---------------------------------------------------------------------
+
+/// Outcome of a blocking receive on a transport.
+pub enum Arrival {
+    /// A message arrived.
+    Message(Message),
+    /// The deadline elapsed with nothing to deliver.
+    Timeout,
+    /// Every peer is gone; nothing will ever arrive again.
+    Disconnected,
+}
+
+/// A communication backend: moves [`Message`]s between the ranks of one
+/// world.
+///
+/// See the [module docs](self) for the three guarantees a backend must
+/// provide (per-pair FIFO, staging ownership, delivery-seam
+/// transparency). The engine serializes all calls on one endpoint —
+/// `&mut self` everywhere — so a backend needs no internal locking for
+/// correctness, only for whatever background reader threads it runs.
+pub trait Transport: Send {
+    /// This endpoint's world rank.
+    fn rank(&self) -> usize;
+
+    /// World size.
+    fn world(&self) -> usize;
+
+    /// Backend name for diagnostics (`"channel"`, `"tcp"`, `"unix"`).
+    fn kind(&self) -> &'static str;
+
+    /// Ship `msg` to `dst` (already validated to be in range). Must not
+    /// block on the receiver; errors mean the peer is unreachable.
+    fn send(&mut self, dst: usize, msg: Message) -> Result<()>;
+
+    /// Nonblocking poll: the next arrival if one is already available.
+    /// `None` means "nothing right now" *or* "all peers gone" — the
+    /// engine's pump treats both as end-of-drain.
+    fn try_recv(&mut self) -> Option<Message>;
+
+    /// Block up to `timeout` for the next arrival.
+    fn recv_deadline(&mut self, timeout: Duration) -> Arrival;
+
+    /// Block indefinitely for the next arrival (never returns
+    /// [`Arrival::Timeout`]).
+    fn recv_blocking(&mut self) -> Arrival;
+
+    /// Full-world barrier: returns once every rank has entered it.
+    fn barrier(&mut self) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------
+
+/// Which [`Transport`] backend a [`Cluster`](super::Cluster) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process `mpsc` channels (zero-copy; the default and the test
+    /// substrate).
+    Channel,
+    /// TCP sockets — one loopback-or-LAN stream per rank pair.
+    Tcp,
+    /// Unix-domain sockets — one filesystem-addressed stream per rank
+    /// pair.
+    Unix,
+}
+
+impl TransportKind {
+    /// Parse a backend name (the `--transport` flag / `PALLAS_TRANSPORT`
+    /// vocabulary).
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s.trim() {
+            "channel" => Ok(TransportKind::Channel),
+            "tcp" => Ok(TransportKind::Tcp),
+            "unix" => Ok(TransportKind::Unix),
+            other => Err(Error::Config(format!(
+                "unknown transport '{other}' (expected channel, tcp, or unix)"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Unix => "unix",
+        }
+    }
+}
+
+thread_local! {
+    static TRANSPORT_OVERRIDE: Cell<Option<TransportKind>> = const { Cell::new(None) };
+}
+
+/// The backend [`Cluster::run`](super::Cluster::run) launches on this
+/// thread: a live [`TransportGuard`] override wins, then a valid
+/// `PALLAS_TRANSPORT` (warn-and-default discipline via
+/// [`crate::util::env`]), then [`TransportKind::Channel`].
+pub fn default_transport() -> TransportKind {
+    if let Some(k) = TRANSPORT_OVERRIDE.with(|c| c.get()) {
+        return k;
+    }
+    match crate::util::env::configured_transport() {
+        Some(name) => TransportKind::parse(&name).unwrap_or(TransportKind::Channel),
+        None => TransportKind::Channel,
+    }
+}
+
+/// RAII thread-local backend override: every [`Cluster::run`] issued from
+/// this thread while the guard lives uses the given backend. This is how
+/// the conformance suites re-run the whole adjoint/chaos machinery over
+/// loopback sockets without threading a parameter through every harness,
+/// and how `--transport` reaches the plan-capture clusters.
+///
+/// [`Cluster::run`]: super::Cluster::run
+pub struct TransportGuard {
+    prev: Option<TransportKind>,
+}
+
+impl TransportGuard {
+    /// Override the default backend on this thread until drop.
+    pub fn set(kind: TransportKind) -> TransportGuard {
+        let prev = TRANSPORT_OVERRIDE.with(|c| c.replace(Some(kind)));
+        TransportGuard { prev }
+    }
+}
+
+impl Drop for TransportGuard {
+    fn drop(&mut self) {
+        TRANSPORT_OVERRIDE.with(|c| c.set(self.prev));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame encoding
+// ---------------------------------------------------------------------
+
+/// Frame magic: the first four bytes of every frame.
+pub const FRAME_MAGIC: [u8; 4] = *b"PLLS";
+
+/// The frame version this build speaks. A peer announcing a higher
+/// version is rejected ([`Error::Protocol`]); lower versions do not exist
+/// (the format was born at 1), so any other value is garbage.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Frame header size in bytes.
+pub const FRAME_HEADER_LEN: usize = 36;
+
+/// Dtype tag for opaque byte payloads (control frames, raw
+/// `send_bytes` traffic).
+pub const DTYPE_OPAQUE: u8 = 0;
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// An engine message (tag/seq meaningful, payload = wire encoding).
+    Data,
+    /// A barrier announcement (tag = barrier epoch, empty payload).
+    Barrier,
+    /// A bootstrap handshake (payload = address book or listener
+    /// address).
+    Hello,
+}
+
+impl FrameKind {
+    fn to_byte(self) -> u8 {
+        match self {
+            FrameKind::Data => 0,
+            FrameKind::Barrier => 1,
+            FrameKind::Hello => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Option<FrameKind> {
+        match b {
+            0 => Some(FrameKind::Data),
+            1 => Some(FrameKind::Barrier),
+            2 => Some(FrameKind::Hello),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// What the frame carries.
+    pub kind: FrameKind,
+    /// Element wire size of the payload (0 = opaque).
+    pub dtype: u8,
+    /// Sending world rank.
+    pub src: usize,
+    /// Message tag (barrier frames: the epoch).
+    pub tag: u64,
+    /// Wire sequence number (0 for control frames).
+    pub seq: u64,
+    /// Payload length in bytes.
+    pub len: usize,
+}
+
+/// Encode a frame header.
+pub fn encode_frame_header(
+    kind: FrameKind,
+    dtype: u8,
+    src: usize,
+    tag: u64,
+    seq: u64,
+    len: usize,
+) -> [u8; FRAME_HEADER_LEN] {
+    let mut h = [0u8; FRAME_HEADER_LEN];
+    h[0..4].copy_from_slice(&FRAME_MAGIC);
+    h[4] = WIRE_VERSION;
+    h[5] = kind.to_byte();
+    h[6] = dtype;
+    // h[7] reserved, zero
+    h[8..12].copy_from_slice(&(src as u32).to_le_bytes());
+    h[12..20].copy_from_slice(&tag.to_le_bytes());
+    h[20..28].copy_from_slice(&seq.to_le_bytes());
+    h[28..36].copy_from_slice(&(len as u64).to_le_bytes());
+    h
+}
+
+/// Decode and validate a frame header. Every rejection names what was
+/// wrong — a garbled stream must be diagnosable from the error alone.
+pub fn decode_frame_header(h: &[u8]) -> Result<FrameHeader> {
+    if h.len() < FRAME_HEADER_LEN {
+        return Err(Error::Protocol(format!(
+            "truncated frame header: {} of {FRAME_HEADER_LEN} bytes",
+            h.len()
+        )));
+    }
+    if h[0..4] != FRAME_MAGIC {
+        return Err(Error::Protocol(format!(
+            "bad frame magic {:02x?} (expected {:02x?})",
+            &h[0..4],
+            FRAME_MAGIC
+        )));
+    }
+    let version = h[4];
+    if version != WIRE_VERSION {
+        return Err(Error::Protocol(format!(
+            "frame version {version} not supported (this build speaks {WIRE_VERSION})"
+        )));
+    }
+    let kind = FrameKind::from_byte(h[5])
+        .ok_or_else(|| Error::Protocol(format!("unknown frame kind {}", h[5])))?;
+    let dtype = h[6];
+    if !matches!(dtype, 0 | 4 | 8) {
+        return Err(Error::Protocol(format!("unknown frame dtype tag {dtype}")));
+    }
+    if h[7] != 0 {
+        return Err(Error::Protocol(format!(
+            "reserved frame byte is {} (must be 0)",
+            h[7]
+        )));
+    }
+    let src = u32::from_le_bytes(h[8..12].try_into().unwrap()) as usize;
+    let tag = u64::from_le_bytes(h[12..20].try_into().unwrap());
+    let seq = u64::from_le_bytes(h[20..28].try_into().unwrap());
+    let len = u64::from_le_bytes(h[28..36].try_into().unwrap()) as usize;
+    Ok(FrameHeader {
+        kind,
+        dtype,
+        src,
+        tag,
+        seq,
+        len,
+    })
+}
+
+/// Read one frame from a byte stream. `Ok(None)` is a clean EOF at a
+/// frame boundary (the peer closed); ending mid-frame is
+/// [`Error::Protocol`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(FrameHeader, Vec<u8>)>> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    let mut got = 0;
+    while got < FRAME_HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(Error::Protocol(format!(
+                    "stream ended mid-header: {got} of {FRAME_HEADER_LEN} bytes"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    let h = decode_frame_header(&header)?;
+    let mut payload = vec![0u8; h.len];
+    let mut got = 0;
+    while got < h.len {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => {
+                return Err(Error::Protocol(format!(
+                    "stream ended mid-payload: {got} of {} bytes",
+                    h.len
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    Ok(Some((h, payload)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_bytes(kind: FrameKind, dtype: u8, src: usize, tag: u64, seq: u64, payload: &[u8]) -> Vec<u8> {
+        let mut f = encode_frame_header(kind, dtype, src, tag, seq, payload.len()).to_vec();
+        f.extend_from_slice(payload);
+        f
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = encode_frame_header(FrameKind::Data, 8, 3, 12_345, 678, 4096);
+        let back = decode_frame_header(&h).unwrap();
+        assert_eq!(
+            back,
+            FrameHeader {
+                kind: FrameKind::Data,
+                dtype: 8,
+                src: 3,
+                tag: 12_345,
+                seq: 678,
+                len: 4096,
+            }
+        );
+    }
+
+    #[test]
+    fn read_frame_roundtrip_and_clean_eof() {
+        let payload = b"\x02\x00\x00\x00\x00\x00\x00\x00abcdefgh".to_vec();
+        let mut stream =
+            frame_bytes(FrameKind::Data, 4, 1, 7, 0, &payload);
+        stream.extend(frame_bytes(FrameKind::Barrier, DTYPE_OPAQUE, 2, 9, 0, &[]));
+        let mut r = &stream[..];
+        let (h1, p1) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(h1.kind, FrameKind::Data);
+        assert_eq!(h1.src, 1);
+        assert_eq!(p1, payload);
+        let (h2, p2) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(h2.kind, FrameKind::Barrier);
+        assert_eq!(h2.tag, 9);
+        assert!(p2.is_empty());
+        // Clean EOF at the frame boundary.
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_header_rejected() {
+        let full = encode_frame_header(FrameKind::Data, 4, 0, 1, 2, 0);
+        for cut in [1, 4, FRAME_HEADER_LEN - 1] {
+            let mut r = &full[..cut];
+            let err = read_frame(&mut r).unwrap_err();
+            assert!(
+                matches!(err, Error::Protocol(ref m) if m.contains("mid-header")),
+                "cut at {cut}: {err}"
+            );
+        }
+        // Slice-level decode reports truncation too.
+        let err = decode_frame_header(&full[..10]).unwrap_err();
+        assert!(matches!(err, Error::Protocol(ref m) if m.contains("truncated")));
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let f = frame_bytes(FrameKind::Data, DTYPE_OPAQUE, 0, 1, 0, b"0123456789");
+        let mut r = &f[..f.len() - 3];
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(matches!(err, Error::Protocol(ref m) if m.contains("mid-payload")));
+    }
+
+    #[test]
+    fn garbage_magic_rejected() {
+        let mut f = frame_bytes(FrameKind::Data, DTYPE_OPAQUE, 0, 1, 0, &[]);
+        f[0] = b'X';
+        let err = decode_frame_header(&f).unwrap_err();
+        assert!(matches!(err, Error::Protocol(ref m) if m.contains("magic")), "{err}");
+        let mut r = &f[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn future_version_rejected_precisely() {
+        let mut f = encode_frame_header(FrameKind::Data, DTYPE_OPAQUE, 0, 1, 0, 0);
+        f[4] = WIRE_VERSION + 1;
+        let err = decode_frame_header(&f).unwrap_err();
+        match err {
+            Error::Protocol(m) => {
+                assert!(m.contains(&format!("version {}", WIRE_VERSION + 1)), "{m}");
+                assert!(m.contains(&format!("speaks {WIRE_VERSION}")), "{m}");
+            }
+            other => panic!("expected Protocol error, got {other}"),
+        }
+    }
+
+    #[test]
+    fn unknown_kind_dtype_and_reserved_rejected() {
+        let mut f = encode_frame_header(FrameKind::Data, DTYPE_OPAQUE, 0, 1, 0, 0);
+        f[5] = 9;
+        assert!(matches!(decode_frame_header(&f), Err(Error::Protocol(_))));
+        let mut f = encode_frame_header(FrameKind::Data, DTYPE_OPAQUE, 0, 1, 0, 0);
+        f[6] = 3;
+        assert!(matches!(decode_frame_header(&f), Err(Error::Protocol(_))));
+        let mut f = encode_frame_header(FrameKind::Data, DTYPE_OPAQUE, 0, 1, 0, 0);
+        f[7] = 1;
+        assert!(matches!(decode_frame_header(&f), Err(Error::Protocol(_))));
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("channel").unwrap(), TransportKind::Channel);
+        assert_eq!(TransportKind::parse(" tcp ").unwrap(), TransportKind::Tcp);
+        assert_eq!(TransportKind::parse("unix").unwrap(), TransportKind::Unix);
+        assert!(TransportKind::parse("mpi").is_err());
+        for k in [TransportKind::Channel, TransportKind::Tcp, TransportKind::Unix] {
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn transport_guard_overrides_and_restores() {
+        // The un-overridden default depends on PALLAS_TRANSPORT (the CI
+        // socket leg sets it), so capture it rather than assume Channel.
+        let ambient = default_transport();
+        {
+            let _g = TransportGuard::set(TransportKind::Unix);
+            assert_eq!(default_transport(), TransportKind::Unix);
+            {
+                let _g2 = TransportGuard::set(TransportKind::Tcp);
+                assert_eq!(default_transport(), TransportKind::Tcp);
+            }
+            assert_eq!(default_transport(), TransportKind::Unix);
+        }
+        assert_eq!(default_transport(), ambient);
+    }
+}

@@ -83,6 +83,10 @@ pub struct TrainConfig {
     /// collisions, deadlocks, adjoint-duality violations, and pool
     /// leaks. Any finding aborts the run before the first step.
     pub preflight_check: bool,
+    /// Transport backend the training cluster runs over (`None` = the
+    /// ambient default: `PALLAS_TRANSPORT`, else in-process channels).
+    /// `channel` / `tcp` / `unix` — see [`crate::comm::TransportKind`].
+    pub transport: Option<crate::comm::TransportKind>,
 }
 
 impl Default for TrainConfig {
@@ -105,6 +109,7 @@ impl Default for TrainConfig {
             resume_from: None,
             fault_plan: None,
             preflight_check: false,
+            transport: None,
         }
     }
 }
@@ -171,6 +176,9 @@ impl TrainConfig {
         }
         if let Some(v) = j.get_opt("preflight_check") {
             self.preflight_check = v.as_bool()?;
+        }
+        if let Some(v) = j.get_opt("transport") {
+            self.transport = Some(crate::comm::TransportKind::parse(v.as_str()?)?);
         }
         Ok(())
     }
@@ -317,6 +325,18 @@ mod tests {
         cfg.checkpoint_every = 2;
         cfg.checkpoint_dir = String::new();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn transport_parses_and_rejects_garbage() {
+        let j = Json::parse(r#"{"transport": "unix"}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.transport, Some(crate::comm::TransportKind::Unix));
+        cfg.validate().unwrap();
+        let j = Json::parse(r#"{"transport": "carrier-pigeon"}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        assert!(cfg.apply_json(&j).is_err());
     }
 
     #[test]

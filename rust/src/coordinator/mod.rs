@@ -238,6 +238,10 @@ fn maybe_checkpoint(
 /// backward overlap window before the (local) optimizer step.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     cfg.validate()?;
+    // Pin the configured backend for every cluster this run launches
+    // (including the pipeline path and the pre-flight plan capture, which
+    // must see the same transport the training run uses).
+    let _transport = cfg.transport.map(crate::comm::TransportGuard::set);
     if cfg.stages > 1 {
         return train_pipeline(cfg);
     }

@@ -42,6 +42,13 @@ pub enum Error {
     /// CLI usage error.
     Usage(String),
 
+    /// Wire-protocol violation on a socket transport (bad magic, version
+    /// mismatch, truncated or malformed frame). Distinct from
+    /// [`Error::Comm`]: a `Protocol` error means the *bytes on the wire*
+    /// are wrong — a peer speaking a different frame version or garbage
+    /// on the connection — not that a peer is merely slow or gone.
+    Protocol(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -58,6 +65,7 @@ impl fmt::Display for Error {
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -6,12 +6,13 @@
 //!                      [--dataset N] [--config file.json] [--metrics out.json]
 //!                      [--checkpoint-every N] [--checkpoint-dir DIR]
 //!                      [--resume-from DIR/step_NNNNNN] [--fault-plan SPEC]
-//!                      [--preflight]
+//!                      [--preflight] [--transport channel|tcp|unix]
 //! distdl parity        [--batch N] [--steps N]       sequential vs distributed (§5)
 //! distdl describe      [--batch N]                   Table 1 / Fig. C10 placement
 //! distdl adjoint-test  [--size N]                    Eq. (13) across all primitives
 //! distdl halo-table                                  Appendix B halo geometries
 //! distdl check         [--geometry NAME] [--batch N] static communication-plan
+//!                      [--transport channel|tcp|unix]
 //!                                                    verifier: captures every
 //!                                                    geometry's message schedule
 //!                                                    (no kernel math) and checks
@@ -106,6 +107,9 @@ fn config_from(args: &Args) -> Result<TrainConfig> {
     }
     if args.has_flag("preflight") {
         cfg.preflight_check = true;
+    }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = Some(distdl::comm::TransportKind::parse(t)?);
     }
     cfg.validate()?;
     Ok(cfg)
@@ -240,6 +244,15 @@ fn cmd_halo_table() -> Result<()> {
 fn cmd_check(args: &Args) -> Result<()> {
     use distdl::analysis::{shipped_geometries, verify, Geometry};
     let batch = args.get_usize("batch")?.unwrap_or(8);
+    // Capture the plans over the requested backend — the schedule must be
+    // transport-independent, so a socket capture catching a discrepancy
+    // is itself a finding.
+    let _transport = match args.get("transport") {
+        Some(t) => Some(distdl::comm::TransportGuard::set(
+            distdl::comm::TransportKind::parse(t)?,
+        )),
+        None => None,
+    };
     let selected: Vec<(String, Geometry)> = match args.get("geometry") {
         Some(name) => {
             let g = Geometry::from_name(name).ok_or_else(|| {

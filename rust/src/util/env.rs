@@ -61,6 +61,103 @@ pub fn read_u64(name: &str) -> EnvNum {
     parse_u64(name, std::env::var(name).ok().as_deref())
 }
 
+// ---------------------------------------------------------------------------
+// Multi-process cluster discovery (`PALLAS_WORLD` / `PALLAS_RANK` /
+// `PALLAS_COORD_ADDR` / `PALLAS_TRANSPORT`).
+//
+// Same warn-and-default discipline as the numeric knobs: a malformed value
+// warns once on stderr and reads as unset, so a typo'd launcher never
+// silently joins the wrong cluster — it fails loudly at
+// `Cluster::connect_from_env` with a precise config error instead.
+// ---------------------------------------------------------------------------
+
+/// World size of a multi-process cluster.
+pub const WORLD_ENV: &str = "PALLAS_WORLD";
+/// This process's rank within `PALLAS_WORLD`.
+pub const RANK_ENV: &str = "PALLAS_RANK";
+/// Coordinator address for socket bootstrap: `host:port` for TCP, a
+/// filesystem path for Unix-domain sockets.
+pub const COORD_ADDR_ENV: &str = "PALLAS_COORD_ADDR";
+/// Ambient transport backend: `channel`, `tcp`, or `unix`.
+pub const TRANSPORT_ENV: &str = "PALLAS_TRANSPORT";
+
+/// Parse a world size. Zero ranks is meaningless and warns.
+pub fn parse_world(raw: Option<&str>) -> Option<usize> {
+    match parse_u64(WORLD_ENV, raw) {
+        EnvNum::Value(0) => {
+            eprintln!("warning: {WORLD_ENV}=0 is not a valid world size; ignoring");
+            None
+        }
+        EnvNum::Value(v) => Some(v as usize),
+        EnvNum::Unset | EnvNum::Malformed => None,
+    }
+}
+
+/// Parse a rank against a known world size. A rank at or past `world`
+/// warns and reads as unset.
+pub fn parse_rank(raw: Option<&str>, world: usize) -> Option<usize> {
+    match parse_u64(RANK_ENV, raw) {
+        EnvNum::Value(v) if (v as usize) < world => Some(v as usize),
+        EnvNum::Value(v) => {
+            eprintln!("warning: {RANK_ENV}={v} is out of range for {WORLD_ENV}={world}; ignoring");
+            None
+        }
+        EnvNum::Unset | EnvNum::Malformed => None,
+    }
+}
+
+/// Parse a coordinator address: any non-empty trimmed string.
+pub fn parse_coord_addr(raw: Option<&str>) -> Option<String> {
+    let trimmed = raw?.trim();
+    if trimmed.is_empty() {
+        None
+    } else {
+        Some(trimmed.to_string())
+    }
+}
+
+/// Parse a transport name. Only `channel`, `tcp`, and `unix` are known;
+/// anything else warns and reads as unset (the caller falls back to the
+/// default backend).
+pub fn parse_transport(raw: Option<&str>) -> Option<&'static str> {
+    let trimmed = raw?.trim();
+    if trimmed.is_empty() {
+        return None;
+    }
+    match trimmed {
+        "channel" => Some("channel"),
+        "tcp" => Some("tcp"),
+        "unix" => Some("unix"),
+        other => {
+            eprintln!(
+                "warning: {TRANSPORT_ENV}={other:?} is not a known transport \
+                 (expected channel, tcp, or unix); using the default"
+            );
+            None
+        }
+    }
+}
+
+/// Read [`WORLD_ENV`] from the environment.
+pub fn configured_world() -> Option<usize> {
+    parse_world(std::env::var(WORLD_ENV).ok().as_deref())
+}
+
+/// Read [`RANK_ENV`] from the environment, validated against `world`.
+pub fn configured_rank(world: usize) -> Option<usize> {
+    parse_rank(std::env::var(RANK_ENV).ok().as_deref(), world)
+}
+
+/// Read [`COORD_ADDR_ENV`] from the environment.
+pub fn configured_coord_addr() -> Option<String> {
+    parse_coord_addr(std::env::var(COORD_ADDR_ENV).ok().as_deref())
+}
+
+/// Read [`TRANSPORT_ENV`] from the environment.
+pub fn configured_transport() -> Option<&'static str> {
+    parse_transport(std::env::var(TRANSPORT_ENV).ok().as_deref())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +191,53 @@ mod tests {
             parse_u64("PALLAS_TEST", Some("18446744073709551616")),
             EnvNum::Malformed
         );
+    }
+
+    #[test]
+    fn world_rejects_zero_and_garbage() {
+        assert_eq!(parse_world(None), None);
+        assert_eq!(parse_world(Some("")), None);
+        assert_eq!(parse_world(Some("0")), None);
+        assert_eq!(parse_world(Some("nope")), None);
+        assert_eq!(parse_world(Some("4")), Some(4));
+        assert_eq!(parse_world(Some(" 16 ")), Some(16));
+    }
+
+    #[test]
+    fn rank_must_be_inside_world() {
+        assert_eq!(parse_rank(None, 4), None);
+        assert_eq!(parse_rank(Some(""), 4), None);
+        assert_eq!(parse_rank(Some("bad"), 4), None);
+        assert_eq!(parse_rank(Some("0"), 4), Some(0));
+        assert_eq!(parse_rank(Some("3"), 4), Some(3));
+        // out of range: rank == world and beyond
+        assert_eq!(parse_rank(Some("4"), 4), None);
+        assert_eq!(parse_rank(Some("100"), 4), None);
+    }
+
+    #[test]
+    fn coord_addr_is_trimmed_nonempty() {
+        assert_eq!(parse_coord_addr(None), None);
+        assert_eq!(parse_coord_addr(Some("")), None);
+        assert_eq!(parse_coord_addr(Some("   ")), None);
+        assert_eq!(
+            parse_coord_addr(Some(" 127.0.0.1:9123 ")),
+            Some("127.0.0.1:9123".to_string())
+        );
+        assert_eq!(
+            parse_coord_addr(Some("/tmp/pallas.sock")),
+            Some("/tmp/pallas.sock".to_string())
+        );
+    }
+
+    #[test]
+    fn transport_names_are_validated() {
+        assert_eq!(parse_transport(None), None);
+        assert_eq!(parse_transport(Some("")), None);
+        assert_eq!(parse_transport(Some("channel")), Some("channel"));
+        assert_eq!(parse_transport(Some(" tcp ")), Some("tcp"));
+        assert_eq!(parse_transport(Some("unix")), Some("unix"));
+        assert_eq!(parse_transport(Some("smoke-signals")), None);
+        assert_eq!(parse_transport(Some("TCP")), None);
     }
 }

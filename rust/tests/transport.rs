@@ -1,0 +1,165 @@
+//! Transport conformance — the socket backends against the channel
+//! reference, in one process.
+//!
+//! Four claims under test:
+//!
+//! 1. **Eq. (13) residuals are backend-invariant, bitwise**: the full
+//!    primitive sweep produces `f64` residuals whose bit patterns are
+//!    identical over the in-process channel mesh, Unix-domain sockets,
+//!    and TCP loopback. The socket wire format round-trips IEEE-754
+//!    little-endian bytes exactly, and the reduction order never changes,
+//!    so there is nothing for the transport to perturb.
+//!
+//! 2. **The fault injector is transport-blind**: the chaos sweep (the
+//!    same primitives under a seeded delay/duplicate/drop plan, asserting
+//!    bitwise parity with the fault-free run) passes unchanged over
+//!    `SocketTransport` loopback — injection happens at the delivery
+//!    seam *above* the transport, so the ARQ repairs faults identically
+//!    regardless of what carried the bytes.
+//!
+//! 3. **DP×PP training is backend-invariant, bitwise**: a 2-replica ×
+//!    2-stage LeNet run over each backend writes bitwise-identical
+//!    per-step losses and checkpoint files.
+//!
+//! 4. **Plan capture sees sockets too**: the static communication-plan
+//!    verifier runs its capture clusters over the ambient backend, so a
+//!    socket-pinned capture of the DP×PP geometry must still verify
+//!    clean — the message schedule is transport-independent by
+//!    construction.
+
+use distdl::adjoint::adjoint_residual;
+use distdl::analysis::{shipped_geometries, verify};
+use distdl::checkpoint::{rank_file, step_dir};
+use distdl::comm::{TransportGuard, TransportKind};
+use distdl::config::TrainConfig;
+use distdl::coordinator::suites::{run_adjoint_chaos_suite, suite_cases, SuiteCase};
+use distdl::coordinator::train;
+use std::path::{Path, PathBuf};
+
+/// Fresh per-process temp dir (removed up front so reruns start clean).
+fn temp_dir(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("distdl_tr_{label}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn ckpt_bytes(dir: &str, step: u64, rank: usize) -> Vec<u8> {
+    let path = rank_file(&step_dir(dir, step), rank);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------------
+// 1. Eq. (13) sweep: residual bits identical across all three backends
+// ---------------------------------------------------------------------
+
+fn residual_over(kind: TransportKind, case: &SuiteCase) -> f64 {
+    let _pin = TransportGuard::set(kind);
+    adjoint_residual(case.world, case.op.as_ref(), 0xE13)
+        .unwrap_or_else(|e| panic!("{} over {}: {e}", case.label, kind.name()))
+}
+
+#[test]
+fn eq13_residuals_are_bitwise_identical_across_backends() {
+    for case in suite_cases(4).unwrap() {
+        let channel = residual_over(TransportKind::Channel, &case);
+        assert!(
+            channel < 1e-12,
+            "{}: channel residual {channel:.3e} incoherent",
+            case.label
+        );
+        for kind in [TransportKind::Unix, TransportKind::Tcp] {
+            let socket = residual_over(kind, &case);
+            assert_eq!(
+                socket.to_bits(),
+                channel.to_bits(),
+                "{}: {} residual {socket:.17e} != channel {channel:.17e}",
+                case.label,
+                kind.name()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Chaos conformance over Unix-domain loopback
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_suite_passes_over_unix_sockets() {
+    let _pin = TransportGuard::set(TransportKind::Unix);
+    // retry_ms bounds drop-recovery latency (test binaries otherwise see
+    // the 2 s production retry default).
+    run_adjoint_chaos_suite(4, "seed=13;retry_ms=25;delay:p=0.2,ms=1;dup:p=0.2;drop:p=0.1")
+        .unwrap();
+}
+
+// ---------------------------------------------------------------------
+// 3. DP×PP LeNet training: losses and checkpoints bitwise across backends
+// ---------------------------------------------------------------------
+
+fn dp_pp_cfg(dir: &Path, transport: Option<TransportKind>) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.batch = 8;
+    cfg.steps = 4;
+    cfg.dataset = 64;
+    cfg.distributed = false;
+    cfg.replicas = 2;
+    cfg.stages = 2;
+    cfg.micro_batches = 2; // world = 4: 2 replicas × 2 stages
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.transport = transport;
+    cfg
+}
+
+#[test]
+fn dp_pp_training_is_bitwise_identical_across_backends() {
+    let world = 4;
+    let dir_channel = temp_dir("dppp_channel");
+    let reference = train(&dp_pp_cfg(&dir_channel, None)).unwrap();
+
+    for kind in [TransportKind::Unix, TransportKind::Tcp] {
+        let dir = temp_dir(&format!("dppp_{}", kind.name()));
+        let run = train(&dp_pp_cfg(&dir, Some(kind))).unwrap();
+
+        assert_eq!(reference.log.steps.len(), run.log.steps.len());
+        for (a, b) in reference.log.steps.iter().zip(run.log.steps.iter()) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{} loss diverged at step {}",
+                kind.name(),
+                a.step
+            );
+        }
+        for step in [2u64, 4] {
+            for rank in 0..world {
+                assert_eq!(
+                    ckpt_bytes(&dir_channel.to_string_lossy(), step, rank),
+                    ckpt_bytes(&dir.to_string_lossy(), step, rank),
+                    "{} checkpoint diverged at step {step}, rank {rank}",
+                    kind.name()
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let _ = std::fs::remove_dir_all(&dir_channel);
+}
+
+// ---------------------------------------------------------------------
+// 4. Plan capture over a socket-pinned cluster verifies clean
+// ---------------------------------------------------------------------
+
+#[test]
+fn plan_capture_over_unix_sockets_verifies_clean() {
+    let _pin = TransportGuard::set(TransportKind::Unix);
+    let (name, geometry) = shipped_geometries()
+        .into_iter()
+        .find(|(n, _)| *n == "dp2xpp2")
+        .expect("dp2xpp2 geometry is shipped");
+    let graph = geometry.capture(8).expect(name);
+    let report = verify(&graph);
+    assert!(report.is_clean(), "{name} over unix sockets: {report}");
+    assert!(report.sends > 0, "{name}: empty plan");
+}

@@ -1,0 +1,169 @@
+//! Multi-process socket cluster — the self-spawn integration test.
+//!
+//! The parent test re-executes its own test binary four times, once per
+//! rank, with the `PALLAS_*` discovery environment pointing every child
+//! at a Unix-domain coordinator address. Each child joins the cluster
+//! via [`Cluster::connect_from_env`], runs an Eq. (13) adjoint sweep plus
+//! a short four-worker LeNet training loop over real sockets, and writes
+//! its residual bits and final checkpoint to disk. The parent then runs
+//! the *identical* body in-process over the channel backend and asserts
+//! the residuals and every rank's checkpoint match **bitwise** — four OS
+//! processes speaking the framed wire format compute exactly what four
+//! threads sharing memory compute.
+//!
+//! The child half lives in `mp_child`, a `#[test]` that no-ops unless
+//! `PALLAS_MP_CHILD` is set, so ordinary test runs skip it and the
+//! parent can target it with `--exact`.
+
+use distdl::adjoint::{adjoint_residual_on, DistLinearOp};
+use distdl::checkpoint::{rank_file, step_dir, Checkpoint};
+use distdl::comm::{Cluster, Comm};
+use distdl::coordinator::train_step;
+use distdl::data::SyntheticMnist;
+use distdl::error::Result;
+use distdl::models::{lenet5_at, LeNetConfig, LeNetLayout};
+use distdl::nn::NativeKernels;
+use distdl::optim::Adam;
+use distdl::primitives::{AllReduce, Broadcast, SumReduce};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+
+const WORLD: usize = 4;
+const STEPS: usize = 3;
+const SEED: u64 = 42;
+const BATCH: usize = 8;
+const DATASET: usize = 64;
+
+/// The collective body every harness runs: an adjoint sweep over
+/// world-4 primitives, then `STEPS` LeNet train steps, then a final
+/// checkpoint. Returns the residual bit patterns (identical on every
+/// rank — rank 0 reduces and broadcasts).
+fn cluster_body(comm: &mut Comm, ckpt_dir: &str) -> Result<Vec<u64>> {
+    let ops: Vec<Box<dyn DistLinearOp<f64>>> = vec![
+        Box::new(Broadcast::replicate(0, WORLD, &[6, 6], 20)?),
+        Box::new(SumReduce::to_root(0, WORLD, &[6, 6], 30)?),
+        Box::new(AllReduce::new(&[0, 1, 2, 3], &[8], 40)?),
+    ];
+    let mut residual_bits = Vec::with_capacity(ops.len());
+    for op in &ops {
+        let r = adjoint_residual_on::<f64>(comm, op.as_ref(), 0xE13)?;
+        assert!(r < 1e-12, "{}: residual {r:.3e} incoherent", op.name());
+        residual_bits.push(r.to_bits());
+    }
+    comm.barrier();
+
+    let rank = comm.rank();
+    let net = lenet5_at::<f32>(
+        &LeNetConfig {
+            batch: BATCH,
+            layout: LeNetLayout::FourWorker,
+        },
+        Arc::new(NativeKernels),
+        0,
+    )?;
+    let mut state = net.init(rank, SEED)?;
+    let mut opt = Adam::new(1e-3);
+    let batches = SyntheticMnist::new(SEED ^ 0xDA7A, DATASET).batches(BATCH);
+    for step in 0..STEPS {
+        train_step(&net, &mut state, comm, &batches[step % batches.len()], &mut opt)?;
+    }
+    Checkpoint::capture(WORLD, rank, SEED, STEPS as u64, &state, &opt).save(ckpt_dir)?;
+    comm.barrier();
+    Ok(residual_bits)
+}
+
+fn bits_to_text(bits: &[u64]) -> String {
+    bits.iter()
+        .map(|b| format!("{b:016x}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Child half: joins the socket cluster described by the environment.
+/// A no-op unless the parent test spawned this process.
+#[test]
+fn mp_child() {
+    if std::env::var("PALLAS_MP_CHILD").is_err() {
+        return;
+    }
+    let out = std::env::var("PALLAS_MP_OUT").expect("parent sets PALLAS_MP_OUT");
+    let mut comm = Cluster::connect_from_env().expect("join cluster from env");
+    let bits = cluster_body(&mut comm, &out).expect("cluster body");
+    std::fs::write(
+        PathBuf::from(&out).join(format!("residuals_rank{}.txt", comm.rank())),
+        bits_to_text(&bits),
+    )
+    .expect("write residuals");
+}
+
+#[test]
+fn multiprocess_unix_cluster_matches_in_process_bitwise() {
+    if std::env::var("PALLAS_MP_CHILD").is_ok() {
+        return; // we *are* a child; only mp_child runs here
+    }
+    let base = std::env::temp_dir().join(format!("distdl_mp_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let out_mp = base.join("sockets");
+    let out_ip = base.join("inproc");
+    std::fs::create_dir_all(&out_mp).unwrap();
+    std::fs::create_dir_all(&out_ip).unwrap();
+    let coord = base.join("coord.sock");
+    let exe = std::env::current_exe().unwrap();
+
+    // Spawn all four ranks before waiting on any: rank 0 binds the
+    // coordinator address, ranks 1..4 retry-connect to it.
+    let children: Vec<_> = (0..WORLD)
+        .map(|rank| {
+            Command::new(&exe)
+                .args(["mp_child", "--exact", "--nocapture", "--test-threads", "1"])
+                .env("PALLAS_MP_CHILD", "1")
+                .env("PALLAS_MP_OUT", &out_mp)
+                .env("PALLAS_TRANSPORT", "unix")
+                .env("PALLAS_WORLD", WORLD.to_string())
+                .env("PALLAS_RANK", rank.to_string())
+                .env("PALLAS_COORD_ADDR", &coord)
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn()
+                .unwrap_or_else(|e| panic!("spawn rank {rank}: {e}"))
+        })
+        .collect();
+    for (rank, child) in children.into_iter().enumerate() {
+        let out = child.wait_with_output().unwrap();
+        assert!(
+            out.status.success(),
+            "child rank {rank} failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+            out.status,
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+
+    // The in-process channel reference: same body, four threads.
+    let ip_dir = out_ip.to_string_lossy().into_owned();
+    let per_rank = Cluster::run(WORLD, |comm| cluster_body(comm, &ip_dir)).unwrap();
+
+    // Residual parity: every socket rank broadcast-received the same
+    // bits rank 0 reduced; compare against the channel run's.
+    let want = bits_to_text(&per_rank[0]);
+    for rank in 0..WORLD {
+        let path = out_mp.join(format!("residuals_rank{rank}.txt"));
+        let got = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        assert_eq!(got, want, "rank {rank} residual bits diverged");
+    }
+
+    // Checkpoint parity: every rank's file, byte for byte.
+    for rank in 0..WORLD {
+        let a = std::fs::read(rank_file(&step_dir(&ip_dir, STEPS as u64), rank)).unwrap();
+        let b = std::fs::read(rank_file(
+            &step_dir(&out_mp.to_string_lossy(), STEPS as u64),
+            rank,
+        ))
+        .unwrap();
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "rank {rank} checkpoint diverged across process boundary");
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
